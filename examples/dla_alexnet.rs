@@ -1,0 +1,40 @@
+//! DLA case study (§VI-D): design-space exploration for AlexNet and
+//! ResNet-34 across precisions, regenerating Table III and Fig 13.
+//!
+//! Run: `cargo run --release --example dla_alexnet`
+
+use bramac::bramac::Variant;
+use bramac::dla::compare::{average_speedup, compare_all};
+use bramac::dla::cycle::macs_per_cycle;
+use bramac::dla::dse::{accel_fmax_mhz, table3};
+use bramac::dla::models::{alexnet, resnet34};
+use bramac::report;
+
+fn main() {
+    println!("{}", report::table3_report());
+    println!("{}", report::fig13());
+
+    // Utilization diagnostics per optimum (not in the paper; useful for
+    // understanding where the speedup comes from).
+    println!("utilization diagnostics (effective MACs/cycle at the optimum):");
+    for net in [alexnet(), resnet34()] {
+        println!("  {}", net.name);
+        for r in table3(&net) {
+            let eff = macs_per_cycle(&net, &r.config);
+            println!(
+                "    {:>16} {:>5}: {:>8.1} MACs/cycle @ {:.0} MHz (DSPs {}, BRAMs {})",
+                r.config.kind.name(),
+                format!("{}", r.config.precision),
+                eff,
+                accel_fmax_mhz(r.config.kind),
+                r.dsps,
+                r.brams
+            );
+        }
+    }
+
+    let rows = compare_all();
+    let a2 = average_speedup(&rows, "AlexNet", Variant::TwoSA);
+    let r1 = average_speedup(&rows, "ResNet-34", Variant::OneDA);
+    assert!(a2 > 1.5 && r1 > 1.2, "headline speedups must hold");
+}

@@ -1,0 +1,61 @@
+//! Fig 11 regeneration + bit-accurate spot checks.
+//!
+//! Prints the full GEMV speedup sweep (BRAMAC-1DA vs CCB/CoMeFa across
+//! matrix sizes, precisions, computation styles) from the analytical
+//! models, then validates one cell per precision by actually running
+//! the bit-accurate block simulation and confirming (a) exact numerics
+//! and (b) cycle agreement with the analytical BRAMAC model.
+//!
+//! Run: `cargo run --release --example gemv_sweep`
+
+use bramac::arch::Precision;
+use bramac::bramac::Variant;
+use bramac::coordinator::BlockPool;
+use bramac::gemv::{fig11_sweep, BramacGemvModel, ComputeStyle, GemvWorkload};
+use bramac::quant::{random_vector, IntMatrix};
+use bramac::report;
+use bramac::util::Rng;
+
+fn main() {
+    println!("{}", report::fig11());
+
+    println!("spot checks: analytical model vs bit-accurate simulation");
+    let mut rng = Rng::seed_from_u64(0xf16);
+    for p in Precision::ALL {
+        let (m, n) = (p.lanes_per_word() * 4, 128);
+        let w = IntMatrix::random(&mut rng, m, n, p);
+        let x = random_vector(&mut rng, n, p, true);
+        let mut pool = BlockPool::new(Variant::OneDA, 1, p);
+        let (y, stats) = pool.run_gemv(&w, &x);
+        assert_eq!(y, w.gemv_ref(&x), "bit-accurate mismatch at {p}");
+
+        let wl = GemvWorkload::new(m, n, p, ComputeStyle::Persistent);
+        let model = BramacGemvModel::new(Variant::OneDA).cycles(&wl);
+        let drift = (stats.makespan_cycles as f64 - model.total as f64).abs()
+            / model.total as f64;
+        println!(
+            "  {p}: {m}x{n} exact; sim {} cycles vs analytical {} ({:+.1}% drift)",
+            stats.makespan_cycles,
+            model.total,
+            drift * 100.0
+        );
+        assert!(drift < 0.10, "cycle models must agree within 10%");
+    }
+
+    // Peak-speedup summary (the §VI-C headline numbers).
+    println!("\npeak speedups vs CCB (paper: 3.3/2.8/2.4 persistent, 4.1/3.4/2.8 tiling):");
+    for style in ComputeStyle::ALL {
+        let line: Vec<String> = Precision::ALL
+            .iter()
+            .map(|&p| {
+                let best = fig11_sweep()
+                    .into_iter()
+                    .filter(|c| c.precision == p && c.style == style)
+                    .map(|c| c.speedup_vs_ccb)
+                    .fold(0.0f64, f64::max);
+                format!("{p}: {best:.2}x")
+            })
+            .collect();
+        println!("  {:>15}: {}", style.name(), line.join("  "));
+    }
+}

@@ -1,0 +1,146 @@
+"""AOT export: lower the L2 entry points to HLO text + manifest.
+
+Python runs ONCE at build time (``make artifacts``); the Rust coordinator
+loads the emitted ``artifacts/*.hlo.txt`` through the PJRT C API and never
+touches Python again.
+
+Interchange format is **HLO text**, not serialized HloModuleProto: jax≥0.5
+emits protos with 64-bit instruction ids which the xla crate's
+xla_extension 0.5.1 rejects (``proto.id() <= INT_MAX``); the text parser
+reassigns ids and round-trips cleanly (see /opt/xla-example/README.md).
+
+Usage: ``python -m compile.aot --out-dir ../artifacts``
+"""
+
+from __future__ import annotations
+
+import argparse
+import hashlib
+import json
+import os
+
+import jax
+from jax._src.lib import xla_client as xc
+
+from . import model
+
+#: Export manifest: artifact name -> entry factory + arg/result metadata.
+#: Shapes match what the Rust coordinator dispatches (see rust/src/runtime).
+GEMV_SHAPES = {2: (160, 256), 4: (160, 256), 8: (160, 256)}
+GEMM_TILE = (32, 128, 32)
+E2E_BATCH = 4
+E2E_PRECISION = 4
+
+
+def to_hlo_text(lowered) -> str:
+    """stablehlo -> XlaComputation -> HLO text (return_tuple=True)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def _spec_meta(spec) -> dict:
+    return {"shape": list(spec.shape), "dtype": str(spec.dtype)}
+
+
+def build_exports():
+    """Yield (name, entry_fn, arg_specs, out_meta) for every artifact."""
+    exports = []
+
+    for prec, (m, n) in GEMV_SHAPES.items():
+        entry, specs = model.make_gemv_entry(m, n, prec)
+        exports.append(
+            (
+                f"gemv_mac2_p{prec}_m{m}_n{n}",
+                entry,
+                specs,
+                {"kind": "gemv", "precision": prec, "m": m, "n": n},
+            )
+        )
+
+    tm, tk, tn = GEMM_TILE
+    entry, specs = model.make_gemm_entry(tm, tk, tn)
+    exports.append(
+        (
+            f"gemm_i32_{tm}x{tk}x{tn}",
+            entry,
+            specs,
+            {"kind": "gemm", "m": tm, "k": tk, "n": tn},
+        )
+    )
+
+    entry, specs = model.make_cnn_entry(E2E_BATCH, E2E_PRECISION)
+    exports.append(
+        (
+            "model",
+            entry,
+            specs,
+            {
+                "kind": "cnn",
+                "batch": E2E_BATCH,
+                "precision": E2E_PRECISION,
+                "classes": model.CNN_CLASSES,
+            },
+        )
+    )
+
+    for layer in range(len(model.CNN_LAYERS)):
+        entry, specs = model.make_conv_layer_entry(E2E_BATCH, layer, E2E_PRECISION)
+        name, k, c, r, s, stride, padding = model.CNN_LAYERS[layer]
+        exports.append(
+            (
+                f"cnn_{name}",
+                entry,
+                specs,
+                {
+                    "kind": "conv_layer",
+                    "layer": layer,
+                    "k": k,
+                    "c": c,
+                    "r": r,
+                    "s": s,
+                    "stride": stride,
+                    "padding": padding,
+                    "batch": E2E_BATCH,
+                    "precision": E2E_PRECISION,
+                },
+            )
+        )
+
+    return exports
+
+
+def main() -> None:
+    parser = argparse.ArgumentParser(description=__doc__)
+    parser.add_argument("--out-dir", default="../artifacts")
+    parser.add_argument("--only", default=None, help="export a single artifact")
+    args = parser.parse_args()
+    os.makedirs(args.out_dir, exist_ok=True)
+
+    manifest = {"format": "hlo-text", "artifacts": {}}
+    for name, entry, specs, meta in build_exports():
+        if args.only and name != args.only:
+            continue
+        lowered = jax.jit(entry).lower(*specs)
+        text = to_hlo_text(lowered)
+        path = os.path.join(args.out_dir, f"{name}.hlo.txt")
+        with open(path, "w") as f:
+            f.write(text)
+        manifest["artifacts"][name] = {
+            "file": f"{name}.hlo.txt",
+            "inputs": [_spec_meta(s) for s in specs],
+            "sha256": hashlib.sha256(text.encode()).hexdigest()[:16],
+            **meta,
+        }
+        print(f"wrote {path} ({len(text)} chars)")
+
+    manifest_path = os.path.join(args.out_dir, "manifest.json")
+    with open(manifest_path, "w") as f:
+        json.dump(manifest, f, indent=2, sort_keys=True)
+    print(f"wrote {manifest_path} ({len(manifest['artifacts'])} artifacts)")
+
+
+if __name__ == "__main__":
+    main()

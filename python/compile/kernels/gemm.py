@@ -1,0 +1,53 @@
+"""L1 Pallas kernel: lane-tiled integer GEMM (the DSP-path compute).
+
+In the DLA-BRAMAC accelerator (paper §VI-D) output pixels are split between
+the DSP-based PE array (Qvec1 columns) and BRAMAC blocks (Qvec2 columns).
+``mac2.py`` models the BRAMAC side; this kernel models the DSP side: a plain
+tiled int8→int32 GEMM of the kind the PE array's dot-product units perform.
+It is the workhorse for im2col convolutions in the L2 model and for the
+tile executions the Rust coordinator dispatches through PJRT.
+
+Tiling mirrors a systolic schedule: the grid walks (M/TM, N/TN) output
+tiles; each step streams the full K dimension through the tile (the
+stream-buffer axis). interpret=True for CPU-PJRT execution.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _gemm_kernel(a_ref, b_ref, o_ref):
+    a = a_ref[...].astype(jnp.int32)  # (TM, K)
+    b = b_ref[...].astype(jnp.int32)  # (K, TN)
+    o_ref[...] = jnp.dot(a, b, preferred_element_type=jnp.int32)
+
+
+@functools.partial(jax.jit, static_argnames=("tile_m", "tile_n", "interpret"))
+def gemm_int(a, b, *, tile_m: int = 32, tile_n: int = 32, interpret: bool = True):
+    """C = A @ B for integer tensors, int32 accumulation.
+
+    A: (M, K), B: (K, N); M % tile_m == 0 and N % tile_n == 0 (pad upstream;
+    the L2 model's ``pad_to`` helper does this).
+    """
+    m, k = a.shape
+    k2, n = b.shape
+    if k != k2:
+        raise ValueError(f"inner dims mismatch: {a.shape} @ {b.shape}")
+    if m % tile_m or n % tile_n:
+        raise ValueError(f"M={m}, N={n} must tile by ({tile_m}, {tile_n})")
+    return pl.pallas_call(
+        _gemm_kernel,
+        grid=(m // tile_m, n // tile_n),
+        in_specs=[
+            pl.BlockSpec((tile_m, k), lambda i, j: (i, 0)),
+            pl.BlockSpec((k, tile_n), lambda i, j: (0, j)),
+        ],
+        out_specs=pl.BlockSpec((tile_m, tile_n), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), jnp.int32),
+        interpret=interpret,
+    )(a.astype(jnp.int32), b.astype(jnp.int32))

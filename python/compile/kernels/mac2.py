@@ -1,0 +1,194 @@
+"""L1 Pallas kernel: BRAMAC's hybrid bit-serial & bit-parallel MAC2 dataflow.
+
+This kernel is a faithful software rendering of the paper's Algorithm 1 and
+of the dummy-array microarchitecture in Fig. 3:
+
+* Weights are processed **bit-parallel** across lanes (the 160-bit SIMD adder
+  of the dummy array → a vectorized lane axis here).
+* Inputs are processed **bit-serial**, MSB → LSB (the eFSM's per-bit loop).
+* Each step selects the partial sum from the 4-entry LUT
+  {0, W1, W2, W1+W2} using the current input-bit pair {I2[i], I1[i]} — the
+  2-to-4 demux on rows 1–4 of the dummy array.
+* The MSB contribution is subtracted (2's-complement, lines 4–6 of
+  Algorithm 1) and the running sum is shifted left after every non-LSB bit.
+
+Hardware adaptation (see DESIGN.md §Hardware-Adaptation): the dummy array is
+a small scratchpad, so the natural TPU mapping keeps the LUT rows resident
+in VMEM (the weight BlockSpec tile) and expresses the per-bit select as a
+vectorized `where` over lanes; the HBM→VMEM tile copy plays the role of the
+main-BRAM→dummy-array weight copy that the eFSM pipelines. Pallas runs with
+``interpret=True`` — real-TPU lowering would emit a Mosaic custom-call the
+CPU PJRT plugin cannot execute; numerics are identical.
+
+All integer math is int32; operands must already be within their n-bit
+2's-complement (or unsigned) range — see ``ref.quant_range``.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Lanes per 40-bit main-BRAM word at each precision — the configurable
+# sign-extension mux copies five 8-bit / ten 4-bit / twenty 2-bit elements
+# per port read (paper §III-C2). Used as the natural output-tile quantum.
+LANES_PER_WORD = {2: 20, 4: 10, 8: 5}
+
+SUPPORTED_PRECISIONS = (2, 4, 8)
+
+
+def _check_precision(precision: int) -> None:
+    if precision < 2 or precision > 8:
+        raise ValueError(f"precision must be in [2, 8], got {precision}")
+
+
+def _mac2_psum(w1, w2, w12, b1, b2):
+    """Demux-LUT partial-sum selection (dummy-array rows 1-4).
+
+    sel = {I2[i], I1[i]}:
+      2'b00 -> row 1 (hard-coded zero)
+      2'b01 -> row 2 (W1)
+      2'b10 -> row 3 (W2)
+      2'b11 -> row 4 (W1 + W2)
+
+    b1/b2 broadcast over the lane (row) axis of w1/w2/w12.
+    """
+    sel = b1 + 2 * b2
+    zero = jnp.zeros_like(w1)
+    return jnp.where(
+        sel == 0,
+        zero,
+        jnp.where(sel == 1, w1, jnp.where(sel == 2, w2, w12)),
+    )
+
+
+def _bitserial_reduce(w1, w2, i1, i2, precision: int, signed_inputs: bool):
+    """Run Algorithm 1 over one weight tile and one input vector.
+
+    w1, w2: (TM, N2) int32 — even/odd weight columns (dummy-array rows 2, 3)
+    i1, i2: (N2,)   int32 — even/odd input elements
+    Returns P: (TM,) int32.
+    """
+    w12 = w1 + w2  # dummy-array row 4, written once in "Cycle 3" (Fig 4)
+    p = jnp.zeros(w1.shape[:1], jnp.int32)
+    for i in range(precision - 1, -1, -1):
+        b1 = (i1 >> i) & 1
+        b2 = (i2 >> i) & 1
+        psum_lanes = _mac2_psum(w1, w2, w12, b1, b2)  # (TM, N2)
+        psum = jnp.sum(psum_lanes, axis=1)
+        if signed_inputs and i == precision - 1:
+            # P = P + inv(psum) + 1  (binary subtraction via the Inverter row)
+            p = p - psum
+        else:
+            p = p + psum
+        if i != 0:
+            p = p << 1
+    return p
+
+
+def _gemv_kernel(x_ref, w_ref, o_ref, *, precision: int, signed_inputs: bool):
+    w = w_ref[...].astype(jnp.int32)  # (TM, N)
+    x = x_ref[...].astype(jnp.int32)  # (N,)
+    w1 = w[:, 0::2]
+    w2 = w[:, 1::2]
+    i1 = x[0::2]
+    i2 = x[1::2]
+    o_ref[...] = _bitserial_reduce(w1, w2, i1, i2, precision, signed_inputs)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("precision", "signed_inputs", "tile_m", "interpret")
+)
+def mac2_gemv(
+    w,
+    x,
+    *,
+    precision: int,
+    signed_inputs: bool = True,
+    tile_m: int | None = None,
+    interpret: bool = True,
+):
+    """y = W @ x computed with the BRAMAC MAC2 bit-serial dataflow.
+
+    Args:
+      w: (M, N) int32 weight matrix, entries within ``precision``-bit
+         2's-complement range. N must be even (the MAC2 pairs inputs);
+         M must be divisible by ``tile_m``.
+      x: (N,) int32 input vector within range (signed or unsigned per
+         ``signed_inputs`` — unsigned skips the inverter step, §IV-C).
+      precision: operand precision n ∈ [2, 8].
+      tile_m: output rows per grid step; defaults to one 40-bit-word's worth
+        of lanes (LANES_PER_WORD) when precision ∈ {2,4,8}, else 8.
+
+    Returns: (M,) int32 = W @ x exactly.
+    """
+    _check_precision(precision)
+    m, n_in = w.shape
+    if n_in % 2 != 0:
+        raise ValueError(f"N must be even (MAC2 pairs inputs), got {n_in}")
+    if x.shape != (n_in,):
+        raise ValueError(f"x shape {x.shape} incompatible with w {w.shape}")
+    if tile_m is None:
+        tile_m = LANES_PER_WORD.get(precision, 8)
+        # Use larger software tiles when the matrix allows it.
+        while tile_m < 40 and m % (tile_m * 2) == 0:
+            tile_m *= 2
+    if m % tile_m != 0:
+        raise ValueError(f"M={m} not divisible by tile_m={tile_m}")
+
+    kernel = functools.partial(
+        _gemv_kernel, precision=precision, signed_inputs=signed_inputs
+    )
+    return pl.pallas_call(
+        kernel,
+        grid=(m // tile_m,),
+        in_specs=[
+            pl.BlockSpec((n_in,), lambda i: (0,)),
+            pl.BlockSpec((tile_m, n_in), lambda i: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((tile_m,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((m,), jnp.int32),
+        interpret=interpret,
+    )(x.astype(jnp.int32), w.astype(jnp.int32))
+
+
+def _mac2_lanes_kernel(w_ref, i_ref, o_ref, *, precision: int, signed_inputs: bool):
+    w = w_ref[...].astype(jnp.int32)  # (2, LANES)
+    ivec = i_ref[...].astype(jnp.int32)  # (2,)
+    w1 = w[0][:, None]  # (LANES, 1) — single MAC2 pair per lane
+    w2 = w[1][:, None]
+    i1 = ivec[0:1]
+    i2 = ivec[1:2]
+    o_ref[...] = _bitserial_reduce(w1, w2, i1, i2, precision, signed_inputs)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("precision", "signed_inputs", "interpret")
+)
+def mac2_lanes(
+    w_pair,
+    i_pair,
+    *,
+    precision: int,
+    signed_inputs: bool = True,
+    interpret: bool = True,
+):
+    """The raw hardware primitive: one dummy-array MAC2 across lanes.
+
+    w_pair: (2, LANES) int32 — the W1 and W2 vectors (dummy-array rows 2/3).
+    i_pair: (2,) int32 — the I1, I2 scalars from the CIM instruction.
+    Returns P: (LANES,) int32 = W1*I1 + W2*I2.
+    """
+    _check_precision(precision)
+    lanes = w_pair.shape[1]
+    kernel = functools.partial(
+        _mac2_lanes_kernel, precision=precision, signed_inputs=signed_inputs
+    )
+    return pl.pallas_call(
+        kernel,
+        out_shape=jax.ShapeDtypeStruct((lanes,), jnp.int32),
+        interpret=interpret,
+    )(w_pair.astype(jnp.int32), i_pair.astype(jnp.int32))

@@ -1,0 +1,58 @@
+"""Pure-jnp correctness oracles for the BRAMAC kernels.
+
+Every Pallas kernel in this package is checked against these references at
+build time (pytest + hypothesis). The references intentionally use the most
+boring formulation possible — plain int32 dot products — so that any
+cleverness in the kernels (bit-serial scheduling, LUT demux selection,
+sign-extension lanes) is validated against straight-line arithmetic.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def ref_mac2(w1, w2, i1, i2):
+    """MAC2 primitive: P = W1*I1 + W2*I2 (elementwise over lanes).
+
+    Mirrors the paper's equation P = (W1 I1 + W2 I2) computed by one
+    dummy-array pass. All operands are integers; accumulate in int32.
+    """
+    w1 = jnp.asarray(w1, jnp.int32)
+    w2 = jnp.asarray(w2, jnp.int32)
+    return w1 * jnp.int32(i1) + w2 * jnp.int32(i2)
+
+
+def ref_gemv(w, x):
+    """y = W @ x with int32 accumulation. W: (M, N) int, x: (N,) int."""
+    return jnp.dot(w.astype(jnp.int32), x.astype(jnp.int32))
+
+
+def ref_gemm(a, b):
+    """C = A @ B with int32 accumulation. A: (M, K), B: (K, N)."""
+    return jnp.dot(a.astype(jnp.int32), b.astype(jnp.int32))
+
+
+def ref_conv2d(x, w, stride: int = 1, padding: int = 0):
+    """NCHW int conv reference via jax.lax.conv with int32 accumulation.
+
+    x: (B, C, H, W) int, w: (K, C, R, S) int.
+    """
+    import jax.lax as lax
+
+    out = lax.conv_general_dilated(
+        x.astype(jnp.int32),
+        w.astype(jnp.int32),
+        window_strides=(stride, stride),
+        padding=[(padding, padding), (padding, padding)],
+        dimension_numbers=("NCHW", "OIHW", "NCHW"),
+        preferred_element_type=jnp.int32,
+    )
+    return out
+
+
+def quant_range(precision: int, signed: bool = True):
+    """Representable integer range of an n-bit (2..8) operand."""
+    if signed:
+        return -(1 << (precision - 1)), (1 << (precision - 1)) - 1
+    return 0, (1 << precision) - 1

@@ -1,0 +1,238 @@
+"""L2: quantized compute graphs built on the L1 Pallas kernels.
+
+This module is build-time only — it is lowered once by ``aot.py`` to HLO
+text and never imported on the Rust request path. It provides:
+
+* padding / symmetric-quantization helpers,
+* ``bramac_gemv`` — GEMV through the MAC2 bit-serial kernel (the BRAMAC
+  compute path),
+* ``conv2d_int`` — im2col + tiled integer GEMM (the DSP/PE compute path),
+* ``cnn_forward`` — a small quantized CNN (AlexNet-style feature stack)
+  used by the end-to-end example,
+* ``make_*_entry`` factories that freeze shapes/precisions for AOT export.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .kernels.gemm import gemm_int
+from .kernels.mac2 import LANES_PER_WORD, mac2_gemv
+from .kernels import ref
+
+
+# --------------------------------------------------------------------------
+# Shape / quantization helpers
+# --------------------------------------------------------------------------
+
+def pad_to(x, axis: int, multiple: int):
+    """Zero-pad ``x`` along ``axis`` to the next multiple of ``multiple``."""
+    size = x.shape[axis]
+    target = ((size + multiple - 1) // multiple) * multiple
+    if target == size:
+        return x
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, target - size)
+    return jnp.pad(x, widths)
+
+
+def quantize_sym(x, precision: int):
+    """Symmetric per-tensor quantization of a float tensor to n-bit ints.
+
+    Returns (q, scale) with q int32 in [-(2^(n-1)-1), 2^(n-1)-1] and
+    x ≈ q * scale. Deliberately simple — the paper's evaluation is a
+    performance study; accuracy-preserving calibration is out of scope.
+    """
+    qmax = (1 << (precision - 1)) - 1
+    scale = jnp.maximum(jnp.max(jnp.abs(x)), 1e-8) / qmax
+    q = jnp.clip(jnp.round(x / scale), -qmax, qmax).astype(jnp.int32)
+    return q, scale
+
+
+def requantize(acc, in_scale, w_scale, out_scale, precision: int):
+    """Rescale an int32 accumulator to n-bit for the next layer."""
+    qmax = (1 << (precision - 1)) - 1
+    real = acc.astype(jnp.float32) * (in_scale * w_scale)
+    return jnp.clip(jnp.round(real / out_scale), -qmax, qmax).astype(jnp.int32)
+
+
+# --------------------------------------------------------------------------
+# BRAMAC GEMV path
+# --------------------------------------------------------------------------
+
+def bramac_gemv(w, x, *, precision: int, signed_inputs: bool = True):
+    """GEMV through the MAC2 dataflow kernel, padding as hardware would.
+
+    The sign-extension mux copies LANES_PER_WORD[n] weights per port read;
+    partially-filled tiles run at reduced vectorization efficiency exactly
+    as §VI-C describes (the 64/80 = 80% example) — in software that shows
+    up as zero padding.
+    """
+    lanes = LANES_PER_WORD.get(precision, 8)
+    m = w.shape[0]
+    w = pad_to(pad_to(w, 0, lanes), 1, 2)
+    x = pad_to(x, 0, 2)
+    y = mac2_gemv(w, x, precision=precision, signed_inputs=signed_inputs)
+    return y[:m]
+
+
+# --------------------------------------------------------------------------
+# Convolution via im2col + integer GEMM (DSP/PE path)
+# --------------------------------------------------------------------------
+
+def im2col(x, r: int, s: int, stride: int, padding: int):
+    """(B, C, H, W) -> (B, P*Q, C*R*S) patch matrix, int32."""
+    b, c, h, w = x.shape
+    xp = jnp.pad(x, ((0, 0), (0, 0), (padding, padding), (padding, padding)))
+    p = (h + 2 * padding - r) // stride + 1
+    q = (w + 2 * padding - s) // stride + 1
+    # Extract patches with static trace-time loops over R, S only — cheap
+    # for the small kernels used here.
+    cols = []
+    for dr in range(r):
+        for ds in range(s):
+            patch = xp[:, :, dr : dr + stride * p : stride, ds : ds + stride * q : stride]
+            cols.append(patch.reshape(b, c, p * q))
+    # (R*S, B, C, PQ) -> (B, PQ, C*R*S) with C-major to match OIHW weights
+    stacked = jnp.stack(cols, axis=0).reshape(r * s, b, c, p * q)
+    out = stacked.transpose(1, 3, 2, 0).reshape(b, p * q, c * r * s)
+    return out, p, q
+
+
+def conv2d_int(x, w, *, stride: int = 1, padding: int = 0,
+               tile_m: int = 32, tile_n: int = 32):
+    """Integer NCHW convolution: im2col + the L1 tiled GEMM kernel.
+
+    x: (B, C, H, W) int32, w: (K, C, R, S) int32 -> (B, K, P, Q) int32.
+    """
+    b = x.shape[0]
+    k, c, r, s = w.shape
+    patches, p, q = im2col(x, r, s, stride, padding)  # (B, PQ, CRS)
+    a = patches.reshape(b * p * q, c * r * s)
+    wmat = w.reshape(k, c * r * s).T  # (CRS, K)
+    m0, n0 = a.shape[0], k
+    a = pad_to(a, 0, tile_m)
+    wmat = pad_to(wmat, 1, tile_n)
+    out = gemm_int(a, wmat, tile_m=tile_m, tile_n=tile_n)[:m0, :n0]
+    return out.reshape(b, p, q, k).transpose(0, 3, 1, 2)
+
+
+def maxpool2d(x, size: int = 2, stride: int = 2):
+    """(B, C, H, W) max pool."""
+    b, c, h, w = x.shape
+    p, q = (h - size) // stride + 1, (w - size) // stride + 1
+    views = []
+    for dr in range(size):
+        for ds in range(size):
+            views.append(x[:, :, dr : dr + stride * p : stride, ds : ds + stride * q : stride])
+    return jnp.max(jnp.stack(views, axis=0), axis=0)
+
+
+# --------------------------------------------------------------------------
+# Quantized CNN (AlexNet-style feature stack on 32x32 inputs)
+# --------------------------------------------------------------------------
+
+#: (name, K, C, R, S, stride, padding) — a scaled-down AlexNet feature
+#: extractor that keeps the paper's motivating workload shape (conv stack
+#: with growing K) while staying tractable for the CPU interpret path.
+CNN_LAYERS = (
+    ("conv1", 24, 3, 3, 3, 1, 1),
+    ("conv2", 48, 24, 3, 3, 1, 1),
+    ("conv3", 96, 48, 3, 3, 1, 1),
+)
+CNN_CLASSES = 10
+
+
+def init_cnn_params(key, precision: int):
+    """Random n-bit quantized weights for the CNN (synthetic workload)."""
+    params = {}
+    qmax = (1 << (precision - 1)) - 1
+    for name, k, c, r, s, _, _ in CNN_LAYERS:
+        key, sub = jax.random.split(key)
+        params[name] = jax.random.randint(sub, (k, c, r, s), -qmax, qmax + 1, jnp.int32)
+    key, sub = jax.random.split(key)
+    kf = CNN_LAYERS[-1][1]
+    params["fc"] = jax.random.randint(
+        sub, (CNN_CLASSES, kf * 4 * 4), -qmax, qmax + 1, jnp.int32
+    )
+    return params
+
+
+def cnn_forward(params, x, *, precision: int):
+    """Quantized CNN forward pass: int conv -> ReLU -> requant -> pool.
+
+    x: (B, 3, 32, 32) int32 activations within n-bit range.
+    Returns (B, 10) int32 logits (raw accumulator scale).
+    """
+    qmax = (1 << (precision - 1)) - 1
+    h = x
+    for name, k, c, r, s, stride, padding in CNN_LAYERS:
+        acc = conv2d_int(h, params[name], stride=stride, padding=padding)
+        acc = jnp.maximum(acc, 0)  # ReLU on the accumulator
+        # Power-of-two requantization (hardware-friendly shift) back to n-bit.
+        shift = 2 * precision - 2
+        h = jnp.clip(acc >> shift, 0, qmax).astype(jnp.int32)
+        h = maxpool2d(h, 2, 2)
+    b = h.shape[0]
+    flat = h.reshape(b, -1)
+    return ref.ref_gemm(flat, params["fc"].T)
+
+
+# --------------------------------------------------------------------------
+# AOT entry factories (fixed shapes for jax.jit(...).lower)
+# --------------------------------------------------------------------------
+
+def make_gemv_entry(m: int, n: int, precision: int, signed_inputs: bool = True):
+    """GEMV entry: (w: (m,n) i32, x: (n,) i32) -> ((m,) i32,)."""
+
+    def entry(w, x):
+        return (bramac_gemv(w, x, precision=precision, signed_inputs=signed_inputs),)
+
+    specs = (
+        jax.ShapeDtypeStruct((m, n), jnp.int32),
+        jax.ShapeDtypeStruct((n,), jnp.int32),
+    )
+    return entry, specs
+
+
+def make_gemm_entry(m: int, k: int, n: int, tile_m: int = 32, tile_n: int = 32):
+    """GEMM tile entry: (a: (m,k) i32, b: (k,n) i32) -> ((m,n) i32,)."""
+
+    def entry(a, b):
+        return (gemm_int(a, b, tile_m=tile_m, tile_n=tile_n),)
+
+    specs = (
+        jax.ShapeDtypeStruct((m, k), jnp.int32),
+        jax.ShapeDtypeStruct((k, n), jnp.int32),
+    )
+    return entry, specs
+
+
+def make_cnn_entry(batch: int, precision: int):
+    """Whole-model entry used by the e2e example.
+
+    Weights are baked as constants (deterministic key) so the Rust side
+    only feeds activations — mirroring persistent weight storage.
+    """
+    params = init_cnn_params(jax.random.PRNGKey(0), precision)
+
+    def entry(x):
+        return (cnn_forward(params, x, precision=precision),)
+
+    specs = (jax.ShapeDtypeStruct((batch, 3, 32, 32), jnp.int32),)
+    return entry, specs
+
+
+def make_conv_layer_entry(batch: int, layer: int, precision: int):
+    """Single CNN conv layer as its own artifact (per-layer tiling in L3)."""
+    params = init_cnn_params(jax.random.PRNGKey(0), precision)
+    name, k, c, r, s, stride, padding = CNN_LAYERS[layer]
+    side = 32 // (2 ** layer)
+
+    def entry(x):
+        acc = conv2d_int(x, params[name], stride=stride, padding=padding)
+        return (acc,)
+
+    specs = (jax.ShapeDtypeStruct((batch, c, side, side), jnp.int32),)
+    return entry, specs

@@ -1,0 +1,60 @@
+"""AOT export sanity: every export lowers to parseable HLO text with the
+expected entry signature, and the manifest is internally consistent."""
+
+import json
+import os
+
+import jax
+import pytest
+
+from compile import aot, model
+
+ART_DIR = os.path.join(os.path.dirname(__file__), "..", "..", "artifacts")
+
+
+def test_build_exports_unique_names():
+    names = [name for name, *_ in aot.build_exports()]
+    assert len(names) == len(set(names))
+    assert "model" in names
+    for prec in (2, 4, 8):
+        assert any(f"p{prec}" in n for n in names if n.startswith("gemv"))
+
+
+@pytest.mark.parametrize("idx", range(len(aot.build_exports())))
+def test_export_lowers_to_hlo_text(idx):
+    name, entry, specs, meta = aot.build_exports()[idx]
+    lowered = jax.jit(entry).lower(*specs)
+    text = aot.to_hlo_text(lowered)
+    assert text.startswith("HloModule")
+    assert "ENTRY" in text
+    # return_tuple=True means the root is a tuple — the Rust side unwraps it.
+    assert "s32" in text  # integer path end-to-end
+
+
+@pytest.mark.skipif(
+    not os.path.exists(os.path.join(ART_DIR, "manifest.json")),
+    reason="run `make artifacts` first",
+)
+def test_manifest_matches_files():
+    with open(os.path.join(ART_DIR, "manifest.json")) as f:
+        manifest = json.load(f)
+    assert manifest["format"] == "hlo-text"
+    for name, meta in manifest["artifacts"].items():
+        path = os.path.join(ART_DIR, meta["file"])
+        assert os.path.exists(path), f"missing artifact file {meta['file']}"
+        with open(path) as fh:
+            head = fh.read(64)
+        assert head.startswith("HloModule")
+        assert meta["inputs"], f"{name} has no input specs"
+
+
+def test_gemv_export_shapes_match_manifest_meta():
+    for name, entry, specs, meta in aot.build_exports():
+        if meta.get("kind") == "gemv":
+            assert specs[0].shape == (meta["m"], meta["n"])
+            assert specs[1].shape == (meta["n"],)
+        if meta.get("kind") == "gemm":
+            assert specs[0].shape == (meta["m"], meta["k"])
+            assert specs[1].shape == (meta["k"], meta["n"])
+        if meta.get("kind") == "cnn":
+            assert specs[0].shape == (meta["batch"], 3, 32, 32)

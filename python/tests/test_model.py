@@ -1,0 +1,102 @@
+"""L2 model graph correctness: conv-via-GEMM vs lax.conv, CNN shapes,
+quantization helpers, and BRAMAC-path GEMV with ragged shapes."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+import jax
+import jax.numpy as jnp
+
+from compile import model
+from compile.kernels import ref
+
+
+def test_pad_to():
+    x = jnp.ones((5, 3))
+    assert model.pad_to(x, 0, 4).shape == (8, 3)
+    assert model.pad_to(x, 1, 3).shape == (5, 3)
+    padded = model.pad_to(x, 0, 4)
+    assert float(jnp.sum(padded)) == 15.0  # zero padding only
+
+
+@pytest.mark.parametrize("precision", [2, 4, 8])
+def test_quantize_sym_range(precision):
+    rng = np.random.default_rng(3)
+    x = jnp.asarray(rng.normal(size=(32, 32)).astype(np.float32))
+    q, scale = model.quantize_sym(x, precision)
+    qmax = (1 << (precision - 1)) - 1
+    assert int(jnp.max(jnp.abs(q))) <= qmax
+    err = jnp.max(jnp.abs(q * scale - x))
+    assert float(err) <= float(scale) * 0.5 + 1e-6
+
+
+@pytest.mark.parametrize("precision", [2, 4, 8])
+def test_bramac_gemv_ragged(precision):
+    """Non-lane-multiple M and odd N exercise the hardware-style padding."""
+    rng = np.random.default_rng(11)
+    lo, hi = ref.quant_range(precision)
+    m, n = 37, 17  # deliberately awkward
+    w = rng.integers(lo, hi + 1, (m, n)).astype(np.int32)
+    x = rng.integers(lo, hi + 1, (n,)).astype(np.int32)
+    got = model.bramac_gemv(jnp.asarray(w), jnp.asarray(x), precision=precision)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(ref.ref_gemv(w, x)))
+
+
+@settings(max_examples=10, deadline=None)
+@given(
+    c=st.integers(1, 8),
+    k=st.integers(1, 12),
+    rs=st.sampled_from([1, 3]),
+    stride=st.sampled_from([1, 2]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_conv2d_int_vs_lax(c, k, rs, stride, seed):
+    rng = np.random.default_rng(seed)
+    pad = rs // 2
+    x = rng.integers(-7, 8, (2, c, 12, 12)).astype(np.int32)
+    w = rng.integers(-7, 8, (k, c, rs, rs)).astype(np.int32)
+    got = model.conv2d_int(jnp.asarray(x), jnp.asarray(w), stride=stride,
+                           padding=pad, tile_m=16, tile_n=16)
+    want = ref.ref_conv2d(jnp.asarray(x), jnp.asarray(w), stride=stride, padding=pad)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+def test_maxpool2d():
+    x = jnp.arange(16, dtype=jnp.int32).reshape(1, 1, 4, 4)
+    out = model.maxpool2d(x, 2, 2)
+    np.testing.assert_array_equal(
+        np.asarray(out)[0, 0], np.array([[5, 7], [13, 15]])
+    )
+
+
+@pytest.mark.parametrize("precision", [4, 8])
+def test_cnn_forward_shapes_and_determinism(precision):
+    params = model.init_cnn_params(jax.random.PRNGKey(0), precision)
+    qmax = (1 << (precision - 1)) - 1
+    rng = np.random.default_rng(0)
+    x = jnp.asarray(rng.integers(0, qmax + 1, (2, 3, 32, 32)).astype(np.int32))
+    logits = model.cnn_forward(params, x, precision=precision)
+    assert logits.shape == (2, model.CNN_CLASSES)
+    logits2 = model.cnn_forward(params, x, precision=precision)
+    np.testing.assert_array_equal(np.asarray(logits), np.asarray(logits2))
+
+
+def test_cnn_entry_matches_direct_forward():
+    entry, specs = model.make_cnn_entry(batch=1, precision=4)
+    rng = np.random.default_rng(1)
+    x = jnp.asarray(rng.integers(0, 8, (1, 3, 32, 32)).astype(np.int32))
+    (out,) = entry(x)
+    params = model.init_cnn_params(jax.random.PRNGKey(0), 4)
+    want = model.cnn_forward(params, x, precision=4)
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(want))
+
+
+def test_conv_layer_entry_shapes():
+    for layer, (_, k, c, _, _, _, _) in enumerate(model.CNN_LAYERS):
+        entry, specs = model.make_conv_layer_entry(1, layer, 4)
+        side = 32 // (2 ** layer)
+        assert specs[0].shape == (1, c, side, side)
+        x = jnp.zeros(specs[0].shape, jnp.int32)
+        (out,) = entry(x)
+        assert out.shape == (1, k, side, side)

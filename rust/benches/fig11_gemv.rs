@@ -1,0 +1,39 @@
+//! Bench + regeneration for Fig 11 (GEMV speedup sweep), including the
+//! bit-accurate end-to-end path on a block pool.
+use bramac::arch::Precision;
+use bramac::bramac::Variant;
+use bramac::coordinator::BlockPool;
+use bramac::gemv::ComputeStyle;
+use bramac::quant::{random_vector, IntMatrix};
+use bramac::report;
+use bramac::util::bench::{black_box, Bench};
+use bramac::util::Rng;
+
+fn main() {
+    println!("{}", report::fig11());
+    let mut b = Bench::new("fig11_gemv");
+    b.bench("analytical sweep (96 cells)", || {
+        black_box(bramac::gemv::fig11_sweep());
+    });
+    for p in Precision::ALL {
+        b.bench(&format!("analytical cell 160x480/{p}"), || {
+            black_box(bramac::gemv::sweep::fig11_cell(
+                160,
+                480,
+                p,
+                ComputeStyle::NonPersistent,
+            ));
+        });
+    }
+    // Bit-accurate GEMV on one block (the simulator hot path).
+    let mut rng = Rng::seed_from_u64(9);
+    for p in Precision::ALL {
+        let w = IntMatrix::random(&mut rng, p.lanes_per_word() * 2, 128, p);
+        let x = random_vector(&mut rng, 128, p, true);
+        b.bench(&format!("bit-accurate gemv 2tiles x128/{p}"), || {
+            let mut pool = BlockPool::new(Variant::OneDA, 1, p);
+            black_box(pool.run_gemv(&w, &x));
+        });
+    }
+    b.finish();
+}

@@ -1,0 +1,26 @@
+//! Bench + regeneration for Fig 13 (DLA vs DLA-BRAMAC comparison).
+use bramac::dla::compare::compare_all;
+use bramac::dla::cycle::network_cycles;
+use bramac::dla::config::DlaConfig;
+use bramac::dla::models::{alexnet, resnet34};
+use bramac::arch::Precision;
+use bramac::report;
+use bramac::util::bench::{black_box, Bench};
+
+fn main() {
+    println!("{}", report::fig13());
+    let mut b = Bench::new("fig13_dla");
+    b.bench("compare_all (full Fig 13)", || {
+        black_box(compare_all());
+    });
+    let alex = alexnet();
+    let res = resnet34();
+    let cfg = DlaConfig::dla(3, 16, 64, Precision::Int4);
+    b.bench("network_cycles/AlexNet", || {
+        black_box(network_cycles(&alex, &cfg));
+    });
+    b.bench("network_cycles/ResNet-34", || {
+        black_box(network_cycles(&res, &cfg));
+    });
+    b.finish();
+}

@@ -1,0 +1,21 @@
+//! Bench + regeneration for Fig 7 (adder design-space study).
+use bramac::analytical::adder::{fig7_data, AdderKind, AdderModel};
+use bramac::report;
+use bramac::util::bench::{black_box, Bench};
+
+fn main() {
+    println!("{}", report::fig7());
+    let mut b = Bench::new("fig7_adders");
+    b.bench("fig7_data (full sweep)", || {
+        black_box(fig7_data());
+    });
+    for kind in AdderKind::ALL {
+        let m = AdderModel::new(kind);
+        b.bench(&format!("{}/delay_4..32", kind.name()), || {
+            for bits in (4..=32).step_by(4) {
+                black_box(m.delay_ps(bits));
+            }
+        });
+    }
+    b.finish();
+}

@@ -1,0 +1,32 @@
+//! Bench + regeneration for Fig 8 (dummy-array area/delay breakdown),
+//! plus the bit-level dummy-array primitives the breakdown describes.
+use bramac::analytical::{DummyArrayAreaModel, DummyArrayDelayModel};
+use bramac::arch::Precision;
+use bramac::bramac::row::Row160;
+use bramac::bramac::simd_adder::{add_fa_chain, add_lanes};
+use bramac::report;
+use bramac::util::bench::{black_box, Bench};
+use bramac::util::Rng;
+
+fn main() {
+    println!("{}", report::fig8());
+    let mut b = Bench::new("fig8_dummy_array");
+    b.bench("area_breakdown", || {
+        black_box(DummyArrayAreaModel::default().breakdown());
+    });
+    b.bench("delay_breakdown", || {
+        black_box(DummyArrayDelayModel.critical_path_ps());
+    });
+    let mut rng = Rng::seed_from_u64(1);
+    let a = Row160([rng.next_u64(), rng.next_u64(), rng.next_u64() & 0xFFFF_FFFF]);
+    let c = Row160([rng.next_u64(), rng.next_u64(), rng.next_u64() & 0xFFFF_FFFF]);
+    for p in Precision::ALL {
+        b.bench(&format!("simd_add_lanes/{p}"), || {
+            black_box(add_lanes(&a, &c, p, false));
+        });
+        b.bench(&format!("simd_add_fa_chain/{p} (gate-level ref)"), || {
+            black_box(add_fa_chain(&a, &c, p, false));
+        });
+    }
+    b.finish();
+}

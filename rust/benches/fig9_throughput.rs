@@ -1,0 +1,19 @@
+//! Bench + regeneration for Fig 9 (peak MAC throughput stack).
+use bramac::arch::{FreqModel, Precision, ARRIA10_GX900};
+use bramac::report;
+use bramac::throughput::{peak_throughput, Architecture};
+use bramac::util::bench::{black_box, Bench};
+
+fn main() {
+    println!("{}", report::fig9());
+    let mut b = Bench::new("fig9_throughput");
+    let (d, f) = (ARRIA10_GX900, FreqModel::default());
+    b.bench("full 8-arch x 3-precision stack", || {
+        for arch in Architecture::ALL {
+            for p in Precision::ALL {
+                black_box(peak_throughput(arch, p, &d, &f));
+            }
+        }
+    });
+    b.finish();
+}

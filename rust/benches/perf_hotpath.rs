@@ -1,0 +1,84 @@
+//! §Perf hot-path benchmarks: the simulator and coordinator paths that
+//! dominate end-to-end runs. EXPERIMENTS.md §Perf records before/after
+//! for every optimization iteration against these numbers.
+use bramac::arch::Precision;
+use bramac::bramac::efsm::{compute_schedule, Engine, Mac2Inputs};
+use bramac::bramac::mac2::{gemv_golden, mac2_golden};
+use bramac::bramac::signext::{pack_word, sign_extend_word};
+use bramac::bramac::{BramacBlock, Variant};
+use bramac::coordinator::BlockPool;
+use bramac::quant::{random_vector, IntMatrix};
+use bramac::util::bench::{black_box, Bench};
+use bramac::util::Rng;
+
+fn main() {
+    let mut b = Bench::new("perf_hotpath");
+    let mut rng = Rng::seed_from_u64(0xbeef);
+
+    // Golden Algorithm-1 scalar (reference cost).
+    b.bench("mac2_golden/8bit", || {
+        black_box(mac2_golden(
+            black_box(-77),
+            black_box(45),
+            black_box(-128),
+            black_box(99),
+            8,
+            true,
+        ));
+    });
+
+    // One full eFSM MAC2 on the bit-level engine (all lanes).
+    for p in Precision::ALL {
+        let schedule = compute_schedule(p, true);
+        let (lo, hi) = p.range();
+        let w: Vec<i64> = (0..p.lanes_per_word())
+            .map(|_| rng.gen_range_i64(lo as i64, hi as i64))
+            .collect();
+        let w1 = sign_extend_word(pack_word(&w, p), p);
+        let inputs = Mac2Inputs { i1: lo as i64, i2: hi as i64, signed: true };
+        b.bench(&format!("efsm_mac2/{p} (engine, all lanes)"), || {
+            let mut e = Engine::new(p);
+            e.array.new_cycle();
+            e.copy_weight(bramac::bramac::dummy_array::Row::W1, w1);
+            e.array.new_cycle();
+            e.copy_weight(bramac::bramac::dummy_array::Row::W2, w1);
+            for &op in &schedule {
+                e.array.new_cycle();
+                e.exec(op, inputs);
+            }
+            black_box(e.p_lanes());
+        });
+    }
+
+    // Block-level MAC2 stream (main-BRAM read + sign-ext + engine).
+    for variant in Variant::ALL {
+        let p = Precision::Int4;
+        let mut block = BramacBlock::new(variant, p);
+        for a in 0..64u16 {
+            block.write_word(a, 0x55_5555_5555 & ((1 << 40) - 1));
+        }
+        let pairs = vec![(3i64, -2i64); variant.dummy_arrays()];
+        let mut addr = 0u16;
+        b.bench(&format!("block_mac2_stream/{}/4bit", variant.name()), || {
+            block.mac2(addr % 64, (addr + 1) % 64, &pairs, true);
+            addr = addr.wrapping_add(2);
+        });
+    }
+
+    // Coordinator GEMV end-to-end (the e2e hot path).
+    let p = Precision::Int4;
+    let w = IntMatrix::random(&mut rng, 80, 256, p);
+    let x = random_vector(&mut rng, 256, p, true);
+    b.bench("pool_gemv/80x256/4bit/2blocks", || {
+        let mut pool = BlockPool::new(Variant::OneDA, 2, p);
+        black_box(pool.run_gemv(&w, &x));
+    });
+
+    // Pure golden GEMV (upper bound for the numerics side).
+    let wflat = w.data.clone();
+    b.bench("gemv_golden/80x256/4bit", || {
+        black_box(gemv_golden(&wflat, &x, 80, 256, p, true));
+    });
+
+    b.finish();
+}

@@ -1,0 +1,23 @@
+//! Bench + regeneration for Table II (architecture feature comparison).
+use bramac::arch::Precision;
+use bramac::bramac::Variant;
+use bramac::cim::mac_latency_cycles;
+use bramac::report;
+use bramac::util::bench::{black_box, Bench};
+
+fn main() {
+    println!("{}", report::table2());
+    let mut b = Bench::new("table2_features");
+    b.bench("render", || {
+        black_box(report::table2());
+    });
+    b.bench("latency/parallelism model", || {
+        for p in Precision::ALL {
+            for v in Variant::ALL {
+                black_box((v.mac2_cycles(p, true), v.macs_in_parallel(p)));
+            }
+            black_box(mac_latency_cycles(p.bits()));
+        }
+    });
+    b.finish();
+}

@@ -1,0 +1,26 @@
+//! Bench + regeneration for Table III (design-space exploration).
+use bramac::arch::Precision;
+use bramac::bramac::Variant;
+use bramac::dla::config::AccelKind;
+use bramac::dla::dse::explore;
+use bramac::dla::models::{alexnet, resnet34};
+use bramac::report;
+use bramac::util::bench::{black_box, Bench};
+
+fn main() {
+    println!("{}", report::table3_report());
+    let mut b = Bench::new("table3_dse");
+    for net in [alexnet(), resnet34()] {
+        b.bench(&format!("dse/{}/DLA/4-bit", net.name), || {
+            black_box(explore(&net, AccelKind::Dla, Precision::Int4));
+        });
+        b.bench(&format!("dse/{}/DLA-BRAMAC-2SA/4-bit", net.name), || {
+            black_box(explore(
+                &net,
+                AccelKind::DlaBramac(Variant::TwoSA),
+                Precision::Int4,
+            ));
+        });
+    }
+    b.finish();
+}

@@ -1,0 +1,205 @@
+//! Adder design-space study (§V-B, Fig 7): ripple-carry (RCA),
+//! carry-bypass with 4-bit Manchester chains (CBA), and carry-lookahead
+//! with 4-bit mirror generators (CLA).
+//!
+//! Delay scaling laws are the textbook ones ([35]): RCA delay grows
+//! linearly in bit width; CBA/CLA grow linearly in the number of 4-bit
+//! stages with a per-stage cost ~4x smaller plus a fixed setup term.
+//! Constants are fit to the paper's 32-bit endpoints (393.6 / 139.6 /
+//! 157.6 ps) and the reported 2.8x / 2.5x gaps.
+
+use super::calib;
+
+/// The three candidate adders of §V-B.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum AdderKind {
+    /// Ripple-carry.
+    Rca,
+    /// Carry-bypass, 4-bit Manchester carry chain (dynamic logic).
+    Cba,
+    /// Carry-lookahead, 4-bit mirror lookahead generator.
+    Cla,
+}
+
+impl AdderKind {
+    pub const ALL: [AdderKind; 3] = [AdderKind::Rca, AdderKind::Cba, AdderKind::Cla];
+
+    pub fn name(self) -> &'static str {
+        match self {
+            AdderKind::Rca => "RCA",
+            AdderKind::Cba => "CBA",
+            AdderKind::Cla => "CLA",
+        }
+    }
+}
+
+/// Parametric delay/area/power model for one adder kind.
+#[derive(Debug, Clone, Copy)]
+pub struct AdderModel {
+    pub kind: AdderKind,
+}
+
+impl AdderModel {
+    pub fn new(kind: AdderKind) -> Self {
+        AdderModel { kind }
+    }
+
+    /// Propagation delay (ps) at `bits` precision (4..=32).
+    ///
+    /// RCA: `d = k * N` (carry ripples through N full adders).
+    /// CBA/CLA: `d = setup + k * ceil(N/4)` (per-4-bit stage bypass /
+    /// lookahead). Constants solve the Fig 7a endpoints exactly at 32-bit
+    /// and keep the curves converging at small precision, matching
+    /// "the performance gap ... becomes larger as the adder precision
+    /// increases".
+    pub fn delay_ps(&self, bits: u32) -> f64 {
+        assert!((2..=64).contains(&bits));
+        let stages = (bits as f64 / 4.0).ceil();
+        match self.kind {
+            AdderKind::Rca => calib::RCA_DELAY_32B_PS / 32.0 * bits as f64,
+            AdderKind::Cba => {
+                // setup (sum-generation + first chain) + per-stage bypass
+                let per_stage = 12.0;
+                let setup = calib::CBA_DELAY_32B_PS - per_stage * 8.0;
+                setup + per_stage * stages
+            }
+            AdderKind::Cla => {
+                let per_stage = 14.0;
+                let setup = calib::CLA_DELAY_32B_PS - per_stage * 8.0;
+                setup + per_stage * stages
+            }
+        }
+    }
+
+    /// Area (µm²) at `bits` precision — near-identical across kinds
+    /// (Fig 7b), linear in width.
+    pub fn area_um2(&self, bits: u32) -> f64 {
+        let factor = match self.kind {
+            AdderKind::Rca => calib::RCA_AREA_FACTOR,
+            AdderKind::Cba => calib::CBA_AREA_FACTOR,
+            AdderKind::Cla => calib::CLA_AREA_FACTOR,
+        };
+        calib::FA_AREA_UM2 * bits as f64 * factor
+    }
+
+    /// Dynamic power (µW) at `bits` precision, linear in width, fit to
+    /// the Fig 7b 32-bit values. CBA's dynamic Manchester chain burns
+    /// 4.44x RCA's power.
+    pub fn power_uw(&self, bits: u32) -> f64 {
+        let at32 = match self.kind {
+            AdderKind::Rca => calib::RCA_POWER_32B_UW,
+            AdderKind::Cba => calib::CBA_POWER_32B_UW,
+            AdderKind::Cla => calib::CLA_POWER_32B_UW,
+        };
+        at32 / 32.0 * bits as f64
+    }
+
+    /// Figure-of-merit used to justify the paper's choice: delay × power
+    /// × area at the worst-case 32-bit configuration (lower is better).
+    pub fn figure_of_merit(&self) -> f64 {
+        self.delay_ps(32) * self.power_uw(32) * self.area_um2(32)
+    }
+}
+
+/// The design decision of §V-B: CLA "has the best tradeoff between
+/// delay, area, and power" and is adopted in BRAMAC.
+pub fn chosen_adder() -> AdderKind {
+    AdderKind::ALL
+        .into_iter()
+        .min_by(|a, b| {
+            AdderModel::new(*a)
+                .figure_of_merit()
+                .partial_cmp(&AdderModel::new(*b).figure_of_merit())
+                .unwrap()
+        })
+        .unwrap()
+}
+
+/// One row of the Fig 7 report.
+#[derive(Debug, Clone)]
+pub struct AdderReportRow {
+    pub kind: AdderKind,
+    pub delay_by_precision: Vec<(u32, f64)>,
+    pub area_32b: f64,
+    pub power_32b: f64,
+}
+
+/// Regenerate Fig 7's data: delays across precisions, area & power at
+/// 32-bit, for all three adders.
+pub fn fig7_data() -> Vec<AdderReportRow> {
+    let precisions = [4u32, 8, 12, 16, 20, 24, 28, 32];
+    AdderKind::ALL
+        .into_iter()
+        .map(|kind| {
+            let m = AdderModel::new(kind);
+            AdderReportRow {
+                kind,
+                delay_by_precision: precisions.iter().map(|&b| (b, m.delay_ps(b))).collect(),
+                area_32b: m.area_um2(32),
+                power_32b: m.power_uw(32),
+            }
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn endpoints_match_fig7() {
+        assert!((AdderModel::new(AdderKind::Rca).delay_ps(32) - 393.6).abs() < 0.1);
+        assert!((AdderModel::new(AdderKind::Cba).delay_ps(32) - 139.6).abs() < 0.1);
+        assert!((AdderModel::new(AdderKind::Cla).delay_ps(32) - 157.6).abs() < 0.1);
+    }
+
+    #[test]
+    fn gap_grows_with_precision() {
+        // Fig 7a: "the performance gap between RCA and ... CBA/CLA
+        // becomes larger as the adder precision increases".
+        let rca = AdderModel::new(AdderKind::Rca);
+        let cla = AdderModel::new(AdderKind::Cla);
+        let gap8 = rca.delay_ps(8) - cla.delay_ps(8);
+        let gap32 = rca.delay_ps(32) - cla.delay_ps(32);
+        assert!(gap32 > gap8);
+    }
+
+    #[test]
+    fn delays_monotone_in_precision() {
+        for kind in AdderKind::ALL {
+            let m = AdderModel::new(kind);
+            let mut last = 0.0;
+            for b in (4..=32).step_by(4) {
+                let d = m.delay_ps(b);
+                assert!(d > last, "{kind:?} delay must grow with precision");
+                last = d;
+            }
+        }
+    }
+
+    #[test]
+    fn areas_similar_across_kinds() {
+        // Fig 7b: "all three adders have similar areas" — within 10%.
+        let areas: Vec<f64> = AdderKind::ALL
+            .iter()
+            .map(|&k| AdderModel::new(k).area_um2(32))
+            .collect();
+        let max = areas.iter().cloned().fold(0.0, f64::max);
+        let min = areas.iter().cloned().fold(f64::MAX, f64::min);
+        assert!(max / min < 1.10);
+    }
+
+    #[test]
+    fn cla_is_chosen() {
+        assert_eq!(chosen_adder(), AdderKind::Cla);
+    }
+
+    #[test]
+    fn cba_power_is_worst() {
+        let p: Vec<f64> = AdderKind::ALL
+            .iter()
+            .map(|&k| AdderModel::new(k).power_uw(32))
+            .collect();
+        assert!(p[1] > p[0] && p[1] > p[2]); // CBA dominates
+    }
+}

@@ -1,0 +1,98 @@
+//! Dummy-array area & delay breakdown (Fig 8) and the Fmax derivations
+//! of §V-C.
+
+use super::calib;
+use super::m20k::m20k_area_um2;
+
+/// Named component shares of the dummy array's 975.6 µm² (Fig 8a).
+#[derive(Debug, Clone)]
+pub struct DummyArrayAreaModel {
+    pub total_um2: f64,
+}
+
+impl Default for DummyArrayAreaModel {
+    fn default() -> Self {
+        DummyArrayAreaModel {
+            total_um2: calib::DUMMY_ARRAY_AREA_UM2,
+        }
+    }
+}
+
+impl DummyArrayAreaModel {
+    /// (component, µm²) breakdown summing to the total.
+    pub fn breakdown(&self) -> Vec<(&'static str, f64)> {
+        vec![
+            ("SRAM cells (7x160)", self.total_um2 * calib::AREA_FRAC_SRAM_CELLS),
+            ("sense amplifiers (2/col)", self.total_um2 * calib::AREA_FRAC_SENSE_AMPS),
+            ("write drivers (2/col)", self.total_um2 * calib::AREA_FRAC_WRITE_DRIVERS),
+            ("160-bit CLA SIMD adder", self.total_um2 * calib::AREA_FRAC_SIMD_ADDER),
+            ("sign-extension muxes", self.total_um2 * calib::AREA_FRAC_SIGNEXT_MUX),
+            ("decode + demux + ctrl", self.total_um2 * calib::AREA_FRAC_DECODE_CTRL),
+        ]
+    }
+
+    /// Overhead vs baseline M20K (16.9%, §V-C).
+    pub fn overhead_vs_m20k(&self) -> f64 {
+        self.total_um2 / m20k_area_um2()
+    }
+}
+
+/// Critical-path delay breakdown (Fig 8b).
+#[derive(Debug, Clone, Default)]
+pub struct DummyArrayDelayModel;
+
+impl DummyArrayDelayModel {
+    /// (stage, ps) breakdown of one dummy-array cycle.
+    pub fn breakdown(&self) -> Vec<(&'static str, f64)> {
+        vec![
+            ("row decode + demux", calib::DELAY_DECODER_PS),
+            ("wordline", calib::DELAY_WORDLINE_PS),
+            ("bitline (7-row parasitics)", calib::DELAY_BITLINE_PS),
+            ("sense amplifier", calib::DELAY_SENSE_AMP_PS),
+            ("SIMD adder (CLA, 32-bit lane)", calib::DELAY_ADDER_PS),
+            ("write driver", calib::DELAY_WRITE_DRIVER_PS),
+            ("clock margin", calib::DELAY_MARGIN_PS),
+        ]
+    }
+
+    pub fn critical_path_ps(&self) -> f64 {
+        self.breakdown().iter().map(|(_, d)| d).sum()
+    }
+
+    /// §V-C: the 7-row array precharges/discharges fast enough for a
+    /// standalone 1 GHz Fmax.
+    pub fn standalone_fmax_mhz(&self) -> f64 {
+        1e6 / self.critical_path_ps() * 1e3
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn area_breakdown_sums_to_total() {
+        let m = DummyArrayAreaModel::default();
+        let sum: f64 = m.breakdown().iter().map(|(_, a)| a).sum();
+        assert!((sum - m.total_um2).abs() < 1e-6);
+        assert!((m.overhead_vs_m20k() - 0.169).abs() < 1e-6);
+    }
+
+    #[test]
+    fn delay_supports_1ghz() {
+        let d = DummyArrayDelayModel;
+        assert!(d.critical_path_ps() <= 1000.0);
+        assert!(d.standalone_fmax_mhz() >= 1000.0);
+    }
+
+    #[test]
+    fn dual_port_periphery_dominates_cells() {
+        // 7 rows of cells vs 2 SAs + 2 WDs per column: periphery must be
+        // the dominant area term in such a shallow array.
+        let m = DummyArrayAreaModel::default();
+        let b = m.breakdown();
+        let cells = b[0].1;
+        let periphery = b[1].1 + b[2].1;
+        assert!(periphery > cells);
+    }
+}

@@ -1,0 +1,34 @@
+//! Baseline M20K model: geometry + the COFFE-interpolated area (§V-A).
+
+use super::calib;
+
+/// M20K geometry (§III-A): 128 rows × 160 columns with 4:1 column
+/// multiplexing → 512 × 40-bit in CIM mode; 20 kb capacity.
+pub const M20K_ROWS: usize = 128;
+pub const M20K_COLS: usize = 160;
+pub const M20K_COL_MUX: usize = 4;
+pub const M20K_CAPACITY_BITS: usize = M20K_ROWS * M20K_COLS;
+
+/// M20K block area at 22 nm, derived from the paper's own arithmetic:
+/// dummy array (975.6 µm²) = 16.9% of M20K (§V-C).
+pub fn m20k_area_um2() -> f64 {
+    calib::DUMMY_ARRAY_AREA_UM2 / calib::DUMMY_ARRAY_OVERHEAD_VS_M20K
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn geometry() {
+        assert_eq!(M20K_CAPACITY_BITS, 20_480); // 20 kb
+        assert_eq!(M20K_ROWS * M20K_COL_MUX, 512);
+        assert_eq!(M20K_COLS / M20K_COL_MUX, 40);
+    }
+
+    #[test]
+    fn area_near_5800_um2() {
+        let a = m20k_area_um2();
+        assert!((a - 5772.8).abs() < 1.0, "{a}");
+    }
+}

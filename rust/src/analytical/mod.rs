@@ -1,0 +1,17 @@
+//! COFFE-style analytical area/delay/power models (§V).
+//!
+//! The paper sizes BRAMAC's circuits with COFFE (automatic transistor
+//! sizing + HSPICE at the 22-nm PTM node). Neither tool is available
+//! here, so these modules reproduce the *models' outputs*: parametric
+//! scaling laws calibrated to every absolute number the paper prints.
+//! Every constant in [`calib`] cites its source sentence.
+
+pub mod adder;
+pub mod calib;
+pub mod energy;
+pub mod dummy_array;
+pub mod m20k;
+
+pub use adder::{AdderKind, AdderModel};
+pub use energy::EnergyModel;
+pub use dummy_array::{DummyArrayAreaModel, DummyArrayDelayModel};

@@ -1,0 +1,110 @@
+//! Area accounting shared by Table II, Fig 8 and the DLA study (Fig 13).
+
+use super::device::Device;
+
+/// Absolute block areas in µm² (22-nm COFFE scale; §V-A, §V-C).
+#[derive(Debug, Clone, Copy)]
+pub struct ResourceArea {
+    /// One M20K block. Derived from the paper's dummy-array arithmetic:
+    /// the 975.6 µm² dummy array "represents an area increase of 16.9%
+    /// compared to the baseline M20K" → M20K ≈ 975.6 / 0.169 ≈ 5772.8 µm².
+    pub m20k_um2: f64,
+    /// One dummy array incl. peripherals (§V-C: 975.6 µm²).
+    pub dummy_array_um2: f64,
+    /// eFSM areas after scaling to 22 nm (§V-A: 137 / 81 µm²).
+    pub efsm_2sa_um2: f64,
+    pub efsm_1da_um2: f64,
+}
+
+impl Default for ResourceArea {
+    fn default() -> Self {
+        let dummy = 975.6;
+        ResourceArea {
+            m20k_um2: dummy / 0.169,
+            dummy_array_um2: dummy,
+            efsm_2sa_um2: 137.0,
+            efsm_1da_um2: 81.0,
+        }
+    }
+}
+
+impl ResourceArea {
+    /// Block-level area overhead of BRAMAC-1DA (one dummy array): 16.9%.
+    pub fn overhead_1da(&self) -> f64 {
+        self.dummy_array_um2 / self.m20k_um2
+    }
+
+    /// Block-level overhead of BRAMAC-2SA (two dummy arrays): 33.8%.
+    pub fn overhead_2sa(&self) -> f64 {
+        2.0 * self.dummy_array_um2 / self.m20k_um2
+    }
+
+    /// eFSM overheads relative to M20K: 1.4% / 2.4%... the paper reports
+    /// 2SA/1DA eFSMs as "1.4%/2.4% of the baseline M20K area" — note the
+    /// published pairing follows block complexity after pipelining; we
+    /// keep the µm² values authoritative and expose the ratio.
+    pub fn efsm_ratio_2sa(&self) -> f64 {
+        self.efsm_2sa_um2 / self.m20k_um2
+    }
+    pub fn efsm_ratio_1da(&self) -> f64 {
+        self.efsm_1da_um2 / self.m20k_um2
+    }
+}
+
+/// Relative-area model for DLA sizing (Fig 13b): counts DSP + BRAM area
+/// only, in units of core-area fraction (ALMs excluded per §VI-D).
+#[derive(Debug, Clone, Copy)]
+pub struct AreaModel {
+    pub device: Device,
+    /// Extra area multiplier applied to each BRAM when it is a BRAMAC
+    /// block (1.0 = plain M20K; 1.169 = 1DA; 1.338 = 2SA).
+    pub bram_multiplier: f64,
+}
+
+impl AreaModel {
+    pub fn baseline(device: Device) -> Self {
+        AreaModel { device, bram_multiplier: 1.0 }
+    }
+
+    pub fn with_bram_overhead(device: Device, block_overhead: f64) -> Self {
+        AreaModel { device, bram_multiplier: 1.0 + block_overhead }
+    }
+
+    /// Utilized DSP-plus-BRAM area (core-area fraction units).
+    pub fn utilized(&self, dsps: u64, brams: u64) -> f64 {
+        dsps as f64 * self.device.dsp_unit_area()
+            + brams as f64 * self.device.bram_unit_area() * self.bram_multiplier
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::arch::ARRIA10_GX900;
+
+    #[test]
+    fn block_overheads_match_table2() {
+        let a = ResourceArea::default();
+        assert!((a.overhead_1da() - 0.169).abs() < 1e-6);
+        assert!((a.overhead_2sa() - 0.338).abs() < 1e-6);
+    }
+
+    #[test]
+    fn efsm_is_negligible() {
+        // §V-C: eFSM ≤ ~2.4% of M20K — justifies ignoring it in the
+        // area overhead accounting.
+        let a = ResourceArea::default();
+        assert!(a.efsm_ratio_2sa() < 0.025);
+        assert!(a.efsm_ratio_1da() < 0.025);
+    }
+
+    #[test]
+    fn utilized_area_monotone_in_resources() {
+        let m = AreaModel::baseline(ARRIA10_GX900);
+        assert!(m.utilized(100, 100) < m.utilized(200, 100));
+        assert!(m.utilized(100, 100) < m.utilized(100, 200));
+        let mb = AreaModel::with_bram_overhead(ARRIA10_GX900, 0.338);
+        assert!(mb.utilized(0, 100) > m.utilized(0, 100));
+        assert_eq!(mb.utilized(100, 0), m.utilized(100, 0));
+    }
+}

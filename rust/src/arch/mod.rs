@@ -1,0 +1,14 @@
+//! FPGA device architecture: resources, area model, frequency table.
+//!
+//! Models the baseline Arria-10 GX900 device of the paper's Table I and
+//! the frequency/area facts of §V-C and §VI-A.
+
+mod area;
+mod device;
+mod freq;
+mod precision;
+
+pub use area::{AreaModel, ResourceArea};
+pub use device::{Device, ResourceCounts, ARRIA10_GX900};
+pub use freq::{FreqModel, MHZ};
+pub use precision::Precision;

@@ -1,0 +1,158 @@
+//! MAC operand precision (2-, 4-, or 8-bit 2's complement) and the
+//! per-precision constants the BRAMAC microarchitecture derives from it.
+
+/// Supported MAC2 precisions (paper §III-A mode 2: 2-, 4-, or 8-bit).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub enum Precision {
+    Int2,
+    Int4,
+    Int8,
+}
+
+impl Precision {
+    pub const ALL: [Precision; 3] = [Precision::Int2, Precision::Int4, Precision::Int8];
+
+    /// Operand bit-width n.
+    pub const fn bits(self) -> u32 {
+        match self {
+            Precision::Int2 => 2,
+            Precision::Int4 => 4,
+            Precision::Int8 => 8,
+        }
+    }
+
+    /// Elements per 40-bit main-BRAM word: five 8-bit, ten 4-bit or twenty
+    /// 2-bit (§III-C2, the configurable sign-extension mux).
+    pub const fn lanes_per_word(self) -> usize {
+        (40 / self.bits()) as usize
+    }
+
+    /// Sign-extended element width in the 160-column dummy array: each of
+    /// the five mux blocks extends one 8-bit element to 32 bits, two 4-bit
+    /// to 16 bits, or four 2-bit to 8 bits (§III-C2). Equals `4 * n`.
+    pub const fn ext_bits(self) -> u32 {
+        4 * self.bits()
+    }
+
+    /// Dummy-array accumulator width: "the dummy array's accumulator has a
+    /// size of 8/16/32-bit for 2/4/8-bit MAC precisions" (§IV-C).
+    pub const fn dummy_acc_bits(self) -> u32 {
+        self.ext_bits()
+    }
+
+    /// Accumulator width used by the bit-serial BRAM baselines and in the
+    /// peak-throughput study: 8/16/27 bits (Table II footnote, §VI-A).
+    pub const fn bram_acc_bits(self) -> u32 {
+        match self {
+            Precision::Int2 => 8,
+            Precision::Int4 => 16,
+            Precision::Int8 => 27,
+        }
+    }
+
+    /// Maximum dot-product length accumulable before the dummy-array
+    /// accumulator must be read out: 16/256/2048 (§IV-C).
+    pub const fn max_dot_len(self) -> usize {
+        match self {
+            Precision::Int2 => 16,
+            Precision::Int4 => 256,
+            Precision::Int8 => 2048,
+        }
+    }
+
+    /// Signed operand range `[min, max]` of an n-bit 2's complement value.
+    pub const fn range(self) -> (i32, i32) {
+        let n = self.bits();
+        (-(1 << (n - 1)), (1 << (n - 1)) - 1)
+    }
+
+    /// Unsigned operand range `[0, max]`.
+    pub const fn range_unsigned(self) -> (i32, i32) {
+        (0, (1 << self.bits()) - 1)
+    }
+
+    /// DSP packing factor: one 8-bit, two 4-bit or four 2-bit multiplies
+    /// per 18x19 DSP multiplier (§VI-A, DSP-packing [36]).
+    pub const fn dsp_pack(self) -> u32 {
+        match self {
+            Precision::Int2 => 4,
+            Precision::Int4 => 2,
+            Precision::Int8 => 1,
+        }
+    }
+
+    pub fn from_bits(bits: u32) -> Option<Precision> {
+        match bits {
+            2 => Some(Precision::Int2),
+            4 => Some(Precision::Int4),
+            8 => Some(Precision::Int8),
+            _ => None,
+        }
+    }
+
+    /// Smallest supported precision that can store an arbitrary n-bit
+    /// (2..=8) operand via sign-extension (Fig 10's storage study).
+    pub fn storage_for(bits: u32) -> Option<Precision> {
+        match bits {
+            2 => Some(Precision::Int2),
+            3 | 4 => Some(Precision::Int4),
+            5..=8 => Some(Precision::Int8),
+            _ => None,
+        }
+    }
+}
+
+impl std::fmt::Display for Precision {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "{}-bit", self.bits())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn lane_geometry_matches_paper() {
+        // §III-B: "ten 8-bit, twenty 4-bit, or forty 2-bit weights ...
+        // providing a parallelism of 10, 20, or 40 MACs" per two ports —
+        // i.e. 5/10/20 per 40-bit word.
+        assert_eq!(Precision::Int8.lanes_per_word(), 5);
+        assert_eq!(Precision::Int4.lanes_per_word(), 10);
+        assert_eq!(Precision::Int2.lanes_per_word(), 20);
+        // 160 columns hold exactly lanes_per_word * 2 * ext region? No:
+        // lanes_per_word elements of ext_bits each fill the 160 columns.
+        for p in Precision::ALL {
+            assert_eq!(p.lanes_per_word() as u32 * p.ext_bits(), 160);
+        }
+    }
+
+    #[test]
+    fn ranges() {
+        assert_eq!(Precision::Int2.range(), (-2, 1));
+        assert_eq!(Precision::Int4.range(), (-8, 7));
+        assert_eq!(Precision::Int8.range(), (-128, 127));
+        assert_eq!(Precision::Int8.range_unsigned(), (0, 255));
+    }
+
+    #[test]
+    fn accumulator_sizing_prevents_overflow() {
+        // §IV-C: max dot product 16/256/2048 must fit the dummy accumulator.
+        for p in Precision::ALL {
+            let (lo, _) = p.range();
+            let worst = (lo as i64) * (lo as i64) * (p.max_dot_len() as i64);
+            let acc_max = 1i64 << (p.dummy_acc_bits() - 1);
+            assert!(
+                worst <= acc_max,
+                "{p}: worst-case |dot| {worst} exceeds accumulator {acc_max}"
+            );
+        }
+    }
+
+    #[test]
+    fn storage_rounding() {
+        assert_eq!(Precision::storage_for(3), Some(Precision::Int4));
+        assert_eq!(Precision::storage_for(5), Some(Precision::Int8));
+        assert_eq!(Precision::storage_for(9), None);
+    }
+}

@@ -1,0 +1,609 @@
+//! The complete BRAMAC block: main 512×40 BRAM + dummy-array engine(s),
+//! MEM/CIM modes, per-variant cycle accounting, and the port-freeing
+//! behavior that enables tiling (§III-A, §IV).
+//!
+//! Cycle accounting follows the pipeline diagrams of Fig 5:
+//!
+//! * **BRAMAC-2SA** — dummy arrays share the main clock. Steady-state
+//!   MAC2 latency = `n+3` cycles (copies overlap the previous MAC2's last
+//!   two cycles); a cold start adds the 2 initial copy cycles. The main
+//!   BRAM is busy 2 cycles per MAC2 (the two copy reads).
+//! * **BRAMAC-1DA** — one dummy array double-pumped at 2× the main
+//!   clock. Copy takes one dummy half-cycle (both write ports); compute
+//!   is the same schedule in half-cycles. Steady state =
+//!   `ceil((n+4)/2)` main cycles; cold start adds the initial main-BRAM
+//!   read cycle. The main BRAM is busy 1 cycle per MAC2.
+//!
+//! Between dot products the accumulator row is read out 40 bits/cycle:
+//! 8 main-busy cycles for 2SA (two arrays) and 4 for 1DA (§IV-C).
+
+use crate::arch::{FreqModel, Precision};
+
+use super::efsm::{compute_schedule, ComputeOp, Engine, Mac2Inputs};
+use super::instr::CimInstr;
+use super::signext::sign_extend_word;
+
+/// Main-BRAM geometry in CIM mode: simple dual port, 512 × 40-bit
+/// (§III-A: "a maximum data width of 40-bit, and a depth of 512").
+pub const MAIN_WORDS: usize = 512;
+pub const WORD_BITS: u32 = 40;
+
+/// The two BRAMAC variants (§IV).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Variant {
+    /// Two synchronous dummy arrays (§IV-A).
+    TwoSA,
+    /// One double-pumped dummy array (§IV-B).
+    OneDA,
+}
+
+impl Variant {
+    pub const ALL: [Variant; 2] = [Variant::TwoSA, Variant::OneDA];
+
+    pub fn dummy_arrays(self) -> usize {
+        match self {
+            Variant::TwoSA => 2,
+            Variant::OneDA => 1,
+        }
+    }
+
+    /// Steady-state main-clock cycles per MAC2 (Table II latency row).
+    pub fn mac2_cycles(self, p: Precision, signed: bool) -> u64 {
+        let l = compute_schedule(p, signed).len() as u64;
+        match self {
+            Variant::TwoSA => l,
+            // copy half-cycle + compute half-cycles, two per main cycle
+            Variant::OneDA => (l + 1).div_ceil(2),
+        }
+    }
+
+    /// Extra cycles for the first MAC2 after idle (pipeline fill):
+    /// 2 copy cycles (2SA) / 1 main read cycle (1DA). §VI-D notes the
+    /// 2-cycle initial-copy overhead for the DLA study.
+    pub fn cold_start_cycles(self) -> u64 {
+        match self {
+            Variant::TwoSA => 2,
+            Variant::OneDA => 1,
+        }
+    }
+
+    /// Main-BRAM busy cycles per MAC2 (§IV-C).
+    pub fn main_busy_per_mac2(self) -> u64 {
+        match self {
+            Variant::TwoSA => 2,
+            Variant::OneDA => 1,
+        }
+    }
+
+    /// Main-BRAM busy cycles to read out the accumulator row(s) between
+    /// dot products: 8 / 4 (§IV-C).
+    pub fn acc_readout_cycles(self) -> u64 {
+        match self {
+            Variant::TwoSA => 8,
+            Variant::OneDA => 4,
+        }
+    }
+
+    /// MACs completed per MAC2 command: `2 × lanes × arrays`
+    /// (Table II: 80/40/20 for 2SA, 40/20/10 for 1DA).
+    pub fn macs_in_parallel(self, p: Precision) -> u64 {
+        2 * p.lanes_per_word() as u64 * self.dummy_arrays() as u64
+    }
+
+    /// Block-level area overhead vs M20K (Table II: 33.8% / 16.9%).
+    pub fn block_area_overhead(self) -> f64 {
+        match self {
+            Variant::TwoSA => 0.338,
+            Variant::OneDA => 0.169,
+        }
+    }
+
+    /// Operating frequency in CIM-capable configuration (§VI-A).
+    pub fn fmax_mhz(self, f: &FreqModel) -> f64 {
+        match self {
+            Variant::TwoSA => f.bramac_2sa_mhz(),
+            Variant::OneDA => f.bramac_1da_mhz(),
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            Variant::TwoSA => "BRAMAC-2SA",
+            Variant::OneDA => "BRAMAC-1DA",
+        }
+    }
+}
+
+/// Stream-level statistics for a block.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct StreamStats {
+    pub mac2_count: u64,
+    /// Total main-clock cycles consumed by CIM activity.
+    pub main_cycles: u64,
+    /// Cycles in which the main BRAM ports were occupied by CIM (weight
+    /// copies + accumulator readout). All other cycles are free for
+    /// application reads/writes — the tiling enabler.
+    pub main_busy_cycles: u64,
+    pub acc_readouts: u64,
+}
+
+impl StreamStats {
+    /// Fraction of CIM time during which the main ports stayed free.
+    pub fn port_free_fraction(&self) -> f64 {
+        if self.main_cycles == 0 {
+            return 1.0;
+        }
+        1.0 - self.main_busy_cycles as f64 / self.main_cycles as f64
+    }
+}
+
+/// Operating mode (one extra SRAM cell selects it, §III-A).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Mode {
+    Mem,
+    Cim,
+}
+
+/// Bit-accurate BRAMAC block.
+#[derive(Debug, Clone)]
+pub struct BramacBlock {
+    pub variant: Variant,
+    pub mode: Mode,
+    precision: Precision,
+    main: Vec<u64>,
+    engines: Vec<Engine>,
+    stats: StreamStats,
+    /// Dummy cycles accumulated since cold start (1DA half-cycle math).
+    dummy_cycles: u64,
+    warm: bool,
+    /// Cached eFSM schedules for (signed, unsigned) at the current
+    /// precision — the schedule is deterministic (§IV-C), so the
+    /// hardware would hardwire it too. (§Perf iteration 1: hoists a
+    /// per-MAC2 Vec allocation out of the hot path, −20%.)
+    schedule_cache: [Vec<ComputeOp>; 2],
+}
+
+impl BramacBlock {
+    pub fn new(variant: Variant, precision: Precision) -> Self {
+        BramacBlock {
+            variant,
+            mode: Mode::Cim,
+            precision,
+            main: vec![0; MAIN_WORDS],
+            engines: (0..variant.dummy_arrays())
+                .map(|_| Engine::new(precision))
+                .collect(),
+            stats: StreamStats::default(),
+            dummy_cycles: 0,
+            warm: false,
+            schedule_cache: [
+                compute_schedule(precision, false),
+                compute_schedule(precision, true),
+            ],
+        }
+    }
+
+    pub fn precision(&self) -> Precision {
+        self.precision
+    }
+
+    /// Reconfigure precision (drains the pipeline).
+    pub fn set_precision(&mut self, p: Precision) {
+        self.precision = p;
+        self.warm = false;
+        for e in &mut self.engines {
+            *e = Engine::new(p);
+        }
+        self.schedule_cache = [compute_schedule(p, false), compute_schedule(p, true)];
+    }
+
+    // ------------------------------------------------------------------
+    // MEM-mode / application port access
+    // ------------------------------------------------------------------
+
+    /// Write one 40-bit word (application port or DRAM tile load).
+    pub fn write_word(&mut self, addr: u16, data: u64) {
+        assert!((addr as usize) < MAIN_WORDS, "address out of range");
+        assert!(data < (1 << WORD_BITS), "data exceeds 40 bits");
+        self.main[addr as usize] = data;
+    }
+
+    /// Read one 40-bit word.
+    pub fn read_word(&self, addr: u16) -> u64 {
+        assert!((addr as usize) < MAIN_WORDS);
+        self.main[addr as usize]
+    }
+
+    /// Bulk tile load starting at `base` (e.g. from off-chip DRAM).
+    pub fn load_words(&mut self, base: u16, words: &[u64]) {
+        for (i, &w) in words.iter().enumerate() {
+            self.write_word(base + i as u16, w);
+        }
+    }
+
+    /// Simultaneous read (portA) + write (portB) in one MEM cycle with
+    /// Intel-style **old-data** read-during-write behavior at the same
+    /// address (§III-C1 points to [28] for this semantic): the read
+    /// returns the pre-write contents.
+    pub fn read_write_cycle(&mut self, read_addr: u16, write_addr: u16, data: u64) -> u64 {
+        let out = self.read_word(read_addr);
+        self.write_word(write_addr, data);
+        out
+    }
+
+    // ------------------------------------------------------------------
+    // CIM operations
+    // ------------------------------------------------------------------
+
+    /// Zero the accumulator rows (`reset` control).
+    pub fn reset_acc(&mut self) {
+        for e in &mut self.engines {
+            e.reset_acc();
+        }
+        self.warm = false;
+    }
+
+    /// Execute one MAC2: copy `W1`/`W2` words from the main BRAM into
+    /// every dummy array and run the bit-serial schedule. `input_pairs`
+    /// must provide one `(I1, I2)` pair per dummy array (2SA processes
+    /// two pairs against the same weights, §IV-A).
+    ///
+    /// Numerics are computed bit-level through the engines; cycle costs
+    /// follow the pipelined model above (copies overlap when warm — the
+    /// array state is identical because nothing reads W1/W2 between the
+    /// previous MAC2's final adds and the next Prep; the port-budget
+    /// feasibility of the overlap is proven in `overlap_port_budget`).
+    pub fn mac2(
+        &mut self,
+        addr_w1: u16,
+        addr_w2: u16,
+        input_pairs: &[(i64, i64)],
+        signed: bool,
+    ) {
+        assert_eq!(
+            input_pairs.len(),
+            self.engines.len(),
+            "need one input pair per dummy array"
+        );
+        let w1 = sign_extend_word(self.read_word(addr_w1), self.precision);
+        let w2 = sign_extend_word(self.read_word(addr_w2), self.precision);
+        let schedule = std::mem::take(&mut self.schedule_cache[signed as usize]);
+
+        // Copy cycles.
+        match self.variant {
+            Variant::TwoSA => {
+                for e in &mut self.engines {
+                    e.array.new_cycle();
+                    e.copy_weight(super::dummy_array::Row::W1, w1);
+                }
+                for e in &mut self.engines {
+                    e.array.new_cycle();
+                    e.copy_weight(super::dummy_array::Row::W2, w2);
+                }
+                if !self.warm {
+                    self.dummy_cycles += 2;
+                    self.stats.main_cycles += 2;
+                }
+            }
+            Variant::OneDA => {
+                let e = &mut self.engines[0];
+                e.array.new_cycle();
+                e.copy_weight(super::dummy_array::Row::W1, w1);
+                e.copy_weight(super::dummy_array::Row::W2, w2);
+                self.dummy_cycles += 1;
+                if !self.warm {
+                    // Initial main-BRAM read cycle (Fig 5b, Cycle 1).
+                    self.stats.main_cycles += 1;
+                }
+            }
+        }
+
+        // Compute cycles.
+        for (idx, e) in self.engines.iter_mut().enumerate() {
+            let (i1, i2) = input_pairs[idx];
+            let inputs = Mac2Inputs { i1, i2, signed };
+            for &op in &schedule {
+                e.array.new_cycle();
+                e.exec(op, inputs);
+            }
+        }
+        let l = schedule.len() as u64;
+        match self.variant {
+            Variant::TwoSA => {
+                self.dummy_cycles += l;
+                self.stats.main_cycles += l;
+            }
+            Variant::OneDA => {
+                self.dummy_cycles += l;
+                // copy half-cycle + l compute half-cycles, two per main
+                // clock: ceil((l+1)/2) main cycles per MAC2.
+                self.stats.main_cycles += (l + 1).div_ceil(2);
+            }
+        }
+
+        self.stats.mac2_count += 1;
+        self.stats.main_busy_cycles += self.variant.main_busy_per_mac2();
+        self.warm = true;
+        self.schedule_cache[signed as usize] = schedule;
+    }
+
+    /// Read out the accumulator rows (the `done` sequence): returns the
+    /// signed lane values of every dummy array and charges the
+    /// main-port-busy readout cycles.
+    pub fn read_accumulators(&mut self) -> Vec<Vec<i64>> {
+        let cost = self.variant.acc_readout_cycles();
+        self.stats.main_cycles += cost;
+        self.stats.main_busy_cycles += cost;
+        self.stats.acc_readouts += 1;
+        self.warm = false; // pipeline drains at a dot-product boundary
+        self.engines.iter().map(|e| e.acc_lanes()).collect()
+    }
+
+    /// Latest MAC2 results (row P) — used by tests.
+    pub fn p_lanes(&self) -> Vec<Vec<i64>> {
+        self.engines.iter().map(|e| e.p_lanes()).collect()
+    }
+
+    pub fn stats(&self) -> StreamStats {
+        self.stats
+    }
+
+    /// Issue a decoded CIM instruction (the 0xfff-address path). This is
+    /// the instruction-level entry used by the coordinator; it maps the
+    /// instruction fields onto the driver operations above.
+    pub fn issue(&mut self, instr: CimInstr) -> Option<Vec<Vec<i64>>> {
+        assert_eq!(self.mode, Mode::Cim, "CIM instruction in MEM mode");
+        self.precision = instr.precision;
+        if instr.reset {
+            self.reset_acc();
+        }
+        if instr.done {
+            return Some(self.read_accumulators());
+        }
+        if instr.start {
+            let pairs: Vec<(i64, i64)> = (0..self.engines.len())
+                .map(|_| (instr.input_value(0), instr.input_value(1)))
+                .collect();
+            let (a1, a2) = match self.variant {
+                Variant::TwoSA => (instr.word_addr(), instr.word_addr() + 1),
+                Variant::OneDA => (instr.word_addr(), instr.word_addr2()),
+            };
+            self.mac2(a1, a2, &pairs, instr.signed_inputs);
+        }
+        None
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::bramac::mac2::mac2_golden;
+    use crate::bramac::signext::pack_word;
+    use crate::util::Rng;
+
+    #[test]
+    fn variant_constants_match_table2() {
+        use Precision::*;
+        for (p, l_2sa, l_1da, par_2sa, par_1da) in [
+            (Int2, 5, 3, 80, 40),
+            (Int4, 7, 4, 40, 20),
+            (Int8, 11, 6, 20, 10),
+        ] {
+            assert_eq!(Variant::TwoSA.mac2_cycles(p, true), l_2sa, "{p} 2SA");
+            assert_eq!(Variant::OneDA.mac2_cycles(p, true), l_1da, "{p} 1DA");
+            assert_eq!(Variant::TwoSA.macs_in_parallel(p), par_2sa);
+            assert_eq!(Variant::OneDA.macs_in_parallel(p), par_1da);
+        }
+    }
+
+    fn random_words(rng: &mut Rng, p: Precision) -> (u64, Vec<i64>) {
+        let (lo, hi) = p.range();
+        let elems: Vec<i64> = (0..p.lanes_per_word())
+            .map(|_| rng.gen_range_i64(lo as i64, hi as i64))
+            .collect();
+        (pack_word(&elems, p), elems)
+    }
+
+    #[test]
+    fn block_dot_product_matches_golden_both_variants() {
+        let mut rng = Rng::seed_from_u64(0xB10C);
+        for variant in Variant::ALL {
+            for p in Precision::ALL {
+                let (lo, hi) = p.range();
+                let mut block = BramacBlock::new(variant, p);
+                block.reset_acc();
+                let n_mac2 = 6usize;
+                let mut expect: Vec<Vec<i64>> =
+                    vec![vec![0; p.lanes_per_word()]; variant.dummy_arrays()];
+                for k in 0..n_mac2 {
+                    let (word1, w1) = random_words(&mut rng, p);
+                    let (word2, w2) = random_words(&mut rng, p);
+                    block.write_word(2 * k as u16, word1);
+                    block.write_word(2 * k as u16 + 1, word2);
+                    let pairs: Vec<(i64, i64)> = (0..variant.dummy_arrays())
+                        .map(|_| {
+                            (
+                                rng.gen_range_i64(lo as i64, hi as i64),
+                                rng.gen_range_i64(lo as i64, hi as i64),
+                            )
+                        })
+                        .collect();
+                    block.mac2(2 * k as u16, 2 * k as u16 + 1, &pairs, true);
+                    for (arr, &(i1, i2)) in pairs.iter().enumerate() {
+                        for lane in 0..p.lanes_per_word() {
+                            expect[arr][lane] +=
+                                mac2_golden(w1[lane], w2[lane], i1, i2, p.bits(), true);
+                        }
+                    }
+                }
+                let got = block.read_accumulators();
+                assert_eq!(got, expect, "{} {p}", variant.name());
+            }
+        }
+    }
+
+    #[test]
+    fn cycle_accounting_matches_closed_form() {
+        for variant in Variant::ALL {
+            for p in Precision::ALL {
+                let mut block = BramacBlock::new(variant, p);
+                let k = 10u64;
+                for i in 0..k {
+                    let pairs = vec![(1i64, 1i64); variant.dummy_arrays()];
+                    block.mac2((2 * i) as u16, (2 * i + 1) as u16, &pairs, true);
+                }
+                let st = block.stats();
+                let per = variant.mac2_cycles(p, true);
+                let want = variant.cold_start_cycles() + k * per;
+                assert_eq!(
+                    st.main_cycles, want,
+                    "{} {p}: {} != {}",
+                    variant.name(), st.main_cycles, want
+                );
+                assert_eq!(st.main_busy_cycles, k * variant.main_busy_per_mac2());
+            }
+        }
+    }
+
+    #[test]
+    fn port_free_fraction_enables_tiling() {
+        // §IV-C: unlike CCB/CoMeFa (ports always busy), BRAMAC keeps the
+        // main ports mostly free during CIM.
+        let mut block = BramacBlock::new(Variant::TwoSA, Precision::Int8);
+        for i in 0..100u16 {
+            block.mac2(i % 256, (i % 256) + 1, &[(1, 2), (3, 4)], true);
+        }
+        let st = block.stats();
+        // 2 busy of 11 cycles per 8-bit MAC2 → >80% free.
+        assert!(st.port_free_fraction() > 0.8, "{}", st.port_free_fraction());
+    }
+
+    #[test]
+    fn overlap_port_budget() {
+        // Prove the Fig 5a overlap is physically realizable: the final
+        // two compute ops (AddLsb, Accumulate) each leave one read and
+        // one write port for the next MAC2's weight copies (2SA).
+        use crate::bramac::dummy_array::{DummyArray, Row};
+        use crate::bramac::row::Row160;
+        let mut a = DummyArray::new();
+        // AddLsb cycle: reads sel + P, writes P — plus a W1 copy.
+        a.new_cycle();
+        a.read(Row::W12);
+        a.read(Row::P);
+        a.write(Row::P, Row160::ZERO);
+        a.write(Row::W1, Row160::ZERO); // overlapped copy: fits
+        // Accumulate cycle: reads P + ACC, writes ACC — plus a W2 copy.
+        a.new_cycle();
+        a.read(Row::P);
+        a.read(Row::Acc);
+        a.write(Row::Acc, Row160::ZERO);
+        a.write(Row::W2, Row160::ZERO); // overlapped copy: fits
+    }
+
+    #[test]
+    fn instruction_issue_path() {
+        let p = Precision::Int4;
+        let mut block = BramacBlock::new(Variant::OneDA, p);
+        let w1 = pack_word(&[1, 2, 3, 4, 5, 6, 7, -8, -1, 0], p);
+        let w2 = pack_word(&[0, 1, 0, -1, 2, -2, 3, -3, 7, -8], p);
+        block.write_word(4, w1); // row 1, col 0
+        block.write_word(8, w2); // row 2, col 0
+        let reset = CimInstr {
+            precision: p,
+            reset: true,
+            ..CimInstr::default()
+        };
+        block.issue(reset);
+        let start = CimInstr {
+            inputs: [0x3, 0xE], // 3 and -2 at 4-bit signed
+            bram_row: 1,
+            bram_row2: 2,
+            bram_col: 0,
+            precision: p,
+            signed_inputs: true,
+            start: true,
+            copy: true,
+            ..CimInstr::default()
+        };
+        block.issue(start);
+        let done = CimInstr {
+            precision: p,
+            done: true,
+            ..CimInstr::default()
+        };
+        let acc = block.issue(done).unwrap();
+        let w1v = [1i64, 2, 3, 4, 5, 6, 7, -8, -1, 0];
+        let w2v = [0i64, 1, 0, -1, 2, -2, 3, -3, 7, -8];
+        for lane in 0..10 {
+            assert_eq!(acc[0][lane], w1v[lane] * 3 + w2v[lane] * -2);
+        }
+    }
+
+    #[test]
+    fn read_during_write_returns_old_data() {
+        let mut b = BramacBlock::new(Variant::OneDA, Precision::Int8);
+        b.write_word(7, 0xAA);
+        let old = b.read_write_cycle(7, 7, 0xBB);
+        assert_eq!(old, 0xAA);
+        assert_eq!(b.read_word(7), 0xBB);
+    }
+
+    #[test]
+    fn coherency_is_programmer_managed() {
+        // §III-C1: "a coherency issue may arise where the main BRAM is
+        // being updated while the dummy array is still computing using
+        // the stale data. We leave it for the programmer/compiler" —
+        // demonstrate the stale-data behavior the model exposes.
+        let p = Precision::Int4;
+        let mut b = BramacBlock::new(Variant::OneDA, p);
+        b.write_word(0, pack_word(&[1; 10], p));
+        b.write_word(1, pack_word(&[1; 10], p));
+        b.reset_acc();
+        b.mac2(0, 1, &[(1, 1)], true); // copies the OLD weights
+        // Overwrite the main BRAM mid-"computation": the dummy array's
+        // copy is unaffected (the stale-data semantics, by design).
+        b.write_word(0, pack_word(&[7; 10], p));
+        let acc = b.read_accumulators();
+        assert_eq!(acc[0], vec![2i64; 10], "dummy array computed on its copy");
+    }
+
+    #[test]
+    #[should_panic(expected = "address out of range")]
+    fn oob_write_panics() {
+        let mut b = BramacBlock::new(Variant::OneDA, Precision::Int8);
+        b.write_word(512, 0);
+    }
+
+    #[test]
+    #[should_panic(expected = "exceeds 40 bits")]
+    fn oversized_word_panics() {
+        let mut b = BramacBlock::new(Variant::OneDA, Precision::Int8);
+        b.write_word(0, 1 << 40);
+    }
+
+    #[test]
+    fn roundtrip_through_encoded_instruction_words() {
+        // Encode → 40-bit word → decode → issue: the full 0xfff path.
+        let p = Precision::Int2;
+        let mut block = BramacBlock::new(Variant::OneDA, p);
+        block.write_word(0, pack_word(&vec![1i64; 20], p));
+        block.write_word(4, pack_word(&vec![-1i64; 20], p));
+        block.reset_acc();
+        let instr = CimInstr {
+            inputs: [0x1, 0x1],
+            bram_row: 0,
+            bram_row2: 1,
+            bram_col: 0,
+            precision: p,
+            signed_inputs: true,
+            start: true,
+            copy: true,
+            ..CimInstr::default()
+        };
+        let word = instr.encode_1da();
+        let decoded = CimInstr::decode_1da(word).unwrap();
+        block.issue(decoded);
+        let acc = block.issue(CimInstr { precision: p, done: true, ..CimInstr::default() }).unwrap();
+        assert_eq!(acc[0], vec![0i64; 20]); // 1*1 + (-1)*1 = 0 per lane
+    }
+}

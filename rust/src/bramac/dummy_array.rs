@@ -1,0 +1,190 @@
+//! The 7-row × 160-column true-dual-port dummy BRAM array (Fig 3a).
+//!
+//! Row map (1-indexed in the paper, 0-indexed here):
+//!
+//! | paper row | name        | purpose                                      |
+//! |-----------|-------------|----------------------------------------------|
+//! | 1st       | `ZERO`      | hard-coded zero (psum for input bits 2'b00)  |
+//! | 2nd       | `W1`        | first weight vector (copied from main BRAM)  |
+//! | 3rd       | `W2`        | second weight vector                          |
+//! | 4th       | `W12`       | W1 + W2 (psum for input bits 2'b11)          |
+//! | 5th       | `INV`       | inverted psum for the MSB subtraction         |
+//! | 6th       | `P`         | the running MAC2 result                       |
+//! | 7th       | `ACC`       | wide accumulator across sequential MAC2s      |
+//!
+//! The array is true dual port: per dummy-array cycle it supports at most
+//! **two reads** (the two sense amplifiers feeding the SIMD adder) and
+//! **two writes** (the two write drivers) — the model enforces this port
+//! discipline and panics on violations, which doubles as a check that the
+//! eFSM schedule is physically realizable.
+
+use super::row::Row160;
+
+pub const NUM_ROWS: usize = 7;
+
+/// Row indices (0-based).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Row {
+    Zero = 0,
+    W1 = 1,
+    W2 = 2,
+    W12 = 3,
+    Inv = 4,
+    P = 5,
+    Acc = 6,
+}
+
+/// Demux selection: which of rows 1–4 provides the psum for the current
+/// input-bit pair {I2[i], I1[i]} (§III-C1).
+pub fn demux_select(b1: bool, b2: bool) -> Row {
+    match (b2, b1) {
+        (false, false) => Row::Zero,
+        (false, true) => Row::W1,
+        (true, false) => Row::W2,
+        (true, true) => Row::W12,
+    }
+}
+
+/// Per-cycle port usage counters (reset by [`DummyArray::new_cycle`]).
+#[derive(Debug, Default, Clone, Copy)]
+struct PortUse {
+    reads: u8,
+    writes: u8,
+}
+
+/// The dummy array state plus port-discipline accounting.
+#[derive(Debug, Clone)]
+pub struct DummyArray {
+    rows: [Row160; NUM_ROWS],
+    ports: PortUse,
+    /// Total dummy-array cycles elapsed (2x the main clock for 1DA).
+    pub cycles: u64,
+    /// Lifetime statistics for the §Perf study.
+    pub total_reads: u64,
+    pub total_writes: u64,
+}
+
+impl Default for DummyArray {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl DummyArray {
+    pub fn new() -> Self {
+        DummyArray {
+            rows: [Row160::ZERO; NUM_ROWS],
+            ports: PortUse::default(),
+            cycles: 0,
+            total_reads: 0,
+            total_writes: 0,
+        }
+    }
+
+    /// Advance to the next dummy-array cycle (resets port budget).
+    pub fn new_cycle(&mut self) {
+        self.ports = PortUse::default();
+        self.cycles += 1;
+    }
+
+    /// Read a row through one of the two sense-amplifier ports.
+    pub fn read(&mut self, row: Row) -> Row160 {
+        self.ports.reads += 1;
+        assert!(
+            self.ports.reads <= 2,
+            "dummy array: >2 reads in one cycle (port violation)"
+        );
+        self.total_reads += 1;
+        if let Row::Zero = row {
+            // Row 1 is hard-coded to zero (§III-C1) — reads never see
+            // writes to it.
+            return Row160::ZERO;
+        }
+        self.rows[row as usize]
+    }
+
+    /// Write a row through one of the two write-driver ports.
+    pub fn write(&mut self, row: Row, value: Row160) {
+        assert!(
+            !matches!(row, Row::Zero),
+            "dummy array: row 1 is hard-coded zero and not writable"
+        );
+        self.ports.writes += 1;
+        assert!(
+            self.ports.writes <= 2,
+            "dummy array: >2 writes in one cycle (port violation)"
+        );
+        self.total_writes += 1;
+        // §Perf iteration 3: every producer (SWAR adder, inverter,
+        // sign-extension mux) already masks bits ≥160; assert instead of
+        // re-normalizing on the hot path.
+        debug_assert_eq!(value.0[2] >> 32, 0, "row value exceeds 160 bits");
+        self.rows[row as usize] = value;
+    }
+
+    /// Debug / test access without port accounting.
+    pub fn peek(&self, row: Row) -> Row160 {
+        if let Row::Zero = row {
+            Row160::ZERO
+        } else {
+            self.rows[row as usize]
+        }
+    }
+
+    /// Test access without port accounting.
+    pub fn poke(&mut self, row: Row, value: Row160) {
+        assert!(!matches!(row, Row::Zero));
+        self.rows[row as usize] = value.normalize();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn demux_matches_paper_truth_table() {
+        assert_eq!(demux_select(false, false), Row::Zero);
+        assert_eq!(demux_select(true, false), Row::W1);
+        assert_eq!(demux_select(false, true), Row::W2);
+        assert_eq!(demux_select(true, true), Row::W12);
+    }
+
+    #[test]
+    fn zero_row_is_hardwired() {
+        let mut a = DummyArray::new();
+        a.new_cycle();
+        assert_eq!(a.read(Row::Zero), Row160::ZERO);
+    }
+
+    #[test]
+    #[should_panic(expected = "not writable")]
+    fn zero_row_rejects_writes() {
+        let mut a = DummyArray::new();
+        a.new_cycle();
+        a.write(Row::Zero, Row160::ZERO);
+    }
+
+    #[test]
+    #[should_panic(expected = "port violation")]
+    fn three_reads_violate_ports() {
+        let mut a = DummyArray::new();
+        a.new_cycle();
+        a.read(Row::W1);
+        a.read(Row::W2);
+        a.read(Row::P);
+    }
+
+    #[test]
+    fn two_reads_two_writes_ok() {
+        let mut a = DummyArray::new();
+        a.new_cycle();
+        a.read(Row::W1);
+        a.read(Row::P);
+        a.write(Row::P, Row160::ZERO);
+        a.write(Row::W1, Row160::ZERO);
+        a.new_cycle(); // budget resets
+        a.read(Row::W2);
+        a.read(Row::Acc);
+    }
+}

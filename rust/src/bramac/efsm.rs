@@ -1,0 +1,346 @@
+//! The embedded FSM (eFSM): deterministic micro-op schedule for MAC2.
+//!
+//! §IV-C: "Since the dummy array's behavior is deterministic for computing
+//! MAC2, we propose to control it using an eFSM." This module generates
+//! the per-dummy-cycle micro-op schedule matching the pipeline diagrams of
+//! Fig 4 (operation example) and Fig 5 (pipelining), and executes it
+//! against the bit-accurate [`DummyArray`].
+//!
+//! Schedule for one signed n-bit MAC2 (compute cycles only):
+//!
+//! ```text
+//! Prep          read W1, W2          write W12 = W1+W2, write P = 0
+//! InvertMsb     read sel(bit n-1)    write INV = ~sel
+//! AddMsb        read INV, P          write P = (P + INV + 1) << 1
+//! AddShift(i)   read sel(i), P       write P = (P + sel) << 1     (0<i<n-1)
+//! AddLsb        read sel(0), P       write P = P + sel
+//! Accumulate    read P, ACC          write ACC = ACC + P
+//! ```
+//!
+//! Unsigned inputs skip `InvertMsb`/`AddMsb` (the MSB is processed as a
+//! plain `AddShift`) — "If the inputs are unsigned, then the inverting
+//! cycle can be skipped to improve performance" (§IV-C).
+//!
+//! Totals: `1 + 1 + n + 1 = n + 3` signed, `n + 2` unsigned — exactly
+//! Table II's 5/7/11-cycle MAC latency for 2/4/8-bit in BRAMAC-2SA
+//! (weight copies are overlapped with the previous MAC2's last two
+//! cycles, Fig 5a). Port-discipline (≤2 reads, ≤2 writes per cycle) is
+//! enforced by the [`DummyArray`] and proven compatible with the overlap
+//! in tests.
+
+use crate::arch::Precision;
+
+use super::dummy_array::{demux_select, DummyArray, Row};
+use super::row::Row160;
+use super::simd_adder::{adder_pass, WriteBack};
+
+/// One compute micro-op = one dummy-array cycle of work.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ComputeOp {
+    Prep,
+    InvertMsb { bit: u32 },
+    AddMsb,
+    AddShift { bit: u32 },
+    AddLsb,
+    Accumulate,
+}
+
+/// Generate the compute schedule for one MAC2 (excludes weight copies).
+pub fn compute_schedule(precision: Precision, signed_inputs: bool) -> Vec<ComputeOp> {
+    let n = precision.bits();
+    let mut ops = Vec::with_capacity(n as usize + 3);
+    ops.push(ComputeOp::Prep);
+    let mut bits: Vec<u32> = (0..n).rev().collect();
+    if signed_inputs {
+        let msb = bits.remove(0);
+        ops.push(ComputeOp::InvertMsb { bit: msb });
+        ops.push(ComputeOp::AddMsb);
+    }
+    for &bit in &bits {
+        if bit == 0 {
+            ops.push(ComputeOp::AddLsb);
+        } else {
+            ops.push(ComputeOp::AddShift { bit });
+        }
+    }
+    ops.push(ComputeOp::Accumulate);
+    ops
+}
+
+/// Steady-state MAC2 latency in *dummy-array* cycles: `n+3` signed /
+/// `n+2` unsigned (copies overlap the previous MAC2, Fig 5a).
+pub fn mac2_compute_cycles(precision: Precision, signed_inputs: bool) -> u64 {
+    compute_schedule(precision, signed_inputs).len() as u64
+}
+
+/// A MAC2 job latched by the eFSM: the two input operands and config.
+#[derive(Debug, Clone, Copy)]
+pub struct Mac2Inputs {
+    pub i1: i64,
+    pub i2: i64,
+    pub signed: bool,
+}
+
+/// The eFSM execution engine for one dummy array.
+#[derive(Debug, Clone)]
+pub struct Engine {
+    pub array: DummyArray,
+    pub precision: Precision,
+    /// Optional cycle trace: (dummy-cycle, op) pairs, for debugging and
+    /// schedule visualization (`trace_on`). Off by default — tracing
+    /// allocates on the hot path.
+    trace: Option<Vec<(u64, ComputeOp)>>,
+}
+
+impl Engine {
+    pub fn new(precision: Precision) -> Self {
+        Engine {
+            array: DummyArray::new(),
+            precision,
+            trace: None,
+        }
+    }
+
+    /// Enable per-cycle op tracing (Fig 4-style execution logs).
+    pub fn trace_on(&mut self) {
+        self.trace = Some(Vec::new());
+    }
+
+    /// Drain the trace collected so far.
+    pub fn take_trace(&mut self) -> Vec<(u64, ComputeOp)> {
+        self.trace.take().map(|t| {
+            self.trace = Some(Vec::new());
+            t
+        }).unwrap_or_default()
+    }
+
+    /// Execute one compute micro-op for the latched inputs. The caller
+    /// (the block model) has already advanced the array to a new cycle
+    /// and applied any overlapped weight-copy writes for the *next* MAC2;
+    /// reads in this model observe pre-cycle state per the read-then-
+    /// write phasing of the true-dual-port array.
+    pub fn exec(&mut self, op: ComputeOp, inputs: Mac2Inputs) {
+        let p = self.precision;
+        if let Some(t) = &mut self.trace {
+            t.push((self.array.cycles, op));
+        }
+        match op {
+            ComputeOp::Prep => {
+                let w1 = self.array.read(Row::W1);
+                let w2 = self.array.read(Row::W2);
+                let sum = adder_pass(&w1, &w2, p, false, WriteBack::Sum);
+                self.array.write(Row::W12, sum);
+                self.array.write(Row::P, Row160::ZERO);
+            }
+            ComputeOp::InvertMsb { bit } => {
+                let sel = self.select(bit, inputs);
+                let v = self.array.read(sel);
+                let inv = adder_pass(&Row160::ZERO, &v, p, false, WriteBack::InvertB);
+                self.array.write(Row::Inv, inv);
+            }
+            ComputeOp::AddMsb => {
+                let inv = self.array.read(Row::Inv);
+                let pr = self.array.read(Row::P);
+                // P = (P + inv(psum) + 1) << 1 — carry-in 1 per lane.
+                let out = adder_pass(&pr, &inv, p, true, WriteBack::SumShifted);
+                self.array.write(Row::P, out);
+            }
+            ComputeOp::AddShift { bit } => {
+                let sel = self.select(bit, inputs);
+                let v = self.array.read(sel);
+                let pr = self.array.read(Row::P);
+                let out = adder_pass(&pr, &v, p, false, WriteBack::SumShifted);
+                self.array.write(Row::P, out);
+            }
+            ComputeOp::AddLsb => {
+                let sel = self.select(0, inputs);
+                let v = self.array.read(sel);
+                let pr = self.array.read(Row::P);
+                let out = adder_pass(&pr, &v, p, false, WriteBack::Sum);
+                self.array.write(Row::P, out);
+            }
+            ComputeOp::Accumulate => {
+                let pr = self.array.read(Row::P);
+                let acc = self.array.read(Row::Acc);
+                let out = adder_pass(&acc, &pr, p, false, WriteBack::Sum);
+                self.array.write(Row::Acc, out);
+            }
+        }
+    }
+
+    fn select(&self, bit: u32, inputs: Mac2Inputs) -> Row {
+        let b1 = (inputs.i1 >> bit) & 1 == 1;
+        let b2 = (inputs.i2 >> bit) & 1 == 1;
+        demux_select(b1, b2)
+    }
+
+    /// Copy a sign-extended weight row (the main-BRAM→dummy path through
+    /// the sign-extension mux). Uses one write port in the current cycle.
+    pub fn copy_weight(&mut self, row: Row, data: Row160) {
+        debug_assert!(matches!(row, Row::W1 | Row::W2));
+        self.array.write(row, data);
+    }
+
+    /// Zero the accumulator row (the `reset` control of the CIM
+    /// instruction, §IV-C).
+    pub fn reset_acc(&mut self) {
+        self.array.poke(Row::Acc, Row160::ZERO);
+    }
+
+    /// Read the accumulator lanes as signed values (done → readout path).
+    pub fn acc_lanes(&self) -> Vec<i64> {
+        self.array.peek(Row::Acc).lanes_signed(self.precision)
+    }
+
+    /// Read the latest MAC2 result lanes (row P).
+    pub fn p_lanes(&self) -> Vec<i64> {
+        self.array.peek(Row::P).lanes_signed(self.precision)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::bramac::mac2::mac2_golden;
+    use crate::bramac::signext::{pack_word, sign_extend_word};
+    use crate::util::Rng;
+
+    /// Drive a full (non-overlapped) MAC2 through the engine and compare
+    /// every lane against the golden Algorithm-1 result.
+    fn run_one_mac2(
+        engine: &mut Engine,
+        w1: &[i64],
+        w2: &[i64],
+        i1: i64,
+        i2: i64,
+        signed: bool,
+    ) -> Vec<i64> {
+        let p = engine.precision;
+        // Copy cycles (2SA style: one row per cycle).
+        engine.array.new_cycle();
+        engine.copy_weight(Row::W1, sign_extend_word(pack_word(w1, p), p));
+        engine.array.new_cycle();
+        engine.copy_weight(Row::W2, sign_extend_word(pack_word(w2, p), p));
+        let inputs = Mac2Inputs { i1, i2, signed };
+        for op in compute_schedule(p, signed) {
+            engine.array.new_cycle();
+            engine.exec(op, inputs);
+        }
+        engine.p_lanes()
+    }
+
+    #[test]
+    fn schedule_lengths_match_table2() {
+        // Table II: MAC latency 5/7/11 cycles (2's complement).
+        assert_eq!(mac2_compute_cycles(Precision::Int2, true), 5);
+        assert_eq!(mac2_compute_cycles(Precision::Int4, true), 7);
+        assert_eq!(mac2_compute_cycles(Precision::Int8, true), 11);
+        // Unsigned skips the inverting cycle (§IV-C).
+        assert_eq!(mac2_compute_cycles(Precision::Int2, false), 4);
+        assert_eq!(mac2_compute_cycles(Precision::Int4, false), 6);
+        assert_eq!(mac2_compute_cycles(Precision::Int8, false), 10);
+    }
+
+    #[test]
+    fn schedule_shape() {
+        let ops = compute_schedule(Precision::Int4, true);
+        assert_eq!(ops[0], ComputeOp::Prep);
+        assert_eq!(ops[1], ComputeOp::InvertMsb { bit: 3 });
+        assert_eq!(ops[2], ComputeOp::AddMsb);
+        assert_eq!(ops[3], ComputeOp::AddShift { bit: 2 });
+        assert_eq!(ops[4], ComputeOp::AddShift { bit: 1 });
+        assert_eq!(ops[5], ComputeOp::AddLsb);
+        assert_eq!(ops[6], ComputeOp::Accumulate);
+    }
+
+    #[test]
+    fn engine_matches_golden_random() {
+        let mut rng = Rng::seed_from_u64(0xEF5);
+        for p in Precision::ALL {
+            for signed in [true, false] {
+                let (lo_w, hi_w) = p.range();
+                let (lo_i, hi_i) = if signed { p.range() } else { p.range_unsigned() };
+                for _ in 0..100 {
+                    let lanes = p.lanes_per_word();
+                    let w1: Vec<i64> =
+                        (0..lanes).map(|_| rng.gen_range_i64(lo_w as i64, hi_w as i64)).collect();
+                    let w2: Vec<i64> =
+                        (0..lanes).map(|_| rng.gen_range_i64(lo_w as i64, hi_w as i64)).collect();
+                    let i1 = rng.gen_range_i64(lo_i as i64, hi_i as i64);
+                    let i2 = rng.gen_range_i64(lo_i as i64, hi_i as i64);
+                    let mut engine = Engine::new(p);
+                    let got = run_one_mac2(&mut engine, &w1, &w2, i1, i2, signed);
+                    for lane in 0..lanes {
+                        assert_eq!(
+                            got[lane],
+                            mac2_golden(w1[lane], w2[lane], i1, i2, p.bits(), signed),
+                            "p={p} signed={signed} lane={lane}"
+                        );
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn accumulator_sums_sequential_mac2s() {
+        let p = Precision::Int4;
+        let mut engine = Engine::new(p);
+        engine.reset_acc();
+        let mut expect = vec![0i64; p.lanes_per_word()];
+        let mut rng = Rng::seed_from_u64(9);
+        for _ in 0..8 {
+            let w1: Vec<i64> = (0..10).map(|_| rng.gen_range_i64(-8, 7)).collect();
+            let w2: Vec<i64> = (0..10).map(|_| rng.gen_range_i64(-8, 7)).collect();
+            let i1 = rng.gen_range_i64(-8, 7);
+            let i2 = rng.gen_range_i64(-8, 7);
+            run_one_mac2(&mut engine, &w1, &w2, i1, i2, true);
+            for lane in 0..10 {
+                expect[lane] += w1[lane] * i1 + w2[lane] * i2;
+            }
+        }
+        assert_eq!(engine.acc_lanes(), expect);
+    }
+
+    #[test]
+    fn trace_records_fig4_schedule() {
+        let p = Precision::Int4;
+        let mut engine = Engine::new(p);
+        engine.trace_on();
+        run_one_mac2(&mut engine, &[1], &[2], 3, -4, true);
+        let trace = engine.take_trace();
+        let ops: Vec<ComputeOp> = trace.iter().map(|(_, op)| *op).collect();
+        assert_eq!(ops, compute_schedule(p, true), "trace mirrors the schedule");
+        // Cycles strictly increase, one op per dummy cycle.
+        for w in trace.windows(2) {
+            assert_eq!(w[1].0, w[0].0 + 1);
+        }
+        // Tracing is off by default and drained traces reset.
+        assert!(engine.take_trace().is_empty());
+    }
+
+    #[test]
+    fn exhaustive_2bit_all_operand_combinations() {
+        // 2-bit is small enough to cover the full operand space through
+        // the bit-level engine (demux + SIMD adder + inverter).
+        let p = Precision::Int2;
+        for w1 in -2i64..=1 {
+            for w2 in -2i64..=1 {
+                for i1 in -2i64..=1 {
+                    for i2 in -2i64..=1 {
+                        let mut engine = Engine::new(p);
+                        let got = run_one_mac2(
+                            &mut engine,
+                            &[w1],
+                            &[w2],
+                            i1,
+                            i2,
+                            true,
+                        );
+                        assert_eq!(got[0], w1 * i1 + w2 * i2);
+                    }
+                }
+            }
+        }
+    }
+}

@@ -1,0 +1,266 @@
+//! CIM instruction formats (Fig 6).
+//!
+//! A 40-bit write to the reserved main-BRAM address `0xfff` on portA is
+//! decoded as a CIM instruction (§III-A). Fig 6 names the fields; exact
+//! bit positions are not printed in the paper, so this module fixes a
+//! concrete layout (documented below) that fits 40 bits for both
+//! variants — the inferred widths are recorded in DESIGN.md §6.
+//!
+//! ```text
+//! BRAMAC-2SA word (one per copy cycle; 33/40 bits used):
+//!   [ 7:0]  iA      input for this copy cycle, dummy array 1
+//!   [15:8]  iB      input for this copy cycle, dummy array 2
+//!   [22:16] bramRow main-BRAM physical row (128 rows)
+//!   [24:23] bramCol column-mux select (4:1)
+//!   [26:25] prec    00=2-bit, 01=4-bit, 10=8-bit
+//!   [27]    inType  1 = signed (2's complement) inputs
+//!   [28]    reset   zero the accumulator row
+//!   [29]    start   trigger MAC2
+//!   [30]    copy    copy main-BRAM read data into the dummy array
+//!   [31]    w1_w2   0: this copy is W1, 1: this copy is W2
+//!   [32]    done    read out the accumulator (bramCol selects the word)
+//!
+//! BRAMAC-1DA word (two row addresses, shared column; 39/40 bits used):
+//!   [ 7:0]  i1
+//!   [15:8]  i2
+//!   [22:16] bramRow1
+//!   [29:23] bramRow2
+//!   [31:30] bramCol
+//!   [33:32] prec
+//!   [34]    inType
+//!   [35]    reset
+//!   [36]    start
+//!   [37]    copy
+//!   [38]    done
+//! ```
+
+use crate::arch::Precision;
+
+/// The reserved portA address that marks a CIM instruction (§III-A).
+pub const CIM_ADDRESS: u16 = 0xfff;
+
+/// Decoded CIM instruction, superset of the 2SA / 1DA fields.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct CimInstr {
+    /// Two 8-bit inputs carried by this word. For 2SA these feed dummy
+    /// arrays 1 and 2 respectively (one input each per copy cycle); for
+    /// 1DA they are the MAC2 pair (I1, I2).
+    pub inputs: [u8; 2],
+    /// Main-BRAM row for the copy (2SA) / first row (1DA).
+    pub bram_row: u8,
+    /// Second main-BRAM row (1DA only; ignored by 2SA).
+    pub bram_row2: u8,
+    /// Column-mux select, also the readout word index when `done`.
+    pub bram_col: u8,
+    pub precision: Precision,
+    /// `inType`: signed (2's complement) vs unsigned inputs.
+    pub signed_inputs: bool,
+    pub reset: bool,
+    pub start: bool,
+    pub copy: bool,
+    /// 2SA: which weight row this copy targets (false=W1, true=W2).
+    pub w1_w2: bool,
+    pub done: bool,
+}
+
+impl Default for CimInstr {
+    fn default() -> Self {
+        CimInstr {
+            inputs: [0, 0],
+            bram_row: 0,
+            bram_row2: 0,
+            bram_col: 0,
+            precision: Precision::Int8,
+            signed_inputs: true,
+            reset: false,
+            start: false,
+            copy: false,
+            w1_w2: false,
+            done: false,
+        }
+    }
+}
+
+fn prec_code(p: Precision) -> u64 {
+    match p {
+        Precision::Int2 => 0,
+        Precision::Int4 => 1,
+        Precision::Int8 => 2,
+    }
+}
+
+fn prec_from_code(c: u64) -> Option<Precision> {
+    match c {
+        0 => Some(Precision::Int2),
+        1 => Some(Precision::Int4),
+        2 => Some(Precision::Int8),
+        _ => None,
+    }
+}
+
+impl CimInstr {
+    /// Encode as a BRAMAC-2SA 40-bit word (Fig 6a).
+    pub fn encode_2sa(&self) -> u64 {
+        assert!(self.bram_row < 128 && self.bram_col < 4);
+        (self.inputs[0] as u64)
+            | (self.inputs[1] as u64) << 8
+            | (self.bram_row as u64) << 16
+            | (self.bram_col as u64) << 23
+            | prec_code(self.precision) << 25
+            | (self.signed_inputs as u64) << 27
+            | (self.reset as u64) << 28
+            | (self.start as u64) << 29
+            | (self.copy as u64) << 30
+            | (self.w1_w2 as u64) << 31
+            | (self.done as u64) << 32
+    }
+
+    /// Decode a BRAMAC-2SA word.
+    pub fn decode_2sa(word: u64) -> Option<CimInstr> {
+        Some(CimInstr {
+            inputs: [(word & 0xff) as u8, ((word >> 8) & 0xff) as u8],
+            bram_row: ((word >> 16) & 0x7f) as u8,
+            bram_row2: 0,
+            bram_col: ((word >> 23) & 0x3) as u8,
+            precision: prec_from_code((word >> 25) & 0x3)?,
+            signed_inputs: (word >> 27) & 1 == 1,
+            reset: (word >> 28) & 1 == 1,
+            start: (word >> 29) & 1 == 1,
+            copy: (word >> 30) & 1 == 1,
+            w1_w2: (word >> 31) & 1 == 1,
+            done: (word >> 32) & 1 == 1,
+        })
+    }
+
+    /// Encode as a BRAMAC-1DA 40-bit word (Fig 6b).
+    pub fn encode_1da(&self) -> u64 {
+        assert!(self.bram_row < 128 && self.bram_row2 < 128 && self.bram_col < 4);
+        (self.inputs[0] as u64)
+            | (self.inputs[1] as u64) << 8
+            | (self.bram_row as u64) << 16
+            | (self.bram_row2 as u64) << 23
+            | (self.bram_col as u64) << 30
+            | prec_code(self.precision) << 32
+            | (self.signed_inputs as u64) << 34
+            | (self.reset as u64) << 35
+            | (self.start as u64) << 36
+            | (self.copy as u64) << 37
+            | (self.done as u64) << 38
+    }
+
+    /// Decode a BRAMAC-1DA word.
+    pub fn decode_1da(word: u64) -> Option<CimInstr> {
+        Some(CimInstr {
+            inputs: [(word & 0xff) as u8, ((word >> 8) & 0xff) as u8],
+            bram_row: ((word >> 16) & 0x7f) as u8,
+            bram_row2: ((word >> 23) & 0x7f) as u8,
+            bram_col: ((word >> 30) & 0x3) as u8,
+            precision: prec_from_code((word >> 32) & 0x3)?,
+            signed_inputs: (word >> 34) & 1 == 1,
+            reset: (word >> 35) & 1 == 1,
+            start: (word >> 36) & 1 == 1,
+            copy: (word >> 37) & 1 == 1,
+            w1_w2: false,
+            done: (word >> 38) & 1 == 1,
+        })
+    }
+
+    /// Convert an input byte into the signed/unsigned operand value at
+    /// the instruction's precision.
+    pub fn input_value(&self, idx: usize) -> i64 {
+        let n = self.precision.bits();
+        let raw = (self.inputs[idx] as u64 & ((1 << n) - 1)) as i64;
+        if self.signed_inputs {
+            let sign = 1i64 << (n - 1);
+            (raw ^ sign) - sign
+        } else {
+            raw
+        }
+    }
+
+    /// Combined 9-bit word address (row*4 + col) into the 512-deep
+    /// simple-dual-port view of the main BRAM.
+    pub fn word_addr(&self) -> u16 {
+        self.bram_row as u16 * 4 + self.bram_col as u16
+    }
+    pub fn word_addr2(&self) -> u16 {
+        self.bram_row2 as u16 * 4 + self.bram_col as u16
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+
+    fn random_instr(rng: &mut Rng) -> CimInstr {
+        CimInstr {
+            inputs: [rng.next_u32() as u8, rng.next_u32() as u8],
+            bram_row: rng.gen_range_i64(0, 127) as u8,
+            bram_row2: rng.gen_range_i64(0, 127) as u8,
+            bram_col: rng.gen_range_i64(0, 3) as u8,
+            precision: [Precision::Int2, Precision::Int4, Precision::Int8]
+                [rng.gen_range_usize(0, 2)],
+            signed_inputs: rng.gen_bool(0.5),
+            reset: rng.gen_bool(0.5),
+            start: rng.gen_bool(0.5),
+            copy: rng.gen_bool(0.5),
+            w1_w2: rng.gen_bool(0.5),
+            done: rng.gen_bool(0.5),
+        }
+    }
+
+    #[test]
+    fn roundtrip_2sa() {
+        let mut rng = Rng::seed_from_u64(1);
+        for _ in 0..1000 {
+            let mut i = random_instr(&mut rng);
+            i.bram_row2 = 0; // not encoded in 2SA
+            let word = i.encode_2sa();
+            assert!(word < (1u64 << 40), "instruction must fit 40 bits");
+            assert_eq!(CimInstr::decode_2sa(word).unwrap(), i);
+        }
+    }
+
+    #[test]
+    fn roundtrip_1da() {
+        let mut rng = Rng::seed_from_u64(2);
+        for _ in 0..1000 {
+            let mut i = random_instr(&mut rng);
+            i.w1_w2 = false; // not encoded in 1DA
+            let word = i.encode_1da();
+            assert!(word < (1u64 << 40));
+            assert_eq!(CimInstr::decode_1da(word).unwrap(), i);
+        }
+    }
+
+    #[test]
+    fn input_value_signedness() {
+        let mut i = CimInstr {
+            inputs: [0xff, 0x7f],
+            precision: Precision::Int8,
+            signed_inputs: true,
+            ..CimInstr::default()
+        };
+        assert_eq!(i.input_value(0), -1);
+        assert_eq!(i.input_value(1), 127);
+        i.signed_inputs = false;
+        assert_eq!(i.input_value(0), 255);
+        i.precision = Precision::Int4;
+        i.signed_inputs = true;
+        assert_eq!(i.input_value(0), -1); // 0xf at 4-bit
+        assert_eq!(i.input_value(1), -1);
+    }
+
+    #[test]
+    fn word_addressing() {
+        let i = CimInstr {
+            bram_row: 5,
+            bram_row2: 6,
+            bram_col: 3,
+            ..CimInstr::default()
+        };
+        assert_eq!(i.word_addr(), 23);
+        assert_eq!(i.word_addr2(), 27);
+    }
+}

@@ -1,0 +1,172 @@
+//! Algorithm 1: hybrid bit-serial & bit-parallel MAC2 (golden reference).
+//!
+//! ```text
+//! P = 0
+//! for i = (n-1) downto 0:
+//!     psum = W1 * I1[i] + W2 * I2[i]        // LUT select {0,W1,W2,W1+W2}
+//!     if i == n-1:      P = P + inv(psum) + 1   // MSB is negative (2's c.)
+//!                       P = P << 1
+//!     else if i != 0:   P = P + psum
+//!                       P = P << 1
+//!     else:             P = P + psum            // LSB: no shift
+//! return P
+//! ```
+//!
+//! The bit-level dummy-array engine ([`crate::bramac::efsm`]) and the L1
+//! Pallas kernel (`python/compile/kernels/mac2.py`) are both validated
+//! against this function, which itself is validated against plain `i64`
+//! multiplication in unit and property tests.
+
+use crate::arch::Precision;
+
+/// One bit of a 2's-complement integer's n-bit encoding.
+#[inline]
+fn bit(v: i64, i: u32) -> i64 {
+    (v >> i) & 1
+}
+
+/// MAC2 via Algorithm 1. `w1, w2, i1, i2` must be representable in
+/// `n`-bit 2's complement (signed) or `n`-bit unsigned (`signed_inputs =
+/// false`; the eFSM skips the inverter cycle in that case, §IV-C).
+///
+/// Weights are always signed in the paper's dataflow (they are
+/// sign-extended by the mux); only the *inputs* have an `inType` flag.
+pub fn mac2_golden(w1: i64, w2: i64, i1: i64, i2: i64, n: u32, signed_inputs: bool) -> i64 {
+    debug_assert!((2..=8).contains(&n), "precision must be in [2,8]");
+    let mut p: i64 = 0;
+    for i in (0..n).rev() {
+        // LUT selection (dummy-array rows 1-4 via the 2-to-4 demux):
+        // {I2[i], I1[i]} = 00 -> 0, 01 -> W1, 10 -> W2, 11 -> W1+W2.
+        let psum = match (bit(i2, i), bit(i1, i)) {
+            (0, 0) => 0,
+            (0, 1) => w1,
+            (1, 0) => w2,
+            _ => w1 + w2,
+        };
+        if signed_inputs && i == n - 1 {
+            // P = P + inv(psum) + 1 — binary subtraction via the Inverter
+            // row. At infinite width inv(x)+1 == -x.
+            p += -psum;
+        } else {
+            p += psum;
+        }
+        if i != 0 {
+            p <<= 1;
+        }
+    }
+    p
+}
+
+/// MAC2 across lanes: the dummy array computes every lane simultaneously
+/// with the shared input pair (input-sharing, §III-B).
+pub fn mac2_lanes_golden(
+    w1: &[i64],
+    w2: &[i64],
+    i1: i64,
+    i2: i64,
+    n: u32,
+    signed_inputs: bool,
+) -> Vec<i64> {
+    assert_eq!(w1.len(), w2.len());
+    w1.iter()
+        .zip(w2)
+        .map(|(&a, &b)| mac2_golden(a, b, i1, i2, n, signed_inputs))
+        .collect()
+}
+
+/// Full GEMV through repeated MAC2s with in-place accumulation — the
+/// matrix-vector flow of Fig 2. `w` is row-major `m x k`; `x` has length
+/// `k`. Odd `k` is padded with a zero input (hardware pads the final
+/// MAC2's second operand).
+pub fn gemv_golden(w: &[i64], x: &[i64], m: usize, k: usize, p: Precision, signed: bool) -> Vec<i64> {
+    assert_eq!(w.len(), m * k);
+    assert_eq!(x.len(), k);
+    let n = p.bits();
+    let mut y = vec![0i64; m];
+    for (r, acc) in y.iter_mut().enumerate() {
+        let row = &w[r * k..(r + 1) * k];
+        let mut j = 0;
+        while j < k {
+            let (w1, i1) = (row[j], x[j]);
+            let (w2, i2) = if j + 1 < k { (row[j + 1], x[j + 1]) } else { (0, 0) };
+            *acc += mac2_golden(w1, w2, i1, i2, n, signed);
+            j += 2;
+        }
+    }
+    y
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn exhaustive(n: u32, signed: bool) {
+        let (lo_w, hi_w) = (-(1i64 << (n - 1)), (1i64 << (n - 1)) - 1);
+        let (lo_i, hi_i) = if signed {
+            (lo_w, hi_w)
+        } else {
+            (0, (1i64 << n) - 1)
+        };
+        for w1 in lo_w..=hi_w {
+            for w2 in lo_w..=hi_w {
+                for i1 in lo_i..=hi_i {
+                    for i2 in lo_i..=hi_i {
+                        assert_eq!(
+                            mac2_golden(w1, w2, i1, i2, n, signed),
+                            w1 * i1 + w2 * i2,
+                            "n={n} signed={signed} w=({w1},{w2}) i=({i1},{i2})"
+                        );
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn exhaustive_2bit() {
+        exhaustive(2, true);
+        exhaustive(2, false);
+    }
+
+    #[test]
+    fn exhaustive_3bit_4bit() {
+        exhaustive(3, true);
+        exhaustive(4, true);
+        exhaustive(4, false);
+    }
+
+    #[test]
+    fn random_8bit() {
+        let mut rng = crate::util::Rng::seed_from_u64(0xb2a);
+        for _ in 0..20_000 {
+            let w1 = rng.gen_range_i64(-128, 127);
+            let w2 = rng.gen_range_i64(-128, 127);
+            let signed = rng.gen_bool(0.5);
+            let (i1, i2) = if signed {
+                (rng.gen_range_i64(-128, 127), rng.gen_range_i64(-128, 127))
+            } else {
+                (rng.gen_range_i64(0, 255), rng.gen_range_i64(0, 255))
+            };
+            assert_eq!(mac2_golden(w1, w2, i1, i2, 8, signed), w1 * i1 + w2 * i2);
+        }
+    }
+
+    #[test]
+    fn lanes_share_inputs() {
+        let w1 = vec![1, -2, 3, 127, -128];
+        let w2 = vec![0, 5, -6, -128, 127];
+        let out = mac2_lanes_golden(&w1, &w2, -7, 11, 8, true);
+        for (idx, o) in out.iter().enumerate() {
+            assert_eq!(*o, w1[idx] * -7 + w2[idx] * 11);
+        }
+    }
+
+    #[test]
+    fn gemv_matches_dot_including_odd_k() {
+        use crate::arch::Precision;
+        let w = vec![1, 2, 3, -4, 5, -6]; // 2x3
+        let x = vec![7, -8, 2];
+        let y = gemv_golden(&w, &x, 2, 3, Precision::Int4, true);
+        assert_eq!(y, vec![1 * 7 + 2 * -8 + 3 * 2, -4 * 7 + 5 * -8 + -6 * 2]);
+    }
+}

@@ -1,0 +1,35 @@
+//! Bit-accurate behavioral model of the BRAMAC block (paper §III–§IV).
+//!
+//! The model is layered exactly like the hardware:
+//!
+//! * [`mac2`] — Algorithm 1 (hybrid bit-serial & bit-parallel MAC2) as a
+//!   scalar golden reference.
+//! * [`row`] — 160-bit row values and lane arithmetic (the SIMD adder's
+//!   operand type).
+//! * [`signext`] — the configurable sign-extension mux between the main
+//!   BRAM and the dummy array (Fig 3b).
+//! * [`simd_adder`] — the 160-bit bit-parallel SIMD adder (Fig 3c),
+//!   with both a fast lane implementation and a full-adder-chain
+//!   reference used to prove them equivalent.
+//! * [`dummy_array`] — the 7-row × 160-column true-dual-port dummy BRAM
+//!   array with its port-discipline checks (Fig 3a).
+//! * [`instr`] — the 40-bit CIM instruction formats (Fig 6).
+//! * [`efsm`] — the embedded FSM: a cycle-stepped micro-op schedule
+//!   reproducing the pipeline diagrams of Fig 4 / Fig 5.
+//! * [`block`] — the full BRAMAC block (main 512×40 BRAM + 1 or 2 dummy
+//!   engines), the MEM/CIM modes, and the port-freeing behavior that
+//!   enables tiling-based acceleration.
+
+pub mod block;
+pub mod dummy_array;
+pub mod efsm;
+pub mod instr;
+pub mod mac2;
+pub mod row;
+pub mod signext;
+pub mod simd_adder;
+
+pub use block::{BramacBlock, StreamStats, Variant};
+pub use instr::CimInstr;
+pub use mac2::{mac2_golden, mac2_lanes_golden};
+pub use row::Row160;

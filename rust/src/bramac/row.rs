@@ -1,0 +1,168 @@
+//! 160-bit row values — the word type of the dummy array and SIMD adder.
+//!
+//! A row is stored as three u64 limbs (the top 32 bits of limb 2 are
+//! always zero). Lane widths are 8/16/32 bits (`Precision::ext_bits`), all
+//! of which divide 64, so a lane never straddles a limb boundary.
+
+use crate::arch::Precision;
+
+pub const ROW_BITS: usize = 160;
+
+/// One 160-bit dummy-array row.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub struct Row160(pub [u64; 3]);
+
+impl Row160 {
+    pub const ZERO: Row160 = Row160([0; 3]);
+
+    #[inline]
+    pub fn get_bit(&self, i: usize) -> bool {
+        debug_assert!(i < ROW_BITS);
+        (self.0[i / 64] >> (i % 64)) & 1 == 1
+    }
+
+    #[inline]
+    pub fn set_bit(&mut self, i: usize, v: bool) {
+        debug_assert!(i < ROW_BITS);
+        let limb = &mut self.0[i / 64];
+        let mask = 1u64 << (i % 64);
+        if v {
+            *limb |= mask;
+        } else {
+            *limb &= !mask;
+        }
+    }
+
+    /// Mask off anything above bit 160 (defensive normalization).
+    #[inline]
+    pub fn normalize(mut self) -> Self {
+        self.0[2] &= (1u64 << 32) - 1;
+        self
+    }
+
+    /// Extract the `lane`-th field of `width` bits as a u32 (width ≤ 32).
+    #[inline]
+    pub fn lane(&self, lane: usize, width: u32) -> u32 {
+        debug_assert!(width <= 32 && 64 % width as usize == 0);
+        let bit = lane * width as usize;
+        debug_assert!(bit + width as usize <= ROW_BITS);
+        let limb = self.0[bit / 64];
+        let shift = bit % 64;
+        let mask = if width == 32 { u32::MAX as u64 } else { (1u64 << width) - 1 };
+        ((limb >> shift) & mask) as u32
+    }
+
+    /// Insert `value` (masked to `width` bits) into the `lane`-th field.
+    #[inline]
+    pub fn set_lane(&mut self, lane: usize, width: u32, value: u32) {
+        let bit = lane * width as usize;
+        debug_assert!(bit + width as usize <= ROW_BITS);
+        let shift = bit % 64;
+        let mask = if width == 32 { u32::MAX as u64 } else { (1u64 << width) - 1 };
+        let limb = &mut self.0[bit / 64];
+        *limb = (*limb & !(mask << shift)) | (((value as u64) & mask) << shift);
+    }
+
+    /// Interpret the `lane`-th field as a signed `width`-bit integer.
+    #[inline]
+    pub fn lane_signed(&self, lane: usize, width: u32) -> i64 {
+        let raw = self.lane(lane, width) as i64;
+        let sign = 1i64 << (width - 1);
+        (raw ^ sign) - sign
+    }
+
+    /// Write a signed value into a lane (2's complement truncation).
+    #[inline]
+    pub fn set_lane_signed(&mut self, lane: usize, width: u32, value: i64) {
+        self.set_lane(lane, width, (value as u64 & ((1u64 << width) - 1).min(u32::MAX as u64)) as u32);
+    }
+
+    /// All lanes of the row as signed integers at the given precision's
+    /// extended width.
+    pub fn lanes_signed(&self, p: Precision) -> Vec<i64> {
+        let w = p.ext_bits();
+        (0..p.lanes_per_word()).map(|l| self.lane_signed(l, w)).collect()
+    }
+
+    /// Select a 40-bit window `col` (0..4) — how the accumulator row is
+    /// read out 40 bits per cycle through the output crossbar (§IV-C).
+    pub fn word40(&self, col: usize) -> u64 {
+        debug_assert!(col < 4);
+        let mut out = 0u64;
+        for i in 0..40 {
+            if self.get_bit(col * 40 + i) {
+                out |= 1 << i;
+            }
+        }
+        out
+    }
+}
+
+impl std::fmt::Display for Row160 {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "{:032x}{:016x}{:016x}", self.0[2], self.0[1], self.0[0])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bit_roundtrip() {
+        let mut r = Row160::ZERO;
+        for i in [0usize, 1, 63, 64, 100, 127, 128, 159] {
+            r.set_bit(i, true);
+            assert!(r.get_bit(i));
+            r.set_bit(i, false);
+            assert!(!r.get_bit(i));
+        }
+    }
+
+    #[test]
+    fn lane_roundtrip_all_widths() {
+        for width in [8u32, 16, 32] {
+            let lanes = 160 / width as usize;
+            let mut r = Row160::ZERO;
+            for l in 0..lanes {
+                r.set_lane(l, width, (l as u32).wrapping_mul(0x9e37_79b9));
+            }
+            for l in 0..lanes {
+                let mask = if width == 32 { u32::MAX } else { (1 << width) - 1 };
+                assert_eq!(r.lane(l, width), (l as u32).wrapping_mul(0x9e37_79b9) & mask);
+            }
+        }
+    }
+
+    #[test]
+    fn signed_lane_roundtrip() {
+        let mut r = Row160::ZERO;
+        for (lane, v) in [(0usize, -1i64), (1, -128), (2, 127), (3, 0), (4, 63)] {
+            r.set_lane_signed(lane, 8, v);
+            assert_eq!(r.lane_signed(lane, 8), v);
+        }
+        let mut r = Row160::ZERO;
+        r.set_lane_signed(4, 32, -2_000_000_000);
+        assert_eq!(r.lane_signed(4, 32), -2_000_000_000);
+    }
+
+    #[test]
+    fn word40_readout() {
+        let mut r = Row160::ZERO;
+        r.set_lane(0, 8, 0xAB);
+        r.set_lane(5, 8, 0xCD); // bit 40..47 — second 40-bit word
+        assert_eq!(r.word40(0) & 0xFF, 0xAB);
+        assert_eq!(r.word40(1) & 0xFF, 0xCD);
+    }
+
+    #[test]
+    fn lanes_never_straddle_limbs() {
+        for p in Precision::ALL {
+            let w = p.ext_bits() as usize;
+            for l in 0..p.lanes_per_word() {
+                let start = l * w;
+                assert_eq!(start / 64, (start + w - 1) / 64, "lane straddles limb");
+            }
+        }
+    }
+}

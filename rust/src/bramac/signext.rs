@@ -1,0 +1,126 @@
+//! The configurable sign-extension mux (Fig 3b) and the 40-bit word
+//! packing used by the main BRAM.
+//!
+//! The main BRAM reads 40-bit words holding five 8-bit / ten 4-bit /
+//! twenty 2-bit elements. Before being copied to the 160-column dummy
+//! array every element is sign-extended to 4x its width (32/16/8 bits) so
+//! that sequential MAC2 results can be accumulated without overflow
+//! (§III-C2).
+
+use crate::arch::Precision;
+
+use super::row::Row160;
+
+/// Pack `p.lanes_per_word()` signed elements into a 40-bit word
+/// (low element in the low bits — lane order matches the dummy array).
+pub fn pack_word(elems: &[i64], p: Precision) -> u64 {
+    let n = p.bits();
+    assert!(
+        elems.len() <= p.lanes_per_word(),
+        "too many elements for one 40-bit word"
+    );
+    let mask = (1u64 << n) - 1;
+    let mut word = 0u64;
+    for (i, &e) in elems.iter().enumerate() {
+        let (lo, hi) = p.range();
+        assert!(
+            (lo as i64..=hi as i64).contains(&e) || (0..=(mask as i64)).contains(&e),
+            "element {e} out of {n}-bit range"
+        );
+        word |= ((e as u64) & mask) << (i as u32 * n);
+    }
+    word
+}
+
+/// Unpack a 40-bit word into signed n-bit elements.
+pub fn unpack_word(word: u64, p: Precision) -> Vec<i64> {
+    let n = p.bits();
+    let sign = 1i64 << (n - 1);
+    (0..p.lanes_per_word())
+        .map(|i| {
+            let raw = ((word >> (i as u32 * n)) & ((1u64 << n) - 1)) as i64;
+            (raw ^ sign) - sign
+        })
+        .collect()
+}
+
+/// The sign-extension mux: 40-bit main-BRAM word → 160-bit dummy row.
+/// Each n-bit element is sign-extended to `4n` bits (§III-C2); a 2/4/8-bit
+/// MAC2 needs at most 5/9/17 bits, so the extended width also provides
+/// headroom for the in-place accumulator (row 7).
+pub fn sign_extend_word(word: u64, p: Precision) -> Row160 {
+    let n = p.bits();
+    let ext = p.ext_bits();
+    let sign = 1i64 << (n - 1);
+    let mut row = Row160::ZERO;
+    for lane in 0..p.lanes_per_word() {
+        let raw = ((word >> (lane as u32 * n)) & ((1u64 << n) - 1)) as i64;
+        let val = (raw ^ sign) - sign;
+        row.set_lane_signed(lane, ext, val);
+    }
+    row
+}
+
+/// Inverse of [`sign_extend_word`] restricted to in-range lanes — used by
+/// tests to verify the mux is lossless on weights.
+pub fn narrow_row(row: &Row160, p: Precision) -> Vec<i64> {
+    row.lanes_signed(p)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+
+    #[test]
+    fn pack_unpack_roundtrip() {
+        let mut rng = Rng::seed_from_u64(7);
+        for p in Precision::ALL {
+            let (lo, hi) = p.range();
+            for _ in 0..200 {
+                let elems: Vec<i64> = (0..p.lanes_per_word())
+                    .map(|_| rng.gen_range_i64(lo as i64, hi as i64))
+                    .collect();
+                let word = pack_word(&elems, p);
+                assert!(word < (1u64 << 40), "word must fit 40 bits");
+                assert_eq!(unpack_word(word, p), elems);
+            }
+        }
+    }
+
+    #[test]
+    fn sign_extension_preserves_values() {
+        let mut rng = Rng::seed_from_u64(8);
+        for p in Precision::ALL {
+            let (lo, hi) = p.range();
+            for _ in 0..200 {
+                let elems: Vec<i64> = (0..p.lanes_per_word())
+                    .map(|_| rng.gen_range_i64(lo as i64, hi as i64))
+                    .collect();
+                let row = sign_extend_word(pack_word(&elems, p), p);
+                assert_eq!(narrow_row(&row, p), elems);
+            }
+        }
+    }
+
+    #[test]
+    fn negative_values_fill_upper_bits() {
+        // -1 at 4-bit must extend to 0xFFFF in a 16-bit lane.
+        let row = sign_extend_word(pack_word(&[-1], Precision::Int4), Precision::Int4);
+        assert_eq!(row.lane(0, 16), 0xFFFF);
+        // +7 must extend with zeros.
+        let row = sign_extend_word(pack_word(&[7], Precision::Int4), Precision::Int4);
+        assert_eq!(row.lane(0, 16), 0x0007);
+    }
+
+    #[test]
+    fn mux_block_geometry() {
+        // Fig 3b: five identical blocks, each extends one 8-bit element
+        // to 32 bits, two 4-bit to 16, or four 2-bit to 8 — i.e. every
+        // 8-bit span of the input maps to a fixed 32-bit span of the row.
+        for p in Precision::ALL {
+            assert_eq!(p.lanes_per_word() * p.ext_bits() as usize, 160);
+            assert_eq!(40 / p.bits() as usize, p.lanes_per_word());
+        }
+    }
+}

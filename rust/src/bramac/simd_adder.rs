@@ -1,0 +1,202 @@
+//! The 160-bit bit-parallel SIMD adder (Fig 3c).
+//!
+//! Built from 1-bit full adders, it partitions into twenty 8-bit, ten
+//! 16-bit, or five 32-bit adders for 2/4/8-bit MAC2 (worst-case delay =
+//! one 32-bit addition, which is why §V-B picks a carry-lookahead design).
+//!
+//! Two implementations:
+//! * [`add_lanes`] — fast u32 lane arithmetic (the production path),
+//! * [`add_fa_chain`] — an explicit full-adder ripple chain with carry
+//!   kill at lane boundaries (the literal gate-level behavior).
+//! A property test proves them identical, so the fast path inherits the
+//! gate-level semantics.
+//!
+//! The write-back muxes of Fig 3c are modeled as [`WriteBack`]: plain sum,
+//! shifted sum (`S_Right`, the 1-bit shift-left of Algorithm 1 lines 6/9),
+//! inverted B (`B-bar`, the Inverter row), or zero (P/Accumulator init).
+
+use crate::arch::Precision;
+
+use super::row::{Row160, ROW_BITS};
+
+/// Per-limb SWAR masks for a lane width: (msb mask, lsb mask).
+/// Lane widths (8/16/32) divide 64, so limbs never straddle lanes.
+#[inline]
+const fn swar_masks(w: u32) -> (u64, u64) {
+    match w {
+        8 => (0x8080_8080_8080_8080, 0x0101_0101_0101_0101),
+        16 => (0x8000_8000_8000_8000, 0x0001_0001_0001_0001),
+        32 => (0x8000_0000_8000_0000, 0x0000_0001_0000_0001),
+        _ => panic!("unsupported lane width"),
+    }
+}
+
+/// Lane-partitioned add: each `ext_bits`-wide lane wraps independently
+/// (carry is killed at lane boundaries).
+///
+/// §Perf iteration 2: SWAR formulation — three limb operations replace
+/// the per-lane extract/insert loop. Field-wise add without cross-field
+/// carry: drop the MSBs, add (carries then cannot escape a field), and
+/// restore the MSB as `a ^ b ^ carry`. Proven equivalent to the
+/// gate-level full-adder chain in `fast_path_equals_fa_chain`.
+pub fn add_lanes(a: &Row160, b: &Row160, p: Precision, carry_in: bool) -> Row160 {
+    let (h, l) = swar_masks(p.ext_bits());
+    let cin = if carry_in { l } else { 0 };
+    let mut out = Row160::ZERO;
+    for i in 0..3 {
+        let (x, y) = (a.0[i], b.0[i]);
+        let t = (x & !h).wrapping_add(y & !h).wrapping_add(cin);
+        out.0[i] = t ^ ((x ^ y) & h);
+    }
+    out.normalize()
+}
+
+/// Gate-level reference: 160 one-bit full adders; the carry into bit `k`
+/// is killed when `k` is a lane boundary (the precision-configuration of
+/// Fig 3c), where it is replaced by `carry_in` (the "+1" of the binary
+/// subtraction in Algorithm 1 line 5, applied per lane).
+pub fn add_fa_chain(a: &Row160, b: &Row160, p: Precision, carry_in: bool) -> Row160 {
+    let w = p.ext_bits() as usize;
+    let mut out = Row160::ZERO;
+    let mut carry = false;
+    for k in 0..ROW_BITS {
+        if k % w == 0 {
+            carry = carry_in; // lane boundary: kill ripple, inject cin
+        }
+        let (x, y) = (a.get_bit(k), b.get_bit(k));
+        out.set_bit(k, x ^ y ^ carry);
+        carry = (x & y) | (carry & (x ^ y));
+    }
+    out
+}
+
+/// 1-bit shift-left within each lane (write-back mux M1 selecting
+/// `S_Right`); the lane MSB falls off, a zero enters the LSB.
+/// SWAR: shift the whole limb and clear every lane's LSB position —
+/// which simultaneously zeroes the incoming bit that crossed a lane
+/// boundary and the vacated LSB.
+pub fn shift_left_lanes(a: &Row160, p: Precision) -> Row160 {
+    let (_, l) = swar_masks(p.ext_bits());
+    Row160([
+        (a.0[0] << 1) & !l,
+        (a.0[1] << 1) & !l,
+        (a.0[2] << 1) & !l,
+    ])
+    .normalize()
+}
+
+/// Bitwise inversion (write-back mux M2 selecting `B-bar`).
+pub fn invert(a: &Row160) -> Row160 {
+    Row160([!a.0[0], !a.0[1], !a.0[2]]).normalize()
+}
+
+/// What the write drivers commit at the end of a compute cycle.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum WriteBack {
+    /// Sum as-is.
+    Sum,
+    /// Sum shifted left by one within each lane (`S_Right`).
+    SumShifted,
+    /// `B-bar` — bitwise inversion of operand B (Inverter row prep).
+    InvertB,
+    /// All-zero (initialize P or the Accumulator).
+    Zero,
+}
+
+/// One adder pass: read A and B, produce the selected write-back value.
+pub fn adder_pass(a: &Row160, b: &Row160, p: Precision, cin: bool, wb: WriteBack) -> Row160 {
+    match wb {
+        WriteBack::Sum => add_lanes(a, b, p, cin),
+        WriteBack::SumShifted => shift_left_lanes(&add_lanes(a, b, p, cin), p),
+        WriteBack::InvertB => invert(b),
+        WriteBack::Zero => Row160::ZERO,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+
+    fn random_row(rng: &mut Rng) -> Row160 {
+        Row160([rng.next_u64(), rng.next_u64(), rng.next_u64() & 0xFFFF_FFFF])
+    }
+
+    #[test]
+    fn fast_path_equals_fa_chain() {
+        let mut rng = Rng::seed_from_u64(42);
+        for p in Precision::ALL {
+            for _ in 0..500 {
+                let a = random_row(&mut rng);
+                let b = random_row(&mut rng);
+                for cin in [false, true] {
+                    assert_eq!(
+                        add_lanes(&a, &b, p, cin),
+                        add_fa_chain(&a, &b, p, cin),
+                        "p={p} cin={cin}"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn lanes_are_independent() {
+        // All-ones + 1 in lane 0 must not carry into lane 1.
+        let p = Precision::Int2; // 8-bit lanes
+        let mut a = Row160::ZERO;
+        a.set_lane(0, 8, 0xFF);
+        let mut b = Row160::ZERO;
+        b.set_lane(0, 8, 0x01);
+        let s = add_lanes(&a, &b, p, false);
+        assert_eq!(s.lane(0, 8), 0x00);
+        assert_eq!(s.lane(1, 8), 0x00);
+    }
+
+    #[test]
+    fn subtraction_via_invert_plus_one() {
+        // P - X == P + !X + 1 per lane (2's complement) — the hardware's
+        // Inverter-row trick (Algorithm 1 line 5).
+        let mut rng = Rng::seed_from_u64(43);
+        for p in Precision::ALL {
+            let w = p.ext_bits();
+            for _ in 0..200 {
+                let mut pr = Row160::ZERO;
+                let mut xr = Row160::ZERO;
+                let mut want = Vec::new();
+                for lane in 0..p.lanes_per_word() {
+                    let pv = rng.gen_range_i64(-(1i64 << (w - 2)), (1i64 << (w - 2)) - 1);
+                    let xv = rng.gen_range_i64(-(1i64 << (w - 2)), (1i64 << (w - 2)) - 1);
+                    pr.set_lane_signed(lane, w, pv);
+                    xr.set_lane_signed(lane, w, xv);
+                    want.push(pv - xv);
+                }
+                let got = add_lanes(&pr, &invert(&xr), p, true);
+                for lane in 0..p.lanes_per_word() {
+                    assert_eq!(got.lane_signed(lane, w), want[lane]);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn shift_left_drops_msb() {
+        let p = Precision::Int4; // 16-bit lanes
+        let mut a = Row160::ZERO;
+        a.set_lane(0, 16, 0x8001);
+        let s = shift_left_lanes(&a, p);
+        assert_eq!(s.lane(0, 16), 0x0002);
+        assert_eq!(s.lane(1, 16), 0x0000);
+    }
+
+    #[test]
+    fn writeback_zero_initializes() {
+        let mut rng = Rng::seed_from_u64(44);
+        let a = random_row(&mut rng);
+        let b = random_row(&mut rng);
+        assert_eq!(
+            adder_pass(&a, &b, Precision::Int8, false, WriteBack::Zero),
+            Row160::ZERO
+        );
+    }
+}

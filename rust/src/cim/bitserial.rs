@@ -1,0 +1,79 @@
+//! Shared bit-serial arithmetic cycle model for CCB / CoMeFa.
+//!
+//! Table II reports the end-to-end MAC latency of both architectures as
+//! 16 / 42 / 113 cycles for 2/4/8-bit unsigned MACs with 8/16/27-bit
+//! accumulators. These decompose as
+//!
+//! ```text
+//! multiply:    n² + 3n − 2   cycles   (shift-and-add over bit planes)
+//! accumulate:  w(n)          cycles   (bit-serial add into the w-bit acc)
+//! ```
+//!
+//! which reproduces the table exactly: 8+8=16, 26+16=42, 86+27=113.
+//! The formulas are the standard in-memory bit-serial costs (one cycle
+//! per processed bit pair plus carry bookkeeping, cf. CCB §IV / CoMeFa
+//! §V); the `−2` constant is the LSB/MSB boundary saving.
+
+/// Bit-serial multiply latency for n-bit × n-bit (unsigned).
+pub fn mult_latency_cycles(n: u32) -> u64 {
+    debug_assert!((2..=8).contains(&n));
+    (n as u64) * (n as u64) + 3 * n as u64 - 2
+}
+
+/// Accumulator width used by the BRAM bit-serial architectures
+/// (Table II footnote: 8/16/27 for 2/4/8-bit). Odd precisions
+/// interpolate linearly — they're supported natively ("Arbitrary"
+/// precision row of Table II).
+pub fn acc_bits_interp(n: u32) -> u64 {
+    debug_assert!((2..=8).contains(&n));
+    match n {
+        2 => 8,
+        3 => 12,
+        4 => 16,
+        5 => 19,
+        6 => 22,
+        7 => 25,
+        8 => 27,
+        _ => unreachable!(),
+    }
+}
+
+/// Full MAC latency: multiply + bit-serial accumulate (Table II row).
+pub fn mac_latency_cycles(n: u32) -> u64 {
+    mult_latency_cycles(n) + acc_bits_interp(n)
+}
+
+/// Bit-serial addition of two w-bit values in a column (used for
+/// in-memory reductions): one cycle per bit plus carry init.
+pub fn add_latency_cycles(w: u64) -> u64 {
+    w + 1
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table2_mac_latencies() {
+        assert_eq!(mac_latency_cycles(2), 16);
+        assert_eq!(mac_latency_cycles(4), 42);
+        assert_eq!(mac_latency_cycles(8), 113);
+    }
+
+    #[test]
+    fn multiply_component() {
+        assert_eq!(mult_latency_cycles(2), 8);
+        assert_eq!(mult_latency_cycles(4), 26);
+        assert_eq!(mult_latency_cycles(8), 86);
+    }
+
+    #[test]
+    fn latency_monotone_in_precision() {
+        let mut last = 0;
+        for n in 2..=8 {
+            let l = mac_latency_cycles(n);
+            assert!(l > last);
+            last = l;
+        }
+    }
+}

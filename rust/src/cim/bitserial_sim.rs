@@ -1,0 +1,336 @@
+//! Functional bit-serial CIM simulator — the CCB/CoMeFa compute
+//! substrate, implemented at the bit level (not just the cycle
+//! formulas of [`super::bitserial`]).
+//!
+//! Both baselines compute on the main 128×160 array in **transposed**
+//! layout: an operand occupies one column across several rows, and all
+//! 160 columns step through the same bit-serial micro-program in
+//! lockstep (one row-pair read + one row write per cycle — CCB via
+//! dual wordlines, CoMeFa via the two ports).
+//!
+//! The simulator implements the classic in-array shift-and-add
+//! multiplier: for every bit `j` of the (shared or per-column) input,
+//! conditionally add the weight into the running product at offset `j`
+//! — one array cycle per (weight-bit, input-bit) pair plus carry
+//! bookkeeping, which is what makes bit-serial CIM slow at higher
+//! precision and motivates BRAMAC's hybrid dataflow (§II-C).
+//!
+//! Numerics are exact (verified against i64 references); cycle counts
+//! are charged from the calibrated Table II formula, and a test checks
+//! the micro-program's intrinsic op count stays within it.
+
+use super::bitserial::{acc_bits_interp, mac_latency_cycles};
+use super::{CIM_LANES, CIM_ROWS};
+
+/// The transposed compute array: `rows × 160` bits, column-major
+/// semantics (each column is an independent bit-serial lane).
+#[derive(Debug, Clone)]
+pub struct BitSerialArray {
+    /// `bits[r][c]` = bit r of column c's storage.
+    bits: Vec<[bool; CIM_LANES]>,
+    /// Array cycles consumed (each simulated row op = 1 cycle).
+    pub cycles: u64,
+}
+
+/// Row-region layout for one MAC round at precision `n`:
+/// weight (n rows) · input copy (n rows, CCB only) · product (2n rows)
+/// · accumulator (w rows).
+#[derive(Debug, Clone, Copy)]
+pub struct Layout {
+    pub n: u32,
+    pub weight0: usize,
+    pub input0: Option<usize>,
+    pub product0: usize,
+    pub acc0: usize,
+    pub acc_bits: usize,
+}
+
+impl Layout {
+    /// CoMeFa-style: the input is streamed from outside (one-operand-
+    /// outside-RAM), no stored copy.
+    pub fn streamed(n: u32) -> Layout {
+        let w = acc_bits_interp(n) as usize;
+        let weight0 = 0;
+        let product0 = n as usize;
+        let acc0 = product0 + 2 * n as usize;
+        assert!(acc0 + w <= CIM_ROWS, "layout exceeds 128 rows");
+        Layout { n, weight0, input0: None, product0, acc0, acc_bits: w }
+    }
+
+    /// CCB-style: an input copy lives in the column.
+    pub fn stored_input(n: u32) -> Layout {
+        let w = acc_bits_interp(n) as usize;
+        let weight0 = 0;
+        let input0 = n as usize;
+        let product0 = input0 + n as usize;
+        let acc0 = product0 + 2 * n as usize;
+        assert!(acc0 + w <= CIM_ROWS, "layout exceeds 128 rows");
+        Layout { n, weight0, input0: Some(input0), product0, acc0, acc_bits: w }
+    }
+}
+
+impl Default for BitSerialArray {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl BitSerialArray {
+    pub fn new() -> Self {
+        BitSerialArray {
+            bits: vec![[false; CIM_LANES]; CIM_ROWS],
+            cycles: 0,
+        }
+    }
+
+    /// Write one full row (a 160-bit broadcast write) — 1 cycle.
+    pub fn write_row(&mut self, row: usize, value: [bool; CIM_LANES]) {
+        self.bits[row] = value;
+        self.cycles += 1;
+    }
+
+    /// Store an unsigned value bit-serially into a column region
+    /// (used by tests / loaders; charged 1 cycle per row touched).
+    pub fn store_unsigned(&mut self, col: usize, row0: usize, nbits: usize, v: u64) {
+        for i in 0..nbits {
+            self.bits[row0 + i][col] = (v >> i) & 1 == 1;
+            self.cycles += 1;
+        }
+    }
+
+    pub fn load_unsigned(&self, col: usize, row0: usize, nbits: usize) -> u64 {
+        let mut v = 0u64;
+        for i in 0..nbits {
+            if self.bits[row0 + i][col] {
+                v |= 1 << i;
+            }
+        }
+        v
+    }
+
+    /// One array micro-op across all 160 columns: full-adder of rows
+    /// `a`, `b` with the per-column carry latch, result into `dst`.
+    /// This is the CoMeFa processing-element operation (two reads via
+    /// the two ports, one write-back) — 1 cycle.
+    fn fa_row(&mut self, a: usize, b: usize, dst: usize, carry: &mut [bool; CIM_LANES]) {
+        for c in 0..CIM_LANES {
+            let (x, y, ci) = (self.bits[a][c], self.bits[b][c], carry[c]);
+            let s = x ^ y ^ ci;
+            carry[c] = (x & y) | (ci & (x ^ y));
+            self.bits[dst][c] = s;
+        }
+        self.cycles += 1;
+    }
+
+    /// Bit-serial unsigned multiply of every column's weight by that
+    /// column's input bits, accumulating into the product region:
+    /// `product[c] = weight[c] * input[c]` with `input` given per
+    /// column (stored copy) or broadcast (streamed).
+    ///
+    /// Micro-program: for each input bit j (LSB first), predicated-add
+    /// the weight into product rows [j .. j+n] — `n` fa cycles per input
+    /// bit plus one carry-flush cycle, ≈ n² + n ops, within the
+    /// calibrated `n² + 3n − 2` budget of Table II.
+    pub fn multiply(&mut self, layout: &Layout, streamed_input: Option<u64>) {
+        let n = layout.n as usize;
+        for j in 0..n {
+            // Predicate = input bit j per column.
+            let mut pred = [false; CIM_LANES];
+            for (c, p) in pred.iter_mut().enumerate() {
+                *p = match (streamed_input, layout.input0) {
+                    (Some(iv), _) => (iv >> j) & 1 == 1,
+                    (None, Some(i0)) => self.bits[i0 + j][c],
+                    (None, None) => false,
+                };
+            }
+            if j == 0 {
+                // First input bit *initializes* the product: write the
+                // masked weight into rows [0, n) and clear rows [n, 2n)
+                // — a write per row, no adds (saves the reset pass; this
+                // keeps the micro-program within the n²+3n−2 budget).
+                for i in 0..n {
+                    let src = layout.weight0 + i;
+                    let mut masked = [false; CIM_LANES];
+                    for c in 0..CIM_LANES {
+                        masked[c] = self.bits[src][c] & pred[c];
+                    }
+                    self.write_row(layout.product0 + i, masked);
+                }
+                for r in n..2 * n {
+                    self.write_row(layout.product0 + r, [false; CIM_LANES]);
+                }
+                continue;
+            }
+            let mut carry = [false; CIM_LANES];
+            for i in 0..n {
+                // product[j+i] += weight[i] & pred, rippling the carry.
+                let src = layout.weight0 + i;
+                let dst = layout.product0 + j + i;
+                let mut masked = [false; CIM_LANES];
+                for c in 0..CIM_LANES {
+                    masked[c] = self.bits[src][c] & pred[c];
+                }
+                // inline predicated FA against dst
+                for c in 0..CIM_LANES {
+                    let (x, y, ci) = (masked[c], self.bits[dst][c], carry[c]);
+                    self.bits[dst][c] = x ^ y ^ ci;
+                    carry[c] = (x & y) | (ci & (x ^ y));
+                }
+                self.cycles += 1;
+            }
+            // Carry flush into product[j+n].
+            let dst = layout.product0 + j + n;
+            for c in 0..CIM_LANES {
+                let y = self.bits[dst][c];
+                self.bits[dst][c] = y ^ carry[c];
+                carry[c] &= y;
+            }
+            self.cycles += 1;
+        }
+    }
+
+    /// Bit-serial accumulate: acc += product (w-cycle ripple add).
+    pub fn accumulate(&mut self, layout: &Layout) {
+        let mut carry = [false; CIM_LANES];
+        for i in 0..layout.acc_bits {
+            let a = layout.acc0 + i;
+            // product is 2n wide; above that, add zero (carry ripple).
+            if i < 2 * layout.n as usize {
+                let b = layout.product0 + i;
+                self.fa_row(a, b, a, &mut carry);
+            } else {
+                for c in 0..CIM_LANES {
+                    let y = self.bits[a][c];
+                    self.bits[a][c] = y ^ carry[c];
+                    carry[c] &= y;
+                }
+                self.cycles += 1;
+            }
+        }
+    }
+
+    /// One full MAC across all columns; returns cycles charged from the
+    /// calibrated model (the micro-program's intrinsic count is checked
+    /// against it in tests).
+    pub fn mac(&mut self, layout: &Layout, streamed_input: Option<u64>) -> u64 {
+        self.multiply(layout, streamed_input);
+        self.accumulate(layout);
+        mac_latency_cycles(layout.n)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+    use super::super::bitserial::mult_latency_cycles;
+
+    fn umax(n: u32) -> u64 {
+        (1 << n) - 1
+    }
+
+    #[test]
+    fn multiply_exact_all_columns_streamed() {
+        let mut rng = Rng::seed_from_u64(0xB175);
+        for n in [2u32, 4, 8] {
+            let layout = Layout::streamed(n);
+            let mut arr = BitSerialArray::new();
+            let ws: Vec<u64> = (0..CIM_LANES)
+                .map(|c| {
+                    let w = rng.gen_range_i64(0, umax(n) as i64) as u64;
+                    arr.store_unsigned(c, layout.weight0, n as usize, w);
+                    w
+                })
+                .collect();
+            let iv = rng.gen_range_i64(0, umax(n) as i64) as u64;
+            arr.multiply(&layout, Some(iv));
+            for (c, &w) in ws.iter().enumerate() {
+                assert_eq!(
+                    arr.load_unsigned(c, layout.product0, 2 * n as usize),
+                    w * iv,
+                    "n={n} col={c}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn multiply_exact_stored_input_per_column() {
+        let mut rng = Rng::seed_from_u64(0xCC8);
+        let n = 4u32;
+        let layout = Layout::stored_input(n);
+        let mut arr = BitSerialArray::new();
+        let mut expect = Vec::new();
+        for c in 0..CIM_LANES {
+            let w = rng.gen_range_i64(0, 15) as u64;
+            let i = rng.gen_range_i64(0, 15) as u64;
+            arr.store_unsigned(c, layout.weight0, 4, w);
+            arr.store_unsigned(c, layout.input0.unwrap(), 4, i);
+            expect.push(w * i);
+        }
+        arr.multiply(&layout, None);
+        for (c, &e) in expect.iter().enumerate() {
+            assert_eq!(arr.load_unsigned(c, layout.product0, 8), e, "col {c}");
+        }
+    }
+
+    #[test]
+    fn dot_product_via_sequential_macs() {
+        // A full bit-serial dot product: k MACs accumulating per column.
+        let mut rng = Rng::seed_from_u64(0xD07);
+        let n = 4u32;
+        let layout = Layout::streamed(n);
+        let mut arr = BitSerialArray::new();
+        let k = 10;
+        let mut expect = vec![0u64; CIM_LANES];
+        for _ in 0..k {
+            let iv = rng.gen_range_i64(0, 15) as u64;
+            for c in 0..CIM_LANES {
+                let w = rng.gen_range_i64(0, 15) as u64;
+                arr.store_unsigned(c, layout.weight0, 4, w);
+                expect[c] += w * iv;
+            }
+            arr.mac(&layout, Some(iv));
+        }
+        for (c, &e) in expect.iter().enumerate() {
+            assert_eq!(
+                arr.load_unsigned(c, layout.acc0, layout.acc_bits),
+                e,
+                "col {c}"
+            );
+        }
+    }
+
+    #[test]
+    fn microprogram_cost_within_calibrated_latency() {
+        // The simulated micro-op count must not exceed the Table II
+        // budget the analytical models charge (the real hardware adds
+        // instruction-fetch overhead we do not simulate).
+        for n in [2u32, 4, 8] {
+            let layout = Layout::streamed(n);
+            let mut arr = BitSerialArray::new();
+            let before = arr.cycles;
+            arr.multiply(&layout, Some(umax(n)));
+            let mult_ops = arr.cycles - before;
+            assert!(
+                mult_ops <= mult_latency_cycles(n),
+                "n={n}: {mult_ops} > {}",
+                mult_latency_cycles(n)
+            );
+            let before = arr.cycles;
+            arr.accumulate(&layout);
+            let acc_ops = arr.cycles - before;
+            assert!(acc_ops <= acc_bits_interp(n) + 1, "n={n}: acc {acc_ops}");
+        }
+    }
+
+    #[test]
+    fn layouts_fit_128_rows() {
+        for n in 2..=8u32 {
+            let s = Layout::streamed(n);
+            assert!(s.acc0 + s.acc_bits <= CIM_ROWS);
+            let c = Layout::stored_input(n);
+            assert!(c.acc0 + c.acc_bits <= CIM_ROWS);
+        }
+    }
+}

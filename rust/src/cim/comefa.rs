@@ -1,0 +1,108 @@
+//! CoMeFa: Compute-in-Memory Blocks for FPGAs (Arora et al., FCCM'22).
+//!
+//! Bit-serial CIM using the BRAM's dual-port nature (no read-disturb
+//! issue). Two published variants trade area for speed:
+//! * **CoMeFa-D** (delay-optimized): +25.4% block area, 1.25x slower clock;
+//! * **CoMeFa-A** (area-optimized): +8.1% block area, 2.5x slower clock
+//!   (sense-amplifier cycling — "Medium" design complexity).
+//!
+//! CoMeFa's one-operand-outside-RAM mode streams the input vector instead
+//! of storing a copy (§VI-B), which is why its storage efficiency beats
+//! CCB in Fig 10.
+
+use crate::arch::FreqModel;
+
+use super::bitserial::acc_bits_interp;
+use super::CIM_ROWS;
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ComefaVariant {
+    D,
+    A,
+}
+
+#[derive(Debug, Clone, Copy)]
+pub struct Comefa {
+    pub variant: ComefaVariant,
+}
+
+impl Comefa {
+    pub fn d() -> Self {
+        Comefa { variant: ComefaVariant::D }
+    }
+    pub fn a() -> Self {
+        Comefa { variant: ComefaVariant::A }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self.variant {
+            ComefaVariant::D => "CoMeFa-D",
+            ComefaVariant::A => "CoMeFa-A",
+        }
+    }
+
+    /// Table II block area overheads.
+    pub fn block_area_overhead(&self) -> f64 {
+        match self.variant {
+            ComefaVariant::D => 0.254,
+            ComefaVariant::A => 0.081,
+        }
+    }
+
+    /// Table II core area overheads.
+    pub fn core_area_overhead(&self) -> f64 {
+        match self.variant {
+            ComefaVariant::D => 0.051,
+            ComefaVariant::A => 0.016,
+        }
+    }
+
+    pub fn fmax_mhz(&self, f: &FreqModel) -> f64 {
+        match self.variant {
+            ComefaVariant::D => f.comefa_d_mhz(),
+            ComefaVariant::A => f.comefa_a_mhz(),
+        }
+    }
+
+    /// Per-column row overhead: 2n product rows + w-bit accumulator
+    /// (inputs are streamed, not stored).
+    pub fn overhead_rows(n: u32) -> u64 {
+        2 * n as u64 + acc_bits_interp(n)
+    }
+
+    /// Fig 10 storage efficiency.
+    pub fn storage_efficiency(n: u32) -> f64 {
+        let overhead = Self::overhead_rows(n).min(CIM_ROWS as u64);
+        (CIM_ROWS as u64 - overhead) as f64 / CIM_ROWS as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn beats_ccb_on_storage() {
+        use super::super::ccb::Ccb;
+        for n in 2..=8 {
+            assert!(
+                Comefa::storage_efficiency(n) > Ccb::pack2().storage_efficiency(n),
+                "one-operand-outside must beat stored-copy at n={n}"
+            );
+        }
+    }
+
+    #[test]
+    fn average_efficiency_near_paper() {
+        // BRAMAC avg (6/7 ≈ 0.857) is 1.1x CoMeFa's → CoMeFa ≈ 0.78.
+        let avg: f64 = (2..=8).map(Comefa::storage_efficiency).sum::<f64>() / 7.0;
+        assert!((avg - 0.78).abs() < 0.01, "CoMeFa avg {avg}");
+    }
+
+    #[test]
+    fn variant_facts() {
+        let f = FreqModel::default();
+        assert!(Comefa::d().fmax_mhz(&f) > Comefa::a().fmax_mhz(&f));
+        assert!(Comefa::d().block_area_overhead() > Comefa::a().block_area_overhead());
+    }
+}

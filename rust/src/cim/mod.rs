@@ -1,0 +1,25 @@
+//! The prior compute-in-BRAM baselines: CCB [17] and CoMeFa [18].
+//!
+//! Both use fully bit-serial arithmetic over a **transposed** data layout
+//! (each operand occupies one column across rows), compute directly on
+//! the main 128×160 array, and receive CIM instructions through a BRAM
+//! write port — which keeps the ports busy during compute and limits
+//! them to persistent-style inference (§II-C). BRAMAC's contrast points
+//! (free ports, no transpose, 2's-complement support) are what the GEMV
+//! study (Fig 11) quantifies.
+
+mod bitserial;
+pub mod bitserial_sim;
+pub mod ccb;
+pub mod comefa;
+
+pub use bitserial::{acc_bits_interp, add_latency_cycles, mac_latency_cycles, mult_latency_cycles};
+pub use bitserial_sim::{BitSerialArray, Layout};
+pub use ccb::Ccb;
+pub use comefa::{Comefa, ComefaVariant};
+
+/// Columns of the M20K array = bit-serial compute lanes (Table II:
+/// "# of MACs in Parallel = 160").
+pub const CIM_LANES: usize = 160;
+/// Physical rows available per column for operands + temporaries.
+pub const CIM_ROWS: usize = 128;

@@ -1,0 +1,118 @@
+//! Dynamic request batcher: groups incoming requests into fixed-size
+//! batches (the AOT model artifact has a static batch dimension) within
+//! a bounded wait window — the standard serving trade-off between
+//! latency and utilization.
+
+use std::sync::mpsc::{channel, Receiver, RecvTimeoutError, Sender};
+use std::time::{Duration, Instant};
+
+/// One queued request: payload + reply channel.
+pub struct Request<T, R> {
+    pub payload: T,
+    pub reply: Sender<R>,
+}
+
+/// Collects requests into batches of exactly `batch_size` (padding is
+/// the consumer's job) or whatever arrived within `max_wait`.
+pub struct Batcher<T, R> {
+    rx: Receiver<Request<T, R>>,
+    pub batch_size: usize,
+    pub max_wait: Duration,
+}
+
+impl<T, R> Batcher<T, R> {
+    /// Create a batcher; returns the submission side as a clonable
+    /// `Sender`.
+    pub fn new(batch_size: usize, max_wait: Duration) -> (Sender<Request<T, R>>, Self) {
+        assert!(batch_size > 0);
+        let (tx, rx) = channel();
+        (tx, Batcher { rx, batch_size, max_wait })
+    }
+
+    /// Block until a batch forms (or the window closes with ≥1 request).
+    /// Returns `None` when all senders disconnected and the queue
+    /// drained — the shutdown signal.
+    pub fn next_batch(&self) -> Option<Vec<Request<T, R>>> {
+        let first = match self.rx.recv() {
+            Ok(r) => r,
+            Err(_) => return None,
+        };
+        let mut batch = vec![first];
+        let deadline = Instant::now() + self.max_wait;
+        while batch.len() < self.batch_size {
+            let now = Instant::now();
+            if now >= deadline {
+                break;
+            }
+            match self.rx.recv_timeout(deadline - now) {
+                Ok(r) => batch.push(r),
+                Err(RecvTimeoutError::Timeout) => break,
+                Err(RecvTimeoutError::Disconnected) => break,
+            }
+        }
+        Some(batch)
+    }
+}
+
+/// Submit a payload and wait for the reply (client-side helper).
+pub fn submit_and_wait<T, R>(tx: &Sender<Request<T, R>>, payload: T) -> Option<R> {
+    let (reply_tx, reply_rx) = channel();
+    tx.send(Request { payload, reply: reply_tx }).ok()?;
+    reply_rx.recv().ok()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::thread;
+
+    #[test]
+    fn batches_fill_to_size() {
+        let (tx, batcher) = Batcher::<u32, u32>::new(4, Duration::from_millis(200));
+        let worker = thread::spawn(move || {
+            let mut sizes = Vec::new();
+            while let Some(batch) = batcher.next_batch() {
+                sizes.push(batch.len());
+                for r in batch {
+                    let _ = r.reply.send(r.payload * 2);
+                }
+            }
+            sizes
+        });
+        let mut replies = Vec::new();
+        let mut handles = Vec::new();
+        for i in 0..8u32 {
+            let tx = tx.clone();
+            handles.push(thread::spawn(move || submit_and_wait(&tx, i).unwrap()));
+        }
+        for h in handles {
+            replies.push(h.join().unwrap());
+        }
+        drop(tx);
+        let sizes = worker.join().unwrap();
+        assert_eq!(sizes.iter().sum::<usize>(), 8);
+        assert!(sizes.iter().all(|&s| s <= 4));
+        replies.sort_unstable();
+        assert_eq!(replies, vec![0, 2, 4, 6, 8, 10, 12, 14]);
+    }
+
+    #[test]
+    fn window_closes_with_partial_batch() {
+        let (tx, batcher) = Batcher::<u32, u32>::new(64, Duration::from_millis(30));
+        let t0 = Instant::now();
+        let worker = thread::spawn(move || batcher.next_batch().map(|b| b.len()));
+        thread::sleep(Duration::from_millis(5));
+        let (rtx, _rrx) = channel();
+        tx.send(Request { payload: 1, reply: rtx }).unwrap();
+        let got = worker.join().unwrap();
+        assert_eq!(got, Some(1));
+        assert!(t0.elapsed() < Duration::from_millis(500));
+    }
+
+    #[test]
+    fn shutdown_on_disconnect() {
+        let (tx, batcher) = Batcher::<u32, u32>::new(4, Duration::from_millis(10));
+        drop(tx);
+        assert!(batcher.next_batch().is_none());
+    }
+}

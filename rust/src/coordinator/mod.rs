@@ -1,0 +1,14 @@
+//! L3 coordinator: tiling-based inference orchestration on a pool of
+//! simulated BRAMAC blocks, with the double-buffered weight streaming
+//! that the eFSM's port-freeing enables (§IV-C), a dynamic batcher and
+//! an async inference server running real numerics through PJRT.
+
+pub mod batcher;
+pub mod scheduler;
+pub mod server;
+pub mod tiler;
+
+pub use batcher::Batcher;
+pub use scheduler::{BlockPool, ScheduleStats};
+pub use server::{InferenceServer, ServerStats};
+pub use tiler::{plan_gemv, Tile, TilePlan};

@@ -1,0 +1,368 @@
+//! Tile scheduler: execute a GEMV tile plan on a pool of bit-accurate
+//! BRAMAC blocks with double-buffered weight streaming.
+//!
+//! Numerics run through the bit-level dummy-array engines (so the result
+//! is exact, and cross-checked against the reference in tests); timing
+//! follows the block cycle model plus the §IV-C port-overlap rule: a
+//! tile's weights stream into the idle buffer half while the previous
+//! tile computes, so a block only stalls for loads that exceed its free
+//! port budget.
+
+use crate::arch::Precision;
+use crate::bramac::block::StreamStats;
+use crate::bramac::signext::pack_word;
+use crate::bramac::{BramacBlock, Variant};
+use crate::quant::IntMatrix;
+
+use super::tiler::{plan_gemv, Tile, TilePlan};
+
+/// Aggregate schedule statistics.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct ScheduleStats {
+    pub tiles: usize,
+    pub mac2s: u64,
+    /// Makespan in main-clock cycles (max over blocks).
+    pub makespan_cycles: u64,
+    /// Sum of per-block cycles (work metric).
+    pub total_block_cycles: u64,
+    /// Load cycles that could not hide behind compute.
+    pub exposed_load_cycles: u64,
+}
+
+/// A pool of BRAMAC blocks executing tile plans.
+pub struct BlockPool {
+    pub variant: Variant,
+    blocks: Vec<BramacBlock>,
+}
+
+impl BlockPool {
+    pub fn new(variant: Variant, count: usize, precision: Precision) -> Self {
+        assert!(count > 0);
+        BlockPool {
+            variant,
+            blocks: (0..count).map(|_| BramacBlock::new(variant, precision)).collect(),
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.blocks.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.blocks.is_empty()
+    }
+
+    /// Execute `y = W · x` over the pool. Tiles are assigned round-robin;
+    /// each block's cycle cost is `max(compute, exposed loads)` per tile
+    /// under double buffering. Returns the exact result and stats.
+    pub fn run_gemv(&mut self, w: &IntMatrix, x: &[i64]) -> (Vec<i64>, ScheduleStats) {
+        assert_eq!(x.len(), w.cols);
+        let p = w.precision;
+        for b in &mut self.blocks {
+            if b.precision() != p {
+                b.set_precision(p);
+            }
+        }
+        let plan = plan_gemv(w.rows, w.cols, p, true);
+        let mut y = vec![0i64; w.rows];
+        let nblocks = self.blocks.len();
+        let mut per_block_cycles = vec![0u64; nblocks];
+        let mut exposed = 0u64;
+        let mut mac2s = 0u64;
+
+        for (ti, tile) in plan.tiles.iter().enumerate() {
+            let bi = ti % nblocks;
+            let block = &mut self.blocks[bi];
+            let before: StreamStats = block.stats();
+
+            let out = run_tile_on_block(block, w, x, tile, &plan);
+            for (k, v) in out.iter().enumerate() {
+                y[tile.row0 + k] += v;
+            }
+
+            let after = block.stats();
+            let compute = after.main_cycles - before.main_cycles;
+            let busy = after.main_busy_cycles - before.main_busy_cycles;
+            mac2s += after.mac2_count - before.mac2_count;
+
+            // Load of this tile overlaps the block's previous compute:
+            // only the part that doesn't fit in the free port budget of
+            // *this* tile's compute window is exposed (steady state).
+            let load = tile.words() as u64;
+            let free = compute.saturating_sub(busy);
+            let tile_exposed = load.saturating_sub(free);
+            exposed += tile_exposed;
+            per_block_cycles[bi] += compute + tile_exposed;
+        }
+
+        let stats = ScheduleStats {
+            tiles: plan.tiles.len(),
+            mac2s,
+            makespan_cycles: per_block_cycles.iter().copied().max().unwrap_or(0),
+            total_block_cycles: per_block_cycles.iter().sum(),
+            exposed_load_cycles: exposed,
+        };
+        (y, stats)
+    }
+}
+
+impl BlockPool {
+    /// Batch-2 MVM on BRAMAC-2SA: the two synchronous dummy arrays copy
+    /// the same weights but process **different input vectors** (the
+    /// input-sharing of §IV-A) — `Y = W · [x0 x1]` in one pass, doubling
+    /// MAC throughput at the same weight-copy cost.
+    ///
+    /// Panics unless the pool's variant is [`Variant::TwoSA`].
+    pub fn run_mvm_batch2(
+        &mut self,
+        w: &IntMatrix,
+        x0: &[i64],
+        x1: &[i64],
+    ) -> ([Vec<i64>; 2], ScheduleStats) {
+        assert_eq!(self.variant, Variant::TwoSA, "batch-2 needs two dummy arrays");
+        assert_eq!(x0.len(), w.cols);
+        assert_eq!(x1.len(), w.cols);
+        let p = w.precision;
+        for b in &mut self.blocks {
+            if b.precision() != p {
+                b.set_precision(p);
+            }
+        }
+        let plan = plan_gemv(w.rows, w.cols, p, true);
+        let mut y = [vec![0i64; w.rows], vec![0i64; w.rows]];
+        let nblocks = self.blocks.len();
+        let mut per_block_cycles = vec![0u64; nblocks];
+        let mut mac2s = 0u64;
+        let mut exposed = 0u64;
+        for (ti, tile) in plan.tiles.iter().enumerate() {
+            let bi = ti % nblocks;
+            let block = &mut self.blocks[bi];
+            let before = block.stats();
+            let outs = run_tile_batch2(block, w, x0, x1, tile, &plan);
+            for v in 0..2 {
+                for (k, val) in outs[v].iter().enumerate() {
+                    y[v][tile.row0 + k] += val;
+                }
+            }
+            let after = block.stats();
+            let compute = after.main_cycles - before.main_cycles;
+            let busy = after.main_busy_cycles - before.main_busy_cycles;
+            mac2s += after.mac2_count - before.mac2_count;
+            let load = tile.words() as u64;
+            let tile_exposed = load.saturating_sub(compute.saturating_sub(busy));
+            exposed += tile_exposed;
+            per_block_cycles[bi] += compute + tile_exposed;
+        }
+        let stats = ScheduleStats {
+            tiles: plan.tiles.len(),
+            mac2s,
+            makespan_cycles: per_block_cycles.iter().copied().max().unwrap_or(0),
+            total_block_cycles: per_block_cycles.iter().sum(),
+            exposed_load_cycles: exposed,
+        };
+        (y, stats)
+    }
+}
+
+/// Batch-2 tile: both arrays share the weight copy, each consumes its
+/// own input vector.
+fn run_tile_batch2(
+    block: &mut BramacBlock,
+    w: &IntMatrix,
+    x0: &[i64],
+    x1: &[i64],
+    tile: &Tile,
+    plan: &TilePlan,
+) -> [Vec<i64>; 2] {
+    let p = plan.precision;
+    for j in 0..tile.cols {
+        let col = tile.col0 + j;
+        let elems: Vec<i64> = (0..tile.rows).map(|r| w.get(tile.row0 + r, col)).collect();
+        block.write_word(j as u16, pack_word(&elems, p));
+    }
+    block.reset_acc();
+    let mut acc = [vec![0i64; p.lanes_per_word()], vec![0i64; p.lanes_per_word()]];
+    let mut since_flush = 0usize;
+    let flush = |block: &mut BramacBlock, acc: &mut [Vec<i64>; 2]| {
+        let got = block.read_accumulators();
+        for v in 0..2 {
+            for (k, val) in got[v].iter().enumerate() {
+                acc[v][k] += val;
+            }
+        }
+        block.reset_acc();
+    };
+    let mut j = 0usize;
+    while j < tile.cols {
+        let take2 = j + 1 < tile.cols;
+        let a2 = if take2 { j as u16 + 1 } else { j as u16 };
+        let pick = |x: &[i64]| {
+            let i1 = x[tile.col0 + j];
+            let i2 = if take2 { x[tile.col0 + j + 1] } else { 0 };
+            (i1, i2)
+        };
+        let pairs = [pick(x0), pick(x1)];
+        block.mac2(j as u16, a2, &pairs, true);
+        j += 2;
+        since_flush += 2;
+        if since_flush >= p.max_dot_len() && j < tile.cols {
+            flush(block, &mut acc);
+            since_flush = 0;
+        }
+    }
+    flush(block, &mut acc);
+    let mut out = acc;
+    out[0].truncate(tile.rows);
+    out[1].truncate(tile.rows);
+    out
+}
+
+/// Load one tile's words and stream its MAC2s; returns the tile's
+/// partial outputs (length `tile.rows`).
+fn run_tile_on_block(
+    block: &mut BramacBlock,
+    w: &IntMatrix,
+    x: &[i64],
+    tile: &Tile,
+    plan: &TilePlan,
+) -> Vec<i64> {
+    let p = plan.precision;
+    let lanes = p.lanes_per_word();
+    // Pack column j of the tile into word j (transposed layout, Fig 2).
+    for j in 0..tile.cols {
+        let col = tile.col0 + j;
+        let elems: Vec<i64> = (0..tile.rows).map(|r| w.get(tile.row0 + r, col)).collect();
+        block.write_word(j as u16, pack_word(&elems, p));
+    }
+    block.reset_acc();
+    // Stream input pairs; the accumulator flushes when the dot exceeds
+    // its range (§IV-C).
+    let mut acc = vec![0i64; lanes];
+    let mut since_flush = 0usize;
+    let mut j = 0usize;
+    while j < tile.cols {
+        let i1 = x[tile.col0 + j];
+        let (a2, i2) = if j + 1 < tile.cols {
+            (j as u16 + 1, x[tile.col0 + j + 1])
+        } else {
+            // Odd tail: pair with a zero word parked at the last word
+            // (zero input makes the second term vanish).
+            (j as u16, 0)
+        };
+        // Stack-allocated pairs (§Perf iteration 4: no per-MAC2 Vec).
+        let pairs = [(i1, i2); 2];
+        block.mac2(j as u16, a2, &pairs[..block.variant.dummy_arrays()], true);
+        j += 2;
+        since_flush += 2;
+        if since_flush >= p.max_dot_len() && j < tile.cols {
+            for (k, v) in block.read_accumulators()[0].iter().enumerate() {
+                acc[k] += v;
+            }
+            block.reset_acc();
+            since_flush = 0;
+        }
+    }
+    for (k, v) in block.read_accumulators()[0].iter().enumerate() {
+        acc[k] += v;
+    }
+    acc.truncate(tile.rows);
+    acc
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+
+    #[test]
+    fn gemv_exact_all_precisions_and_variants() {
+        let mut rng = Rng::seed_from_u64(0x5c4ed);
+        for variant in Variant::ALL {
+            for p in Precision::ALL {
+                let (m, n) = (33, 70);
+                let w = IntMatrix::random(&mut rng, m, n, p);
+                let x = crate::quant::random_vector(&mut rng, n, p, true);
+                let mut pool = BlockPool::new(variant, 3, p);
+                let (y, stats) = pool.run_gemv(&w, &x);
+                assert_eq!(y, w.gemv_ref(&x), "{} {p}", variant.name());
+                assert!(stats.makespan_cycles > 0);
+                assert!(stats.tiles >= 1);
+            }
+        }
+    }
+
+    #[test]
+    fn accumulator_flush_path_is_exercised() {
+        // 2-bit max dot length is 16; a 70-column tile forces flushes.
+        let mut rng = Rng::seed_from_u64(1);
+        let p = Precision::Int2;
+        let w = IntMatrix::random(&mut rng, 20, 70, p);
+        let x = crate::quant::random_vector(&mut rng, 70, p, true);
+        let mut pool = BlockPool::new(Variant::OneDA, 1, p);
+        let (y, _) = pool.run_gemv(&w, &x);
+        assert_eq!(y, w.gemv_ref(&x));
+    }
+
+    #[test]
+    fn more_blocks_shrink_makespan() {
+        let mut rng = Rng::seed_from_u64(2);
+        let p = Precision::Int4;
+        let w = IntMatrix::random(&mut rng, 80, 256, p);
+        let x = crate::quant::random_vector(&mut rng, 256, p, true);
+        let mut p1 = BlockPool::new(Variant::OneDA, 1, p);
+        let mut p4 = BlockPool::new(Variant::OneDA, 4, p);
+        let (_, s1) = p1.run_gemv(&w, &x);
+        let (y4, s4) = p4.run_gemv(&w, &x);
+        assert_eq!(y4, w.gemv_ref(&x));
+        assert!(s4.makespan_cycles < s1.makespan_cycles);
+        // Work conserved (same tiles, same per-tile cost).
+        assert_eq!(s1.tiles, s4.tiles);
+    }
+
+    #[test]
+    fn batch2_exact_and_cheaper_than_two_passes() {
+        let mut rng = Rng::seed_from_u64(0xBA7C);
+        for p in Precision::ALL {
+            let (m, n) = (45, 96);
+            let w = IntMatrix::random(&mut rng, m, n, p);
+            let x0 = crate::quant::random_vector(&mut rng, n, p, true);
+            let x1 = crate::quant::random_vector(&mut rng, n, p, true);
+            let mut pool = BlockPool::new(Variant::TwoSA, 2, p);
+            let ([y0, y1], s2) = pool.run_mvm_batch2(&w, &x0, &x1);
+            assert_eq!(y0, w.gemv_ref(&x0), "{p} vec0");
+            assert_eq!(y1, w.gemv_ref(&x1), "{p} vec1");
+            // Batch-2 on 2SA costs one pass; two sequential passes cost ~2x.
+            let mut pool_seq = BlockPool::new(Variant::TwoSA, 2, p);
+            let (_, sa) = pool_seq.run_gemv(&w, &x0);
+            let (_, sb) = pool_seq.run_gemv(&w, &x1);
+            assert!(
+                s2.makespan_cycles < (sa.makespan_cycles + sb.makespan_cycles) * 3 / 4,
+                "{p}: batch {} vs sequential {}",
+                s2.makespan_cycles,
+                sa.makespan_cycles + sb.makespan_cycles
+            );
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "two dummy arrays")]
+    fn batch2_requires_2sa() {
+        let p = Precision::Int4;
+        let w = IntMatrix::zeros(10, 4, p);
+        let mut pool = BlockPool::new(Variant::OneDA, 1, p);
+        let _ = pool.run_mvm_batch2(&w, &[0; 4], &[0; 4]);
+    }
+
+    #[test]
+    fn loads_mostly_hidden() {
+        // §IV-C's point: tiling-based operation with loads overlapped.
+        let mut rng = Rng::seed_from_u64(3);
+        let p = Precision::Int8;
+        let w = IntMatrix::random(&mut rng, 40, 400, p);
+        let x = crate::quant::random_vector(&mut rng, 400, p, true);
+        let mut pool = BlockPool::new(Variant::TwoSA, 2, p);
+        let (_, s) = pool.run_gemv(&w, &x);
+        let hidden = 1.0 - s.exposed_load_cycles as f64 / (s.tiles as f64 * 200.0);
+        assert!(hidden > 0.5, "most load cycles should hide: {s:?}");
+    }
+}

@@ -1,0 +1,238 @@
+//! Inference server: dynamic batching in front of the PJRT-executed
+//! CNN artifact, with per-batch cycle attribution from the DLA model.
+//!
+//! The request path is Rust-only: requests → batcher → PJRT execution
+//! of `artifacts/model.hlo.txt` (the AOT-compiled quantized CNN whose
+//! convolutions run through the L1 Pallas GEMM kernel) → replies.
+//! Python is never involved at serving time.
+
+use std::path::PathBuf;
+use std::sync::mpsc::Sender;
+use std::sync::Arc;
+use std::sync::Mutex;
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+use anyhow::{Context, Result};
+
+use crate::arch::Precision;
+use crate::bramac::Variant;
+use crate::dla::{
+    config::DlaConfig,
+    cycle::network_cycles,
+    models::{ConvLayer, Network},
+};
+use crate::runtime::{Manifest, Runtime};
+
+use super::batcher::{Batcher, Request};
+
+/// One inference request: a quantized 3×32×32 image (int32 pixels in
+/// the model precision's range).
+pub type Image = Vec<i32>;
+/// Reply: class logits.
+pub type Logits = Vec<i32>;
+
+pub const IMAGE_ELEMS: usize = 3 * 32 * 32;
+
+/// The e2e CNN's geometry (mirror of python/compile/model.CNN_LAYERS)
+/// used for cycle attribution.
+pub fn e2e_network() -> Network {
+    Network {
+        name: "e2e-cnn",
+        layers: vec![
+            ConvLayer::new("conv1", 24, 3, 3, 3, 32, 32),
+            ConvLayer::new("conv2", 48, 24, 3, 3, 16, 16),
+            ConvLayer::new("conv3", 96, 48, 3, 3, 8, 8),
+            ConvLayer::fc("fc", 10, 96 * 16),
+        ],
+    }
+}
+
+/// Serving statistics.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct ServerStats {
+    pub requests: u64,
+    pub batches: u64,
+    /// Wall time spent inside PJRT execution.
+    pub exec_micros: u64,
+    /// Attributed accelerator cycles (DLA-BRAMAC model) across batches.
+    pub attributed_cycles: u64,
+}
+
+/// Dynamic-batching inference server over the PJRT runtime.
+pub struct InferenceServer {
+    tx: Option<Sender<Request<Image, Logits>>>,
+    worker: Option<JoinHandle<()>>,
+    stats: Arc<Mutex<ServerStats>>,
+    pub batch_size: usize,
+}
+
+impl InferenceServer {
+    /// Start the server: one worker thread **owns** the PJRT runtime
+    /// (the xla crate's client is not `Send`, so it never crosses a
+    /// thread boundary); requests flow in over channels. `artifact`
+    /// must be a CNN artifact ("model"); its static batch dimension
+    /// sets the batch size.
+    pub fn start(artifact_dir: PathBuf, artifact: &str, max_wait: Duration) -> Result<Self> {
+        // Read the manifest on the caller's thread for early errors;
+        // the worker re-opens the runtime it will own.
+        let manifest = Manifest::load(&artifact_dir)?;
+        let spec = manifest.get(artifact)?.clone();
+        let batch = *spec
+            .input_shapes
+            .first()
+            .and_then(|s| s.first())
+            .context("artifact has no batch dim")?;
+        let classes = spec.meta_usize("classes").unwrap_or(10);
+        let precision = spec.meta_usize("precision").unwrap_or(4);
+        let (tx, batcher) = Batcher::<Image, Logits>::new(batch, max_wait);
+        let stats = Arc::new(Mutex::new(ServerStats::default()));
+
+        // Cycle attribution: the e2e CNN on a DLA-BRAMAC-2SA instance.
+        let net = e2e_network();
+        let cfg = DlaConfig::dla_bramac(
+            Variant::TwoSA,
+            1,
+            2,
+            8,
+            24,
+            Precision::from_bits(precision as u32).unwrap_or(Precision::Int4),
+        );
+        let cycles_per_image = network_cycles(&net, &cfg);
+
+        let name = artifact.to_string();
+        let stats_w = Arc::clone(&stats);
+        let worker = std::thread::spawn(move || {
+            let runtime = match Runtime::with_dir(&artifact_dir) {
+                Ok(r) => r,
+                Err(e) => {
+                    eprintln!("server: runtime init failed: {e:#}");
+                    return;
+                }
+            };
+            while let Some(reqs) = batcher.next_batch() {
+                let n = reqs.len();
+                // Pad to the artifact's static batch with zeros.
+                let mut input = vec![0i32; batch * IMAGE_ELEMS];
+                for (i, r) in reqs.iter().enumerate() {
+                    let img = &r.payload;
+                    debug_assert_eq!(img.len(), IMAGE_ELEMS);
+                    input[i * IMAGE_ELEMS..(i + 1) * IMAGE_ELEMS].copy_from_slice(img);
+                }
+                let t0 = Instant::now();
+                let out = match runtime.execute_i32(&name, &[&input]) {
+                    Ok(o) => o,
+                    Err(e) => {
+                        eprintln!("server: execution failed: {e:#}");
+                        continue; // drop replies; clients see disconnect
+                    }
+                };
+                let dt = t0.elapsed();
+                for (i, r) in reqs.into_iter().enumerate() {
+                    let logits = out[i * classes..(i + 1) * classes].to_vec();
+                    let _ = r.reply.send(logits);
+                }
+                let mut s = stats_w.lock().unwrap();
+                s.requests += n as u64;
+                s.batches += 1;
+                s.exec_micros += dt.as_micros() as u64;
+                s.attributed_cycles += cycles_per_image * n as u64;
+            }
+        });
+
+        Ok(InferenceServer {
+            tx: Some(tx),
+            worker: Some(worker),
+            stats,
+            batch_size: batch,
+        })
+    }
+
+    /// A clonable submission handle.
+    pub fn handle(&self) -> Sender<Request<Image, Logits>> {
+        self.tx.as_ref().expect("server running").clone()
+    }
+
+    pub fn stats(&self) -> ServerStats {
+        *self.stats.lock().unwrap()
+    }
+
+    /// Drain and stop.
+    pub fn shutdown(mut self) -> ServerStats {
+        drop(self.tx.take());
+        if let Some(w) = self.worker.take() {
+            let _ = w.join();
+        }
+        let s = *self.stats.lock().unwrap();
+        s
+    }
+}
+
+impl Drop for InferenceServer {
+    fn drop(&mut self) {
+        drop(self.tx.take());
+        if let Some(w) = self.worker.take() {
+            let _ = w.join();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::batcher::submit_and_wait;
+    use crate::util::Rng;
+
+    #[test]
+    fn serves_batched_requests() {
+        if !Manifest::default_dir().join("manifest.json").exists() {
+            eprintln!("skipping: artifacts not built");
+            return;
+        }
+        let server = InferenceServer::start(
+            Manifest::default_dir(),
+            "model",
+            Duration::from_millis(20),
+        )
+        .unwrap();
+        let mut rng = Rng::seed_from_u64(0x5e7);
+        let mut handles = Vec::new();
+        for _ in 0..6 {
+            let tx = server.handle();
+            let img: Image = (0..IMAGE_ELEMS)
+                .map(|_| rng.gen_range_i64(0, 7) as i32)
+                .collect();
+            handles.push(std::thread::spawn(move || {
+                submit_and_wait(&tx, img).expect("reply")
+            }));
+        }
+        let mut outputs = Vec::new();
+        for h in handles {
+            outputs.push(h.join().unwrap());
+        }
+        assert!(outputs.iter().all(|o| o.len() == 10));
+        let stats = server.shutdown();
+        assert_eq!(stats.requests, 6);
+        assert!(stats.batches >= 2); // batch=4 → at least 2 batches
+        assert!(stats.attributed_cycles > 0);
+    }
+
+    #[test]
+    fn identical_inputs_get_identical_logits() {
+        if !Manifest::default_dir().join("manifest.json").exists() {
+            eprintln!("skipping: artifacts not built");
+            return;
+        }
+        let server = InferenceServer::start(
+            Manifest::default_dir(),
+            "model",
+            Duration::from_millis(5),
+        )
+        .unwrap();
+        let img: Image = vec![1; IMAGE_ELEMS];
+        let tx = server.handle();
+        let a = submit_and_wait(&tx, img.clone()).unwrap();
+        let b = submit_and_wait(&tx, img).unwrap();
+        assert_eq!(a, b);
+    }
+}

@@ -1,0 +1,108 @@
+//! Weight tiling: map a transposed weight matrix onto BRAMAC blocks.
+//!
+//! Per Fig 2, the weight matrix is transposed offline so that each main-
+//! BRAM word holds the weights of `lanes` consecutive outputs for one
+//! matrix column: word `j` of a tile packs `W[r0..r0+lanes, j]`. A tile
+//! therefore spans `lanes` output rows × up to 512 matrix columns (the
+//! main BRAM's word depth, halved when double-buffering is on so the
+//! next tile can stream into the other half while computing).
+
+use crate::arch::Precision;
+use crate::bramac::block::MAIN_WORDS;
+
+/// One weight tile assigned to a block.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Tile {
+    /// First output row and row count (≤ lanes).
+    pub row0: usize,
+    pub rows: usize,
+    /// First matrix column and column count (≤ words per buffer).
+    pub col0: usize,
+    pub cols: usize,
+}
+
+impl Tile {
+    /// Words this tile occupies in the main BRAM (one per column).
+    pub fn words(&self) -> usize {
+        self.cols
+    }
+}
+
+/// A full tiling of an M×N GEMV.
+#[derive(Debug, Clone)]
+pub struct TilePlan {
+    pub m: usize,
+    pub n: usize,
+    pub precision: Precision,
+    pub tiles: Vec<Tile>,
+    /// Words available per tile buffer (512, or 256 double-buffered).
+    pub buffer_words: usize,
+}
+
+/// Plan tiles for an M×N matrix at `precision`. `double_buffer` halves
+/// the per-tile capacity so loads overlap compute (§IV-C tiling).
+pub fn plan_gemv(m: usize, n: usize, precision: Precision, double_buffer: bool) -> TilePlan {
+    assert!(m > 0 && n > 0);
+    let lanes = precision.lanes_per_word();
+    let buffer_words = if double_buffer { MAIN_WORDS / 2 } else { MAIN_WORDS };
+    let mut tiles = Vec::new();
+    let mut row0 = 0;
+    while row0 < m {
+        let rows = lanes.min(m - row0);
+        let mut col0 = 0;
+        while col0 < n {
+            let cols = buffer_words.min(n - col0);
+            tiles.push(Tile { row0, rows, col0, cols });
+            col0 += cols;
+        }
+        row0 += rows;
+    }
+    TilePlan { m, n, precision, tiles, buffer_words }
+}
+
+impl TilePlan {
+    /// Check that the tiles cover every matrix element exactly once.
+    pub fn covers_exactly_once(&self) -> bool {
+        let mut count = vec![0u8; self.m * self.n];
+        for t in &self.tiles {
+            for r in t.row0..t.row0 + t.rows {
+                for c in t.col0..t.col0 + t.cols {
+                    count[r * self.n + c] += 1;
+                }
+            }
+        }
+        count.iter().all(|&c| c == 1)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn exact_cover_various_shapes() {
+        for p in Precision::ALL {
+            for (m, n) in [(1, 1), (7, 13), (20, 256), (37, 600), (160, 480), (65, 513)] {
+                for db in [false, true] {
+                    let plan = plan_gemv(m, n, p, db);
+                    assert!(plan.covers_exactly_once(), "{p} {m}x{n} db={db}");
+                    for t in &plan.tiles {
+                        assert!(t.rows <= p.lanes_per_word());
+                        assert!(t.words() <= plan.buffer_words);
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn tile_count_formula() {
+        let p = Precision::Int4; // 10 lanes
+        let plan = plan_gemv(35, 600, p, false);
+        // ceil(35/10)=4 row groups x ceil(600/512)=2 col groups.
+        assert_eq!(plan.tiles.len(), 8);
+        let plan_db = plan_gemv(35, 600, p, true);
+        // ceil(600/256)=3 col groups.
+        assert_eq!(plan_db.tiles.len(), 12);
+    }
+}

@@ -1,0 +1,97 @@
+//! DLA DSP-plus-BRAM area model (§VI-D, Fig 13b).
+//!
+//! The paper uses the DLA area model from [9] for DSP/BRAM counts and
+//! the relative-area model from [34] for the final DSP-plus-BRAM area;
+//! ALMs are ignored ("expected to be similar in DLA and DLA-BRAMAC").
+//! Neither reference model is available, so BRAM counts come from a
+//! first-principles bandwidth/capacity model (documented below and in
+//! DESIGN.md §6); DSP counts use the exact Table III formula.
+
+use crate::arch::{AreaModel, Device};
+
+use super::config::{AccelKind, DlaConfig};
+use super::models::Network;
+
+/// M20K capacity in bits.
+const M20K_BITS: u64 = 20 * 1024;
+/// BRAM port width in bits.
+const PORT_BITS: u64 = 40;
+
+/// Stream-buffer BRAMs: double-buffered largest feature map.
+pub fn stream_buffer_brams(net: &Network, cfg: &DlaConfig) -> u64 {
+    let bits = 2 * net.max_fmap_elems() * cfg.precision.bits() as u64;
+    bits.div_ceil(M20K_BITS).max(1)
+}
+
+/// Filter-cache BRAMs: the larger of the bandwidth bound (the PE array
+/// consumes `Kvec·Cvec` weights/cycle at n bits through 40-bit read
+/// ports) and the capacity bound (the largest conv layer's weights,
+/// double-buffered for tile prefetch — the DLA streams FC weights).
+/// For DLA-BRAMAC, the BRAMAC compute blocks double as the filter cache
+/// for the Qvec2 columns.
+pub fn filter_cache_brams(net: &Network, cfg: &DlaConfig) -> u64 {
+    let n = cfg.precision.bits() as u64;
+    let bw_bits = (cfg.kvec * cfg.cvec) as u64 * n;
+    let bandwidth = (2 * bw_bits).div_ceil(PORT_BITS);
+    let max_conv_weights = net
+        .layers
+        .iter()
+        .filter(|l| l.r * l.s > 1 || l.p * l.q > 1) // conv, not FC
+        .map(|l| l.weights())
+        .max()
+        .unwrap_or(0);
+    let capacity = (2 * max_conv_weights * n).div_ceil(M20K_BITS);
+    bandwidth.max(capacity).max(1)
+}
+
+/// Total BRAM count for a configuration.
+pub fn total_brams(net: &Network, cfg: &DlaConfig) -> u64 {
+    stream_buffer_brams(net, cfg) + filter_cache_brams(net, cfg) + cfg.bramac_blocks()
+}
+
+/// Utilized DSP-plus-BRAM area in core-area-fraction units, accounting
+/// for the BRAMAC block-area overhead on every BRAM when the accelerator
+/// uses BRAMAC (the enhanced FPGA replaces *all* M20Ks, §V-A).
+pub fn utilized_area(net: &Network, cfg: &DlaConfig, device: &Device) -> f64 {
+    let overhead = match cfg.kind {
+        AccelKind::Dla => 0.0,
+        AccelKind::DlaBramac(v) => v.block_area_overhead(),
+    };
+    AreaModel::with_bram_overhead(*device, overhead).utilized(cfg.dsps(), total_brams(net, cfg))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::arch::{Precision, ARRIA10_GX900};
+    use crate::bramac::Variant;
+    use crate::dla::models::alexnet;
+
+    #[test]
+    fn bram_counts_in_device_range() {
+        let net = alexnet();
+        for p in Precision::ALL {
+            let cfg = DlaConfig::dla(3, 16, 32, p);
+            let b = total_brams(&net, &cfg);
+            assert!(b > 16 && b < 2713, "{p}: {b} BRAMs");
+        }
+    }
+
+    #[test]
+    fn bramac_configs_use_more_brams() {
+        let net = alexnet();
+        let p = Precision::Int4;
+        let dla = DlaConfig::dla(3, 16, 100, p);
+        let hybrid = DlaConfig::dla_bramac(Variant::TwoSA, 1, 2, 16, 100, p);
+        assert!(total_brams(&net, &hybrid) > total_brams(&net, &dla));
+    }
+
+    #[test]
+    fn area_monotone_in_resources() {
+        let net = alexnet();
+        let d = ARRIA10_GX900;
+        let small = DlaConfig::dla(1, 8, 32, Precision::Int8);
+        let big = DlaConfig::dla(4, 16, 64, Precision::Int8);
+        assert!(utilized_area(&net, &small, &d) < utilized_area(&net, &big, &d));
+    }
+}

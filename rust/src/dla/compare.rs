@@ -1,0 +1,119 @@
+//! Fig 13: DLA-BRAMAC vs DLA — performance, utilized DSP-plus-BRAM
+//! area, and performance per area, at each precision, for AlexNet and
+//! ResNet-34, using each accelerator's DSE-optimal configuration.
+
+use crate::arch::Precision;
+use crate::bramac::Variant;
+
+use super::config::AccelKind;
+use super::dse::{explore, DseResult};
+use super::models::Network;
+
+/// One (model, precision, variant) comparison row.
+#[derive(Debug, Clone)]
+pub struct CompareRow {
+    pub network: &'static str,
+    pub precision: Precision,
+    pub variant: Variant,
+    pub dla: DseResult,
+    pub dla_bramac: DseResult,
+    /// cycles_DLA / cycles_DLA-BRAMAC (Fig 13a).
+    pub speedup: f64,
+    /// area_DLA-BRAMAC / area_DLA (Fig 13b).
+    pub area_ratio: f64,
+    /// speedup / area_ratio (Fig 13c).
+    pub perf_per_area_gain: f64,
+}
+
+/// Run the full Fig 13 comparison for one network.
+pub fn compare_network(net: &Network) -> Vec<CompareRow> {
+    let mut rows = Vec::new();
+    for p in Precision::ALL {
+        let base = explore(net, AccelKind::Dla, p);
+        for v in Variant::ALL {
+            let enh = explore(net, AccelKind::DlaBramac(v), p);
+            // Performance includes the CIM clock cap (1DA at 500 MHz).
+            let speedup = enh.perf / base.perf;
+            let area_ratio = enh.area / base.area;
+            rows.push(CompareRow {
+                network: net.name,
+                precision: p,
+                variant: v,
+                dla: base.clone(),
+                dla_bramac: enh,
+                speedup,
+                area_ratio,
+                perf_per_area_gain: speedup / area_ratio,
+            });
+        }
+    }
+    rows
+}
+
+/// Both networks (the full Fig 13).
+pub fn compare_all() -> Vec<CompareRow> {
+    let mut rows = compare_network(&super::models::alexnet());
+    rows.extend(compare_network(&super::models::resnet34()));
+    rows
+}
+
+/// Average speedup for a (network, variant) pair across precisions —
+/// the abstract's headline numbers.
+pub fn average_speedup(rows: &[CompareRow], network: &str, variant: Variant) -> f64 {
+    let sel: Vec<f64> = rows
+        .iter()
+        .filter(|r| r.network == network && r.variant == variant)
+        .map(|r| r.speedup)
+        .collect();
+    sel.iter().sum::<f64>() / sel.len() as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn headline_speedups_in_paper_range() {
+        // Abstract: 2.05x/1.7x (AlexNet 2SA/1DA), 1.33x/1.52x (ResNet).
+        // Our DLA substrate is a reconstruction, so check the shape:
+        // all four averages > 1.25x, AlexNet-2SA the largest, and
+        // magnitudes within ±35% of the paper's.
+        let rows = compare_all();
+        let a2 = average_speedup(&rows, "AlexNet", Variant::TwoSA);
+        let a1 = average_speedup(&rows, "AlexNet", Variant::OneDA);
+        let r2 = average_speedup(&rows, "ResNet-34", Variant::TwoSA);
+        let r1 = average_speedup(&rows, "ResNet-34", Variant::OneDA);
+        for (got, want, label) in [
+            (a2, 2.05, "AlexNet 2SA"),
+            (a1, 1.70, "AlexNet 1DA"),
+            (r2, 1.33, "ResNet 2SA"),
+            (r1, 1.52, "ResNet 1DA"),
+        ] {
+            assert!(got > 1.2, "{label}: speedup {got:.2} too small");
+            assert!(
+                (got - want).abs() / want < 0.35,
+                "{label}: {got:.2} vs paper {want}"
+            );
+        }
+        // AlexNet benefits more than ResNet (§VI-D: Kvec freedom).
+        assert!(a2 > r2, "AlexNet-2SA {a2:.2} vs ResNet-2SA {r2:.2}");
+    }
+
+    #[test]
+    fn speedup_costs_area() {
+        // Fig 13b: DLA-BRAMAC uses more DSP+BRAM area than DLA.
+        for r in compare_all() {
+            assert!(r.area_ratio > 1.0, "{} {} {:?}", r.network, r.precision, r.variant);
+        }
+    }
+
+    #[test]
+    fn perf_per_area_still_positive_gain() {
+        // Fig 13c: performance gains per utilized area ≥ ~1.0 on average
+        // (paper: 1.01-1.25x).
+        let rows = compare_all();
+        let avg: f64 =
+            rows.iter().map(|r| r.perf_per_area_gain).sum::<f64>() / rows.len() as f64;
+        assert!(avg > 0.85, "avg perf/area gain {avg:.2}");
+    }
+}

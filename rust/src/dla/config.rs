@@ -1,0 +1,149 @@
+//! DLA / DLA-BRAMAC accelerator configuration (§VI-D, Fig 12).
+
+use crate::arch::Precision;
+use crate::bramac::Variant;
+
+/// Which accelerator a configuration describes.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum AccelKind {
+    /// Baseline DLA (all multipliers in DSPs).
+    Dla,
+    /// DLA with a BRAMAC-based filter cache computing extra output
+    /// columns (Fig 12c).
+    DlaBramac(Variant),
+}
+
+impl AccelKind {
+    pub fn name(self) -> &'static str {
+        match self {
+            AccelKind::Dla => "DLA",
+            AccelKind::DlaBramac(Variant::TwoSA) => "DLA-BRAMAC-2SA",
+            AccelKind::DlaBramac(Variant::OneDA) => "DLA-BRAMAC-1DA",
+        }
+    }
+}
+
+/// A DLA configuration: computation parallelism per cycle along input
+/// depth (Cvec), output width (Qvec) and output depth (Kvec) — Fig 12b.
+/// For DLA-BRAMAC, Qvec splits into Qvec1 (DSP PE array) + Qvec2
+/// (BRAMAC filter cache), Table III note 2.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct DlaConfig {
+    pub kind: AccelKind,
+    pub qvec1: usize,
+    pub qvec2: usize,
+    pub cvec: usize,
+    pub kvec: usize,
+    pub precision: Precision,
+}
+
+impl DlaConfig {
+    pub fn dla(qvec: usize, cvec: usize, kvec: usize, precision: Precision) -> Self {
+        DlaConfig {
+            kind: AccelKind::Dla,
+            qvec1: qvec,
+            qvec2: 0,
+            cvec,
+            kvec,
+            precision,
+        }
+    }
+
+    pub fn dla_bramac(
+        variant: Variant,
+        qvec1: usize,
+        qvec2: usize,
+        cvec: usize,
+        kvec: usize,
+        precision: Precision,
+    ) -> Self {
+        assert!(qvec2 > 0, "DLA-BRAMAC needs BRAMAC-computed columns");
+        DlaConfig {
+            kind: AccelKind::DlaBramac(variant),
+            qvec1,
+            qvec2,
+            cvec,
+            kvec,
+            precision,
+        }
+    }
+
+    pub fn qvec(&self) -> usize {
+        self.qvec1 + self.qvec2
+    }
+
+    /// DSP count model: `ceil(1.5 · Qvec1 · Cvec · Kvec / pack(n))`.
+    /// Reproduces **all 12 DSP counts of Table III exactly** (DESIGN.md
+    /// §5); the 1.5 factor reflects the DLA's Winograd-transformed PE
+    /// datapath (1.5 multipliers per dot-product term).
+    pub fn dsps(&self) -> u64 {
+        let mults = 3 * self.qvec1 * self.cvec * self.kvec;
+        (mults as u64).div_ceil(2 * self.precision.dsp_pack() as u64)
+    }
+
+    /// BRAMAC compute blocks needed for the Qvec2 columns to keep pace
+    /// with the PE array: per PE-array beat the BRAMAC side must deliver
+    /// `Qvec2 · Kvec · Cvec` MACs/cycle at `macs_in_parallel/mac2_cycles`
+    /// MACs/cycle/block.
+    pub fn bramac_blocks(&self) -> u64 {
+        match self.kind {
+            AccelKind::Dla => 0,
+            AccelKind::DlaBramac(v) => {
+                let per_block =
+                    v.macs_in_parallel(self.precision) as f64 / v.mac2_cycles(self.precision, true) as f64;
+                let needed = (self.qvec2 * self.kvec * self.cvec) as f64;
+                (needed / per_block).ceil() as u64
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use Precision::*;
+
+    #[test]
+    fn dsp_model_reproduces_table3_exactly() {
+        // Table III: every (config, precision) → DSP count.
+        let cases: Vec<(DlaConfig, u64)> = vec![
+            // DLA (Qvec, Cvec, Kvec) — AlexNet rows.
+            (DlaConfig::dla(2, 16, 96, Int2), 1152),
+            (DlaConfig::dla(3, 16, 32, Int4), 1152),
+            (DlaConfig::dla(3, 12, 24, Int8), 1296),
+            // DLA — ResNet-34 rows.
+            (DlaConfig::dla(4, 12, 72, Int2), 1296),
+            (DlaConfig::dla(3, 8, 64, Int4), 1152),
+            (DlaConfig::dla(3, 4, 64, Int8), 1152),
+            // DLA-BRAMAC-2SA — AlexNet.
+            (DlaConfig::dla_bramac(Variant::TwoSA, 1, 2, 24, 140, Int2), 1260),
+            (DlaConfig::dla_bramac(Variant::TwoSA, 1, 2, 16, 100, Int4), 1200),
+            (DlaConfig::dla_bramac(Variant::TwoSA, 2, 2, 10, 50, Int8), 1500),
+            // DLA-BRAMAC-1DA — AlexNet.
+            (DlaConfig::dla_bramac(Variant::OneDA, 2, 2, 16, 100, Int2), 1200),
+            (DlaConfig::dla_bramac(Variant::OneDA, 1, 1, 12, 130, Int4), 1170),
+            (DlaConfig::dla_bramac(Variant::OneDA, 1, 1, 8, 100, Int8), 1200),
+            // DLA-BRAMAC-2SA — ResNet-34.
+            (DlaConfig::dla_bramac(Variant::TwoSA, 1, 2, 16, 140, Int2), 840),
+            (DlaConfig::dla_bramac(Variant::TwoSA, 2, 2, 12, 70, Int4), 1260),
+            (DlaConfig::dla_bramac(Variant::TwoSA, 2, 2, 6, 65, Int8), 1170),
+            // DLA-BRAMAC-1DA — ResNet-34.
+            (DlaConfig::dla_bramac(Variant::OneDA, 2, 2, 22, 80, Int2), 1320),
+            (DlaConfig::dla_bramac(Variant::OneDA, 1, 1, 16, 90, Int4), 1080),
+            (DlaConfig::dla_bramac(Variant::OneDA, 1, 1, 12, 65, Int8), 1170),
+        ];
+        for (cfg, want) in cases {
+            assert_eq!(cfg.dsps(), want, "{cfg:?}");
+        }
+    }
+
+    #[test]
+    fn bramac_block_count_scales() {
+        let c = DlaConfig::dla_bramac(Variant::TwoSA, 1, 2, 24, 140, Int2);
+        // 2*140*24 / (80/5 = 16 MACs/cycle) = 420 blocks.
+        assert_eq!(c.bramac_blocks(), 420);
+        let c1 = DlaConfig::dla_bramac(Variant::OneDA, 1, 1, 8, 100, Int8);
+        // 1*100*8 / (10/6) = 480 blocks.
+        assert_eq!(c1.bramac_blocks(), 480);
+    }
+}

@@ -1,0 +1,122 @@
+//! Cycle-accurate DLA performance model (§VI-D).
+//!
+//! The DLA's 1-D systolic PE array produces `Qvec × Kvec` output values
+//! per beat; each beat consumes `R·S·ceil(C/Cvec)` cycles (one Cvec-wide
+//! dot-product step per cycle per PE). A layer therefore takes
+//!
+//! ```text
+//! cycles = P · ceil(Q/Qvec) · ceil(K/Kvec) · R · S · ceil(C/Cvec)
+//! ```
+//!
+//! with the `ceil` terms capturing vectorization (interleaving)
+//! inefficiency. DLA-BRAMAC widens Qvec to `Qvec1 + Qvec2` — the
+//! BRAMAC-based filter cache computes the extra output columns at the
+//! same beat rate (block provisioning guarantees this:
+//! [`DlaConfig::bramac_blocks`]) — and adds the 2-cycle initial weight
+//! copy per layer (§VI-D, noted as negligible).
+
+use super::config::{AccelKind, DlaConfig};
+use super::models::{ConvLayer, Network};
+
+/// Fraction of a BRAMAC block's time spent on accumulator readout for a
+/// dot of length `dot` at the config's precision (§IV-C): the wide
+/// accumulator holds at most 16/256/2048 partial results before an
+/// 8/4-cycle readout occupies the block. The Qvec2 columns' effective
+/// width shrinks by this factor.
+fn bramac_pace_efficiency(cfg: &DlaConfig, dot: u64) -> f64 {
+    let v = match cfg.kind {
+        AccelKind::Dla => return 1.0,
+        AccelKind::DlaBramac(v) => v,
+    };
+    let p = cfg.precision;
+    let flushes = dot.div_ceil(p.max_dot_len() as u64);
+    let readout = flushes * v.acc_readout_cycles();
+    let compute = dot.div_ceil(2) * v.mac2_cycles(p, true);
+    compute as f64 / (compute + readout) as f64
+}
+
+/// Cycles for one layer under `cfg`.
+pub fn layer_cycles(layer: &ConvLayer, cfg: &DlaConfig) -> u64 {
+    let dot = (layer.c * layer.r * layer.s) as u64;
+    let qvec_eff = cfg.qvec1 as f64 + cfg.qvec2 as f64 * bramac_pace_efficiency(cfg, dot);
+    let beats = layer.p as u64
+        * (layer.q as f64 / qvec_eff).ceil() as u64
+        * (layer.k as u64).div_ceil(cfg.kvec as u64);
+    let beat_len = (layer.r * layer.s) as u64 * (layer.c as u64).div_ceil(cfg.cvec as u64);
+    let startup = match cfg.kind {
+        AccelKind::Dla => 0,
+        // "an additional 2 cycles ... to start the initial weight copy"
+        // for the first MAC2 of every layer.
+        AccelKind::DlaBramac(_) => 2,
+    };
+    beats * beat_len + startup
+}
+
+/// Total network cycles (layers execute back-to-back on the overlay).
+pub fn network_cycles(net: &Network, cfg: &DlaConfig) -> u64 {
+    net.layers.iter().map(|l| layer_cycles(l, cfg)).sum()
+}
+
+/// Effective MACs/cycle — utilization diagnostic.
+pub fn macs_per_cycle(net: &Network, cfg: &DlaConfig) -> f64 {
+    net.total_macs() as f64 / network_cycles(net, cfg) as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::arch::Precision;
+    use crate::bramac::Variant;
+    use crate::dla::models::{alexnet, resnet34};
+
+    #[test]
+    fn layer_cycle_closed_form() {
+        let l = ConvLayer::new("t", 64, 32, 3, 3, 16, 16);
+        let cfg = DlaConfig::dla(2, 16, 32, Precision::Int8);
+        // P=16, ceil(Q/Qvec)=8, ceil(K/Kvec)=2, beat=3*3*2=18.
+        assert_eq!(layer_cycles(&l, &cfg), 16 * 8 * 2 * 18);
+    }
+
+    #[test]
+    fn wider_qvec_scales_performance() {
+        let net = alexnet();
+        let p = Precision::Int4;
+        let narrow = DlaConfig::dla(1, 16, 32, p);
+        let wide = DlaConfig::dla(4, 16, 32, p);
+        let c_narrow = network_cycles(&net, &narrow);
+        let c_wide = network_cycles(&net, &wide);
+        assert!(c_wide < c_narrow);
+        // Near-4x on conv layers, diluted by FC layers (Q=1).
+        assert!((c_narrow as f64 / c_wide as f64) > 2.0);
+    }
+
+    #[test]
+    fn bramac_columns_accelerate() {
+        let net = alexnet();
+        let p = Precision::Int4;
+        let dla = DlaConfig::dla(2, 16, 64, p);
+        let hybrid = DlaConfig::dla_bramac(Variant::TwoSA, 2, 2, 16, 64, p);
+        assert!(network_cycles(&net, &hybrid) < network_cycles(&net, &dla));
+    }
+
+    #[test]
+    fn oversized_kvec_wastes_cycles_on_resnet() {
+        // §VI-D: ResNet-34's early K=64 blocks can't fill a large Kvec.
+        let net = resnet34();
+        let p = Precision::Int2;
+        let k64 = DlaConfig::dla(2, 16, 64, p);
+        let k140 = DlaConfig::dla(2, 16, 140, p);
+        let eff64 = macs_per_cycle(&net, &k64) / (2.0 * 16.0 * 64.0);
+        let eff140 = macs_per_cycle(&net, &k140) / (2.0 * 16.0 * 140.0);
+        assert!(eff64 > eff140, "bigger Kvec must hurt utilization");
+    }
+
+    #[test]
+    fn fc_layers_are_qvec_insensitive() {
+        let fc = ConvLayer::fc("fc", 4096, 4096);
+        let p = Precision::Int8;
+        let q1 = DlaConfig::dla(1, 16, 64, p);
+        let q4 = DlaConfig::dla(4, 16, 64, p);
+        assert_eq!(layer_cycles(&fc, &q1), layer_cycles(&fc, &q4));
+    }
+}

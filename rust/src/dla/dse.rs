@@ -1,0 +1,173 @@
+//! Design-space exploration (§VI-D, Table III): find the optimal
+//! (Qvec, Cvec, Kvec) for each (accelerator, model, precision), with the
+//! objective `perf · (perf / area)` — i.e. maximize `perf² / area` —
+//! under the device's DSP and BRAM budgets.
+
+use crate::arch::{Device, Precision, ARRIA10_GX900};
+use crate::bramac::Variant;
+
+use super::area::{total_brams, utilized_area};
+use super::config::{AccelKind, DlaConfig};
+use super::cycle::network_cycles;
+use super::models::Network;
+
+/// Candidate vectorization values (superset of everything Table III
+/// reports; Kvec up to 140, Cvec up to 24).
+const QVEC_CAND: [usize; 4] = [1, 2, 3, 4];
+/// Qvec2 ≤ 2: the stream buffer feeds the PE array and the BRAMAC
+/// filter cache simultaneously (Fig 12c); its port bandwidth supports at
+/// most two BRAMAC-computed output columns — consistent with Table III
+/// where every optimum has Qvec2 ∈ {1, 2}.
+const QVEC2_CAND: [usize; 2] = [1, 2];
+const CVEC_CAND: [usize; 7] = [4, 6, 8, 10, 12, 16, 24];
+const KVEC_CAND: [usize; 12] = [16, 24, 32, 40, 50, 64, 70, 80, 96, 100, 130, 140];
+
+/// Accelerator clock: the DLA datapath is DSP-limited (549 MHz,
+/// §VI-A); BRAMAC-2SA's 586 MHz exceeds that, so only BRAMAC-1DA's
+/// 500 MHz CIM cap bites (§V-C).
+pub fn accel_fmax_mhz(kind: AccelKind) -> f64 {
+    use crate::arch::FreqModel;
+    let f = FreqModel::default();
+    match kind {
+        AccelKind::Dla => f.dsp_mhz,
+        AccelKind::DlaBramac(v) => f.dsp_mhz.min(v.fmax_mhz(&f)),
+    }
+}
+
+/// One DSE outcome.
+#[derive(Debug, Clone)]
+pub struct DseResult {
+    pub config: DlaConfig,
+    pub cycles: u64,
+    pub dsps: u64,
+    pub brams: u64,
+    /// Core-area-fraction units (DSP + BRAM only).
+    pub area: f64,
+    /// perf in 1/cycles (frequency-independent, §VI-D compares cycles).
+    pub perf: f64,
+    pub objective: f64,
+}
+
+fn evaluate(net: &Network, cfg: DlaConfig, device: &Device) -> Option<DseResult> {
+    let dsps = cfg.dsps();
+    let brams = total_brams(net, &cfg);
+    if dsps > device.counts.dsps || brams > device.counts.brams {
+        return None;
+    }
+    let cycles = network_cycles(net, &cfg);
+    let area = utilized_area(net, &cfg, device);
+    let perf = accel_fmax_mhz(cfg.kind) / cycles as f64;
+    Some(DseResult {
+        config: cfg,
+        cycles,
+        dsps,
+        brams,
+        area,
+        perf,
+        objective: perf * perf / area,
+    })
+}
+
+/// Explore all candidate configurations for one accelerator kind.
+pub fn explore(net: &Network, kind: AccelKind, precision: Precision) -> DseResult {
+    explore_on(net, kind, precision, &ARRIA10_GX900)
+}
+
+pub fn explore_on(
+    net: &Network,
+    kind: AccelKind,
+    precision: Precision,
+    device: &Device,
+) -> DseResult {
+    let mut best: Option<DseResult> = None;
+    let mut consider = |cand: Option<DseResult>| {
+        if let Some(c) = cand {
+            if best.as_ref().is_none_or(|b| c.objective > b.objective) {
+                best = Some(c);
+            }
+        }
+    };
+    for &cvec in &CVEC_CAND {
+        for &kvec in &KVEC_CAND {
+            match kind {
+                AccelKind::Dla => {
+                    for &q in &QVEC_CAND {
+                        consider(evaluate(net, DlaConfig::dla(q, cvec, kvec, precision), device));
+                    }
+                }
+                AccelKind::DlaBramac(v) => {
+                    for &q1 in &QVEC_CAND {
+                        for &q2 in &QVEC2_CAND {
+                            consider(evaluate(
+                                net,
+                                DlaConfig::dla_bramac(v, q1, q2, cvec, kvec, precision),
+                                device,
+                            ));
+                        }
+                    }
+                }
+            }
+        }
+    }
+    best.expect("at least one feasible configuration")
+}
+
+/// Table III: optimal configurations for every (accelerator, model,
+/// precision) combination.
+pub fn table3(net: &Network) -> Vec<DseResult> {
+    let kinds = [
+        AccelKind::Dla,
+        AccelKind::DlaBramac(Variant::TwoSA),
+        AccelKind::DlaBramac(Variant::OneDA),
+    ];
+    let mut rows = Vec::new();
+    for kind in kinds {
+        for p in Precision::ALL {
+            rows.push(explore(net, kind, p));
+        }
+    }
+    rows
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dla::models::{alexnet, resnet34};
+
+    #[test]
+    fn dse_respects_resource_caps() {
+        for net in [alexnet(), resnet34()] {
+            for row in table3(&net) {
+                assert!(row.dsps <= 1518, "{:?}", row.config);
+                assert!(row.brams <= 2713, "{:?}", row.config);
+            }
+        }
+    }
+
+    #[test]
+    fn bramac_variants_beat_baseline_dla() {
+        for net in [alexnet(), resnet34()] {
+            for p in Precision::ALL {
+                let base = explore(&net, AccelKind::Dla, p);
+                for v in Variant::ALL {
+                    let enh = explore(&net, AccelKind::DlaBramac(v), p);
+                    assert!(
+                        enh.cycles < base.cycles,
+                        "{} {p}: {} !< {}",
+                        net.name,
+                        enh.cycles,
+                        base.cycles
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn dse_uses_substantial_dsp_budget() {
+        // Table III's optima all use 840-1500 DSPs — the objective should
+        // push toward large configurations, not degenerate ones.
+        let base = explore(&alexnet(), AccelKind::Dla, Precision::Int4);
+        assert!(base.dsps >= 800, "{:?}", base);
+    }
+}

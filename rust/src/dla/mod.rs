@@ -1,0 +1,18 @@
+//! Intel DLA accelerator study (§VI-D): cycle-accurate model of the DLA
+//! overlay, the DLA-BRAMAC extension, design-space exploration
+//! (Table III) and the performance/area comparison (Fig 13).
+
+pub mod area;
+pub mod compare;
+pub mod config;
+pub mod cycle;
+pub mod dse;
+pub mod models;
+pub mod validate;
+
+pub use compare::{compare_all, CompareRow};
+pub use config::{AccelKind, DlaConfig};
+pub use cycle::{layer_cycles, network_cycles};
+pub use dse::{explore, DseResult};
+pub use models::{alexnet, resnet34, ConvLayer, Network};
+pub use validate::{validate_layer, LayerValidation};

@@ -1,0 +1,131 @@
+//! Cross-validation of the analytical DLA-BRAMAC cycle model against
+//! the **bit-accurate** block simulation.
+//!
+//! The analytical model (`cycle.rs`) assumes the BRAMAC-side Qvec2
+//! output columns keep pace with the PE array given
+//! [`DlaConfig::bramac_blocks`] blocks. This module actually *runs* a
+//! layer's BRAMAC share on a [`BlockPool`] — real weights, real
+//! im2col patches, bit-level MAC2s — and checks both the numerics
+//! (exact) and that the measured block cycles are consistent with the
+//! analytical beat budget.
+
+use crate::bramac::Variant;
+use crate::coordinator::BlockPool;
+use crate::quant::IntMatrix;
+use crate::util::Rng;
+
+use super::config::{AccelKind, DlaConfig};
+use super::models::ConvLayer;
+
+/// Result of validating one layer's BRAMAC share.
+#[derive(Debug, Clone, Copy)]
+pub struct LayerValidation {
+    /// Output pixels computed on the BRAMAC side.
+    pub pixels: usize,
+    /// Dot length per output (C·R·S).
+    pub dot: usize,
+    /// Measured makespan on the block pool (main-clock cycles).
+    pub measured_cycles: u64,
+    /// Analytical budget: the PE-array beats the BRAMAC side must match.
+    pub analytical_cycles: u64,
+    /// measured / analytical.
+    pub ratio: f64,
+}
+
+/// Run `pixels` output columns of `layer` through a bit-accurate pool
+/// provisioned per the config, and compare with the analytical budget.
+///
+/// The analytical budget for the BRAMAC side of `pixels` columns is
+/// `pixels/Qvec2 × ceil(K/Kvec) × beat_len` main cycles (the PE-array
+/// pace the blocks were provisioned for).
+pub fn validate_layer(layer: &ConvLayer, cfg: &DlaConfig, pixels: usize) -> LayerValidation {
+    let v = match cfg.kind {
+        AccelKind::DlaBramac(v) => v,
+        AccelKind::Dla => panic!("validate_layer needs a DLA-BRAMAC config"),
+    };
+    let p = cfg.precision;
+    let dot = layer.c * layer.r * layer.s;
+    let k = layer.k;
+
+    // Synthetic quantized weights (K × dot) and `pixels` input patches.
+    let mut rng = Rng::seed_from_u64(0xDA7A);
+    let w = IntMatrix::random(&mut rng, k, dot, p);
+
+    // One block per K-tile: each pixel's GEMV spreads its output tiles
+    // across the pool, so per-pixel latency is a single tile's time —
+    // the same K-parallelism the DLA's filter cache provides.
+    let lanes = p.lanes_per_word();
+    let blocks = k.div_ceil(lanes).min(cfg.bramac_blocks().max(1) as usize);
+    let mut pool = BlockPool::new(v, blocks, p);
+
+    let mut measured = 0u64;
+    for px in 0..pixels {
+        let mut prng = Rng::seed_from_u64(px as u64);
+        let x = crate::quant::random_vector(&mut prng, dot, p, true);
+        let (y, stats) = pool.run_gemv(&w, &x);
+        assert_eq!(y, w.gemv_ref(&x), "bit-accurate mismatch at pixel {px}");
+        measured += stats.makespan_cycles;
+    }
+
+    // Analytical per-pixel budget: the slowest block processes
+    // ceil(tiles/blocks) K-tiles of ceil(dot/2) MAC2s each, plus the
+    // accumulator flushes and the cold-start fill.
+    let tiles = k.div_ceil(lanes) as u64;
+    let per_tile_mac2s = (dot as u64).div_ceil(2);
+    let flushes = (dot as u64).div_ceil(p.max_dot_len() as u64);
+    let per_pixel = tiles.div_ceil(blocks as u64)
+        * (per_tile_mac2s * v.mac2_cycles(p, true) + flushes * v.acc_readout_cycles())
+        + v.cold_start_cycles();
+    let analytical = pixels as u64 * per_pixel;
+
+    LayerValidation {
+        pixels,
+        dot,
+        measured_cycles: measured,
+        analytical_cycles: analytical,
+        ratio: measured as f64 / analytical as f64,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::arch::Precision;
+    use crate::dla::models::ConvLayer;
+
+    #[test]
+    fn bit_accurate_blocks_match_analytical_budget() {
+        // A small conv layer: K=24, C=8, 3x3 — the e2e CNN's scale.
+        let layer = ConvLayer::new("t", 24, 8, 3, 3, 8, 8);
+        let cfg = DlaConfig::dla_bramac(Variant::OneDA, 1, 2, 8, 24, Precision::Int4);
+        let val = validate_layer(&layer, &cfg, 4);
+        // Numerics already asserted inside; cycles within 2x of the
+        // ideal budget (readouts, partial tiles and pipeline fills are
+        // real costs the ideal budget omits).
+        assert!(
+            val.ratio >= 1.0 && val.ratio < 2.0,
+            "measured/analytical = {:.2} ({} vs {})",
+            val.ratio,
+            val.measured_cycles,
+            val.analytical_cycles
+        );
+    }
+
+    #[test]
+    fn validation_scales_linearly_in_pixels() {
+        let layer = ConvLayer::new("t", 20, 4, 3, 3, 8, 8);
+        let cfg = DlaConfig::dla_bramac(Variant::TwoSA, 1, 1, 4, 20, Precision::Int2);
+        let v1 = validate_layer(&layer, &cfg, 2);
+        let v2 = validate_layer(&layer, &cfg, 4);
+        let ratio = v2.measured_cycles as f64 / v1.measured_cycles as f64;
+        assert!((ratio - 2.0).abs() < 0.35, "pixels scaling: {ratio:.2}");
+    }
+
+    #[test]
+    #[should_panic(expected = "DLA-BRAMAC config")]
+    fn rejects_plain_dla_configs() {
+        let layer = ConvLayer::new("t", 8, 4, 1, 1, 4, 4);
+        let cfg = DlaConfig::dla(2, 4, 8, Precision::Int4);
+        let _ = validate_layer(&layer, &cfg, 1);
+    }
+}

@@ -1,0 +1,102 @@
+//! DSP-based MAC architectures: the baseline Arria-10 DSP with
+//! DSP-packing [36], eDSP [15], and PIR-DSP [16] (§II-B, §VI-A).
+
+use crate::arch::{FreqModel, Precision};
+
+/// A DSP-block architecture's MAC capability.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum DspArch {
+    /// Arria-10 DSP: two 18x19 multipliers; each packs one 8-bit, two
+    /// 4-bit or four 2-bit multiplies (m18x18_sumof2 + packing [36]).
+    Baseline,
+    /// Enhanced Intel DSP: four 9-bit or eight 4-bit multiplies without
+    /// extra routing ports (2-bit runs in 4-bit mode). Table II: 8/8/4.
+    Edsp,
+    /// PIR-DSP (modified Xilinx): six 9-bit, twelve 4-bit or twenty-four
+    /// 2-bit multiplies. Table II: 24/12/6.
+    PirDsp,
+}
+
+impl DspArch {
+    pub const ALL: [DspArch; 3] = [DspArch::Baseline, DspArch::Edsp, DspArch::PirDsp];
+
+    pub fn name(self) -> &'static str {
+        match self {
+            DspArch::Baseline => "DSP (baseline)",
+            DspArch::Edsp => "eDSP",
+            DspArch::PirDsp => "PIR-DSP",
+        }
+    }
+
+    /// MACs per block per cycle (Table II "# of MACs in Parallel", all
+    /// with 1-cycle MAC latency).
+    pub fn macs_per_cycle(self, p: Precision) -> u64 {
+        match self {
+            DspArch::Baseline => 2 * p.dsp_pack() as u64,
+            DspArch::Edsp => match p {
+                Precision::Int2 => 8, // runs in 4-bit mode
+                Precision::Int4 => 8,
+                Precision::Int8 => 4,
+            },
+            DspArch::PirDsp => match p {
+                Precision::Int2 => 24,
+                Precision::Int4 => 12,
+                Precision::Int8 => 6,
+            },
+        }
+    }
+
+    pub fn fmax_mhz(self, f: &FreqModel) -> f64 {
+        match self {
+            DspArch::Baseline => f.dsp_mhz,
+            DspArch::Edsp => f.edsp_mhz(),
+            DspArch::PirDsp => f.pirdsp_mhz(),
+        }
+    }
+
+    /// Block area overhead vs the baseline DSP (Table II).
+    pub fn block_area_overhead(self) -> f64 {
+        match self {
+            DspArch::Baseline => 0.0,
+            DspArch::Edsp => 0.12,
+            DspArch::PirDsp => 0.28,
+        }
+    }
+
+    /// Core area overhead (Table II).
+    pub fn core_area_overhead(self) -> f64 {
+        match self {
+            DspArch::Baseline => 0.0,
+            DspArch::Edsp => 0.011,
+            DspArch::PirDsp => 0.027,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table2_parallel_macs() {
+        use Precision::*;
+        assert_eq!(DspArch::Baseline.macs_per_cycle(Int2), 8);
+        assert_eq!(DspArch::Baseline.macs_per_cycle(Int4), 4);
+        assert_eq!(DspArch::Baseline.macs_per_cycle(Int8), 2);
+        assert_eq!(DspArch::Edsp.macs_per_cycle(Int2), 8);
+        assert_eq!(DspArch::Edsp.macs_per_cycle(Int4), 8);
+        assert_eq!(DspArch::Edsp.macs_per_cycle(Int8), 4);
+        assert_eq!(DspArch::PirDsp.macs_per_cycle(Int2), 24);
+        assert_eq!(DspArch::PirDsp.macs_per_cycle(Int4), 12);
+        assert_eq!(DspArch::PirDsp.macs_per_cycle(Int8), 6);
+    }
+
+    #[test]
+    fn pirdsp_is_slower_but_denser() {
+        let f = FreqModel::default();
+        assert!(DspArch::PirDsp.fmax_mhz(&f) < DspArch::Baseline.fmax_mhz(&f));
+        for p in Precision::ALL {
+            assert!(DspArch::PirDsp.macs_per_cycle(p) > DspArch::Baseline.macs_per_cycle(p));
+        }
+    }
+}

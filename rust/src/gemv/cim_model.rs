@@ -1,0 +1,142 @@
+//! CCB / CoMeFa GEMV cycle model (§VI-C).
+//!
+//! Mapping (reconstructed from the paper's two worked examples — see
+//! DESIGN.md §5): the dot dimension is spread across the 160 bit-serial
+//! lanes, so each column performs `p = ceil(N / 160)` sequential MACs
+//! (the *achievable packing factor*: N=480 → 3 sequential MACs, N=128 →
+//! 1, exactly §VI-C's examples), followed by a slow in-memory reduction
+//! that merges the column partial sums into the output accumulator.
+//! Outputs are processed sequentially; reductions for consecutive
+//! outputs pipeline against the next output's MACs, leaving a drain cost
+//! of two bit-serial adds (`2·(w+1)` cycles) per output.
+//!
+//! CCB additionally writes a copy of the streamed input vector into the
+//! array (`n` row-writes per packed input element, once per GEMV);
+//! CoMeFa streams one operand from outside (§VI-B). Neither architecture
+//! can overlap tile loads with compute — the CIM instruction arrives
+//! through a BRAM write port, keeping both ports busy (§II-C) — so
+//! non-persistent loads serialize fully.
+//!
+//! Both architectures' published bit-serial multipliers support unsigned
+//! operands only (§VI-C note); latencies here are the unsigned Table II
+//! values, which favors the baselines.
+
+use crate::cim::{acc_bits_interp, add_latency_cycles, mac_latency_cycles, CIM_LANES};
+
+use super::workload::{ComputeStyle, GemvWorkload};
+
+/// Which bit-serial CIM architecture to model.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum CimArch {
+    Ccb,
+    ComefaD,
+    ComefaA,
+}
+
+impl CimArch {
+    pub fn name(self) -> &'static str {
+        match self {
+            CimArch::Ccb => "CCB",
+            CimArch::ComefaD => "CoMeFa-D",
+            CimArch::ComefaA => "CoMeFa-A",
+        }
+    }
+}
+
+/// Cycle-count result.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct CimGemvCycles {
+    pub compute: u64,
+    pub reductions: u64,
+    pub input_copy: u64,
+    pub load: u64,
+    pub total: u64,
+}
+
+#[derive(Debug, Clone, Copy)]
+pub struct CimGemvModel {
+    pub arch: CimArch,
+}
+
+impl CimGemvModel {
+    pub fn new(arch: CimArch) -> Self {
+        CimGemvModel { arch }
+    }
+
+    /// Achievable packing factor for dot length `n_dot` (§VI-C).
+    pub fn packing(n_dot: usize) -> u64 {
+        (n_dot as u64).div_ceil(CIM_LANES as u64)
+    }
+
+    pub fn cycles(&self, w: &GemvWorkload) -> CimGemvCycles {
+        let n = w.precision.bits();
+        let wacc = acc_bits_interp(n);
+        let p = Self::packing(w.n);
+        let mac = mac_latency_cycles(n);
+
+        // Per output: p sequential MACs, then the reduction drain.
+        let red_per_output = 2 * add_latency_cycles(wacc);
+        let compute = w.m as u64 * p * mac;
+        let reductions = w.m as u64 * red_per_output;
+
+        // CCB's stored input copy: n row-writes per packed element.
+        let input_copy = match self.arch {
+            CimArch::Ccb => p * n as u64,
+            _ => 0,
+        };
+
+        let load = match w.style {
+            ComputeStyle::Persistent => 0,
+            ComputeStyle::NonPersistent => w.load_cycles(),
+        };
+
+        CimGemvCycles {
+            compute,
+            reductions,
+            input_copy,
+            load,
+            total: compute + reductions + input_copy + load,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::arch::Precision;
+    use crate::gemv::workload::ComputeStyle::*;
+
+    #[test]
+    fn packing_matches_paper_examples() {
+        // §VI-C: column size 480 → 3 sequential MACs; 128 → 1.
+        assert_eq!(CimGemvModel::packing(480), 3);
+        assert_eq!(CimGemvModel::packing(128), 1);
+        assert_eq!(CimGemvModel::packing(160), 1);
+        assert_eq!(CimGemvModel::packing(161), 2);
+    }
+
+    #[test]
+    fn loads_serialize_fully() {
+        let m = CimGemvModel::new(CimArch::ComefaD);
+        let pers = m.cycles(&GemvWorkload::new(160, 128, Precision::Int4, Persistent));
+        let np = m.cycles(&GemvWorkload::new(160, 128, Precision::Int4, NonPersistent));
+        assert_eq!(np.total - pers.total, np.load);
+        assert!(np.load > 0);
+    }
+
+    #[test]
+    fn ccb_pays_input_copy() {
+        let ccb = CimGemvModel::new(CimArch::Ccb);
+        let com = CimGemvModel::new(CimArch::ComefaD);
+        let w = GemvWorkload::new(64, 320, Precision::Int8, Persistent);
+        assert!(ccb.cycles(&w).total > com.cycles(&w).total);
+    }
+
+    #[test]
+    fn cost_linear_in_outputs() {
+        let m = CimGemvModel::new(CimArch::Ccb);
+        let c1 = m.cycles(&GemvWorkload::new(40, 128, Precision::Int4, Persistent));
+        let c2 = m.cycles(&GemvWorkload::new(80, 128, Precision::Int4, Persistent));
+        assert!((c2.compute + c2.reductions) >= 2 * (c1.compute + c1.reductions) - 1);
+    }
+}

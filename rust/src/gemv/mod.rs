@@ -1,0 +1,14 @@
+//! The GEMV benchmarking study (§VI-C, Fig 11): analytical cycle models
+//! mapping an M×N matrix-vector product onto a **single BRAM block** of
+//! each architecture, for persistent (load cycles excluded) and
+//! non-persistent / tiling (load cycles included) computation styles.
+
+pub mod bramac_model;
+pub mod cim_model;
+pub mod sweep;
+pub mod workload;
+
+pub use bramac_model::BramacGemvModel;
+pub use cim_model::{CimArch, CimGemvModel};
+pub use sweep::{fig11_sweep, Fig11Cell};
+pub use workload::{ComputeStyle, GemvWorkload};

@@ -1,0 +1,142 @@
+//! Fig 11: the GEMV speedup sweep — BRAMAC-1DA over CCB and CoMeFa
+//! across matrix sizes, precisions and computation styles.
+
+use crate::arch::Precision;
+use crate::bramac::Variant;
+
+use super::bramac_model::BramacGemvModel;
+use super::cim_model::{CimArch, CimGemvModel};
+use super::workload::{ComputeStyle, GemvWorkload};
+
+/// Matrix-size grid of Fig 11 (inferred from §VI-C's worked examples:
+/// row sizes 64..160, column sizes 128..480).
+pub const ROW_SIZES: [usize; 4] = [64, 96, 128, 160];
+pub const COL_SIZES: [usize; 4] = [128, 256, 384, 480];
+
+/// One heatmap cell.
+#[derive(Debug, Clone, Copy)]
+pub struct Fig11Cell {
+    pub m: usize,
+    pub n: usize,
+    pub precision: Precision,
+    pub style: ComputeStyle,
+    pub bramac_cycles: u64,
+    pub ccb_cycles: u64,
+    pub comefa_cycles: u64,
+    pub speedup_vs_ccb: f64,
+    pub speedup_vs_comefa: f64,
+}
+
+/// Compute one cell of Fig 11 (speedups based on cycle counts, §VI-C).
+pub fn fig11_cell(m: usize, n: usize, precision: Precision, style: ComputeStyle) -> Fig11Cell {
+    let w = GemvWorkload::new(m, n, precision, style);
+    let bramac = BramacGemvModel::new(Variant::OneDA).cycles(&w).total;
+    let ccb = CimGemvModel::new(CimArch::Ccb).cycles(&w).total;
+    let comefa = CimGemvModel::new(CimArch::ComefaD).cycles(&w).total;
+    Fig11Cell {
+        m,
+        n,
+        precision,
+        style,
+        bramac_cycles: bramac,
+        ccb_cycles: ccb,
+        comefa_cycles: comefa,
+        speedup_vs_ccb: ccb as f64 / bramac as f64,
+        speedup_vs_comefa: comefa as f64 / bramac as f64,
+    }
+}
+
+/// The full 3-precision × 2-style sweep over the matrix grid.
+pub fn fig11_sweep() -> Vec<Fig11Cell> {
+    let mut cells = Vec::new();
+    for style in ComputeStyle::ALL {
+        for p in Precision::ALL {
+            for &n in &COL_SIZES {
+                for &m in &ROW_SIZES {
+                    cells.push(fig11_cell(m, n, p, style));
+                }
+            }
+        }
+    }
+    cells
+}
+
+/// Peak speedup vs CCB for a (precision, style) slice — the numbers
+/// quoted in §VI-C ("up to 3.3x/2.8x/2.4x ... and 4.1x/3.4x/2.8x").
+pub fn peak_speedup(p: Precision, style: ComputeStyle) -> f64 {
+    fig11_sweep()
+        .into_iter()
+        .filter(|c| c.precision == p && c.style == style)
+        .map(|c| c.speedup_vs_ccb)
+        .fold(0.0, f64::max)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gemv::workload::ComputeStyle::*;
+
+    #[test]
+    fn headline_peak_speedups() {
+        // §VI-C: up to 3.3x/2.8x/2.4x persistent and 4.1x/3.4x/2.8x
+        // non-persistent for 2/4/8-bit. Tolerance ±15% — our CIM mapper
+        // is a reconstruction (DESIGN.md §5).
+        let cases = [
+            (Precision::Int2, Persistent, 3.3),
+            (Precision::Int4, Persistent, 2.8),
+            (Precision::Int8, Persistent, 2.4),
+            (Precision::Int2, NonPersistent, 4.1),
+            (Precision::Int4, NonPersistent, 3.4),
+            (Precision::Int8, NonPersistent, 2.8),
+        ];
+        for (p, style, want) in cases {
+            let got = peak_speedup(p, style);
+            assert!(
+                (got - want).abs() / want < 0.15,
+                "{p} {}: peak {got:.2} vs paper {want}",
+                style.name()
+            );
+        }
+    }
+
+    #[test]
+    fn bramac_wins_every_cell() {
+        // §VI-C: "BRAMAC-1DA still achieves better performance for all
+        // cases".
+        for c in fig11_sweep() {
+            assert!(c.speedup_vs_ccb > 1.0, "{c:?}");
+            assert!(c.speedup_vs_comefa > 1.0, "{c:?}");
+        }
+    }
+
+    #[test]
+    fn nonpersistent_speedup_higher() {
+        // §VI-C: "BRAMAC-1DA achieves higher speedup for non-persistent
+        // computation thanks to its eFSM".
+        for p in Precision::ALL {
+            assert!(
+                peak_speedup(p, NonPersistent) > peak_speedup(p, Persistent),
+                "{p}"
+            );
+        }
+    }
+
+    #[test]
+    fn speedup_decreases_with_precision() {
+        for style in ComputeStyle::ALL {
+            let s2 = peak_speedup(Precision::Int2, style);
+            let s4 = peak_speedup(Precision::Int4, style);
+            let s8 = peak_speedup(Precision::Int8, style);
+            assert!(s2 > s4 && s4 > s8, "{style:?}: {s2} {s4} {s8}");
+        }
+    }
+
+    #[test]
+    fn row_size_160_darker_than_64_at_2bit() {
+        // §VI-C: full vectorization at M=160 gives better speedup than
+        // M=64 (the 80%-efficiency first column).
+        let c64 = fig11_cell(64, 128, Precision::Int2, Persistent);
+        let c160 = fig11_cell(160, 128, Precision::Int2, Persistent);
+        assert!(c160.speedup_vs_ccb > c64.speedup_vs_ccb);
+    }
+}

@@ -1,0 +1,72 @@
+//! GEMV workload description shared by the per-architecture mappers.
+
+use crate::arch::Precision;
+
+/// Persistent vs non-persistent computation (§VI-C): both tile the
+/// matrix through the single BRAM block; they differ in whether the
+/// cycles spent loading matrix data into the block are counted.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ComputeStyle {
+    /// Weights assumed resident; load cycles excluded.
+    Persistent,
+    /// Tiling-based: load cycles included. BRAMAC can overlap loads with
+    /// compute thanks to the eFSM's port freeing; CCB/CoMeFa cannot.
+    NonPersistent,
+}
+
+impl ComputeStyle {
+    pub const ALL: [ComputeStyle; 2] = [ComputeStyle::Persistent, ComputeStyle::NonPersistent];
+
+    pub fn name(self) -> &'static str {
+        match self {
+            ComputeStyle::Persistent => "persistent",
+            ComputeStyle::NonPersistent => "non-persistent",
+        }
+    }
+}
+
+/// One GEMV problem instance: `y = W·x`, `W: M×N` at `precision`.
+/// "Row size" in Fig 11 = M (outputs); "column size" = N (dot length).
+#[derive(Debug, Clone, Copy)]
+pub struct GemvWorkload {
+    pub m: usize,
+    pub n: usize,
+    pub precision: Precision,
+    pub style: ComputeStyle,
+}
+
+impl GemvWorkload {
+    pub fn new(m: usize, n: usize, precision: Precision, style: ComputeStyle) -> Self {
+        assert!(m > 0 && n > 0);
+        GemvWorkload { m, n, precision, style }
+    }
+
+    /// Total MAC operations.
+    pub fn macs(&self) -> u64 {
+        (self.m * self.n) as u64
+    }
+
+    /// Matrix bits to load in non-persistent mode.
+    pub fn matrix_bits(&self) -> u64 {
+        (self.m * self.n) as u64 * self.precision.bits() as u64
+    }
+
+    /// Cycles to stream the matrix through a 40-bit BRAM write port.
+    pub fn load_cycles(&self) -> u64 {
+        self.matrix_bits().div_ceil(40)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn load_cycles_word_granular() {
+        let w = GemvWorkload::new(160, 128, Precision::Int2, ComputeStyle::NonPersistent);
+        // 160*128*2 = 40960 bits = 1024 words.
+        assert_eq!(w.load_cycles(), 1024);
+        let w8 = GemvWorkload::new(160, 128, Precision::Int8, ComputeStyle::NonPersistent);
+        assert_eq!(w8.load_cycles(), 4096);
+    }
+}

@@ -1,0 +1,50 @@
+//! # bramac — a full software reproduction of BRAMAC
+//!
+//! BRAMAC ("Compute-in-BRAM Architectures for Multiply-Accumulate on
+//! FPGAs", Chen & Abdelfattah, 2023) augments Intel M20K block RAMs with a
+//! small 7-row "dummy" compute array, a sign-extension mux, a 160-bit SIMD
+//! adder and an embedded FSM so that each BRAM can compute two 2's
+//! complement multiply-accumulates (a *MAC2*, `P = W1*I1 + W2*I2`) per
+//! pass using a hybrid bit-serial & bit-parallel dataflow, while the main
+//! BRAM ports stay available for tiling-based DNN acceleration.
+//!
+//! This crate is the L3 (coordination + simulation) layer of a three-layer
+//! Rust + JAX + Pallas stack:
+//!
+//! * [`bramac`](crate::bramac) — **bit-accurate behavioral model** of the
+//!   BRAMAC block (dummy array, eFSM, CIM instruction set, SIMD adder)
+//!   for both paper variants (2SA and 1DA).
+//! * [`analytical`] — COFFE-style area/delay/power models (Fig 7, Fig 8).
+//! * [`cim`], [`dsp`], [`throughput`], [`storage`] — the comparison
+//!   architectures (CCB, CoMeFa, eDSP, PIR-DSP) and the peak-throughput /
+//!   utilization-efficiency studies (Table II, Fig 9, Fig 10).
+//! * [`gemv`] — the analytical GEMV mapping study (Fig 11).
+//! * [`dla`] — a cycle-accurate model of Intel's DLA accelerator, the
+//!   DLA-BRAMAC extension, and the design-space exploration that
+//!   regenerates Table III and Fig 13.
+//! * [`runtime`] — PJRT executor that loads the AOT-compiled JAX/Pallas
+//!   artifacts (`artifacts/*.hlo.txt`); Python is never on this path.
+//! * [`coordinator`] — the tiling-based inference coordinator: tiler,
+//!   double-buffered weight streaming (the eFSM port-freeing contribution),
+//!   dynamic batcher and async serving loop.
+//!
+//! See `DESIGN.md` for the experiment index and the
+//! hardware-to-simulation substitution map, and `EXPERIMENTS.md` for
+//! paper-vs-measured results.
+
+pub mod analytical;
+pub mod arch;
+pub mod bramac;
+pub mod cim;
+pub mod coordinator;
+pub mod dla;
+pub mod dsp;
+pub mod gemv;
+pub mod quant;
+pub mod report;
+pub mod runtime;
+pub mod storage;
+pub mod throughput;
+pub mod util;
+
+pub use arch::Precision;

@@ -1,0 +1,241 @@
+//! bramac-sim — CLI for the BRAMAC reproduction.
+//!
+//! One subcommand per paper experiment plus the serving / e2e drivers.
+//! Run `bramac-sim help` for usage. (Argument parsing is hand-rolled —
+//! the build environment has no clap; see Cargo.toml.)
+
+use std::time::Duration;
+
+use anyhow::{bail, Result};
+
+use bramac::arch::Precision;
+use bramac::bramac::Variant;
+use bramac::coordinator::batcher::submit_and_wait;
+use bramac::coordinator::server::{InferenceServer, IMAGE_ELEMS};
+use bramac::coordinator::BlockPool;
+use bramac::gemv::{fig11_sweep, ComputeStyle};
+use bramac::quant::{random_vector, IntMatrix};
+use bramac::report;
+use bramac::runtime::Manifest;
+use bramac::util::Rng;
+
+const HELP: &str = "\
+bramac-sim — BRAMAC: Compute-in-BRAM Architectures for MAC on FPGAs
+(full software reproduction; see DESIGN.md / EXPERIMENTS.md)
+
+USAGE: bramac-sim <command> [options]
+
+experiment regeneration (paper tables & figures):
+  table1          baseline Arria-10 GX900 resources
+  fig7            adder design-space study (RCA/CBA/CLA)
+  fig8            dummy-array area & delay breakdown
+  table2          feature comparison of MAC architectures
+  fig9            peak MAC throughput stack
+  fig10           BRAM utilization efficiency for model storage
+  fig11           GEMV speedup heatmaps (BRAMAC-1DA vs CCB/CoMeFa)
+  table3          DSE-optimal DLA / DLA-BRAMAC configurations
+  fig13           DLA-BRAMAC vs DLA performance/area comparison
+  energy          per-MAC energy comparison (our extension)
+  all             every experiment above, in order
+
+drivers:
+  gemv [--m M] [--n N] [--bits B] [--blocks K] [--variant 2sa|1da]
+                  run an exact GEMV on a simulated BRAMAC block pool
+  serve [--requests R] [--window-ms W]
+                  start the batched PJRT inference server on a
+                  synthetic request stream and report throughput
+  check           verify artifacts + PJRT runtime are functional
+";
+
+fn main() {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    if let Err(e) = run(&args) {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+/// Tiny flag parser: `--key value` pairs after the subcommand.
+fn flag<T: std::str::FromStr>(args: &[String], key: &str, default: T) -> Result<T> {
+    for i in 0..args.len() {
+        if args[i] == key {
+            let v = args
+                .get(i + 1)
+                .ok_or_else(|| anyhow::anyhow!("{key} needs a value"))?;
+            return v
+                .parse()
+                .map_err(|_| anyhow::anyhow!("invalid value for {key}: {v}"));
+        }
+    }
+    Ok(default)
+}
+
+fn run(args: &[String]) -> Result<()> {
+    let cmd = args.first().map(String::as_str).unwrap_or("help");
+    match cmd {
+        "help" | "--help" | "-h" => print!("{HELP}"),
+        "table1" => println!("{}", report::table1()),
+        "fig7" => println!("{}", report::fig7()),
+        "fig8" => println!("{}", report::fig8()),
+        "table2" => println!("{}", report::table2()),
+        "fig9" => println!("{}", report::fig9()),
+        "fig10" => println!("{}", report::fig10()),
+        "fig11" => println!("{}", report::fig11()),
+        "table3" => println!("{}", report::table3_report()),
+        "fig13" => println!("{}", report::fig13()),
+        "energy" => println!("{}", report::energy()),
+        "all" => {
+            for section in [
+                report::table1(),
+                report::fig7(),
+                report::fig8(),
+                report::table2(),
+                report::fig9(),
+                report::fig10(),
+                report::fig11(),
+                report::table3_report(),
+                report::fig13(),
+                report::energy(),
+            ] {
+                println!("{section}");
+                println!("{}", "=".repeat(78));
+            }
+        }
+        "gemv" => cmd_gemv(&args[1..])?,
+        "serve" => cmd_serve(&args[1..])?,
+        "check" => cmd_check()?,
+        other => bail!("unknown command '{other}' (try `bramac-sim help`)"),
+    }
+    Ok(())
+}
+
+fn cmd_gemv(args: &[String]) -> Result<()> {
+    let m: usize = flag(args, "--m", 160)?;
+    let n: usize = flag(args, "--n", 256)?;
+    let bits: u32 = flag(args, "--bits", 4)?;
+    let blocks: usize = flag(args, "--blocks", 4)?;
+    let variant_s: String = flag(args, "--variant", "1da".to_string())?;
+    let p = Precision::from_bits(bits)
+        .ok_or_else(|| anyhow::anyhow!("--bits must be 2, 4 or 8"))?;
+    let variant = match variant_s.as_str() {
+        "2sa" => Variant::TwoSA,
+        "1da" => Variant::OneDA,
+        v => bail!("--variant must be 2sa or 1da, got {v}"),
+    };
+    let mut rng = Rng::seed_from_u64(0xce11);
+    let w = IntMatrix::random(&mut rng, m, n, p);
+    let x = random_vector(&mut rng, n, p, true);
+    let mut pool = BlockPool::new(variant, blocks, p);
+    let t0 = std::time::Instant::now();
+    let (y, stats) = pool.run_gemv(&w, &x);
+    let dt = t0.elapsed();
+    assert_eq!(y, w.gemv_ref(&x), "bit-accurate result must match reference");
+    println!(
+        "GEMV {m}x{n} @ {p} on {blocks}x {} blocks: bit-exact vs reference",
+        variant.name()
+    );
+    println!(
+        "  tiles={} mac2s={} makespan={} cycles exposed-loads={} ({} host µs)",
+        stats.tiles,
+        stats.mac2s,
+        stats.makespan_cycles,
+        stats.exposed_load_cycles,
+        dt.as_micros()
+    );
+    let fmax = variant.fmax_mhz(&bramac::arch::FreqModel::default());
+    println!(
+        "  simulated time at {:.0} MHz: {:.2} µs  ({:.2} GMAC/s effective)",
+        fmax,
+        stats.makespan_cycles as f64 / fmax,
+        (m * n) as f64 / (stats.makespan_cycles as f64 / fmax) / 1e3
+    );
+    // Contrast with the Fig 11 analytical models.
+    let cell = fig11_sweep()
+        .into_iter()
+        .find(|c| c.precision == p && c.style == ComputeStyle::NonPersistent);
+    if let Some(c) = cell {
+        println!(
+            "  (Fig 11 reference point {}x{}: {:.2}x vs CCB)",
+            c.m, c.n, c.speedup_vs_ccb
+        );
+    }
+    Ok(())
+}
+
+fn cmd_serve(args: &[String]) -> Result<()> {
+    let requests: usize = flag(args, "--requests", 64)?;
+    let window_ms: u64 = flag(args, "--window-ms", 10)?;
+    let dir = Manifest::default_dir();
+    let server = InferenceServer::start(dir, "model", Duration::from_millis(window_ms))?;
+    println!(
+        "serving synthetic stream: {requests} requests, batch={} window={window_ms}ms",
+        server.batch_size
+    );
+    let t0 = std::time::Instant::now();
+    let mut rng = Rng::seed_from_u64(0x5eed);
+    let mut handles = Vec::new();
+    for _ in 0..requests {
+        let tx = server.handle();
+        let img: Vec<i32> = (0..IMAGE_ELEMS)
+            .map(|_| rng.gen_range_i64(0, 7) as i32)
+            .collect();
+        handles.push(std::thread::spawn(move || {
+            submit_and_wait(&tx, img).expect("reply")
+        }));
+    }
+    let mut top1 = vec![0usize; 10];
+    for h in handles {
+        let logits = h.join().unwrap();
+        let argmax = logits
+            .iter()
+            .enumerate()
+            .max_by_key(|(_, v)| **v)
+            .map(|(i, _)| i)
+            .unwrap_or(0);
+        top1[argmax] += 1;
+    }
+    let wall = t0.elapsed();
+    let stats = server.shutdown();
+    println!(
+        "done: {} requests in {} batches, wall {:.1} ms ({:.1} req/s)",
+        stats.requests,
+        stats.batches,
+        wall.as_secs_f64() * 1e3,
+        stats.requests as f64 / wall.as_secs_f64()
+    );
+    println!(
+        "  PJRT exec time {:.1} ms total; attributed DLA-BRAMAC cycles {}",
+        stats.exec_micros as f64 / 1e3,
+        stats.attributed_cycles
+    );
+    println!("  class histogram {top1:?}");
+    Ok(())
+}
+
+fn cmd_check() -> Result<()> {
+    let dir = Manifest::default_dir();
+    let m = Manifest::load(&dir)?;
+    println!("manifest: {} artifacts in {}", m.artifacts.len(), dir.display());
+    let rt = bramac::runtime::Runtime::with_dir(&dir)?;
+    println!("PJRT platform: {}", rt.platform());
+    // Exercise one gemv artifact end to end against the host reference.
+    let name = m
+        .artifacts
+        .keys()
+        .find(|k| k.starts_with("gemv_mac2_p4"))
+        .ok_or_else(|| anyhow::anyhow!("no 4-bit gemv artifact"))?
+        .clone();
+    let spec = m.get(&name)?;
+    let (mm, nn) = (spec.meta_usize("m").unwrap(), spec.meta_usize("n").unwrap());
+    let mut rng = Rng::seed_from_u64(7);
+    let w: Vec<i32> = (0..mm * nn).map(|_| rng.gen_range_i64(-7, 7) as i32).collect();
+    let x: Vec<i32> = (0..nn).map(|_| rng.gen_range_i64(-7, 7) as i32).collect();
+    let y = rt.execute_i32(&name, &[&w, &x])?;
+    for r in 0..mm {
+        let want: i32 = (0..nn).map(|c| w[r * nn + c] * x[c]).sum();
+        anyhow::ensure!(y[r] == want, "mismatch at row {r}");
+    }
+    println!("artifact {name}: {mm}x{nn} GEMV bit-exact vs host reference");
+    println!("check OK");
+    Ok(())
+}

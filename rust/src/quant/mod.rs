@@ -1,0 +1,126 @@
+//! Integer tensors and quantization utilities shared by the simulators
+//! and the coordinator (host-side mirror of `python/compile/model.py`).
+
+use crate::arch::Precision;
+use crate::util::Rng;
+
+/// A row-major 2-D integer matrix of n-bit values (stored widened).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct IntMatrix {
+    pub rows: usize,
+    pub cols: usize,
+    pub data: Vec<i64>,
+    pub precision: Precision,
+}
+
+impl IntMatrix {
+    pub fn zeros(rows: usize, cols: usize, precision: Precision) -> Self {
+        IntMatrix {
+            rows,
+            cols,
+            data: vec![0; rows * cols],
+            precision,
+        }
+    }
+
+    /// Uniform random matrix over the signed n-bit range.
+    pub fn random(rng: &mut Rng, rows: usize, cols: usize, precision: Precision) -> Self {
+        let (lo, hi) = precision.range();
+        IntMatrix {
+            rows,
+            cols,
+            data: (0..rows * cols)
+                .map(|_| rng.gen_range_i64(lo as i64, hi as i64))
+                .collect(),
+            precision,
+        }
+    }
+
+    #[inline]
+    pub fn get(&self, r: usize, c: usize) -> i64 {
+        self.data[r * self.cols + c]
+    }
+
+    #[inline]
+    pub fn set(&mut self, r: usize, c: usize, v: i64) {
+        let (lo, hi) = self.precision.range();
+        debug_assert!((lo as i64..=hi as i64).contains(&v));
+        self.data[r * self.cols + c] = v;
+    }
+
+    pub fn row(&self, r: usize) -> &[i64] {
+        &self.data[r * self.cols..(r + 1) * self.cols]
+    }
+
+    /// Reference GEMV: `y = self · x` with wide accumulation.
+    pub fn gemv_ref(&self, x: &[i64]) -> Vec<i64> {
+        assert_eq!(x.len(), self.cols);
+        (0..self.rows)
+            .map(|r| self.row(r).iter().zip(x).map(|(&w, &v)| w * v).sum())
+            .collect()
+    }
+
+    /// Transpose (the offline weight transposition of §III-B).
+    pub fn transposed(&self) -> IntMatrix {
+        let mut t = IntMatrix::zeros(self.cols, self.rows, self.precision);
+        for r in 0..self.rows {
+            for c in 0..self.cols {
+                t.data[c * self.rows + r] = self.get(r, c);
+            }
+        }
+        t
+    }
+}
+
+/// Random vector over the n-bit range (signed or unsigned).
+pub fn random_vector(rng: &mut Rng, len: usize, p: Precision, signed: bool) -> Vec<i64> {
+    let (lo, hi) = if signed { p.range() } else { p.range_unsigned() };
+    (0..len).map(|_| rng.gen_range_i64(lo as i64, hi as i64)).collect()
+}
+
+/// Symmetric quantization of f32 data (mirror of model.quantize_sym).
+pub fn quantize_sym(x: &[f32], p: Precision) -> (Vec<i64>, f32) {
+    let qmax = ((1i64 << (p.bits() - 1)) - 1) as f32;
+    let amax = x.iter().fold(1e-8f32, |m, v| m.max(v.abs()));
+    let scale = amax / qmax;
+    let q = x
+        .iter()
+        .map(|v| ((v / scale).round().clamp(-qmax, qmax)) as i64)
+        .collect();
+    (q, scale)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn gemv_ref_simple() {
+        let mut m = IntMatrix::zeros(2, 3, Precision::Int4);
+        m.set(0, 0, 1);
+        m.set(0, 1, 2);
+        m.set(0, 2, 3);
+        m.set(1, 0, -4);
+        m.set(1, 1, 5);
+        m.set(1, 2, -6);
+        assert_eq!(m.gemv_ref(&[7, -8, 2]), vec![-3, -80]);
+    }
+
+    #[test]
+    fn transpose_roundtrip() {
+        let mut rng = Rng::seed_from_u64(5);
+        let m = IntMatrix::random(&mut rng, 7, 13, Precision::Int8);
+        assert_eq!(m.transposed().transposed(), m);
+    }
+
+    #[test]
+    fn quantize_sym_bounds() {
+        let x: Vec<f32> = (-50..50).map(|i| i as f32 / 10.0).collect();
+        for p in Precision::ALL {
+            let (q, scale) = quantize_sym(&x, p);
+            let (lo, hi) = p.range();
+            assert!(q.iter().all(|&v| v >= lo as i64 && v <= hi as i64));
+            assert!(scale > 0.0);
+        }
+    }
+}

@@ -1,0 +1,379 @@
+//! Table/figure renderers shared by the CLI, examples and benches —
+//! each function regenerates one of the paper's tables or figures as a
+//! formatted text table.
+
+mod table;
+
+pub use table::Table;
+
+use crate::analytical::adder::{chosen_adder, fig7_data};
+use crate::analytical::{DummyArrayAreaModel, DummyArrayDelayModel, EnergyModel};
+use crate::arch::{FreqModel, Precision, ResourceArea, ARRIA10_GX900};
+use crate::bramac::Variant;
+use crate::cim::{mac_latency_cycles, Ccb, Comefa, CIM_LANES};
+use crate::dla::compare::{average_speedup, compare_all};
+use crate::dla::dse::table3;
+use crate::dla::models::{alexnet, resnet34};
+use crate::dsp::DspArch;
+use crate::gemv::sweep::{fig11_sweep, COL_SIZES, ROW_SIZES};
+use crate::gemv::ComputeStyle;
+use crate::storage::{average_efficiency, utilization_efficiency, StorageArch};
+use crate::throughput::{peak_throughput, Architecture};
+
+/// Table I: baseline device resources.
+pub fn table1() -> String {
+    let d = ARRIA10_GX900;
+    let mut t = Table::new(vec!["Resource", "Count", "Area Ratio"]);
+    t.row(vec![
+        "Logic Blocks (LBs)".into(),
+        d.counts.logic_blocks.to_string(),
+        format!("{:.1}%", d.lb_area_ratio * 100.0),
+    ]);
+    t.row(vec![
+        "DSP Units".into(),
+        d.counts.dsps.to_string(),
+        format!("{:.1}%", d.dsp_area_ratio * 100.0),
+    ]);
+    t.row(vec![
+        "BRAMs (M20K)".into(),
+        d.counts.brams.to_string(),
+        format!("{:.1}%", d.bram_area_ratio * 100.0),
+    ]);
+    format!(
+        "Table I: Resource counts and area ratio of the baseline {}\n(BRAM count: paper's Table I misprints 33920; the GX900 has 2713 M20Ks)\n{}",
+        d.name,
+        t.render()
+    )
+}
+
+/// Fig 7: adder comparison.
+pub fn fig7() -> String {
+    let mut out = String::from("Fig 7(a): adder delay (ps) vs precision\n");
+    let data = fig7_data();
+    let mut t = Table::new(vec!["bits", "RCA", "CBA", "CLA"]);
+    for i in 0..data[0].delay_by_precision.len() {
+        let bits = data[0].delay_by_precision[i].0;
+        t.row(vec![
+            bits.to_string(),
+            format!("{:.1}", data[0].delay_by_precision[i].1),
+            format!("{:.1}", data[1].delay_by_precision[i].1),
+            format!("{:.1}", data[2].delay_by_precision[i].1),
+        ]);
+    }
+    out.push_str(&t.render());
+    out.push_str("\nFig 7(b): area & power at 32-bit\n");
+    let mut t2 = Table::new(vec!["adder", "area (um^2)", "power (uW)"]);
+    for row in &data {
+        t2.row(vec![
+            row.kind.name().into(),
+            format!("{:.1}", row.area_32b),
+            format!("{:.1}", row.power_32b),
+        ]);
+    }
+    out.push_str(&t2.render());
+    out.push_str(&format!("\nchosen adder: {}\n", chosen_adder().name()));
+    out
+}
+
+/// Fig 8: dummy-array area and delay breakdowns.
+pub fn fig8() -> String {
+    let area = DummyArrayAreaModel::default();
+    let delay = DummyArrayDelayModel;
+    let mut out = String::from("Fig 8(a): dummy array area breakdown\n");
+    let mut t = Table::new(vec!["component", "area (um^2)", "share"]);
+    for (name, a) in area.breakdown() {
+        t.row(vec![
+            name.into(),
+            format!("{a:.1}"),
+            format!("{:.1}%", a / area.total_um2 * 100.0),
+        ]);
+    }
+    t.row(vec![
+        "TOTAL".into(),
+        format!("{:.1}", area.total_um2),
+        format!("+{:.1}% vs M20K", area.overhead_vs_m20k() * 100.0),
+    ]);
+    out.push_str(&t.render());
+    out.push_str("\nFig 8(b): critical-path delay breakdown\n");
+    let mut t2 = Table::new(vec!["stage", "delay (ps)"]);
+    for (name, d) in delay.breakdown() {
+        t2.row(vec![name.into(), format!("{d:.1}")]);
+    }
+    t2.row(vec![
+        "TOTAL".into(),
+        format!("{:.1} (Fmax {:.0} MHz)", delay.critical_path_ps(), delay.standalone_fmax_mhz()),
+    ]);
+    out.push_str(&t2.render());
+    let ra = ResourceArea::default();
+    out.push_str(&format!(
+        "\neFSM area: 2SA {:.0} um^2 ({:.1}% of M20K), 1DA {:.0} um^2 ({:.1}% of M20K)\n",
+        ra.efsm_2sa_um2,
+        ra.efsm_ratio_2sa() * 100.0,
+        ra.efsm_1da_um2,
+        ra.efsm_ratio_1da() * 100.0
+    ));
+    out
+}
+
+/// Table II: feature comparison of MAC architectures.
+pub fn table2() -> String {
+    let f = FreqModel::default();
+    let mut t = Table::new(vec![
+        "Architecture",
+        "Block",
+        "Area ovh (blk)",
+        "Area ovh (core)",
+        "Clk ovh",
+        "2b MACs/lat",
+        "4b MACs/lat",
+        "8b MACs/lat",
+    ]);
+    let dsp_rows: Vec<(String, &str, f64, f64, f64)> = vec![
+        ("eDSP".into(), "DSP", 0.12, 0.011, f.dsp_mhz / DspArch::Edsp.fmax_mhz(&f) - 1.0),
+        ("PIR-DSP".into(), "DSP", 0.28, 0.027, f.dsp_mhz / DspArch::PirDsp.fmax_mhz(&f) - 1.0),
+    ];
+    for (name, blk, aob, aoc, clk) in dsp_rows {
+        let arch = if name == "eDSP" { DspArch::Edsp } else { DspArch::PirDsp };
+        t.row(vec![
+            name,
+            blk.into(),
+            format!("{:.1}%", aob * 100.0),
+            format!("{:.1}%", aoc * 100.0),
+            format!("{:.0}%", clk * 100.0),
+            format!("{} / 1", arch.macs_per_cycle(Precision::Int2)),
+            format!("{} / 1", arch.macs_per_cycle(Precision::Int4)),
+            format!("{} / 1", arch.macs_per_cycle(Precision::Int8)),
+        ]);
+    }
+    let cim_lat = |p: Precision| format!("{} / {}", CIM_LANES, mac_latency_cycles(p.bits()));
+    t.row(vec![
+        "CCB".into(),
+        "BRAM".into(),
+        format!("{:.1}%", Ccb::BLOCK_AREA_OVERHEAD * 100.0),
+        format!("{:.1}%", Ccb::CORE_AREA_OVERHEAD * 100.0),
+        "60%".into(),
+        cim_lat(Precision::Int2),
+        cim_lat(Precision::Int4),
+        cim_lat(Precision::Int8),
+    ]);
+    for c in [Comefa::d(), Comefa::a()] {
+        t.row(vec![
+            c.name().into(),
+            "BRAM".into(),
+            format!("{:.1}%", c.block_area_overhead() * 100.0),
+            format!("{:.1}%", c.core_area_overhead() * 100.0),
+            format!("{:.0}%", f.m20k_mhz / c.fmax_mhz(&f) * 100.0 - 100.0),
+            cim_lat(Precision::Int2),
+            cim_lat(Precision::Int4),
+            cim_lat(Precision::Int8),
+        ]);
+    }
+    for v in Variant::ALL {
+        let mac = |p: Precision| {
+            format!("{} / {}", v.macs_in_parallel(p), v.mac2_cycles(p, true))
+        };
+        t.row(vec![
+            v.name().into(),
+            "BRAM".into(),
+            format!("{:.1}%", v.block_area_overhead() * 100.0),
+            format!("{:.1}%", ARRIA10_GX900.core_area_increase(v.block_area_overhead()) * 100.0),
+            format!("{:.0}%", f.m20k_mhz / v.fmax_mhz(&f) * 100.0 - 100.0),
+            mac(Precision::Int2),
+            mac(Precision::Int4),
+            mac(Precision::Int8),
+        ]);
+    }
+    format!("Table II: key features of BRAMAC and prior MAC architectures\n{}", t.render())
+}
+
+/// Fig 9: peak MAC throughput.
+pub fn fig9() -> String {
+    let d = ARRIA10_GX900;
+    let f = FreqModel::default();
+    let mut out = String::from("Fig 9: peak MAC throughput (TeraMACs/s), LB + DSP + BRAM\n");
+    for p in Precision::ALL {
+        out.push_str(&format!("\n  precision {p}\n"));
+        let mut t = Table::new(vec!["architecture", "LB", "DSP", "BRAM", "total", "gain"]);
+        let base = peak_throughput(Architecture::Baseline, p, &d, &f).total();
+        for arch in Architecture::ALL {
+            let b = peak_throughput(arch, p, &d, &f);
+            t.row(vec![
+                arch.name().into(),
+                format!("{:.2}", b.lb / 1e12),
+                format!("{:.2}", b.dsp / 1e12),
+                format!("{:.2}", b.bram / 1e12),
+                format!("{:.2}", b.total() / 1e12),
+                format!("{:.2}x", b.total() / base),
+            ]);
+        }
+        out.push_str(&t.render());
+    }
+    out
+}
+
+/// Fig 10: BRAM utilization efficiency.
+pub fn fig10() -> String {
+    let mut t = Table::new(vec!["precision", "BRAMAC", "CCB-Pack-2", "CCB-Pack-4", "CoMeFa"]);
+    for bits in 2..=8u32 {
+        t.row(vec![
+            format!("{bits}-bit"),
+            format!("{:.1}%", utilization_efficiency(StorageArch::Bramac, bits) * 100.0),
+            format!("{:.1}%", utilization_efficiency(StorageArch::CcbPack2, bits) * 100.0),
+            format!("{:.1}%", utilization_efficiency(StorageArch::CcbPack4, bits) * 100.0),
+            format!("{:.1}%", utilization_efficiency(StorageArch::Comefa, bits) * 100.0),
+        ]);
+    }
+    t.row(vec![
+        "average".into(),
+        format!("{:.1}%", average_efficiency(StorageArch::Bramac) * 100.0),
+        format!("{:.1}%", average_efficiency(StorageArch::CcbPack2) * 100.0),
+        format!("{:.1}%", average_efficiency(StorageArch::CcbPack4) * 100.0),
+        format!("{:.1}%", average_efficiency(StorageArch::Comefa) * 100.0),
+    ]);
+    let bramac = average_efficiency(StorageArch::Bramac);
+    format!(
+        "Fig 10: BRAM utilization efficiency for DNN model storage\n{}\nBRAMAC avg vs CCB: {:.2}x, vs CoMeFa: {:.2}x (paper: 1.3x / 1.1x)\n",
+        t.render(),
+        bramac / crate::storage::average_ccb(),
+        bramac / average_efficiency(StorageArch::Comefa),
+    )
+}
+
+/// Fig 11: GEMV speedup heatmaps.
+pub fn fig11() -> String {
+    let cells = fig11_sweep();
+    let mut out = String::from(
+        "Fig 11: GEMV speedup (cycles) of BRAMAC-1DA over CCB / CoMeFa-D\n(rows: matrix column size N; cols: matrix row size M)\n",
+    );
+    for style in ComputeStyle::ALL {
+        for p in Precision::ALL {
+            out.push_str(&format!("\n  {p}, {}  (vs CCB | vs CoMeFa)\n", style.name()));
+            let mut t = Table::new(
+                std::iter::once("N \\ M".to_string())
+                    .chain(ROW_SIZES.iter().map(|m| m.to_string()))
+                    .collect(),
+            );
+            for &n in COL_SIZES.iter().rev() {
+                let mut row = vec![n.to_string()];
+                for &m in &ROW_SIZES {
+                    let c = cells
+                        .iter()
+                        .find(|c| {
+                            c.m == m && c.n == n && c.precision == p && c.style == style
+                        })
+                        .unwrap();
+                    row.push(format!(
+                        "{:.2} | {:.2}",
+                        c.speedup_vs_ccb, c.speedup_vs_comefa
+                    ));
+                }
+                t.row(row);
+            }
+            out.push_str(&t.render());
+        }
+    }
+    out
+}
+
+/// Table III: DSE-optimal configurations.
+pub fn table3_report() -> String {
+    let mut out = String::from(
+        "Table III: optimal configurations (DSE, objective perf*(perf/area))\nconfig = (Qvec1[+Qvec2], Cvec, Kvec)\n",
+    );
+    for net in [alexnet(), resnet34()] {
+        out.push_str(&format!("\n  {}\n", net.name));
+        let mut t = Table::new(vec![
+            "accelerator",
+            "precision",
+            "config",
+            "DSPs",
+            "BRAMs",
+            "cycles",
+        ]);
+        for r in table3(&net) {
+            let cfg = r.config;
+            let cfg_s = if cfg.qvec2 > 0 {
+                format!("({}+{}, {}, {})", cfg.qvec1, cfg.qvec2, cfg.cvec, cfg.kvec)
+            } else {
+                format!("({}, {}, {})", cfg.qvec1, cfg.cvec, cfg.kvec)
+            };
+            t.row(vec![
+                cfg.kind.name().into(),
+                cfg.precision.to_string(),
+                cfg_s,
+                r.dsps.to_string(),
+                r.brams.to_string(),
+                r.cycles.to_string(),
+            ]);
+        }
+        out.push_str(&t.render());
+    }
+    out
+}
+
+/// Energy comparison (our extension — quantifies §I's CIM argument).
+pub fn energy() -> String {
+    let e = EnergyModel::default();
+    let mut t = Table::new(vec![
+        "precision",
+        "DSP path (reuse=1)",
+        "DSP path (reuse=64)",
+        "BRAMAC-2SA",
+        "BRAMAC-1DA",
+        "bit-serial CIM",
+    ]);
+    for p in Precision::ALL {
+        t.row(vec![
+            p.to_string(),
+            format!("{:.2}", e.baseline_mac(p, 1.0)),
+            format!("{:.2}", e.baseline_mac(p, 64.0)),
+            format!("{:.2}", e.bramac_mac(Variant::TwoSA, p)),
+            format!("{:.2}", e.bramac_mac(Variant::OneDA, p)),
+            format!("{:.2}", e.cim_bitserial_mac(p)),
+        ]);
+    }
+    format!(
+        "Energy per MAC (relative units, 1.0 = baseline DSP 8-bit MAC)\n\
+         (our extension; quantifies the paper's qualitative §I claim)\n{}",
+        t.render()
+    )
+}
+
+/// Fig 13: DLA vs DLA-BRAMAC comparison.
+pub fn fig13() -> String {
+    let rows = compare_all();
+    let mut out = String::from("Fig 13: DLA-BRAMAC vs DLA (DSE-optimal configs)\n");
+    let mut t = Table::new(vec![
+        "model",
+        "precision",
+        "variant",
+        "speedup",
+        "area ratio",
+        "perf/area",
+    ]);
+    for r in &rows {
+        t.row(vec![
+            r.network.into(),
+            r.precision.to_string(),
+            r.variant.name().into(),
+            format!("{:.2}x", r.speedup),
+            format!("{:.2}x", r.area_ratio),
+            format!("{:.2}x", r.perf_per_area_gain),
+        ]);
+    }
+    out.push_str(&t.render());
+    out.push_str("\naverages (paper: AlexNet 2.05x/1.7x, ResNet-34 1.33x/1.52x):\n");
+    for (net, v) in [
+        ("AlexNet", Variant::TwoSA),
+        ("AlexNet", Variant::OneDA),
+        ("ResNet-34", Variant::TwoSA),
+        ("ResNet-34", Variant::OneDA),
+    ] {
+        out.push_str(&format!(
+            "  {net} {}: {:.2}x\n",
+            v.name(),
+            average_speedup(&rows, net, v)
+        ));
+    }
+    out
+}

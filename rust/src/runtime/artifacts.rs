@@ -1,0 +1,131 @@
+//! Artifact manifest: what `python -m compile.aot` emitted.
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{bail, Context, Result};
+
+use crate::util::json::{self, Json};
+
+/// One exported computation.
+#[derive(Debug, Clone)]
+pub struct ArtifactSpec {
+    pub name: String,
+    /// HLO text file, relative to the artifact dir.
+    pub file: String,
+    /// Input shapes (row-major dims) — all int32 in this project.
+    pub input_shapes: Vec<Vec<usize>>,
+    /// Free-form metadata (kind, precision, m/n/k, ...).
+    pub meta: BTreeMap<String, Json>,
+}
+
+impl ArtifactSpec {
+    pub fn meta_usize(&self, key: &str) -> Option<usize> {
+        self.meta.get(key)?.as_usize()
+    }
+
+    pub fn kind(&self) -> &str {
+        self.meta
+            .get("kind")
+            .and_then(|j| j.as_str())
+            .unwrap_or("unknown")
+    }
+}
+
+/// The parsed `manifest.json`.
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub artifacts: BTreeMap<String, ArtifactSpec>,
+}
+
+impl Manifest {
+    /// Load `manifest.json` from an artifact directory.
+    pub fn load(dir: impl AsRef<Path>) -> Result<Manifest> {
+        let dir = dir.as_ref().to_path_buf();
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {} (run `make artifacts`)", path.display()))?;
+        let root = json::parse(&text).map_err(|e| anyhow::anyhow!("parsing manifest: {e}"))?;
+        if root.get("format").and_then(|f| f.as_str()) != Some("hlo-text") {
+            bail!("unsupported artifact format (want hlo-text)");
+        }
+        let mut artifacts = BTreeMap::new();
+        let arts = root
+            .get("artifacts")
+            .and_then(|a| a.as_obj())
+            .context("manifest missing artifacts object")?;
+        for (name, meta) in arts {
+            let file = meta
+                .get("file")
+                .and_then(|f| f.as_str())
+                .context("artifact missing file")?
+                .to_string();
+            let mut input_shapes = Vec::new();
+            for input in meta.get("inputs").and_then(|i| i.as_arr()).unwrap_or(&[]) {
+                let dims = input
+                    .get("shape")
+                    .and_then(|s| s.as_arr())
+                    .context("input missing shape")?
+                    .iter()
+                    .map(|d| d.as_usize().context("bad dim"))
+                    .collect::<Result<Vec<_>>>()?;
+                input_shapes.push(dims);
+            }
+            artifacts.insert(
+                name.clone(),
+                ArtifactSpec {
+                    name: name.clone(),
+                    file,
+                    input_shapes,
+                    meta: meta.as_obj().cloned().unwrap_or_default(),
+                },
+            );
+        }
+        Ok(Manifest { dir, artifacts })
+    }
+
+    /// Default artifact dir: `$BRAMAC_ARTIFACTS` or `./artifacts`.
+    pub fn default_dir() -> PathBuf {
+        std::env::var_os("BRAMAC_ARTIFACTS")
+            .map(PathBuf::from)
+            .unwrap_or_else(|| PathBuf::from("artifacts"))
+    }
+
+    pub fn get(&self, name: &str) -> Result<&ArtifactSpec> {
+        self.artifacts
+            .get(name)
+            .with_context(|| format!("artifact '{name}' not in manifest"))
+    }
+
+    pub fn hlo_path(&self, spec: &ArtifactSpec) -> PathBuf {
+        self.dir.join(&spec.file)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn manifest_parses_when_artifacts_built() {
+        let dir = Manifest::default_dir();
+        if !dir.join("manifest.json").exists() {
+            eprintln!("skipping: artifacts not built");
+            return;
+        }
+        let m = Manifest::load(&dir).unwrap();
+        assert!(m.artifacts.contains_key("model"));
+        let model = m.get("model").unwrap();
+        assert_eq!(model.kind(), "cnn");
+        assert_eq!(model.input_shapes[0].len(), 4);
+        assert!(m.hlo_path(model).exists());
+        // gemv artifacts for all three precisions
+        for p in [2, 4, 8] {
+            assert!(
+                m.artifacts.keys().any(|k| k.contains(&format!("_p{p}_"))),
+                "missing gemv p{p}"
+            );
+        }
+    }
+}

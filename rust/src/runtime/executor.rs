@@ -1,0 +1,160 @@
+//! PJRT execution: compile HLO-text artifacts once, run them many times.
+
+use std::collections::HashMap;
+use std::path::Path;
+use std::sync::Mutex;
+
+use anyhow::{Context, Result};
+
+use super::artifacts::{ArtifactSpec, Manifest};
+
+/// A compiled, executable artifact set on the CPU PJRT client.
+///
+/// Compilation happens lazily (first call per artifact) and is cached;
+/// `Runtime` is `Sync` so the coordinator's worker threads can share it
+/// (PJRT execution itself is thread-safe; the cache is mutex-guarded).
+pub struct Runtime {
+    client: xla::PjRtClient,
+    manifest: Manifest,
+    cache: Mutex<HashMap<String, xla::PjRtLoadedExecutable>>,
+}
+
+impl Runtime {
+    /// Create a runtime over the default artifact directory.
+    pub fn new() -> Result<Runtime> {
+        Self::with_dir(Manifest::default_dir())
+    }
+
+    pub fn with_dir(dir: impl AsRef<Path>) -> Result<Runtime> {
+        let manifest = Manifest::load(dir)?;
+        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        Ok(Runtime {
+            client,
+            manifest,
+            cache: Mutex::new(HashMap::new()),
+        })
+    }
+
+    pub fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    fn compile(&self, name: &str) -> Result<()> {
+        let mut cache = self.cache.lock().unwrap();
+        if cache.contains_key(name) {
+            return Ok(());
+        }
+        let spec = self.manifest.get(name)?;
+        let path = self.manifest.hlo_path(spec);
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().context("non-utf8 artifact path")?,
+        )
+        .with_context(|| format!("parsing HLO text {}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .with_context(|| format!("compiling artifact '{name}'"))?;
+        cache.insert(name.to_string(), exe);
+        Ok(())
+    }
+
+    /// Execute artifact `name` with int32 inputs, returning the flattened
+    /// int32 output. Input order and shapes must match the manifest spec
+    /// (checked). The AOT side lowers with `return_tuple=True`, so the
+    /// single output is unwrapped from a 1-tuple.
+    pub fn execute_i32(&self, name: &str, inputs: &[&[i32]]) -> Result<Vec<i32>> {
+        let spec = self.manifest.get(name)?.clone();
+        self.validate_inputs(&spec, inputs)?;
+        self.compile(name)?;
+        let literals: Vec<xla::Literal> = inputs
+            .iter()
+            .zip(&spec.input_shapes)
+            .map(|(data, dims)| {
+                let lit = xla::Literal::vec1(data);
+                let dims_i64: Vec<i64> = dims.iter().map(|&d| d as i64).collect();
+                lit.reshape(&dims_i64)
+                    .with_context(|| format!("reshaping input to {dims:?}"))
+            })
+            .collect::<Result<Vec<_>>>()?;
+        let cache = self.cache.lock().unwrap();
+        let exe = cache.get(name).expect("compiled above");
+        let result = exe
+            .execute::<xla::Literal>(&literals)
+            .with_context(|| format!("executing '{name}'"))?[0][0]
+            .to_literal_sync()?;
+        drop(cache);
+        let out = result.to_tuple1().context("unwrapping 1-tuple result")?;
+        out.to_vec::<i32>().context("reading int32 output")
+    }
+
+    fn validate_inputs(&self, spec: &ArtifactSpec, inputs: &[&[i32]]) -> Result<()> {
+        anyhow::ensure!(
+            inputs.len() == spec.input_shapes.len(),
+            "artifact '{}' wants {} inputs, got {}",
+            spec.name,
+            spec.input_shapes.len(),
+            inputs.len()
+        );
+        for (i, (data, dims)) in inputs.iter().zip(&spec.input_shapes).enumerate() {
+            let want: usize = dims.iter().product();
+            anyhow::ensure!(
+                data.len() == want,
+                "input {i} of '{}': {} elements, shape {:?} wants {}",
+                spec.name,
+                data.len(),
+                dims,
+                want
+            );
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn runtime_or_skip() -> Option<Runtime> {
+        if !Manifest::default_dir().join("manifest.json").exists() {
+            eprintln!("skipping: artifacts not built");
+            return None;
+        }
+        Some(Runtime::new().expect("runtime"))
+    }
+
+    #[test]
+    fn gemm_artifact_matches_host_math() {
+        let Some(rt) = runtime_or_skip() else { return };
+        let name = "gemm_i32_32x128x32";
+        let spec = rt.manifest().get(name).unwrap().clone();
+        let (m, k, n) = (
+            spec.meta_usize("m").unwrap(),
+            spec.meta_usize("k").unwrap(),
+            spec.meta_usize("n").unwrap(),
+        );
+        let mut rng = crate::util::Rng::seed_from_u64(0x6e44);
+        let a: Vec<i32> = (0..m * k).map(|_| rng.gen_range_i64(-7, 7) as i32).collect();
+        let b: Vec<i32> = (0..k * n).map(|_| rng.gen_range_i64(-7, 7) as i32).collect();
+        let got = rt.execute_i32(name, &[&a, &b]).unwrap();
+        assert_eq!(got.len(), m * n);
+        for i in 0..m {
+            for j in 0..n {
+                let want: i32 = (0..k).map(|x| a[i * k + x] * b[x * n + j]).sum();
+                assert_eq!(got[i * n + j], want, "({i},{j})");
+            }
+        }
+    }
+
+    #[test]
+    fn input_validation() {
+        let Some(rt) = runtime_or_skip() else { return };
+        let bad: Vec<i32> = vec![0; 7];
+        assert!(rt.execute_i32("gemm_i32_32x128x32", &[&bad, &bad]).is_err());
+        assert!(rt.execute_i32("nonexistent", &[]).is_err());
+    }
+}

@@ -1,0 +1,13 @@
+//! PJRT runtime: loads the AOT-compiled JAX/Pallas artifacts
+//! (`artifacts/*.hlo.txt`) and executes them on the CPU PJRT client.
+//!
+//! This is the only place the Rust side touches XLA; Python is never on
+//! the request path. Interchange is HLO **text** — the image's
+//! xla_extension 0.5.1 rejects jax≥0.5's 64-bit-id serialized protos,
+//! while the text parser reassigns ids (see /opt/xla-example/README.md).
+
+pub mod artifacts;
+pub mod executor;
+
+pub use artifacts::{ArtifactSpec, Manifest};
+pub use executor::Runtime;

@@ -1,0 +1,99 @@
+//! BRAM utilization efficiency for DNN model storage (Fig 10).
+//!
+//! Utilization efficiency = "the effective capacity ratio of a BRAM that
+//! can be used to store weight" (§VI-B). BRAMAC computes in the separate
+//! dummy array, so the main array stores weights at 100% for its native
+//! precisions and rounds odd precisions up via sign-extension; CCB and
+//! CoMeFa spend main-array rows on operand copies, products and partial
+//! sums.
+
+use crate::arch::Precision;
+use crate::cim::{Ccb, Comefa};
+
+/// Architectures in the Fig 10 comparison.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum StorageArch {
+    Bramac,
+    CcbPack2,
+    CcbPack4,
+    Comefa,
+}
+
+impl StorageArch {
+    pub const ALL: [StorageArch; 4] = [
+        StorageArch::Bramac,
+        StorageArch::CcbPack2,
+        StorageArch::CcbPack4,
+        StorageArch::Comefa,
+    ];
+
+    pub fn name(self) -> &'static str {
+        match self {
+            StorageArch::Bramac => "BRAMAC",
+            StorageArch::CcbPack2 => "CCB-Pack-2",
+            StorageArch::CcbPack4 => "CCB-Pack-4",
+            StorageArch::Comefa => "CoMeFa",
+        }
+    }
+}
+
+/// Utilization efficiency at weight precision `bits` (2..=8).
+pub fn utilization_efficiency(arch: StorageArch, bits: u32) -> f64 {
+    assert!((2..=8).contains(&bits));
+    match arch {
+        StorageArch::Bramac => {
+            // 100% at 2/4/8; other precisions sign-extend up (§VI-B).
+            let stored = Precision::storage_for(bits).unwrap().bits();
+            bits as f64 / stored as f64
+        }
+        StorageArch::CcbPack2 => Ccb::pack2().storage_efficiency(bits),
+        StorageArch::CcbPack4 => Ccb::pack4().storage_efficiency(bits),
+        StorageArch::Comefa => Comefa::storage_efficiency(bits),
+    }
+}
+
+/// Average across 2..=8-bit (the Fig 10 summary statistic).
+pub fn average_efficiency(arch: StorageArch) -> f64 {
+    (2..=8).map(|b| utilization_efficiency(arch, b)).sum::<f64>() / 7.0
+}
+
+/// Average CCB efficiency across the two packing variants.
+pub fn average_ccb() -> f64 {
+    (average_efficiency(StorageArch::CcbPack2) + average_efficiency(StorageArch::CcbPack4)) / 2.0
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bramac_native_precisions_are_full() {
+        for bits in [2, 4, 8] {
+            assert_eq!(utilization_efficiency(StorageArch::Bramac, bits), 1.0);
+        }
+        assert_eq!(utilization_efficiency(StorageArch::Bramac, 3), 0.75);
+        assert_eq!(utilization_efficiency(StorageArch::Bramac, 5), 0.625);
+        assert_eq!(utilization_efficiency(StorageArch::Bramac, 7), 0.875);
+    }
+
+    #[test]
+    fn paper_average_ratios() {
+        // §VI-B: BRAMAC's average is 1.3x CCB's and 1.1x CoMeFa's.
+        let bramac = average_efficiency(StorageArch::Bramac);
+        assert!((bramac - 6.0 / 7.0).abs() < 1e-9);
+        let vs_ccb = bramac / average_ccb();
+        let vs_comefa = bramac / average_efficiency(StorageArch::Comefa);
+        assert!((vs_ccb - 1.3).abs() < 0.05, "vs CCB: {vs_ccb:.3}");
+        assert!((vs_comefa - 1.1).abs() < 0.05, "vs CoMeFa: {vs_comefa:.3}");
+    }
+
+    #[test]
+    fn bramac_highest_at_every_native_precision() {
+        for bits in [2u32, 4, 8] {
+            let b = utilization_efficiency(StorageArch::Bramac, bits);
+            for arch in [StorageArch::CcbPack2, StorageArch::CcbPack4, StorageArch::Comefa] {
+                assert!(b > utilization_efficiency(arch, bits));
+            }
+        }
+    }
+}

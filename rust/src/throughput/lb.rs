@@ -1,0 +1,54 @@
+//! Soft-logic (LB) MAC throughput model (§VI-A method (1)).
+//!
+//! The paper synthesizes one MAC in soft logic with Quartus, then
+//! "optimistically assumes all LBs can be used at the same Fmax".
+//! Quartus is unavailable here, so the (ALMs/MAC, Fmax) pairs are
+//! calibrated constants (see `analytical::calib::LB_MAC_CALIB` and
+//! DESIGN.md §6) chosen so the baseline stack reproduces the paper's
+//! headline throughput gains; the resulting costs are in the plausible
+//! range of [20].
+
+use crate::analytical::calib::LB_MAC_CALIB;
+use crate::arch::{Device, Precision, MHZ};
+
+/// ALMs per Arria-10 LAB.
+pub const ALMS_PER_LB: f64 = 10.0;
+
+/// (ALMs per MAC, Fmax MHz) for a soft-logic MAC at precision `p`.
+pub fn lb_mac_cost(p: Precision) -> (f64, f64) {
+    let row = LB_MAC_CALIB
+        .iter()
+        .find(|(bits, _, _)| *bits == p.bits())
+        .expect("calibration covers 2/4/8");
+    (row.1, row.2)
+}
+
+/// Device-wide LB MAC throughput in MACs/s.
+pub fn lb_peak_macs_per_sec(device: &Device, p: Precision) -> f64 {
+    let (alms_per_mac, fmax) = lb_mac_cost(p);
+    let total_alms = device.counts.logic_blocks as f64 * ALMS_PER_LB;
+    (total_alms / alms_per_mac) * fmax * MHZ
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::arch::ARRIA10_GX900;
+
+    #[test]
+    fn throughput_decreases_with_precision() {
+        let d = ARRIA10_GX900;
+        let t2 = lb_peak_macs_per_sec(&d, Precision::Int2);
+        let t4 = lb_peak_macs_per_sec(&d, Precision::Int4);
+        let t8 = lb_peak_macs_per_sec(&d, Precision::Int8);
+        assert!(t2 > t4 && t4 > t8);
+    }
+
+    #[test]
+    fn magnitudes_terascale() {
+        // 2-bit soft-logic MACs on a big device land in the TMAC/s range
+        // (Fig 9a's baseline bar).
+        let t2 = lb_peak_macs_per_sec(&ARRIA10_GX900, Precision::Int2);
+        assert!(t2 > 5e12 && t2 < 20e12, "{t2}");
+    }
+}

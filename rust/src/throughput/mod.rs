@@ -1,0 +1,6 @@
+//! Peak MAC throughput study (Fig 9) and the LB soft-logic model.
+
+pub mod lb;
+pub mod peak;
+
+pub use peak::{peak_throughput, Architecture, ThroughputBreakdown};

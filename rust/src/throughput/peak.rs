@@ -1,0 +1,226 @@
+//! Fig 9: peak MAC throughput of the whole device, broken down into
+//! LB + DSP + BRAM contributions, for every studied architecture.
+//!
+//! Each architecture replaces exactly one block type of the baseline
+//! Arria-10 (§V-D): DSP architectures swap the DSP block, BRAM
+//! architectures swap the M20K; LBs always contribute the soft-logic
+//! term. BRAM MAC throughput per block = parallel MACs / latency × Fmax.
+
+use crate::arch::{Device, FreqModel, Precision, MHZ};
+use crate::bramac::Variant;
+use crate::cim::{mac_latency_cycles, CIM_LANES};
+use crate::dsp::DspArch;
+
+use super::lb::lb_peak_macs_per_sec;
+
+/// Architectures compared in Fig 9.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Architecture {
+    Baseline,
+    Edsp,
+    PirDsp,
+    Ccb,
+    ComefaD,
+    ComefaA,
+    Bramac2sa,
+    Bramac1da,
+}
+
+impl Architecture {
+    pub const ALL: [Architecture; 8] = [
+        Architecture::Baseline,
+        Architecture::Edsp,
+        Architecture::PirDsp,
+        Architecture::Ccb,
+        Architecture::ComefaD,
+        Architecture::ComefaA,
+        Architecture::Bramac2sa,
+        Architecture::Bramac1da,
+    ];
+
+    pub fn name(self) -> &'static str {
+        match self {
+            Architecture::Baseline => "Baseline Arria-10",
+            Architecture::Edsp => "eDSP",
+            Architecture::PirDsp => "PIR-DSP",
+            Architecture::Ccb => "CCB",
+            Architecture::ComefaD => "CoMeFa-D",
+            Architecture::ComefaA => "CoMeFa-A",
+            Architecture::Bramac2sa => "BRAMAC-2SA",
+            Architecture::Bramac1da => "BRAMAC-1DA",
+        }
+    }
+
+    /// Core-area overhead vs the baseline device (Table II).
+    pub fn core_area_overhead(self) -> f64 {
+        match self {
+            Architecture::Baseline => 0.0,
+            Architecture::Edsp => 0.011,
+            Architecture::PirDsp => 0.027,
+            Architecture::Ccb => 0.034,
+            Architecture::ComefaD => 0.051,
+            Architecture::ComefaA => 0.016,
+            Architecture::Bramac2sa => 0.068,
+            Architecture::Bramac1da => 0.034,
+        }
+    }
+}
+
+/// Per-resource peak throughput (MACs/s).
+#[derive(Debug, Clone, Copy)]
+pub struct ThroughputBreakdown {
+    pub arch: Architecture,
+    pub precision: Precision,
+    pub lb: f64,
+    pub dsp: f64,
+    pub bram: f64,
+}
+
+impl ThroughputBreakdown {
+    pub fn total(&self) -> f64 {
+        self.lb + self.dsp + self.bram
+    }
+
+    pub fn total_tera_macs(&self) -> f64 {
+        self.total() / 1e12
+    }
+}
+
+/// BRAM-architecture per-block throughput in MACs/s.
+fn bram_block_macs_per_sec(arch: Architecture, p: Precision, f: &FreqModel) -> f64 {
+    match arch {
+        Architecture::Baseline | Architecture::Edsp | Architecture::PirDsp => 0.0,
+        Architecture::Ccb => {
+            CIM_LANES as f64 / mac_latency_cycles(p.bits()) as f64 * f.ccb_mhz() * MHZ
+        }
+        Architecture::ComefaD => {
+            CIM_LANES as f64 / mac_latency_cycles(p.bits()) as f64 * f.comefa_d_mhz() * MHZ
+        }
+        Architecture::ComefaA => {
+            CIM_LANES as f64 / mac_latency_cycles(p.bits()) as f64 * f.comefa_a_mhz() * MHZ
+        }
+        Architecture::Bramac2sa => {
+            let v = Variant::TwoSA;
+            v.macs_in_parallel(p) as f64 / v.mac2_cycles(p, true) as f64
+                * v.fmax_mhz(f)
+                * MHZ
+        }
+        Architecture::Bramac1da => {
+            let v = Variant::OneDA;
+            v.macs_in_parallel(p) as f64 / v.mac2_cycles(p, true) as f64
+                * v.fmax_mhz(f)
+                * MHZ
+        }
+    }
+}
+
+/// DSP contribution: the architecture's DSP block (or the baseline DSP
+/// when the architecture modifies BRAMs instead).
+fn dsp_arch_for(arch: Architecture) -> DspArch {
+    match arch {
+        Architecture::Edsp => DspArch::Edsp,
+        Architecture::PirDsp => DspArch::PirDsp,
+        _ => DspArch::Baseline,
+    }
+}
+
+/// Compute the Fig 9 breakdown for one (architecture, precision) cell.
+pub fn peak_throughput(
+    arch: Architecture,
+    p: Precision,
+    device: &Device,
+    f: &FreqModel,
+) -> ThroughputBreakdown {
+    let lb = lb_peak_macs_per_sec(device, p);
+    let d = dsp_arch_for(arch);
+    let dsp = device.counts.dsps as f64 * d.macs_per_cycle(p) as f64 * d.fmax_mhz(f) * MHZ;
+    let bram = device.counts.brams as f64 * bram_block_macs_per_sec(arch, p, f);
+    ThroughputBreakdown {
+        arch,
+        precision: p,
+        lb,
+        dsp,
+        bram,
+    }
+}
+
+/// Gain of `arch` over the baseline at precision `p`.
+pub fn gain_over_baseline(arch: Architecture, p: Precision, device: &Device, f: &FreqModel) -> f64 {
+    peak_throughput(arch, p, device, f).total()
+        / peak_throughput(Architecture::Baseline, p, device, f).total()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::arch::ARRIA10_GX900;
+
+    fn gain(arch: Architecture, p: Precision) -> f64 {
+        gain_over_baseline(arch, p, &ARRIA10_GX900, &FreqModel::default())
+    }
+
+    #[test]
+    fn headline_gains_match_abstract() {
+        // Abstract: BRAMAC-2SA/1DA boost peak MAC throughput by
+        // 2.6x/2.1x (2-bit), 2.3x/2.0x (4-bit), 1.9x/1.7x (8-bit).
+        let cases = [
+            (Architecture::Bramac2sa, Precision::Int2, 2.6),
+            (Architecture::Bramac2sa, Precision::Int4, 2.3),
+            (Architecture::Bramac2sa, Precision::Int8, 1.9),
+            (Architecture::Bramac1da, Precision::Int2, 2.1),
+            (Architecture::Bramac1da, Precision::Int4, 2.0),
+            (Architecture::Bramac1da, Precision::Int8, 1.7),
+        ];
+        for (arch, p, want) in cases {
+            let g = gain(arch, p);
+            assert!(
+                (g - want).abs() < 0.06,
+                "{} {p}: gain {g:.3} vs paper {want}",
+                arch.name()
+            );
+        }
+    }
+
+    #[test]
+    fn bramac_beats_ccb_and_comefa() {
+        // §VI-A: CCB/CoMeFa "suffer from long-latency bit-serial
+        // arithmetic, leading to lower throughput than BRAMAC".
+        for p in Precision::ALL {
+            let b2 = gain(Architecture::Bramac2sa, p);
+            for other in [Architecture::Ccb, Architecture::ComefaD, Architecture::ComefaA] {
+                assert!(b2 > gain(other, p), "{p} {}", other.name());
+            }
+        }
+    }
+
+    #[test]
+    fn bramac_2sa_beats_dsp_archs() {
+        // §VI-A: "BRAMAC-2SA can deliver higher MAC throughput across all
+        // precisions" vs eDSP/PIR-DSP.
+        for p in Precision::ALL {
+            let b2 = gain(Architecture::Bramac2sa, p);
+            assert!(b2 > gain(Architecture::Edsp, p));
+            assert!(b2 > gain(Architecture::PirDsp, p));
+        }
+    }
+
+    #[test]
+    fn baseline_bram_contributes_zero() {
+        let t = peak_throughput(
+            Architecture::Baseline,
+            Precision::Int4,
+            &ARRIA10_GX900,
+            &FreqModel::default(),
+        );
+        assert_eq!(t.bram, 0.0);
+        assert!(t.lb > 0.0 && t.dsp > 0.0);
+    }
+
+    #[test]
+    fn gains_shrink_with_precision() {
+        for arch in [Architecture::Bramac2sa, Architecture::Bramac1da] {
+            assert!(gain(arch, Precision::Int2) > gain(arch, Precision::Int4));
+            assert!(gain(arch, Precision::Int4) > gain(arch, Precision::Int8));
+        }
+    }
+}

@@ -1,0 +1,147 @@
+//! Micro-benchmark harness (replaces criterion; see util/mod.rs).
+//!
+//! Usage in a `harness = false` bench target:
+//!
+//! ```ignore
+//! let mut b = Bench::new("fig11_gemv");
+//! b.bench("bramac_1da/4bit/160x256", || { ... });
+//! b.finish();
+//! ```
+//!
+//! Each benchmark is warmed up, then run for a target wall time; median,
+//! mean and min are reported. `finish()` prints a summary table so
+//! `cargo bench` output doubles as the figure/table regeneration log.
+
+use std::time::{Duration, Instant};
+
+pub struct BenchResult {
+    pub name: String,
+    pub iters: u64,
+    pub median_ns: f64,
+    pub mean_ns: f64,
+    pub min_ns: f64,
+}
+
+pub struct Bench {
+    suite: String,
+    target_time: Duration,
+    results: Vec<BenchResult>,
+}
+
+/// Prevent the optimizer from discarding a computed value.
+#[inline]
+pub fn black_box<T>(x: T) -> T {
+    std::hint::black_box(x)
+}
+
+impl Bench {
+    pub fn new(suite: &str) -> Self {
+        // Honor a quick mode for CI: BENCH_QUICK=1 shortens runs.
+        let quick = std::env::var("BENCH_QUICK").is_ok();
+        Bench {
+            suite: suite.to_string(),
+            target_time: if quick {
+                Duration::from_millis(120)
+            } else {
+                Duration::from_millis(600)
+            },
+            results: Vec::new(),
+        }
+    }
+
+    pub fn with_target_time(mut self, d: Duration) -> Self {
+        self.target_time = d;
+        self
+    }
+
+    /// Time `f`, auto-scaling iteration count to the target wall time.
+    pub fn bench<F: FnMut()>(&mut self, name: &str, mut f: F) -> &BenchResult {
+        // Warmup + calibration.
+        let t0 = Instant::now();
+        f();
+        let once = t0.elapsed().max(Duration::from_nanos(50));
+        let per_sample = (self.target_time.as_nanos() / 16 / once.as_nanos().max(1))
+            .clamp(1, 1_000_000) as u64;
+
+        let mut samples = Vec::with_capacity(16);
+        let deadline = Instant::now() + self.target_time;
+        let mut total_iters = 0u64;
+        while Instant::now() < deadline || samples.len() < 4 {
+            let t = Instant::now();
+            for _ in 0..per_sample {
+                f();
+            }
+            let ns = t.elapsed().as_nanos() as f64 / per_sample as f64;
+            samples.push(ns);
+            total_iters += per_sample;
+            if samples.len() >= 64 {
+                break;
+            }
+        }
+        samples.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let median = samples[samples.len() / 2];
+        let mean = samples.iter().sum::<f64>() / samples.len() as f64;
+        let min = samples[0];
+        println!(
+            "{}/{:<52} {:>12} /iter (median), {:>12} (min), {} iters",
+            self.suite,
+            name,
+            fmt_ns(median),
+            fmt_ns(min),
+            total_iters
+        );
+        self.results.push(BenchResult {
+            name: name.to_string(),
+            iters: total_iters,
+            median_ns: median,
+            mean_ns: mean,
+            min_ns: min,
+        });
+        self.results.last().unwrap()
+    }
+
+    /// Print the suite summary (call at the end of main()).
+    pub fn finish(&self) {
+        println!("\n== {} summary ({} benchmarks) ==", self.suite, self.results.len());
+        for r in &self.results {
+            println!("  {:<56} {:>12}", r.name, fmt_ns(r.median_ns));
+        }
+    }
+}
+
+pub fn fmt_ns(ns: f64) -> String {
+    if ns < 1e3 {
+        format!("{ns:.1} ns")
+    } else if ns < 1e6 {
+        format!("{:.2} µs", ns / 1e3)
+    } else if ns < 1e9 {
+        format!("{:.2} ms", ns / 1e6)
+    } else {
+        format!("{:.2} s", ns / 1e9)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_measures_something() {
+        std::env::set_var("BENCH_QUICK", "1");
+        let mut b = Bench::new("selftest").with_target_time(Duration::from_millis(30));
+        let r = b.bench("sum", || {
+            let s: u64 = black_box((0..1000u64).sum());
+            black_box(s);
+        });
+        assert!(r.median_ns > 0.0);
+        assert!(r.iters > 0);
+    }
+
+    #[test]
+    fn fmt_ns_units() {
+        assert!(fmt_ns(5.0).ends_with("ns"));
+        assert!(fmt_ns(5e3).ends_with("µs"));
+        assert!(fmt_ns(5e6).ends_with("ms"));
+        assert!(fmt_ns(5e9).ends_with("s"));
+    }
+}

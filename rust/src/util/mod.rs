@@ -1,0 +1,10 @@
+//! Self-contained utilities: PRNG, JSON emission, micro-bench harness and
+//! property-test helpers (the build environment has no crates.io access
+//! beyond `xla` + `anyhow`, so these replace rand/serde_json/criterion/
+//! proptest).
+
+pub mod bench;
+pub mod json;
+pub mod rng;
+
+pub use rng::Rng;

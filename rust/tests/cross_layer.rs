@@ -1,0 +1,117 @@
+//! Cross-layer integration: the AOT-compiled Pallas kernels (executed
+//! via PJRT from Rust), the bit-accurate dummy-array simulation, and
+//! plain host arithmetic must agree **exactly** on identical data.
+//!
+//! Requires `make artifacts`; tests self-skip when artifacts are absent
+//! so `cargo test` stays green on a fresh checkout.
+
+use bramac::arch::Precision;
+use bramac::bramac::Variant;
+use bramac::coordinator::BlockPool;
+use bramac::quant::{random_vector, IntMatrix};
+use bramac::runtime::{Manifest, Runtime};
+use bramac::util::Rng;
+
+fn runtime_or_skip() -> Option<Runtime> {
+    if !Manifest::default_dir().join("manifest.json").exists() {
+        eprintln!("skipping: artifacts not built (run `make artifacts`)");
+        return None;
+    }
+    Some(Runtime::new().expect("runtime"))
+}
+
+#[test]
+fn gemv_three_way_agreement_all_precisions() {
+    let Some(rt) = runtime_or_skip() else { return };
+    let mut rng = Rng::seed_from_u64(0xC0_55);
+    for p in Precision::ALL {
+        let name = format!("gemv_mac2_p{}_m160_n256", p.bits());
+        let spec = rt.manifest().get(&name).expect("gemv artifact");
+        let (m, n) = (spec.meta_usize("m").unwrap(), spec.meta_usize("n").unwrap());
+        for trial in 0..3 {
+            let w = IntMatrix::random(&mut rng, m, n, p);
+            let x = random_vector(&mut rng, n, p, true);
+            let w32: Vec<i32> = w.data.iter().map(|&v| v as i32).collect();
+            let x32: Vec<i32> = x.iter().map(|&v| v as i32).collect();
+
+            let y_pjrt = rt.execute_i32(&name, &[&w32, &x32]).expect("pjrt exec");
+            let mut pool = BlockPool::new(Variant::OneDA, 2, p);
+            let (y_sim, _) = pool.run_gemv(&w, &x);
+            let y_ref = w.gemv_ref(&x);
+
+            assert_eq!(y_sim, y_ref, "{p} trial {trial}: sim != ref");
+            assert!(
+                y_pjrt.iter().map(|&v| v as i64).eq(y_ref.iter().copied()),
+                "{p} trial {trial}: pjrt != ref"
+            );
+        }
+    }
+}
+
+#[test]
+fn gemv_artifact_edge_inputs() {
+    // Extremes of the operand range through the whole stack.
+    let Some(rt) = runtime_or_skip() else { return };
+    for p in Precision::ALL {
+        let name = format!("gemv_mac2_p{}_m160_n256", p.bits());
+        let spec = rt.manifest().get(&name).unwrap();
+        let (m, n) = (spec.meta_usize("m").unwrap(), spec.meta_usize("n").unwrap());
+        let (lo, hi) = p.range();
+        for (wv, xv) in [(lo, lo), (lo, hi), (hi, hi), (0, lo)] {
+            let w = vec![wv; m * n];
+            let x = vec![xv; n];
+            let y = rt.execute_i32(&name, &[&w, &x]).unwrap();
+            let want = (wv as i64) * (xv as i64) * n as i64;
+            assert!(
+                y.iter().all(|&v| v as i64 == want),
+                "{p} w={wv} x={xv}: got {} want {want}",
+                y[0]
+            );
+        }
+    }
+}
+
+#[test]
+fn conv_layer_artifacts_consistent_with_model() {
+    // Each per-layer conv artifact must agree with the whole-model
+    // artifact when chained with the (host-side) ReLU/requant/pool —
+    // checked indirectly: layer outputs are deterministic and nonzero
+    // for a nonzero input.
+    let Some(rt) = runtime_or_skip() else { return };
+    let spec = rt.manifest().get("cnn_conv1").expect("conv1 artifact");
+    let dims = &spec.input_shapes[0];
+    let len: usize = dims.iter().product();
+    let x = vec![1i32; len];
+    let a = rt.execute_i32("cnn_conv1", &[&x]).unwrap();
+    let b = rt.execute_i32("cnn_conv1", &[&x]).unwrap();
+    assert_eq!(a, b, "conv must be deterministic");
+    assert!(a.iter().any(|&v| v != 0), "conv output all-zero");
+}
+
+#[test]
+fn model_artifact_batch_independence() {
+    // Each image in the static batch must be processed independently:
+    // permuting batch slots permutes logits identically.
+    let Some(rt) = runtime_or_skip() else { return };
+    let spec = rt.manifest().get("model").unwrap();
+    let dims = &spec.input_shapes[0];
+    let (batch, img) = (dims[0], dims[1] * dims[2] * dims[3]);
+    let classes = spec.meta_usize("classes").unwrap();
+    assert!(batch >= 2);
+    let mut rng = Rng::seed_from_u64(3);
+    let a: Vec<i32> = (0..img).map(|_| rng.gen_range_i64(0, 7) as i32).collect();
+    let b: Vec<i32> = (0..img).map(|_| rng.gen_range_i64(0, 7) as i32).collect();
+
+    let mut in1 = vec![0i32; batch * img];
+    in1[..img].copy_from_slice(&a);
+    in1[img..2 * img].copy_from_slice(&b);
+    let out1 = rt.execute_i32("model", &[&in1]).unwrap();
+
+    let mut in2 = vec![0i32; batch * img];
+    in2[..img].copy_from_slice(&b);
+    in2[img..2 * img].copy_from_slice(&a);
+    let out2 = rt.execute_i32("model", &[&in2]).unwrap();
+
+    assert_eq!(&out1[..classes], &out2[classes..2 * classes], "slot swap");
+    assert_eq!(&out1[classes..2 * classes], &out2[..classes], "slot swap");
+}

@@ -1,0 +1,129 @@
+//! Experiment-level integration: every paper table/figure regenerates,
+//! and the cross-experiment invariants the paper's narrative relies on
+//! hold simultaneously.
+
+use bramac::arch::{FreqModel, Precision, ARRIA10_GX900};
+use bramac::bramac::Variant;
+use bramac::dla::compare::{average_speedup, compare_all};
+use bramac::gemv::sweep::fig11_cell;
+use bramac::gemv::ComputeStyle;
+use bramac::report;
+use bramac::storage::{average_efficiency, StorageArch};
+use bramac::throughput::{peak_throughput, Architecture};
+
+#[test]
+fn every_report_renders() {
+    for (name, text) in [
+        ("table1", report::table1()),
+        ("fig7", report::fig7()),
+        ("fig8", report::fig8()),
+        ("table2", report::table2()),
+        ("fig9", report::fig9()),
+        ("fig10", report::fig10()),
+        ("fig11", report::fig11()),
+        ("table3", report::table3_report()),
+        ("fig13", report::fig13()),
+    ] {
+        assert!(text.len() > 100, "{name} suspiciously short");
+        assert!(!text.contains("NaN"), "{name} contains NaN");
+        assert!(!text.contains("inf"), "{name} contains inf");
+    }
+}
+
+#[test]
+fn table2_report_contains_paper_latencies() {
+    let t = report::table2();
+    // BRAMAC-2SA: 80/5, 40/7, 20/11; 1DA: 40/3, 20/4, 10/6; CIM: 160/113.
+    for needle in ["80 / 5", "40 / 7", "20 / 11", "40 / 3", "20 / 4", "10 / 6", "160 / 113"] {
+        assert!(t.contains(needle), "Table II missing '{needle}'\n{t}");
+    }
+}
+
+#[test]
+fn abstract_claims_hold_simultaneously() {
+    let (d, f) = (ARRIA10_GX900, FreqModel::default());
+    // 1. Peak throughput gains (abstract sentence 3).
+    let gain = |a, p| {
+        peak_throughput(a, p, &d, &f).total()
+            / peak_throughput(Architecture::Baseline, p, &d, &f).total()
+    };
+    assert!((gain(Architecture::Bramac2sa, Precision::Int2) - 2.6).abs() < 0.06);
+    assert!((gain(Architecture::Bramac1da, Precision::Int8) - 1.7).abs() < 0.06);
+
+    // 2. Core-area overheads (abstract sentence 3).
+    assert!((d.core_area_increase(0.338) - 0.068).abs() < 0.001);
+    assert!((d.core_area_increase(0.169) - 0.034).abs() < 0.001);
+
+    // 3. Storage-efficiency averages (conclusion).
+    let bramac = average_efficiency(StorageArch::Bramac);
+    assert!(bramac / bramac::storage::average_ccb() > 1.25);
+    assert!(bramac / average_efficiency(StorageArch::Comefa) > 1.05);
+
+    // 4. GEMV wins (conclusion: "significantly outperforming both").
+    for p in Precision::ALL {
+        for style in ComputeStyle::ALL {
+            let c = fig11_cell(160, 256, p, style);
+            assert!(c.speedup_vs_ccb > 1.0 && c.speedup_vs_comefa > 1.0);
+        }
+    }
+
+    // 5. DLA speedups (abstract sentence 4) — shape-level.
+    let rows = compare_all();
+    assert!(average_speedup(&rows, "AlexNet", Variant::TwoSA) > 1.5);
+    assert!(average_speedup(&rows, "ResNet-34", Variant::OneDA) > 1.2);
+}
+
+#[test]
+fn fig9_bram_architectures_never_hurt_lb_dsp() {
+    // Adding compute to BRAMs must not change the LB/DSP terms.
+    let (d, f) = (ARRIA10_GX900, FreqModel::default());
+    for p in Precision::ALL {
+        let base = peak_throughput(Architecture::Baseline, p, &d, &f);
+        for arch in [
+            Architecture::Ccb,
+            Architecture::ComefaD,
+            Architecture::ComefaA,
+            Architecture::Bramac2sa,
+            Architecture::Bramac1da,
+        ] {
+            let t = peak_throughput(arch, p, &d, &f);
+            assert_eq!(t.lb, base.lb);
+            assert_eq!(t.dsp, base.dsp);
+            assert!(t.bram > 0.0);
+        }
+    }
+}
+
+#[test]
+fn fig11_shape_invariants() {
+    for p in Precision::ALL {
+        for style in ComputeStyle::ALL {
+            // Larger N raises CCB's packing (≥160→2 MACs/col) but BRAMAC
+            // scales linearly — speedups stay finite and above 1.
+            for n in [128usize, 256, 480] {
+                let c = fig11_cell(160, n, p, style);
+                assert!(c.speedup_vs_ccb > 1.0 && c.speedup_vs_ccb < 6.0, "{c:?}");
+            }
+        }
+        // Non-persistent ≥ persistent at the same point.
+        let pers = fig11_cell(160, 256, p, ComputeStyle::Persistent);
+        let tile = fig11_cell(160, 256, p, ComputeStyle::NonPersistent);
+        assert!(tile.speedup_vs_ccb >= pers.speedup_vs_ccb * 0.999);
+    }
+}
+
+#[test]
+fn dla_comparison_consistency() {
+    let rows = compare_all();
+    assert_eq!(rows.len(), 12); // 2 nets x 3 precisions x 2 variants
+    for r in &rows {
+        // DSE results respect the device budget.
+        assert!(r.dla.dsps <= 1518 && r.dla_bramac.dsps <= 1518);
+        assert!(r.dla.brams <= 2713 && r.dla_bramac.brams <= 2713);
+        // Speedup consistent with the stored perf values.
+        let expect = r.dla_bramac.perf / r.dla.perf;
+        assert!((r.speedup - expect).abs() < 1e-9);
+        // perf/area gain = speedup / area_ratio.
+        assert!((r.perf_per_area_gain - r.speedup / r.area_ratio).abs() < 1e-9);
+    }
+}

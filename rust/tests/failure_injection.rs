@@ -1,0 +1,72 @@
+//! Failure injection: corrupted artifacts, bad manifests, and invalid
+//! inputs must produce errors (never wrong numbers or hangs).
+
+use bramac::runtime::{Manifest, Runtime};
+use bramac::util::json;
+
+fn tempdir(tag: &str) -> std::path::PathBuf {
+    let d = std::env::temp_dir().join(format!("bramac_fi_{tag}_{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&d);
+    std::fs::create_dir_all(&d).unwrap();
+    d
+}
+
+#[test]
+fn missing_manifest_is_an_error() {
+    let d = tempdir("missing");
+    let err = Manifest::load(&d).unwrap_err().to_string();
+    assert!(err.contains("manifest.json"), "{err}");
+}
+
+#[test]
+fn malformed_manifest_is_an_error() {
+    let d = tempdir("malformed");
+    std::fs::write(d.join("manifest.json"), "{ not json").unwrap();
+    assert!(Manifest::load(&d).is_err());
+}
+
+#[test]
+fn wrong_format_field_is_an_error() {
+    let d = tempdir("format");
+    std::fs::write(
+        d.join("manifest.json"),
+        r#"{"format": "protobuf", "artifacts": {}}"#,
+    )
+    .unwrap();
+    let err = Manifest::load(&d).unwrap_err().to_string();
+    assert!(err.contains("hlo-text"), "{err}");
+}
+
+#[test]
+fn corrupted_hlo_text_fails_at_compile_not_execute() {
+    let d = tempdir("corrupt");
+    std::fs::write(
+        d.join("manifest.json"),
+        r#"{"format": "hlo-text", "artifacts": {"bad": {"file": "bad.hlo.txt", "kind": "gemm", "inputs": [{"shape": [2], "dtype": "int32"}]}}}"#,
+    )
+    .unwrap();
+    std::fs::write(d.join("bad.hlo.txt"), "HloModule garbage %%% not hlo").unwrap();
+    let rt = Runtime::with_dir(&d).expect("client still constructs");
+    let err = rt.execute_i32("bad", &[&[1, 2]]).unwrap_err();
+    let msg = format!("{err:#}");
+    assert!(msg.contains("bad"), "{msg}");
+}
+
+#[test]
+fn artifact_file_missing_is_an_error() {
+    let d = tempdir("nofile");
+    std::fs::write(
+        d.join("manifest.json"),
+        r#"{"format": "hlo-text", "artifacts": {"ghost": {"file": "ghost.hlo.txt", "inputs": [{"shape": [1], "dtype": "int32"}]}}}"#,
+    )
+    .unwrap();
+    let rt = Runtime::with_dir(&d).unwrap();
+    assert!(rt.execute_i32("ghost", &[&[1]]).is_err());
+}
+
+#[test]
+fn json_parser_rejects_garbage_not_panics() {
+    for bad in ["", "{", "[1,", "\"unterminated", "{\"a\": }", "nul"] {
+        assert!(json::parse(bad).is_err(), "{bad:?} should error");
+    }
+}

@@ -1,0 +1,161 @@
+//! Property tests over the BRAMAC core (seeded-random, high volume —
+//! the crate's stand-in for proptest; see Cargo.toml note).
+//!
+//! Invariants:
+//!  * Algorithm 1 == plain multiplication over the full operand space.
+//!  * The bit-level engine == Algorithm 1, lane-wise, for any schedule.
+//!  * A block dot-product == i64 reference for any MAC2 stream.
+//!  * CIM instruction encode/decode is the identity on valid fields.
+//!  * Tiling always covers the matrix exactly once.
+//!  * Cycle accounting equals the closed forms of Table II.
+
+use bramac::arch::Precision;
+use bramac::bramac::instr::CimInstr;
+use bramac::bramac::mac2::mac2_golden;
+use bramac::bramac::{BramacBlock, Variant};
+use bramac::coordinator::tiler::plan_gemv;
+use bramac::coordinator::BlockPool;
+use bramac::quant::{random_vector, IntMatrix};
+use bramac::util::Rng;
+
+const TRIALS: usize = 300;
+
+fn rand_operand(rng: &mut Rng, p: Precision, signed: bool) -> i64 {
+    let (lo, hi) = if signed { p.range() } else { p.range_unsigned() };
+    rng.gen_range_i64(lo as i64, hi as i64)
+}
+
+#[test]
+fn prop_algorithm1_equals_multiplication() {
+    let mut rng = Rng::seed_from_u64(101);
+    for _ in 0..20_000 {
+        let n = rng.gen_range_i64(2, 8) as u32;
+        let signed = rng.gen_bool(0.5);
+        let p_bits_lo = -(1i64 << (n - 1));
+        let p_bits_hi = (1i64 << (n - 1)) - 1;
+        let w1 = rng.gen_range_i64(p_bits_lo, p_bits_hi);
+        let w2 = rng.gen_range_i64(p_bits_lo, p_bits_hi);
+        let (ilo, ihi) = if signed { (p_bits_lo, p_bits_hi) } else { (0, (1 << n) - 1) };
+        let i1 = rng.gen_range_i64(ilo, ihi);
+        let i2 = rng.gen_range_i64(ilo, ihi);
+        assert_eq!(
+            mac2_golden(w1, w2, i1, i2, n, signed),
+            w1 * i1 + w2 * i2,
+            "n={n} signed={signed}"
+        );
+    }
+}
+
+#[test]
+fn prop_block_dot_product_equals_reference() {
+    let mut rng = Rng::seed_from_u64(202);
+    for trial in 0..60 {
+        let variant = if rng.gen_bool(0.5) { Variant::TwoSA } else { Variant::OneDA };
+        let p = Precision::ALL[rng.gen_range_usize(0, 2)];
+        let signed = rng.gen_bool(0.5);
+        let n_mac2 = rng.gen_range_usize(1, 12);
+        let mut block = BramacBlock::new(variant, p);
+        block.reset_acc();
+        let lanes = p.lanes_per_word();
+        let mut expect = vec![vec![0i64; lanes]; variant.dummy_arrays()];
+        for k in 0..n_mac2 {
+            let w1: Vec<i64> = (0..lanes).map(|_| rand_operand(&mut rng, p, true)).collect();
+            let w2: Vec<i64> = (0..lanes).map(|_| rand_operand(&mut rng, p, true)).collect();
+            block.write_word(2 * k as u16, bramac::bramac::signext::pack_word(&w1, p));
+            block.write_word(2 * k as u16 + 1, bramac::bramac::signext::pack_word(&w2, p));
+            let pairs: Vec<(i64, i64)> = (0..variant.dummy_arrays())
+                .map(|_| (rand_operand(&mut rng, p, signed), rand_operand(&mut rng, p, signed)))
+                .collect();
+            block.mac2(2 * k as u16, 2 * k as u16 + 1, &pairs, signed);
+            for (arr, &(i1, i2)) in pairs.iter().enumerate() {
+                for l in 0..lanes {
+                    expect[arr][l] += w1[l] * i1 + w2[l] * i2;
+                }
+            }
+        }
+        assert_eq!(
+            block.read_accumulators(),
+            expect,
+            "trial {trial} {} {p} signed={signed}",
+            variant.name()
+        );
+    }
+}
+
+#[test]
+fn prop_instruction_roundtrip() {
+    let mut rng = Rng::seed_from_u64(303);
+    for _ in 0..TRIALS * 10 {
+        let instr = CimInstr {
+            inputs: [rng.next_u32() as u8, rng.next_u32() as u8],
+            bram_row: rng.gen_range_i64(0, 127) as u8,
+            bram_row2: rng.gen_range_i64(0, 127) as u8,
+            bram_col: rng.gen_range_i64(0, 3) as u8,
+            precision: Precision::ALL[rng.gen_range_usize(0, 2)],
+            signed_inputs: rng.gen_bool(0.5),
+            reset: rng.gen_bool(0.5),
+            start: rng.gen_bool(0.5),
+            copy: rng.gen_bool(0.5),
+            w1_w2: rng.gen_bool(0.5),
+            done: rng.gen_bool(0.5),
+        };
+        let mut i2sa = instr;
+        i2sa.bram_row2 = 0;
+        assert_eq!(CimInstr::decode_2sa(i2sa.encode_2sa()), Some(i2sa));
+        let mut i1da = instr;
+        i1da.w1_w2 = false;
+        assert_eq!(CimInstr::decode_1da(i1da.encode_1da()), Some(i1da));
+    }
+}
+
+#[test]
+fn prop_tiling_covers_exactly_once() {
+    let mut rng = Rng::seed_from_u64(404);
+    for _ in 0..TRIALS {
+        let m = rng.gen_range_usize(1, 300);
+        let n = rng.gen_range_usize(1, 1200);
+        let p = Precision::ALL[rng.gen_range_usize(0, 2)];
+        let plan = plan_gemv(m, n, p, rng.gen_bool(0.5));
+        assert!(plan.covers_exactly_once(), "{m}x{n} {p}");
+    }
+}
+
+#[test]
+fn prop_pool_gemv_exact_random_shapes() {
+    let mut rng = Rng::seed_from_u64(505);
+    for trial in 0..25 {
+        let m = rng.gen_range_usize(1, 90);
+        let n = rng.gen_range_usize(1, 200);
+        let p = Precision::ALL[rng.gen_range_usize(0, 2)];
+        let blocks = rng.gen_range_usize(1, 5);
+        let variant = if rng.gen_bool(0.5) { Variant::TwoSA } else { Variant::OneDA };
+        let w = IntMatrix::random(&mut rng, m, n, p);
+        let x = random_vector(&mut rng, n, p, true);
+        let mut pool = BlockPool::new(variant, blocks, p);
+        let (y, stats) = pool.run_gemv(&w, &x);
+        assert_eq!(y, w.gemv_ref(&x), "trial {trial}: {m}x{n} {p} x{blocks}");
+        assert!(stats.makespan_cycles <= stats.total_block_cycles);
+    }
+}
+
+#[test]
+fn prop_cycle_counts_match_closed_form() {
+    let mut rng = Rng::seed_from_u64(606);
+    for _ in 0..TRIALS {
+        let variant = if rng.gen_bool(0.5) { Variant::TwoSA } else { Variant::OneDA };
+        let p = Precision::ALL[rng.gen_range_usize(0, 2)];
+        let k = rng.gen_range_i64(1, 40) as u64;
+        let mut block = BramacBlock::new(variant, p);
+        for i in 0..k {
+            let pairs = vec![(0i64, 0i64); variant.dummy_arrays()];
+            block.mac2((i % 200) as u16, (i % 200 + 1) as u16, &pairs, true);
+        }
+        let st = block.stats();
+        assert_eq!(
+            st.main_cycles,
+            variant.cold_start_cycles() + k * variant.mac2_cycles(p, true)
+        );
+        assert_eq!(st.main_busy_cycles, k * variant.main_busy_per_mac2());
+        assert!(st.port_free_fraction() > 0.0);
+    }
+}

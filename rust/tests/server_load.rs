@@ -1,0 +1,94 @@
+//! Coordinator under load: batching behavior, reply correctness and
+//! determinism with many concurrent clients. Self-skips without
+//! artifacts.
+
+use std::time::Duration;
+
+use bramac::coordinator::batcher::{submit_and_wait, Batcher, Request};
+use bramac::coordinator::server::{InferenceServer, IMAGE_ELEMS};
+use bramac::runtime::Manifest;
+use bramac::util::Rng;
+
+fn artifacts_built() -> bool {
+    Manifest::default_dir().join("manifest.json").exists()
+}
+
+#[test]
+fn many_concurrent_clients_all_get_replies() {
+    if !artifacts_built() {
+        eprintln!("skipping: artifacts not built");
+        return;
+    }
+    let server = InferenceServer::start(
+        Manifest::default_dir(),
+        "model",
+        Duration::from_millis(10),
+    )
+    .unwrap();
+    let clients = 24;
+    let mut handles = Vec::new();
+    for c in 0..clients {
+        let tx = server.handle();
+        handles.push(std::thread::spawn(move || {
+            let mut rng = Rng::seed_from_u64(c);
+            let img: Vec<i32> = (0..IMAGE_ELEMS)
+                .map(|_| rng.gen_range_i64(0, 7) as i32)
+                .collect();
+            submit_and_wait(&tx, img).expect("reply")
+        }));
+    }
+    let outputs: Vec<Vec<i32>> = handles.into_iter().map(|h| h.join().unwrap()).collect();
+    assert_eq!(outputs.len(), clients as usize);
+    assert!(outputs.iter().all(|o| o.len() == 10));
+    let stats = server.shutdown();
+    assert_eq!(stats.requests, clients);
+    // Batching must actually group: fewer batches than requests.
+    assert!(stats.batches < clients, "batches={} requests={clients}", stats.batches);
+}
+
+#[test]
+fn same_image_same_logits_across_batches() {
+    if !artifacts_built() {
+        eprintln!("skipping: artifacts not built");
+        return;
+    }
+    let server = InferenceServer::start(
+        Manifest::default_dir(),
+        "model",
+        Duration::from_millis(1),
+    )
+    .unwrap();
+    let img: Vec<i32> = (0..IMAGE_ELEMS).map(|i| (i % 7) as i32).collect();
+    let tx = server.handle();
+    let first = submit_and_wait(&tx, img.clone()).unwrap();
+    for _ in 0..5 {
+        assert_eq!(submit_and_wait(&tx, img.clone()).unwrap(), first);
+    }
+}
+
+#[test]
+fn batcher_preserves_payload_reply_pairing() {
+    // Pure batcher test (no PJRT): each request's reply must match its
+    // own payload even under out-of-order batching.
+    let (tx, batcher) = Batcher::<u64, u64>::new(8, Duration::from_millis(5));
+    let worker = std::thread::spawn(move || {
+        while let Some(batch) = batcher.next_batch() {
+            for Request { payload, reply } in batch {
+                let _ = reply.send(payload.wrapping_mul(31));
+            }
+        }
+    });
+    let mut clients = Vec::new();
+    for i in 0..100u64 {
+        let tx = tx.clone();
+        clients.push(std::thread::spawn(move || {
+            let got = submit_and_wait(&tx, i).unwrap();
+            assert_eq!(got, i.wrapping_mul(31));
+        }));
+    }
+    for c in clients {
+        c.join().unwrap();
+    }
+    drop(tx);
+    worker.join().unwrap();
+}
