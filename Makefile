@@ -1,0 +1,26 @@
+# Convenience targets; tier-1 gate is `cargo build --release && cargo test -q`.
+
+.PHONY: build test test-rust test-python bench artifacts clean
+
+build:
+	cargo build --release
+
+test: test-rust test-python
+
+test-rust:
+	cargo build --release
+	cargo test -q
+
+test-python:
+	python -m pytest python/tests -q
+
+bench:
+	BENCH_QUICK=1 cargo bench
+
+# AOT-compile the L1/L2 entry points to artifacts/*.hlo.txt (needs jax).
+artifacts:
+	cd python && python -m compile.aot --out-dir ../artifacts
+
+clean:
+	cargo clean
+	rm -rf artifacts python/**/__pycache__

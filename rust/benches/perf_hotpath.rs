@@ -80,5 +80,55 @@ fn main() {
         black_box(gemv_golden(&wflat, &x, 80, 256, p, true));
     });
 
+    // §Perf iteration 5: thread-parallel BlockPool (per-block sharding).
+    // A pool-scale GEMV — 128 tiles over 8 blocks — where the parallel
+    // scheduler must be bit-exact with the sequential path and ≥2x
+    // faster with ≥4 worker threads (EXPERIMENTS.md §Perf).
+    let (bm, bn) = (320usize, 1024usize);
+    let bw = IntMatrix::random(&mut rng, bm, bn, p);
+    let bx = random_vector(&mut rng, bn, p, true);
+    let mut seq_pool = BlockPool::new(Variant::OneDA, 8, p);
+    let (y_seq, s_seq) = seq_pool.run_gemv(&bw, &bx);
+    assert_eq!(y_seq, bw.gemv_ref(&bx), "sequential pool must be exact");
+    for threads in [2usize, 4] {
+        let mut par = BlockPool::new(Variant::OneDA, 8, p).with_threads(threads);
+        let (y_par, s_par) = par.run_gemv(&bw, &bx);
+        assert_eq!(y_par, y_seq, "parallel output must be bit-exact (t={threads})");
+        assert_eq!(s_par, s_seq, "parallel stats must be identical (t={threads})");
+    }
+    let auto = bramac::coordinator::workers::auto_threads();
+    let seq_ns = b
+        .bench("pool_gemv/320x1024/4bit/8blocks/threads=1", || {
+            black_box(seq_pool.run_gemv(&bw, &bx));
+        })
+        .median_ns;
+    let mut speedup_4t = 0.0;
+    let mut thread_counts = vec![2usize, 4];
+    if auto > 1 && !thread_counts.contains(&auto) {
+        thread_counts.push(auto);
+    }
+    for threads in thread_counts {
+        let mut pool = BlockPool::new(Variant::OneDA, 8, p).with_threads(threads);
+        let ns = b
+            .bench(
+                &format!("pool_gemv/320x1024/4bit/8blocks/threads={threads}"),
+                || {
+                    black_box(pool.run_gemv(&bw, &bx));
+                },
+            )
+            .median_ns;
+        if threads == 4 {
+            speedup_4t = seq_ns / ns;
+        }
+        println!(
+            "    -> parallel speedup at {threads} threads: {:.2}x (host has {auto} cores)",
+            seq_ns / ns
+        );
+    }
+    println!(
+        "pool_gemv sequential vs 4 threads: {speedup_4t:.2}x \
+         (target >= 2x on hosts with >= 4 cores)"
+    );
+
     b.finish();
 }

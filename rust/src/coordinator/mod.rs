@@ -7,8 +7,10 @@ pub mod batcher;
 pub mod scheduler;
 pub mod server;
 pub mod tiler;
+pub mod workers;
 
 pub use batcher::Batcher;
 pub use scheduler::{BlockPool, ScheduleStats};
 pub use server::{InferenceServer, ServerStats};
 pub use tiler::{plan_gemv, Tile, TilePlan};
+pub use workers::{auto_threads, parallel_map_indexed};

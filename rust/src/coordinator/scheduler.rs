@@ -7,6 +7,21 @@
 //! tile's weights stream into the idle buffer half while the previous
 //! tile computes, so a block only stalls for loads that exceed its free
 //! port budget.
+//!
+//! # Thread-parallel execution
+//!
+//! Tiles are assigned round-robin (`tile i → block i % nblocks`), and a
+//! block's state is touched only by its own tiles, so the plan shards
+//! cleanly by **block ownership**: each worker thread owns a disjoint
+//! slice of the pool's blocks and walks that slice's tiles in order
+//! (`std::thread::scope`, no locks on the hot path). The reduction is
+//! deterministic — per-worker partial outputs are summed in block order
+//! on the caller's thread, and integer addition is exact — so the
+//! parallel path is **bit-identical** to the sequential one, including
+//! every `ScheduleStats` field (asserted in
+//! `tests/parallel_determinism.rs`). `BlockPool::new` defaults to one
+//! thread; opt in with [`BlockPool::with_threads`] or
+//! [`super::workers::auto_threads`].
 
 use crate::arch::Precision;
 use crate::bramac::block::StreamStats;
@@ -17,7 +32,7 @@ use crate::quant::IntMatrix;
 use super::tiler::{plan_gemv, Tile, TilePlan};
 
 /// Aggregate schedule statistics.
-#[derive(Debug, Clone, Copy, Default)]
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
 pub struct ScheduleStats {
     pub tiles: usize,
     pub mac2s: u64,
@@ -29,10 +44,21 @@ pub struct ScheduleStats {
     pub exposed_load_cycles: u64,
 }
 
+/// What one block contributed to a run: its partial output vector plus
+/// its share of the cycle/work accounting.
+struct BlockRun<Y> {
+    y: Y,
+    cycles: u64,
+    mac2s: u64,
+    exposed: u64,
+}
+
 /// A pool of BRAMAC blocks executing tile plans.
 pub struct BlockPool {
     pub variant: Variant,
     blocks: Vec<BramacBlock>,
+    /// Worker threads used to shard the tile plan (1 = sequential).
+    threads: usize,
 }
 
 impl BlockPool {
@@ -41,7 +67,40 @@ impl BlockPool {
         BlockPool {
             variant,
             blocks: (0..count).map(|_| BramacBlock::new(variant, precision)).collect(),
+            threads: 1,
         }
+    }
+
+    /// Builder-style worker-thread count (clamped to ≥ 1). The parallel
+    /// path is bit-exact with the sequential one, so this only changes
+    /// wall-clock time, never results or stats.
+    pub fn with_threads(mut self, threads: usize) -> Self {
+        self.threads = threads.max(1);
+        self
+    }
+
+    /// In-place version of [`BlockPool::with_threads`].
+    pub fn set_threads(&mut self, threads: usize) {
+        self.threads = threads.max(1);
+    }
+
+    pub fn threads(&self) -> usize {
+        self.threads
+    }
+
+    /// Worker threads that will actually run. Mirrors `run_sharded`'s
+    /// contiguous chunking: a worker owns ≥ 1 whole block, and with
+    /// `chunk = ceil(blocks/threads)` only `ceil(blocks/chunk)` chunks
+    /// (hence workers) exist — e.g. 6 blocks at 4 requested threads run
+    /// on 3 workers.
+    pub fn effective_threads(&self) -> usize {
+        let n = self.blocks.len();
+        let t = self.threads.min(n).max(1);
+        if t <= 1 {
+            return 1;
+        }
+        let chunk = n.div_ceil(t);
+        n.div_ceil(chunk)
     }
 
     pub fn len(&self) -> usize {
@@ -52,49 +111,51 @@ impl BlockPool {
         self.blocks.is_empty()
     }
 
-    /// Execute `y = W · x` over the pool. Tiles are assigned round-robin;
-    /// each block's cycle cost is `max(compute, exposed loads)` per tile
-    /// under double buffering. Returns the exact result and stats.
-    pub fn run_gemv(&mut self, w: &IntMatrix, x: &[i64]) -> (Vec<i64>, ScheduleStats) {
-        assert_eq!(x.len(), w.cols);
-        let p = w.precision;
+    fn sync_precision(&mut self, p: Precision) {
         for b in &mut self.blocks {
             if b.precision() != p {
                 b.set_precision(p);
             }
         }
-        let plan = plan_gemv(w.rows, w.cols, p, true);
-        let mut y = vec![0i64; w.rows];
-        let nblocks = self.blocks.len();
-        let mut per_block_cycles = vec![0u64; nblocks];
-        let mut exposed = 0u64;
-        let mut mac2s = 0u64;
+    }
 
+    /// Round-robin tile ownership: tile `i` belongs to block `i % n`,
+    /// and each block sees its tiles in plan order.
+    fn tiles_by_block(&self, plan: &TilePlan) -> Vec<Vec<Tile>> {
+        let n = self.blocks.len();
+        let mut by_block: Vec<Vec<Tile>> = vec![Vec::new(); n];
         for (ti, tile) in plan.tiles.iter().enumerate() {
-            let bi = ti % nblocks;
-            let block = &mut self.blocks[bi];
-            let before: StreamStats = block.stats();
-
-            let out = run_tile_on_block(block, w, x, tile, &plan);
-            for (k, v) in out.iter().enumerate() {
-                y[tile.row0 + k] += v;
-            }
-
-            let after = block.stats();
-            let compute = after.main_cycles - before.main_cycles;
-            let busy = after.main_busy_cycles - before.main_busy_cycles;
-            mac2s += after.mac2_count - before.mac2_count;
-
-            // Load of this tile overlaps the block's previous compute:
-            // only the part that doesn't fit in the free port budget of
-            // *this* tile's compute window is exposed (steady state).
-            let load = tile.words() as u64;
-            let free = compute.saturating_sub(busy);
-            let tile_exposed = load.saturating_sub(free);
-            exposed += tile_exposed;
-            per_block_cycles[bi] += compute + tile_exposed;
+            by_block[ti % n].push(*tile);
         }
+        by_block
+    }
 
+    /// Execute `y = W · x` over the pool. Tiles are assigned round-robin;
+    /// each block's cycle cost is `max(compute, exposed loads)` per tile
+    /// under double buffering. Returns the exact result and stats.
+    pub fn run_gemv(&mut self, w: &IntMatrix, x: &[i64]) -> (Vec<i64>, ScheduleStats) {
+        assert_eq!(x.len(), w.cols);
+        self.sync_precision(w.precision);
+        let plan = plan_gemv(w.rows, w.cols, w.precision, true);
+        let by_block = self.tiles_by_block(&plan);
+        let threads = self.threads;
+        let m = w.rows;
+        let runs = run_sharded(&mut self.blocks, &by_block, threads, |block, tiles| {
+            run_block_gemv(block, w, x, tiles, &plan, m)
+        });
+
+        let mut y = vec![0i64; m];
+        let mut per_block_cycles = Vec::with_capacity(runs.len());
+        let mut mac2s = 0u64;
+        let mut exposed = 0u64;
+        for run in runs {
+            for (k, v) in run.y.iter().enumerate() {
+                y[k] += v;
+            }
+            per_block_cycles.push(run.cycles);
+            mac2s += run.mac2s;
+            exposed += run.exposed;
+        }
         let stats = ScheduleStats {
             tiles: plan.tiles.len(),
             mac2s,
@@ -104,9 +165,7 @@ impl BlockPool {
         };
         (y, stats)
     }
-}
 
-impl BlockPool {
     /// Batch-2 MVM on BRAMAC-2SA: the two synchronous dummy arrays copy
     /// the same weights but process **different input vectors** (the
     /// input-sharing of §IV-A) — `Y = W · [x0 x1]` in one pass, doubling
@@ -122,36 +181,28 @@ impl BlockPool {
         assert_eq!(self.variant, Variant::TwoSA, "batch-2 needs two dummy arrays");
         assert_eq!(x0.len(), w.cols);
         assert_eq!(x1.len(), w.cols);
-        let p = w.precision;
-        for b in &mut self.blocks {
-            if b.precision() != p {
-                b.set_precision(p);
-            }
-        }
-        let plan = plan_gemv(w.rows, w.cols, p, true);
-        let mut y = [vec![0i64; w.rows], vec![0i64; w.rows]];
-        let nblocks = self.blocks.len();
-        let mut per_block_cycles = vec![0u64; nblocks];
+        self.sync_precision(w.precision);
+        let plan = plan_gemv(w.rows, w.cols, w.precision, true);
+        let by_block = self.tiles_by_block(&plan);
+        let threads = self.threads;
+        let m = w.rows;
+        let runs = run_sharded(&mut self.blocks, &by_block, threads, |block, tiles| {
+            run_block_batch2(block, w, x0, x1, tiles, &plan, m)
+        });
+
+        let mut y = [vec![0i64; m], vec![0i64; m]];
+        let mut per_block_cycles = Vec::with_capacity(runs.len());
         let mut mac2s = 0u64;
         let mut exposed = 0u64;
-        for (ti, tile) in plan.tiles.iter().enumerate() {
-            let bi = ti % nblocks;
-            let block = &mut self.blocks[bi];
-            let before = block.stats();
-            let outs = run_tile_batch2(block, w, x0, x1, tile, &plan);
+        for run in runs {
             for v in 0..2 {
-                for (k, val) in outs[v].iter().enumerate() {
-                    y[v][tile.row0 + k] += val;
+                for (k, val) in run.y[v].iter().enumerate() {
+                    y[v][k] += val;
                 }
             }
-            let after = block.stats();
-            let compute = after.main_cycles - before.main_cycles;
-            let busy = after.main_busy_cycles - before.main_busy_cycles;
-            mac2s += after.mac2_count - before.mac2_count;
-            let load = tile.words() as u64;
-            let tile_exposed = load.saturating_sub(compute.saturating_sub(busy));
-            exposed += tile_exposed;
-            per_block_cycles[bi] += compute + tile_exposed;
+            per_block_cycles.push(run.cycles);
+            mac2s += run.mac2s;
+            exposed += run.exposed;
         }
         let stats = ScheduleStats {
             tiles: plan.tiles.len(),
@@ -162,6 +213,134 @@ impl BlockPool {
         };
         (y, stats)
     }
+}
+
+/// Run every block's tile list through `f`, sharding the pool across up
+/// to `threads` scoped workers (each block is owned by exactly one
+/// worker). Results come back in block order regardless of thread count.
+fn run_sharded<R, F>(
+    blocks: &mut [BramacBlock],
+    tiles_by_block: &[Vec<Tile>],
+    threads: usize,
+    f: F,
+) -> Vec<R>
+where
+    R: Send,
+    F: Fn(&mut BramacBlock, &[Tile]) -> R + Sync,
+{
+    let n = blocks.len();
+    let threads = threads.min(n).max(1);
+    if threads <= 1 {
+        return blocks
+            .iter_mut()
+            .zip(tiles_by_block)
+            .map(|(b, tiles)| f(b, tiles))
+            .collect();
+    }
+    // Contiguous block ranges per worker keep ownership trivial:
+    // `chunks_mut` hands each worker exclusive &mut access to its slice.
+    let chunk = n.div_ceil(threads);
+    std::thread::scope(|s| {
+        let handles: Vec<_> = blocks
+            .chunks_mut(chunk)
+            .zip(tiles_by_block.chunks(chunk))
+            .map(|(block_slice, tile_slice)| {
+                let f = &f;
+                s.spawn(move || {
+                    block_slice
+                        .iter_mut()
+                        .zip(tile_slice)
+                        .map(|(b, tiles)| f(b, tiles))
+                        .collect::<Vec<R>>()
+                })
+            })
+            .collect();
+        handles
+            .into_iter()
+            .flat_map(|h| h.join().expect("scheduler worker panicked"))
+            .collect()
+    })
+}
+
+/// Run one tile's work through `body` and charge it per §IV-C: the
+/// tile's load overlaps the block's previous compute, so only the part
+/// that doesn't fit in the free port budget of *this* tile's compute
+/// window is exposed (steady state). Returns the body's output plus
+/// (charged cycles, mac2s, exposed load cycles).
+fn account_tile<T>(
+    block: &mut BramacBlock,
+    load_words: u64,
+    body: impl FnOnce(&mut BramacBlock) -> T,
+) -> (T, u64, u64, u64) {
+    let before: StreamStats = block.stats();
+    let out = body(block);
+    let after = block.stats();
+    let compute = after.main_cycles - before.main_cycles;
+    let busy = after.main_busy_cycles - before.main_busy_cycles;
+    let mac2s = after.mac2_count - before.mac2_count;
+    let free = compute.saturating_sub(busy);
+    let exposed = load_words.saturating_sub(free);
+    (out, compute + exposed, mac2s, exposed)
+}
+
+/// One block's share of a GEMV: its tiles in order, with the §IV-C
+/// exposed-load accounting derived from that block's own stream stats.
+fn run_block_gemv(
+    block: &mut BramacBlock,
+    w: &IntMatrix,
+    x: &[i64],
+    tiles: &[Tile],
+    plan: &TilePlan,
+    m: usize,
+) -> BlockRun<Vec<i64>> {
+    let mut y = vec![0i64; m];
+    let mut cycles = 0u64;
+    let mut mac2s = 0u64;
+    let mut exposed = 0u64;
+    for tile in tiles {
+        let (out, tile_cycles, tile_mac2s, tile_exposed) =
+            account_tile(block, tile.words() as u64, |block| {
+                run_tile_on_block(block, w, x, tile, plan)
+            });
+        for (k, v) in out.iter().enumerate() {
+            y[tile.row0 + k] += v;
+        }
+        cycles += tile_cycles;
+        mac2s += tile_mac2s;
+        exposed += tile_exposed;
+    }
+    BlockRun { y, cycles, mac2s, exposed }
+}
+
+/// One block's share of a batch-2 MVM.
+fn run_block_batch2(
+    block: &mut BramacBlock,
+    w: &IntMatrix,
+    x0: &[i64],
+    x1: &[i64],
+    tiles: &[Tile],
+    plan: &TilePlan,
+    m: usize,
+) -> BlockRun<[Vec<i64>; 2]> {
+    let mut y = [vec![0i64; m], vec![0i64; m]];
+    let mut cycles = 0u64;
+    let mut mac2s = 0u64;
+    let mut exposed = 0u64;
+    for tile in tiles {
+        let (outs, tile_cycles, tile_mac2s, tile_exposed) =
+            account_tile(block, tile.words() as u64, |block| {
+                run_tile_batch2(block, w, x0, x1, tile, plan)
+            });
+        for v in 0..2 {
+            for (k, val) in outs[v].iter().enumerate() {
+                y[v][tile.row0 + k] += val;
+            }
+        }
+        cycles += tile_cycles;
+        mac2s += tile_mac2s;
+        exposed += tile_exposed;
+    }
+    BlockRun { y, cycles, mac2s, exposed }
 }
 
 /// Batch-2 tile: both arrays share the weight copy, each consumes its
@@ -320,6 +499,26 @@ mod tests {
     }
 
     #[test]
+    fn parallel_gemv_bit_exact_with_sequential() {
+        let mut rng = Rng::seed_from_u64(0x9A11);
+        for variant in Variant::ALL {
+            for p in Precision::ALL {
+                let (m, n) = (52, 130);
+                let w = IntMatrix::random(&mut rng, m, n, p);
+                let x = crate::quant::random_vector(&mut rng, n, p, true);
+                let mut seq = BlockPool::new(variant, 5, p);
+                let (y_seq, s_seq) = seq.run_gemv(&w, &x);
+                for threads in [2, 4, 16] {
+                    let mut par = BlockPool::new(variant, 5, p).with_threads(threads);
+                    let (y_par, s_par) = par.run_gemv(&w, &x);
+                    assert_eq!(y_par, y_seq, "{} {p} threads={threads}", variant.name());
+                    assert_eq!(s_par, s_seq, "{} {p} threads={threads}", variant.name());
+                }
+            }
+        }
+    }
+
+    #[test]
     fn batch2_exact_and_cheaper_than_two_passes() {
         let mut rng = Rng::seed_from_u64(0xBA7C);
         for p in Precision::ALL {
@@ -364,5 +563,19 @@ mod tests {
         let (_, s) = pool.run_gemv(&w, &x);
         let hidden = 1.0 - s.exposed_load_cycles as f64 / (s.tiles as f64 * 200.0);
         assert!(hidden > 0.5, "most load cycles should hide: {s:?}");
+    }
+
+    #[test]
+    fn thread_count_clamps_and_reports() {
+        let mut pool = BlockPool::new(Variant::OneDA, 2, Precision::Int4).with_threads(0);
+        assert_eq!(pool.threads(), 1);
+        pool.set_threads(8);
+        assert_eq!(pool.threads(), 8);
+        // A worker owns ≥ 1 whole block, so 8 requested threads over 2
+        // blocks run as 2.
+        assert_eq!(pool.effective_threads(), 2);
+        // Chunking rounds up: 6 blocks at 4 threads → 3 chunks of 2.
+        let pool6 = BlockPool::new(Variant::OneDA, 6, Precision::Int4).with_threads(4);
+        assert_eq!(pool6.effective_threads(), 3);
     }
 }

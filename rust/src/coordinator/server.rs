@@ -53,7 +53,9 @@ pub fn e2e_network() -> Network {
 pub struct ServerStats {
     pub requests: u64,
     pub batches: u64,
-    /// Wall time spent inside PJRT execution.
+    /// Time spent inside artifact execution, summed across workers —
+    /// with `start_with_workers(.., N > 1)` batches execute
+    /// concurrently, so this can exceed wall-clock time.
     pub exec_micros: u64,
     /// Attributed accelerator cycles (DLA-BRAMAC model) across batches.
     pub attributed_cycles: u64,
@@ -62,20 +64,35 @@ pub struct ServerStats {
 /// Dynamic-batching inference server over the PJRT runtime.
 pub struct InferenceServer {
     tx: Option<Sender<Request<Image, Logits>>>,
-    worker: Option<JoinHandle<()>>,
+    workers: Vec<JoinHandle<()>>,
     stats: Arc<Mutex<ServerStats>>,
     pub batch_size: usize,
 }
 
 impl InferenceServer {
-    /// Start the server: one worker thread **owns** the PJRT runtime
-    /// (the xla crate's client is not `Send`, so it never crosses a
-    /// thread boundary); requests flow in over channels. `artifact`
-    /// must be a CNN artifact ("model"); its static batch dimension
-    /// sets the batch size.
+    /// Start a single-worker server (the original configuration): one
+    /// worker thread **owns** its PJRT runtime (the xla crate's client
+    /// is not `Send`, so it never crosses a thread boundary); requests
+    /// flow in over channels. `artifact` must be a CNN artifact
+    /// ("model"); its static batch dimension sets the batch size.
     pub fn start(artifact_dir: PathBuf, artifact: &str, max_wait: Duration) -> Result<Self> {
+        Self::start_with_workers(artifact_dir, artifact, max_wait, 1)
+    }
+
+    /// Start with `workers` execution threads. Each worker owns its own
+    /// PJRT runtime; batch *formation* is serialized behind a mutex on
+    /// the shared batcher (one batch forms at a time), while batch
+    /// *execution* overlaps across workers — so throughput scales with
+    /// cores once execution dominates the batching window.
+    pub fn start_with_workers(
+        artifact_dir: PathBuf,
+        artifact: &str,
+        max_wait: Duration,
+        workers: usize,
+    ) -> Result<Self> {
+        assert!(workers >= 1, "need at least one worker");
         // Read the manifest on the caller's thread for early errors;
-        // the worker re-opens the runtime it will own.
+        // each worker re-opens the runtime it will own.
         let manifest = Manifest::load(&artifact_dir)?;
         let spec = manifest.get(artifact)?.clone();
         let batch = *spec
@@ -86,6 +103,7 @@ impl InferenceServer {
         let classes = spec.meta_usize("classes").unwrap_or(10);
         let precision = spec.meta_usize("precision").unwrap_or(4);
         let (tx, batcher) = Batcher::<Image, Logits>::new(batch, max_wait);
+        let batcher = Arc::new(Mutex::new(batcher));
         let stats = Arc::new(Mutex::new(ServerStats::default()));
 
         // Cycle attribution: the e2e CNN on a DLA-BRAMAC-2SA instance.
@@ -100,49 +118,58 @@ impl InferenceServer {
         );
         let cycles_per_image = network_cycles(&net, &cfg);
 
-        let name = artifact.to_string();
-        let stats_w = Arc::clone(&stats);
-        let worker = std::thread::spawn(move || {
-            let runtime = match Runtime::with_dir(&artifact_dir) {
-                Ok(r) => r,
-                Err(e) => {
-                    eprintln!("server: runtime init failed: {e:#}");
-                    return;
-                }
-            };
-            while let Some(reqs) = batcher.next_batch() {
-                let n = reqs.len();
-                // Pad to the artifact's static batch with zeros.
-                let mut input = vec![0i32; batch * IMAGE_ELEMS];
-                for (i, r) in reqs.iter().enumerate() {
-                    let img = &r.payload;
-                    debug_assert_eq!(img.len(), IMAGE_ELEMS);
-                    input[i * IMAGE_ELEMS..(i + 1) * IMAGE_ELEMS].copy_from_slice(img);
-                }
-                let t0 = Instant::now();
-                let out = match runtime.execute_i32(&name, &[&input]) {
-                    Ok(o) => o,
+        let mut handles = Vec::with_capacity(workers);
+        for _ in 0..workers {
+            let name = artifact.to_string();
+            let dir = artifact_dir.clone();
+            let batcher = Arc::clone(&batcher);
+            let stats_w = Arc::clone(&stats);
+            handles.push(std::thread::spawn(move || {
+                let runtime = match Runtime::with_dir(&dir) {
+                    Ok(r) => r,
                     Err(e) => {
-                        eprintln!("server: execution failed: {e:#}");
-                        continue; // drop replies; clients see disconnect
+                        eprintln!("server: runtime init failed: {e:#}");
+                        return;
                     }
                 };
-                let dt = t0.elapsed();
-                for (i, r) in reqs.into_iter().enumerate() {
-                    let logits = out[i * classes..(i + 1) * classes].to_vec();
-                    let _ = r.reply.send(logits);
+                loop {
+                    // Hold the batcher lock only while a batch forms;
+                    // execution below runs concurrently across workers.
+                    let next = batcher.lock().unwrap().next_batch();
+                    let Some(reqs) = next else { break };
+                    let n = reqs.len();
+                    // Pad to the artifact's static batch with zeros.
+                    let mut input = vec![0i32; batch * IMAGE_ELEMS];
+                    for (i, r) in reqs.iter().enumerate() {
+                        let img = &r.payload;
+                        debug_assert_eq!(img.len(), IMAGE_ELEMS);
+                        input[i * IMAGE_ELEMS..(i + 1) * IMAGE_ELEMS].copy_from_slice(img);
+                    }
+                    let t0 = Instant::now();
+                    let out = match runtime.execute_i32(&name, &[&input]) {
+                        Ok(o) => o,
+                        Err(e) => {
+                            eprintln!("server: execution failed: {e:#}");
+                            continue; // drop replies; clients see disconnect
+                        }
+                    };
+                    let dt = t0.elapsed();
+                    for (i, r) in reqs.into_iter().enumerate() {
+                        let logits = out[i * classes..(i + 1) * classes].to_vec();
+                        let _ = r.reply.send(logits);
+                    }
+                    let mut s = stats_w.lock().unwrap();
+                    s.requests += n as u64;
+                    s.batches += 1;
+                    s.exec_micros += dt.as_micros() as u64;
+                    s.attributed_cycles += cycles_per_image * n as u64;
                 }
-                let mut s = stats_w.lock().unwrap();
-                s.requests += n as u64;
-                s.batches += 1;
-                s.exec_micros += dt.as_micros() as u64;
-                s.attributed_cycles += cycles_per_image * n as u64;
-            }
-        });
+            }));
+        }
 
         Ok(InferenceServer {
             tx: Some(tx),
-            worker: Some(worker),
+            workers: handles,
             stats,
             batch_size: batch,
         })
@@ -160,7 +187,7 @@ impl InferenceServer {
     /// Drain and stop.
     pub fn shutdown(mut self) -> ServerStats {
         drop(self.tx.take());
-        if let Some(w) = self.worker.take() {
+        for w in self.workers.drain(..) {
             let _ = w.join();
         }
         let s = *self.stats.lock().unwrap();
@@ -171,7 +198,7 @@ impl InferenceServer {
 impl Drop for InferenceServer {
     fn drop(&mut self) {
         drop(self.tx.take());
-        if let Some(w) = self.worker.take() {
+        for w in self.workers.drain(..) {
             let _ = w.join();
         }
     }

@@ -1,0 +1,96 @@
+//! Small scoped worker-pool helpers shared by the coordinator's
+//! block-pool scheduler, the DSE sweeps and the analytical sweeps.
+//!
+//! Everything here is *deterministic*: results come back in input order
+//! no matter how many threads run or how the OS schedules them, so
+//! callers can require bit-exact agreement between their sequential and
+//! parallel paths (see `tests/parallel_determinism.rs`).
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+
+/// Worker-thread count to use when the caller has no preference: the
+/// host's available parallelism (1 if it cannot be queried).
+pub fn auto_threads() -> usize {
+    std::thread::available_parallelism()
+        .map(|n| n.get())
+        .unwrap_or(1)
+}
+
+/// Evaluate `f(0)..f(n-1)` across up to `threads` scoped workers and
+/// return the results in index order. Work is distributed dynamically
+/// (an atomic cursor), so uneven jobs balance; with `threads <= 1` the
+/// call degenerates to a plain sequential map with no thread spawns.
+pub fn parallel_map_indexed<T, F>(n: usize, threads: usize, f: F) -> Vec<T>
+where
+    T: Send,
+    F: Fn(usize) -> T + Sync,
+{
+    let threads = threads.min(n).max(1);
+    if threads <= 1 {
+        return (0..n).map(f).collect();
+    }
+    let cursor = AtomicUsize::new(0);
+    let mut tagged: Vec<(usize, T)> = std::thread::scope(|s| {
+        let handles: Vec<_> = (0..threads)
+            .map(|_| {
+                let f = &f;
+                let cursor = &cursor;
+                s.spawn(move || {
+                    let mut out = Vec::new();
+                    loop {
+                        let i = cursor.fetch_add(1, Ordering::Relaxed);
+                        if i >= n {
+                            break;
+                        }
+                        out.push((i, f(i)));
+                    }
+                    out
+                })
+            })
+            .collect();
+        handles
+            .into_iter()
+            .flat_map(|h| h.join().expect("worker thread panicked"))
+            .collect()
+    });
+    tagged.sort_by_key(|(i, _)| *i);
+    debug_assert_eq!(tagged.len(), n);
+    tagged.into_iter().map(|(_, v)| v).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn results_in_input_order_any_thread_count() {
+        let expect: Vec<usize> = (0..100).map(|i| i * i).collect();
+        for threads in [1, 2, 3, 8, 200] {
+            let got = parallel_map_indexed(100, threads, |i| i * i);
+            assert_eq!(got, expect, "threads={threads}");
+        }
+    }
+
+    #[test]
+    fn empty_and_single_inputs() {
+        assert_eq!(parallel_map_indexed(0, 4, |i| i), Vec::<usize>::new());
+        assert_eq!(parallel_map_indexed(1, 4, |i| i + 7), vec![7]);
+    }
+
+    #[test]
+    fn uneven_jobs_all_complete() {
+        // Jobs with wildly different costs must still all run exactly once.
+        let got = parallel_map_indexed(37, 4, |i| {
+            if i % 9 == 0 {
+                std::thread::sleep(std::time::Duration::from_millis(2));
+            }
+            i as u64
+        });
+        assert_eq!(got, (0..37u64).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn auto_threads_positive() {
+        assert!(auto_threads() >= 1);
+    }
+}

@@ -57,6 +57,16 @@ pub fn network_cycles(net: &Network, cfg: &DlaConfig) -> u64 {
     net.layers.iter().map(|l| layer_cycles(l, cfg)).sum()
 }
 
+/// Evaluate many configurations at once, fanned out across worker
+/// threads (the DSE hot loop); results come back in input order, so the
+/// batch is bit-identical to mapping [`network_cycles`] sequentially.
+pub fn network_cycles_batch(net: &Network, cfgs: &[DlaConfig]) -> Vec<u64> {
+    let threads = crate::coordinator::workers::auto_threads();
+    crate::coordinator::workers::parallel_map_indexed(cfgs.len(), threads, |i| {
+        network_cycles(net, &cfgs[i])
+    })
+}
+
 /// Effective MACs/cycle — utilization diagnostic.
 pub fn macs_per_cycle(net: &Network, cfg: &DlaConfig) -> f64 {
     net.total_macs() as f64 / network_cycles(net, cfg) as f64
@@ -109,6 +119,22 @@ mod tests {
         let eff64 = macs_per_cycle(&net, &k64) / (2.0 * 16.0 * 64.0);
         let eff140 = macs_per_cycle(&net, &k140) / (2.0 * 16.0 * 140.0);
         assert!(eff64 > eff140, "bigger Kvec must hurt utilization");
+    }
+
+    #[test]
+    fn batch_matches_sequential_map() {
+        let net = alexnet();
+        let cfgs: Vec<DlaConfig> = [1usize, 2, 3, 4]
+            .iter()
+            .flat_map(|&q| {
+                [Precision::Int2, Precision::Int4, Precision::Int8]
+                    .into_iter()
+                    .map(move |p| DlaConfig::dla(q, 16, 64, p))
+            })
+            .collect();
+        let batch = network_cycles_batch(&net, &cfgs);
+        let seq: Vec<u64> = cfgs.iter().map(|c| network_cycles(&net, c)).collect();
+        assert_eq!(batch, seq);
     }
 
     #[test]

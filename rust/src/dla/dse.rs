@@ -8,7 +8,7 @@ use crate::bramac::Variant;
 
 use super::area::{total_brams, utilized_area};
 use super::config::{AccelKind, DlaConfig};
-use super::cycle::network_cycles;
+use super::cycle::network_cycles_batch;
 use super::models::Network;
 
 /// Candidate vectorization values (superset of everything Table III
@@ -48,24 +48,31 @@ pub struct DseResult {
     pub objective: f64,
 }
 
-fn evaluate(net: &Network, cfg: DlaConfig, device: &Device) -> Option<DseResult> {
-    let dsps = cfg.dsps();
-    let brams = total_brams(net, &cfg);
-    if dsps > device.counts.dsps || brams > device.counts.brams {
-        return None;
+/// Every candidate configuration for one accelerator kind, in the
+/// canonical (Cvec, Kvec, Qvec[, Qvec2]) nesting order. The order fixes
+/// the tie-break (first candidate wins equal objectives), so the
+/// parallel exploration below is deterministic.
+fn candidates(kind: AccelKind, precision: Precision) -> Vec<DlaConfig> {
+    let mut out = Vec::new();
+    for &cvec in &CVEC_CAND {
+        for &kvec in &KVEC_CAND {
+            match kind {
+                AccelKind::Dla => {
+                    for &q in &QVEC_CAND {
+                        out.push(DlaConfig::dla(q, cvec, kvec, precision));
+                    }
+                }
+                AccelKind::DlaBramac(v) => {
+                    for &q1 in &QVEC_CAND {
+                        for &q2 in &QVEC2_CAND {
+                            out.push(DlaConfig::dla_bramac(v, q1, q2, cvec, kvec, precision));
+                        }
+                    }
+                }
+            }
+        }
     }
-    let cycles = network_cycles(net, &cfg);
-    let area = utilized_area(net, &cfg, device);
-    let perf = accel_fmax_mhz(cfg.kind) / cycles as f64;
-    Some(DseResult {
-        config: cfg,
-        cycles,
-        dsps,
-        brams,
-        area,
-        perf,
-        objective: perf * perf / area,
-    })
+    out
 }
 
 /// Explore all candidate configurations for one accelerator kind.
@@ -79,34 +86,41 @@ pub fn explore_on(
     precision: Precision,
     device: &Device,
 ) -> DseResult {
+    // Cheap resource screen first, then fan the surviving candidates'
+    // cycle evaluation out across worker threads (the dominant cost),
+    // and reduce sequentially in candidate order so ties break exactly
+    // like the single-threaded loop did.
+    let feasible: Vec<(DlaConfig, u64, u64)> = candidates(kind, precision)
+        .into_iter()
+        .filter_map(|cfg| {
+            let dsps = cfg.dsps();
+            let brams = total_brams(net, &cfg);
+            (dsps <= device.counts.dsps && brams <= device.counts.brams)
+                .then_some((cfg, dsps, brams))
+        })
+        .collect();
+    let cfgs: Vec<DlaConfig> = feasible.iter().map(|(c, _, _)| *c).collect();
+    let cycles = network_cycles_batch(net, &cfgs);
+
     let mut best: Option<DseResult> = None;
-    let mut consider = |cand: Option<DseResult>| {
-        if let Some(c) = cand {
-            if best.as_ref().is_none_or(|b| c.objective > b.objective) {
-                best = Some(c);
-            }
-        }
-    };
-    for &cvec in &CVEC_CAND {
-        for &kvec in &KVEC_CAND {
-            match kind {
-                AccelKind::Dla => {
-                    for &q in &QVEC_CAND {
-                        consider(evaluate(net, DlaConfig::dla(q, cvec, kvec, precision), device));
-                    }
-                }
-                AccelKind::DlaBramac(v) => {
-                    for &q1 in &QVEC_CAND {
-                        for &q2 in &QVEC2_CAND {
-                            consider(evaluate(
-                                net,
-                                DlaConfig::dla_bramac(v, q1, q2, cvec, kvec, precision),
-                                device,
-                            ));
-                        }
-                    }
-                }
-            }
+    for ((cfg, dsps, brams), cycles) in feasible.into_iter().zip(cycles) {
+        let area = utilized_area(net, &cfg, device);
+        let perf = accel_fmax_mhz(cfg.kind) / cycles as f64;
+        let cand = DseResult {
+            config: cfg,
+            cycles,
+            dsps,
+            brams,
+            area,
+            perf,
+            objective: perf * perf / area,
+        };
+        let better = match &best {
+            None => true,
+            Some(b) => cand.objective > b.objective,
+        };
+        if better {
+            best = Some(cand);
         }
     }
     best.expect("at least one feasible configuration")

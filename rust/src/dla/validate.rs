@@ -56,7 +56,10 @@ pub fn validate_layer(layer: &ConvLayer, cfg: &DlaConfig, pixels: usize) -> Laye
     // the same K-parallelism the DLA's filter cache provides.
     let lanes = p.lanes_per_word();
     let blocks = k.div_ceil(lanes).min(cfg.bramac_blocks().max(1) as usize);
-    let mut pool = BlockPool::new(v, blocks, p);
+    // The parallel scheduler is bit-exact with the sequential path, so
+    // validation can use every host core without changing any result.
+    let mut pool = BlockPool::new(v, blocks, p)
+        .with_threads(crate::coordinator::workers::auto_threads());
 
     let mut measured = 0u64;
     for px in 0..pixels {

@@ -47,18 +47,31 @@ pub fn fig11_cell(m: usize, n: usize, precision: Precision, style: ComputeStyle)
 }
 
 /// The full 3-precision × 2-style sweep over the matrix grid.
+///
+/// Sliced across worker threads by (style, precision) — coarse enough
+/// that the scoped workers pay off — with the slices concatenated in
+/// the sequential nesting order, so the output is identical to the
+/// single-threaded sweep cell for cell.
 pub fn fig11_sweep() -> Vec<Fig11Cell> {
-    let mut cells = Vec::new();
+    let mut params = Vec::new();
     for style in ComputeStyle::ALL {
         for p in Precision::ALL {
+            params.push((style, p));
+        }
+    }
+    let threads = crate::coordinator::workers::auto_threads();
+    let slices =
+        crate::coordinator::workers::parallel_map_indexed(params.len(), threads, |i| {
+            let (style, p) = params[i];
+            let mut cells = Vec::new();
             for &n in &COL_SIZES {
                 for &m in &ROW_SIZES {
                     cells.push(fig11_cell(m, n, p, style));
                 }
             }
-        }
-    }
-    cells
+            cells
+        });
+    slices.into_iter().flatten().collect()
 }
 
 /// Peak speedup vs CCB for a (precision, style) slice — the numbers

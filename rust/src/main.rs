@@ -40,8 +40,10 @@ experiment regeneration (paper tables & figures):
 
 drivers:
   gemv [--m M] [--n N] [--bits B] [--blocks K] [--variant 2sa|1da]
+       [--threads T]
                   run an exact GEMV on a simulated BRAMAC block pool
-  serve [--requests R] [--window-ms W]
+                  (T worker threads shard the tile plan; 0 = all cores)
+  serve [--requests R] [--window-ms W] [--workers N]
                   start the batched PJRT inference server on a
                   synthetic request stream and report throughput
   check           verify artifacts + PJRT runtime are functional
@@ -114,6 +116,12 @@ fn cmd_gemv(args: &[String]) -> Result<()> {
     let n: usize = flag(args, "--n", 256)?;
     let bits: u32 = flag(args, "--bits", 4)?;
     let blocks: usize = flag(args, "--blocks", 4)?;
+    let threads_flag: usize = flag(args, "--threads", 0)?;
+    let threads = if threads_flag == 0 {
+        bramac::coordinator::workers::auto_threads()
+    } else {
+        threads_flag
+    };
     let variant_s: String = flag(args, "--variant", "1da".to_string())?;
     let p = Precision::from_bits(bits)
         .ok_or_else(|| anyhow::anyhow!("--bits must be 2, 4 or 8"))?;
@@ -125,14 +133,15 @@ fn cmd_gemv(args: &[String]) -> Result<()> {
     let mut rng = Rng::seed_from_u64(0xce11);
     let w = IntMatrix::random(&mut rng, m, n, p);
     let x = random_vector(&mut rng, n, p, true);
-    let mut pool = BlockPool::new(variant, blocks, p);
+    let mut pool = BlockPool::new(variant, blocks, p).with_threads(threads);
     let t0 = std::time::Instant::now();
     let (y, stats) = pool.run_gemv(&w, &x);
     let dt = t0.elapsed();
     assert_eq!(y, w.gemv_ref(&x), "bit-accurate result must match reference");
     println!(
-        "GEMV {m}x{n} @ {p} on {blocks}x {} blocks: bit-exact vs reference",
-        variant.name()
+        "GEMV {m}x{n} @ {p} on {blocks}x {} blocks ({} worker threads): bit-exact vs reference",
+        variant.name(),
+        pool.effective_threads()
     );
     println!(
         "  tiles={} mac2s={} makespan={} cycles exposed-loads={} ({} host µs)",
@@ -165,11 +174,18 @@ fn cmd_gemv(args: &[String]) -> Result<()> {
 fn cmd_serve(args: &[String]) -> Result<()> {
     let requests: usize = flag(args, "--requests", 64)?;
     let window_ms: u64 = flag(args, "--window-ms", 10)?;
+    let workers: usize = flag(args, "--workers", 1)?;
     let dir = Manifest::default_dir();
-    let server = InferenceServer::start(dir, "model", Duration::from_millis(window_ms))?;
+    let server = InferenceServer::start_with_workers(
+        dir,
+        "model",
+        Duration::from_millis(window_ms),
+        workers.max(1),
+    )?;
     println!(
-        "serving synthetic stream: {requests} requests, batch={} window={window_ms}ms",
-        server.batch_size
+        "serving synthetic stream: {requests} requests, batch={} window={window_ms}ms workers={}",
+        server.batch_size,
+        workers.max(1)
     );
     let t0 = std::time::Instant::now();
     let mut rng = Rng::seed_from_u64(0x5eed);
@@ -204,7 +220,7 @@ fn cmd_serve(args: &[String]) -> Result<()> {
         stats.requests as f64 / wall.as_secs_f64()
     );
     println!(
-        "  PJRT exec time {:.1} ms total; attributed DLA-BRAMAC cycles {}",
+        "  PJRT exec time {:.1} ms (summed across workers); attributed DLA-BRAMAC cycles {}",
         stats.exec_micros as f64 / 1e3,
         stats.attributed_cycles
     );

@@ -65,11 +65,17 @@ impl Runtime {
 
     /// Execute artifact `name` with int32 inputs, returning the flattened
     /// int32 output. Input order and shapes must match the manifest spec
-    /// (checked). The AOT side lowers with `return_tuple=True`, so the
-    /// single output is unwrapped from a 1-tuple.
+    /// (checked). Artifacts marked `host_fallback` in the manifest run
+    /// on exact host reference implementations (stub manifests, see
+    /// [`super::host_fallback`]); everything else goes through PJRT —
+    /// the AOT side lowers with `return_tuple=True`, so the single
+    /// output is unwrapped from a 1-tuple.
     pub fn execute_i32(&self, name: &str, inputs: &[&[i32]]) -> Result<Vec<i32>> {
         let spec = self.manifest.get(name)?.clone();
         self.validate_inputs(&spec, inputs)?;
+        if super::host_fallback::applies(&spec) {
+            return super::host_fallback::execute_i32(&spec, inputs);
+        }
         self.compile(name)?;
         let literals: Vec<xla::Literal> = inputs
             .iter()

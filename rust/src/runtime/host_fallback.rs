@@ -1,0 +1,183 @@
+//! Host-interpreted artifact execution.
+//!
+//! Artifacts whose manifest entry carries a `host_fallback` key are
+//! executed by exact host i32 reference implementations instead of the
+//! PJRT client. This is what makes the checked-in stub manifest
+//! (`rust/tests/data/stub-artifacts/manifest.json`) useful: the server,
+//! batcher and cross-layer test paths run real numerics end to end even
+//! when the JAX/Pallas AOT artifacts have not been built (and even when
+//! the `xla` dependency is the offline stub crate — DESIGN.md §0).
+//!
+//! Supported kinds:
+//!
+//! * `"gemv"` — `y = W · x` with wrapping i32 accumulation; shapes and
+//!   `m`/`n` come from the manifest entry (mirrors the
+//!   `gemv_mac2_p*` AOT artifacts).
+//! * `"linear"` — a deterministic per-image linear classifier standing
+//!   in for the CNN `model` artifact: logits are a fixed pseudo-random
+//!   (seeded from the artifact name) weight matrix applied to each
+//!   batch element independently, so batching, zero-padding and
+//!   slot-independence behave exactly like the real model artifact.
+
+use anyhow::{bail, Context, Result};
+
+use crate::util::Rng;
+
+use super::artifacts::ArtifactSpec;
+
+/// True when `spec` is executed on the host instead of through PJRT.
+pub fn applies(spec: &ArtifactSpec) -> bool {
+    spec.meta.get("host_fallback").is_some()
+}
+
+/// Execute a host-fallback artifact. Inputs are already validated
+/// against the manifest shapes by the caller.
+pub fn execute_i32(spec: &ArtifactSpec, inputs: &[&[i32]]) -> Result<Vec<i32>> {
+    let kind = spec
+        .meta
+        .get("host_fallback")
+        .and_then(|j| j.as_str())
+        .with_context(|| format!("artifact '{}' has no host_fallback kind", spec.name))?;
+    match kind {
+        "gemv" => gemv(spec, inputs),
+        "linear" => linear(spec, inputs),
+        other => bail!("unknown host_fallback kind '{other}' for artifact '{}'", spec.name),
+    }
+}
+
+fn gemv(spec: &ArtifactSpec, inputs: &[&[i32]]) -> Result<Vec<i32>> {
+    anyhow::ensure!(
+        inputs.len() == 2,
+        "gemv fallback '{}' wants [w, x], got {} inputs",
+        spec.name,
+        inputs.len()
+    );
+    let m = spec.meta_usize("m").context("gemv fallback missing 'm'")?;
+    let n = spec.meta_usize("n").context("gemv fallback missing 'n'")?;
+    let (w, x) = (inputs[0], inputs[1]);
+    anyhow::ensure!(w.len() == m * n && x.len() == n, "gemv fallback shape mismatch");
+    let mut y = vec![0i32; m];
+    for (r, out) in y.iter_mut().enumerate() {
+        let row = &w[r * n..(r + 1) * n];
+        let mut acc = 0i32;
+        for (a, b) in row.iter().zip(x) {
+            acc = acc.wrapping_add(a.wrapping_mul(*b));
+        }
+        *out = acc;
+    }
+    Ok(y)
+}
+
+/// Small deterministic weight table derived from the artifact name, so
+/// two servers over the same manifest always agree.
+fn weight_table(name: &str, classes: usize) -> Vec<Vec<i32>> {
+    const PERIOD: usize = 97; // coprime with image sizes → all pixels matter
+    let seed = name
+        .bytes()
+        .fold(0xB2A_u64, |h, b| h.wrapping_mul(0x100000001B3).wrapping_add(b as u64));
+    let mut rng = Rng::seed_from_u64(seed);
+    (0..classes)
+        .map(|_| (0..PERIOD).map(|_| rng.gen_range_i64(-8, 7) as i32).collect())
+        .collect()
+}
+
+fn linear(spec: &ArtifactSpec, inputs: &[&[i32]]) -> Result<Vec<i32>> {
+    anyhow::ensure!(
+        inputs.len() == 1,
+        "linear fallback '{}' wants one batched input",
+        spec.name
+    );
+    let shape = spec
+        .input_shapes
+        .first()
+        .context("linear fallback missing input shape")?;
+    let batch = *shape.first().context("linear fallback input has no batch dim")?;
+    let elems: usize = shape[1..].iter().product();
+    let classes = spec.meta_usize("classes").unwrap_or(10);
+    anyhow::ensure!(inputs[0].len() == batch * elems, "linear fallback shape mismatch");
+
+    let weights = weight_table(&spec.name, classes);
+    let mut out = vec![0i32; batch * classes];
+    for b in 0..batch {
+        let img = &inputs[0][b * elems..(b + 1) * elems];
+        for (c, row) in weights.iter().enumerate() {
+            let mut acc = 0i32;
+            for (j, &v) in img.iter().enumerate() {
+                acc = acc.wrapping_add(v.wrapping_mul(row[j % row.len()]));
+            }
+            out[b * classes + c] = acc;
+        }
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::json::Json;
+    use std::collections::BTreeMap;
+
+    fn spec(name: &str, kind: &str, meta_extra: &[(&str, f64)], shapes: Vec<Vec<usize>>) -> ArtifactSpec {
+        let mut meta = BTreeMap::new();
+        meta.insert("host_fallback".to_string(), Json::Str(kind.to_string()));
+        for (k, v) in meta_extra {
+            meta.insert(k.to_string(), Json::Num(*v));
+        }
+        ArtifactSpec {
+            name: name.to_string(),
+            file: format!("{name}.hlo.txt"),
+            input_shapes: shapes,
+            meta,
+        }
+    }
+
+    #[test]
+    fn gemv_fallback_matches_reference() {
+        let s = spec(
+            "gemv_test",
+            "gemv",
+            &[("m", 3.0), ("n", 4.0)],
+            vec![vec![3, 4], vec![4]],
+        );
+        let w: Vec<i32> = (0..12).map(|v| v - 6).collect();
+        let x = vec![1i32, -2, 3, -4];
+        let y = execute_i32(&s, &[&w, &x]).unwrap();
+        for r in 0..3 {
+            let want: i32 = (0..4).map(|c| w[r * 4 + c] * x[c]).sum();
+            assert_eq!(y[r], want, "row {r}");
+        }
+    }
+
+    #[test]
+    fn linear_fallback_is_deterministic_and_slot_independent() {
+        let s = spec("model", "linear", &[("classes", 10.0)], vec![vec![2, 3, 4, 4]]);
+        let elems = 3 * 4 * 4;
+        let a: Vec<i32> = (0..elems as i32).collect();
+        let b: Vec<i32> = (0..elems as i32).map(|v| v * 2 + 1).collect();
+
+        let mut in1 = a.clone();
+        in1.extend(&b);
+        let out1 = execute_i32(&s, &[&in1]).unwrap();
+        assert_eq!(out1.len(), 20);
+
+        // Swapping batch slots swaps the logits blocks exactly.
+        let mut in2 = b.clone();
+        in2.extend(&a);
+        let out2 = execute_i32(&s, &[&in2]).unwrap();
+        assert_eq!(&out1[..10], &out2[10..]);
+        assert_eq!(&out1[10..], &out2[..10]);
+
+        // Determinism across calls.
+        assert_eq!(out1, execute_i32(&s, &[&in1]).unwrap());
+        // Different names give different classifiers.
+        let s2 = spec("model2", "linear", &[("classes", 10.0)], vec![vec![2, 3, 4, 4]]);
+        assert_ne!(out1, execute_i32(&s2, &[&in1]).unwrap());
+    }
+
+    #[test]
+    fn unknown_kind_is_an_error() {
+        let s = spec("weird", "conv-tbd", &[], vec![vec![1]]);
+        let err = execute_i32(&s, &[&[0]]).unwrap_err().to_string();
+        assert!(err.contains("conv-tbd"), "{err}");
+    }
+}

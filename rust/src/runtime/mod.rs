@@ -8,6 +8,7 @@
 
 pub mod artifacts;
 pub mod executor;
+pub mod host_fallback;
 
 pub use artifacts::{ArtifactSpec, Manifest};
 pub use executor::Runtime;

@@ -1,0 +1,40 @@
+//! Shared helpers for the integration tests.
+//!
+//! Two artifact flavors exist:
+//!
+//! * **real AOT artifacts** — produced by `make artifacts`
+//!   (`python -m compile.aot`); tests that need the PJRT-executed
+//!   Pallas kernels gate on [`artifacts_built`], which prints *why* it
+//!   skipped so a green run is never silently hollow;
+//! * **the checked-in stub manifest** ([`stub_artifacts_dir`]) — host
+//!   fallback artifacts that always exist, so batching, reply
+//!   correctness and cross-layer agreement are exercised on every run.
+
+use std::path::PathBuf;
+
+use bramac::runtime::Manifest;
+
+/// The real AOT artifact directory, or `None` (with a printed reason)
+/// when the artifacts have not been built.
+#[allow(dead_code)]
+pub fn artifacts_built() -> Option<PathBuf> {
+    let dir = Manifest::default_dir();
+    if dir.join("manifest.json").exists() {
+        Some(dir)
+    } else {
+        eprintln!(
+            "skipping PJRT-artifact test: no manifest at {} — run `make artifacts` \
+             (python -m compile.aot); the stub-manifest tests below still cover \
+             the batching/reply paths",
+            dir.join("manifest.json").display()
+        );
+        None
+    }
+}
+
+/// The checked-in stub manifest (host-fallback artifacts). Located
+/// relative to the crate manifest so the tests are CWD-independent.
+#[allow(dead_code)]
+pub fn stub_artifacts_dir() -> PathBuf {
+    PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("tests/data/stub-artifacts")
+}

@@ -2,22 +2,24 @@
 //! via PJRT from Rust), the bit-accurate dummy-array simulation, and
 //! plain host arithmetic must agree **exactly** on identical data.
 //!
-//! Requires `make artifacts`; tests self-skip when artifacts are absent
-//! so `cargo test` stays green on a fresh checkout.
+//! The PJRT-artifact tests require `make artifacts` and self-skip with
+//! a printed reason when absent; the same three-way agreement is then
+//! checked against the checked-in stub manifest (host-fallback
+//! artifacts), so the runtime → scheduler → reference chain is
+//! exercised on every run.
+
+mod common;
 
 use bramac::arch::Precision;
 use bramac::bramac::Variant;
 use bramac::coordinator::BlockPool;
 use bramac::quant::{random_vector, IntMatrix};
-use bramac::runtime::{Manifest, Runtime};
+use bramac::runtime::Runtime;
 use bramac::util::Rng;
 
 fn runtime_or_skip() -> Option<Runtime> {
-    if !Manifest::default_dir().join("manifest.json").exists() {
-        eprintln!("skipping: artifacts not built (run `make artifacts`)");
-        return None;
-    }
-    Some(Runtime::new().expect("runtime"))
+    let dir = common::artifacts_built()?;
+    Some(Runtime::with_dir(dir).expect("runtime"))
 }
 
 #[test]
@@ -114,4 +116,49 @@ fn model_artifact_batch_independence() {
 
     assert_eq!(&out1[..classes], &out2[classes..2 * classes], "slot swap");
     assert_eq!(&out1[classes..2 * classes], &out2[..classes], "slot swap");
+}
+
+// ---------------------------------------------------------------------
+// Stub-manifest cross-layer tests: always run (no AOT artifacts).
+// ---------------------------------------------------------------------
+
+#[test]
+fn stub_gemv_three_way_agreement_all_precisions() {
+    // Same three-way check as above, with the runtime executing the
+    // host-fallback gemv artifact instead of PJRT: runtime == parallel
+    // bit-accurate scheduler == host reference, exactly.
+    let rt = Runtime::with_dir(common::stub_artifacts_dir()).expect("stub runtime");
+    let mut rng = Rng::seed_from_u64(0x57B);
+    for p in Precision::ALL {
+        let name = format!("gemv_mac2_p{}_m160_n256", p.bits());
+        let spec = rt.manifest().get(&name).expect("stub gemv artifact");
+        let (m, n) = (spec.meta_usize("m").unwrap(), spec.meta_usize("n").unwrap());
+        let w = IntMatrix::random(&mut rng, m, n, p);
+        let x = random_vector(&mut rng, n, p, true);
+        let w32: Vec<i32> = w.data.iter().map(|&v| v as i32).collect();
+        let x32: Vec<i32> = x.iter().map(|&v| v as i32).collect();
+
+        let y_rt = rt.execute_i32(&name, &[&w32, &x32]).expect("host fallback exec");
+        let mut pool = BlockPool::new(Variant::OneDA, 4, p).with_threads(4);
+        let (y_sim, stats) = pool.run_gemv(&w, &x);
+        let y_ref = w.gemv_ref(&x);
+
+        assert_eq!(y_sim, y_ref, "{p}: parallel sim != ref");
+        assert!(stats.mac2s > 0);
+        assert!(
+            y_rt.iter().map(|&v| v as i64).eq(y_ref.iter().copied()),
+            "{p}: runtime != ref"
+        );
+    }
+}
+
+#[test]
+fn stub_runtime_validates_inputs_like_pjrt_path() {
+    let rt = Runtime::with_dir(common::stub_artifacts_dir()).expect("stub runtime");
+    // Wrong element count must be rejected before execution.
+    let bad = vec![0i32; 7];
+    assert!(rt
+        .execute_i32("gemv_mac2_p4_m160_n256", &[&bad, &bad])
+        .is_err());
+    assert!(rt.execute_i32("nonexistent", &[]).is_err());
 }

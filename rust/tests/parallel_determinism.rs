@@ -1,0 +1,93 @@
+//! The thread-parallel `BlockPool` scheduler must be **bit-identical**
+//! to the sequential path — outputs and every `ScheduleStats` field —
+//! across seeds, matrix shapes, pool sizes, thread counts and both
+//! variants. Per-block tile ownership plus an ordered reduction makes
+//! this exact, not approximate (see coordinator/scheduler.rs docs).
+
+use bramac::arch::Precision;
+use bramac::bramac::Variant;
+use bramac::coordinator::BlockPool;
+use bramac::quant::{random_vector, IntMatrix};
+use bramac::util::Rng;
+
+#[test]
+fn gemv_parallel_equals_sequential_across_seeds_and_pools() {
+    for seed in [0x5eed_0u64, 0x5eed_1, 0x5eed_2] {
+        for variant in Variant::ALL {
+            for &(m, n) in &[(1usize, 1usize), (33, 70), (61, 300)] {
+                for &pool_size in &[1usize, 2, 3, 7] {
+                    let mut rng = Rng::seed_from_u64(seed);
+                    let p = Precision::ALL[(seed as usize + pool_size) % 3];
+                    let w = IntMatrix::random(&mut rng, m, n, p);
+                    let x = random_vector(&mut rng, n, p, true);
+
+                    let mut seq = BlockPool::new(variant, pool_size, p);
+                    let (y_seq, s_seq) = seq.run_gemv(&w, &x);
+                    assert_eq!(y_seq, w.gemv_ref(&x), "sequential must stay exact");
+
+                    for threads in [2usize, 4, 64] {
+                        let mut par =
+                            BlockPool::new(variant, pool_size, p).with_threads(threads);
+                        let (y_par, s_par) = par.run_gemv(&w, &x);
+                        assert_eq!(
+                            y_par, y_seq,
+                            "output diverged: seed={seed:#x} {} {p} {m}x{n} pool={pool_size} threads={threads}",
+                            variant.name()
+                        );
+                        assert_eq!(
+                            s_par, s_seq,
+                            "stats diverged: seed={seed:#x} {} {p} {m}x{n} pool={pool_size} threads={threads}",
+                            variant.name()
+                        );
+                    }
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn batch2_parallel_equals_sequential() {
+    for seed in [7u64, 8, 9] {
+        for &pool_size in &[1usize, 2, 5] {
+            for p in Precision::ALL {
+                let mut rng = Rng::seed_from_u64(seed);
+                let (m, n) = (45, 96);
+                let w = IntMatrix::random(&mut rng, m, n, p);
+                let x0 = random_vector(&mut rng, n, p, true);
+                let x1 = random_vector(&mut rng, n, p, true);
+
+                let mut seq = BlockPool::new(Variant::TwoSA, pool_size, p);
+                let ([a0, a1], s_seq) = seq.run_mvm_batch2(&w, &x0, &x1);
+                assert_eq!(a0, w.gemv_ref(&x0));
+                assert_eq!(a1, w.gemv_ref(&x1));
+
+                for threads in [2usize, 4] {
+                    let mut par =
+                        BlockPool::new(Variant::TwoSA, pool_size, p).with_threads(threads);
+                    let ([b0, b1], s_par) = par.run_mvm_batch2(&w, &x0, &x1);
+                    assert_eq!(b0, a0, "seed={seed} {p} pool={pool_size} threads={threads}");
+                    assert_eq!(b1, a1, "seed={seed} {p} pool={pool_size} threads={threads}");
+                    assert_eq!(s_par, s_seq, "stats: seed={seed} {p} pool={pool_size}");
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn repeated_parallel_runs_are_self_consistent() {
+    // Same pool object, multiple parallel runs: the schedule restarts
+    // from the same per-tile state (words rewritten, accumulators
+    // reset), so results and per-run stats repeat exactly.
+    let mut rng = Rng::seed_from_u64(0xD00D);
+    let p = Precision::Int4;
+    let w = IntMatrix::random(&mut rng, 50, 200, p);
+    let x = random_vector(&mut rng, 200, p, true);
+    let mut pool = BlockPool::new(Variant::OneDA, 4, p).with_threads(4);
+    let (y1, s1) = pool.run_gemv(&w, &x);
+    let (y2, s2) = pool.run_gemv(&w, &x);
+    assert_eq!(y1, y2);
+    assert_eq!(s1, s2);
+    assert_eq!(y1, w.gemv_ref(&x));
+}

@@ -1,0 +1,152 @@
+//! Golden-vector pins for the Table II closed forms.
+//!
+//! Every `(Variant, Precision, signed)` combination of the per-block
+//! cycle model is pinned to explicit literals so any regression in
+//! `Variant::mac2_cycles`, `cold_start_cycles`, `main_busy_per_mac2`,
+//! `acc_readout_cycles` or `macs_in_parallel` fails loudly with the
+//! exact cell that moved — these constants feed every downstream study
+//! (Fig 9 throughput, Fig 11 GEMV, the DLA DSE), so a silent drift here
+//! would skew every "paper-vs-measured" comparison at once.
+//!
+//! Closed forms (paper §IV, Table II):
+//!
+//! * schedule length: `n+3` cycles signed, `n+2` unsigned (the
+//!   inverter cycle is skipped for unsigned inputs);
+//! * 2SA steady-state MAC2 latency = schedule length (copies overlap
+//!   the previous MAC2's last two cycles, Fig 5a);
+//! * 1DA runs the copy half-cycle plus the schedule at 2x the main
+//!   clock: `ceil((len+1)/2)` main cycles;
+//! * cold start 2 / 1 cycles, main-port busy 2 / 1 per MAC2,
+//!   accumulator readout 8 / 4 cycles, `2·lanes·arrays` parallel MACs.
+
+use bramac::arch::Precision;
+use bramac::bramac::efsm::mac2_compute_cycles;
+use bramac::bramac::{BramacBlock, Variant};
+
+/// (variant, precision, signed, mac2_cycles, schedule_len).
+const MAC2_GOLDEN: [(Variant, Precision, bool, u64, u64); 12] = [
+    (Variant::TwoSA, Precision::Int2, true, 5, 5),
+    (Variant::TwoSA, Precision::Int2, false, 4, 4),
+    (Variant::TwoSA, Precision::Int4, true, 7, 7),
+    (Variant::TwoSA, Precision::Int4, false, 6, 6),
+    (Variant::TwoSA, Precision::Int8, true, 11, 11),
+    (Variant::TwoSA, Precision::Int8, false, 10, 10),
+    // 1DA: ceil((len+1)/2) — the half-cycle granularity absorbs the
+    // unsigned inverter-cycle saving at every precision.
+    (Variant::OneDA, Precision::Int2, true, 3, 5),
+    (Variant::OneDA, Precision::Int2, false, 3, 4),
+    (Variant::OneDA, Precision::Int4, true, 4, 7),
+    (Variant::OneDA, Precision::Int4, false, 4, 6),
+    (Variant::OneDA, Precision::Int8, true, 6, 11),
+    (Variant::OneDA, Precision::Int8, false, 6, 10),
+];
+
+/// (variant, cold_start, main_busy_per_mac2, acc_readout).
+const PER_VARIANT_GOLDEN: [(Variant, u64, u64, u64); 2] = [
+    (Variant::TwoSA, 2, 2, 8),
+    (Variant::OneDA, 1, 1, 4),
+];
+
+/// (variant, precision, macs_in_parallel) — Table II row
+/// "# of MACs in Parallel": 80/40/20 for 2SA, 40/20/10 for 1DA.
+const MACS_GOLDEN: [(Variant, Precision, u64); 6] = [
+    (Variant::TwoSA, Precision::Int2, 80),
+    (Variant::TwoSA, Precision::Int4, 40),
+    (Variant::TwoSA, Precision::Int8, 20),
+    (Variant::OneDA, Precision::Int2, 40),
+    (Variant::OneDA, Precision::Int4, 20),
+    (Variant::OneDA, Precision::Int8, 10),
+];
+
+#[test]
+fn mac2_cycles_pinned_every_combination() {
+    for (v, p, signed, cycles, sched) in MAC2_GOLDEN {
+        assert_eq!(
+            v.mac2_cycles(p, signed),
+            cycles,
+            "{} {p} signed={signed}: mac2_cycles",
+            v.name()
+        );
+        assert_eq!(
+            mac2_compute_cycles(p, signed),
+            sched,
+            "{p} signed={signed}: schedule length"
+        );
+    }
+}
+
+#[test]
+fn per_variant_constants_pinned() {
+    for (v, cold, busy, readout) in PER_VARIANT_GOLDEN {
+        assert_eq!(v.cold_start_cycles(), cold, "{}: cold_start", v.name());
+        assert_eq!(v.main_busy_per_mac2(), busy, "{}: main_busy", v.name());
+        assert_eq!(v.acc_readout_cycles(), readout, "{}: acc_readout", v.name());
+    }
+}
+
+#[test]
+fn macs_in_parallel_pinned() {
+    for (v, p, macs) in MACS_GOLDEN {
+        assert_eq!(v.macs_in_parallel(p), macs, "{} {p}", v.name());
+    }
+}
+
+#[test]
+fn closed_forms_match_schedule_derivation() {
+    // The pinned numbers must stay self-consistent with the derivation:
+    // 2SA = schedule length; 1DA = ceil((len + 1) / 2).
+    for (v, p, signed, cycles, sched) in MAC2_GOLDEN {
+        let derived = match v {
+            Variant::TwoSA => sched,
+            Variant::OneDA => (sched + 1).div_ceil(2),
+        };
+        assert_eq!(cycles, derived, "{} {p} signed={signed}", v.name());
+        // Schedule length itself: n+3 signed / n+2 unsigned.
+        let n = p.bits() as u64;
+        assert_eq!(sched, if signed { n + 3 } else { n + 2 });
+    }
+}
+
+#[test]
+fn simulated_blocks_hit_the_closed_forms_signed_and_unsigned() {
+    // Run a real MAC2 stream through the bit-accurate block and check
+    // the stream-level accounting equals cold_start + k·mac2_cycles and
+    // k·main_busy for BOTH signednesses (the seed only covered signed).
+    for (v, p, signed, cycles, _) in MAC2_GOLDEN {
+        let mut block = BramacBlock::new(v, p);
+        let k = 7u64;
+        for i in 0..k {
+            let pairs = vec![(1i64, 0i64); v.dummy_arrays()];
+            block.mac2((2 * i) as u16, (2 * i + 1) as u16, &pairs, signed);
+        }
+        let st = block.stats();
+        assert_eq!(
+            st.main_cycles,
+            v.cold_start_cycles() + k * cycles,
+            "{} {p} signed={signed}: stream main_cycles",
+            v.name()
+        );
+        assert_eq!(
+            st.main_busy_cycles,
+            k * v.main_busy_per_mac2(),
+            "{} {p} signed={signed}: stream busy cycles",
+            v.name()
+        );
+        assert_eq!(st.mac2_count, k);
+    }
+}
+
+#[test]
+fn acc_readout_charges_busy_cycles() {
+    for (v, _, _, readout) in PER_VARIANT_GOLDEN {
+        let mut block = BramacBlock::new(v, Precision::Int4);
+        let pairs = vec![(1i64, 1i64); v.dummy_arrays()];
+        block.mac2(0, 1, &pairs, true);
+        let before = block.stats();
+        let _ = block.read_accumulators();
+        let after = block.stats();
+        assert_eq!(after.main_cycles - before.main_cycles, readout, "{}", v.name());
+        assert_eq!(after.main_busy_cycles - before.main_busy_cycles, readout);
+        assert_eq!(after.acc_readouts - before.acc_readouts, 1);
+    }
+}
