@@ -22,8 +22,8 @@ fn main() {
     // Store W1 = [-3..6], W2 = [-5..4] at rows 0 and 1 (col 0).
     let w1: Vec<i64> = (-3..=6).collect();
     let w2: Vec<i64> = (-5..=4).collect();
-    block.write_word(0, pack_word(&w1, p));
-    block.write_word(4, pack_word(&w2, p));
+    block.write_word(0, pack_word(&w1, p, true));
+    block.write_word(4, pack_word(&w2, p, true));
     block.reset_acc();
     let instr = CimInstr {
         inputs: [0x3, 0x2], // I1 = 3, I2 = 2

@@ -6,8 +6,10 @@ use bramac::bramac::efsm::{compute_schedule, Engine, Mac2Inputs};
 use bramac::bramac::mac2::{gemv_golden, mac2_golden};
 use bramac::bramac::signext::{pack_word, sign_extend_word};
 use bramac::bramac::{BramacBlock, Variant};
-use bramac::coordinator::BlockPool;
+use bramac::coordinator::tiler::plan_gemv;
+use bramac::coordinator::{BlockPool, PlanCache, PlanKey};
 use bramac::quant::{random_vector, IntMatrix};
+use bramac::storage::ResidentModel;
 use bramac::util::bench::{black_box, Bench};
 use bramac::util::Rng;
 
@@ -34,7 +36,7 @@ fn main() {
         let w: Vec<i64> = (0..p.lanes_per_word())
             .map(|_| rng.gen_range_i64(lo as i64, hi as i64))
             .collect();
-        let w1 = sign_extend_word(pack_word(&w, p), p);
+        let w1 = sign_extend_word(pack_word(&w, p, true), p);
         let inputs = Mac2Inputs { i1: lo as i64, i2: hi as i64, signed: true };
         b.bench(&format!("efsm_mac2/{p} (engine, all lanes)"), || {
             let mut e = Engine::new(p);
@@ -128,6 +130,70 @@ fn main() {
     println!(
         "pool_gemv sequential vs 4 threads: {speedup_4t:.2}x \
          (target >= 2x on hosts with >= 4 cores)"
+    );
+
+    // §Perf iteration 6: plan cache + persistent dataflow (PR 2).
+    // (a) Cached-plan lookup vs full derivation for the serving case of
+    // repeated same-shape dispatches.
+    let key = PlanKey {
+        m: 320,
+        n: 1024,
+        precision: p,
+        variant: Variant::OneDA,
+        blocks: 8,
+        double_buffer: true,
+    };
+    let derive_ns = b
+        .bench("tile_plan/derive/320x1024/4bit", || {
+            black_box(plan_gemv(320, 1024, p, true));
+        })
+        .median_ns;
+    let mut warm_cache = PlanCache::new();
+    let _ = warm_cache.get_or_insert(key);
+    let cached_ns = b
+        .bench("tile_plan/cached/320x1024/4bit", || {
+            black_box(warm_cache.get_or_insert(key));
+        })
+        .median_ns;
+    assert!(
+        cached_ns < derive_ns,
+        "cached plan lookup ({cached_ns:.0} ns) must beat derivation ({derive_ns:.0} ns)"
+    );
+    println!(
+        "    -> plan cache hit vs derive: {:.1}x for repeated same-shape dispatches",
+        derive_ns / cached_ns
+    );
+
+    // (b) Persistent vs tiling dispatch on the same workload: resident
+    // weights skip the per-tile pack+write streaming entirely (host
+    // time) and report zero copy cycles (simulated time).
+    let (pm, pn) = (80usize, 256usize);
+    let pw = IntMatrix::random(&mut rng, pm, pn, p);
+    let px = random_vector(&mut rng, pn, p, true);
+    let mut tiling_pool = BlockPool::new(Variant::OneDA, 8, p);
+    let (y_tiling, s_tiling) = tiling_pool.run_gemv(&pw, &px);
+    let mut resident_pool = BlockPool::new(Variant::OneDA, 8, p);
+    let rm = ResidentModel::pin(&mut resident_pool, &pw).expect("80x256/4bit fits 8 blocks");
+    let (y_resident, s_resident) = resident_pool.run_gemv_resident(&rm, &px, true);
+    assert_eq!(y_resident, y_tiling, "dataflows must be bit-identical");
+    assert_eq!(s_resident.weight_copy_cycles, 0);
+    assert!(s_tiling.weight_copy_cycles > 0);
+    let tiling_ns = b
+        .bench("pool_gemv/tiling/80x256/4bit/8blocks", || {
+            black_box(tiling_pool.run_gemv(&pw, &px));
+        })
+        .median_ns;
+    let resident_ns = b
+        .bench("pool_gemv/persistent/80x256/4bit/8blocks", || {
+            black_box(resident_pool.run_gemv_resident(&rm, &px, true));
+        })
+        .median_ns;
+    println!(
+        "    -> persistent vs tiling dispatch: {:.2}x host time; copy cycles {} -> 0 \
+         (pin cost {} words, paid once)",
+        tiling_ns / resident_ns,
+        s_tiling.weight_copy_cycles,
+        rm.pinned_words
     );
 
     b.finish();

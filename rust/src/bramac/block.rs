@@ -125,6 +125,12 @@ pub struct StreamStats {
     /// application reads/writes — the tiling enabler.
     pub main_busy_cycles: u64,
     pub acc_readouts: u64,
+    /// Words written through the application port (`write_word`), one
+    /// load cycle each. The scheduler charges weight-copy traffic from
+    /// *deltas* of this counter, so copies are billed only when words
+    /// are actually (re)written — weights already resident in the main
+    /// array (persistent dataflow) are never recounted.
+    pub app_write_words: u64,
 }
 
 impl StreamStats {
@@ -206,6 +212,7 @@ impl BramacBlock {
         assert!((addr as usize) < MAIN_WORDS, "address out of range");
         assert!(data < (1 << WORD_BITS), "data exceeds 40 bits");
         self.main[addr as usize] = data;
+        self.stats.app_write_words += 1;
     }
 
     /// Read one 40-bit word.
@@ -401,7 +408,7 @@ mod tests {
         let elems: Vec<i64> = (0..p.lanes_per_word())
             .map(|_| rng.gen_range_i64(lo as i64, hi as i64))
             .collect();
-        (pack_word(&elems, p), elems)
+        (pack_word(&elems, p, true), elems)
     }
 
     #[test]
@@ -504,8 +511,8 @@ mod tests {
     fn instruction_issue_path() {
         let p = Precision::Int4;
         let mut block = BramacBlock::new(Variant::OneDA, p);
-        let w1 = pack_word(&[1, 2, 3, 4, 5, 6, 7, -8, -1, 0], p);
-        let w2 = pack_word(&[0, 1, 0, -1, 2, -2, 3, -3, 7, -8], p);
+        let w1 = pack_word(&[1, 2, 3, 4, 5, 6, 7, -8, -1, 0], p, true);
+        let w2 = pack_word(&[0, 1, 0, -1, 2, -2, 3, -3, 7, -8], p, true);
         block.write_word(4, w1); // row 1, col 0
         block.write_word(8, w2); // row 2, col 0
         let reset = CimInstr {
@@ -556,13 +563,13 @@ mod tests {
         // demonstrate the stale-data behavior the model exposes.
         let p = Precision::Int4;
         let mut b = BramacBlock::new(Variant::OneDA, p);
-        b.write_word(0, pack_word(&[1; 10], p));
-        b.write_word(1, pack_word(&[1; 10], p));
+        b.write_word(0, pack_word(&[1; 10], p, true));
+        b.write_word(1, pack_word(&[1; 10], p, true));
         b.reset_acc();
         b.mac2(0, 1, &[(1, 1)], true); // copies the OLD weights
         // Overwrite the main BRAM mid-"computation": the dummy array's
         // copy is unaffected (the stale-data semantics, by design).
-        b.write_word(0, pack_word(&[7; 10], p));
+        b.write_word(0, pack_word(&[7; 10], p, true));
         let acc = b.read_accumulators();
         assert_eq!(acc[0], vec![2i64; 10], "dummy array computed on its copy");
     }
@@ -586,8 +593,8 @@ mod tests {
         // Encode → 40-bit word → decode → issue: the full 0xfff path.
         let p = Precision::Int2;
         let mut block = BramacBlock::new(Variant::OneDA, p);
-        block.write_word(0, pack_word(&vec![1i64; 20], p));
-        block.write_word(4, pack_word(&vec![-1i64; 20], p));
+        block.write_word(0, pack_word(&vec![1i64; 20], p, true));
+        block.write_word(4, pack_word(&vec![-1i64; 20], p, true));
         block.reset_acc();
         let instr = CimInstr {
             inputs: [0x1, 0x1],

@@ -218,9 +218,9 @@ mod tests {
         let p = engine.precision;
         // Copy cycles (2SA style: one row per cycle).
         engine.array.new_cycle();
-        engine.copy_weight(Row::W1, sign_extend_word(pack_word(w1, p), p));
+        engine.copy_weight(Row::W1, sign_extend_word(pack_word(w1, p, true), p));
         engine.array.new_cycle();
-        engine.copy_weight(Row::W2, sign_extend_word(pack_word(w2, p), p));
+        engine.copy_weight(Row::W2, sign_extend_word(pack_word(w2, p, true), p));
         let inputs = Mac2Inputs { i1, i2, signed };
         for op in compute_schedule(p, signed) {
             engine.array.new_cycle();

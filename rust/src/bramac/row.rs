@@ -71,10 +71,20 @@ impl Row160 {
         (raw ^ sign) - sign
     }
 
-    /// Write a signed value into a lane (2's complement truncation).
+    /// Write a signed value into a lane. The value must be representable
+    /// in `width` bits of 2's complement — silent truncation would
+    /// corrupt lanes undetectably, so this is checked with the same
+    /// discipline `DummyArray::write` applies to row values.
     #[inline]
     pub fn set_lane_signed(&mut self, lane: usize, width: u32, value: i64) {
-        self.set_lane(lane, width, (value as u64 & ((1u64 << width) - 1).min(u32::MAX as u64)) as u32);
+        debug_assert!((1..=32).contains(&width));
+        debug_assert!(
+            value >= -(1i64 << (width - 1)) && value < (1i64 << (width - 1)),
+            "value {value} not representable in {width}-bit 2's complement"
+        );
+        // For in-range values the low `width` bits of the i64 are the
+        // 2's complement encoding; `set_lane` masks to `width`.
+        self.set_lane(lane, width, value as u32);
     }
 
     /// All lanes of the row as signed integers at the given precision's
@@ -144,6 +154,21 @@ mod tests {
         let mut r = Row160::ZERO;
         r.set_lane_signed(4, 32, -2_000_000_000);
         assert_eq!(r.lane_signed(4, 32), -2_000_000_000);
+        // Width-32 extremes are representable and must round-trip.
+        r.set_lane_signed(0, 32, i32::MIN as i64);
+        assert_eq!(r.lane_signed(0, 32), i32::MIN as i64);
+        r.set_lane_signed(1, 32, i32::MAX as i64);
+        assert_eq!(r.lane_signed(1, 32), i32::MAX as i64);
+    }
+
+    #[test]
+    #[cfg(debug_assertions)]
+    #[should_panic(expected = "not representable")]
+    fn set_lane_signed_rejects_unrepresentable() {
+        // 128 does not fit 8-bit 2's complement; the old mask dance
+        // silently truncated it to -128.
+        let mut r = Row160::ZERO;
+        r.set_lane_signed(0, 8, 128);
     }
 
     #[test]

@@ -11,21 +11,26 @@ use crate::arch::Precision;
 
 use super::row::Row160;
 
-/// Pack `p.lanes_per_word()` signed elements into a 40-bit word
-/// (low element in the low bits — lane order matches the dummy array).
-pub fn pack_word(elems: &[i64], p: Precision) -> u64 {
+/// Pack `p.lanes_per_word()` elements into a 40-bit word (low element in
+/// the low bits — lane order matches the dummy array). `signed` selects
+/// the range that is enforced: n-bit 2's complement when true, n-bit
+/// unsigned when false. An int8 weight of 255 is *not* "in range" for
+/// the signed interpretation — it would silently alias to -1 — so the
+/// two ranges are validated separately instead of unioned.
+pub fn pack_word(elems: &[i64], p: Precision, signed: bool) -> u64 {
     let n = p.bits();
     assert!(
         elems.len() <= p.lanes_per_word(),
         "too many elements for one 40-bit word"
     );
     let mask = (1u64 << n) - 1;
+    let (lo, hi) = if signed { p.range() } else { p.range_unsigned() };
     let mut word = 0u64;
     for (i, &e) in elems.iter().enumerate() {
-        let (lo, hi) = p.range();
         assert!(
-            (lo as i64..=hi as i64).contains(&e) || (0..=(mask as i64)).contains(&e),
-            "element {e} out of {n}-bit range"
+            (lo as i64..=hi as i64).contains(&e),
+            "element {e} out of {n}-bit {} range [{lo}, {hi}]",
+            if signed { "signed" } else { "unsigned" }
         );
         word |= ((e as u64) & mask) << (i as u32 * n);
     }
@@ -81,11 +86,32 @@ mod tests {
                 let elems: Vec<i64> = (0..p.lanes_per_word())
                     .map(|_| rng.gen_range_i64(lo as i64, hi as i64))
                     .collect();
-                let word = pack_word(&elems, p);
+                let word = pack_word(&elems, p, true);
                 assert!(word < (1u64 << 40), "word must fit 40 bits");
                 assert_eq!(unpack_word(word, p), elems);
             }
         }
+    }
+
+    #[test]
+    fn pack_word_validates_per_signedness() {
+        // Unsigned packing accepts the full 0..=2^n-1 range.
+        assert_eq!(pack_word(&[255], Precision::Int8, false), 255);
+        // In-range signed values pack to their 2's complement bits.
+        assert_eq!(pack_word(&[-1], Precision::Int8, true), 0xFF);
+    }
+
+    #[test]
+    #[should_panic(expected = "out of 8-bit signed range")]
+    fn pack_word_rejects_unsigned_value_as_signed() {
+        // 255 is not a valid int8 weight; it would alias to -1.
+        let _ = pack_word(&[255], Precision::Int8, true);
+    }
+
+    #[test]
+    #[should_panic(expected = "out of 4-bit unsigned range")]
+    fn pack_word_rejects_negative_value_as_unsigned() {
+        let _ = pack_word(&[-1], Precision::Int4, false);
     }
 
     #[test]
@@ -97,7 +123,7 @@ mod tests {
                 let elems: Vec<i64> = (0..p.lanes_per_word())
                     .map(|_| rng.gen_range_i64(lo as i64, hi as i64))
                     .collect();
-                let row = sign_extend_word(pack_word(&elems, p), p);
+                let row = sign_extend_word(pack_word(&elems, p, true), p);
                 assert_eq!(narrow_row(&row, p), elems);
             }
         }
@@ -106,10 +132,10 @@ mod tests {
     #[test]
     fn negative_values_fill_upper_bits() {
         // -1 at 4-bit must extend to 0xFFFF in a 16-bit lane.
-        let row = sign_extend_word(pack_word(&[-1], Precision::Int4), Precision::Int4);
+        let row = sign_extend_word(pack_word(&[-1], Precision::Int4, true), Precision::Int4);
         assert_eq!(row.lane(0, 16), 0xFFFF);
         // +7 must extend with zeros.
-        let row = sign_extend_word(pack_word(&[7], Precision::Int4), Precision::Int4);
+        let row = sign_extend_word(pack_word(&[7], Precision::Int4, true), Precision::Int4);
         assert_eq!(row.lane(0, 16), 0x0007);
     }
 

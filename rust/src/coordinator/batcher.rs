@@ -6,10 +6,21 @@
 use std::sync::mpsc::{channel, Receiver, RecvTimeoutError, Sender};
 use std::time::{Duration, Instant};
 
-/// One queued request: payload + reply channel.
+/// One queued request: payload + reply channel + submit timestamp.
 pub struct Request<T, R> {
     pub payload: T,
     pub reply: Sender<R>,
+    /// When the request entered the queue (stamped by [`Request::new`]).
+    /// The batching window is anchored here, so time spent waiting for a
+    /// busy consumer counts against `max_wait` instead of silently
+    /// extending the advertised latency bound.
+    pub submitted_at: Instant,
+}
+
+impl<T, R> Request<T, R> {
+    pub fn new(payload: T, reply: Sender<R>) -> Self {
+        Request { payload, reply, submitted_at: Instant::now() }
+    }
 }
 
 /// Collects requests into batches of exactly `batch_size` (padding is
@@ -32,19 +43,32 @@ impl<T, R> Batcher<T, R> {
     /// Block until a batch forms (or the window closes with ≥1 request).
     /// Returns `None` when all senders disconnected and the queue
     /// drained — the shutdown signal.
+    ///
+    /// The window deadline is `first.submitted_at + max_wait`: anchoring
+    /// at post-`recv` time would exclude the first request's queue wait,
+    /// so under a slow consumer the observed wait could reach queue wait
+    /// + `max_wait` — well past the advertised p99 bound. If the window
+    /// already closed while the request sat in the queue, whatever else
+    /// is queued is scooped without blocking.
     pub fn next_batch(&self) -> Option<Vec<Request<T, R>>> {
         let first = match self.rx.recv() {
             Ok(r) => r,
             Err(_) => return None,
         };
+        let deadline = first.submitted_at + self.max_wait;
         let mut batch = vec![first];
-        let deadline = Instant::now() + self.max_wait;
         while batch.len() < self.batch_size {
-            let now = Instant::now();
-            if now >= deadline {
+            let remaining = deadline.saturating_duration_since(Instant::now());
+            if remaining.is_zero() {
+                while batch.len() < self.batch_size {
+                    match self.rx.try_recv() {
+                        Ok(r) => batch.push(r),
+                        Err(_) => break,
+                    }
+                }
                 break;
             }
-            match self.rx.recv_timeout(deadline - now) {
+            match self.rx.recv_timeout(remaining) {
                 Ok(r) => batch.push(r),
                 Err(RecvTimeoutError::Timeout) => break,
                 Err(RecvTimeoutError::Disconnected) => break,
@@ -57,7 +81,7 @@ impl<T, R> Batcher<T, R> {
 /// Submit a payload and wait for the reply (client-side helper).
 pub fn submit_and_wait<T, R>(tx: &Sender<Request<T, R>>, payload: T) -> Option<R> {
     let (reply_tx, reply_rx) = channel();
-    tx.send(Request { payload, reply: reply_tx }).ok()?;
+    tx.send(Request::new(payload, reply_tx)).ok()?;
     reply_rx.recv().ok()
 }
 
@@ -103,10 +127,55 @@ mod tests {
         let worker = thread::spawn(move || batcher.next_batch().map(|b| b.len()));
         thread::sleep(Duration::from_millis(5));
         let (rtx, _rrx) = channel();
-        tx.send(Request { payload: 1, reply: rtx }).unwrap();
+        tx.send(Request::new(1, rtx)).unwrap();
         let got = worker.join().unwrap();
         assert_eq!(got, Some(1));
         assert!(t0.elapsed() < Duration::from_millis(500));
+    }
+
+    #[test]
+    fn window_anchored_at_submit_not_at_recv() {
+        // A consumer that dequeues late must not restart the window: the
+        // p99 bound is (queue wait + remaining window), never queue wait
+        // + a fresh max_wait.
+        let max_wait = Duration::from_millis(150);
+        let (tx, batcher) = Batcher::<u32, u32>::new(64, max_wait);
+        let (rtx, _rrx) = channel();
+        tx.send(Request::new(1, rtx.clone())).unwrap();
+        // Simulate a slow consumer: the request outlives the window in
+        // the queue; a second request arrives meanwhile.
+        thread::sleep(Duration::from_millis(200));
+        tx.send(Request::new(2, rtx)).unwrap();
+        let t0 = Instant::now();
+        let batch = batcher.next_batch().unwrap();
+        let took = t0.elapsed();
+        assert_eq!(batch.len(), 2, "already-queued requests are scooped");
+        assert!(
+            took < Duration::from_millis(100),
+            "expired window must not block another max_wait: {took:?}"
+        );
+        // End-to-end: first submit → batch formation stays within queue
+        // wait + one window (generous slack for CI schedulers).
+        assert!(batch[0].submitted_at.elapsed() < Duration::from_millis(400));
+    }
+
+    #[test]
+    fn partial_window_continues_after_late_dequeue() {
+        // Dequeue happens mid-window: only the *remaining* window is
+        // waited, not a full max_wait from recv time.
+        let max_wait = Duration::from_millis(200);
+        let (tx, batcher) = Batcher::<u32, u32>::new(64, max_wait);
+        let (rtx, _rrx) = channel();
+        tx.send(Request::new(1, rtx)).unwrap();
+        thread::sleep(Duration::from_millis(120));
+        let t0 = Instant::now();
+        let batch = batcher.next_batch().unwrap();
+        assert_eq!(batch.len(), 1);
+        assert!(
+            t0.elapsed() < Duration::from_millis(160),
+            "should wait ~80ms of remaining window, waited {:?}",
+            t0.elapsed()
+        );
     }
 
     #[test]

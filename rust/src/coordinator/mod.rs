@@ -1,15 +1,21 @@
-//! L3 coordinator: tiling-based inference orchestration on a pool of
-//! simulated BRAMAC blocks, with the double-buffered weight streaming
-//! that the eFSM's port-freeing enables (§IV-C), a dynamic batcher and
-//! an async inference server running real numerics through PJRT.
+//! L3 coordinator: inference orchestration on a pool of simulated
+//! BRAMAC blocks under both paper dataflows — tiling (double-buffered
+//! weight streaming, the eFSM's port-freeing contribution of §IV-C) and
+//! persistent (weights pinned on-chip once via
+//! [`crate::storage::ResidentModel`], zero copy traffic per dispatch) —
+//! plus a tile-plan cache for repeated same-shape dispatches, a dynamic
+//! batcher and an async inference server running real numerics through
+//! PJRT.
 
 pub mod batcher;
+pub mod plan_cache;
 pub mod scheduler;
 pub mod server;
 pub mod tiler;
 pub mod workers;
 
 pub use batcher::Batcher;
+pub use plan_cache::{CachedPlan, PlanCache, PlanKey};
 pub use scheduler::{BlockPool, ScheduleStats};
 pub use server::{InferenceServer, ServerStats};
 pub use tiler::{plan_gemv, Tile, TilePlan};

@@ -1,0 +1,166 @@
+//! Tile-plan cache for repeated same-shape dispatches.
+//!
+//! Serving workloads dispatch the same `(m, k, precision)` GEMV shapes
+//! over and over (every request against a resident model reuses one
+//! layout), yet the scheduler used to re-derive the tile plan *and* the
+//! per-block round-robin assignment on every call. Plans are pure
+//! functions of `(m, k, precision, variant, pool geometry)`, so
+//! [`PlanCache`] memoizes them behind that key; cached entries are
+//! shared via `Arc`, so a hit is a hash lookup + refcount bump instead
+//! of a fresh tiling walk and `nblocks + tiles` allocations.
+
+use std::collections::HashMap;
+use std::sync::Arc;
+
+use crate::arch::Precision;
+use crate::bramac::Variant;
+
+use super::tiler::{plan_gemv, Tile, TilePlan};
+
+/// Everything a tile plan depends on. Two pools with the same key
+/// produce bit-identical plans, so entries are shareable across pools.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct PlanKey {
+    pub m: usize,
+    pub n: usize,
+    pub precision: Precision,
+    pub variant: Variant,
+    /// Pool geometry: the round-robin split is per block count.
+    pub blocks: usize,
+    pub double_buffer: bool,
+}
+
+/// A memoized plan: the tiling plus its per-block assignment.
+#[derive(Debug)]
+pub struct CachedPlan {
+    pub plan: TilePlan,
+    /// Tile `i` belongs to block `i % blocks`, in plan order.
+    pub by_block: Vec<Vec<Tile>>,
+}
+
+/// Round-robin ownership split: item `i` goes to bucket `i % n`,
+/// preserving order within each bucket. Shared by the scheduler's plan
+/// assignment and the persistent-mode resident layout so both dataflows
+/// place the same tile on the same block.
+pub fn split_round_robin<T: Copy>(items: &[T], n: usize) -> Vec<Vec<T>> {
+    assert!(n > 0);
+    let mut by_bucket: Vec<Vec<T>> = vec![Vec::new(); n];
+    for (i, &item) in items.iter().enumerate() {
+        by_bucket[i % n].push(item);
+    }
+    by_bucket
+}
+
+/// The cache. Owned per [`super::BlockPool`]; bounded by the number of
+/// distinct dispatch shapes (serving workloads have a handful), with
+/// [`PlanCache::clear`] as the pressure valve for pathological callers.
+#[derive(Debug, Default)]
+pub struct PlanCache {
+    map: HashMap<PlanKey, Arc<CachedPlan>>,
+    hits: u64,
+    misses: u64,
+}
+
+impl PlanCache {
+    pub fn new() -> Self {
+        PlanCache::default()
+    }
+
+    /// Look up the plan for `key`, deriving and memoizing it on miss.
+    pub fn get_or_insert(&mut self, key: PlanKey) -> Arc<CachedPlan> {
+        if let Some(cached) = self.map.get(&key) {
+            self.hits += 1;
+            return Arc::clone(cached);
+        }
+        self.misses += 1;
+        let plan = plan_gemv(key.m, key.n, key.precision, key.double_buffer);
+        let by_block = split_round_robin(&plan.tiles, key.blocks);
+        let cached = Arc::new(CachedPlan { plan, by_block });
+        self.map.insert(key, Arc::clone(&cached));
+        cached
+    }
+
+    pub fn hits(&self) -> u64 {
+        self.hits
+    }
+
+    pub fn misses(&self) -> u64 {
+        self.misses
+    }
+
+    pub fn len(&self) -> usize {
+        self.map.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.map.is_empty()
+    }
+
+    /// Drop every entry (counters keep running).
+    pub fn clear(&mut self) {
+        self.map.clear();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn key(m: usize, n: usize) -> PlanKey {
+        PlanKey {
+            m,
+            n,
+            precision: Precision::Int4,
+            variant: Variant::OneDA,
+            blocks: 4,
+            double_buffer: true,
+        }
+    }
+
+    #[test]
+    fn hit_returns_identical_plan() {
+        let mut cache = PlanCache::new();
+        let a = cache.get_or_insert(key(80, 256));
+        let b = cache.get_or_insert(key(80, 256));
+        assert!(Arc::ptr_eq(&a, &b), "hit must share the same entry");
+        assert_eq!((cache.hits(), cache.misses()), (1, 1));
+        // The cached plan matches a fresh derivation.
+        let fresh = plan_gemv(80, 256, Precision::Int4, true);
+        assert_eq!(a.plan.tiles, fresh.tiles);
+        assert_eq!(a.by_block, split_round_robin(&fresh.tiles, 4));
+    }
+
+    #[test]
+    fn distinct_keys_get_distinct_entries() {
+        let mut cache = PlanCache::new();
+        let a = cache.get_or_insert(key(80, 256));
+        let b = cache.get_or_insert(key(81, 256));
+        let mut k2 = key(80, 256);
+        k2.blocks = 2;
+        let c = cache.get_or_insert(k2);
+        assert!(!Arc::ptr_eq(&a, &b));
+        assert_eq!(c.by_block.len(), 2, "split follows the key's geometry");
+        assert_eq!(cache.len(), 3);
+        assert_eq!(cache.misses(), 3);
+    }
+
+    #[test]
+    fn clear_forces_rederivation() {
+        let mut cache = PlanCache::new();
+        let _ = cache.get_or_insert(key(10, 10));
+        cache.clear();
+        assert!(cache.is_empty());
+        let _ = cache.get_or_insert(key(10, 10));
+        assert_eq!(cache.misses(), 2);
+    }
+
+    #[test]
+    fn round_robin_split_preserves_order_and_count() {
+        let items: Vec<usize> = (0..10).collect();
+        let split = split_round_robin(&items, 3);
+        assert_eq!(split[0], vec![0, 3, 6, 9]);
+        assert_eq!(split[1], vec![1, 4, 7]);
+        assert_eq!(split[2], vec![2, 5, 8]);
+        assert_eq!(split.iter().map(Vec::len).sum::<usize>(), 10);
+    }
+}

@@ -1,12 +1,29 @@
-//! Tile scheduler: execute a GEMV tile plan on a pool of bit-accurate
-//! BRAMAC blocks with double-buffered weight streaming.
+//! Tile scheduler: execute GEMV work on a pool of bit-accurate BRAMAC
+//! blocks under either dataflow the paper's port-freeing enables:
 //!
-//! Numerics run through the bit-level dummy-array engines (so the result
-//! is exact, and cross-checked against the reference in tests); timing
-//! follows the block cycle model plus the §IV-C port-overlap rule: a
-//! tile's weights stream into the idle buffer half while the previous
-//! tile computes, so a block only stalls for loads that exceed its free
-//! port budget.
+//! * **Tiling** (`run_gemv` / `run_mvm_batch2`) — weights stream into
+//!   the idle buffer half while the previous tile computes (§IV-C);
+//!   numerics run through the bit-level dummy-array engines (exact,
+//!   cross-checked against the reference in tests), and timing follows
+//!   the block cycle model plus the port-overlap rule: a block only
+//!   stalls for loads that exceed its free port budget.
+//! * **Persistent** (`run_gemv_resident` / `run_mvm_batch2_resident`) —
+//!   the weights were pinned once into the main arrays by
+//!   [`crate::storage::ResidentModel::pin`]; dispatches run MAC2s
+//!   straight against the resident words, so `ScheduleStats` reports
+//!   zero weight-copy and zero exposed-load cycles. Results are
+//!   bit-identical to the tiling path (integer accumulation is exact;
+//!   asserted in `tests/persistent_mode.rs`).
+//!
+//! Weight-copy traffic is charged from **deltas of the block's
+//! application-write counter** (`StreamStats::app_write_words`), so a
+//! word is billed only when it is actually written — the first-touch
+//! rule that makes the persistent path's zero-copy accounting fall out
+//! of the same code as the tiling path's full accounting.
+//!
+//! Tile plans are memoized in a per-pool [`PlanCache`] keyed by
+//! `(m, k, precision, variant, pool geometry)`: repeated same-shape
+//! dispatches (the serving hot path) skip plan derivation entirely.
 //!
 //! # Thread-parallel execution
 //!
@@ -24,12 +41,13 @@
 //! [`super::workers::auto_threads`].
 
 use crate::arch::Precision;
-use crate::bramac::block::StreamStats;
 use crate::bramac::signext::pack_word;
 use crate::bramac::{BramacBlock, Variant};
 use crate::quant::IntMatrix;
+use crate::storage::resident::{ResidentModel, ResidentTile};
 
-use super::tiler::{plan_gemv, Tile, TilePlan};
+use super::plan_cache::{PlanCache, PlanKey};
+use super::tiler::Tile;
 
 /// Aggregate schedule statistics.
 #[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
@@ -42,6 +60,11 @@ pub struct ScheduleStats {
     pub total_block_cycles: u64,
     /// Load cycles that could not hide behind compute.
     pub exposed_load_cycles: u64,
+    /// Weight words streamed into main arrays during this run (one load
+    /// cycle each, hidden or not). Zero for persistent-mode dispatches —
+    /// the pin cost is charged once at
+    /// [`crate::storage::ResidentModel::pin`] (`pinned_words`), not here.
+    pub weight_copy_cycles: u64,
 }
 
 /// What one block contributed to a run: its partial output vector plus
@@ -51,6 +74,7 @@ struct BlockRun<Y> {
     cycles: u64,
     mac2s: u64,
     exposed: u64,
+    copy: u64,
 }
 
 /// A pool of BRAMAC blocks executing tile plans.
@@ -59,6 +83,8 @@ pub struct BlockPool {
     blocks: Vec<BramacBlock>,
     /// Worker threads used to shard the tile plan (1 = sequential).
     threads: usize,
+    /// Memoized tile plans for repeated same-shape dispatches.
+    plan_cache: PlanCache,
 }
 
 impl BlockPool {
@@ -68,6 +94,7 @@ impl BlockPool {
             variant,
             blocks: (0..count).map(|_| BramacBlock::new(variant, precision)).collect(),
             threads: 1,
+            plan_cache: PlanCache::new(),
         }
     }
 
@@ -111,6 +138,19 @@ impl BlockPool {
         self.blocks.is_empty()
     }
 
+    /// The pool's tile-plan cache (hit/miss counters for diagnostics).
+    pub fn plan_cache(&self) -> &PlanCache {
+        &self.plan_cache
+    }
+
+    pub(crate) fn block(&self, i: usize) -> &BramacBlock {
+        &self.blocks[i]
+    }
+
+    pub(crate) fn block_mut(&mut self, i: usize) -> &mut BramacBlock {
+        &mut self.blocks[i]
+    }
+
     fn sync_precision(&mut self, p: Precision) {
         for b in &mut self.blocks {
             if b.precision() != p {
@@ -119,50 +159,85 @@ impl BlockPool {
         }
     }
 
-    /// Round-robin tile ownership: tile `i` belongs to block `i % n`,
-    /// and each block sees its tiles in plan order.
-    fn tiles_by_block(&self, plan: &TilePlan) -> Vec<Vec<Tile>> {
-        let n = self.blocks.len();
-        let mut by_block: Vec<Vec<Tile>> = vec![Vec::new(); n];
-        for (ti, tile) in plan.tiles.iter().enumerate() {
-            by_block[ti % n].push(*tile);
-        }
-        by_block
+    /// Execute `y = W · x` over the pool with signed inputs. Tiles are
+    /// assigned round-robin; each block's cycle cost is
+    /// `max(compute, exposed loads)` per tile under double buffering.
+    /// Returns the exact result and stats.
+    pub fn run_gemv(&mut self, w: &IntMatrix, x: &[i64]) -> (Vec<i64>, ScheduleStats) {
+        self.run_gemv_signed(w, x, true)
     }
 
-    /// Execute `y = W · x` over the pool. Tiles are assigned round-robin;
-    /// each block's cycle cost is `max(compute, exposed loads)` per tile
-    /// under double buffering. Returns the exact result and stats.
-    pub fn run_gemv(&mut self, w: &IntMatrix, x: &[i64]) -> (Vec<i64>, ScheduleStats) {
+    /// [`BlockPool::run_gemv`] with an explicit input-signedness flag
+    /// (§IV-C `inType`: unsigned inputs skip the inverter cycle).
+    /// Weights are always signed.
+    pub fn run_gemv_signed(
+        &mut self,
+        w: &IntMatrix,
+        x: &[i64],
+        signed_inputs: bool,
+    ) -> (Vec<i64>, ScheduleStats) {
         assert_eq!(x.len(), w.cols);
         self.sync_precision(w.precision);
-        let plan = plan_gemv(w.rows, w.cols, w.precision, true);
-        let by_block = self.tiles_by_block(&plan);
+        let cached = self.plan_cache.get_or_insert(PlanKey {
+            m: w.rows,
+            n: w.cols,
+            precision: w.precision,
+            variant: self.variant,
+            blocks: self.blocks.len(),
+            double_buffer: true,
+        });
         let threads = self.threads;
         let m = w.rows;
-        let runs = run_sharded(&mut self.blocks, &by_block, threads, |block, tiles| {
-            run_block_gemv(block, w, x, tiles, &plan, m)
+        let p = w.precision;
+        let runs = run_sharded(&mut self.blocks, &cached.by_block, threads, |block, tiles| {
+            run_block_gemv(block, w, x, tiles, p, m, signed_inputs)
         });
 
+        let stats = collect_stats(cached.plan.tiles.len(), &runs);
         let mut y = vec![0i64; m];
-        let mut per_block_cycles = Vec::with_capacity(runs.len());
-        let mut mac2s = 0u64;
-        let mut exposed = 0u64;
         for run in runs {
             for (k, v) in run.y.iter().enumerate() {
                 y[k] += v;
             }
-            per_block_cycles.push(run.cycles);
-            mac2s += run.mac2s;
-            exposed += run.exposed;
         }
-        let stats = ScheduleStats {
-            tiles: plan.tiles.len(),
-            mac2s,
-            makespan_cycles: per_block_cycles.iter().copied().max().unwrap_or(0),
-            total_block_cycles: per_block_cycles.iter().sum(),
-            exposed_load_cycles: exposed,
-        };
+        (y, stats)
+    }
+
+    /// Persistent-dataflow GEMV against weights pinned by
+    /// [`ResidentModel::pin`]: no weight streaming, so
+    /// `weight_copy_cycles` and `exposed_load_cycles` are zero.
+    /// Bit-identical to [`BlockPool::run_gemv_signed`] on the same
+    /// matrix (integer accumulation is exact in any tile order).
+    pub fn run_gemv_resident(
+        &mut self,
+        rm: &ResidentModel,
+        x: &[i64],
+        signed_inputs: bool,
+    ) -> (Vec<i64>, ScheduleStats) {
+        assert_eq!(
+            rm.block_count(),
+            self.blocks.len(),
+            "resident layout was pinned for a different pool geometry"
+        );
+        assert_eq!(rm.variant, self.variant, "resident layout pinned for another variant");
+        assert_eq!(x.len(), rm.n);
+        rm.debug_assert_unclobbered(self);
+        self.sync_precision(rm.precision);
+        let threads = self.threads;
+        let m = rm.m;
+        let p = rm.precision;
+        let runs = run_sharded(&mut self.blocks, rm.by_block(), threads, |block, tiles| {
+            run_block_gemv_resident(block, x, tiles, p, m, signed_inputs)
+        });
+
+        let stats = collect_stats(rm.tile_count(), &runs);
+        debug_assert_eq!(stats.weight_copy_cycles, 0, "persistent mode must not copy");
+        let mut y = vec![0i64; m];
+        for run in runs {
+            for (k, v) in run.y.iter().enumerate() {
+                y[k] += v;
+            }
+        }
         (y, stats)
     }
 
@@ -178,55 +253,118 @@ impl BlockPool {
         x0: &[i64],
         x1: &[i64],
     ) -> ([Vec<i64>; 2], ScheduleStats) {
+        self.run_mvm_batch2_signed(w, x0, x1, true)
+    }
+
+    /// [`BlockPool::run_mvm_batch2`] with an explicit input-signedness
+    /// flag.
+    pub fn run_mvm_batch2_signed(
+        &mut self,
+        w: &IntMatrix,
+        x0: &[i64],
+        x1: &[i64],
+        signed_inputs: bool,
+    ) -> ([Vec<i64>; 2], ScheduleStats) {
         assert_eq!(self.variant, Variant::TwoSA, "batch-2 needs two dummy arrays");
         assert_eq!(x0.len(), w.cols);
         assert_eq!(x1.len(), w.cols);
         self.sync_precision(w.precision);
-        let plan = plan_gemv(w.rows, w.cols, w.precision, true);
-        let by_block = self.tiles_by_block(&plan);
+        let cached = self.plan_cache.get_or_insert(PlanKey {
+            m: w.rows,
+            n: w.cols,
+            precision: w.precision,
+            variant: self.variant,
+            blocks: self.blocks.len(),
+            double_buffer: true,
+        });
         let threads = self.threads;
         let m = w.rows;
-        let runs = run_sharded(&mut self.blocks, &by_block, threads, |block, tiles| {
-            run_block_batch2(block, w, x0, x1, tiles, &plan, m)
+        let p = w.precision;
+        let runs = run_sharded(&mut self.blocks, &cached.by_block, threads, |block, tiles| {
+            run_block_batch2(block, w, x0, x1, tiles, p, m, signed_inputs)
         });
 
+        let stats = collect_stats(cached.plan.tiles.len(), &runs);
         let mut y = [vec![0i64; m], vec![0i64; m]];
-        let mut per_block_cycles = Vec::with_capacity(runs.len());
-        let mut mac2s = 0u64;
-        let mut exposed = 0u64;
         for run in runs {
             for v in 0..2 {
                 for (k, val) in run.y[v].iter().enumerate() {
                     y[v][k] += val;
                 }
             }
-            per_block_cycles.push(run.cycles);
-            mac2s += run.mac2s;
-            exposed += run.exposed;
         }
-        let stats = ScheduleStats {
-            tiles: plan.tiles.len(),
-            mac2s,
-            makespan_cycles: per_block_cycles.iter().copied().max().unwrap_or(0),
-            total_block_cycles: per_block_cycles.iter().sum(),
-            exposed_load_cycles: exposed,
-        };
         (y, stats)
+    }
+
+    /// Persistent-dataflow batch-2 MVM (see
+    /// [`BlockPool::run_gemv_resident`]). Panics unless the pool (and
+    /// the resident layout) are [`Variant::TwoSA`].
+    pub fn run_mvm_batch2_resident(
+        &mut self,
+        rm: &ResidentModel,
+        x0: &[i64],
+        x1: &[i64],
+        signed_inputs: bool,
+    ) -> ([Vec<i64>; 2], ScheduleStats) {
+        assert_eq!(self.variant, Variant::TwoSA, "batch-2 needs two dummy arrays");
+        assert_eq!(
+            rm.block_count(),
+            self.blocks.len(),
+            "resident layout was pinned for a different pool geometry"
+        );
+        assert_eq!(rm.variant, self.variant, "resident layout pinned for another variant");
+        assert_eq!(x0.len(), rm.n);
+        assert_eq!(x1.len(), rm.n);
+        rm.debug_assert_unclobbered(self);
+        self.sync_precision(rm.precision);
+        let threads = self.threads;
+        let m = rm.m;
+        let p = rm.precision;
+        let runs = run_sharded(&mut self.blocks, rm.by_block(), threads, |block, tiles| {
+            run_block_batch2_resident(block, x0, x1, tiles, p, m, signed_inputs)
+        });
+
+        let stats = collect_stats(rm.tile_count(), &runs);
+        debug_assert_eq!(stats.weight_copy_cycles, 0, "persistent mode must not copy");
+        let mut y = [vec![0i64; m], vec![0i64; m]];
+        for run in runs {
+            for v in 0..2 {
+                for (k, val) in run.y[v].iter().enumerate() {
+                    y[v][k] += val;
+                }
+            }
+        }
+        (y, stats)
+    }
+}
+
+/// Deterministic stats reduction over per-block runs (block order).
+fn collect_stats<Y>(tiles: usize, runs: &[BlockRun<Y>]) -> ScheduleStats {
+    ScheduleStats {
+        tiles,
+        mac2s: runs.iter().map(|r| r.mac2s).sum(),
+        makespan_cycles: runs.iter().map(|r| r.cycles).max().unwrap_or(0),
+        total_block_cycles: runs.iter().map(|r| r.cycles).sum(),
+        exposed_load_cycles: runs.iter().map(|r| r.exposed).sum(),
+        weight_copy_cycles: runs.iter().map(|r| r.copy).sum(),
     }
 }
 
 /// Run every block's tile list through `f`, sharding the pool across up
 /// to `threads` scoped workers (each block is owned by exactly one
 /// worker). Results come back in block order regardless of thread count.
-fn run_sharded<R, F>(
+/// Generic over the per-block work item so the tiling path (`Tile`) and
+/// the persistent path (`ResidentTile`) share one engine.
+fn run_sharded<I, R, F>(
     blocks: &mut [BramacBlock],
-    tiles_by_block: &[Vec<Tile>],
+    tiles_by_block: &[Vec<I>],
     threads: usize,
     f: F,
 ) -> Vec<R>
 where
+    I: Sync,
     R: Send,
-    F: Fn(&mut BramacBlock, &[Tile]) -> R + Sync,
+    F: Fn(&mut BramacBlock, &[I]) -> R + Sync,
 {
     let n = blocks.len();
     let threads = threads.min(n).max(1);
@@ -262,175 +400,215 @@ where
     })
 }
 
-/// Run one tile's work through `body` and charge it per §IV-C: the
-/// tile's load overlaps the block's previous compute, so only the part
-/// that doesn't fit in the free port budget of *this* tile's compute
-/// window is exposed (steady state). Returns the body's output plus
-/// (charged cycles, mac2s, exposed load cycles).
+/// The tile's accounting charges, measured around its body.
+struct TileCost {
+    charged: u64,
+    mac2s: u64,
+    exposed: u64,
+    copy: u64,
+}
+
+/// Run one tile's work through `body` and charge it per §IV-C: weight
+/// words actually written during the body (the app-write delta) stream
+/// into the idle buffer half overlapping the block's previous compute,
+/// so only the part that doesn't fit in the free port budget of *this*
+/// tile's compute window is exposed (steady state). A body that writes
+/// nothing — the persistent path — is charged compute only.
 fn account_tile<T>(
     block: &mut BramacBlock,
-    load_words: u64,
     body: impl FnOnce(&mut BramacBlock) -> T,
-) -> (T, u64, u64, u64) {
-    let before: StreamStats = block.stats();
+) -> (T, TileCost) {
+    let before = block.stats();
     let out = body(block);
     let after = block.stats();
     let compute = after.main_cycles - before.main_cycles;
     let busy = after.main_busy_cycles - before.main_busy_cycles;
     let mac2s = after.mac2_count - before.mac2_count;
+    let copy = after.app_write_words - before.app_write_words;
     let free = compute.saturating_sub(busy);
-    let exposed = load_words.saturating_sub(free);
-    (out, compute + exposed, mac2s, exposed)
+    let exposed = copy.saturating_sub(free);
+    (out, TileCost { charged: compute + exposed, mac2s, exposed, copy })
+}
+
+/// Pack word `j` (one matrix column) of a tile: the transposed layout of
+/// Fig 2 — word `j` holds `W[row0..row0+rows, col0+j]`. Shared by the
+/// tiling streamer and the resident pinning path so both dataflows put
+/// bit-identical words on chip.
+pub(crate) fn pack_tile_word(w: &IntMatrix, tile: &Tile, j: usize) -> u64 {
+    let col = tile.col0 + j;
+    let elems: Vec<i64> = (0..tile.rows).map(|r| w.get(tile.row0 + r, col)).collect();
+    pack_word(&elems, w.precision, true)
+}
+
+/// Stream one tile's weight words into the block at addresses
+/// `0..tile.cols` (the streaming buffer of the tiling dataflow).
+fn load_tile_words(block: &mut BramacBlock, w: &IntMatrix, tile: &Tile) {
+    for j in 0..tile.cols {
+        block.write_word(j as u16, pack_tile_word(w, tile, j));
+    }
 }
 
 /// One block's share of a GEMV: its tiles in order, with the §IV-C
 /// exposed-load accounting derived from that block's own stream stats.
+#[allow(clippy::too_many_arguments)]
 fn run_block_gemv(
     block: &mut BramacBlock,
     w: &IntMatrix,
     x: &[i64],
     tiles: &[Tile],
-    plan: &TilePlan,
+    p: Precision,
     m: usize,
+    signed: bool,
 ) -> BlockRun<Vec<i64>> {
     let mut y = vec![0i64; m];
     let mut cycles = 0u64;
     let mut mac2s = 0u64;
     let mut exposed = 0u64;
+    let mut copy = 0u64;
     for tile in tiles {
-        let (out, tile_cycles, tile_mac2s, tile_exposed) =
-            account_tile(block, tile.words() as u64, |block| {
-                run_tile_on_block(block, w, x, tile, plan)
-            });
+        let (out, cost) = account_tile(block, |block| {
+            load_tile_words(block, w, tile);
+            stream_tile_gemv(block, x, tile, 0, p, signed)
+        });
         for (k, v) in out.iter().enumerate() {
             y[tile.row0 + k] += v;
         }
-        cycles += tile_cycles;
-        mac2s += tile_mac2s;
-        exposed += tile_exposed;
+        cycles += cost.charged;
+        mac2s += cost.mac2s;
+        exposed += cost.exposed;
+        copy += cost.copy;
     }
-    BlockRun { y, cycles, mac2s, exposed }
+    BlockRun { y, cycles, mac2s, exposed, copy }
 }
 
-/// One block's share of a batch-2 MVM.
+/// One block's share of a persistent-mode GEMV: same streaming MAC2
+/// schedule, but addresses point at the resident words — nothing is
+/// written, so the accounting charges compute only.
+fn run_block_gemv_resident(
+    block: &mut BramacBlock,
+    x: &[i64],
+    tiles: &[ResidentTile],
+    p: Precision,
+    m: usize,
+    signed: bool,
+) -> BlockRun<Vec<i64>> {
+    let mut y = vec![0i64; m];
+    let mut cycles = 0u64;
+    let mut mac2s = 0u64;
+    let mut exposed = 0u64;
+    let mut copy = 0u64;
+    for rt in tiles {
+        let (out, cost) = account_tile(block, |block| {
+            stream_tile_gemv(block, x, &rt.tile, rt.base, p, signed)
+        });
+        for (k, v) in out.iter().enumerate() {
+            y[rt.tile.row0 + k] += v;
+        }
+        cycles += cost.charged;
+        mac2s += cost.mac2s;
+        exposed += cost.exposed;
+        copy += cost.copy;
+    }
+    BlockRun { y, cycles, mac2s, exposed, copy }
+}
+
+/// One block's share of a batch-2 MVM (tiling dataflow).
+#[allow(clippy::too_many_arguments)]
 fn run_block_batch2(
     block: &mut BramacBlock,
     w: &IntMatrix,
     x0: &[i64],
     x1: &[i64],
     tiles: &[Tile],
-    plan: &TilePlan,
+    p: Precision,
     m: usize,
+    signed: bool,
 ) -> BlockRun<[Vec<i64>; 2]> {
     let mut y = [vec![0i64; m], vec![0i64; m]];
     let mut cycles = 0u64;
     let mut mac2s = 0u64;
     let mut exposed = 0u64;
+    let mut copy = 0u64;
     for tile in tiles {
-        let (outs, tile_cycles, tile_mac2s, tile_exposed) =
-            account_tile(block, tile.words() as u64, |block| {
-                run_tile_batch2(block, w, x0, x1, tile, plan)
-            });
+        let (outs, cost) = account_tile(block, |block| {
+            load_tile_words(block, w, tile);
+            stream_tile_batch2(block, x0, x1, tile, 0, p, signed)
+        });
         for v in 0..2 {
             for (k, val) in outs[v].iter().enumerate() {
                 y[v][tile.row0 + k] += val;
             }
         }
-        cycles += tile_cycles;
-        mac2s += tile_mac2s;
-        exposed += tile_exposed;
+        cycles += cost.charged;
+        mac2s += cost.mac2s;
+        exposed += cost.exposed;
+        copy += cost.copy;
     }
-    BlockRun { y, cycles, mac2s, exposed }
+    BlockRun { y, cycles, mac2s, exposed, copy }
 }
 
-/// Batch-2 tile: both arrays share the weight copy, each consumes its
-/// own input vector.
-fn run_tile_batch2(
+/// One block's share of a persistent-mode batch-2 MVM.
+#[allow(clippy::too_many_arguments)]
+fn run_block_batch2_resident(
     block: &mut BramacBlock,
-    w: &IntMatrix,
     x0: &[i64],
     x1: &[i64],
-    tile: &Tile,
-    plan: &TilePlan,
-) -> [Vec<i64>; 2] {
-    let p = plan.precision;
-    for j in 0..tile.cols {
-        let col = tile.col0 + j;
-        let elems: Vec<i64> = (0..tile.rows).map(|r| w.get(tile.row0 + r, col)).collect();
-        block.write_word(j as u16, pack_word(&elems, p));
-    }
-    block.reset_acc();
-    let mut acc = [vec![0i64; p.lanes_per_word()], vec![0i64; p.lanes_per_word()]];
-    let mut since_flush = 0usize;
-    let flush = |block: &mut BramacBlock, acc: &mut [Vec<i64>; 2]| {
-        let got = block.read_accumulators();
+    tiles: &[ResidentTile],
+    p: Precision,
+    m: usize,
+    signed: bool,
+) -> BlockRun<[Vec<i64>; 2]> {
+    let mut y = [vec![0i64; m], vec![0i64; m]];
+    let mut cycles = 0u64;
+    let mut mac2s = 0u64;
+    let mut exposed = 0u64;
+    let mut copy = 0u64;
+    for rt in tiles {
+        let (outs, cost) = account_tile(block, |block| {
+            stream_tile_batch2(block, x0, x1, &rt.tile, rt.base, p, signed)
+        });
         for v in 0..2 {
-            for (k, val) in got[v].iter().enumerate() {
-                acc[v][k] += val;
+            for (k, val) in outs[v].iter().enumerate() {
+                y[v][rt.tile.row0 + k] += val;
             }
         }
-        block.reset_acc();
-    };
-    let mut j = 0usize;
-    while j < tile.cols {
-        let take2 = j + 1 < tile.cols;
-        let a2 = if take2 { j as u16 + 1 } else { j as u16 };
-        let pick = |x: &[i64]| {
-            let i1 = x[tile.col0 + j];
-            let i2 = if take2 { x[tile.col0 + j + 1] } else { 0 };
-            (i1, i2)
-        };
-        let pairs = [pick(x0), pick(x1)];
-        block.mac2(j as u16, a2, &pairs, true);
-        j += 2;
-        since_flush += 2;
-        if since_flush >= p.max_dot_len() && j < tile.cols {
-            flush(block, &mut acc);
-            since_flush = 0;
-        }
+        cycles += cost.charged;
+        mac2s += cost.mac2s;
+        exposed += cost.exposed;
+        copy += cost.copy;
     }
-    flush(block, &mut acc);
-    let mut out = acc;
-    out[0].truncate(tile.rows);
-    out[1].truncate(tile.rows);
-    out
+    BlockRun { y, cycles, mac2s, exposed, copy }
 }
 
-/// Load one tile's words and stream its MAC2s; returns the tile's
-/// partial outputs (length `tile.rows`).
-fn run_tile_on_block(
+/// Stream one tile's MAC2s against words at `base..base+tile.cols`;
+/// returns the tile's partial outputs (length `tile.rows`). The
+/// accumulator flushes whenever the dot exceeds its range (§IV-C).
+fn stream_tile_gemv(
     block: &mut BramacBlock,
-    w: &IntMatrix,
     x: &[i64],
     tile: &Tile,
-    plan: &TilePlan,
+    base: u16,
+    p: Precision,
+    signed: bool,
 ) -> Vec<i64> {
-    let p = plan.precision;
     let lanes = p.lanes_per_word();
-    // Pack column j of the tile into word j (transposed layout, Fig 2).
-    for j in 0..tile.cols {
-        let col = tile.col0 + j;
-        let elems: Vec<i64> = (0..tile.rows).map(|r| w.get(tile.row0 + r, col)).collect();
-        block.write_word(j as u16, pack_word(&elems, p));
-    }
     block.reset_acc();
-    // Stream input pairs; the accumulator flushes when the dot exceeds
-    // its range (§IV-C).
     let mut acc = vec![0i64; lanes];
     let mut since_flush = 0usize;
     let mut j = 0usize;
     while j < tile.cols {
+        let a1 = base + j as u16;
         let i1 = x[tile.col0 + j];
         let (a2, i2) = if j + 1 < tile.cols {
-            (j as u16 + 1, x[tile.col0 + j + 1])
+            (a1 + 1, x[tile.col0 + j + 1])
         } else {
-            // Odd tail: pair with a zero word parked at the last word
-            // (zero input makes the second term vanish).
-            (j as u16, 0)
+            // Odd tail: pair with the same word and a zero input (zero
+            // input makes the second term vanish).
+            (a1, 0)
         };
         // Stack-allocated pairs (§Perf iteration 4: no per-MAC2 Vec).
         let pairs = [(i1, i2); 2];
-        block.mac2(j as u16, a2, &pairs[..block.variant.dummy_arrays()], true);
+        block.mac2(a1, a2, &pairs[..block.variant.dummy_arrays()], signed);
         j += 2;
         since_flush += 2;
         if since_flush >= p.max_dot_len() && j < tile.cols {
@@ -446,6 +624,55 @@ fn run_tile_on_block(
     }
     acc.truncate(tile.rows);
     acc
+}
+
+/// Batch-2 tile streamer: both arrays share the weight words at
+/// `base..base+tile.cols`, each consumes its own input vector.
+fn stream_tile_batch2(
+    block: &mut BramacBlock,
+    x0: &[i64],
+    x1: &[i64],
+    tile: &Tile,
+    base: u16,
+    p: Precision,
+    signed: bool,
+) -> [Vec<i64>; 2] {
+    block.reset_acc();
+    let mut acc = [vec![0i64; p.lanes_per_word()], vec![0i64; p.lanes_per_word()]];
+    let mut since_flush = 0usize;
+    let flush = |block: &mut BramacBlock, acc: &mut [Vec<i64>; 2]| {
+        let got = block.read_accumulators();
+        for v in 0..2 {
+            for (k, val) in got[v].iter().enumerate() {
+                acc[v][k] += val;
+            }
+        }
+        block.reset_acc();
+    };
+    let mut j = 0usize;
+    while j < tile.cols {
+        let take2 = j + 1 < tile.cols;
+        let a1 = base + j as u16;
+        let a2 = if take2 { a1 + 1 } else { a1 };
+        let pick = |x: &[i64]| {
+            let i1 = x[tile.col0 + j];
+            let i2 = if take2 { x[tile.col0 + j + 1] } else { 0 };
+            (i1, i2)
+        };
+        let pairs = [pick(x0), pick(x1)];
+        block.mac2(a1, a2, &pairs, signed);
+        j += 2;
+        since_flush += 2;
+        if since_flush >= p.max_dot_len() && j < tile.cols {
+            flush(block, &mut acc);
+            since_flush = 0;
+        }
+    }
+    flush(block, &mut acc);
+    let mut out = acc;
+    out[0].truncate(tile.rows);
+    out[1].truncate(tile.rows);
+    out
 }
 
 #[cfg(test)]
@@ -466,8 +693,45 @@ mod tests {
                 assert_eq!(y, w.gemv_ref(&x), "{} {p}", variant.name());
                 assert!(stats.makespan_cycles > 0);
                 assert!(stats.tiles >= 1);
+                assert!(stats.weight_copy_cycles > 0, "tiling mode streams weights");
             }
         }
+    }
+
+    #[test]
+    fn gemv_unsigned_inputs_exact() {
+        // §IV-C inType: unsigned inputs skip the inverter cycle but the
+        // result must still equal the plain i64 reference.
+        let mut rng = Rng::seed_from_u64(0x0516);
+        for variant in Variant::ALL {
+            for p in Precision::ALL {
+                let (m, n) = (21, 50);
+                let w = IntMatrix::random(&mut rng, m, n, p);
+                let x = crate::quant::random_vector(&mut rng, n, p, false);
+                let mut pool = BlockPool::new(variant, 2, p);
+                let (y, _) = pool.run_gemv_signed(&w, &x, false);
+                assert_eq!(y, w.gemv_ref(&x), "{} {p} unsigned", variant.name());
+            }
+        }
+    }
+
+    #[test]
+    fn plan_cache_hits_on_repeated_shapes() {
+        let mut rng = Rng::seed_from_u64(0xcac4e);
+        let p = Precision::Int4;
+        let w = IntMatrix::random(&mut rng, 30, 60, p);
+        let x = crate::quant::random_vector(&mut rng, 60, p, true);
+        let mut pool = BlockPool::new(Variant::OneDA, 2, p);
+        let (y1, s1) = pool.run_gemv(&w, &x);
+        assert_eq!((pool.plan_cache().hits(), pool.plan_cache().misses()), (0, 1));
+        let (y2, s2) = pool.run_gemv(&w, &x);
+        assert_eq!((pool.plan_cache().hits(), pool.plan_cache().misses()), (1, 1));
+        assert_eq!(y1, y2, "cache hit must not change results");
+        assert_eq!(s1, s2, "cache hit must not change stats");
+        // A different shape misses.
+        let w2 = IntMatrix::random(&mut rng, 31, 60, p);
+        let _ = pool.run_gemv(&w2, &crate::quant::random_vector(&mut rng, 60, p, true));
+        assert_eq!(pool.plan_cache().misses(), 2);
     }
 
     #[test]
@@ -561,8 +825,40 @@ mod tests {
         let x = crate::quant::random_vector(&mut rng, 400, p, true);
         let mut pool = BlockPool::new(Variant::TwoSA, 2, p);
         let (_, s) = pool.run_gemv(&w, &x);
-        let hidden = 1.0 - s.exposed_load_cycles as f64 / (s.tiles as f64 * 200.0);
+        let hidden = 1.0 - s.exposed_load_cycles as f64 / s.weight_copy_cycles as f64;
         assert!(hidden > 0.5, "most load cycles should hide: {s:?}");
+        // Every streamed word is accounted: one per tile column.
+        let want_words: u64 = 40u64.div_ceil(p.lanes_per_word() as u64) * 400;
+        assert_eq!(s.weight_copy_cycles, want_words);
+    }
+
+    #[test]
+    fn resident_gemv_matches_tiling_and_skips_copies() {
+        let mut rng = Rng::seed_from_u64(0x9e51);
+        for variant in Variant::ALL {
+            for p in Precision::ALL {
+                let (m, n) = (45, 96);
+                let w = IntMatrix::random(&mut rng, m, n, p);
+                let x = crate::quant::random_vector(&mut rng, n, p, true);
+                let mut tiling = BlockPool::new(variant, 4, p);
+                let (y_t, s_t) = tiling.run_gemv(&w, &x);
+                let mut persistent = BlockPool::new(variant, 4, p);
+                let rm = ResidentModel::pin(&mut persistent, &w).expect("fits");
+                let (y_p, s_p) = persistent.run_gemv_resident(&rm, &x, true);
+                assert_eq!(y_p, y_t, "{} {p}", variant.name());
+                assert_eq!(y_p, w.gemv_ref(&x));
+                assert_eq!(s_p.weight_copy_cycles, 0);
+                assert_eq!(s_p.exposed_load_cycles, 0);
+                assert!(s_t.weight_copy_cycles > 0);
+                assert!(
+                    s_p.makespan_cycles <= s_t.makespan_cycles,
+                    "{} {p}: persistent {} vs tiling {}",
+                    variant.name(),
+                    s_p.makespan_cycles,
+                    s_t.makespan_cycles
+                );
+            }
+        }
     }
 
     #[test]

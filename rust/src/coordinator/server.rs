@@ -19,7 +19,7 @@ use crate::arch::Precision;
 use crate::bramac::Variant;
 use crate::dla::{
     config::DlaConfig,
-    cycle::network_cycles,
+    cycle::{first_touch_cycles, network_cycles_with, Dataflow},
     models::{ConvLayer, Network},
 };
 use crate::runtime::{Manifest, Runtime};
@@ -59,6 +59,10 @@ pub struct ServerStats {
     pub exec_micros: u64,
     /// Attributed accelerator cycles (DLA-BRAMAC model) across batches.
     pub attributed_cycles: u64,
+    /// Attributed weight-copy cycles within `attributed_cycles`:
+    /// per-image initial copies when tiling, a one-time first-touch
+    /// charge per warm worker session when persistent.
+    pub weight_copy_cycles: u64,
 }
 
 /// Dynamic-batching inference server over the PJRT runtime.
@@ -67,6 +71,7 @@ pub struct InferenceServer {
     workers: Vec<JoinHandle<()>>,
     stats: Arc<Mutex<ServerStats>>,
     pub batch_size: usize,
+    pub dataflow: Dataflow,
 }
 
 impl InferenceServer {
@@ -79,16 +84,33 @@ impl InferenceServer {
         Self::start_with_workers(artifact_dir, artifact, max_wait, 1)
     }
 
-    /// Start with `workers` execution threads. Each worker owns its own
-    /// PJRT runtime; batch *formation* is serialized behind a mutex on
-    /// the shared batcher (one batch forms at a time), while batch
-    /// *execution* overlaps across workers — so throughput scales with
-    /// cores once execution dominates the batching window.
+    /// Start with `workers` execution threads in the tiling dataflow.
+    /// Each worker owns its own PJRT runtime; batch *formation* is
+    /// serialized behind a mutex on the shared batcher (one batch forms
+    /// at a time), while batch *execution* overlaps across workers — so
+    /// throughput scales with cores once execution dominates the
+    /// batching window.
     pub fn start_with_workers(
         artifact_dir: PathBuf,
         artifact: &str,
         max_wait: Duration,
         workers: usize,
+    ) -> Result<Self> {
+        Self::start_with_dataflow(artifact_dir, artifact, max_wait, workers, Dataflow::Tiling)
+    }
+
+    /// Start with an explicit [`Dataflow`] for the cycle attribution.
+    /// Persistent mode models warm sessions: each worker charges the
+    /// network's first-touch weight copy once (its session pins the
+    /// model), after which repeated requests skip copy traffic entirely
+    /// — exactly the `ScheduleStats` behavior of
+    /// [`super::BlockPool::run_gemv_resident`].
+    pub fn start_with_dataflow(
+        artifact_dir: PathBuf,
+        artifact: &str,
+        max_wait: Duration,
+        workers: usize,
+        dataflow: Dataflow,
     ) -> Result<Self> {
         assert!(workers >= 1, "need at least one worker");
         // Read the manifest on the caller's thread for early errors;
@@ -116,7 +138,8 @@ impl InferenceServer {
             24,
             Precision::from_bits(precision as u32).unwrap_or(Precision::Int4),
         );
-        let cycles_per_image = network_cycles(&net, &cfg);
+        let cycles_per_image = network_cycles_with(&net, &cfg, dataflow);
+        let first_touch = first_touch_cycles(&net, &cfg);
 
         let mut handles = Vec::with_capacity(workers);
         for _ in 0..workers {
@@ -132,6 +155,9 @@ impl InferenceServer {
                         return;
                     }
                 };
+                // Persistent dataflow: this worker's session is cold
+                // until its first batch pins the model on-chip.
+                let mut warm = false;
                 loop {
                     // Hold the batcher lock only while a batch forms;
                     // execution below runs concurrently across workers.
@@ -163,6 +189,20 @@ impl InferenceServer {
                     s.batches += 1;
                     s.exec_micros += dt.as_micros() as u64;
                     s.attributed_cycles += cycles_per_image * n as u64;
+                    match dataflow {
+                        // Tiling re-copies weights for every image.
+                        Dataflow::Tiling => s.weight_copy_cycles += first_touch * n as u64,
+                        // Persistent charges the copy once per warm
+                        // session, regardless of how many requests the
+                        // session then serves.
+                        Dataflow::Persistent => {
+                            if !warm {
+                                s.weight_copy_cycles += first_touch;
+                                s.attributed_cycles += first_touch;
+                                warm = true;
+                            }
+                        }
+                    }
                 }
             }));
         }
@@ -172,6 +212,7 @@ impl InferenceServer {
             workers: handles,
             stats,
             batch_size: batch,
+            dataflow,
         })
     }
 

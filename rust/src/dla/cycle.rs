@@ -18,6 +18,42 @@
 use super::config::{AccelKind, DlaConfig};
 use super::models::{ConvLayer, Network};
 
+/// How weights reach the BRAMAC filter cache (§IV-C, §VI-C): the two
+/// DNN dataflows the main-array/dummy-array split enables.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Dataflow {
+    /// Weights stream in per tile; every inference pays the per-layer
+    /// initial weight copy (Fig 5's 2-cycle overhead, §VI-D).
+    Tiling,
+    /// Weights are pinned on-chip once; per-inference cycles exclude
+    /// all weight-copy traffic, which is charged once at first touch
+    /// ([`first_touch_cycles`]).
+    Persistent,
+}
+
+impl Dataflow {
+    pub const ALL: [Dataflow; 2] = [Dataflow::Tiling, Dataflow::Persistent];
+
+    pub fn name(self) -> &'static str {
+        match self {
+            Dataflow::Tiling => "tiling",
+            Dataflow::Persistent => "persistent",
+        }
+    }
+}
+
+impl std::str::FromStr for Dataflow {
+    type Err = String;
+
+    fn from_str(s: &str) -> Result<Self, Self::Err> {
+        match s {
+            "tiling" => Ok(Dataflow::Tiling),
+            "persistent" => Ok(Dataflow::Persistent),
+            other => Err(format!("unknown dataflow '{other}' (tiling|persistent)")),
+        }
+    }
+}
+
 /// Fraction of a BRAMAC block's time spent on accumulator readout for a
 /// dot of length `dot` at the config's precision (§IV-C): the wide
 /// accumulator holds at most 16/256/2048 partial results before an
@@ -35,26 +71,56 @@ fn bramac_pace_efficiency(cfg: &DlaConfig, dot: u64) -> f64 {
     compute as f64 / (compute + readout) as f64
 }
 
-/// Cycles for one layer under `cfg`.
+/// Cycles for one layer under `cfg` in the tiling dataflow.
 pub fn layer_cycles(layer: &ConvLayer, cfg: &DlaConfig) -> u64 {
+    layer_cycles_with(layer, cfg, Dataflow::Tiling)
+}
+
+/// Cycles for one layer under `cfg` and `dataflow`. Mirrors the Fig 5
+/// overlap accounting: steady-state MAC2 copies hide behind compute in
+/// both dataflows, so the dataflows differ only in the per-layer
+/// *initial* weight copy — charged every inference when tiling, and
+/// only at first touch ([`first_touch_cycles`]) when persistent.
+pub fn layer_cycles_with(layer: &ConvLayer, cfg: &DlaConfig, dataflow: Dataflow) -> u64 {
     let dot = (layer.c * layer.r * layer.s) as u64;
     let qvec_eff = cfg.qvec1 as f64 + cfg.qvec2 as f64 * bramac_pace_efficiency(cfg, dot);
     let beats = layer.p as u64
         * (layer.q as f64 / qvec_eff).ceil() as u64
         * (layer.k as u64).div_ceil(cfg.kvec as u64);
     let beat_len = (layer.r * layer.s) as u64 * (layer.c as u64).div_ceil(cfg.cvec as u64);
-    let startup = match cfg.kind {
-        AccelKind::Dla => 0,
+    let startup = match (cfg.kind, dataflow) {
+        (AccelKind::Dla, _) => 0,
         // "an additional 2 cycles ... to start the initial weight copy"
         // for the first MAC2 of every layer.
-        AccelKind::DlaBramac(_) => 2,
+        (AccelKind::DlaBramac(_), Dataflow::Tiling) => 2,
+        // Persistent: the weights are already resident, so the initial
+        // copy was paid once at pin time, not per inference.
+        (AccelKind::DlaBramac(_), Dataflow::Persistent) => 0,
     };
     beats * beat_len + startup
 }
 
-/// Total network cycles (layers execute back-to-back on the overlay).
+/// Total network cycles in the tiling dataflow (layers execute
+/// back-to-back on the overlay).
 pub fn network_cycles(net: &Network, cfg: &DlaConfig) -> u64 {
-    net.layers.iter().map(|l| layer_cycles(l, cfg)).sum()
+    network_cycles_with(net, cfg, Dataflow::Tiling)
+}
+
+/// Total network cycles under `dataflow`.
+pub fn network_cycles_with(net: &Network, cfg: &DlaConfig, dataflow: Dataflow) -> u64 {
+    net.layers.iter().map(|l| layer_cycles_with(l, cfg, dataflow)).sum()
+}
+
+/// One-time weight-copy cycles charged when a network becomes resident
+/// (persistent dataflow): the per-layer initial copy the tiling
+/// dataflow pays on *every* inference. Invariant:
+/// `network_cycles_with(Tiling) ==
+///  network_cycles_with(Persistent) + first_touch_cycles`.
+pub fn first_touch_cycles(net: &Network, cfg: &DlaConfig) -> u64 {
+    match cfg.kind {
+        AccelKind::Dla => 0,
+        AccelKind::DlaBramac(_) => 2 * net.layers.len() as u64,
+    }
 }
 
 /// Evaluate many configurations at once, fanned out across worker
@@ -119,6 +185,38 @@ mod tests {
         let eff64 = macs_per_cycle(&net, &k64) / (2.0 * 16.0 * 64.0);
         let eff140 = macs_per_cycle(&net, &k140) / (2.0 * 16.0 * 140.0);
         assert!(eff64 > eff140, "bigger Kvec must hurt utilization");
+    }
+
+    #[test]
+    fn persistent_drops_exactly_the_first_touch_charge() {
+        for net in [alexnet(), resnet34()] {
+            for p in Precision::ALL {
+                for variant in Variant::ALL {
+                    let cfg = DlaConfig::dla_bramac(variant, 2, 2, 16, 64, p);
+                    let tiling = network_cycles_with(&net, &cfg, Dataflow::Tiling);
+                    let persistent = network_cycles_with(&net, &cfg, Dataflow::Persistent);
+                    let touch = first_touch_cycles(&net, &cfg);
+                    assert!(persistent < tiling, "{} {p}", variant.name());
+                    assert_eq!(tiling, persistent + touch, "{} {p}", variant.name());
+                    assert_eq!(touch, 2 * net.layers.len() as u64);
+                }
+                // The pure-DSP DLA has no weight copies to save.
+                let dla = DlaConfig::dla(2, 16, 64, p);
+                assert_eq!(
+                    network_cycles_with(&net, &dla, Dataflow::Tiling),
+                    network_cycles_with(&net, &dla, Dataflow::Persistent)
+                );
+                assert_eq!(first_touch_cycles(&net, &dla), 0);
+            }
+        }
+    }
+
+    #[test]
+    fn dataflow_parses_and_names() {
+        for df in Dataflow::ALL {
+            assert_eq!(df.name().parse::<Dataflow>().unwrap(), df);
+        }
+        assert!("bogus".parse::<Dataflow>().is_err());
     }
 
     #[test]

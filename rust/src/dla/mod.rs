@@ -12,7 +12,10 @@ pub mod validate;
 
 pub use compare::{compare_all, CompareRow};
 pub use config::{AccelKind, DlaConfig};
-pub use cycle::{layer_cycles, network_cycles, network_cycles_batch};
+pub use cycle::{
+    first_touch_cycles, layer_cycles, layer_cycles_with, network_cycles, network_cycles_batch,
+    network_cycles_with, Dataflow,
+};
 pub use dse::{explore, DseResult};
 pub use models::{alexnet, resnet34, ConvLayer, Network};
 pub use validate::{validate_layer, LayerValidation};

@@ -24,9 +24,11 @@
 //!   regenerates Table III and Fig 13.
 //! * [`runtime`] — PJRT executor that loads the AOT-compiled JAX/Pallas
 //!   artifacts (`artifacts/*.hlo.txt`); Python is never on this path.
-//! * [`coordinator`] — the tiling-based inference coordinator: tiler,
-//!   double-buffered weight streaming (the eFSM port-freeing contribution),
-//!   dynamic batcher and async serving loop.
+//! * [`coordinator`] — the inference coordinator: tiler, plan cache,
+//!   double-buffered weight streaming (the eFSM port-freeing
+//!   contribution) plus the persistent dataflow against weights pinned
+//!   by [`storage::ResidentModel`], dynamic batcher and async serving
+//!   loop.
 //!
 //! See `DESIGN.md` for the experiment index and the
 //! hardware-to-simulation substitution map, and `EXPERIMENTS.md` for

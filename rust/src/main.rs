@@ -13,10 +13,12 @@ use bramac::bramac::Variant;
 use bramac::coordinator::batcher::submit_and_wait;
 use bramac::coordinator::server::{InferenceServer, IMAGE_ELEMS};
 use bramac::coordinator::BlockPool;
+use bramac::dla::Dataflow;
 use bramac::gemv::{fig11_sweep, ComputeStyle};
 use bramac::quant::{random_vector, IntMatrix};
 use bramac::report;
 use bramac::runtime::Manifest;
+use bramac::storage::ResidentModel;
 use bramac::util::Rng;
 
 const HELP: &str = "\
@@ -40,12 +42,19 @@ experiment regeneration (paper tables & figures):
 
 drivers:
   gemv [--m M] [--n N] [--bits B] [--blocks K] [--variant 2sa|1da]
-       [--threads T]
-                  run an exact GEMV on a simulated BRAMAC block pool
-                  (T worker threads shard the tile plan; 0 = all cores)
+       [--threads T] [--dataflow tiling|persistent] [--repeat R]
+                  run exact GEMVs on a simulated BRAMAC block pool
+                  (T worker threads shard the tile plan; 0 = all cores).
+                  persistent pins the weights on-chip once and reruns
+                  against the resident words (auto-grows --blocks to
+                  fit if --blocks was not given); R repeats the same
+                  dispatch to show plan-cache + copy savings
   serve [--requests R] [--window-ms W] [--workers N]
+        [--dataflow tiling|persistent]
                   start the batched PJRT inference server on a
                   synthetic request stream and report throughput
+                  (persistent = warm sessions: weight copies charged
+                  once per worker, not per image)
   check           verify artifacts + PJRT runtime are functional
 ";
 
@@ -115,7 +124,10 @@ fn cmd_gemv(args: &[String]) -> Result<()> {
     let m: usize = flag(args, "--m", 160)?;
     let n: usize = flag(args, "--n", 256)?;
     let bits: u32 = flag(args, "--bits", 4)?;
-    let blocks: usize = flag(args, "--blocks", 4)?;
+    let mut blocks: usize = flag(args, "--blocks", 4)?;
+    let blocks_given = args.iter().any(|a| a == "--blocks");
+    let repeat: usize = flag(args, "--repeat", 1)?;
+    let dataflow: Dataflow = flag(args, "--dataflow", Dataflow::Tiling)?;
     let threads_flag: usize = flag(args, "--threads", 0)?;
     let threads = if threads_flag == 0 {
         bramac::coordinator::workers::auto_threads()
@@ -130,27 +142,73 @@ fn cmd_gemv(args: &[String]) -> Result<()> {
         "1da" => Variant::OneDA,
         v => bail!("--variant must be 2sa or 1da, got {v}"),
     };
+    let repeat = repeat.max(1);
     let mut rng = Rng::seed_from_u64(0xce11);
     let w = IntMatrix::random(&mut rng, m, n, p);
     let x = random_vector(&mut rng, n, p, true);
-    let mut pool = BlockPool::new(variant, blocks, p).with_threads(threads);
+    let y_ref = w.gemv_ref(&x);
+
+    // Persistent mode pins the weights once; if --blocks wasn't given,
+    // grow the pool until the resident layout fits on-chip.
+    let (mut pool, resident) = match dataflow {
+        Dataflow::Tiling => (BlockPool::new(variant, blocks, p).with_threads(threads), None),
+        Dataflow::Persistent => loop {
+            let mut pool = BlockPool::new(variant, blocks, p).with_threads(threads);
+            match ResidentModel::pin(&mut pool, &w) {
+                Ok(rm) => break (pool, Some(rm)),
+                Err(_) if !blocks_given && blocks < 65_536 => blocks *= 2,
+                Err(e) => return Err(e),
+            }
+        },
+    };
+
     let t0 = std::time::Instant::now();
-    let (y, stats) = pool.run_gemv(&w, &x);
+    let mut last_stats = None;
+    let mut copy_cycles = resident.as_ref().map_or(0, |rm| rm.pinned_words);
+    for _ in 0..repeat {
+        let (y, stats) = match &resident {
+            Some(rm) => pool.run_gemv_resident(rm, &x, true),
+            None => pool.run_gemv(&w, &x),
+        };
+        assert_eq!(y, y_ref, "bit-accurate result must match reference");
+        copy_cycles += stats.weight_copy_cycles;
+        last_stats = Some(stats);
+    }
     let dt = t0.elapsed();
-    assert_eq!(y, w.gemv_ref(&x), "bit-accurate result must match reference");
+    let stats = last_stats.expect("repeat >= 1");
     println!(
-        "GEMV {m}x{n} @ {p} on {blocks}x {} blocks ({} worker threads): bit-exact vs reference",
+        "GEMV {m}x{n} @ {p} on {blocks}x {} blocks ({} worker threads, {} dataflow, {repeat} dispatches): bit-exact vs reference",
         variant.name(),
-        pool.effective_threads()
+        pool.effective_threads(),
+        dataflow.name()
     );
     println!(
-        "  tiles={} mac2s={} makespan={} cycles exposed-loads={} ({} host µs)",
+        "  per dispatch: tiles={} mac2s={} makespan={} cycles exposed-loads={} copy={} ({} host µs total)",
         stats.tiles,
         stats.mac2s,
         stats.makespan_cycles,
         stats.exposed_load_cycles,
+        stats.weight_copy_cycles,
         dt.as_micros()
     );
+    println!(
+        "  total weight-copy cycles over {repeat} dispatches: {copy_cycles}{}",
+        if resident.is_some() { " (one-time pin; 0 per dispatch)" } else { "" }
+    );
+    if repeat > 1 {
+        match dataflow {
+            Dataflow::Tiling => println!(
+                "  plan cache: {} hits / {} misses",
+                pool.plan_cache().hits(),
+                pool.plan_cache().misses()
+            ),
+            // Resident dispatches reuse the layout computed at pin time,
+            // so there is no per-dispatch plan work to cache at all.
+            Dataflow::Persistent => {
+                println!("  plan work per dispatch: none (layout precomputed at pin)")
+            }
+        }
+    }
     let fmax = variant.fmax_mhz(&bramac::arch::FreqModel::default());
     println!(
         "  simulated time at {:.0} MHz: {:.2} µs  ({:.2} GMAC/s effective)",
@@ -159,9 +217,13 @@ fn cmd_gemv(args: &[String]) -> Result<()> {
         (m * n) as f64 / (stats.makespan_cycles as f64 / fmax) / 1e3
     );
     // Contrast with the Fig 11 analytical models.
+    let style = match dataflow {
+        Dataflow::Tiling => ComputeStyle::NonPersistent,
+        Dataflow::Persistent => ComputeStyle::Persistent,
+    };
     let cell = fig11_sweep()
         .into_iter()
-        .find(|c| c.precision == p && c.style == ComputeStyle::NonPersistent);
+        .find(|c| c.precision == p && c.style == style);
     if let Some(c) = cell {
         println!(
             "  (Fig 11 reference point {}x{}: {:.2}x vs CCB)",
@@ -175,17 +237,20 @@ fn cmd_serve(args: &[String]) -> Result<()> {
     let requests: usize = flag(args, "--requests", 64)?;
     let window_ms: u64 = flag(args, "--window-ms", 10)?;
     let workers: usize = flag(args, "--workers", 1)?;
+    let dataflow: Dataflow = flag(args, "--dataflow", Dataflow::Tiling)?;
     let dir = Manifest::default_dir();
-    let server = InferenceServer::start_with_workers(
+    let server = InferenceServer::start_with_dataflow(
         dir,
         "model",
         Duration::from_millis(window_ms),
         workers.max(1),
+        dataflow,
     )?;
     println!(
-        "serving synthetic stream: {requests} requests, batch={} window={window_ms}ms workers={}",
+        "serving synthetic stream: {requests} requests, batch={} window={window_ms}ms workers={} dataflow={}",
         server.batch_size,
-        workers.max(1)
+        workers.max(1),
+        dataflow.name()
     );
     let t0 = std::time::Instant::now();
     let mut rng = Rng::seed_from_u64(0x5eed);
@@ -220,9 +285,12 @@ fn cmd_serve(args: &[String]) -> Result<()> {
         stats.requests as f64 / wall.as_secs_f64()
     );
     println!(
-        "  PJRT exec time {:.1} ms (summed across workers); attributed DLA-BRAMAC cycles {}",
+        "  PJRT exec time {:.1} ms (summed across workers); attributed DLA-BRAMAC cycles {} \
+         (weight-copy {}, {} dataflow)",
         stats.exec_micros as f64 / 1e3,
-        stats.attributed_cycles
+        stats.attributed_cycles,
+        stats.weight_copy_cycles,
+        dataflow.name()
     );
     println!("  class histogram {top1:?}");
     Ok(())

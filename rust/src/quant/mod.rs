@@ -4,6 +4,28 @@
 use crate::arch::Precision;
 use crate::util::Rng;
 
+/// A value outside its precision's signed operand range — returned by
+/// the checked mutators so untrusted paths (e.g. server request
+/// decoding) get an error instead of a release-mode silent corruption.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct OutOfRange {
+    pub value: i64,
+    pub precision: Precision,
+}
+
+impl std::fmt::Display for OutOfRange {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        let (lo, hi) = self.precision.range();
+        write!(
+            f,
+            "value {} outside the {} signed range [{lo}, {hi}]",
+            self.value, self.precision
+        )
+    }
+}
+
+impl std::error::Error for OutOfRange {}
+
 /// A row-major 2-D integer matrix of n-bit values (stored widened).
 #[derive(Debug, Clone, PartialEq, Eq)]
 pub struct IntMatrix {
@@ -41,11 +63,49 @@ impl IntMatrix {
         self.data[r * self.cols + c]
     }
 
+    /// Hot-path setter for trusted values (debug-checked only); use
+    /// [`IntMatrix::try_set`] on untrusted paths — the debug_assert
+    /// vanishes in release builds.
     #[inline]
     pub fn set(&mut self, r: usize, c: usize, v: i64) {
         let (lo, hi) = self.precision.range();
         debug_assert!((lo as i64..=hi as i64).contains(&v));
         self.data[r * self.cols + c] = v;
+    }
+
+    /// Range-checked setter: rejects out-of-range values in every build
+    /// profile, leaving the matrix unchanged.
+    pub fn try_set(&mut self, r: usize, c: usize, v: i64) -> Result<(), OutOfRange> {
+        let (lo, hi) = self.precision.range();
+        if !(lo as i64..=hi as i64).contains(&v) {
+            return Err(OutOfRange { value: v, precision: self.precision });
+        }
+        self.data[r * self.cols + c] = v;
+        Ok(())
+    }
+
+    /// Check every element against the precision's signed range —
+    /// reports the first violation.
+    pub fn validate(&self) -> Result<(), OutOfRange> {
+        let (lo, hi) = self.precision.range();
+        match self.data.iter().find(|&&v| !(lo as i64..=hi as i64).contains(&v)) {
+            Some(&bad) => Err(OutOfRange { value: bad, precision: self.precision }),
+            None => Ok(()),
+        }
+    }
+
+    /// Checked bulk constructor for untrusted data (decoded requests,
+    /// file loads): validates every element against the signed range.
+    pub fn try_from_data(
+        rows: usize,
+        cols: usize,
+        data: Vec<i64>,
+        precision: Precision,
+    ) -> Result<Self, OutOfRange> {
+        assert_eq!(data.len(), rows * cols, "shape/data length mismatch");
+        let m = IntMatrix { rows, cols, data, precision };
+        m.validate()?;
+        Ok(m)
     }
 
     pub fn row(&self, r: usize) -> &[i64] {
@@ -111,6 +171,24 @@ mod tests {
         let mut rng = Rng::seed_from_u64(5);
         let m = IntMatrix::random(&mut rng, 7, 13, Precision::Int8);
         assert_eq!(m.transposed().transposed(), m);
+    }
+
+    #[test]
+    fn try_set_rejects_and_preserves() {
+        let mut m = IntMatrix::zeros(2, 2, Precision::Int4);
+        assert!(m.try_set(0, 0, 7).is_ok());
+        let err = m.try_set(0, 0, 8).unwrap_err();
+        assert_eq!(err, OutOfRange { value: 8, precision: Precision::Int4 });
+        assert_eq!(m.get(0, 0), 7, "failed try_set must not modify");
+        assert!(err.to_string().contains("outside"));
+    }
+
+    #[test]
+    fn try_from_data_validates_every_element() {
+        let ok = IntMatrix::try_from_data(1, 3, vec![-8, 0, 7], Precision::Int4);
+        assert!(ok.is_ok());
+        let bad = IntMatrix::try_from_data(1, 3, vec![-8, 0, 15], Precision::Int4);
+        assert_eq!(bad.unwrap_err().value, 15);
     }
 
     #[test]

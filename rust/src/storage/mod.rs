@@ -1,11 +1,18 @@
-//! BRAM utilization efficiency for DNN model storage (Fig 10).
+//! On-chip weight storage: the Fig 10 utilization-efficiency study plus
+//! persistent weight residency ([`resident`]).
 //!
 //! Utilization efficiency = "the effective capacity ratio of a BRAM that
 //! can be used to store weight" (§VI-B). BRAMAC computes in the separate
 //! dummy array, so the main array stores weights at 100% for its native
 //! precisions and rounds odd precisions up via sign-extension; CCB and
 //! CoMeFa spend main-array rows on operand copies, products and partial
-//! sums.
+//! sums. That same dummy-array separation is what lets [`resident`] pin
+//! a model's weights in the main arrays across inferences — the
+//! "persistent" dataflow of §IV-C.
+
+pub mod resident;
+
+pub use resident::{ResidentModel, ResidentTile};
 
 use crate::arch::Precision;
 use crate::cim::{Ccb, Comefa};

@@ -1,0 +1,262 @@
+//! Persistent on-chip weight residency (§IV-C / §VI-C "persistent"
+//! dataflow).
+//!
+//! BRAMAC's main array stays a normal BRAM while the dummy array
+//! computes, so a network's weights can be pinned into the pool's main
+//! arrays **once** and every subsequent inference runs MAC2s straight
+//! against the resident words — no per-tile weight streaming, no copy
+//! traffic, no exposed load cycles. [`ResidentModel`] plans that layout
+//! (the same round-robin tile→block ownership the tiling scheduler
+//! uses, but with full 512-word buffers since nothing streams), copies
+//! the packed words in at pin time, and hands the scheduler per-block
+//! address bases for [`crate::coordinator::BlockPool::run_gemv_resident`].
+//!
+//! Capacity: each block holds [`MAIN_WORDS`] words. A layout that does
+//! not fit returns an error (use more blocks, or fall back to the
+//! tiling dataflow — which exists precisely for models larger than
+//! on-chip storage). Interleaving tiling-mode dispatches on a pinned
+//! pool overwrites the resident words (tiling streams into the same
+//! arrays); re-pin afterwards, or check with
+//! [`ResidentModel::verify_resident`].
+
+use anyhow::{ensure, Result};
+
+use crate::arch::Precision;
+use crate::bramac::block::MAIN_WORDS;
+use crate::bramac::Variant;
+use crate::coordinator::plan_cache::split_round_robin;
+use crate::coordinator::scheduler::pack_tile_word;
+use crate::coordinator::tiler::{plan_gemv, Tile};
+use crate::coordinator::BlockPool;
+use crate::quant::IntMatrix;
+
+/// One pinned tile: where a weight tile lives in its block's main array.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct ResidentTile {
+    pub tile: Tile,
+    /// First main-array word of this tile within its owning block.
+    pub base: u16,
+}
+
+/// A weight matrix pinned across a pool's main arrays.
+#[derive(Debug, Clone)]
+pub struct ResidentModel {
+    pub m: usize,
+    pub n: usize,
+    pub precision: Precision,
+    pub variant: Variant,
+    /// Pool geometry the layout was pinned for (block `b` owns
+    /// `by_block[b]`); resident runs assert the pool still matches.
+    blocks: usize,
+    tiles: usize,
+    by_block: Vec<Vec<ResidentTile>>,
+    /// Words copied on-chip at pin time — the one-time first-touch
+    /// weight-copy cost (1 load cycle per word).
+    pub pinned_words: u64,
+    /// Per-block `app_write_words` snapshot taken right after pinning:
+    /// resident dispatches never write, so any counter movement means
+    /// the main arrays were written since pin (e.g. a tiling dispatch
+    /// clobbered the layout) — caught by a debug assert in the resident
+    /// run paths.
+    write_marks: Vec<u64>,
+}
+
+impl ResidentModel {
+    /// Plan the resident layout for `w` on `pool` and copy the packed
+    /// weight words into the blocks' main arrays (the one-time first
+    /// touch). Fails without touching block state when the weights are
+    /// out of range or the layout exceeds any block's capacity.
+    pub fn pin(pool: &mut BlockPool, w: &IntMatrix) -> Result<ResidentModel> {
+        w.validate()?;
+        // Full buffers: nothing streams during persistent compute, so
+        // the double-buffer halving does not apply.
+        let plan = plan_gemv(w.rows, w.cols, w.precision, false);
+        let nblocks = pool.len();
+        let tiles_by_block = split_round_robin(&plan.tiles, nblocks);
+        let mut by_block = Vec::with_capacity(nblocks);
+        for (b, tiles) in tiles_by_block.iter().enumerate() {
+            let mut placed = Vec::with_capacity(tiles.len());
+            let mut base = 0usize;
+            for &tile in tiles {
+                ensure!(
+                    base + tile.words() <= MAIN_WORDS,
+                    "resident layout overflows block {b}: {} words > {MAIN_WORDS} \
+                     ({}x{} @ {} on {nblocks} blocks) — add blocks or use the tiling dataflow",
+                    base + tile.words(),
+                    w.rows,
+                    w.cols,
+                    w.precision
+                );
+                placed.push(ResidentTile { tile, base: base as u16 });
+                base += tile.words();
+            }
+            by_block.push(placed);
+        }
+        let mut pinned_words = 0u64;
+        for (b, placed) in by_block.iter().enumerate() {
+            for rt in placed {
+                for j in 0..rt.tile.cols {
+                    let word = pack_tile_word(w, &rt.tile, j);
+                    pool.block_mut(b).write_word(rt.base + j as u16, word);
+                    pinned_words += 1;
+                }
+            }
+        }
+        let write_marks = (0..nblocks)
+            .map(|b| pool.block(b).stats().app_write_words)
+            .collect();
+        Ok(ResidentModel {
+            m: w.rows,
+            n: w.cols,
+            precision: w.precision,
+            variant: pool.variant,
+            blocks: nblocks,
+            tiles: plan.tiles.len(),
+            by_block,
+            pinned_words,
+            write_marks,
+        })
+    }
+
+    /// Debug-build staleness check used by the resident run paths: a
+    /// pinned pool's main arrays are dedicated to the resident layout,
+    /// so any application write since pin (a tiling dispatch streaming
+    /// over the same blocks, most likely) means the weights may be
+    /// stale. Free — one counter compare per block. Release builds
+    /// skip it; use [`ResidentModel::verify_resident`] for a full
+    /// word-level audit.
+    pub(crate) fn debug_assert_unclobbered(&self, pool: &BlockPool) {
+        if cfg!(debug_assertions) {
+            for (b, &mark) in self.write_marks.iter().enumerate() {
+                debug_assert_eq!(
+                    pool.block(b).stats().app_write_words,
+                    mark,
+                    "block {b}'s main array was written after pin — the resident \
+                     weights may be clobbered; re-pin the model"
+                );
+            }
+        }
+    }
+
+    pub fn block_count(&self) -> usize {
+        self.blocks
+    }
+
+    pub fn tile_count(&self) -> usize {
+        self.tiles
+    }
+
+    /// Per-block resident tiles, in plan order (block `b` → index `b`).
+    pub fn by_block(&self) -> &[Vec<ResidentTile>] {
+        &self.by_block
+    }
+
+    /// Integrity check: do the pool's main arrays still hold exactly the
+    /// pinned words for `w`? `false` after any tiling-mode dispatch (or
+    /// other application write) clobbered the layout — re-pin then.
+    pub fn verify_resident(&self, pool: &BlockPool, w: &IntMatrix) -> bool {
+        if pool.len() != self.blocks || w.rows != self.m || w.cols != self.n {
+            return false;
+        }
+        for (b, placed) in self.by_block.iter().enumerate() {
+            for rt in placed {
+                for j in 0..rt.tile.cols {
+                    if pool.block(b).read_word(rt.base + j as u16)
+                        != pack_tile_word(w, &rt.tile, j)
+                    {
+                        return false;
+                    }
+                }
+            }
+        }
+        true
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+
+    #[test]
+    fn pin_places_every_tile_within_capacity() {
+        let mut rng = Rng::seed_from_u64(0x9e5);
+        for p in Precision::ALL {
+            let w = IntMatrix::random(&mut rng, 45, 96, p);
+            let mut pool = BlockPool::new(Variant::OneDA, 4, p);
+            let rm = ResidentModel::pin(&mut pool, &w).expect("fits");
+            assert_eq!(rm.block_count(), 4);
+            let placed: usize = rm.by_block().iter().map(Vec::len).sum();
+            assert_eq!(placed, rm.tile_count());
+            // Layout is non-overlapping and in-bounds per block.
+            for tiles in rm.by_block() {
+                let mut next_free = 0usize;
+                for rt in tiles {
+                    assert!(rt.base as usize >= next_free);
+                    next_free = rt.base as usize + rt.tile.words();
+                    assert!(next_free <= MAIN_WORDS);
+                }
+            }
+            assert!(rm.verify_resident(&pool, &w), "{p}");
+            // Pin cost equals total tile words.
+            let words: u64 = rm
+                .by_block()
+                .iter()
+                .flatten()
+                .map(|rt| rt.tile.words() as u64)
+                .sum();
+            assert_eq!(rm.pinned_words, words);
+        }
+    }
+
+    #[test]
+    fn oversized_model_is_rejected() {
+        let p = Precision::Int2;
+        let w = IntMatrix::zeros(80, 512, p);
+        // 4 tiles x 512 words on one block: only the first fits.
+        let mut pool = BlockPool::new(Variant::OneDA, 1, p);
+        let err = ResidentModel::pin(&mut pool, &w).unwrap_err();
+        assert!(format!("{err:#}").contains("overflows"), "{err:#}");
+        // Enough blocks and the same model fits.
+        let mut pool4 = BlockPool::new(Variant::OneDA, 4, p);
+        assert!(ResidentModel::pin(&mut pool4, &w).is_ok());
+    }
+
+    #[test]
+    fn out_of_range_weights_are_rejected_before_touching_blocks() {
+        let p = Precision::Int4;
+        let mut w = IntMatrix::zeros(4, 4, p);
+        w.data[5] = 99; // bypass the checked setter, as corrupt input would
+        let mut pool = BlockPool::new(Variant::OneDA, 1, p);
+        assert!(ResidentModel::pin(&mut pool, &w).is_err());
+    }
+
+    #[test]
+    fn tiling_dispatch_clobbers_residency_detectably() {
+        let mut rng = Rng::seed_from_u64(0xc10b);
+        let p = Precision::Int4;
+        let w = IntMatrix::random(&mut rng, 45, 96, p);
+        let mut pool = BlockPool::new(Variant::OneDA, 4, p);
+        let rm = ResidentModel::pin(&mut pool, &w).unwrap();
+        assert!(rm.verify_resident(&pool, &w));
+        let other = IntMatrix::random(&mut rng, 45, 96, p);
+        let _ = pool.run_gemv(&other, &crate::quant::random_vector(&mut rng, 96, p, true));
+        assert!(!rm.verify_resident(&pool, &w), "clobber must be detected");
+    }
+
+    #[test]
+    #[cfg(debug_assertions)]
+    #[should_panic(expected = "re-pin the model")]
+    fn resident_run_after_clobber_panics_in_debug() {
+        let mut rng = Rng::seed_from_u64(0x57a1e);
+        let p = Precision::Int4;
+        let w = IntMatrix::random(&mut rng, 45, 96, p);
+        let x = crate::quant::random_vector(&mut rng, 96, p, true);
+        let mut pool = BlockPool::new(Variant::OneDA, 4, p);
+        let rm = ResidentModel::pin(&mut pool, &w).unwrap();
+        // A tiling dispatch on the pinned pool streams over the
+        // resident words; the next resident run must refuse (debug).
+        let _ = pool.run_gemv(&w, &x);
+        let _ = pool.run_gemv_resident(&rm, &x, true);
+    }
+}

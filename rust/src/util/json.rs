@@ -121,15 +121,23 @@ impl Json {
 }
 
 fn escape(s: &str) -> String {
-    s.chars()
-        .flat_map(|c| match c {
-            '"' => "\\\"".chars().collect::<Vec<_>>(),
-            '\\' => "\\\\".chars().collect(),
-            '\n' => "\\n".chars().collect(),
-            '\t' => "\\t".chars().collect(),
-            c => vec![c],
-        })
-        .collect()
+    let mut out = String::with_capacity(s.len());
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\t' => out.push_str("\\t"),
+            '\r' => out.push_str("\\r"),
+            // RFC 8259 §7: all other control characters MUST be escaped
+            // too, or the emitted document is invalid JSON.
+            c if (c as u32) < 0x20 => {
+                let _ = write!(out, "\\u{:04x}", c as u32);
+            }
+            c => out.push(c),
+        }
+    }
+    out
 }
 
 /// Parse a JSON document (no streaming; errors carry byte offsets).
@@ -318,5 +326,24 @@ mod tests {
     fn escapes() {
         let j = Json::Str("a\"b\\c\nd".into());
         assert_eq!(parse(&j.render()).unwrap(), j);
+    }
+
+    #[test]
+    fn every_control_byte_roundtrips_and_renders_escaped() {
+        for b in 0u8..0x20 {
+            let j = Json::Str(format!("a{}b", b as char));
+            let text = j.render();
+            assert!(
+                text.bytes().all(|c| c >= 0x20),
+                "byte {b:#04x} leaked unescaped into {text:?}"
+            );
+            assert_eq!(parse(&text).unwrap(), j, "byte {b:#04x}");
+        }
+        // Mixed string exercising the named and \u00XX forms together.
+        let j = Json::Str("tab\there\r\nbell\x07end\x1f".into());
+        let text = j.render();
+        assert!(text.contains("\\t") && text.contains("\\r") && text.contains("\\n"));
+        assert!(text.contains("\\u0007") && text.contains("\\u001f"));
+        assert_eq!(parse(&text).unwrap(), j);
     }
 }

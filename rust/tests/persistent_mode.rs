@@ -1,0 +1,180 @@
+//! Persistent vs tiling dataflow: the two execution modes must be
+//! **bit-identical** in results on any workload — persistent mode only
+//! changes *where weights come from* (resident main-array words vs
+//! per-tile streaming), never the numerics — while `ScheduleStats`
+//! shows the copy-cycle savings the paper's §IV-C/§VI-C persistent
+//! operation promises. Also covers the plan cache on the repeated
+//! same-shape dispatch path and parallel determinism of resident runs.
+
+use bramac::arch::Precision;
+use bramac::bramac::Variant;
+use bramac::coordinator::BlockPool;
+use bramac::quant::{random_vector, IntMatrix};
+use bramac::storage::ResidentModel;
+use bramac::util::Rng;
+
+#[test]
+fn persistent_bit_identical_to_tiling_all_combos() {
+    let mut rng = Rng::seed_from_u64(0xD1FF);
+    for variant in Variant::ALL {
+        for p in Precision::ALL {
+            for signed in [true, false] {
+                // n > 256 exercises *different* tile splits per mode
+                // (tiling halves the buffer for double-buffering), so
+                // bit-identity is not "same schedule twice".
+                for &(m, n, blocks) in &[(45usize, 96usize, 4usize), (20, 300, 4)] {
+                    let w = IntMatrix::random(&mut rng, m, n, p);
+                    let x = random_vector(&mut rng, n, p, signed);
+
+                    let mut tiling = BlockPool::new(variant, blocks, p);
+                    let (y_t, s_t) = tiling.run_gemv_signed(&w, &x, signed);
+
+                    let mut persistent = BlockPool::new(variant, blocks, p);
+                    let rm = ResidentModel::pin(&mut persistent, &w).expect("fits");
+                    let (y_p, s_p) = persistent.run_gemv_resident(&rm, &x, signed);
+
+                    let ctx = format!(
+                        "{} {p} signed={signed} {m}x{n} blocks={blocks}",
+                        variant.name()
+                    );
+                    assert_eq!(y_p, y_t, "modes diverged: {ctx}");
+                    assert_eq!(y_t, w.gemv_ref(&x), "tiling vs reference: {ctx}");
+                    assert!(s_t.weight_copy_cycles > 0, "tiling must stream: {ctx}");
+                    assert_eq!(s_p.weight_copy_cycles, 0, "persistent must not copy: {ctx}");
+                    assert_eq!(s_p.exposed_load_cycles, 0, "{ctx}");
+                    assert!(
+                        s_p.makespan_cycles <= s_t.makespan_cycles,
+                        "persistent slower: {ctx} ({} vs {})",
+                        s_p.makespan_cycles,
+                        s_t.makespan_cycles
+                    );
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn batch2_persistent_bit_identical() {
+    let mut rng = Rng::seed_from_u64(0xBA72);
+    for p in Precision::ALL {
+        for signed in [true, false] {
+            let (m, n, blocks) = (45, 96, 4);
+            let w = IntMatrix::random(&mut rng, m, n, p);
+            let x0 = random_vector(&mut rng, n, p, signed);
+            let x1 = random_vector(&mut rng, n, p, signed);
+
+            let mut tiling = BlockPool::new(Variant::TwoSA, blocks, p);
+            let ([a0, a1], s_t) = tiling.run_mvm_batch2_signed(&w, &x0, &x1, signed);
+
+            let mut persistent = BlockPool::new(Variant::TwoSA, blocks, p);
+            let rm = ResidentModel::pin(&mut persistent, &w).expect("fits");
+            let ([b0, b1], s_p) = persistent.run_mvm_batch2_resident(&rm, &x0, &x1, signed);
+
+            assert_eq!(b0, a0, "{p} signed={signed} vec0");
+            assert_eq!(b1, a1, "{p} signed={signed} vec1");
+            assert_eq!(a0, w.gemv_ref(&x0), "{p} signed={signed}");
+            assert_eq!(a1, w.gemv_ref(&x1), "{p} signed={signed}");
+            assert!(s_t.weight_copy_cycles > 0);
+            assert_eq!(s_p.weight_copy_cycles, 0);
+        }
+    }
+}
+
+#[test]
+fn repeated_requests_strictly_save_copy_cycles() {
+    // The serving scenario the tentpole targets: the same model serves
+    // many requests. Tiling re-streams every dispatch; persistent pays
+    // the pin once.
+    let mut rng = Rng::seed_from_u64(0x5e12);
+    let p = Precision::Int4;
+    let (m, n, blocks, requests) = (45, 96, 4, 5);
+    let w = IntMatrix::random(&mut rng, m, n, p);
+    let inputs: Vec<Vec<i64>> = (0..requests)
+        .map(|_| random_vector(&mut rng, n, p, true))
+        .collect();
+
+    let mut tiling = BlockPool::new(Variant::OneDA, blocks, p);
+    let mut tiling_copy = 0u64;
+    for x in &inputs {
+        let (y, s) = tiling.run_gemv(&w, x);
+        assert_eq!(y, w.gemv_ref(x));
+        tiling_copy += s.weight_copy_cycles;
+    }
+
+    let mut persistent = BlockPool::new(Variant::OneDA, blocks, p);
+    let rm = ResidentModel::pin(&mut persistent, &w).unwrap();
+    let mut persistent_copy = rm.pinned_words; // the one-time first touch
+    for x in &inputs {
+        let (y, s) = persistent.run_gemv_resident(&rm, x, true);
+        assert_eq!(y, w.gemv_ref(x));
+        persistent_copy += s.weight_copy_cycles;
+    }
+
+    assert!(
+        persistent_copy < tiling_copy,
+        "persistent {persistent_copy} must beat tiling {tiling_copy} copy cycles"
+    );
+    // Exactly one model's worth of words, ever.
+    assert_eq!(persistent_copy, rm.pinned_words);
+    // The resident layout survived all those dispatches.
+    assert!(rm.verify_resident(&persistent, &w));
+}
+
+#[test]
+fn plan_cache_serves_repeated_shapes_without_rederiving() {
+    let mut rng = Rng::seed_from_u64(0xCAC4);
+    let p = Precision::Int8;
+    let w = IntMatrix::random(&mut rng, 30, 120, p);
+    let mut pool = BlockPool::new(Variant::OneDA, 3, p);
+    let mut baseline = None;
+    for i in 0..6 {
+        let x = random_vector(&mut rng, 120, p, true);
+        let (y, s) = pool.run_gemv(&w, &x);
+        assert_eq!(y, w.gemv_ref(&x), "dispatch {i}");
+        // Identical shape → identical plan → identical per-dispatch
+        // accounting, cached or not.
+        match &baseline {
+            None => baseline = Some(s),
+            Some(b) => assert_eq!(s.tiles, b.tiles, "dispatch {i}"),
+        }
+    }
+    assert_eq!(pool.plan_cache().misses(), 1, "one derivation for six dispatches");
+    assert_eq!(pool.plan_cache().hits(), 5);
+}
+
+#[test]
+fn resident_runs_are_parallel_deterministic() {
+    let mut rng = Rng::seed_from_u64(0xDE7);
+    for variant in Variant::ALL {
+        let p = Precision::Int4;
+        let (m, n, blocks) = (45, 96, 4);
+        let w = IntMatrix::random(&mut rng, m, n, p);
+        let x = random_vector(&mut rng, n, p, true);
+
+        let mut seq = BlockPool::new(variant, blocks, p);
+        let rm_seq = ResidentModel::pin(&mut seq, &w).unwrap();
+        let (y_seq, s_seq) = seq.run_gemv_resident(&rm_seq, &x, true);
+
+        for threads in [2usize, 4, 16] {
+            let mut par = BlockPool::new(variant, blocks, p).with_threads(threads);
+            let rm_par = ResidentModel::pin(&mut par, &w).unwrap();
+            let (y_par, s_par) = par.run_gemv_resident(&rm_par, &x, true);
+            assert_eq!(y_par, y_seq, "{} threads={threads}", variant.name());
+            assert_eq!(s_par, s_seq, "{} threads={threads}", variant.name());
+        }
+    }
+}
+
+#[test]
+fn resident_pool_geometry_is_enforced() {
+    let p = Precision::Int4;
+    let w = IntMatrix::zeros(10, 8, p);
+    let mut four = BlockPool::new(Variant::OneDA, 4, p);
+    let rm = ResidentModel::pin(&mut four, &w).unwrap();
+    let mut two = BlockPool::new(Variant::OneDA, 2, p);
+    let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+        let _ = two.run_gemv_resident(&rm, &[0; 8], true);
+    }));
+    assert!(result.is_err(), "mismatched pool geometry must panic");
+}

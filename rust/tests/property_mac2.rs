@@ -61,8 +61,8 @@ fn prop_block_dot_product_equals_reference() {
         for k in 0..n_mac2 {
             let w1: Vec<i64> = (0..lanes).map(|_| rand_operand(&mut rng, p, true)).collect();
             let w2: Vec<i64> = (0..lanes).map(|_| rand_operand(&mut rng, p, true)).collect();
-            block.write_word(2 * k as u16, bramac::bramac::signext::pack_word(&w1, p));
-            block.write_word(2 * k as u16 + 1, bramac::bramac::signext::pack_word(&w2, p));
+            block.write_word(2 * k as u16, bramac::bramac::signext::pack_word(&w1, p, true));
+            block.write_word(2 * k as u16 + 1, bramac::bramac::signext::pack_word(&w2, p, true));
             let pairs: Vec<(i64, i64)> = (0..variant.dummy_arrays())
                 .map(|_| (rand_operand(&mut rng, p, signed), rand_operand(&mut rng, p, signed)))
                 .collect();

@@ -1,0 +1,87 @@
+//! Property tests for `quant::IntMatrix`'s range invariant: every
+//! public constructor yields matrices whose elements live in the
+//! precision's signed range, and the **checked** mutators enforce it in
+//! every build profile — `set`'s debug_assert vanishes in release
+//! builds, so untrusted paths must go through `try_set` /
+//! `try_from_data` (these tests use only checked paths and therefore
+//! hold under `cargo test --release` too).
+
+use bramac::arch::Precision;
+use bramac::quant::{quantize_sym, random_vector, IntMatrix};
+use bramac::util::Rng;
+
+const TRIALS: usize = 200;
+
+fn in_range(m: &IntMatrix) -> bool {
+    let (lo, hi) = m.precision.range();
+    m.data.iter().all(|&v| (lo as i64..=hi as i64).contains(&v))
+}
+
+#[test]
+fn prop_every_constructor_upholds_the_range_invariant() {
+    let mut rng = Rng::seed_from_u64(0x0a17);
+    for trial in 0..TRIALS {
+        let p = Precision::ALL[rng.gen_range_usize(0, 2)];
+        let rows = rng.gen_range_usize(1, 20);
+        let cols = rng.gen_range_usize(1, 20);
+
+        let z = IntMatrix::zeros(rows, cols, p);
+        assert!(in_range(&z) && z.validate().is_ok(), "zeros trial {trial}");
+
+        let r = IntMatrix::random(&mut rng, rows, cols, p);
+        assert!(in_range(&r) && r.validate().is_ok(), "random trial {trial}");
+        assert!(in_range(&r.transposed()), "transpose trial {trial}");
+
+        let data = random_vector(&mut rng, rows * cols, p, true);
+        let m = IntMatrix::try_from_data(rows, cols, data, p).expect("valid data");
+        assert!(in_range(&m), "try_from_data trial {trial}");
+
+        // Quantization output feeds the checked constructor directly.
+        let f: Vec<f32> = (0..rows * cols).map(|i| (i as f32) - 7.5).collect();
+        let (q, _scale) = quantize_sym(&f, p);
+        assert!(IntMatrix::try_from_data(rows, cols, q, p).is_ok(), "quantize trial {trial}");
+    }
+}
+
+#[test]
+fn prop_try_from_data_rejects_any_single_out_of_range_element() {
+    let mut rng = Rng::seed_from_u64(0x0a18);
+    for _ in 0..TRIALS {
+        let p = Precision::ALL[rng.gen_range_usize(0, 2)];
+        let (lo, hi) = p.range();
+        let rows = rng.gen_range_usize(1, 12);
+        let cols = rng.gen_range_usize(1, 12);
+        let mut data = random_vector(&mut rng, rows * cols, p, true);
+        let idx = rng.gen_range_usize(0, data.len() - 1);
+        // Corrupt one element just past either boundary.
+        let bad = if rng.gen_bool(0.5) { hi as i64 + 1 } else { lo as i64 - 1 };
+        data[idx] = bad;
+        let err = IntMatrix::try_from_data(rows, cols, data, p).unwrap_err();
+        assert_eq!(err.value, bad, "{p} idx={idx}");
+        assert_eq!(err.precision, p);
+    }
+}
+
+#[test]
+fn prop_try_set_enforces_range_in_all_profiles() {
+    let mut rng = Rng::seed_from_u64(0x0a19);
+    for _ in 0..TRIALS {
+        let p = Precision::ALL[rng.gen_range_usize(0, 2)];
+        let (lo, hi) = p.range();
+        let mut m = IntMatrix::zeros(4, 4, p);
+        let (r, c) = (rng.gen_range_usize(0, 3), rng.gen_range_usize(0, 3));
+
+        let ok = rng.gen_range_i64(lo as i64, hi as i64);
+        assert!(m.try_set(r, c, ok).is_ok());
+        assert_eq!(m.get(r, c), ok);
+
+        let bad = if rng.gen_bool(0.5) {
+            rng.gen_range_i64(hi as i64 + 1, hi as i64 + 100)
+        } else {
+            rng.gen_range_i64(lo as i64 - 100, lo as i64 - 1)
+        };
+        assert!(m.try_set(r, c, bad).is_err());
+        assert_eq!(m.get(r, c), ok, "failed try_set must leave the old value");
+        assert!(m.validate().is_ok(), "matrix stays valid after rejected write");
+    }
+}

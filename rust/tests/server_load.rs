@@ -13,6 +13,7 @@ use std::time::Duration;
 
 use bramac::coordinator::batcher::{submit_and_wait, Batcher, Request};
 use bramac::coordinator::server::{InferenceServer, IMAGE_ELEMS};
+use bramac::dla::Dataflow;
 use bramac::util::Rng;
 
 #[test]
@@ -61,7 +62,7 @@ fn batcher_preserves_payload_reply_pairing() {
     let (tx, batcher) = Batcher::<u64, u64>::new(8, Duration::from_millis(5));
     let worker = std::thread::spawn(move || {
         while let Some(batch) = batcher.next_batch() {
-            for Request { payload, reply } in batch {
+            for Request { payload, reply, .. } in batch {
                 let _ = reply.send(payload.wrapping_mul(31));
             }
         }
@@ -131,6 +132,53 @@ fn stub_server_identical_inputs_identical_logits() {
     // A different image must (for this classifier) give different logits.
     let other: Vec<i32> = (0..IMAGE_ELEMS).map(|i| ((i + 1) % 5) as i32).collect();
     assert_ne!(submit_and_wait(&tx, other).unwrap(), first);
+}
+
+#[test]
+fn stub_server_persistent_dataflow_charges_copies_once() {
+    // Warm sessions: a persistent-mode server attributes the network's
+    // first-touch weight copy once per worker, while the tiling server
+    // re-charges it per image — and the replies are identical (the
+    // dataflow changes cycle attribution, never numerics).
+    let requests = 12u64;
+    let run = |dataflow: Dataflow| {
+        let server = InferenceServer::start_with_dataflow(
+            common::stub_artifacts_dir(),
+            "model",
+            Duration::from_millis(5),
+            1,
+            dataflow,
+        )
+        .unwrap();
+        let mut outputs = Vec::new();
+        let tx = server.handle();
+        for c in 0..requests {
+            let mut rng = Rng::seed_from_u64(0xDF + c);
+            let img: Vec<i32> = (0..IMAGE_ELEMS)
+                .map(|_| rng.gen_range_i64(0, 7) as i32)
+                .collect();
+            outputs.push(submit_and_wait(&tx, img).expect("reply"));
+        }
+        drop(tx);
+        (outputs, server.shutdown())
+    };
+
+    let (out_t, stats_t) = run(Dataflow::Tiling);
+    let (out_p, stats_p) = run(Dataflow::Persistent);
+    assert_eq!(out_p, out_t, "dataflow must not change results");
+    assert_eq!(stats_t.requests, requests);
+    assert_eq!(stats_p.requests, requests);
+    // Tiling: copy cycles scale with requests. Persistent: one charge.
+    assert_eq!(stats_t.weight_copy_cycles % requests, 0);
+    let per_image_copy = stats_t.weight_copy_cycles / requests;
+    assert!(per_image_copy > 0, "tiling must charge per-image copies");
+    assert_eq!(stats_p.weight_copy_cycles, per_image_copy, "one first touch, ever");
+    assert!(
+        stats_p.attributed_cycles < stats_t.attributed_cycles,
+        "warm sessions must attribute fewer cycles: {} vs {}",
+        stats_p.attributed_cycles,
+        stats_t.attributed_cycles
+    );
 }
 
 #[test]
