@@ -10,7 +10,7 @@ use bramac::coordinator::tiler::plan_gemv;
 use bramac::coordinator::{BlockPool, PlanCache, PlanKey};
 use bramac::quant::{random_vector, IntMatrix};
 use bramac::storage::ResidentModel;
-use bramac::util::bench::{black_box, Bench};
+use bramac::util::bench::{black_box, Bench, BenchMeta};
 use bramac::util::Rng;
 
 fn main() {
@@ -100,9 +100,13 @@ fn main() {
     }
     let auto = bramac::coordinator::workers::auto_threads();
     let seq_ns = b
-        .bench("pool_gemv/320x1024/4bit/8blocks/threads=1", || {
-            black_box(seq_pool.run_gemv(&bw, &bx));
-        })
+        .bench_meta(
+            "pool_gemv/320x1024/4bit/8blocks/threads=1",
+            BenchMeta { cycles: s_seq.makespan_cycles, threads: 1, shards: 0 },
+            || {
+                black_box(seq_pool.run_gemv(&bw, &bx));
+            },
+        )
         .median_ns;
     let mut speedup_4t = 0.0;
     let mut thread_counts = vec![2usize, 4];
@@ -112,8 +116,9 @@ fn main() {
     for threads in thread_counts {
         let mut pool = BlockPool::new(Variant::OneDA, 8, p).with_threads(threads);
         let ns = b
-            .bench(
+            .bench_meta(
                 &format!("pool_gemv/320x1024/4bit/8blocks/threads={threads}"),
+                BenchMeta { cycles: s_seq.makespan_cycles, threads, shards: 0 },
                 || {
                     black_box(pool.run_gemv(&bw, &bx));
                 },
@@ -179,14 +184,22 @@ fn main() {
     assert_eq!(s_resident.weight_copy_cycles, 0);
     assert!(s_tiling.weight_copy_cycles > 0);
     let tiling_ns = b
-        .bench("pool_gemv/tiling/80x256/4bit/8blocks", || {
-            black_box(tiling_pool.run_gemv(&pw, &px));
-        })
+        .bench_meta(
+            "pool_gemv/tiling/80x256/4bit/8blocks",
+            BenchMeta { cycles: s_tiling.makespan_cycles, threads: 1, shards: 0 },
+            || {
+                black_box(tiling_pool.run_gemv(&pw, &px));
+            },
+        )
         .median_ns;
     let resident_ns = b
-        .bench("pool_gemv/persistent/80x256/4bit/8blocks", || {
-            black_box(resident_pool.run_gemv_resident(&rm, &px, true));
-        })
+        .bench_meta(
+            "pool_gemv/persistent/80x256/4bit/8blocks",
+            BenchMeta { cycles: s_resident.makespan_cycles, threads: 1, shards: 0 },
+            || {
+                black_box(resident_pool.run_gemv_resident(&rm, &px, true));
+            },
+        )
         .median_ns;
     println!(
         "    -> persistent vs tiling dispatch: {:.2}x host time; copy cycles {} -> 0 \
@@ -197,4 +210,5 @@ fn main() {
     );
 
     b.finish();
+    b.emit_json_env();
 }

@@ -1,0 +1,96 @@
+//! Shard-count scaling bench: one 320×1024 4-bit GEMV spread over
+//! {1, 2, 4, 8} row shards at a constant total block budget (8 blocks),
+//! in both dataflows, plus the router's dispatch overhead. Every
+//! configuration is asserted bit-identical to the single-pool result
+//! before it is timed, and each entry records the simulated makespan
+//! (`cycles`) and shard count into the `BENCH_*.json` trajectory via
+//! `BENCH_JSON` (EXPERIMENTS.md §Sharded scale-out).
+use bramac::arch::Precision;
+use bramac::bramac::Variant;
+use bramac::coordinator::{BlockPool, Policy, Router, ShardedPool};
+use bramac::quant::{random_vector, IntMatrix};
+use bramac::util::bench::{black_box, Bench, BenchMeta};
+use bramac::util::Rng;
+
+const TOTAL_BLOCKS: usize = 8;
+
+fn main() {
+    let mut b = Bench::new("shard_scaling");
+    let mut rng = Rng::seed_from_u64(0x54a2d);
+    let p = Precision::Int4;
+    let (m, n) = (320usize, 1024usize);
+    let w = IntMatrix::random(&mut rng, m, n, p);
+    let x = random_vector(&mut rng, n, p, true);
+
+    // Ground truth: a single pool over the whole block budget.
+    let mut single = BlockPool::new(Variant::OneDA, TOTAL_BLOCKS, p);
+    let (y_ref, s_ref) = single.run_gemv(&w, &x);
+    assert_eq!(y_ref, w.gemv_ref(&x), "single pool must be exact");
+
+    // Tiling dataflow across shard counts (constant total blocks).
+    for shards in [1usize, 2, 4, 8] {
+        let blocks_per_shard = TOTAL_BLOCKS / shards;
+        let mut sp = ShardedPool::new(Variant::OneDA, shards, blocks_per_shard, p);
+        let (y, s) = sp.run_gemv(&w, &x);
+        assert_eq!(y, y_ref, "sharded must be bit-identical ({shards} shards)");
+        assert_eq!(s.mac2s, s_ref.mac2s, "row sharding conserves work");
+        b.bench_meta(
+            &format!("sharded_gemv/tiling/320x1024/4bit/{shards}shards"),
+            BenchMeta { cycles: s.makespan_cycles, threads: 0, shards },
+            || {
+                black_box(sp.run_gemv(&w, &x));
+            },
+        );
+        println!(
+            "    -> {shards} shards x {blocks_per_shard} blocks: makespan {} cycles \
+             (single-pool reference {})",
+            s.makespan_cycles, s_ref.makespan_cycles
+        );
+    }
+
+    // Persistent dataflow on the serving shape (80×256 fits the block
+    // budget's main arrays): per-shard resident pins, zero copy per
+    // dispatch.
+    let (pm, pn) = (80usize, 256usize);
+    let pw = IntMatrix::random(&mut rng, pm, pn, p);
+    let px = random_vector(&mut rng, pn, p, true);
+    let y_pref = pw.gemv_ref(&px);
+    for shards in [1usize, 4] {
+        let blocks_per_shard = TOTAL_BLOCKS / shards;
+        let mut sp = ShardedPool::new(Variant::OneDA, shards, blocks_per_shard, p);
+        let sr = sp.pin(&pw).expect("80x256/4bit fits the shard block budget");
+        let (y, s) = sp.run_gemv_resident(&sr, &px, true);
+        assert_eq!(y, y_pref, "persistent sharded must be bit-identical");
+        assert_eq!(s.weight_copy_cycles, 0);
+        b.bench_meta(
+            &format!("sharded_gemv/persistent/80x256/4bit/{shards}shards"),
+            BenchMeta { cycles: s.makespan_cycles, threads: 0, shards },
+            || {
+                black_box(sp.run_gemv_resident(&sr, &px, true));
+            },
+        );
+    }
+
+    // Router dispatch overhead on a small serving shape: 3 warm
+    // replicas of 2 shards each, least-outstanding policy.
+    let wr = IntMatrix::random(&mut rng, 40, 96, p);
+    let xr = random_vector(&mut rng, 96, p, true);
+    let y_router = wr.gemv_ref(&xr);
+    let replicas: Vec<ShardedPool> =
+        (0..3).map(|_| ShardedPool::new(Variant::OneDA, 2, 2, p)).collect();
+    let mut router =
+        Router::new(Policy::LeastOutstanding, replicas, &wr).expect("pin fits");
+    let (y, _) = router.dispatch(&xr, true);
+    assert_eq!(y, y_router, "routed dispatch must be exact");
+    b.bench_meta(
+        "router_dispatch/least-outstanding/40x96/4bit/3replicas",
+        BenchMeta { cycles: 0, threads: 0, shards: 2 },
+        || {
+            black_box(router.dispatch(&xr, true));
+            router.retire(u64::MAX);
+        },
+    );
+
+    b.finish();
+    b.emit_json_env();
+}

@@ -6,17 +6,26 @@
 //! plus a tile-plan cache for repeated same-shape dispatches, a dynamic
 //! batcher and an async inference server running real numerics through
 //! PJRT.
+//!
+//! Scale-out lives in [`shard`] and [`router`]: [`ShardedPool`] spreads
+//! one model's rows across independent pools (model parallelism,
+//! bit-identical to a single pool), and [`Router`] replicates the whole
+//! deployment behind pluggable traffic policies (data parallelism).
 
 pub mod batcher;
 pub mod plan_cache;
+pub mod router;
 pub mod scheduler;
 pub mod server;
+pub mod shard;
 pub mod tiler;
 pub mod workers;
 
 pub use batcher::Batcher;
-pub use plan_cache::{CachedPlan, PlanCache, PlanKey};
+pub use plan_cache::{CachedPlan, PlanCache, PlanKey, DEFAULT_PLAN_CAPACITY};
+pub use router::{Policy, ReplicaStats, Router, RouterStats};
 pub use scheduler::{BlockPool, ScheduleStats};
-pub use server::{InferenceServer, ServerStats};
+pub use server::{InferenceServer, ReplicaServerStats, ServerStats, ShardedServerStats};
+pub use shard::{shard_rows, ShardedPool, ShardedResident};
 pub use tiler::{plan_gemv, Tile, TilePlan};
 pub use workers::{auto_threads, parallel_map_indexed};

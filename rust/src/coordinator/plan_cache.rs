@@ -51,14 +51,33 @@ pub fn split_round_robin<T: Copy>(items: &[T], n: usize) -> Vec<Vec<T>> {
     by_bucket
 }
 
-/// The cache. Owned per [`super::BlockPool`]; bounded by the number of
-/// distinct dispatch shapes (serving workloads have a handful), with
-/// [`PlanCache::clear`] as the pressure valve for pathological callers.
-#[derive(Debug, Default)]
+/// Default [`PlanCache`] capacity: generous for real serving traffic
+/// (a model has a handful of shapes) while bounding the worst case of
+/// many-shape adversarial streams.
+pub const DEFAULT_PLAN_CAPACITY: usize = 256;
+
+/// The cache. Owned per [`super::BlockPool`]. Capped at a configurable
+/// capacity (default [`DEFAULT_PLAN_CAPACITY`]) with **LRU eviction**:
+/// under many-shape serving traffic the map previously grew without
+/// bound, one `TilePlan` + per-block split per distinct shape ever
+/// seen. Evictions are counted alongside hits/misses, and
+/// [`PlanCache::clear`] remains the manual pressure valve.
+#[derive(Debug)]
 pub struct PlanCache {
-    map: HashMap<PlanKey, Arc<CachedPlan>>,
+    /// Value carries the last-touched tick for LRU ordering; ticks are
+    /// strictly increasing, so eviction order is deterministic.
+    map: HashMap<PlanKey, (Arc<CachedPlan>, u64)>,
+    capacity: usize,
+    tick: u64,
     hits: u64,
     misses: u64,
+    evictions: u64,
+}
+
+impl Default for PlanCache {
+    fn default() -> Self {
+        PlanCache::with_capacity(DEFAULT_PLAN_CAPACITY)
+    }
 }
 
 impl PlanCache {
@@ -66,9 +85,45 @@ impl PlanCache {
         PlanCache::default()
     }
 
-    /// Look up the plan for `key`, deriving and memoizing it on miss.
+    /// A cache holding at most `capacity` plans (clamped to ≥ 1).
+    pub fn with_capacity(capacity: usize) -> Self {
+        PlanCache {
+            map: HashMap::new(),
+            capacity: capacity.max(1),
+            tick: 0,
+            hits: 0,
+            misses: 0,
+            evictions: 0,
+        }
+    }
+
+    /// Re-cap the cache in place, evicting least-recently-used entries
+    /// if it already holds more than `capacity` (clamped to ≥ 1).
+    pub fn set_capacity(&mut self, capacity: usize) {
+        self.capacity = capacity.max(1);
+        while self.map.len() > self.capacity {
+            self.evict_lru();
+        }
+    }
+
+    fn evict_lru(&mut self) {
+        let victim = self
+            .map
+            .iter()
+            .min_by_key(|(_, (_, touched))| *touched)
+            .map(|(key, _)| *key);
+        if let Some(key) = victim {
+            self.map.remove(&key);
+            self.evictions += 1;
+        }
+    }
+
+    /// Look up the plan for `key`, deriving and memoizing it on miss
+    /// (evicting the least-recently-used entry when full).
     pub fn get_or_insert(&mut self, key: PlanKey) -> Arc<CachedPlan> {
-        if let Some(cached) = self.map.get(&key) {
+        self.tick += 1;
+        if let Some((cached, touched)) = self.map.get_mut(&key) {
+            *touched = self.tick;
             self.hits += 1;
             return Arc::clone(cached);
         }
@@ -76,7 +131,10 @@ impl PlanCache {
         let plan = plan_gemv(key.m, key.n, key.precision, key.double_buffer);
         let by_block = split_round_robin(&plan.tiles, key.blocks);
         let cached = Arc::new(CachedPlan { plan, by_block });
-        self.map.insert(key, Arc::clone(&cached));
+        if self.map.len() >= self.capacity {
+            self.evict_lru();
+        }
+        self.map.insert(key, (Arc::clone(&cached), self.tick));
         cached
     }
 
@@ -86,6 +144,15 @@ impl PlanCache {
 
     pub fn misses(&self) -> u64 {
         self.misses
+    }
+
+    /// Entries dropped by the LRU cap since construction.
+    pub fn evictions(&self) -> u64 {
+        self.evictions
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.capacity
     }
 
     pub fn len(&self) -> usize {
@@ -152,6 +219,56 @@ mod tests {
         assert!(cache.is_empty());
         let _ = cache.get_or_insert(key(10, 10));
         assert_eq!(cache.misses(), 2);
+    }
+
+    #[test]
+    fn capacity_cap_evicts_least_recently_used() {
+        let mut cache = PlanCache::with_capacity(2);
+        assert_eq!(cache.capacity(), 2);
+        let a = cache.get_or_insert(key(10, 16));
+        let _b = cache.get_or_insert(key(11, 16));
+        // Touch `a` so `b` becomes the LRU entry, then overflow.
+        let _ = cache.get_or_insert(key(10, 16));
+        let _c = cache.get_or_insert(key(12, 16));
+        assert_eq!(cache.len(), 2);
+        assert_eq!(cache.evictions(), 1);
+        // `a` survived (hit), `b` was evicted (miss re-derives).
+        let a2 = cache.get_or_insert(key(10, 16));
+        assert!(Arc::ptr_eq(&a, &a2), "recently-used entry must survive");
+        let _ = cache.get_or_insert(key(11, 16));
+        assert_eq!(cache.evictions(), 2);
+        assert_eq!(cache.misses(), 4, "evicted shapes re-derive");
+    }
+
+    #[test]
+    fn unbounded_growth_is_capped_under_many_shape_traffic() {
+        let mut cache = PlanCache::new();
+        for m in 1..=(DEFAULT_PLAN_CAPACITY + 10) {
+            let _ = cache.get_or_insert(key(m, 16));
+        }
+        assert_eq!(cache.len(), DEFAULT_PLAN_CAPACITY);
+        assert_eq!(cache.evictions(), 10);
+        assert_eq!(cache.misses(), (DEFAULT_PLAN_CAPACITY + 10) as u64);
+    }
+
+    #[test]
+    fn shrinking_capacity_evicts_down_deterministically() {
+        let mut cache = PlanCache::with_capacity(8);
+        for m in 1..=8usize {
+            let _ = cache.get_or_insert(key(m, 16));
+        }
+        cache.set_capacity(3);
+        assert_eq!(cache.len(), 3);
+        assert_eq!(cache.evictions(), 5);
+        // The three most recently inserted shapes survive.
+        for m in 6..=8usize {
+            let _ = cache.get_or_insert(key(m, 16));
+        }
+        assert_eq!(cache.misses(), 8, "survivors must all hit");
+        // Capacity clamps to >= 1.
+        cache.set_capacity(0);
+        assert_eq!(cache.capacity(), 1);
+        assert_eq!(cache.len(), 1);
     }
 
     #[test]

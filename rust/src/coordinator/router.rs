@@ -1,0 +1,252 @@
+//! Data-parallel replica routing in front of sharded pools.
+//!
+//! Where [`super::ShardedPool`] splits one *model* across pools (model
+//! parallelism), [`Router`] replicates the whole sharded deployment and
+//! spreads *traffic* across the replicas (data parallelism) — the
+//! scale-out shape the ROADMAP's serving north star needs. Every
+//! replica holds a warm [`ShardedResident`] pinned at construction, so
+//! steady-state dispatches pay zero weight-copy cycles and the
+//! replica's one-time pin cost is visible in its stats.
+//!
+//! Routing is **simulated-time deterministic**: each replica carries an
+//! `outstanding_cycles` backlog (the simulated work queued on it);
+//! dispatching adds the run's makespan, [`Router::retire`] drains
+//! elapsed cycles, and the pluggable [`Policy`] picks the target
+//! replica from that state alone — so a trace replays identically on
+//! every host and thread count.
+
+use anyhow::{ensure, Result};
+
+use crate::quant::IntMatrix;
+
+use super::shard::{ShardedPool, ShardedResident};
+
+/// Replica-selection policy.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Policy {
+    /// Cycle through replicas in order, ignoring load.
+    RoundRobin,
+    /// Pick the replica with the least outstanding simulated work
+    /// (ties break to the lowest index — deterministic).
+    LeastOutstanding,
+}
+
+impl Policy {
+    pub const ALL: [Policy; 2] = [Policy::RoundRobin, Policy::LeastOutstanding];
+
+    pub fn name(self) -> &'static str {
+        match self {
+            Policy::RoundRobin => "round-robin",
+            Policy::LeastOutstanding => "least-outstanding",
+        }
+    }
+}
+
+impl std::str::FromStr for Policy {
+    type Err = String;
+
+    fn from_str(s: &str) -> Result<Self, Self::Err> {
+        match s {
+            "round-robin" | "rr" => Ok(Policy::RoundRobin),
+            "least-outstanding" | "lo" => Ok(Policy::LeastOutstanding),
+            other => Err(format!(
+                "unknown policy '{other}' (round-robin|least-outstanding)"
+            )),
+        }
+    }
+}
+
+/// One replica's accounting.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct ReplicaStats {
+    pub requests: u64,
+    /// Simulated compute cycles dispatched to this replica (sum of
+    /// per-run makespans).
+    pub busy_cycles: u64,
+    /// One-time weight-copy cycles charged when the replica's resident
+    /// layout was pinned (warm replicas never re-copy).
+    pub weight_copy_cycles: u64,
+    /// Backlog still queued on the replica (simulated cycles).
+    pub outstanding_cycles: u64,
+}
+
+/// Aggregated router accounting plus the per-replica breakdown.
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
+pub struct RouterStats {
+    pub requests: u64,
+    pub busy_cycles: u64,
+    pub weight_copy_cycles: u64,
+    pub per_replica: Vec<ReplicaStats>,
+}
+
+struct Replica {
+    pool: ShardedPool,
+    resident: ShardedResident,
+    stats: ReplicaStats,
+}
+
+/// A replica group: `replicas` warm sharded pools behind one dispatch
+/// point.
+pub struct Router {
+    policy: Policy,
+    replicas: Vec<Replica>,
+    rr_next: usize,
+}
+
+impl Router {
+    /// Build `replicas` identical sharded pools and pin `w` warm on
+    /// each (the per-replica first touch, charged to that replica's
+    /// `weight_copy_cycles`).
+    pub fn new(policy: Policy, pools: Vec<ShardedPool>, w: &IntMatrix) -> Result<Router> {
+        ensure!(!pools.is_empty(), "need at least one replica");
+        let mut replicas = Vec::with_capacity(pools.len());
+        for mut pool in pools {
+            let resident = pool.pin(w)?;
+            let stats = ReplicaStats {
+                weight_copy_cycles: resident.pinned_words,
+                ..ReplicaStats::default()
+            };
+            replicas.push(Replica { pool, resident, stats });
+        }
+        Ok(Router { policy, replicas, rr_next: 0 })
+    }
+
+    pub fn policy(&self) -> Policy {
+        self.policy
+    }
+
+    pub fn replica_count(&self) -> usize {
+        self.replicas.len()
+    }
+
+    /// Deterministic replica choice under the configured policy.
+    fn pick(&mut self) -> usize {
+        match self.policy {
+            Policy::RoundRobin => {
+                let i = self.rr_next % self.replicas.len();
+                self.rr_next = (i + 1) % self.replicas.len();
+                i
+            }
+            Policy::LeastOutstanding => {
+                let mut best = 0usize;
+                for (i, rep) in self.replicas.iter().enumerate() {
+                    if rep.stats.outstanding_cycles
+                        < self.replicas[best].stats.outstanding_cycles
+                    {
+                        best = i;
+                    }
+                }
+                best
+            }
+        }
+    }
+
+    /// Route one GEMV to a replica, run it against the replica's warm
+    /// resident layout, and charge the makespan to that replica's
+    /// backlog. Returns the exact result and the chosen replica index.
+    pub fn dispatch(&mut self, x: &[i64], signed_inputs: bool) -> (Vec<i64>, usize) {
+        let i = self.pick();
+        let rep = &mut self.replicas[i];
+        let (y, stats) = rep.pool.run_gemv_resident(&rep.resident, x, signed_inputs);
+        rep.stats.requests += 1;
+        rep.stats.busy_cycles += stats.makespan_cycles;
+        rep.stats.outstanding_cycles += stats.makespan_cycles;
+        (y, i)
+    }
+
+    /// Saturation hook (tests, what-if studies): enqueue `cycles` of
+    /// synthetic backlog on one replica without running anything.
+    pub fn inject_backlog(&mut self, replica: usize, cycles: u64) {
+        self.replicas[replica].stats.outstanding_cycles += cycles;
+    }
+
+    /// Advance simulated time: every replica retires up to `cycles` of
+    /// its backlog.
+    pub fn retire(&mut self, cycles: u64) {
+        for rep in &mut self.replicas {
+            rep.stats.outstanding_cycles =
+                rep.stats.outstanding_cycles.saturating_sub(cycles);
+        }
+    }
+
+    pub fn outstanding(&self, replica: usize) -> u64 {
+        self.replicas[replica].stats.outstanding_cycles
+    }
+
+    /// Aggregated accounting with the per-replica breakdown.
+    pub fn stats(&self) -> RouterStats {
+        let per_replica: Vec<ReplicaStats> =
+            self.replicas.iter().map(|r| r.stats).collect();
+        RouterStats {
+            requests: per_replica.iter().map(|r| r.requests).sum(),
+            busy_cycles: per_replica.iter().map(|r| r.busy_cycles).sum(),
+            weight_copy_cycles: per_replica.iter().map(|r| r.weight_copy_cycles).sum(),
+            per_replica,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::arch::Precision;
+    use crate::bramac::Variant;
+    use crate::quant::random_vector;
+    use crate::util::Rng;
+
+    fn replica_pools(n: usize, shards: usize, p: Precision) -> Vec<ShardedPool> {
+        (0..n).map(|_| ShardedPool::new(Variant::OneDA, shards, 2, p)).collect()
+    }
+
+    #[test]
+    fn policy_parses_and_names() {
+        for policy in Policy::ALL {
+            assert_eq!(policy.name().parse::<Policy>().unwrap(), policy);
+        }
+        assert_eq!("rr".parse::<Policy>().unwrap(), Policy::RoundRobin);
+        assert_eq!("lo".parse::<Policy>().unwrap(), Policy::LeastOutstanding);
+        assert!("bogus".parse::<Policy>().is_err());
+    }
+
+    #[test]
+    fn round_robin_cycles_replicas_and_results_stay_exact() {
+        let mut rng = Rng::seed_from_u64(0x40b1);
+        let p = Precision::Int4;
+        let w = IntMatrix::random(&mut rng, 40, 96, p);
+        let mut router =
+            Router::new(Policy::RoundRobin, replica_pools(3, 2, p), &w).unwrap();
+        for turn in 0..9 {
+            let x = random_vector(&mut rng, 96, p, true);
+            let (y, replica) = router.dispatch(&x, true);
+            assert_eq!(y, w.gemv_ref(&x), "turn {turn}");
+            assert_eq!(replica, turn % 3);
+        }
+        let stats = router.stats();
+        assert_eq!(stats.requests, 9);
+        assert!(stats.per_replica.iter().all(|r| r.requests == 3));
+        // Warm pins are charged once per replica, never per request.
+        assert!(stats.weight_copy_cycles > 0);
+        assert_eq!(
+            stats.weight_copy_cycles,
+            stats.per_replica.iter().map(|r| r.weight_copy_cycles).sum::<u64>()
+        );
+    }
+
+    #[test]
+    fn least_outstanding_balances_and_retires() {
+        let mut rng = Rng::seed_from_u64(0x10ad);
+        let p = Precision::Int4;
+        let w = IntMatrix::random(&mut rng, 40, 96, p);
+        let mut router =
+            Router::new(Policy::LeastOutstanding, replica_pools(2, 2, p), &w).unwrap();
+        let x = random_vector(&mut rng, 96, p, true);
+        let (_, first) = router.dispatch(&x, true);
+        assert_eq!(first, 0, "empty backlog ties break low");
+        let (_, second) = router.dispatch(&x, true);
+        assert_eq!(second, 1, "loaded replica 0 must be passed over");
+        assert!(router.outstanding(0) > 0);
+        router.retire(u64::MAX);
+        assert_eq!(router.outstanding(0), 0);
+        assert_eq!(router.outstanding(1), 0);
+    }
+}

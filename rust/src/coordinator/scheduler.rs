@@ -67,6 +67,21 @@ pub struct ScheduleStats {
     pub weight_copy_cycles: u64,
 }
 
+impl ScheduleStats {
+    /// Deterministic shard merge ([`super::ShardedPool`]): shards run
+    /// concurrently on disjoint hardware, so the makespan is the max
+    /// across shards while the work and traffic counters add. Field
+    /// order is fixed, so merging in shard order is reproducible.
+    pub fn merge_shard(&mut self, other: &ScheduleStats) {
+        self.tiles += other.tiles;
+        self.mac2s += other.mac2s;
+        self.makespan_cycles = self.makespan_cycles.max(other.makespan_cycles);
+        self.total_block_cycles += other.total_block_cycles;
+        self.exposed_load_cycles += other.exposed_load_cycles;
+        self.weight_copy_cycles += other.weight_copy_cycles;
+    }
+}
+
 /// What one block contributed to a run: its partial output vector plus
 /// its share of the cycle/work accounting.
 struct BlockRun<Y> {
@@ -138,9 +153,16 @@ impl BlockPool {
         self.blocks.is_empty()
     }
 
-    /// The pool's tile-plan cache (hit/miss counters for diagnostics).
+    /// The pool's tile-plan cache (hit/miss/eviction counters for
+    /// diagnostics).
     pub fn plan_cache(&self) -> &PlanCache {
         &self.plan_cache
+    }
+
+    /// Re-cap the pool's tile-plan cache (LRU eviction past `capacity`
+    /// entries; default [`super::plan_cache::DEFAULT_PLAN_CAPACITY`]).
+    pub fn set_plan_cache_capacity(&mut self, capacity: usize) {
+        self.plan_cache.set_capacity(capacity);
     }
 
     pub(crate) fn block(&self, i: usize) -> &BramacBlock {

@@ -7,6 +7,7 @@
 //! Python is never involved at serving time.
 
 use std::path::PathBuf;
+use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::mpsc::Sender;
 use std::sync::Arc;
 use std::sync::Mutex;
@@ -19,12 +20,13 @@ use crate::arch::Precision;
 use crate::bramac::Variant;
 use crate::dla::{
     config::DlaConfig,
-    cycle::{first_touch_cycles, network_cycles_with, Dataflow},
+    cycle::{first_touch_cycles, network_cycles_sharded, network_cycles_with, Dataflow},
     models::{ConvLayer, Network},
 };
 use crate::runtime::{Manifest, Runtime};
 
 use super::batcher::{Batcher, Request};
+use super::router::Policy;
 
 /// One inference request: a quantized 3×32×32 image (int32 pixels in
 /// the model precision's range).
@@ -65,13 +67,131 @@ pub struct ServerStats {
     pub weight_copy_cycles: u64,
 }
 
+/// One replica's share of the serving statistics (sharded servers).
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct ReplicaServerStats {
+    pub requests: u64,
+    pub batches: u64,
+    pub exec_micros: u64,
+    pub attributed_cycles: u64,
+    pub weight_copy_cycles: u64,
+}
+
+impl ReplicaServerStats {
+    fn add(&mut self, d: &ReplicaServerStats) {
+        self.requests += d.requests;
+        self.batches += d.batches;
+        self.exec_micros += d.exec_micros;
+        self.attributed_cycles += d.attributed_cycles;
+        self.weight_copy_cycles += d.weight_copy_cycles;
+    }
+}
+
+impl ServerStats {
+    fn add(&mut self, d: &ReplicaServerStats) {
+        self.requests += d.requests;
+        self.batches += d.batches;
+        self.exec_micros += d.exec_micros;
+        self.attributed_cycles += d.attributed_cycles;
+        self.weight_copy_cycles += d.weight_copy_cycles;
+    }
+}
+
+/// Execute one formed batch: pad to the artifact's static batch
+/// dimension, run it through PJRT, reply to every request, and return
+/// the stats delta including the dataflow's weight-copy charge (per
+/// image when tiling, once per warm session when persistent). `None`
+/// when execution failed — replies are dropped and clients see a
+/// disconnect. Shared by the legacy pull-model workers and the sharded
+/// replica workers so the two serving paths cannot drift.
+#[allow(clippy::too_many_arguments)]
+fn execute_batch(
+    runtime: &Runtime,
+    name: &str,
+    batch: usize,
+    classes: usize,
+    reqs: Vec<Request<Image, Logits>>,
+    cycles_per_image: u64,
+    first_touch: u64,
+    dataflow: Dataflow,
+    warm: &mut bool,
+) -> Option<ReplicaServerStats> {
+    let n = reqs.len();
+    let mut input = vec![0i32; batch * IMAGE_ELEMS];
+    for (i, req) in reqs.iter().enumerate() {
+        debug_assert_eq!(req.payload.len(), IMAGE_ELEMS);
+        input[i * IMAGE_ELEMS..(i + 1) * IMAGE_ELEMS].copy_from_slice(&req.payload);
+    }
+    let t0 = Instant::now();
+    let out = match runtime.execute_i32(name, &[&input]) {
+        Ok(o) => o,
+        Err(e) => {
+            eprintln!("server: execution failed: {e:#}");
+            return None;
+        }
+    };
+    let dt = t0.elapsed();
+    for (i, req) in reqs.into_iter().enumerate() {
+        let logits = out[i * classes..(i + 1) * classes].to_vec();
+        let _ = req.reply.send(logits);
+    }
+    let mut delta = ReplicaServerStats {
+        requests: n as u64,
+        batches: 1,
+        exec_micros: dt.as_micros() as u64,
+        attributed_cycles: cycles_per_image * n as u64,
+        weight_copy_cycles: 0,
+    };
+    match dataflow {
+        // Tiling re-copies weights for every image.
+        Dataflow::Tiling => delta.weight_copy_cycles = first_touch * n as u64,
+        // Persistent charges the copy once per warm session, regardless
+        // of how many requests the session then serves.
+        Dataflow::Persistent => {
+            if !*warm {
+                delta.weight_copy_cycles = first_touch;
+                delta.attributed_cycles += first_touch;
+                *warm = true;
+            }
+        }
+    }
+    Some(delta)
+}
+
+/// [`ServerStats`] broken out per shard and per replica
+/// ([`InferenceServer::sharded_stats`]).
+#[derive(Debug, Clone)]
+pub struct ShardedServerStats {
+    pub shards: usize,
+    pub replicas: usize,
+    pub policy: Option<Policy>,
+    pub total: ServerStats,
+    pub per_replica: Vec<ReplicaServerStats>,
+    /// Attributed **compute** cycles per shard (the weight-copy charge
+    /// is bookkept separately in `total.weight_copy_cycles`). Row
+    /// shards run concurrently on disjoint output rows, so the compute
+    /// total splits evenly with the remainder spread over the first
+    /// shards — the breakdown reconciles exactly:
+    /// `sum(per_shard_cycles) + total.weight_copy_cycles ==
+    /// total.attributed_cycles`.
+    pub per_shard_cycles: Vec<u64>,
+}
+
 /// Dynamic-batching inference server over the PJRT runtime.
 pub struct InferenceServer {
     tx: Option<Sender<Request<Image, Logits>>>,
     workers: Vec<JoinHandle<()>>,
     stats: Arc<Mutex<ServerStats>>,
+    /// Per-replica breakdown; empty for the legacy single-group paths.
+    replica_stats: Arc<Mutex<Vec<ReplicaServerStats>>>,
     pub batch_size: usize,
     pub dataflow: Dataflow,
+    /// Model-parallel shard count used for cycle attribution (1 unless
+    /// started via [`InferenceServer::start_sharded`]).
+    pub shards: usize,
+    /// Replica-routing policy (`None` for the legacy pull-model paths,
+    /// whose idle-worker scheduling is emergent least-outstanding).
+    pub policy: Option<Policy>,
 }
 
 impl InferenceServer {
@@ -163,45 +283,18 @@ impl InferenceServer {
                     // execution below runs concurrently across workers.
                     let next = batcher.lock().unwrap().next_batch();
                     let Some(reqs) = next else { break };
-                    let n = reqs.len();
-                    // Pad to the artifact's static batch with zeros.
-                    let mut input = vec![0i32; batch * IMAGE_ELEMS];
-                    for (i, r) in reqs.iter().enumerate() {
-                        let img = &r.payload;
-                        debug_assert_eq!(img.len(), IMAGE_ELEMS);
-                        input[i * IMAGE_ELEMS..(i + 1) * IMAGE_ELEMS].copy_from_slice(img);
-                    }
-                    let t0 = Instant::now();
-                    let out = match runtime.execute_i32(&name, &[&input]) {
-                        Ok(o) => o,
-                        Err(e) => {
-                            eprintln!("server: execution failed: {e:#}");
-                            continue; // drop replies; clients see disconnect
-                        }
-                    };
-                    let dt = t0.elapsed();
-                    for (i, r) in reqs.into_iter().enumerate() {
-                        let logits = out[i * classes..(i + 1) * classes].to_vec();
-                        let _ = r.reply.send(logits);
-                    }
-                    let mut s = stats_w.lock().unwrap();
-                    s.requests += n as u64;
-                    s.batches += 1;
-                    s.exec_micros += dt.as_micros() as u64;
-                    s.attributed_cycles += cycles_per_image * n as u64;
-                    match dataflow {
-                        // Tiling re-copies weights for every image.
-                        Dataflow::Tiling => s.weight_copy_cycles += first_touch * n as u64,
-                        // Persistent charges the copy once per warm
-                        // session, regardless of how many requests the
-                        // session then serves.
-                        Dataflow::Persistent => {
-                            if !warm {
-                                s.weight_copy_cycles += first_touch;
-                                s.attributed_cycles += first_touch;
-                                warm = true;
-                            }
-                        }
+                    if let Some(delta) = execute_batch(
+                        &runtime,
+                        &name,
+                        batch,
+                        classes,
+                        reqs,
+                        cycles_per_image,
+                        first_touch,
+                        dataflow,
+                        &mut warm,
+                    ) {
+                        stats_w.lock().unwrap().add(&delta);
                     }
                 }
             }));
@@ -211,8 +304,171 @@ impl InferenceServer {
             tx: Some(tx),
             workers: handles,
             stats,
+            replica_stats: Arc::new(Mutex::new(Vec::new())),
             batch_size: batch,
             dataflow,
+            shards: 1,
+            policy: None,
+        })
+    }
+
+    /// Start the scale-out configuration: cycle attribution models the
+    /// network row-sharded across `shards` accelerator instances
+    /// ([`network_cycles_sharded`]: compute ceil-divided per shard plus
+    /// a merge term), while `replicas` independent worker groups serve
+    /// traffic. A dispatcher thread owns the batcher and routes each
+    /// formed batch to a replica under `policy` (round-robin, or least
+    /// outstanding batches); every replica owns its PJRT runtime, and —
+    /// when persistent — charges the model's first-touch weight copy
+    /// **once per replica** (each replica pins its own warm copy),
+    /// never per shard and never per request.
+    pub fn start_sharded(
+        artifact_dir: PathBuf,
+        artifact: &str,
+        max_wait: Duration,
+        shards: usize,
+        replicas: usize,
+        dataflow: Dataflow,
+        policy: Policy,
+    ) -> Result<Self> {
+        assert!(shards >= 1, "need at least one shard");
+        assert!(replicas >= 1, "need at least one replica");
+        let manifest = Manifest::load(&artifact_dir)?;
+        let spec = manifest.get(artifact)?.clone();
+        let batch = *spec
+            .input_shapes
+            .first()
+            .and_then(|s| s.first())
+            .context("artifact has no batch dim")?;
+        let classes = spec.meta_usize("classes").unwrap_or(10);
+        let precision = spec.meta_usize("precision").unwrap_or(4);
+        let (tx, batcher) = Batcher::<Image, Logits>::new(batch, max_wait);
+        let stats = Arc::new(Mutex::new(ServerStats::default()));
+        let replica_stats =
+            Arc::new(Mutex::new(vec![ReplicaServerStats::default(); replicas]));
+
+        let net = e2e_network();
+        let cfg = DlaConfig::dla_bramac(
+            Variant::TwoSA,
+            1,
+            2,
+            8,
+            24,
+            Precision::from_bits(precision as u32).unwrap_or(Precision::Int4),
+        );
+        let cycles_per_image = network_cycles_sharded(&net, &cfg, dataflow, shards);
+        let first_touch = first_touch_cycles(&net, &cfg);
+
+        // Per-replica batch queues + outstanding-batch counters. The
+        // dispatcher is the batcher's single consumer (no lock), so
+        // batch formation never contends with routing.
+        let outstanding: Arc<Vec<AtomicU64>> =
+            Arc::new((0..replicas).map(|_| AtomicU64::new(0)).collect());
+        let mut replica_txs = Vec::with_capacity(replicas);
+        let mut replica_rxs = Vec::with_capacity(replicas);
+        for _ in 0..replicas {
+            let (btx, brx) = std::sync::mpsc::channel::<Vec<Request<Image, Logits>>>();
+            replica_txs.push(btx);
+            replica_rxs.push(brx);
+        }
+
+        let mut handles = Vec::with_capacity(replicas + 1);
+        {
+            let outstanding = Arc::clone(&outstanding);
+            handles.push(std::thread::spawn(move || {
+                // A replica whose channel is closed (runtime init
+                // failed) is poisoned with a DEAD counter so neither
+                // policy ever selects it again; its batch fails over
+                // to the next candidate. Only when every replica is
+                // dead is a batch dropped (clients see a disconnect).
+                const DEAD: u64 = u64::MAX;
+                let mut rr_next = 0usize;
+                while let Some(reqs) = batcher.next_batch() {
+                    let mut pending = Some(reqs);
+                    while pending.is_some() {
+                        let target = match policy {
+                            Policy::RoundRobin => {
+                                let mut chosen = None;
+                                for step in 0..replicas {
+                                    let i = (rr_next + step) % replicas;
+                                    if outstanding[i].load(Ordering::SeqCst) != DEAD {
+                                        rr_next = (i + 1) % replicas;
+                                        chosen = Some(i);
+                                        break;
+                                    }
+                                }
+                                chosen
+                            }
+                            Policy::LeastOutstanding => outstanding
+                                .iter()
+                                .enumerate()
+                                .filter(|&(_, c)| c.load(Ordering::SeqCst) != DEAD)
+                                .min_by_key(|&(_, c)| c.load(Ordering::SeqCst))
+                                .map(|(i, _)| i),
+                        };
+                        let Some(target) = target else { break };
+                        outstanding[target].fetch_add(1, Ordering::SeqCst);
+                        match replica_txs[target].send(pending.take().expect("batch pending")) {
+                            Ok(()) => {}
+                            Err(failed) => {
+                                outstanding[target].store(DEAD, Ordering::SeqCst);
+                                pending = Some(failed.0);
+                            }
+                        }
+                    }
+                }
+                // Dropping replica_txs here drains and stops the
+                // replica workers.
+            }));
+        }
+
+        for (r, brx) in replica_rxs.into_iter().enumerate() {
+            let name = artifact.to_string();
+            let dir = artifact_dir.clone();
+            let stats_w = Arc::clone(&stats);
+            let rep_stats = Arc::clone(&replica_stats);
+            let outstanding = Arc::clone(&outstanding);
+            handles.push(std::thread::spawn(move || {
+                let runtime = match Runtime::with_dir(&dir) {
+                    Ok(rt) => rt,
+                    Err(e) => {
+                        eprintln!("server: replica {r} runtime init failed: {e:#}");
+                        return;
+                    }
+                };
+                // Persistent dataflow: this replica is cold until its
+                // first batch pins the model on-chip (the copy is
+                // charged once per replica).
+                let mut warm = false;
+                while let Ok(reqs) = brx.recv() {
+                    if let Some(delta) = execute_batch(
+                        &runtime,
+                        &name,
+                        batch,
+                        classes,
+                        reqs,
+                        cycles_per_image,
+                        first_touch,
+                        dataflow,
+                        &mut warm,
+                    ) {
+                        stats_w.lock().unwrap().add(&delta);
+                        rep_stats.lock().unwrap()[r].add(&delta);
+                    }
+                    outstanding[r].fetch_sub(1, Ordering::SeqCst);
+                }
+            }));
+        }
+
+        Ok(InferenceServer {
+            tx: Some(tx),
+            workers: handles,
+            stats,
+            replica_stats,
+            batch_size: batch,
+            dataflow,
+            shards,
+            policy: Some(policy),
         })
     }
 
@@ -225,6 +481,36 @@ impl InferenceServer {
         *self.stats.lock().unwrap()
     }
 
+    /// Per-replica breakdown (empty unless started via
+    /// [`InferenceServer::start_sharded`]).
+    pub fn replica_breakdown(&self) -> Vec<ReplicaServerStats> {
+        self.replica_stats.lock().unwrap().clone()
+    }
+
+    /// The full sharded view: totals plus per-shard / per-replica
+    /// breakdowns.
+    pub fn sharded_stats(&self) -> ShardedServerStats {
+        let total = *self.stats.lock().unwrap();
+        let per_replica = self.replica_stats.lock().unwrap().clone();
+        let replicas = per_replica.len().max(1);
+        // Compute-only cycles split across shards, remainder spread
+        // over the first shards, so the breakdown sums back exactly
+        // (see the field doc on `per_shard_cycles`).
+        let compute = total.attributed_cycles.saturating_sub(total.weight_copy_cycles);
+        let shards_u64 = self.shards as u64;
+        let per_shard_cycles = (0..shards_u64)
+            .map(|s| compute / shards_u64 + u64::from(s < compute % shards_u64))
+            .collect();
+        ShardedServerStats {
+            shards: self.shards,
+            replicas,
+            policy: self.policy,
+            total,
+            per_replica,
+            per_shard_cycles,
+        }
+    }
+
     /// Drain and stop.
     pub fn shutdown(mut self) -> ServerStats {
         drop(self.tx.take());
@@ -233,6 +519,15 @@ impl InferenceServer {
         }
         let s = *self.stats.lock().unwrap();
         s
+    }
+
+    /// Drain, stop, and return the per-shard / per-replica breakdown.
+    pub fn shutdown_sharded(mut self) -> ShardedServerStats {
+        drop(self.tx.take());
+        for w in self.workers.drain(..) {
+            let _ = w.join();
+        }
+        self.sharded_stats()
     }
 }
 

@@ -1,0 +1,457 @@
+//! Row-sharded model parallelism: one logical GEMV spread across
+//! multiple independent [`BlockPool`]s.
+//!
+//! BRAMAC's device-level claim is that throughput scales with the
+//! *number* of compute-enabled BRAMs; [`ShardedPool`] extends that past
+//! a single pool (one device / SLR / chiplet) by partitioning the
+//! weight matrix into contiguous **output-row ranges**, one per shard.
+//! Each shard owns its rows' tiles outright, so shards share nothing —
+//! they are dispatched concurrently (one scoped thread per shard) and
+//! the merge is a deterministic concatenation of disjoint row slices
+//! plus [`ScheduleStats::merge_shard`] in shard order.
+//!
+//! Row ranges are aligned to the precision's lane count
+//! ([`shard_rows`]), so every shard tiles exactly the row groups it
+//! would have tiled inside a single pool. Integer accumulation is
+//! exact in any grouping, which makes sharded execution **bit-identical**
+//! to single-pool execution across every variant × precision ×
+//! signedness × dataflow combination — asserted in
+//! `tests/sharded_pool.rs`.
+//!
+//! Both dataflows thread through:
+//!
+//! * **Tiling** — each shard streams its row slice's tiles through its
+//!   own pool ([`ShardedPool::run_gemv_signed`]).
+//! * **Persistent** — [`ShardedPool::pin`] pins one
+//!   [`ResidentModel`] row shard per pool
+//!   ([`ResidentModel::pin_rows`]); dispatches then run against the
+//!   resident words with zero per-dispatch copy traffic.
+
+use anyhow::Result;
+
+use crate::arch::Precision;
+use crate::bramac::Variant;
+use crate::quant::IntMatrix;
+use crate::storage::resident::ResidentModel;
+
+use super::scheduler::{BlockPool, ScheduleStats};
+
+/// Partition `m` output rows into `shards` contiguous ranges, aligned
+/// to `lanes`-row groups (a tile spans `lanes` rows, so alignment keeps
+/// every shard's tiles identical to the single-pool tiling of the same
+/// rows). Returns `(row0, rows)` per shard in shard order; ranges are
+/// balanced to within one group, and trailing shards are empty
+/// (`rows == 0`) when there are more shards than row groups.
+pub fn shard_rows(m: usize, lanes: usize, shards: usize) -> Vec<(usize, usize)> {
+    assert!(m > 0, "empty matrix");
+    assert!(lanes > 0);
+    assert!(shards > 0, "need at least one shard");
+    let groups = m.div_ceil(lanes);
+    let base = groups / shards;
+    let extra = groups % shards;
+    let mut ranges = Vec::with_capacity(shards);
+    let mut group0 = 0usize;
+    for shard in 0..shards {
+        let take = base + usize::from(shard < extra);
+        let row0 = (group0 * lanes).min(m);
+        let row1 = ((group0 + take) * lanes).min(m);
+        ranges.push((row0, row1 - row0));
+        group0 += take;
+    }
+    ranges
+}
+
+/// A weight matrix pinned across a sharded pool: one resident row shard
+/// per inner pool (empty shards hold nothing).
+#[derive(Debug, Clone)]
+pub struct ShardedResident {
+    pub m: usize,
+    pub n: usize,
+    pub precision: Precision,
+    pub variant: Variant,
+    parts: Vec<Option<ResidentModel>>,
+    /// Total words copied on-chip at pin time, summed across shards —
+    /// the one-time first-touch cost of the whole sharded layout.
+    pub pinned_words: u64,
+}
+
+impl ShardedResident {
+    pub fn shards(&self) -> usize {
+        self.parts.len()
+    }
+
+    /// Shard `i`'s resident layout (`None` for an empty shard).
+    pub fn part(&self, shard: usize) -> Option<&ResidentModel> {
+        self.parts[shard].as_ref()
+    }
+}
+
+/// N independent [`BlockPool`]s executing one logical GEMV by
+/// contiguous output-row ranges. `shards == 1` degenerates to a plain
+/// pool (same results, same stats).
+pub struct ShardedPool {
+    pub variant: Variant,
+    pools: Vec<BlockPool>,
+}
+
+impl ShardedPool {
+    /// `shards` pools of `blocks_per_shard` blocks each.
+    pub fn new(
+        variant: Variant,
+        shards: usize,
+        blocks_per_shard: usize,
+        precision: Precision,
+    ) -> Self {
+        assert!(shards > 0, "need at least one shard");
+        let pools = (0..shards)
+            .map(|_| BlockPool::new(variant, blocks_per_shard, precision))
+            .collect();
+        ShardedPool { variant, pools }
+    }
+
+    /// Builder-style per-pool worker-thread count: every shard's pool
+    /// shards its own tile plan across `threads` workers, on top of the
+    /// one-thread-per-shard dispatch. Bit-exact like
+    /// [`BlockPool::with_threads`].
+    pub fn with_pool_threads(mut self, threads: usize) -> Self {
+        for pool in &mut self.pools {
+            pool.set_threads(threads);
+        }
+        self
+    }
+
+    pub fn shards(&self) -> usize {
+        self.pools.len()
+    }
+
+    /// Shard `i`'s pool (diagnostics: plan-cache counters, geometry).
+    pub fn pool(&self, shard: usize) -> &BlockPool {
+        &self.pools[shard]
+    }
+
+    /// Blocks across all shards.
+    pub fn total_blocks(&self) -> usize {
+        self.pools.iter().map(BlockPool::len).sum()
+    }
+
+    /// Sharded `y = W · x` with signed inputs (see
+    /// [`ShardedPool::run_gemv_signed`]).
+    pub fn run_gemv(&mut self, w: &IntMatrix, x: &[i64]) -> (Vec<i64>, ScheduleStats) {
+        self.run_gemv_signed(w, x, true)
+    }
+
+    /// Sharded GEMV in the tiling dataflow: shard `i` streams the tiles
+    /// of its own row slice through its own pool, concurrently with
+    /// every other shard. Bit-identical to a single pool running the
+    /// whole matrix.
+    ///
+    /// Each dispatch materializes the per-shard row slices (one copy of
+    /// the matrix in total, split across shards) before streaming — the
+    /// host-side analogue of shipping each device its weights, inherent
+    /// to the streaming dataflow. Serving traffic that re-dispatches one
+    /// model should pin it instead ([`ShardedPool::pin`]): the resident
+    /// path slices once at pin time and dispatches copy-free.
+    pub fn run_gemv_signed(
+        &mut self,
+        w: &IntMatrix,
+        x: &[i64],
+        signed_inputs: bool,
+    ) -> (Vec<i64>, ScheduleStats) {
+        assert_eq!(x.len(), w.cols);
+        let ranges = shard_rows(w.rows, w.precision.lanes_per_word(), self.pools.len());
+        let work: Vec<Option<IntMatrix>> = ranges
+            .iter()
+            .map(|&(row0, rows)| (rows > 0).then(|| w.row_slice(row0, rows)))
+            .collect();
+        let per_shard = run_shards(&mut self.pools, work, |pool, ws| {
+            pool.run_gemv_signed(&ws, x, signed_inputs)
+        });
+        merge_gemv(w.rows, &ranges, per_shard)
+    }
+
+    /// Sharded batch-2 MVM on BRAMAC-2SA (both input vectors against
+    /// every shard's row slice). Panics unless the variant is
+    /// [`Variant::TwoSA`].
+    pub fn run_mvm_batch2_signed(
+        &mut self,
+        w: &IntMatrix,
+        x0: &[i64],
+        x1: &[i64],
+        signed_inputs: bool,
+    ) -> ([Vec<i64>; 2], ScheduleStats) {
+        assert_eq!(x0.len(), w.cols);
+        assert_eq!(x1.len(), w.cols);
+        let ranges = shard_rows(w.rows, w.precision.lanes_per_word(), self.pools.len());
+        let work: Vec<Option<IntMatrix>> = ranges
+            .iter()
+            .map(|&(row0, rows)| (rows > 0).then(|| w.row_slice(row0, rows)))
+            .collect();
+        let per_shard = run_shards(&mut self.pools, work, |pool, ws| {
+            pool.run_mvm_batch2_signed(&ws, x0, x1, signed_inputs)
+        });
+        merge_batch2(w.rows, &ranges, per_shard)
+    }
+
+    /// Pin one row shard of `w` per pool (the persistent dataflow's
+    /// one-time first touch, sharded). Fails if any shard's slice
+    /// exceeds its pool's on-chip capacity.
+    pub fn pin(&mut self, w: &IntMatrix) -> Result<ShardedResident> {
+        let ranges = shard_rows(w.rows, w.precision.lanes_per_word(), self.pools.len());
+        let mut parts = Vec::with_capacity(self.pools.len());
+        let mut pinned_words = 0u64;
+        for (shard, &(row0, rows)) in ranges.iter().enumerate() {
+            if rows == 0 {
+                parts.push(None);
+                continue;
+            }
+            let rm = ResidentModel::pin_rows(&mut self.pools[shard], w, row0, rows)?;
+            pinned_words += rm.pinned_words;
+            parts.push(Some(rm));
+        }
+        Ok(ShardedResident {
+            m: w.rows,
+            n: w.cols,
+            precision: w.precision,
+            variant: self.variant,
+            parts,
+            pinned_words,
+        })
+    }
+
+    /// Persistent-dataflow sharded GEMV against a layout pinned by
+    /// [`ShardedPool::pin`]: zero weight-copy and zero exposed-load
+    /// cycles per dispatch, bit-identical to the tiling path.
+    pub fn run_gemv_resident(
+        &mut self,
+        sr: &ShardedResident,
+        x: &[i64],
+        signed_inputs: bool,
+    ) -> (Vec<i64>, ScheduleStats) {
+        self.check_resident(sr);
+        assert_eq!(x.len(), sr.n);
+        let (ranges, work) = resident_work(sr);
+        let per_shard = run_shards(&mut self.pools, work, |pool, rm| {
+            pool.run_gemv_resident(rm, x, signed_inputs)
+        });
+        merge_gemv(sr.m, &ranges, per_shard)
+    }
+
+    /// Persistent-dataflow sharded batch-2 MVM (see
+    /// [`ShardedPool::run_gemv_resident`]).
+    pub fn run_mvm_batch2_resident(
+        &mut self,
+        sr: &ShardedResident,
+        x0: &[i64],
+        x1: &[i64],
+        signed_inputs: bool,
+    ) -> ([Vec<i64>; 2], ScheduleStats) {
+        self.check_resident(sr);
+        assert_eq!(x0.len(), sr.n);
+        assert_eq!(x1.len(), sr.n);
+        let (ranges, work) = resident_work(sr);
+        let per_shard = run_shards(&mut self.pools, work, |pool, rm| {
+            pool.run_mvm_batch2_resident(rm, x0, x1, signed_inputs)
+        });
+        merge_batch2(sr.m, &ranges, per_shard)
+    }
+
+    fn check_resident(&self, sr: &ShardedResident) {
+        assert_eq!(
+            sr.shards(),
+            self.pools.len(),
+            "resident layout was pinned for a different shard count"
+        );
+        assert_eq!(sr.variant, self.variant, "resident layout pinned for another variant");
+    }
+}
+
+/// Rebuild each shard's `(row0, rows)` range and borrow its resident
+/// part as the dispatch work item.
+fn resident_work(sr: &ShardedResident) -> (Vec<(usize, usize)>, Vec<Option<&ResidentModel>>) {
+    let ranges = sr
+        .parts
+        .iter()
+        .map(|part| part.as_ref().map_or((0, 0), |rm| (rm.row_offset, rm.m)))
+        .collect();
+    let work = sr.parts.iter().map(Option::as_ref).collect();
+    (ranges, work)
+}
+
+/// Run `f` on every (pool, work item) pair — one scoped thread per
+/// non-empty shard — and return the results in shard order regardless
+/// of scheduling. Empty shards (`None` work) are skipped.
+fn run_shards<W, R, F>(pools: &mut [BlockPool], work: Vec<Option<W>>, f: F) -> Vec<Option<R>>
+where
+    W: Send,
+    R: Send,
+    F: Fn(&mut BlockPool, W) -> R + Sync,
+{
+    if pools.len() <= 1 {
+        return pools
+            .iter_mut()
+            .zip(work)
+            .map(|(pool, item)| item.map(|item| f(pool, item)))
+            .collect();
+    }
+    std::thread::scope(|s| {
+        let handles: Vec<_> = pools
+            .iter_mut()
+            .zip(work)
+            .map(|(pool, item)| {
+                let f = &f;
+                s.spawn(move || item.map(|item| f(pool, item)))
+            })
+            .collect();
+        handles
+            .into_iter()
+            .map(|h| h.join().expect("shard worker panicked"))
+            .collect()
+    })
+}
+
+/// Deterministic merge of per-shard GEMV results: disjoint row slices
+/// concatenate; stats merge in shard order.
+fn merge_gemv(
+    m: usize,
+    ranges: &[(usize, usize)],
+    per_shard: Vec<Option<(Vec<i64>, ScheduleStats)>>,
+) -> (Vec<i64>, ScheduleStats) {
+    let mut y = vec![0i64; m];
+    let mut stats = ScheduleStats::default();
+    for (&(row0, rows), result) in ranges.iter().zip(per_shard) {
+        let Some((ys, s)) = result else { continue };
+        debug_assert_eq!(ys.len(), rows);
+        y[row0..row0 + rows].copy_from_slice(&ys);
+        stats.merge_shard(&s);
+    }
+    (y, stats)
+}
+
+/// Deterministic merge for the batch-2 path (two output vectors).
+fn merge_batch2(
+    m: usize,
+    ranges: &[(usize, usize)],
+    per_shard: Vec<Option<([Vec<i64>; 2], ScheduleStats)>>,
+) -> ([Vec<i64>; 2], ScheduleStats) {
+    let mut y = [vec![0i64; m], vec![0i64; m]];
+    let mut stats = ScheduleStats::default();
+    for (&(row0, rows), result) in ranges.iter().zip(per_shard) {
+        let Some((ys, s)) = result else { continue };
+        for v in 0..2 {
+            debug_assert_eq!(ys[v].len(), rows);
+            y[v][row0..row0 + rows].copy_from_slice(&ys[v]);
+        }
+        stats.merge_shard(&s);
+    }
+    (y, stats)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::quant::random_vector;
+    use crate::util::Rng;
+
+    #[test]
+    fn shard_rows_covers_every_row_exactly_once() {
+        for (m, lanes) in [(1, 10), (53, 10), (80, 5), (45, 20), (7, 20)] {
+            for shards in [1usize, 2, 3, 7, 11] {
+                let ranges = shard_rows(m, lanes, shards);
+                assert_eq!(ranges.len(), shards);
+                let mut next = 0usize;
+                for &(row0, rows) in &ranges {
+                    if rows == 0 {
+                        continue;
+                    }
+                    assert_eq!(row0, next, "m={m} lanes={lanes} shards={shards}");
+                    // Lane alignment: every non-final range starts on a
+                    // group boundary.
+                    assert_eq!(row0 % lanes, 0);
+                    next = row0 + rows;
+                }
+                assert_eq!(next, m, "m={m} lanes={lanes} shards={shards}");
+            }
+        }
+    }
+
+    #[test]
+    fn shard_rows_balances_within_one_group() {
+        let ranges = shard_rows(100, 10, 3);
+        // 10 groups over 3 shards: 4 + 3 + 3.
+        assert_eq!(ranges, vec![(0, 40), (40, 30), (70, 30)]);
+    }
+
+    #[test]
+    fn more_shards_than_groups_leaves_trailing_shards_empty() {
+        // 2-bit lanes=20: 45 rows = 3 groups, 7 shards.
+        let ranges = shard_rows(45, 20, 7);
+        let non_empty: Vec<_> = ranges.iter().filter(|&&(_, r)| r > 0).collect();
+        assert_eq!(non_empty.len(), 3);
+        assert!(ranges[3..].iter().all(|&(_, r)| r == 0));
+    }
+
+    #[test]
+    fn sharded_gemv_matches_reference_and_single_pool() {
+        let mut rng = Rng::seed_from_u64(0x54a2d);
+        let p = Precision::Int4;
+        let (m, n) = (53, 96);
+        let w = IntMatrix::random(&mut rng, m, n, p);
+        let x = random_vector(&mut rng, n, p, true);
+        let mut single = BlockPool::new(Variant::OneDA, 6, p);
+        let (y_single, _) = single.run_gemv(&w, &x);
+        assert_eq!(y_single, w.gemv_ref(&x));
+        for shards in [1usize, 2, 3] {
+            let mut sp = ShardedPool::new(Variant::OneDA, shards, 2, p);
+            let (y, stats) = sp.run_gemv(&w, &x);
+            assert_eq!(y, y_single, "shards={shards}");
+            assert!(stats.makespan_cycles > 0);
+            assert!(stats.weight_copy_cycles > 0, "tiling streams weights");
+        }
+    }
+
+    #[test]
+    fn sharded_dispatch_is_deterministic() {
+        let mut rng = Rng::seed_from_u64(0xde7);
+        let p = Precision::Int8;
+        let w = IntMatrix::random(&mut rng, 40, 128, p);
+        let x = random_vector(&mut rng, 128, p, true);
+        let mut a = ShardedPool::new(Variant::TwoSA, 3, 2, p);
+        let mut b = ShardedPool::new(Variant::TwoSA, 3, 2, p).with_pool_threads(4);
+        let (ya, sa) = a.run_gemv(&w, &x);
+        let (yb, sb) = b.run_gemv(&w, &x);
+        assert_eq!(ya, yb, "pool threads must not change results");
+        assert_eq!(sa, sb, "pool threads must not change stats");
+        // Repeat dispatch: identical stats (plan-cache hit included).
+        let (ya2, sa2) = a.run_gemv(&w, &x);
+        assert_eq!((ya2, sa2), (ya, sa));
+    }
+
+    #[test]
+    fn sharded_pin_and_resident_dispatch_skip_copies() {
+        let mut rng = Rng::seed_from_u64(0x9e5d);
+        let p = Precision::Int4;
+        let w = IntMatrix::random(&mut rng, 53, 96, p);
+        let x = random_vector(&mut rng, 96, p, true);
+        let mut sp = ShardedPool::new(Variant::OneDA, 3, 2, p);
+        let sr = sp.pin(&w).expect("fits");
+        assert_eq!(sr.shards(), 3);
+        assert!(sr.pinned_words > 0);
+        let (y, stats) = sp.run_gemv_resident(&sr, &x, true);
+        assert_eq!(y, w.gemv_ref(&x));
+        assert_eq!(stats.weight_copy_cycles, 0);
+        assert_eq!(stats.exposed_load_cycles, 0);
+    }
+
+    #[test]
+    #[should_panic(expected = "different shard count")]
+    fn resident_layout_is_bound_to_its_shard_count() {
+        let mut rng = Rng::seed_from_u64(0xbad);
+        let p = Precision::Int4;
+        let w = IntMatrix::random(&mut rng, 40, 64, p);
+        let x = random_vector(&mut rng, 64, p, true);
+        let mut a = ShardedPool::new(Variant::OneDA, 2, 2, p);
+        let sr = a.pin(&w).unwrap();
+        let mut b = ShardedPool::new(Variant::OneDA, 3, 2, p);
+        let _ = b.run_gemv_resident(&sr, &x, true);
+    }
+}

@@ -123,6 +123,58 @@ pub fn first_touch_cycles(net: &Network, cfg: &DlaConfig) -> u64 {
     }
 }
 
+/// Cycles for one layer row-sharded across `shards` accelerator
+/// instances ([`crate::coordinator::ShardedPool`]'s deployment shape):
+/// each shard computes a disjoint slice of the layer's output rows, so
+/// per-shard compute is the ceil-divided share of the layer, plus a
+/// merge term — one handoff cycle per extra shard to concatenate /
+/// synchronize the partial outputs (row sharding has no reduction).
+/// `shards == 1` is exactly [`layer_cycles_with`].
+pub fn layer_cycles_sharded(
+    layer: &ConvLayer,
+    cfg: &DlaConfig,
+    dataflow: Dataflow,
+    shards: usize,
+) -> u64 {
+    assert!(shards > 0, "need at least one shard");
+    let base = layer_cycles_with(layer, cfg, dataflow);
+    if shards <= 1 {
+        return base;
+    }
+    base.div_ceil(shards as u64) + (shards as u64 - 1)
+}
+
+/// Total network cycles row-sharded across `shards` instances.
+pub fn network_cycles_sharded(
+    net: &Network,
+    cfg: &DlaConfig,
+    dataflow: Dataflow,
+    shards: usize,
+) -> u64 {
+    net.layers
+        .iter()
+        .map(|l| layer_cycles_sharded(l, cfg, dataflow, shards))
+        .sum()
+}
+
+/// The merge overhead inside [`network_cycles_sharded`]: the cycles
+/// that do not shrink with more shards (one handoff per extra shard
+/// per layer).
+pub fn shard_merge_cycles(net: &Network, shards: usize) -> u64 {
+    if shards <= 1 {
+        0
+    } else {
+        (shards as u64 - 1) * net.layers.len() as u64
+    }
+}
+
+/// One-time weight-copy cycles for a replica group: each replica pins
+/// the full network across its shards, so the first touch is charged
+/// once **per replica** — never per shard, never per request.
+pub fn replica_first_touch_cycles(net: &Network, cfg: &DlaConfig, replicas: usize) -> u64 {
+    first_touch_cycles(net, cfg) * replicas as u64
+}
+
 /// Evaluate many configurations at once, fanned out across worker
 /// threads (the DSE hot loop); results come back in input order, so the
 /// batch is bit-identical to mapping [`network_cycles`] sequentially.
@@ -209,6 +261,52 @@ mod tests {
                 assert_eq!(first_touch_cycles(&net, &dla), 0);
             }
         }
+    }
+
+    #[test]
+    fn one_shard_is_the_unsharded_model() {
+        let net = alexnet();
+        let cfg = DlaConfig::dla_bramac(Variant::TwoSA, 2, 2, 16, 64, Precision::Int4);
+        for df in Dataflow::ALL {
+            assert_eq!(
+                network_cycles_sharded(&net, &cfg, df, 1),
+                network_cycles_with(&net, &cfg, df)
+            );
+        }
+        assert_eq!(shard_merge_cycles(&net, 1), 0);
+    }
+
+    #[test]
+    fn shards_shrink_cycles_down_to_the_merge_floor() {
+        let net = alexnet();
+        let cfg = DlaConfig::dla_bramac(Variant::TwoSA, 2, 2, 16, 64, Precision::Int4);
+        for df in Dataflow::ALL {
+            let mut prev = network_cycles_sharded(&net, &cfg, df, 1);
+            for shards in [2usize, 4, 8] {
+                let c = network_cycles_sharded(&net, &cfg, df, shards);
+                assert!(c < prev, "{df:?} shards={shards}: {c} !< {prev}");
+                // The merge term never shrinks with shard count.
+                assert!(c > shard_merge_cycles(&net, shards));
+                prev = c;
+            }
+        }
+        // The speedup is sublinear: 8 shards pay 7 merge handoffs per
+        // layer on top of the ceil-divided compute.
+        let c1 = network_cycles_sharded(&net, &cfg, Dataflow::Tiling, 1);
+        let c8 = network_cycles_sharded(&net, &cfg, Dataflow::Tiling, 8);
+        assert!((c1 as f64 / c8 as f64) < 8.0 + 1e-9);
+    }
+
+    #[test]
+    fn replica_copy_is_charged_per_replica() {
+        let net = alexnet();
+        let cfg = DlaConfig::dla_bramac(Variant::TwoSA, 2, 2, 16, 64, Precision::Int4);
+        let one = first_touch_cycles(&net, &cfg);
+        assert_eq!(replica_first_touch_cycles(&net, &cfg, 1), one);
+        assert_eq!(replica_first_touch_cycles(&net, &cfg, 4), 4 * one);
+        // The pure-DSP DLA pins nothing, replicated or not.
+        let dla = DlaConfig::dla(2, 16, 64, Precision::Int4);
+        assert_eq!(replica_first_touch_cycles(&net, &dla, 4), 0);
     }
 
     #[test]

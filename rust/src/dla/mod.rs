@@ -13,8 +13,9 @@ pub mod validate;
 pub use compare::{compare_all, CompareRow};
 pub use config::{AccelKind, DlaConfig};
 pub use cycle::{
-    first_touch_cycles, layer_cycles, layer_cycles_with, network_cycles, network_cycles_batch,
-    network_cycles_with, Dataflow,
+    first_touch_cycles, layer_cycles, layer_cycles_sharded, layer_cycles_with, network_cycles,
+    network_cycles_batch, network_cycles_sharded, network_cycles_with,
+    replica_first_touch_cycles, shard_merge_cycles, Dataflow,
 };
 pub use dse::{explore, DseResult};
 pub use models::{alexnet, resnet34, ConvLayer, Network};

@@ -12,13 +12,14 @@ use bramac::arch::Precision;
 use bramac::bramac::Variant;
 use bramac::coordinator::batcher::submit_and_wait;
 use bramac::coordinator::server::{InferenceServer, IMAGE_ELEMS};
-use bramac::coordinator::BlockPool;
+use bramac::coordinator::{BlockPool, Policy, ShardedPool};
 use bramac::dla::Dataflow;
 use bramac::gemv::{fig11_sweep, ComputeStyle};
 use bramac::quant::{random_vector, IntMatrix};
 use bramac::report;
 use bramac::runtime::Manifest;
 use bramac::storage::ResidentModel;
+use bramac::util::bench::compare_bench_json;
 use bramac::util::Rng;
 
 const HELP: &str = "\
@@ -43,19 +44,35 @@ experiment regeneration (paper tables & figures):
 drivers:
   gemv [--m M] [--n N] [--bits B] [--blocks K] [--variant 2sa|1da]
        [--threads T] [--dataflow tiling|persistent] [--repeat R]
+       [--shards S]
                   run exact GEMVs on a simulated BRAMAC block pool
                   (T worker threads shard the tile plan; 0 = all cores).
                   persistent pins the weights on-chip once and reruns
                   against the resident words (auto-grows --blocks to
                   fit if --blocks was not given); R repeats the same
-                  dispatch to show plan-cache + copy savings
+                  dispatch to show plan-cache + copy savings. S > 1
+                  row-shards the matrix over S pools of K blocks each
+                  (bit-identical to a single pool, makespan = max shard)
   serve [--requests R] [--window-ms W] [--workers N]
-        [--dataflow tiling|persistent]
+        [--dataflow tiling|persistent] [--shards S] [--replicas G]
+        [--policy round-robin|least-outstanding]
                   start the batched PJRT inference server on a
                   synthetic request stream and report throughput
                   (persistent = warm sessions: weight copies charged
-                  once per worker, not per image)
+                  once per worker, not per image). S/G > 1 switches to
+                  the sharded server: cycle attribution models S row
+                  shards, and a dispatcher routes batches across G
+                  replica groups under the chosen policy, with stats
+                  broken out per shard/replica
   check           verify artifacts + PJRT runtime are functional
+  bench-check --current F [--baseline BENCH_pr3.json] [--tolerance 0.2]
+              [--absolute]
+                  compare a bench-trajectory JSON (written by cargo
+                  bench with BENCH_JSON=F) against the committed
+                  baseline and fail on wall-time regressions beyond the
+                  tolerance; by default ratios are normalized by the
+                  suite geomean so a uniformly slower CI host does not
+                  trip the gate (--absolute disables that)
 ";
 
 fn main() {
@@ -115,6 +132,7 @@ fn run(args: &[String]) -> Result<()> {
         "gemv" => cmd_gemv(&args[1..])?,
         "serve" => cmd_serve(&args[1..])?,
         "check" => cmd_check()?,
+        "bench-check" => cmd_bench_check(&args[1..])?,
         other => bail!("unknown command '{other}' (try `bramac-sim help`)"),
     }
     Ok(())
@@ -143,10 +161,17 @@ fn cmd_gemv(args: &[String]) -> Result<()> {
         v => bail!("--variant must be 2sa or 1da, got {v}"),
     };
     let repeat = repeat.max(1);
+    let shards: usize = flag(args, "--shards", 1)?;
     let mut rng = Rng::seed_from_u64(0xce11);
     let w = IntMatrix::random(&mut rng, m, n, p);
     let x = random_vector(&mut rng, n, p, true);
     let y_ref = w.gemv_ref(&x);
+
+    if shards > 1 {
+        return gemv_sharded(
+            &w, &x, &y_ref, variant, shards, blocks, blocks_given, threads, dataflow, repeat,
+        );
+    }
 
     // Persistent mode pins the weights once; if --blocks wasn't given,
     // grow the pool until the resident layout fits on-chip.
@@ -233,25 +258,140 @@ fn cmd_gemv(args: &[String]) -> Result<()> {
     Ok(())
 }
 
+/// `gemv --shards S`: the row-sharded scale-out path. `blocks` counts
+/// blocks **per shard**; persistent mode grows it until every shard's
+/// row slice fits on-chip (when `--blocks` was not given explicitly).
+#[allow(clippy::too_many_arguments)]
+fn gemv_sharded(
+    w: &IntMatrix,
+    x: &[i64],
+    y_ref: &[i64],
+    variant: Variant,
+    shards: usize,
+    mut blocks: usize,
+    blocks_given: bool,
+    threads: usize,
+    dataflow: Dataflow,
+    repeat: usize,
+) -> Result<()> {
+    let (m, n, p) = (w.rows, w.cols, w.precision);
+    let (mut pool, resident) = match dataflow {
+        Dataflow::Tiling => (
+            ShardedPool::new(variant, shards, blocks, p).with_pool_threads(threads),
+            None,
+        ),
+        Dataflow::Persistent => loop {
+            let mut pool =
+                ShardedPool::new(variant, shards, blocks, p).with_pool_threads(threads);
+            match pool.pin(w) {
+                Ok(sr) => break (pool, Some(sr)),
+                Err(_) if !blocks_given && blocks < 65_536 => blocks *= 2,
+                Err(e) => return Err(e),
+            }
+        },
+    };
+
+    let t0 = std::time::Instant::now();
+    let mut last_stats = None;
+    let mut copy_cycles = resident.as_ref().map_or(0, |sr| sr.pinned_words);
+    for _ in 0..repeat {
+        let (y, stats) = match &resident {
+            Some(sr) => pool.run_gemv_resident(sr, x, true),
+            None => pool.run_gemv(w, x),
+        };
+        assert_eq!(y, y_ref, "sharded result must be bit-identical to the reference");
+        copy_cycles += stats.weight_copy_cycles;
+        last_stats = Some(stats);
+    }
+    let dt = t0.elapsed();
+    let stats = last_stats.expect("repeat >= 1");
+    println!(
+        "GEMV {m}x{n} @ {p} row-sharded over {shards} shards x {blocks} {} blocks \
+         ({} dataflow, {repeat} dispatches): bit-exact vs reference",
+        variant.name(),
+        dataflow.name()
+    );
+    println!(
+        "  per dispatch: tiles={} mac2s={} makespan={} cycles (max over shards) \
+         exposed-loads={} copy={} ({} host µs total)",
+        stats.tiles,
+        stats.mac2s,
+        stats.makespan_cycles,
+        stats.exposed_load_cycles,
+        stats.weight_copy_cycles,
+        dt.as_micros()
+    );
+    println!(
+        "  total weight-copy cycles over {repeat} dispatches: {copy_cycles}{}",
+        if resident.is_some() { " (one-time sharded pin; 0 per dispatch)" } else { "" }
+    );
+    let hits: u64 = (0..pool.shards()).map(|s| pool.pool(s).plan_cache().hits()).sum();
+    let misses: u64 = (0..pool.shards()).map(|s| pool.pool(s).plan_cache().misses()).sum();
+    if repeat > 1 && resident.is_none() {
+        println!("  plan caches across shards: {hits} hits / {misses} misses");
+    }
+    let fmax = variant.fmax_mhz(&bramac::arch::FreqModel::default());
+    println!(
+        "  simulated time at {:.0} MHz: {:.2} µs  ({:.2} GMAC/s effective across {} blocks)",
+        fmax,
+        stats.makespan_cycles as f64 / fmax,
+        (m * n) as f64 / (stats.makespan_cycles as f64 / fmax) / 1e3,
+        pool.total_blocks()
+    );
+    Ok(())
+}
+
 fn cmd_serve(args: &[String]) -> Result<()> {
     let requests: usize = flag(args, "--requests", 64)?;
     let window_ms: u64 = flag(args, "--window-ms", 10)?;
     let workers: usize = flag(args, "--workers", 1)?;
     let dataflow: Dataflow = flag(args, "--dataflow", Dataflow::Tiling)?;
+    let shards: usize = flag::<usize>(args, "--shards", 1)?.max(1);
+    let replicas: usize = flag::<usize>(args, "--replicas", 1)?.max(1);
+    let policy: Policy = flag(args, "--policy", Policy::LeastOutstanding)?;
+    let sharded = shards > 1 || replicas > 1 || args.iter().any(|a| a == "--policy");
+    if sharded && args.iter().any(|a| a == "--workers") {
+        println!(
+            "note: --workers applies to the legacy server only; the sharded server's \
+             execution parallelism is --replicas (using {replicas} replica worker groups)"
+        );
+    }
     let dir = Manifest::default_dir();
-    let server = InferenceServer::start_with_dataflow(
-        dir,
-        "model",
-        Duration::from_millis(window_ms),
-        workers.max(1),
-        dataflow,
-    )?;
-    println!(
-        "serving synthetic stream: {requests} requests, batch={} window={window_ms}ms workers={} dataflow={}",
-        server.batch_size,
-        workers.max(1),
-        dataflow.name()
-    );
+    let server = if sharded {
+        InferenceServer::start_sharded(
+            dir,
+            "model",
+            Duration::from_millis(window_ms),
+            shards,
+            replicas,
+            dataflow,
+            policy,
+        )?
+    } else {
+        InferenceServer::start_with_dataflow(
+            dir,
+            "model",
+            Duration::from_millis(window_ms),
+            workers.max(1),
+            dataflow,
+        )?
+    };
+    if sharded {
+        println!(
+            "serving synthetic stream: {requests} requests, batch={} window={window_ms}ms \
+             shards={shards} replicas={replicas} policy={} dataflow={}",
+            server.batch_size,
+            policy.name(),
+            dataflow.name()
+        );
+    } else {
+        println!(
+            "serving synthetic stream: {requests} requests, batch={} window={window_ms}ms workers={} dataflow={}",
+            server.batch_size,
+            workers.max(1),
+            dataflow.name()
+        );
+    }
     let t0 = std::time::Instant::now();
     let mut rng = Rng::seed_from_u64(0x5eed);
     let mut handles = Vec::new();
@@ -276,7 +416,12 @@ fn cmd_serve(args: &[String]) -> Result<()> {
         top1[argmax] += 1;
     }
     let wall = t0.elapsed();
-    let stats = server.shutdown();
+    let (stats, breakdown) = if sharded {
+        let ss = server.shutdown_sharded();
+        (ss.total, Some(ss))
+    } else {
+        (server.shutdown(), None)
+    };
     println!(
         "done: {} requests in {} batches, wall {:.1} ms ({:.1} req/s)",
         stats.requests,
@@ -292,7 +437,92 @@ fn cmd_serve(args: &[String]) -> Result<()> {
         stats.weight_copy_cycles,
         dataflow.name()
     );
+    if let Some(ss) = breakdown {
+        println!(
+            "  shard attribution: {} shards, {} compute cycles each (concurrent row slices)",
+            ss.shards,
+            ss.per_shard_cycles.first().copied().unwrap_or(0)
+        );
+        for (r, rep) in ss.per_replica.iter().enumerate() {
+            println!(
+                "  replica {r}: {} requests in {} batches, exec {:.1} ms, \
+                 cycles {} (weight-copy {})",
+                rep.requests,
+                rep.batches,
+                rep.exec_micros as f64 / 1e3,
+                rep.attributed_cycles,
+                rep.weight_copy_cycles
+            );
+        }
+    }
     println!("  class histogram {top1:?}");
+    Ok(())
+}
+
+/// `bench-check`: the CI perf-regression gate over `BENCH_*.json`
+/// trajectories (written by `cargo bench` with `BENCH_JSON=<file>`).
+fn cmd_bench_check(args: &[String]) -> Result<()> {
+    let baseline_path: String = flag(args, "--baseline", "BENCH_pr3.json".to_string())?;
+    let current_path: String = flag(args, "--current", String::new())?;
+    anyhow::ensure!(!current_path.is_empty(), "--current <file> is required");
+    let tolerance: f64 = flag(args, "--tolerance", 0.2)?;
+    let absolute = args.iter().any(|a| a == "--absolute");
+    let read = |path: &str| -> Result<bramac::util::json::Json> {
+        let text = std::fs::read_to_string(path)
+            .map_err(|e| anyhow::anyhow!("read {path}: {e}"))?;
+        bramac::util::json::parse(&text).map_err(|e| anyhow::anyhow!("parse {path}: {e}"))
+    };
+    let baseline = read(&baseline_path)?;
+    let current = read(&current_path)?;
+    // A baseline marked `"bootstrap": true` seeds the trajectory on a
+    // machine that never measured it (numbers are placeholders):
+    // comparisons are reported but never fail, and CI's uploaded
+    // artifact should be committed as the first real baseline.
+    let bootstrap = baseline.get("bootstrap").and_then(|b| b.as_bool()).unwrap_or(false);
+    let deltas = compare_bench_json(&baseline, &current).map_err(|e| anyhow::anyhow!("{e}"))?;
+    anyhow::ensure!(
+        !deltas.is_empty(),
+        "no overlapping benchmarks between {baseline_path} and {current_path}"
+    );
+    println!(
+        "bench-check: {} overlapping benchmarks, tolerance {:.0}% ({}{})",
+        deltas.len(),
+        tolerance * 100.0,
+        if absolute { "absolute ratios" } else { "suite-geomean normalized" },
+        if bootstrap { ", bootstrap baseline" } else { "" }
+    );
+    let mut regressions = 0usize;
+    for d in &deltas {
+        let signal = if absolute { d.ratio } else { d.normalized };
+        let mark = if signal > 1.0 + tolerance {
+            regressions += 1;
+            "  << REGRESSION"
+        } else {
+            ""
+        };
+        println!(
+            "  {:<60} {:>12.0} -> {:>12.0} ns  x{:.2} (norm x{:.2}){mark}",
+            format!("{}/{}", d.suite, d.op),
+            d.baseline_ns,
+            d.current_ns,
+            d.ratio,
+            d.normalized
+        );
+    }
+    if regressions > 0 {
+        if bootstrap {
+            println!(
+                "bench-check: {regressions} regression(s) ignored — baseline is bootstrap; \
+                 commit the uploaded bench JSON as the real baseline"
+            );
+            return Ok(());
+        }
+        bail!(
+            "{regressions} benchmark(s) regressed beyond {:.0}% vs {baseline_path}",
+            tolerance * 100.0
+        );
+    }
+    println!("bench-check OK: no wall-time regression beyond {:.0}%", tolerance * 100.0);
     Ok(())
 }
 

@@ -112,6 +112,20 @@ impl IntMatrix {
         &self.data[r * self.cols..(r + 1) * self.cols]
     }
 
+    /// Copy out rows `row0..row0 + rows` as a standalone matrix (the
+    /// row-major layout makes this one contiguous memcpy). Used by the
+    /// sharded coordinator to hand each shard its contiguous row range.
+    pub fn row_slice(&self, row0: usize, rows: usize) -> IntMatrix {
+        assert!(rows > 0, "empty row slice");
+        assert!(row0 + rows <= self.rows, "row slice out of bounds");
+        IntMatrix {
+            rows,
+            cols: self.cols,
+            data: self.data[row0 * self.cols..(row0 + rows) * self.cols].to_vec(),
+            precision: self.precision,
+        }
+    }
+
     /// Reference GEMV: `y = self · x` with wide accumulation.
     pub fn gemv_ref(&self, x: &[i64]) -> Vec<i64> {
         assert_eq!(x.len(), self.cols);
@@ -164,6 +178,27 @@ mod tests {
         m.set(1, 1, 5);
         m.set(1, 2, -6);
         assert_eq!(m.gemv_ref(&[7, -8, 2]), vec![-3, -80]);
+    }
+
+    #[test]
+    fn row_slice_matches_per_row_reference() {
+        let mut rng = Rng::seed_from_u64(0x5711ce);
+        let m = IntMatrix::random(&mut rng, 11, 7, Precision::Int4);
+        let s = m.row_slice(3, 5);
+        assert_eq!(s.rows, 5);
+        assert_eq!(s.cols, 7);
+        for r in 0..5 {
+            assert_eq!(s.row(r), m.row(3 + r));
+        }
+        // Full-range slice is the identity.
+        assert_eq!(m.row_slice(0, 11), m);
+    }
+
+    #[test]
+    #[should_panic(expected = "out of bounds")]
+    fn row_slice_rejects_overrun() {
+        let m = IntMatrix::zeros(4, 4, Precision::Int4);
+        let _ = m.row_slice(2, 3);
     }
 
     #[test]

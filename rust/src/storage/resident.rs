@@ -45,6 +45,11 @@ pub struct ResidentModel {
     pub n: usize,
     pub precision: Precision,
     pub variant: Variant,
+    /// First global output row this layout covers. `0` for a whole-model
+    /// pin; a shard's row base when pinned via [`ResidentModel::pin_rows`]
+    /// (the sharded coordinator places each shard's partial output at
+    /// `row_offset..row_offset + m` of the full result).
+    pub row_offset: usize,
     /// Pool geometry the layout was pinned for (block `b` owns
     /// `by_block[b]`); resident runs assert the pool still matches.
     blocks: usize,
@@ -110,12 +115,36 @@ impl ResidentModel {
             n: w.cols,
             precision: w.precision,
             variant: pool.variant,
+            row_offset: 0,
             blocks: nblocks,
             tiles: plan.tiles.len(),
             by_block,
             pinned_words,
             write_marks,
         })
+    }
+
+    /// Pin only rows `row0..row0 + rows` of `w` — one shard's contiguous
+    /// row range in a row-sharded deployment
+    /// ([`crate::coordinator::ShardedPool`]). The layout is planned for
+    /// the slice alone (this pool owns nothing else), and `row_offset`
+    /// records where the shard's partial output belongs in the full
+    /// result vector.
+    pub fn pin_rows(
+        pool: &mut BlockPool,
+        w: &IntMatrix,
+        row0: usize,
+        rows: usize,
+    ) -> Result<ResidentModel> {
+        ensure!(
+            rows > 0 && row0 + rows <= w.rows,
+            "row shard {row0}..{} outside the {}-row matrix",
+            row0 + rows,
+            w.rows
+        );
+        let mut rm = ResidentModel::pin(pool, &w.row_slice(row0, rows))?;
+        rm.row_offset = row0;
+        Ok(rm)
     }
 
     /// Debug-build staleness check used by the resident run paths: a
@@ -207,6 +236,27 @@ mod tests {
                 .sum();
             assert_eq!(rm.pinned_words, words);
         }
+    }
+
+    #[test]
+    fn pin_rows_pins_exactly_the_shard_slice() {
+        let mut rng = Rng::seed_from_u64(0x5a4d);
+        let p = Precision::Int4;
+        let w = IntMatrix::random(&mut rng, 45, 96, p);
+        let mut pool = BlockPool::new(Variant::OneDA, 2, p);
+        let rm = ResidentModel::pin_rows(&mut pool, &w, 10, 20).expect("fits");
+        assert_eq!(rm.row_offset, 10);
+        assert_eq!((rm.m, rm.n), (20, 96));
+        // On-chip words are exactly the slice's words.
+        assert!(rm.verify_resident(&pool, &w.row_slice(10, 20)));
+        // A resident dispatch over the shard equals the slice reference.
+        let x = crate::quant::random_vector(&mut rng, 96, p, true);
+        let (y, s) = pool.run_gemv_resident(&rm, &x, true);
+        assert_eq!(y, w.row_slice(10, 20).gemv_ref(&x));
+        assert_eq!(s.weight_copy_cycles, 0);
+        // Out-of-bounds shards are rejected without touching the pool.
+        assert!(ResidentModel::pin_rows(&mut pool, &w, 40, 10).is_err());
+        assert!(ResidentModel::pin_rows(&mut pool, &w, 0, 0).is_err());
     }
 
     #[test]

@@ -11,8 +11,22 @@
 //! Each benchmark is warmed up, then run for a target wall time; median,
 //! mean and min are reported. `finish()` prints a summary table so
 //! `cargo bench` output doubles as the figure/table regeneration log.
+//!
+//! # CI perf tracking
+//!
+//! When `$BENCH_JSON` names a file, [`Bench::emit_json_env`] merges the
+//! suite's results into it as machine-readable JSON (`BENCH_*.json`):
+//! one entry per benchmark with `op`, `wall_ns` (median), `min_ns`,
+//! `iters`, plus optional simulation metadata (`cycles`, `threads`,
+//! `shards`) attached via [`Bench::bench_meta`]. CI re-runs the suites
+//! in `BENCH_QUICK=1` mode and gates on [`compare_bench_json`] (the
+//! `bramac-sim bench-check` subcommand) against the committed baseline.
 
+use std::collections::BTreeMap;
+use std::path::Path;
 use std::time::{Duration, Instant};
+
+use crate::util::json::{self, Json};
 
 pub struct BenchResult {
     pub name: String,
@@ -20,6 +34,19 @@ pub struct BenchResult {
     pub median_ns: f64,
     pub mean_ns: f64,
     pub min_ns: f64,
+    /// Simulation metadata for the JSON trajectory (0 = not recorded):
+    /// attributed simulated cycles, host worker threads, shard count.
+    pub cycles: u64,
+    pub threads: usize,
+    pub shards: usize,
+}
+
+/// Metadata attached to a benchmark entry via [`Bench::bench_meta`].
+#[derive(Debug, Clone, Copy, Default)]
+pub struct BenchMeta {
+    pub cycles: u64,
+    pub threads: usize,
+    pub shards: usize,
 }
 
 pub struct Bench {
@@ -96,7 +123,21 @@ impl Bench {
             median_ns: median,
             mean_ns: mean,
             min_ns: min,
+            cycles: 0,
+            threads: 0,
+            shards: 0,
         });
+        self.results.last().unwrap()
+    }
+
+    /// [`Bench::bench`] with simulation metadata recorded into the JSON
+    /// trajectory: attributed cycles, worker threads, shard count.
+    pub fn bench_meta<F: FnMut()>(&mut self, name: &str, meta: BenchMeta, f: F) -> &BenchResult {
+        self.bench(name, f);
+        let last = self.results.last_mut().expect("bench just pushed a result");
+        last.cycles = meta.cycles;
+        last.threads = meta.threads;
+        last.shards = meta.shards;
         self.results.last().unwrap()
     }
 
@@ -107,6 +148,146 @@ impl Bench {
             println!("  {:<56} {:>12}", r.name, fmt_ns(r.median_ns));
         }
     }
+
+    fn results_json(&self) -> Json {
+        Json::Arr(
+            self.results
+                .iter()
+                .map(|r| {
+                    Json::obj(vec![
+                        ("op", Json::Str(r.name.clone())),
+                        ("wall_ns", Json::Num(r.median_ns)),
+                        ("min_ns", Json::Num(r.min_ns)),
+                        ("mean_ns", Json::Num(r.mean_ns)),
+                        ("iters", Json::Num(r.iters as f64)),
+                        ("cycles", Json::Num(r.cycles as f64)),
+                        ("threads", Json::Num(r.threads as f64)),
+                        ("shards", Json::Num(r.shards as f64)),
+                    ])
+                })
+                .collect(),
+        )
+    }
+
+    /// Merge this suite into the bench-trajectory JSON at `path`:
+    /// suites already recorded there are preserved, this suite's entry
+    /// is replaced, and the file is created when absent — so several
+    /// `cargo bench` targets can write one `BENCH_*.json`.
+    pub fn write_json(&self, path: &Path) -> std::io::Result<()> {
+        let mut suites = match std::fs::read_to_string(path) {
+            Ok(text) => match json::parse(&text) {
+                Ok(doc) => doc
+                    .get("suites")
+                    .and_then(Json::as_obj)
+                    .cloned()
+                    .unwrap_or_default(),
+                Err(_) => BTreeMap::new(),
+            },
+            Err(_) => BTreeMap::new(),
+        };
+        suites.insert(self.suite.clone(), self.results_json());
+        let doc = Json::obj(vec![
+            ("format", Json::Str("bramac-bench-v1".into())),
+            ("quick", Json::Bool(std::env::var("BENCH_QUICK").is_ok())),
+            ("suites", Json::Obj(suites)),
+        ]);
+        std::fs::write(path, doc.render() + "\n")
+    }
+
+    /// Write the suite into `$BENCH_JSON` when set (the CI
+    /// perf-tracking hook). Errors are reported, never fatal — a bench
+    /// run must not fail on trajectory bookkeeping.
+    pub fn emit_json_env(&self) {
+        if let Some(path) = std::env::var_os("BENCH_JSON") {
+            let path = std::path::PathBuf::from(path);
+            match self.write_json(&path) {
+                Ok(()) => println!(
+                    "bench: recorded {} entries into {}",
+                    self.results.len(),
+                    path.display()
+                ),
+                Err(e) => eprintln!("bench: could not write {}: {e}", path.display()),
+            }
+        }
+    }
+}
+
+/// One benchmark's baseline-vs-current comparison
+/// ([`compare_bench_json`]).
+#[derive(Debug, Clone)]
+pub struct BenchDelta {
+    pub suite: String,
+    pub op: String,
+    pub baseline_ns: f64,
+    pub current_ns: f64,
+    /// `current / baseline` wall-time ratio (raw).
+    pub ratio: f64,
+    /// The ratio divided by the geometric mean of all overlapping
+    /// ratios: a machine-speed-independent regression signal (a
+    /// uniformly slower host normalizes to ~1.0 everywhere; a single
+    /// op that regressed sticks out above it).
+    pub normalized: f64,
+}
+
+/// Flatten a bench-trajectory document into `(suite, op) -> wall_ns`.
+fn flatten_wall_ns(doc: &Json) -> Result<BTreeMap<(String, String), f64>, String> {
+    let suites = doc
+        .get("suites")
+        .and_then(Json::as_obj)
+        .ok_or_else(|| "missing 'suites' object".to_string())?;
+    let mut out = BTreeMap::new();
+    for (suite, entries) in suites {
+        let entries = entries
+            .as_arr()
+            .ok_or_else(|| format!("suite '{suite}' is not an array"))?;
+        for entry in entries {
+            let op = entry
+                .get("op")
+                .and_then(Json::as_str)
+                .ok_or_else(|| format!("suite '{suite}': entry without 'op'"))?;
+            let ns = entry
+                .get("wall_ns")
+                .and_then(Json::as_f64)
+                .ok_or_else(|| format!("{suite}/{op}: missing 'wall_ns'"))?;
+            out.insert((suite.clone(), op.to_string()), ns);
+        }
+    }
+    Ok(out)
+}
+
+/// Compare two bench-trajectory documents over their overlapping
+/// `(suite, op)` entries. Returns one [`BenchDelta`] per overlap, in
+/// deterministic (suite, op) order, with `normalized` already computed;
+/// the caller applies its tolerance.
+pub fn compare_bench_json(baseline: &Json, current: &Json) -> Result<Vec<BenchDelta>, String> {
+    let base = flatten_wall_ns(baseline)?;
+    let cur = flatten_wall_ns(current)?;
+    let mut deltas = Vec::new();
+    for ((suite, op), &baseline_ns) in &base {
+        let Some(&current_ns) = cur.get(&(suite.clone(), op.clone())) else {
+            continue;
+        };
+        if baseline_ns <= 0.0 || current_ns <= 0.0 {
+            continue;
+        }
+        deltas.push(BenchDelta {
+            suite: suite.clone(),
+            op: op.clone(),
+            baseline_ns,
+            current_ns,
+            ratio: current_ns / baseline_ns,
+            normalized: 0.0,
+        });
+    }
+    if deltas.is_empty() {
+        return Ok(deltas);
+    }
+    let geomean =
+        (deltas.iter().map(|d| d.ratio.ln()).sum::<f64>() / deltas.len() as f64).exp();
+    for d in &mut deltas {
+        d.normalized = d.ratio / geomean;
+    }
+    Ok(deltas)
 }
 
 pub fn fmt_ns(ns: f64) -> String {
@@ -143,5 +324,87 @@ mod tests {
         assert!(fmt_ns(5e3).ends_with("µs"));
         assert!(fmt_ns(5e6).ends_with("ms"));
         assert!(fmt_ns(5e9).ends_with("s"));
+    }
+
+    #[test]
+    fn bench_meta_records_metadata() {
+        let mut b = Bench::new("selftest").with_target_time(Duration::from_millis(10));
+        let meta = BenchMeta { cycles: 1234, threads: 4, shards: 2 };
+        let r = b.bench_meta("tagged", meta, || {
+            black_box(1 + 1);
+        });
+        assert_eq!((r.cycles, r.threads, r.shards), (1234, 4, 2));
+    }
+
+    #[test]
+    fn write_json_merges_suites_and_replaces_reruns() {
+        let path = std::env::temp_dir()
+            .join(format!("bramac-bench-selftest-{}.json", std::process::id()));
+        let _ = std::fs::remove_file(&path);
+        let mut a = Bench::new("suite_a").with_target_time(Duration::from_millis(10));
+        a.bench("op1", || {
+            black_box(0u64);
+        });
+        a.write_json(&path).unwrap();
+        let mut b = Bench::new("suite_b").with_target_time(Duration::from_millis(10));
+        b.bench("op2", || {
+            black_box(0u64);
+        });
+        b.write_json(&path).unwrap();
+        // Re-running suite_a replaces its entry without dropping suite_b.
+        a.write_json(&path).unwrap();
+        let doc = json::parse(&std::fs::read_to_string(&path).unwrap()).unwrap();
+        let suites = doc.get("suites").and_then(Json::as_obj).unwrap();
+        assert!(suites.contains_key("suite_a"));
+        assert!(suites.contains_key("suite_b"));
+        let flat = flatten_wall_ns(&doc).unwrap();
+        assert_eq!(flat.len(), 2);
+        assert!(flat[&("suite_a".to_string(), "op1".to_string())] > 0.0);
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn compare_flags_the_op_that_regressed_not_the_slow_machine() {
+        let baseline = json::parse(
+            r#"{"suites": {"s": [
+                {"op": "a", "wall_ns": 100},
+                {"op": "b", "wall_ns": 100},
+                {"op": "c", "wall_ns": 100},
+                {"op": "gone", "wall_ns": 50}
+            ]}}"#,
+        )
+        .unwrap();
+        // A uniformly 2x slower host, except op "a" regressed 3x more.
+        let current = json::parse(
+            r#"{"suites": {"s": [
+                {"op": "a", "wall_ns": 600},
+                {"op": "b", "wall_ns": 200},
+                {"op": "c", "wall_ns": 200},
+                {"op": "new", "wall_ns": 10}
+            ]}}"#,
+        )
+        .unwrap();
+        let deltas = compare_bench_json(&baseline, &current).unwrap();
+        // Only the overlap is compared.
+        assert_eq!(deltas.len(), 3);
+        let a = deltas.iter().find(|d| d.op == "a").unwrap();
+        let b = deltas.iter().find(|d| d.op == "b").unwrap();
+        assert!((a.ratio - 6.0).abs() < 1e-9);
+        // geomean = (6*2*2)^(1/3) ≈ 2.884: "a" normalizes above any
+        // sane tolerance, "b"/"c" normalize below 1.0.
+        assert!(a.normalized > 1.5, "a: {:?}", a);
+        assert!(b.normalized < 1.0, "b: {:?}", b);
+        // The machine-speed factor alone never flags: all raw ratios
+        // are >= 2 but only "a" stands out after normalization.
+        assert!(deltas.iter().filter(|d| d.normalized > 1.2).count() == 1);
+    }
+
+    #[test]
+    fn compare_rejects_malformed_documents() {
+        let good = json::parse(r#"{"suites": {"s": [{"op": "a", "wall_ns": 1}]}}"#).unwrap();
+        let no_suites = json::parse(r#"{"results": []}"#).unwrap();
+        assert!(compare_bench_json(&no_suites, &good).is_err());
+        let bad_entry = json::parse(r#"{"suites": {"s": [{"wall_ns": 1}]}}"#).unwrap();
+        assert!(compare_bench_json(&bad_entry, &good).is_err());
     }
 }

@@ -44,6 +44,13 @@ impl Json {
         }
     }
 
+    pub fn as_bool(&self) -> Option<bool> {
+        match self {
+            Json::Bool(b) => Some(*b),
+            _ => None,
+        }
+    }
+
     pub fn as_usize(&self) -> Option<usize> {
         self.as_f64().map(|n| n as usize)
     }
@@ -313,6 +320,13 @@ mod tests {
             .unwrap();
         assert_eq!(shape.len(), 4);
         assert_eq!(shape[0].as_usize(), Some(4));
+    }
+
+    #[test]
+    fn bool_accessor() {
+        let j = parse(r#"{"bootstrap": true, "n": 1}"#).unwrap();
+        assert_eq!(j.get("bootstrap").and_then(Json::as_bool), Some(true));
+        assert_eq!(j.get("n").and_then(Json::as_bool), None);
     }
 
     #[test]

@@ -11,9 +11,13 @@ mod common;
 
 use std::time::Duration;
 
+use bramac::arch::Precision;
+use bramac::bramac::Variant;
 use bramac::coordinator::batcher::{submit_and_wait, Batcher, Request};
 use bramac::coordinator::server::{InferenceServer, IMAGE_ELEMS};
+use bramac::coordinator::{Policy, Router, ShardedPool};
 use bramac::dla::Dataflow;
+use bramac::quant::{random_vector, IntMatrix};
 use bramac::util::Rng;
 
 #[test]
@@ -179,6 +183,145 @@ fn stub_server_persistent_dataflow_charges_copies_once() {
         stats_p.attributed_cycles,
         stats_t.attributed_cycles
     );
+}
+
+#[test]
+fn router_shifts_traffic_off_a_saturated_replica() {
+    // One replica drowning in backlog: the least-outstanding policy
+    // must provably route around it, while round-robin (the control)
+    // keeps hammering it — same model, same traffic, same seed.
+    let p = Precision::Int4;
+    let mut rng = Rng::seed_from_u64(0x10ad5);
+    let w = IntMatrix::random(&mut rng, 40, 96, p);
+    let xs: Vec<Vec<i64>> = (0..30).map(|_| random_vector(&mut rng, 96, p, true)).collect();
+    let pools = || -> Vec<ShardedPool> {
+        (0..3).map(|_| ShardedPool::new(Variant::OneDA, 2, 2, p)).collect()
+    };
+
+    let mut lo = Router::new(Policy::LeastOutstanding, pools(), &w).unwrap();
+    lo.inject_backlog(0, 1 << 40); // saturate replica 0
+    let mut lo_counts = [0usize; 3];
+    for x in &xs {
+        let (y, replica) = lo.dispatch(x, true);
+        assert_eq!(y, w.gemv_ref(x), "routing must never change results");
+        lo_counts[replica] += 1;
+    }
+    assert_eq!(lo_counts[0], 0, "saturated replica must get no traffic: {lo_counts:?}");
+    assert!(lo_counts[1] >= 10 && lo_counts[2] >= 10, "{lo_counts:?}");
+
+    let mut rr = Router::new(Policy::RoundRobin, pools(), &w).unwrap();
+    rr.inject_backlog(0, 1 << 40);
+    let mut rr_counts = [0usize; 3];
+    for x in &xs {
+        let (_, replica) = rr.dispatch(x, true);
+        rr_counts[replica] += 1;
+    }
+    assert_eq!(rr_counts, [10, 10, 10], "round-robin ignores load by design");
+
+    // Once the backlog retires, least-outstanding resumes using
+    // replica 0.
+    lo.retire(u64::MAX);
+    let (_, replica) = lo.dispatch(&xs[0], true);
+    assert_eq!(replica, 0);
+    let stats = lo.stats();
+    assert_eq!(stats.requests, 31);
+    assert_eq!(stats.per_replica.len(), 3);
+    assert_eq!(stats.per_replica[0].requests, 1);
+}
+
+#[test]
+fn stub_server_sharded_replicas_match_single_worker() {
+    // The sharded server (2 row shards x 2 replicas) must reply exactly
+    // like the plain single-worker server, with the totals accounted
+    // per replica.
+    let server = InferenceServer::start_sharded(
+        common::stub_artifacts_dir(),
+        "model",
+        Duration::from_millis(2),
+        2,
+        2,
+        Dataflow::Persistent,
+        Policy::LeastOutstanding,
+    )
+    .unwrap();
+    assert_eq!(server.shards, 2);
+    assert_eq!(server.policy, Some(Policy::LeastOutstanding));
+    let reference = InferenceServer::start(
+        common::stub_artifacts_dir(),
+        "model",
+        Duration::from_millis(2),
+    )
+    .unwrap();
+
+    let mut handles = Vec::new();
+    for c in 0..24u64 {
+        let tx = server.handle();
+        let rtx = reference.handle();
+        handles.push(std::thread::spawn(move || {
+            let mut rng = Rng::seed_from_u64(0x5ad + c);
+            let img: Vec<i32> = (0..IMAGE_ELEMS)
+                .map(|_| rng.gen_range_i64(0, 7) as i32)
+                .collect();
+            let got = submit_and_wait(&tx, img.clone()).expect("reply");
+            let want = submit_and_wait(&rtx, img).expect("reference reply");
+            (got, want)
+        }));
+    }
+    for h in handles {
+        let (got, want) = h.join().unwrap();
+        assert_eq!(got, want, "sharded reply must match single-worker");
+    }
+    let ss = server.shutdown_sharded();
+    assert_eq!(ss.total.requests, 24);
+    assert_eq!(ss.per_replica.len(), 2);
+    let per_replica_requests: u64 = ss.per_replica.iter().map(|r| r.requests).sum();
+    assert_eq!(per_replica_requests, ss.total.requests);
+    let per_replica_batches: u64 = ss.per_replica.iter().map(|r| r.batches).sum();
+    assert_eq!(per_replica_batches, ss.total.batches);
+    let per_replica_cycles: u64 = ss.per_replica.iter().map(|r| r.attributed_cycles).sum();
+    assert_eq!(per_replica_cycles, ss.total.attributed_cycles);
+    assert_eq!(ss.per_shard_cycles.len(), 2);
+    let _ = reference.shutdown();
+}
+
+#[test]
+fn stub_server_sharded_attribution_shrinks_with_shards() {
+    // Same request count, more shards: the attributed per-image compute
+    // must shrink (ceil-divided across shards plus a small merge term).
+    let run = |shards: usize| {
+        let server = InferenceServer::start_sharded(
+            common::stub_artifacts_dir(),
+            "model",
+            Duration::from_millis(1),
+            shards,
+            1,
+            Dataflow::Tiling,
+            Policy::RoundRobin,
+        )
+        .unwrap();
+        let tx = server.handle();
+        for c in 0..8u64 {
+            let mut rng = Rng::seed_from_u64(0xa77 + c);
+            let img: Vec<i32> = (0..IMAGE_ELEMS)
+                .map(|_| rng.gen_range_i64(0, 7) as i32)
+                .collect();
+            let _ = submit_and_wait(&tx, img).expect("reply");
+        }
+        drop(tx);
+        server.shutdown()
+    };
+    let one = run(1);
+    let four = run(4);
+    assert_eq!(one.requests, 8);
+    assert_eq!(four.requests, 8);
+    assert!(
+        four.attributed_cycles < one.attributed_cycles,
+        "4 shards {} !< 1 shard {}",
+        four.attributed_cycles,
+        one.attributed_cycles
+    );
+    // Weight copies are shard-count independent (same words on chip).
+    assert_eq!(four.weight_copy_cycles, one.weight_copy_cycles);
 }
 
 #[test]

@@ -1,0 +1,134 @@
+//! Sharded-serving property tests: `ShardedPool` must be
+//! **bit-identical** to a single `BlockPool` (and to the plain i64
+//! reference) across every variant × precision × signedness × dataflow
+//! combination and shard counts {1, 2, 3, 7} — the invariant that makes
+//! row sharding a safe refactor of the serving layer rather than an
+//! approximation. 7 shards exceeds the row-group count at the widest
+//! lane width (2-bit: 20 rows/group), so the empty-shard path is
+//! exercised too.
+
+use bramac::arch::Precision;
+use bramac::bramac::Variant;
+use bramac::coordinator::{BlockPool, ShardedPool};
+use bramac::quant::{random_vector, IntMatrix};
+use bramac::util::Rng;
+
+const SHARD_COUNTS: [usize; 4] = [1, 2, 3, 7];
+
+#[test]
+fn sharded_gemv_bit_identical_across_all_combinations() {
+    let mut rng = Rng::seed_from_u64(0x5a4d0);
+    for variant in Variant::ALL {
+        for p in Precision::ALL {
+            for signed in [true, false] {
+                let (m, n) = (53, 96);
+                let w = IntMatrix::random(&mut rng, m, n, p);
+                let x = random_vector(&mut rng, n, p, signed);
+                let mut single = BlockPool::new(variant, 6, p);
+                let (y_single, _) = single.run_gemv_signed(&w, &x, signed);
+                assert_eq!(y_single, w.gemv_ref(&x), "{} {p}", variant.name());
+                for shards in SHARD_COUNTS {
+                    // Tiling dataflow.
+                    let mut sp = ShardedPool::new(variant, shards, 2, p);
+                    let (y, s) = sp.run_gemv_signed(&w, &x, signed);
+                    assert_eq!(
+                        y,
+                        y_single,
+                        "{} {p} signed={signed} shards={shards} tiling",
+                        variant.name()
+                    );
+                    assert!(s.makespan_cycles > 0);
+
+                    // Persistent dataflow (weights pinned per shard).
+                    let mut sp = ShardedPool::new(variant, shards, 4, p);
+                    let sr = sp.pin(&w).expect("shard slices must fit on-chip");
+                    let (y, s) = sp.run_gemv_resident(&sr, &x, signed);
+                    assert_eq!(
+                        y,
+                        y_single,
+                        "{} {p} signed={signed} shards={shards} persistent",
+                        variant.name()
+                    );
+                    assert_eq!(s.weight_copy_cycles, 0, "persistent must not copy");
+                    assert_eq!(s.exposed_load_cycles, 0);
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn sharded_batch2_bit_identical_across_all_combinations() {
+    let mut rng = Rng::seed_from_u64(0xba7c4);
+    for p in Precision::ALL {
+        for signed in [true, false] {
+            let (m, n) = (53, 96);
+            let w = IntMatrix::random(&mut rng, m, n, p);
+            let x0 = random_vector(&mut rng, n, p, signed);
+            let x1 = random_vector(&mut rng, n, p, signed);
+            let mut single = BlockPool::new(Variant::TwoSA, 6, p);
+            let ([y0, y1], _) = single.run_mvm_batch2_signed(&w, &x0, &x1, signed);
+            assert_eq!(y0, w.gemv_ref(&x0), "{p}");
+            assert_eq!(y1, w.gemv_ref(&x1), "{p}");
+            for shards in SHARD_COUNTS {
+                let mut sp = ShardedPool::new(Variant::TwoSA, shards, 2, p);
+                let ([z0, z1], _) = sp.run_mvm_batch2_signed(&w, &x0, &x1, signed);
+                assert_eq!(z0, y0, "{p} signed={signed} shards={shards} tiling");
+                assert_eq!(z1, y1, "{p} signed={signed} shards={shards} tiling");
+
+                let mut sp = ShardedPool::new(Variant::TwoSA, shards, 4, p);
+                let sr = sp.pin(&w).expect("fits");
+                let ([z0, z1], s) = sp.run_mvm_batch2_resident(&sr, &x0, &x1, signed);
+                assert_eq!(z0, y0, "{p} signed={signed} shards={shards} persistent");
+                assert_eq!(z1, y1, "{p} signed={signed} shards={shards} persistent");
+                assert_eq!(s.weight_copy_cycles, 0);
+            }
+        }
+    }
+}
+
+#[test]
+fn sharded_stats_merge_is_deterministic_and_work_conserving() {
+    let mut rng = Rng::seed_from_u64(0xd37e);
+    let p = Precision::Int4;
+    let (m, n) = (80, 256);
+    let w = IntMatrix::random(&mut rng, m, n, p);
+    let x = random_vector(&mut rng, n, p, true);
+    // Reference: a single pool with the same total block count.
+    let mut single = BlockPool::new(Variant::OneDA, 4, p);
+    let (_, s_single) = single.run_gemv(&w, &x);
+    let mut sp1 = ShardedPool::new(Variant::OneDA, 4, 1, p);
+    let mut sp2 = ShardedPool::new(Variant::OneDA, 4, 1, p).with_pool_threads(4);
+    let (y1, s1) = sp1.run_gemv(&w, &x);
+    let (y2, s2) = sp2.run_gemv(&w, &x);
+    assert_eq!(y1, y2, "pool threads must not change sharded results");
+    assert_eq!(s1, s2, "pool threads must not change merged stats");
+    // Row sharding preserves the total work: same tiles and MAC2s as
+    // the single pool (the lane-aligned partition reproduces the same
+    // tile set, just owned by different pools).
+    assert_eq!(s1.tiles, s_single.tiles);
+    assert_eq!(s1.mac2s, s_single.mac2s);
+    assert_eq!(s1.weight_copy_cycles, s_single.weight_copy_cycles);
+    // Makespan is the max over shards: never larger than the sum.
+    assert!(s1.makespan_cycles <= s1.total_block_cycles);
+}
+
+#[test]
+fn sharded_makespan_shrinks_with_more_shards() {
+    let mut rng = Rng::seed_from_u64(0x5ca1e);
+    let p = Precision::Int4;
+    let (m, n) = (320, 512);
+    let w = IntMatrix::random(&mut rng, m, n, p);
+    let x = random_vector(&mut rng, n, p, true);
+    let mut one = ShardedPool::new(Variant::OneDA, 1, 1, p);
+    let mut four = ShardedPool::new(Variant::OneDA, 4, 1, p);
+    let (y1, s1) = one.run_gemv(&w, &x);
+    let (y4, s4) = four.run_gemv(&w, &x);
+    assert_eq!(y1, y4);
+    assert!(
+        s4.makespan_cycles < s1.makespan_cycles,
+        "4 shards {} !< 1 shard {}",
+        s4.makespan_cycles,
+        s1.makespan_cycles
+    );
+}
