@@ -3,9 +3,10 @@
 //! for every optimization iteration against these numbers.
 use bramac::arch::Precision;
 use bramac::bramac::efsm::{compute_schedule, Engine, Mac2Inputs};
+use bramac::bramac::fastpath::mac2_row_fast;
 use bramac::bramac::mac2::{gemv_golden, mac2_golden};
 use bramac::bramac::signext::{pack_word, sign_extend_word};
-use bramac::bramac::{BramacBlock, Variant};
+use bramac::bramac::{BramacBlock, ExecFidelity, Variant};
 use bramac::coordinator::tiler::plan_gemv;
 use bramac::coordinator::{BlockPool, PlanCache, PlanKey};
 use bramac::quant::{random_vector, IntMatrix};
@@ -29,7 +30,8 @@ fn main() {
         ));
     });
 
-    // One full eFSM MAC2 on the bit-level engine (all lanes).
+    // One full eFSM MAC2 on the bit-level engine (all lanes), and the
+    // word-level SWAR fast path computing the identical P row.
     for p in Precision::ALL {
         let schedule = compute_schedule(p, true);
         let (lo, hi) = p.range();
@@ -44,35 +46,63 @@ fn main() {
             e.copy_weight(bramac::bramac::dummy_array::Row::W1, w1);
             e.array.new_cycle();
             e.copy_weight(bramac::bramac::dummy_array::Row::W2, w1);
-            for &op in &schedule {
+            for &op in schedule {
                 e.array.new_cycle();
                 e.exec(op, inputs);
             }
             black_box(e.p_lanes());
         });
-    }
-
-    // Block-level MAC2 stream (main-BRAM read + sign-ext + engine).
-    for variant in Variant::ALL {
-        let p = Precision::Int4;
-        let mut block = BramacBlock::new(variant, p);
-        for a in 0..64u16 {
-            block.write_word(a, 0x55_5555_5555 & ((1 << 40) - 1));
-        }
-        let pairs = vec![(3i64, -2i64); variant.dummy_arrays()];
-        let mut addr = 0u16;
-        b.bench(&format!("block_mac2_stream/{}/4bit", variant.name()), || {
-            block.mac2(addr % 64, (addr + 1) % 64, &pairs, true);
-            addr = addr.wrapping_add(2);
+        b.bench(&format!("fastpath_mac2/{p} (SWAR, all lanes)"), || {
+            black_box(mac2_row_fast(
+                black_box(&w1),
+                black_box(&w1),
+                lo as i64,
+                hi as i64,
+                p,
+                true,
+            ));
         });
     }
 
-    // Coordinator GEMV end-to-end (the e2e hot path).
+    // Block-level MAC2 stream (main-BRAM read + sign-ext + engine) at
+    // both fidelities.
+    for variant in Variant::ALL {
+        for fidelity in ExecFidelity::ALL {
+            let p = Precision::Int4;
+            let mut block = BramacBlock::new(variant, p).with_fidelity(fidelity);
+            for a in 0..64u16 {
+                block.write_word(a, 0x55_5555_5555 & ((1 << 40) - 1));
+            }
+            let pairs = vec![(3i64, -2i64); variant.dummy_arrays()];
+            let mut addr = 0u16;
+            let name = match fidelity {
+                ExecFidelity::BitAccurate => {
+                    format!("block_mac2_stream/{}/4bit", variant.name())
+                }
+                ExecFidelity::Fast => {
+                    format!("block_mac2_stream/{}/4bit/fidelity=fast", variant.name())
+                }
+            };
+            b.bench_meta(
+                &name,
+                BenchMeta { fidelity: fidelity.name(), ..BenchMeta::default() },
+                || {
+                    block.mac2(addr % 64, (addr + 1) % 64, &pairs, true);
+                    addr = addr.wrapping_add(2);
+                },
+            );
+        }
+    }
+
+    // Coordinator GEMV end-to-end (the e2e hot path). Pools are pinned
+    // to the oracle fidelity explicitly so a FIDELITY env leak can't
+    // skew the bit-accurate trajectory.
     let p = Precision::Int4;
     let w = IntMatrix::random(&mut rng, 80, 256, p);
     let x = random_vector(&mut rng, 256, p, true);
     b.bench("pool_gemv/80x256/4bit/2blocks", || {
-        let mut pool = BlockPool::new(Variant::OneDA, 2, p);
+        let mut pool =
+            BlockPool::new(Variant::OneDA, 2, p).with_fidelity(ExecFidelity::BitAccurate);
         black_box(pool.run_gemv(&w, &x));
     });
 
@@ -89,11 +119,14 @@ fn main() {
     let (bm, bn) = (320usize, 1024usize);
     let bw = IntMatrix::random(&mut rng, bm, bn, p);
     let bx = random_vector(&mut rng, bn, p, true);
-    let mut seq_pool = BlockPool::new(Variant::OneDA, 8, p);
+    let mut seq_pool =
+        BlockPool::new(Variant::OneDA, 8, p).with_fidelity(ExecFidelity::BitAccurate);
     let (y_seq, s_seq) = seq_pool.run_gemv(&bw, &bx);
     assert_eq!(y_seq, bw.gemv_ref(&bx), "sequential pool must be exact");
     for threads in [2usize, 4] {
-        let mut par = BlockPool::new(Variant::OneDA, 8, p).with_threads(threads);
+        let mut par = BlockPool::new(Variant::OneDA, 8, p)
+            .with_threads(threads)
+            .with_fidelity(ExecFidelity::BitAccurate);
         let (y_par, s_par) = par.run_gemv(&bw, &bx);
         assert_eq!(y_par, y_seq, "parallel output must be bit-exact (t={threads})");
         assert_eq!(s_par, s_seq, "parallel stats must be identical (t={threads})");
@@ -102,7 +135,12 @@ fn main() {
     let seq_ns = b
         .bench_meta(
             "pool_gemv/320x1024/4bit/8blocks/threads=1",
-            BenchMeta { cycles: s_seq.makespan_cycles, threads: 1, shards: 0 },
+            BenchMeta {
+                cycles: s_seq.makespan_cycles,
+                threads: 1,
+                shards: 0,
+                fidelity: "bit-accurate",
+            },
             || {
                 black_box(seq_pool.run_gemv(&bw, &bx));
             },
@@ -114,11 +152,18 @@ fn main() {
         thread_counts.push(auto);
     }
     for threads in thread_counts {
-        let mut pool = BlockPool::new(Variant::OneDA, 8, p).with_threads(threads);
+        let mut pool = BlockPool::new(Variant::OneDA, 8, p)
+            .with_threads(threads)
+            .with_fidelity(ExecFidelity::BitAccurate);
         let ns = b
             .bench_meta(
                 &format!("pool_gemv/320x1024/4bit/8blocks/threads={threads}"),
-                BenchMeta { cycles: s_seq.makespan_cycles, threads, shards: 0 },
+                BenchMeta {
+                    cycles: s_seq.makespan_cycles,
+                    threads,
+                    shards: 0,
+                    fidelity: "bit-accurate",
+                },
                 || {
                     black_box(pool.run_gemv(&bw, &bx));
                 },
@@ -135,6 +180,40 @@ fn main() {
     println!(
         "pool_gemv sequential vs 4 threads: {speedup_4t:.2}x \
          (target >= 2x on hosts with >= 4 cores)"
+    );
+
+    // §Perf iteration 8: the fast execution fidelity (PR 4). The same
+    // 320x1024 GEMV through the word-level SWAR engine — bit-identical
+    // outputs and ScheduleStats (asserted before timing; the full
+    // property matrix lives in tests/fidelity_diff.rs), with the cycle
+    // charges unchanged and host wall time collapsing.
+    let mut fast_pool = BlockPool::new(Variant::OneDA, 8, p).with_fidelity(ExecFidelity::Fast);
+    let (y_fast, s_fast) = fast_pool.run_gemv(&bw, &bx);
+    assert_eq!(y_fast, y_seq, "fast fidelity must be bit-identical");
+    assert_eq!(s_fast, s_seq, "fast fidelity must charge identical cycles");
+    let fast_ns = b
+        .bench_meta(
+            "pool_gemv/320x1024/4bit/8blocks/threads=1/fidelity=fast",
+            BenchMeta {
+                cycles: s_fast.makespan_cycles,
+                threads: 1,
+                shards: 0,
+                fidelity: "fast",
+            },
+            || {
+                black_box(fast_pool.run_gemv(&bw, &bx));
+            },
+        )
+        .median_ns;
+    let fast_speedup = seq_ns / fast_ns;
+    assert!(
+        fast_speedup >= 2.0,
+        "fast fidelity must clearly beat the eFSM oracle on the large GEMV \
+         (got {fast_speedup:.2}x)"
+    );
+    println!(
+        "    -> fast vs bit-accurate fidelity on 320x1024: {fast_speedup:.2}x \
+         (target >= 5x; bit-identical outputs + stats asserted)"
     );
 
     // §Perf iteration 6: plan cache + persistent dataflow (PR 2).
@@ -175,9 +254,11 @@ fn main() {
     let (pm, pn) = (80usize, 256usize);
     let pw = IntMatrix::random(&mut rng, pm, pn, p);
     let px = random_vector(&mut rng, pn, p, true);
-    let mut tiling_pool = BlockPool::new(Variant::OneDA, 8, p);
+    let mut tiling_pool =
+        BlockPool::new(Variant::OneDA, 8, p).with_fidelity(ExecFidelity::BitAccurate);
     let (y_tiling, s_tiling) = tiling_pool.run_gemv(&pw, &px);
-    let mut resident_pool = BlockPool::new(Variant::OneDA, 8, p);
+    let mut resident_pool =
+        BlockPool::new(Variant::OneDA, 8, p).with_fidelity(ExecFidelity::BitAccurate);
     let rm = ResidentModel::pin(&mut resident_pool, &pw).expect("80x256/4bit fits 8 blocks");
     let (y_resident, s_resident) = resident_pool.run_gemv_resident(&rm, &px, true);
     assert_eq!(y_resident, y_tiling, "dataflows must be bit-identical");
@@ -186,7 +267,12 @@ fn main() {
     let tiling_ns = b
         .bench_meta(
             "pool_gemv/tiling/80x256/4bit/8blocks",
-            BenchMeta { cycles: s_tiling.makespan_cycles, threads: 1, shards: 0 },
+            BenchMeta {
+                cycles: s_tiling.makespan_cycles,
+                threads: 1,
+                shards: 0,
+                fidelity: "bit-accurate",
+            },
             || {
                 black_box(tiling_pool.run_gemv(&pw, &px));
             },
@@ -195,7 +281,12 @@ fn main() {
     let resident_ns = b
         .bench_meta(
             "pool_gemv/persistent/80x256/4bit/8blocks",
-            BenchMeta { cycles: s_resident.makespan_cycles, threads: 1, shards: 0 },
+            BenchMeta {
+                cycles: s_resident.makespan_cycles,
+                threads: 1,
+                shards: 0,
+                fidelity: "bit-accurate",
+            },
             || {
                 black_box(resident_pool.run_gemv_resident(&rm, &px, true));
             },
@@ -207,6 +298,51 @@ fn main() {
         tiling_ns / resident_ns,
         s_tiling.weight_copy_cycles,
         rm.pinned_words
+    );
+
+    // Fast-fidelity variants of the same dispatch pair: the persistent
+    // fast path is the steady-state serving configuration (resident
+    // weights + SWAR engine).
+    let mut tiling_fast = BlockPool::new(Variant::OneDA, 8, p).with_fidelity(ExecFidelity::Fast);
+    let (y_tf, s_tf) = tiling_fast.run_gemv(&pw, &px);
+    assert_eq!(y_tf, y_tiling, "fast tiling must be bit-identical");
+    assert_eq!(s_tf, s_tiling);
+    b.bench_meta(
+        "pool_gemv/tiling/80x256/4bit/8blocks/fidelity=fast",
+        BenchMeta {
+            cycles: s_tf.makespan_cycles,
+            threads: 1,
+            shards: 0,
+            fidelity: "fast",
+        },
+        || {
+            black_box(tiling_fast.run_gemv(&pw, &px));
+        },
+    );
+    let mut resident_fast =
+        BlockPool::new(Variant::OneDA, 8, p).with_fidelity(ExecFidelity::Fast);
+    let rm_fast = ResidentModel::pin(&mut resident_fast, &pw).expect("fits");
+    let (y_rf, s_rf) = resident_fast.run_gemv_resident(&rm_fast, &px, true);
+    assert_eq!(y_rf, y_resident, "fast resident must be bit-identical");
+    assert_eq!(s_rf, s_resident);
+    let resident_fast_ns = b
+        .bench_meta(
+            "pool_gemv/persistent/80x256/4bit/8blocks/fidelity=fast",
+            BenchMeta {
+                cycles: s_rf.makespan_cycles,
+                threads: 1,
+                shards: 0,
+                fidelity: "fast",
+            },
+            || {
+                black_box(resident_fast.run_gemv_resident(&rm_fast, &px, true));
+            },
+        )
+        .median_ns;
+    println!(
+        "    -> fast persistent vs bit-accurate persistent: {:.2}x host time \
+         (identical zero-copy cycle accounting)",
+        resident_ns / resident_fast_ns
     );
 
     b.finish();

@@ -6,7 +6,7 @@
 //! (`cycles`) and shard count into the `BENCH_*.json` trajectory via
 //! `BENCH_JSON` (EXPERIMENTS.md §Sharded scale-out).
 use bramac::arch::Precision;
-use bramac::bramac::Variant;
+use bramac::bramac::{ExecFidelity, Variant};
 use bramac::coordinator::{BlockPool, Policy, Router, ShardedPool};
 use bramac::quant::{random_vector, IntMatrix};
 use bramac::util::bench::{black_box, Bench, BenchMeta};
@@ -23,20 +23,22 @@ fn main() {
     let x = random_vector(&mut rng, n, p, true);
 
     // Ground truth: a single pool over the whole block budget.
-    let mut single = BlockPool::new(Variant::OneDA, TOTAL_BLOCKS, p);
+    let mut single =
+        BlockPool::new(Variant::OneDA, TOTAL_BLOCKS, p).with_fidelity(ExecFidelity::BitAccurate);
     let (y_ref, s_ref) = single.run_gemv(&w, &x);
     assert_eq!(y_ref, w.gemv_ref(&x), "single pool must be exact");
 
     // Tiling dataflow across shard counts (constant total blocks).
     for shards in [1usize, 2, 4, 8] {
         let blocks_per_shard = TOTAL_BLOCKS / shards;
-        let mut sp = ShardedPool::new(Variant::OneDA, shards, blocks_per_shard, p);
+        let mut sp = ShardedPool::new(Variant::OneDA, shards, blocks_per_shard, p)
+            .with_fidelity(ExecFidelity::BitAccurate);
         let (y, s) = sp.run_gemv(&w, &x);
         assert_eq!(y, y_ref, "sharded must be bit-identical ({shards} shards)");
         assert_eq!(s.mac2s, s_ref.mac2s, "row sharding conserves work");
         b.bench_meta(
             &format!("sharded_gemv/tiling/320x1024/4bit/{shards}shards"),
-            BenchMeta { cycles: s.makespan_cycles, threads: 0, shards },
+            BenchMeta { cycles: s.makespan_cycles, threads: 0, shards, fidelity: "bit-accurate" },
             || {
                 black_box(sp.run_gemv(&w, &x));
             },
@@ -57,16 +59,34 @@ fn main() {
     let y_pref = pw.gemv_ref(&px);
     for shards in [1usize, 4] {
         let blocks_per_shard = TOTAL_BLOCKS / shards;
-        let mut sp = ShardedPool::new(Variant::OneDA, shards, blocks_per_shard, p);
+        let mut sp = ShardedPool::new(Variant::OneDA, shards, blocks_per_shard, p)
+            .with_fidelity(ExecFidelity::BitAccurate);
         let sr = sp.pin(&pw).expect("80x256/4bit fits the shard block budget");
         let (y, s) = sp.run_gemv_resident(&sr, &px, true);
         assert_eq!(y, y_pref, "persistent sharded must be bit-identical");
         assert_eq!(s.weight_copy_cycles, 0);
         b.bench_meta(
             &format!("sharded_gemv/persistent/80x256/4bit/{shards}shards"),
-            BenchMeta { cycles: s.makespan_cycles, threads: 0, shards },
+            BenchMeta { cycles: s.makespan_cycles, threads: 0, shards, fidelity: "bit-accurate" },
             || {
                 black_box(sp.run_gemv_resident(&sr, &px, true));
+            },
+        );
+
+        // The same sharded serving dispatch on the fast engine —
+        // bit-identical result and stats, collapsed host time (the
+        // steady-state serving configuration of PR 4).
+        let mut sp_fast = ShardedPool::new(Variant::OneDA, shards, blocks_per_shard, p)
+            .with_fidelity(ExecFidelity::Fast);
+        let sr_fast = sp_fast.pin(&pw).expect("80x256/4bit fits the shard block budget");
+        let (yf, sf) = sp_fast.run_gemv_resident(&sr_fast, &px, true);
+        assert_eq!(yf, y, "fast sharded serving must be bit-identical");
+        assert_eq!(sf, s, "fast sharded serving stats must be bit-identical");
+        b.bench_meta(
+            &format!("sharded_gemv/persistent/80x256/4bit/{shards}shards/fidelity=fast"),
+            BenchMeta { cycles: sf.makespan_cycles, threads: 0, shards, fidelity: "fast" },
+            || {
+                black_box(sp_fast.run_gemv_resident(&sr_fast, &px, true));
             },
         );
     }
@@ -76,18 +96,38 @@ fn main() {
     let wr = IntMatrix::random(&mut rng, 40, 96, p);
     let xr = random_vector(&mut rng, 96, p, true);
     let y_router = wr.gemv_ref(&xr);
-    let replicas: Vec<ShardedPool> =
-        (0..3).map(|_| ShardedPool::new(Variant::OneDA, 2, 2, p)).collect();
+    let replicas: Vec<ShardedPool> = (0..3)
+        .map(|_| ShardedPool::new(Variant::OneDA, 2, 2, p).with_fidelity(ExecFidelity::BitAccurate))
+        .collect();
     let mut router =
         Router::new(Policy::LeastOutstanding, replicas, &wr).expect("pin fits");
     let (y, _) = router.dispatch(&xr, true);
     assert_eq!(y, y_router, "routed dispatch must be exact");
     b.bench_meta(
         "router_dispatch/least-outstanding/40x96/4bit/3replicas",
-        BenchMeta { cycles: 0, threads: 0, shards: 2 },
+        BenchMeta { cycles: 0, threads: 0, shards: 2, fidelity: "bit-accurate" },
         || {
             black_box(router.dispatch(&xr, true));
             router.retire(u64::MAX);
+        },
+    );
+
+    // The same replica group on the fast engine: identical routing
+    // trace and results (routing state is simulated cycles, which are
+    // bit-identical across fidelities).
+    let fast_replicas: Vec<ShardedPool> = (0..3)
+        .map(|_| ShardedPool::new(Variant::OneDA, 2, 2, p).with_fidelity(ExecFidelity::Fast))
+        .collect();
+    let mut fast_router =
+        Router::new(Policy::LeastOutstanding, fast_replicas, &wr).expect("pin fits");
+    let (yf, _) = fast_router.dispatch(&xr, true);
+    assert_eq!(yf, y_router, "fast routed dispatch must be exact");
+    b.bench_meta(
+        "router_dispatch/least-outstanding/40x96/4bit/3replicas/fidelity=fast",
+        BenchMeta { cycles: 0, threads: 0, shards: 2, fidelity: "fast" },
+        || {
+            black_box(fast_router.dispatch(&xr, true));
+            fast_router.retire(u64::MAX);
         },
     );
 

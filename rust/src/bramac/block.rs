@@ -19,7 +19,9 @@
 
 use crate::arch::{FreqModel, Precision};
 
-use super::efsm::{compute_schedule, ComputeOp, Engine, Mac2Inputs};
+use super::dummy_array::Row;
+use super::efsm::{compute_schedule, mac2_compute_cycles, Engine, Mac2Inputs};
+use super::fastpath::{accumulate_row, mac2_row_fast, ExecFidelity};
 use super::instr::CimInstr;
 use super::signext::sign_extend_word;
 
@@ -27,6 +29,14 @@ use super::signext::sign_extend_word;
 /// (§III-A: "a maximum data width of 40-bit, and a depth of 512").
 pub const MAIN_WORDS: usize = 512;
 pub const WORD_BITS: u32 = 40;
+
+/// Most lanes any precision packs into one word (twenty 2-bit lanes) —
+/// the size of the fixed accumulator buffers the hot paths use instead
+/// of per-flush `Vec`s (§Perf iteration 8).
+pub const MAX_LANES: usize = 20;
+
+/// One dummy array's worth of lane values in a fixed-size buffer.
+pub type LaneBuf = [i64; MAX_LANES];
 
 /// The two BRAMAC variants (§IV).
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
@@ -49,7 +59,7 @@ impl Variant {
 
     /// Steady-state main-clock cycles per MAC2 (Table II latency row).
     pub fn mac2_cycles(self, p: Precision, signed: bool) -> u64 {
-        let l = compute_schedule(p, signed).len() as u64;
+        let l = mac2_compute_cycles(p, signed);
         match self {
             Variant::TwoSA => l,
             // copy half-cycle + compute half-cycles, two per main cycle
@@ -162,11 +172,12 @@ pub struct BramacBlock {
     /// Dummy cycles accumulated since cold start (1DA half-cycle math).
     dummy_cycles: u64,
     warm: bool,
-    /// Cached eFSM schedules for (signed, unsigned) at the current
-    /// precision — the schedule is deterministic (§IV-C), so the
-    /// hardware would hardwire it too. (§Perf iteration 1: hoists a
-    /// per-MAC2 Vec allocation out of the hot path, −20%.)
-    schedule_cache: [Vec<ComputeOp>; 2],
+    /// Execution fidelity: bit-accurate eFSM stepping (the oracle) or
+    /// the word-level SWAR fast path (bit-identical results and stats,
+    /// closed-form cycle charges). The eFSM schedules themselves are
+    /// static tables now (§Perf iteration 8; iteration 1's per-block
+    /// cache became redundant), shared across engines and fidelities.
+    fidelity: ExecFidelity,
 }
 
 impl BramacBlock {
@@ -182,10 +193,7 @@ impl BramacBlock {
             stats: StreamStats::default(),
             dummy_cycles: 0,
             warm: false,
-            schedule_cache: [
-                compute_schedule(precision, false),
-                compute_schedule(precision, true),
-            ],
+            fidelity: ExecFidelity::BitAccurate,
         }
     }
 
@@ -200,7 +208,23 @@ impl BramacBlock {
         for e in &mut self.engines {
             *e = Engine::new(p);
         }
-        self.schedule_cache = [compute_schedule(p, false), compute_schedule(p, true)];
+    }
+
+    pub fn fidelity(&self) -> ExecFidelity {
+        self.fidelity
+    }
+
+    /// Switch execution fidelity. Safe mid-stream: both fidelities keep
+    /// the engines' P/ACC rows and the stats counters bit-identical, so
+    /// switching never changes subsequent results.
+    pub fn set_fidelity(&mut self, fidelity: ExecFidelity) {
+        self.fidelity = fidelity;
+    }
+
+    /// Builder-style [`BramacBlock::set_fidelity`].
+    pub fn with_fidelity(mut self, fidelity: ExecFidelity) -> Self {
+        self.fidelity = fidelity;
+        self
     }
 
     // ------------------------------------------------------------------
@@ -274,9 +298,14 @@ impl BramacBlock {
         );
         let w1 = sign_extend_word(self.read_word(addr_w1), self.precision);
         let w2 = sign_extend_word(self.read_word(addr_w2), self.precision);
-        let schedule = std::mem::take(&mut self.schedule_cache[signed as usize]);
+        if self.fidelity == ExecFidelity::Fast {
+            self.mac2_fast(&w1, &w2, input_pairs, signed);
+            return;
+        }
+        let schedule = compute_schedule(self.precision, signed);
 
-        // Copy cycles.
+        // Copy cycles (array state; the cycle charges live in
+        // `charge_mac2_cycles`, shared with the fast fidelity).
         match self.variant {
             Variant::TwoSA => {
                 for e in &mut self.engines {
@@ -287,21 +316,12 @@ impl BramacBlock {
                     e.array.new_cycle();
                     e.copy_weight(super::dummy_array::Row::W2, w2);
                 }
-                if !self.warm {
-                    self.dummy_cycles += 2;
-                    self.stats.main_cycles += 2;
-                }
             }
             Variant::OneDA => {
                 let e = &mut self.engines[0];
                 e.array.new_cycle();
                 e.copy_weight(super::dummy_array::Row::W1, w1);
                 e.copy_weight(super::dummy_array::Row::W2, w2);
-                self.dummy_cycles += 1;
-                if !self.warm {
-                    // Initial main-BRAM read cycle (Fig 5b, Cycle 1).
-                    self.stats.main_cycles += 1;
-                }
             }
         }
 
@@ -309,41 +329,99 @@ impl BramacBlock {
         for (idx, e) in self.engines.iter_mut().enumerate() {
             let (i1, i2) = input_pairs[idx];
             let inputs = Mac2Inputs { i1, i2, signed };
-            for &op in &schedule {
+            for &op in schedule {
                 e.array.new_cycle();
                 e.exec(op, inputs);
             }
         }
-        let l = schedule.len() as u64;
+        self.charge_mac2_cycles(schedule.len() as u64);
+    }
+
+    /// Charge one MAC2's closed-form cycle costs (Fig 5 / Table II) —
+    /// the **single** accounting path shared by both execution
+    /// fidelities, so the counters cannot drift between them. `l` is
+    /// the compute-schedule length in dummy cycles.
+    fn charge_mac2_cycles(&mut self, l: u64) {
         match self.variant {
             Variant::TwoSA => {
+                // Cold start: the 2 initial copy cycles (Fig 5a);
+                // steady-state copies overlap the previous MAC2.
+                if !self.warm {
+                    self.dummy_cycles += 2;
+                    self.stats.main_cycles += 2;
+                }
                 self.dummy_cycles += l;
                 self.stats.main_cycles += l;
             }
             Variant::OneDA => {
+                // One copy half-cycle always; cold start adds the
+                // initial main-BRAM read cycle (Fig 5b, Cycle 1).
+                self.dummy_cycles += 1;
+                if !self.warm {
+                    self.stats.main_cycles += 1;
+                }
                 self.dummy_cycles += l;
                 // copy half-cycle + l compute half-cycles, two per main
                 // clock: ceil((l+1)/2) main cycles per MAC2.
                 self.stats.main_cycles += (l + 1).div_ceil(2);
             }
         }
-
         self.stats.mac2_count += 1;
         self.stats.main_busy_cycles += self.variant.main_busy_per_mac2();
         self.warm = true;
-        self.schedule_cache[signed as usize] = schedule;
+    }
+
+    /// The fast-fidelity MAC2: evaluate every engine's lanes with the
+    /// word-level SWAR path ([`mac2_row_fast`] — the same `add_lanes`
+    /// arithmetic the eFSM's adder passes run, minus the per-cycle
+    /// dummy-array bookkeeping) and charge the *identical* closed-form
+    /// cycle increments the bit-accurate arms above charge. P and ACC
+    /// rows are committed to each engine's array, so readouts, `issue`,
+    /// and mid-stream fidelity switches observe bit-identical state.
+    fn mac2_fast(
+        &mut self,
+        w1: &super::row::Row160,
+        w2: &super::row::Row160,
+        input_pairs: &[(i64, i64)],
+        signed: bool,
+    ) {
+        let p = self.precision;
+        for (idx, e) in self.engines.iter_mut().enumerate() {
+            let (i1, i2) = input_pairs[idx];
+            let p_row = mac2_row_fast(w1, w2, i1, i2, p, signed);
+            let acc = accumulate_row(&e.array.peek(Row::Acc), &p_row, p);
+            e.array.poke(Row::P, p_row);
+            e.array.poke(Row::Acc, acc);
+        }
+        self.charge_mac2_cycles(mac2_compute_cycles(p, signed));
     }
 
     /// Read out the accumulator rows (the `done` sequence): returns the
     /// signed lane values of every dummy array and charges the
     /// main-port-busy readout cycles.
     pub fn read_accumulators(&mut self) -> Vec<Vec<i64>> {
+        let mut bufs = [[0i64; MAX_LANES]; 2];
+        let (arrays, lanes) = self.read_accumulators_into(&mut bufs);
+        bufs[..arrays].iter().map(|b| b[..lanes].to_vec()).collect()
+    }
+
+    /// [`BramacBlock::read_accumulators`] into caller-owned fixed
+    /// buffers — the hot-path variant (§Perf iteration 8: the tile
+    /// streamers used to allocate a `Vec<Vec<i64>>` per flush). Charges
+    /// the identical readout cycles; returns `(arrays, lanes)` — the
+    /// number of dummy arrays written into `out` and the valid lane
+    /// count per buffer.
+    pub fn read_accumulators_into(&mut self, out: &mut [LaneBuf; 2]) -> (usize, usize) {
         let cost = self.variant.acc_readout_cycles();
         self.stats.main_cycles += cost;
         self.stats.main_busy_cycles += cost;
         self.stats.acc_readouts += 1;
         self.warm = false; // pipeline drains at a dot-product boundary
-        self.engines.iter().map(|e| e.acc_lanes()).collect()
+        let lanes = self.precision.lanes_per_word();
+        for (i, e) in self.engines.iter().enumerate() {
+            e.acc_lanes_into(&mut out[i]);
+        }
+        (self.engines.len(), lanes)
     }
 
     /// Latest MAC2 results (row P) — used by tests.
@@ -447,6 +525,105 @@ mod tests {
                 assert_eq!(got, expect, "{} {p}", variant.name());
             }
         }
+    }
+
+    #[test]
+    fn fast_fidelity_bit_identical_at_block_level() {
+        // Same random MAC2 stream through an oracle block and a fast
+        // block: accumulators, P rows, and every StreamStats field must
+        // be identical — including across a mid-stream readout (warm →
+        // cold transition) and a mid-stream fidelity switch.
+        let mut rng = Rng::seed_from_u64(0xfa51);
+        for variant in Variant::ALL {
+            for p in Precision::ALL {
+                for signed in [true, false] {
+                    let (lo_i, hi_i) = if signed { p.range() } else { p.range_unsigned() };
+                    let mut oracle = BramacBlock::new(variant, p);
+                    let mut fast = BramacBlock::new(variant, p).with_fidelity(ExecFidelity::Fast);
+                    assert_eq!(fast.fidelity(), ExecFidelity::Fast);
+                    oracle.reset_acc();
+                    fast.reset_acc();
+                    for k in 0..8u16 {
+                        let (word1, _) = random_words(&mut rng, p);
+                        let (word2, _) = random_words(&mut rng, p);
+                        oracle.write_word(2 * k, word1);
+                        oracle.write_word(2 * k + 1, word2);
+                        fast.write_word(2 * k, word1);
+                        fast.write_word(2 * k + 1, word2);
+                        let pairs: Vec<(i64, i64)> = (0..variant.dummy_arrays())
+                            .map(|_| {
+                                (
+                                    rng.gen_range_i64(lo_i as i64, hi_i as i64),
+                                    rng.gen_range_i64(lo_i as i64, hi_i as i64),
+                                )
+                            })
+                            .collect();
+                        oracle.mac2(2 * k, 2 * k + 1, &pairs, signed);
+                        fast.mac2(2 * k, 2 * k + 1, &pairs, signed);
+                        assert_eq!(
+                            fast.p_lanes(),
+                            oracle.p_lanes(),
+                            "{} {p} signed={signed} mac2 #{k}",
+                            variant.name()
+                        );
+                        if k == 3 {
+                            // Mid-stream readout: drains the pipeline in
+                            // both blocks identically.
+                            assert_eq!(fast.read_accumulators(), oracle.read_accumulators());
+                            oracle.reset_acc();
+                            fast.reset_acc();
+                        }
+                        if k == 5 {
+                            // Mid-stream switch: the fast block becomes
+                            // the oracle and vice versa; state must be
+                            // interchangeable.
+                            oracle.set_fidelity(ExecFidelity::Fast);
+                            fast.set_fidelity(ExecFidelity::BitAccurate);
+                        }
+                    }
+                    assert_eq!(
+                        fast.read_accumulators(),
+                        oracle.read_accumulators(),
+                        "{} {p} signed={signed}",
+                        variant.name()
+                    );
+                    assert_eq!(
+                        fast.stats(),
+                        oracle.stats(),
+                        "{} {p} signed={signed}: StreamStats must be bit-identical",
+                        variant.name()
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn read_accumulators_into_matches_vec_variant() {
+        let mut rng = Rng::seed_from_u64(0xacc);
+        let p = Precision::Int4;
+        let mut a = BramacBlock::new(Variant::TwoSA, p);
+        let mut b = BramacBlock::new(Variant::TwoSA, p);
+        for k in 0..4u16 {
+            let (word1, _) = random_words(&mut rng, p);
+            let (word2, _) = random_words(&mut rng, p);
+            a.write_word(2 * k, word1);
+            a.write_word(2 * k + 1, word2);
+            b.write_word(2 * k, word1);
+            b.write_word(2 * k + 1, word2);
+            let pairs = [(3i64, -2i64), (-1i64, 5i64)];
+            a.mac2(2 * k, 2 * k + 1, &pairs, true);
+            b.mac2(2 * k, 2 * k + 1, &pairs, true);
+        }
+        let want = a.read_accumulators();
+        let mut bufs = [[0i64; MAX_LANES]; 2];
+        let (arrays, lanes) = b.read_accumulators_into(&mut bufs);
+        assert_eq!(arrays, 2);
+        assert_eq!(lanes, p.lanes_per_word());
+        for arr in 0..arrays {
+            assert_eq!(&bufs[arr][..lanes], want[arr].as_slice());
+        }
+        assert_eq!(a.stats(), b.stats(), "both readout paths charge identically");
     }
 
     #[test]

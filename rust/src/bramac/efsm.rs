@@ -45,26 +45,80 @@ pub enum ComputeOp {
     Accumulate,
 }
 
-/// Generate the compute schedule for one MAC2 (excludes weight copies).
-pub fn compute_schedule(precision: Precision, signed_inputs: bool) -> Vec<ComputeOp> {
-    let n = precision.bits();
-    let mut ops = Vec::with_capacity(n as usize + 3);
-    ops.push(ComputeOp::Prep);
-    let mut bits: Vec<u32> = (0..n).rev().collect();
-    if signed_inputs {
-        let msb = bits.remove(0);
-        ops.push(ComputeOp::InvertMsb { bit: msb });
-        ops.push(ComputeOp::AddMsb);
+/// The six possible schedules, hardwired as static tables exactly as
+/// the eFSM itself would hardwire them: the schedule is a pure function
+/// of `(n, signed)` (§IV-C "the dummy array's behavior is deterministic"),
+/// so [`compute_schedule`] is a table lookup — allocation-free at steady
+/// state (§Perf iteration 8; previously every call built a fresh `Vec`).
+/// `static_tables_match_generated` pins each table against a
+/// generated-from-first-principles reference.
+static SCHED_2_SIGNED: [ComputeOp; 5] = [
+    ComputeOp::Prep,
+    ComputeOp::InvertMsb { bit: 1 },
+    ComputeOp::AddMsb,
+    ComputeOp::AddLsb,
+    ComputeOp::Accumulate,
+];
+static SCHED_2_UNSIGNED: [ComputeOp; 4] = [
+    ComputeOp::Prep,
+    ComputeOp::AddShift { bit: 1 },
+    ComputeOp::AddLsb,
+    ComputeOp::Accumulate,
+];
+static SCHED_4_SIGNED: [ComputeOp; 7] = [
+    ComputeOp::Prep,
+    ComputeOp::InvertMsb { bit: 3 },
+    ComputeOp::AddMsb,
+    ComputeOp::AddShift { bit: 2 },
+    ComputeOp::AddShift { bit: 1 },
+    ComputeOp::AddLsb,
+    ComputeOp::Accumulate,
+];
+static SCHED_4_UNSIGNED: [ComputeOp; 6] = [
+    ComputeOp::Prep,
+    ComputeOp::AddShift { bit: 3 },
+    ComputeOp::AddShift { bit: 2 },
+    ComputeOp::AddShift { bit: 1 },
+    ComputeOp::AddLsb,
+    ComputeOp::Accumulate,
+];
+static SCHED_8_SIGNED: [ComputeOp; 11] = [
+    ComputeOp::Prep,
+    ComputeOp::InvertMsb { bit: 7 },
+    ComputeOp::AddMsb,
+    ComputeOp::AddShift { bit: 6 },
+    ComputeOp::AddShift { bit: 5 },
+    ComputeOp::AddShift { bit: 4 },
+    ComputeOp::AddShift { bit: 3 },
+    ComputeOp::AddShift { bit: 2 },
+    ComputeOp::AddShift { bit: 1 },
+    ComputeOp::AddLsb,
+    ComputeOp::Accumulate,
+];
+static SCHED_8_UNSIGNED: [ComputeOp; 10] = [
+    ComputeOp::Prep,
+    ComputeOp::AddShift { bit: 7 },
+    ComputeOp::AddShift { bit: 6 },
+    ComputeOp::AddShift { bit: 5 },
+    ComputeOp::AddShift { bit: 4 },
+    ComputeOp::AddShift { bit: 3 },
+    ComputeOp::AddShift { bit: 2 },
+    ComputeOp::AddShift { bit: 1 },
+    ComputeOp::AddLsb,
+    ComputeOp::Accumulate,
+];
+
+/// The compute schedule for one MAC2 (excludes weight copies): a static
+/// table shared by every engine and both execution fidelities.
+pub fn compute_schedule(precision: Precision, signed_inputs: bool) -> &'static [ComputeOp] {
+    match (precision, signed_inputs) {
+        (Precision::Int2, true) => &SCHED_2_SIGNED,
+        (Precision::Int2, false) => &SCHED_2_UNSIGNED,
+        (Precision::Int4, true) => &SCHED_4_SIGNED,
+        (Precision::Int4, false) => &SCHED_4_UNSIGNED,
+        (Precision::Int8, true) => &SCHED_8_SIGNED,
+        (Precision::Int8, false) => &SCHED_8_UNSIGNED,
     }
-    for &bit in &bits {
-        if bit == 0 {
-            ops.push(ComputeOp::AddLsb);
-        } else {
-            ops.push(ComputeOp::AddShift { bit });
-        }
-    }
-    ops.push(ComputeOp::Accumulate);
-    ops
 }
 
 /// Steady-state MAC2 latency in *dummy-array* cycles: `n+3` signed /
@@ -192,6 +246,12 @@ impl Engine {
         self.array.peek(Row::Acc).lanes_signed(self.precision)
     }
 
+    /// [`Engine::acc_lanes`] into a caller-owned buffer (hot path; no
+    /// allocation). Returns the number of lanes written.
+    pub fn acc_lanes_into(&self, out: &mut [i64]) -> usize {
+        self.array.peek(Row::Acc).lanes_signed_into(self.precision, out)
+    }
+
     /// Read the latest MAC2 result lanes (row P).
     pub fn p_lanes(&self) -> Vec<i64> {
         self.array.peek(Row::P).lanes_signed(self.precision)
@@ -222,7 +282,7 @@ mod tests {
         engine.array.new_cycle();
         engine.copy_weight(Row::W2, sign_extend_word(pack_word(w2, p, true), p));
         let inputs = Mac2Inputs { i1, i2, signed };
-        for op in compute_schedule(p, signed) {
+        for &op in compute_schedule(p, signed) {
             engine.array.new_cycle();
             engine.exec(op, inputs);
         }
@@ -239,6 +299,40 @@ mod tests {
         assert_eq!(mac2_compute_cycles(Precision::Int2, false), 4);
         assert_eq!(mac2_compute_cycles(Precision::Int4, false), 6);
         assert_eq!(mac2_compute_cycles(Precision::Int8, false), 10);
+    }
+
+    #[test]
+    fn static_tables_match_generated() {
+        // Re-derive each schedule from first principles (the Vec builder
+        // the tables replaced) and pin the static tables against it.
+        fn generate(p: Precision, signed: bool) -> Vec<ComputeOp> {
+            let n = p.bits();
+            let mut ops = vec![ComputeOp::Prep];
+            let mut bits: Vec<u32> = (0..n).rev().collect();
+            if signed {
+                let msb = bits.remove(0);
+                ops.push(ComputeOp::InvertMsb { bit: msb });
+                ops.push(ComputeOp::AddMsb);
+            }
+            for &bit in &bits {
+                if bit == 0 {
+                    ops.push(ComputeOp::AddLsb);
+                } else {
+                    ops.push(ComputeOp::AddShift { bit });
+                }
+            }
+            ops.push(ComputeOp::Accumulate);
+            ops
+        }
+        for p in Precision::ALL {
+            for signed in [true, false] {
+                assert_eq!(
+                    generate(p, signed),
+                    compute_schedule(p, signed),
+                    "{p} signed={signed}"
+                );
+            }
+        }
     }
 
     #[test]

@@ -1,0 +1,307 @@
+//! Fast-fidelity MAC2 execution: word-level SWAR evaluation with
+//! closed-form cycle accounting, bit-identical to the eFSM.
+//!
+//! §IV-C: "Since the dummy array's behavior is deterministic for
+//! computing MAC2, we propose to control it using an eFSM." Determinism
+//! cuts both ways — the eFSM's *result* and its *cycle count* are both
+//! closed-form functions of the operands and the schedule, so a
+//! production simulator does not have to step micro-ops against the
+//! port-checked [`super::dummy_array::DummyArray`] to know either. This
+//! module evaluates one MAC2 across **all lanes of a word at once**
+//! using the same SWAR limb arithmetic the SIMD adder is built from
+//! ([`add_lanes`] / [`shift_left_lanes`] / [`invert`], i.e. the
+//! `swar_masks` machinery of [`super::simd_adder`]), replaying the
+//! eFSM's op sequence *arithmetically*:
+//!
+//! ```text
+//! Prep          W12 = add_lanes(W1, W2)             P = 0
+//! InvertMsb     INV = invert(sel(n-1))                       (signed)
+//! AddMsb        P   = shift(add_lanes(P, INV, cin=1))        (signed)
+//! AddShift(i)   P   = shift(add_lanes(P, sel(i)))      0 < i < n-1
+//! AddLsb        P   = add_lanes(P, sel(0))
+//! Accumulate    ACC = add_lanes(ACC, P)
+//! ```
+//!
+//! Every step calls the *identical* functions the bit-accurate engine's
+//! `adder_pass` dispatches to, in the identical order — the fast path
+//! is the eFSM schedule with the dummy-array bookkeeping (per-cycle
+//! port budgeting, read/write counters, trace hooks, micro-op dispatch)
+//! stripped away. Bit-identity therefore holds **by construction**,
+//! including lane wrap-around at the `4n`-bit extended width, and is
+//! additionally proven against the stepped engine in this module's
+//! tests and end-to-end in `tests/fidelity_diff.rs`.
+//!
+//! Cycle accounting is unchanged: the block model already charges MAC2s
+//! from the closed-form schedule length (`Variant::mac2_cycles`,
+//! Table II), so the fast path charges the exact same increments —
+//! `StreamStats` and `ScheduleStats` are bit-identical across
+//! fidelities, not merely equivalent.
+//!
+//! The same "keep the bit-exact model as the oracle, run the fast
+//! functional model in the loop" discipline is standard in large-scale
+//! accelerator simulation; the eFSM path remains the differential-
+//! testing oracle (`ExecFidelity::BitAccurate`).
+
+use crate::arch::Precision;
+
+use super::row::Row160;
+use super::simd_adder::{add_lanes, invert, shift_left_lanes};
+
+/// Execution fidelity of a BRAMAC block / pool.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, Default)]
+pub enum ExecFidelity {
+    /// Step every micro-op through the port-checked dummy array — the
+    /// oracle. Slow, but validates the hardware schedule itself.
+    #[default]
+    BitAccurate,
+    /// Evaluate whole words with SWAR arithmetic and charge cycles from
+    /// the closed-form model. Bit-identical results and stats.
+    Fast,
+}
+
+impl ExecFidelity {
+    pub const ALL: [ExecFidelity; 2] = [ExecFidelity::BitAccurate, ExecFidelity::Fast];
+
+    pub fn name(self) -> &'static str {
+        match self {
+            ExecFidelity::BitAccurate => "bit-accurate",
+            ExecFidelity::Fast => "fast",
+        }
+    }
+
+    /// Fidelity from the environment (the CI matrix hook: the tier-1
+    /// suite runs once per fidelity so the oracle path can never
+    /// silently rot). `BRAMAC_FIDELITY` is consulted first, then bare
+    /// `FIDELITY`; unset means the bit-accurate oracle — the
+    /// conservative default.
+    ///
+    /// Error handling differs by name on purpose. `BRAMAC_FIDELITY` is
+    /// unambiguously ours, so a set-but-unparseable value **panics**: a
+    /// typo'd matrix leg silently falling back to the oracle would
+    /// re-run the same suite twice and erase the fast path's env-driven
+    /// coverage with both legs green. Bare `FIDELITY` is a generic name
+    /// another tool on the machine could own, so an unparseable value
+    /// there warns once on stderr and falls back to the oracle instead
+    /// of aborting unrelated library use.
+    pub fn from_env() -> ExecFidelity {
+        if let Ok(v) = std::env::var("BRAMAC_FIDELITY") {
+            return match v.trim().parse() {
+                Ok(f) => f,
+                Err(e) => panic!("invalid BRAMAC_FIDELITY environment variable: {e}"),
+            };
+        }
+        match std::env::var("FIDELITY") {
+            Ok(v) => v.trim().parse().unwrap_or_else(|e| {
+                static WARN: std::sync::Once = std::sync::Once::new();
+                WARN.call_once(|| {
+                    eprintln!("warning: ignoring FIDELITY environment variable: {e}")
+                });
+                ExecFidelity::BitAccurate
+            }),
+            Err(_) => ExecFidelity::BitAccurate,
+        }
+    }
+}
+
+impl std::str::FromStr for ExecFidelity {
+    type Err = String;
+
+    fn from_str(s: &str) -> Result<Self, Self::Err> {
+        match s {
+            "bit-accurate" | "bitaccurate" | "bit_accurate" | "oracle" => {
+                Ok(ExecFidelity::BitAccurate)
+            }
+            "fast" => Ok(ExecFidelity::Fast),
+            other => Err(format!("unknown fidelity '{other}' (bit-accurate|fast)")),
+        }
+    }
+}
+
+impl std::fmt::Display for ExecFidelity {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.name())
+    }
+}
+
+/// The 2-to-4 demux, resolved to a row value: which of
+/// {0, W1, W2, W1+W2} the input-bit pair selects (§III-C1).
+#[inline]
+fn select<'a>(
+    w1: &'a Row160,
+    w2: &'a Row160,
+    w12: &'a Row160,
+    i1: i64,
+    i2: i64,
+    bit: u32,
+) -> &'a Row160 {
+    match ((i2 >> bit) & 1, (i1 >> bit) & 1) {
+        (0, 0) => &Row160::ZERO,
+        (0, 1) => w1,
+        (1, 0) => w2,
+        _ => w12,
+    }
+}
+
+/// One MAC2 across every lane of a sign-extended word pair: returns the
+/// new P row (`P = W1*I1 + W2*I2` per lane, exact arithmetic mod the
+/// `4n`-bit lane width — identical to the stepped eFSM). `w1`/`w2` are
+/// the sign-extended rows the copy cycles would have written
+/// ([`super::signext::sign_extend_word`]).
+pub fn mac2_row_fast(
+    w1: &Row160,
+    w2: &Row160,
+    i1: i64,
+    i2: i64,
+    p: Precision,
+    signed: bool,
+) -> Row160 {
+    let n = p.bits();
+    // Prep: W12 = W1 + W2, P = 0.
+    let w12 = add_lanes(w1, w2, p, false);
+    let mut pr = Row160::ZERO;
+    // MSB: binary subtraction via InvertMsb + AddMsb when signed
+    // (P = (P + inv(psum) + 1) << 1), a plain AddShift when unsigned.
+    let msb = select(w1, w2, &w12, i1, i2, n - 1);
+    pr = if signed {
+        shift_left_lanes(&add_lanes(&pr, &invert(msb), p, true), p)
+    } else {
+        shift_left_lanes(&add_lanes(&pr, msb, p, false), p)
+    };
+    // Remaining bits n-2..=0: AddShift until the LSB, which is a plain
+    // add (no shift).
+    let mut bit = n - 1;
+    while bit > 0 {
+        bit -= 1;
+        let sel = select(w1, w2, &w12, i1, i2, bit);
+        let sum = add_lanes(&pr, sel, p, false);
+        pr = if bit == 0 { sum } else { shift_left_lanes(&sum, p) };
+    }
+    pr
+}
+
+/// The Accumulate step: fold a MAC2 result row into the accumulator row
+/// (lane-wise wrap-add, exactly the engine's final `adder_pass`).
+pub fn accumulate_row(acc: &Row160, p_row: &Row160, p: Precision) -> Row160 {
+    add_lanes(acc, p_row, p, false)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::bramac::dummy_array::Row;
+    use crate::bramac::efsm::{compute_schedule, Engine, Mac2Inputs};
+    use crate::bramac::mac2::mac2_golden;
+    use crate::bramac::signext::{pack_word, sign_extend_word};
+    use crate::util::Rng;
+
+    #[test]
+    fn fidelity_parses_and_names() {
+        for f in ExecFidelity::ALL {
+            assert_eq!(f.name().parse::<ExecFidelity>().unwrap(), f);
+            assert_eq!(f.to_string(), f.name());
+        }
+        assert_eq!("oracle".parse::<ExecFidelity>().unwrap(), ExecFidelity::BitAccurate);
+        assert!("bogus".parse::<ExecFidelity>().is_err());
+        assert_eq!(ExecFidelity::default(), ExecFidelity::BitAccurate);
+    }
+
+    /// Step one full MAC2 through the bit-accurate engine (copy + the
+    /// schedule) and return the resulting P row.
+    fn engine_p_row(
+        p: Precision,
+        w1: &Row160,
+        w2: &Row160,
+        i1: i64,
+        i2: i64,
+        signed: bool,
+    ) -> Row160 {
+        let mut e = Engine::new(p);
+        e.array.new_cycle();
+        e.copy_weight(Row::W1, *w1);
+        e.array.new_cycle();
+        e.copy_weight(Row::W2, *w2);
+        let inputs = Mac2Inputs { i1, i2, signed };
+        for &op in compute_schedule(p, signed) {
+            e.array.new_cycle();
+            e.exec(op, inputs);
+        }
+        e.array.peek(Row::P)
+    }
+
+    #[test]
+    fn fast_p_row_is_bit_identical_to_engine_random() {
+        let mut rng = Rng::seed_from_u64(0xfa57);
+        for p in Precision::ALL {
+            for signed in [true, false] {
+                let (lo_w, hi_w) = p.range();
+                let (lo_i, hi_i) = if signed { p.range() } else { p.range_unsigned() };
+                for _ in 0..200 {
+                    let lanes = p.lanes_per_word();
+                    let wv1: Vec<i64> = (0..lanes)
+                        .map(|_| rng.gen_range_i64(lo_w as i64, hi_w as i64))
+                        .collect();
+                    let wv2: Vec<i64> = (0..lanes)
+                        .map(|_| rng.gen_range_i64(lo_w as i64, hi_w as i64))
+                        .collect();
+                    let i1 = rng.gen_range_i64(lo_i as i64, hi_i as i64);
+                    let i2 = rng.gen_range_i64(lo_i as i64, hi_i as i64);
+                    let w1 = sign_extend_word(pack_word(&wv1, p, true), p);
+                    let w2 = sign_extend_word(pack_word(&wv2, p, true), p);
+                    let fast = mac2_row_fast(&w1, &w2, i1, i2, p, signed);
+                    let oracle = engine_p_row(p, &w1, &w2, i1, i2, signed);
+                    assert_eq!(fast, oracle, "p={p} signed={signed}");
+                    // And both equal the golden scalar per lane.
+                    for lane in 0..lanes {
+                        assert_eq!(
+                            fast.lane_signed(lane, p.ext_bits()),
+                            mac2_golden(wv1[lane], wv2[lane], i1, i2, p.bits(), signed),
+                            "p={p} signed={signed} lane={lane}"
+                        );
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn fast_path_exhaustive_2bit() {
+        let p = Precision::Int2;
+        for signed in [true, false] {
+            let (lo_i, hi_i) = if signed { (-2i64, 1) } else { (0i64, 3) };
+            for wv1 in -2i64..=1 {
+                for wv2 in -2i64..=1 {
+                    for i1 in lo_i..=hi_i {
+                        for i2 in lo_i..=hi_i {
+                            let w1 = sign_extend_word(pack_word(&[wv1], p, true), p);
+                            let w2 = sign_extend_word(pack_word(&[wv2], p, true), p);
+                            let fast = mac2_row_fast(&w1, &w2, i1, i2, p, signed);
+                            assert_eq!(
+                                fast.lane_signed(0, p.ext_bits()),
+                                wv1 * i1 + wv2 * i2,
+                                "signed={signed} w=({wv1},{wv2}) i=({i1},{i2})"
+                            );
+                            let oracle = engine_p_row(p, &w1, &w2, i1, i2, signed);
+                            assert_eq!(fast, oracle);
+                        }
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn accumulate_row_wraps_like_engine_accumulate() {
+        // Accumulate is the engine's adder_pass(Sum) on (ACC, P): a
+        // lane-wise wrap-add. Saturating behavior would diverge — pin
+        // the wrap explicitly at the 8-bit lane width of Int2.
+        let p = Precision::Int2;
+        let mut acc = Row160::ZERO;
+        let mut one = Row160::ZERO;
+        one.set_lane(0, 8, 0x7F);
+        acc = accumulate_row(&acc, &one, p);
+        acc = accumulate_row(&acc, &one, p);
+        // 0x7F + 0x7F = 0xFE → -2 at 8 bits, and no carry into lane 1.
+        assert_eq!(acc.lane_signed(0, 8), -2);
+        assert_eq!(acc.lane(1, 8), 0);
+    }
+}

@@ -16,20 +16,26 @@
 //! * [`instr`] — the 40-bit CIM instruction formats (Fig 6).
 //! * [`efsm`] — the embedded FSM: a cycle-stepped micro-op schedule
 //!   reproducing the pipeline diagrams of Fig 4 / Fig 5.
+//! * [`fastpath`] — the fast execution fidelity: word-level SWAR MAC2
+//!   evaluation with closed-form cycle accounting, bit-identical to the
+//!   eFSM (which stays on as the differential-testing oracle).
 //! * [`block`] — the full BRAMAC block (main 512×40 BRAM + 1 or 2 dummy
-//!   engines), the MEM/CIM modes, and the port-freeing behavior that
-//!   enables tiling-based acceleration.
+//!   engines), the MEM/CIM modes, the [`fastpath::ExecFidelity`] switch,
+//!   and the port-freeing behavior that enables tiling-based
+//!   acceleration.
 
 pub mod block;
 pub mod dummy_array;
 pub mod efsm;
+pub mod fastpath;
 pub mod instr;
 pub mod mac2;
 pub mod row;
 pub mod signext;
 pub mod simd_adder;
 
-pub use block::{BramacBlock, StreamStats, Variant};
+pub use block::{BramacBlock, StreamStats, Variant, MAX_LANES};
+pub use fastpath::ExecFidelity;
 pub use instr::CimInstr;
 pub use mac2::{mac2_golden, mac2_lanes_golden};
 pub use row::Row160;

@@ -94,6 +94,22 @@ impl Row160 {
         (0..p.lanes_per_word()).map(|l| self.lane_signed(l, w)).collect()
     }
 
+    /// [`Row160::lanes_signed`] into a caller-owned buffer: the hot-path
+    /// variant (§Perf iteration 8 — accumulator readout used to allocate
+    /// one `Vec` per flush). `out` must hold at least
+    /// `p.lanes_per_word()` slots; returns the number of lanes written.
+    pub fn lanes_signed_into(&self, p: Precision, out: &mut [i64]) -> usize {
+        let w = p.ext_bits();
+        let lanes = p.lanes_per_word();
+        // Slicing (not `take`) makes an undersized buffer panic in
+        // release builds too — silent truncation would hand the caller
+        // a lane count its buffer does not actually hold.
+        for (l, slot) in out[..lanes].iter_mut().enumerate() {
+            *slot = self.lane_signed(l, w);
+        }
+        lanes
+    }
+
     /// Select a 40-bit window `col` (0..4) — how the accumulator row is
     /// read out 40 bits per cycle through the output crossbar (§IV-C).
     pub fn word40(&self, col: usize) -> u64 {
@@ -169,6 +185,21 @@ mod tests {
         // silently truncated it to -128.
         let mut r = Row160::ZERO;
         r.set_lane_signed(0, 8, 128);
+    }
+
+    #[test]
+    fn lanes_signed_into_matches_vec_variant() {
+        let mut r = Row160::ZERO;
+        for p in Precision::ALL {
+            let w = p.ext_bits();
+            for l in 0..p.lanes_per_word() {
+                r.set_lane(l, w, (l as u32).wrapping_mul(0x9e37_79b9));
+            }
+            let mut buf = [0i64; 20];
+            let lanes = r.lanes_signed_into(p, &mut buf);
+            assert_eq!(lanes, p.lanes_per_word());
+            assert_eq!(&buf[..lanes], r.lanes_signed(p).as_slice(), "{p}");
+        }
     }
 
     #[test]

@@ -17,6 +17,7 @@
 
 use anyhow::{ensure, Result};
 
+use crate::bramac::ExecFidelity;
 use crate::quant::IntMatrix;
 
 use super::shard::{ShardedPool, ShardedResident};
@@ -117,6 +118,15 @@ impl Router {
 
     pub fn replica_count(&self) -> usize {
         self.replicas.len()
+    }
+
+    /// Execution fidelity of replica 0's pools (replicas are built
+    /// identically; set it on the pools before [`Router::new`], e.g.
+    /// `ShardedPool::with_fidelity`). Routing decisions depend only on
+    /// simulated cycles, which are bit-identical across fidelities — so
+    /// a fast router replays a bit-accurate router's trace exactly.
+    pub fn fidelity(&self) -> ExecFidelity {
+        self.replicas[0].pool.fidelity()
     }
 
     /// Deterministic replica choice under the configured policy.
@@ -230,6 +240,33 @@ mod tests {
             stats.weight_copy_cycles,
             stats.per_replica.iter().map(|r| r.weight_copy_cycles).sum::<u64>()
         );
+    }
+
+    #[test]
+    fn fast_router_replays_bit_accurate_trace() {
+        // Same traffic through a bit-accurate and a fast replica group:
+        // identical replica choices, results, and stats — the routing
+        // state (outstanding simulated cycles) is bit-identical.
+        let mut rng = Rng::seed_from_u64(0xfa40);
+        let p = Precision::Int4;
+        let w = IntMatrix::random(&mut rng, 40, 96, p);
+        let build = |fidelity: ExecFidelity| {
+            let pools: Vec<ShardedPool> = (0..2)
+                .map(|_| ShardedPool::new(Variant::OneDA, 2, 2, p).with_fidelity(fidelity))
+                .collect();
+            Router::new(Policy::LeastOutstanding, pools, &w).unwrap()
+        };
+        let mut oracle = build(ExecFidelity::BitAccurate);
+        let mut fast = build(ExecFidelity::Fast);
+        assert_eq!(fast.fidelity(), ExecFidelity::Fast);
+        for turn in 0..6 {
+            let x = random_vector(&mut rng, 96, p, true);
+            let (yo, ro) = oracle.dispatch(&x, true);
+            let (yf, rf) = fast.dispatch(&x, true);
+            assert_eq!(yf, yo, "turn {turn}");
+            assert_eq!(rf, ro, "turn {turn}: replica choice must replay");
+        }
+        assert_eq!(fast.stats(), oracle.stats());
     }
 
     #[test]

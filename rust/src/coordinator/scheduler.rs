@@ -41,8 +41,9 @@
 //! [`super::workers::auto_threads`].
 
 use crate::arch::Precision;
+use crate::bramac::block::LaneBuf;
 use crate::bramac::signext::pack_word;
-use crate::bramac::{BramacBlock, Variant};
+use crate::bramac::{BramacBlock, ExecFidelity, StreamStats, Variant, MAX_LANES};
 use crate::quant::IntMatrix;
 use crate::storage::resident::{ResidentModel, ResidentTile};
 
@@ -100,16 +101,28 @@ pub struct BlockPool {
     threads: usize,
     /// Memoized tile plans for repeated same-shape dispatches.
     plan_cache: PlanCache,
+    /// Execution fidelity of every block: the bit-accurate eFSM oracle
+    /// or the word-level SWAR fast path — bit-identical results and
+    /// stats either way (`tests/fidelity_diff.rs`).
+    fidelity: ExecFidelity,
 }
 
 impl BlockPool {
+    /// A pool at the fidelity named by the `FIDELITY` env var
+    /// (bit-accurate when unset — the conservative default; the CI
+    /// matrix sets `FIDELITY=fast` to run the whole suite on the fast
+    /// path). Use [`BlockPool::with_fidelity`] for an explicit choice.
     pub fn new(variant: Variant, count: usize, precision: Precision) -> Self {
         assert!(count > 0);
+        let fidelity = ExecFidelity::from_env();
         BlockPool {
             variant,
-            blocks: (0..count).map(|_| BramacBlock::new(variant, precision)).collect(),
+            blocks: (0..count)
+                .map(|_| BramacBlock::new(variant, precision).with_fidelity(fidelity))
+                .collect(),
             threads: 1,
             plan_cache: PlanCache::new(),
+            fidelity,
         }
     }
 
@@ -119,6 +132,27 @@ impl BlockPool {
     pub fn with_threads(mut self, threads: usize) -> Self {
         self.threads = threads.max(1);
         self
+    }
+
+    /// Builder-style execution fidelity (see [`ExecFidelity`]). Like
+    /// the thread count, fidelity only changes host wall-clock time —
+    /// results, `StreamStats`, and `ScheduleStats` are bit-identical.
+    pub fn with_fidelity(mut self, fidelity: ExecFidelity) -> Self {
+        self.set_fidelity(fidelity);
+        self
+    }
+
+    /// In-place version of [`BlockPool::with_fidelity`]. Safe between
+    /// dispatches (and even mid-stream at the block level).
+    pub fn set_fidelity(&mut self, fidelity: ExecFidelity) {
+        self.fidelity = fidelity;
+        for b in &mut self.blocks {
+            b.set_fidelity(fidelity);
+        }
+    }
+
+    pub fn fidelity(&self) -> ExecFidelity {
+        self.fidelity
     }
 
     /// In-place version of [`BlockPool::with_threads`].
@@ -167,6 +201,13 @@ impl BlockPool {
 
     pub(crate) fn block(&self, i: usize) -> &BramacBlock {
         &self.blocks[i]
+    }
+
+    /// Block `i`'s stream-level counters — diagnostics and the
+    /// cross-fidelity differential tests (`tests/fidelity_diff.rs`
+    /// asserts these are bit-identical across execution engines).
+    pub fn block_stats(&self, i: usize) -> StreamStats {
+        self.blocks[i].stats()
     }
 
     pub(crate) fn block_mut(&mut self, i: usize) -> &mut BramacBlock {
@@ -488,13 +529,10 @@ fn run_block_gemv(
     let mut exposed = 0u64;
     let mut copy = 0u64;
     for tile in tiles {
-        let (out, cost) = account_tile(block, |block| {
+        let ((), cost) = account_tile(block, |block| {
             load_tile_words(block, w, tile);
-            stream_tile_gemv(block, x, tile, 0, p, signed)
+            stream_tile_gemv(block, x, tile, 0, p, signed, &mut y)
         });
-        for (k, v) in out.iter().enumerate() {
-            y[tile.row0 + k] += v;
-        }
         cycles += cost.charged;
         mac2s += cost.mac2s;
         exposed += cost.exposed;
@@ -520,12 +558,9 @@ fn run_block_gemv_resident(
     let mut exposed = 0u64;
     let mut copy = 0u64;
     for rt in tiles {
-        let (out, cost) = account_tile(block, |block| {
-            stream_tile_gemv(block, x, &rt.tile, rt.base, p, signed)
+        let ((), cost) = account_tile(block, |block| {
+            stream_tile_gemv(block, x, &rt.tile, rt.base, p, signed, &mut y)
         });
-        for (k, v) in out.iter().enumerate() {
-            y[rt.tile.row0 + k] += v;
-        }
         cycles += cost.charged;
         mac2s += cost.mac2s;
         exposed += cost.exposed;
@@ -552,15 +587,10 @@ fn run_block_batch2(
     let mut exposed = 0u64;
     let mut copy = 0u64;
     for tile in tiles {
-        let (outs, cost) = account_tile(block, |block| {
+        let ((), cost) = account_tile(block, |block| {
             load_tile_words(block, w, tile);
-            stream_tile_batch2(block, x0, x1, tile, 0, p, signed)
+            stream_tile_batch2(block, x0, x1, tile, 0, p, signed, &mut y)
         });
-        for v in 0..2 {
-            for (k, val) in outs[v].iter().enumerate() {
-                y[v][tile.row0 + k] += val;
-            }
-        }
         cycles += cost.charged;
         mac2s += cost.mac2s;
         exposed += cost.exposed;
@@ -586,14 +616,9 @@ fn run_block_batch2_resident(
     let mut exposed = 0u64;
     let mut copy = 0u64;
     for rt in tiles {
-        let (outs, cost) = account_tile(block, |block| {
-            stream_tile_batch2(block, x0, x1, &rt.tile, rt.base, p, signed)
+        let ((), cost) = account_tile(block, |block| {
+            stream_tile_batch2(block, x0, x1, &rt.tile, rt.base, p, signed, &mut y)
         });
-        for v in 0..2 {
-            for (k, val) in outs[v].iter().enumerate() {
-                y[v][rt.tile.row0 + k] += val;
-            }
-        }
         cycles += cost.charged;
         mac2s += cost.mac2s;
         exposed += cost.exposed;
@@ -602,9 +627,11 @@ fn run_block_batch2_resident(
     BlockRun { y, cycles, mac2s, exposed, copy }
 }
 
-/// Stream one tile's MAC2s against words at `base..base+tile.cols`;
-/// returns the tile's partial outputs (length `tile.rows`). The
+/// Stream one tile's MAC2s against words at `base..base+tile.cols` and
+/// add the tile's partial outputs into `y[tile.row0..]`. The
 /// accumulator flushes whenever the dot exceeds its range (§IV-C).
+/// Accumulation runs through fixed stack buffers — no per-tile or
+/// per-flush allocation (§Perf iteration 8).
 fn stream_tile_gemv(
     block: &mut BramacBlock,
     x: &[i64],
@@ -612,10 +639,11 @@ fn stream_tile_gemv(
     base: u16,
     p: Precision,
     signed: bool,
-) -> Vec<i64> {
-    let lanes = p.lanes_per_word();
+    y: &mut [i64],
+) {
     block.reset_acc();
-    let mut acc = vec![0i64; lanes];
+    let mut acc = [0i64; MAX_LANES];
+    let mut flush: [LaneBuf; 2] = [[0i64; MAX_LANES]; 2];
     let mut since_flush = 0usize;
     let mut j = 0usize;
     while j < tile.cols {
@@ -634,22 +662,27 @@ fn stream_tile_gemv(
         j += 2;
         since_flush += 2;
         if since_flush >= p.max_dot_len() && j < tile.cols {
-            for (k, v) in block.read_accumulators()[0].iter().enumerate() {
-                acc[k] += v;
+            block.read_accumulators_into(&mut flush);
+            for (a, v) in acc.iter_mut().zip(flush[0]) {
+                *a += v;
             }
             block.reset_acc();
             since_flush = 0;
         }
     }
-    for (k, v) in block.read_accumulators()[0].iter().enumerate() {
-        acc[k] += v;
+    block.read_accumulators_into(&mut flush);
+    for (a, v) in acc.iter_mut().zip(flush[0]) {
+        *a += v;
     }
-    acc.truncate(tile.rows);
-    acc
+    for (k, &v) in acc[..tile.rows].iter().enumerate() {
+        y[tile.row0 + k] += v;
+    }
 }
 
 /// Batch-2 tile streamer: both arrays share the weight words at
-/// `base..base+tile.cols`, each consumes its own input vector.
+/// `base..base+tile.cols`, each consumes its own input vector; partial
+/// outputs are added into `y[v][tile.row0..]`.
+#[allow(clippy::too_many_arguments)]
 fn stream_tile_batch2(
     block: &mut BramacBlock,
     x0: &[i64],
@@ -658,15 +691,17 @@ fn stream_tile_batch2(
     base: u16,
     p: Precision,
     signed: bool,
-) -> [Vec<i64>; 2] {
+    y: &mut [Vec<i64>; 2],
+) {
     block.reset_acc();
-    let mut acc = [vec![0i64; p.lanes_per_word()], vec![0i64; p.lanes_per_word()]];
+    let mut acc = [[0i64; MAX_LANES]; 2];
+    let mut bufs: [LaneBuf; 2] = [[0i64; MAX_LANES]; 2];
     let mut since_flush = 0usize;
-    let flush = |block: &mut BramacBlock, acc: &mut [Vec<i64>; 2]| {
-        let got = block.read_accumulators();
+    let mut flush = |block: &mut BramacBlock, acc: &mut [[i64; MAX_LANES]; 2]| {
+        block.read_accumulators_into(&mut bufs);
         for v in 0..2 {
-            for (k, val) in got[v].iter().enumerate() {
-                acc[v][k] += val;
+            for (a, val) in acc[v].iter_mut().zip(bufs[v]) {
+                *a += val;
             }
         }
         block.reset_acc();
@@ -691,10 +726,11 @@ fn stream_tile_batch2(
         }
     }
     flush(block, &mut acc);
-    let mut out = acc;
-    out[0].truncate(tile.rows);
-    out[1].truncate(tile.rows);
-    out
+    for v in 0..2 {
+        for (k, &val) in acc[v][..tile.rows].iter().enumerate() {
+            y[v][tile.row0 + k] += val;
+        }
+    }
 }
 
 #[cfg(test)]
@@ -733,6 +769,27 @@ mod tests {
                 let mut pool = BlockPool::new(variant, 2, p);
                 let (y, _) = pool.run_gemv_signed(&w, &x, false);
                 assert_eq!(y, w.gemv_ref(&x), "{} {p} unsigned", variant.name());
+            }
+        }
+    }
+
+    #[test]
+    fn fast_fidelity_pool_bit_identical() {
+        let mut rng = Rng::seed_from_u64(0xfa57);
+        for variant in Variant::ALL {
+            for p in Precision::ALL {
+                let (m, n) = (33, 70);
+                let w = IntMatrix::random(&mut rng, m, n, p);
+                let x = crate::quant::random_vector(&mut rng, n, p, true);
+                let mut oracle =
+                    BlockPool::new(variant, 3, p).with_fidelity(ExecFidelity::BitAccurate);
+                let mut fast = BlockPool::new(variant, 3, p).with_fidelity(ExecFidelity::Fast);
+                assert_eq!(fast.fidelity(), ExecFidelity::Fast);
+                let (y_o, s_o) = oracle.run_gemv(&w, &x);
+                let (y_f, s_f) = fast.run_gemv(&w, &x);
+                assert_eq!(y_f, y_o, "{} {p}", variant.name());
+                assert_eq!(s_f, s_o, "{} {p}: ScheduleStats must match", variant.name());
+                assert_eq!(y_f, w.gemv_ref(&x));
             }
         }
     }

@@ -17,7 +17,7 @@ use std::time::{Duration, Instant};
 use anyhow::{Context, Result};
 
 use crate::arch::Precision;
-use crate::bramac::Variant;
+use crate::bramac::{ExecFidelity, Variant};
 use crate::dla::{
     config::DlaConfig,
     cycle::{first_touch_cycles, network_cycles_sharded, network_cycles_with, Dataflow},
@@ -165,6 +165,9 @@ pub struct ShardedServerStats {
     pub shards: usize,
     pub replicas: usize,
     pub policy: Option<Policy>,
+    /// Execution fidelity the deployment was started with (recorded;
+    /// see [`InferenceServer`]'s `fidelity` field).
+    pub fidelity: ExecFidelity,
     pub total: ServerStats,
     pub per_replica: Vec<ReplicaServerStats>,
     /// Attributed **compute** cycles per shard (the weight-copy charge
@@ -192,6 +195,14 @@ pub struct InferenceServer {
     /// Replica-routing policy (`None` for the legacy pull-model paths,
     /// whose idle-worker scheduling is emergent least-outstanding).
     pub policy: Option<Policy>,
+    /// Execution fidelity this deployment was started with. The serving
+    /// numerics run through PJRT artifacts (exact integer math in both
+    /// fidelities) and the cycle attribution is closed-form, so the
+    /// knob changes neither replies nor `ServerStats` — it is recorded
+    /// so operators see which engine a pool-backed deployment
+    /// ([`super::Router`] / [`super::ShardedPool`]) would run, and so
+    /// the CLI's `serve --fidelity` choice is observable.
+    pub fidelity: ExecFidelity,
 }
 
 impl InferenceServer {
@@ -231,6 +242,27 @@ impl InferenceServer {
         max_wait: Duration,
         workers: usize,
         dataflow: Dataflow,
+    ) -> Result<Self> {
+        Self::start_with_fidelity(
+            artifact_dir,
+            artifact,
+            max_wait,
+            workers,
+            dataflow,
+            ExecFidelity::from_env(),
+        )
+    }
+
+    /// [`InferenceServer::start_with_dataflow`] with an explicit
+    /// [`ExecFidelity`] (see the `fidelity` field: recorded dispatch
+    /// preference — replies and stats are identical either way).
+    pub fn start_with_fidelity(
+        artifact_dir: PathBuf,
+        artifact: &str,
+        max_wait: Duration,
+        workers: usize,
+        dataflow: Dataflow,
+        fidelity: ExecFidelity,
     ) -> Result<Self> {
         assert!(workers >= 1, "need at least one worker");
         // Read the manifest on the caller's thread for early errors;
@@ -309,6 +341,7 @@ impl InferenceServer {
             dataflow,
             shards: 1,
             policy: None,
+            fidelity,
         })
     }
 
@@ -330,6 +363,31 @@ impl InferenceServer {
         replicas: usize,
         dataflow: Dataflow,
         policy: Policy,
+    ) -> Result<Self> {
+        Self::start_sharded_with_fidelity(
+            artifact_dir,
+            artifact,
+            max_wait,
+            shards,
+            replicas,
+            dataflow,
+            policy,
+            ExecFidelity::from_env(),
+        )
+    }
+
+    /// [`InferenceServer::start_sharded`] with an explicit
+    /// [`ExecFidelity`] (see the `fidelity` field).
+    #[allow(clippy::too_many_arguments)]
+    pub fn start_sharded_with_fidelity(
+        artifact_dir: PathBuf,
+        artifact: &str,
+        max_wait: Duration,
+        shards: usize,
+        replicas: usize,
+        dataflow: Dataflow,
+        policy: Policy,
+        fidelity: ExecFidelity,
     ) -> Result<Self> {
         assert!(shards >= 1, "need at least one shard");
         assert!(replicas >= 1, "need at least one replica");
@@ -469,6 +527,7 @@ impl InferenceServer {
             dataflow,
             shards,
             policy: Some(policy),
+            fidelity,
         })
     }
 
@@ -505,6 +564,7 @@ impl InferenceServer {
             shards: self.shards,
             replicas,
             policy: self.policy,
+            fidelity: self.fidelity,
             total,
             per_replica,
             per_shard_cycles,

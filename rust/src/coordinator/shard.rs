@@ -30,7 +30,7 @@
 use anyhow::Result;
 
 use crate::arch::Precision;
-use crate::bramac::Variant;
+use crate::bramac::{ExecFidelity, Variant};
 use crate::quant::IntMatrix;
 use crate::storage::resident::ResidentModel;
 
@@ -118,6 +118,26 @@ impl ShardedPool {
             pool.set_threads(threads);
         }
         self
+    }
+
+    /// Builder-style execution fidelity for every shard's pool (see
+    /// [`ExecFidelity`]). Bit-identical results and stats either way —
+    /// like the thread counts, fidelity only changes host wall time.
+    pub fn with_fidelity(mut self, fidelity: ExecFidelity) -> Self {
+        self.set_fidelity(fidelity);
+        self
+    }
+
+    /// In-place version of [`ShardedPool::with_fidelity`].
+    pub fn set_fidelity(&mut self, fidelity: ExecFidelity) {
+        for pool in &mut self.pools {
+            pool.set_fidelity(fidelity);
+        }
+    }
+
+    /// The shared execution fidelity of the shard pools.
+    pub fn fidelity(&self) -> ExecFidelity {
+        self.pools[0].fidelity()
     }
 
     pub fn shards(&self) -> usize {
@@ -424,6 +444,23 @@ mod tests {
         // Repeat dispatch: identical stats (plan-cache hit included).
         let (ya2, sa2) = a.run_gemv(&w, &x);
         assert_eq!((ya2, sa2), (ya, sa));
+    }
+
+    #[test]
+    fn sharded_fast_fidelity_bit_identical() {
+        let mut rng = Rng::seed_from_u64(0xfa5d);
+        let p = Precision::Int4;
+        let w = IntMatrix::random(&mut rng, 53, 96, p);
+        let x = random_vector(&mut rng, 96, p, true);
+        let mut oracle =
+            ShardedPool::new(Variant::OneDA, 3, 2, p).with_fidelity(ExecFidelity::BitAccurate);
+        let mut fast =
+            ShardedPool::new(Variant::OneDA, 3, 2, p).with_fidelity(ExecFidelity::Fast);
+        assert_eq!(fast.fidelity(), ExecFidelity::Fast);
+        let (yo, so) = oracle.run_gemv(&w, &x);
+        let (yf, sf) = fast.run_gemv(&w, &x);
+        assert_eq!(yf, yo, "sharded fast path must be bit-identical");
+        assert_eq!(sf, so, "sharded fast stats must be bit-identical");
     }
 
     #[test]

@@ -9,7 +9,7 @@ use std::time::Duration;
 use anyhow::{bail, Result};
 
 use bramac::arch::Precision;
-use bramac::bramac::Variant;
+use bramac::bramac::{ExecFidelity, Variant};
 use bramac::coordinator::batcher::submit_and_wait;
 use bramac::coordinator::server::{InferenceServer, IMAGE_ELEMS};
 use bramac::coordinator::{BlockPool, Policy, ShardedPool};
@@ -19,7 +19,7 @@ use bramac::quant::{random_vector, IntMatrix};
 use bramac::report;
 use bramac::runtime::Manifest;
 use bramac::storage::ResidentModel;
-use bramac::util::bench::compare_bench_json;
+use bramac::util::bench::compare_bench_json_fidelity;
 use bramac::util::Rng;
 
 const HELP: &str = "\
@@ -44,7 +44,7 @@ experiment regeneration (paper tables & figures):
 drivers:
   gemv [--m M] [--n N] [--bits B] [--blocks K] [--variant 2sa|1da]
        [--threads T] [--dataflow tiling|persistent] [--repeat R]
-       [--shards S]
+       [--shards S] [--fidelity bit-accurate|fast]
                   run exact GEMVs on a simulated BRAMAC block pool
                   (T worker threads shard the tile plan; 0 = all cores).
                   persistent pins the weights on-chip once and reruns
@@ -52,10 +52,15 @@ drivers:
                   fit if --blocks was not given); R repeats the same
                   dispatch to show plan-cache + copy savings. S > 1
                   row-shards the matrix over S pools of K blocks each
-                  (bit-identical to a single pool, makespan = max shard)
+                  (bit-identical to a single pool, makespan = max shard).
+                  --fidelity picks the execution engine: bit-accurate
+                  steps the eFSM micro-ops (the validation oracle,
+                  default here), fast evaluates whole words with SWAR
+                  arithmetic — bit-identical results, cycles, and stats
   serve [--requests R] [--window-ms W] [--workers N]
         [--dataflow tiling|persistent] [--shards S] [--replicas G]
         [--policy round-robin|least-outstanding]
+        [--fidelity bit-accurate|fast]
                   start the batched PJRT inference server on a
                   synthetic request stream and report throughput
                   (persistent = warm sessions: weight copies charged
@@ -63,16 +68,20 @@ drivers:
                   the sharded server: cycle attribution models S row
                   shards, and a dispatcher routes batches across G
                   replica groups under the chosen policy, with stats
-                  broken out per shard/replica
+                  broken out per shard/replica. --fidelity (default
+                  fast for serving) records the execution engine;
+                  replies and attribution are identical either way
   check           verify artifacts + PJRT runtime are functional
-  bench-check --current F [--baseline BENCH_pr3.json] [--tolerance 0.2]
-              [--absolute]
+  bench-check --current F [--baseline BENCH_pr4.json] [--tolerance 0.2]
+              [--absolute] [--fidelity bit-accurate|fast]
                   compare a bench-trajectory JSON (written by cargo
                   bench with BENCH_JSON=F) against the committed
                   baseline and fail on wall-time regressions beyond the
                   tolerance; by default ratios are normalized by the
                   suite geomean so a uniformly slower CI host does not
-                  trip the gate (--absolute disables that)
+                  trip the gate (--absolute disables that). Entries
+                  only ever compare within one fidelity; --fidelity
+                  restricts the gate to that fidelity's entries
 ";
 
 fn main() {
@@ -162,6 +171,9 @@ fn cmd_gemv(args: &[String]) -> Result<()> {
     };
     let repeat = repeat.max(1);
     let shards: usize = flag(args, "--shards", 1)?;
+    // gemv is the validation driver, so the eFSM oracle is the default;
+    // serving/bench paths default to the (bit-identical) fast engine.
+    let fidelity: ExecFidelity = flag(args, "--fidelity", ExecFidelity::BitAccurate)?;
     let mut rng = Rng::seed_from_u64(0xce11);
     let w = IntMatrix::random(&mut rng, m, n, p);
     let x = random_vector(&mut rng, n, p, true);
@@ -170,15 +182,20 @@ fn cmd_gemv(args: &[String]) -> Result<()> {
     if shards > 1 {
         return gemv_sharded(
             &w, &x, &y_ref, variant, shards, blocks, blocks_given, threads, dataflow, repeat,
+            fidelity,
         );
     }
 
     // Persistent mode pins the weights once; if --blocks wasn't given,
     // grow the pool until the resident layout fits on-chip.
     let (mut pool, resident) = match dataflow {
-        Dataflow::Tiling => (BlockPool::new(variant, blocks, p).with_threads(threads), None),
+        Dataflow::Tiling => (
+            BlockPool::new(variant, blocks, p).with_threads(threads).with_fidelity(fidelity),
+            None,
+        ),
         Dataflow::Persistent => loop {
-            let mut pool = BlockPool::new(variant, blocks, p).with_threads(threads);
+            let mut pool =
+                BlockPool::new(variant, blocks, p).with_threads(threads).with_fidelity(fidelity);
             match ResidentModel::pin(&mut pool, &w) {
                 Ok(rm) => break (pool, Some(rm)),
                 Err(_) if !blocks_given && blocks < 65_536 => blocks *= 2,
@@ -202,10 +219,12 @@ fn cmd_gemv(args: &[String]) -> Result<()> {
     let dt = t0.elapsed();
     let stats = last_stats.expect("repeat >= 1");
     println!(
-        "GEMV {m}x{n} @ {p} on {blocks}x {} blocks ({} worker threads, {} dataflow, {repeat} dispatches): bit-exact vs reference",
+        "GEMV {m}x{n} @ {p} on {blocks}x {} blocks ({} worker threads, {} dataflow, \
+         {} fidelity, {repeat} dispatches): bit-exact vs reference",
         variant.name(),
         pool.effective_threads(),
-        dataflow.name()
+        dataflow.name(),
+        fidelity.name()
     );
     println!(
         "  per dispatch: tiles={} mac2s={} makespan={} cycles exposed-loads={} copy={} ({} host µs total)",
@@ -273,16 +292,20 @@ fn gemv_sharded(
     threads: usize,
     dataflow: Dataflow,
     repeat: usize,
+    fidelity: ExecFidelity,
 ) -> Result<()> {
     let (m, n, p) = (w.rows, w.cols, w.precision);
     let (mut pool, resident) = match dataflow {
         Dataflow::Tiling => (
-            ShardedPool::new(variant, shards, blocks, p).with_pool_threads(threads),
+            ShardedPool::new(variant, shards, blocks, p)
+                .with_pool_threads(threads)
+                .with_fidelity(fidelity),
             None,
         ),
         Dataflow::Persistent => loop {
-            let mut pool =
-                ShardedPool::new(variant, shards, blocks, p).with_pool_threads(threads);
+            let mut pool = ShardedPool::new(variant, shards, blocks, p)
+                .with_pool_threads(threads)
+                .with_fidelity(fidelity);
             match pool.pin(w) {
                 Ok(sr) => break (pool, Some(sr)),
                 Err(_) if !blocks_given && blocks < 65_536 => blocks *= 2,
@@ -307,9 +330,10 @@ fn gemv_sharded(
     let stats = last_stats.expect("repeat >= 1");
     println!(
         "GEMV {m}x{n} @ {p} row-sharded over {shards} shards x {blocks} {} blocks \
-         ({} dataflow, {repeat} dispatches): bit-exact vs reference",
+         ({} dataflow, {} fidelity, {repeat} dispatches): bit-exact vs reference",
         variant.name(),
-        dataflow.name()
+        dataflow.name(),
+        fidelity.name()
     );
     println!(
         "  per dispatch: tiles={} mac2s={} makespan={} cycles (max over shards) \
@@ -349,6 +373,9 @@ fn cmd_serve(args: &[String]) -> Result<()> {
     let shards: usize = flag::<usize>(args, "--shards", 1)?.max(1);
     let replicas: usize = flag::<usize>(args, "--replicas", 1)?.max(1);
     let policy: Policy = flag(args, "--policy", Policy::LeastOutstanding)?;
+    // Serving defaults to the fast engine — validation drivers default
+    // to the oracle; both are bit-identical (tests/fidelity_diff.rs).
+    let fidelity: ExecFidelity = flag(args, "--fidelity", ExecFidelity::Fast)?;
     let sharded = shards > 1 || replicas > 1 || args.iter().any(|a| a == "--policy");
     if sharded && args.iter().any(|a| a == "--workers") {
         println!(
@@ -358,7 +385,7 @@ fn cmd_serve(args: &[String]) -> Result<()> {
     }
     let dir = Manifest::default_dir();
     let server = if sharded {
-        InferenceServer::start_sharded(
+        InferenceServer::start_sharded_with_fidelity(
             dir,
             "model",
             Duration::from_millis(window_ms),
@@ -366,30 +393,35 @@ fn cmd_serve(args: &[String]) -> Result<()> {
             replicas,
             dataflow,
             policy,
+            fidelity,
         )?
     } else {
-        InferenceServer::start_with_dataflow(
+        InferenceServer::start_with_fidelity(
             dir,
             "model",
             Duration::from_millis(window_ms),
             workers.max(1),
             dataflow,
+            fidelity,
         )?
     };
     if sharded {
         println!(
             "serving synthetic stream: {requests} requests, batch={} window={window_ms}ms \
-             shards={shards} replicas={replicas} policy={} dataflow={}",
+             shards={shards} replicas={replicas} policy={} dataflow={} fidelity={}",
             server.batch_size,
             policy.name(),
-            dataflow.name()
+            dataflow.name(),
+            server.fidelity.name()
         );
     } else {
         println!(
-            "serving synthetic stream: {requests} requests, batch={} window={window_ms}ms workers={} dataflow={}",
+            "serving synthetic stream: {requests} requests, batch={} window={window_ms}ms \
+             workers={} dataflow={} fidelity={}",
             server.batch_size,
             workers.max(1),
-            dataflow.name()
+            dataflow.name(),
+            server.fidelity.name()
         );
     }
     let t0 = std::time::Instant::now();
@@ -462,11 +494,23 @@ fn cmd_serve(args: &[String]) -> Result<()> {
 /// `bench-check`: the CI perf-regression gate over `BENCH_*.json`
 /// trajectories (written by `cargo bench` with `BENCH_JSON=<file>`).
 fn cmd_bench_check(args: &[String]) -> Result<()> {
-    let baseline_path: String = flag(args, "--baseline", "BENCH_pr3.json".to_string())?;
+    let baseline_path: String = flag(args, "--baseline", "BENCH_pr4.json".to_string())?;
     let current_path: String = flag(args, "--current", String::new())?;
     anyhow::ensure!(!current_path.is_empty(), "--current <file> is required");
     let tolerance: f64 = flag(args, "--tolerance", 0.2)?;
     let absolute = args.iter().any(|a| a == "--absolute");
+    // Optional fidelity restriction. Entries never compare across
+    // fidelities either way; this narrows the gate to one engine's
+    // trajectory (validated eagerly so a typo fails loudly).
+    let fidelity_s: String = flag(args, "--fidelity", String::new())?;
+    let fidelity = if fidelity_s.is_empty() {
+        None
+    } else {
+        let parsed: ExecFidelity = fidelity_s
+            .parse()
+            .map_err(|e: String| anyhow::anyhow!("{e}"))?;
+        Some(parsed.name())
+    };
     let read = |path: &str| -> Result<bramac::util::json::Json> {
         let text = std::fs::read_to_string(path)
             .map_err(|e| anyhow::anyhow!("read {path}: {e}"))?;
@@ -479,17 +523,20 @@ fn cmd_bench_check(args: &[String]) -> Result<()> {
     // comparisons are reported but never fail, and CI's uploaded
     // artifact should be committed as the first real baseline.
     let bootstrap = baseline.get("bootstrap").and_then(|b| b.as_bool()).unwrap_or(false);
-    let deltas = compare_bench_json(&baseline, &current).map_err(|e| anyhow::anyhow!("{e}"))?;
+    let deltas = compare_bench_json_fidelity(&baseline, &current, fidelity)
+        .map_err(|e| anyhow::anyhow!("{e}"))?;
     anyhow::ensure!(
         !deltas.is_empty(),
-        "no overlapping benchmarks between {baseline_path} and {current_path}"
+        "no overlapping benchmarks between {baseline_path} and {current_path}{}",
+        fidelity.map(|f| format!(" at fidelity {f}")).unwrap_or_default()
     );
     println!(
-        "bench-check: {} overlapping benchmarks, tolerance {:.0}% ({}{})",
+        "bench-check: {} overlapping benchmarks, tolerance {:.0}% ({}{}{})",
         deltas.len(),
         tolerance * 100.0,
         if absolute { "absolute ratios" } else { "suite-geomean normalized" },
-        if bootstrap { ", bootstrap baseline" } else { "" }
+        if bootstrap { ", bootstrap baseline" } else { "" },
+        fidelity.map(|f| format!(", fidelity={f}")).unwrap_or_default()
     );
     let mut regressions = 0usize;
     for d in &deltas {
@@ -500,9 +547,13 @@ fn cmd_bench_check(args: &[String]) -> Result<()> {
         } else {
             ""
         };
+        let label = if d.fidelity.is_empty() {
+            format!("{}/{}", d.suite, d.op)
+        } else {
+            format!("{}/{} [{}]", d.suite, d.op, d.fidelity)
+        };
         println!(
-            "  {:<60} {:>12.0} -> {:>12.0} ns  x{:.2} (norm x{:.2}){mark}",
-            format!("{}/{}", d.suite, d.op),
+            "  {label:<60} {:>12.0} -> {:>12.0} ns  x{:.2} (norm x{:.2}){mark}",
             d.baseline_ns,
             d.current_ns,
             d.ratio,

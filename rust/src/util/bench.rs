@@ -39,6 +39,10 @@ pub struct BenchResult {
     pub cycles: u64,
     pub threads: usize,
     pub shards: usize,
+    /// Execution fidelity the entry was measured under (`""` = not
+    /// recorded). Part of the comparison key: [`compare_bench_json`]
+    /// never compares entries across fidelities.
+    pub fidelity: &'static str,
 }
 
 /// Metadata attached to a benchmark entry via [`Bench::bench_meta`].
@@ -47,6 +51,9 @@ pub struct BenchMeta {
     pub cycles: u64,
     pub threads: usize,
     pub shards: usize,
+    /// Execution fidelity label (e.g. `ExecFidelity::name()`); `""`
+    /// when the benchmark is fidelity-independent.
+    pub fidelity: &'static str,
 }
 
 pub struct Bench {
@@ -126,6 +133,7 @@ impl Bench {
             cycles: 0,
             threads: 0,
             shards: 0,
+            fidelity: "",
         });
         self.results.last().unwrap()
     }
@@ -138,6 +146,7 @@ impl Bench {
         last.cycles = meta.cycles;
         last.threads = meta.threads;
         last.shards = meta.shards;
+        last.fidelity = meta.fidelity;
         self.results.last().unwrap()
     }
 
@@ -163,6 +172,7 @@ impl Bench {
                         ("cycles", Json::Num(r.cycles as f64)),
                         ("threads", Json::Num(r.threads as f64)),
                         ("shards", Json::Num(r.shards as f64)),
+                        ("fidelity", Json::Str(r.fidelity.to_string())),
                     ])
                 })
                 .collect(),
@@ -218,6 +228,10 @@ impl Bench {
 pub struct BenchDelta {
     pub suite: String,
     pub op: String,
+    /// Execution fidelity both sides were measured under (`""` when
+    /// neither recorded one). Entries only pair up within a fidelity —
+    /// a fast-path number never gates against a bit-accurate baseline.
+    pub fidelity: String,
     pub baseline_ns: f64,
     pub current_ns: f64,
     /// `current / baseline` wall-time ratio (raw).
@@ -229,8 +243,12 @@ pub struct BenchDelta {
     pub normalized: f64,
 }
 
-/// Flatten a bench-trajectory document into `(suite, op) -> wall_ns`.
-fn flatten_wall_ns(doc: &Json) -> Result<BTreeMap<(String, String), f64>, String> {
+/// Flatten a bench-trajectory document into
+/// `(suite, op, fidelity) -> wall_ns`. Entries without a `fidelity`
+/// field (pre-PR 4 trajectories, fidelity-independent benchmarks) key
+/// under `""` — they still compare against each other, but never
+/// against a fidelity-tagged entry.
+fn flatten_wall_ns(doc: &Json) -> Result<BTreeMap<(String, String, String), f64>, String> {
     let suites = doc
         .get("suites")
         .and_then(Json::as_obj)
@@ -249,22 +267,44 @@ fn flatten_wall_ns(doc: &Json) -> Result<BTreeMap<(String, String), f64>, String
                 .get("wall_ns")
                 .and_then(Json::as_f64)
                 .ok_or_else(|| format!("{suite}/{op}: missing 'wall_ns'"))?;
-            out.insert((suite.clone(), op.to_string()), ns);
+            let fidelity = entry
+                .get("fidelity")
+                .and_then(Json::as_str)
+                .unwrap_or("")
+                .to_string();
+            out.insert((suite.clone(), op.to_string(), fidelity), ns);
         }
     }
     Ok(out)
 }
 
 /// Compare two bench-trajectory documents over their overlapping
-/// `(suite, op)` entries. Returns one [`BenchDelta`] per overlap, in
-/// deterministic (suite, op) order, with `normalized` already computed;
-/// the caller applies its tolerance.
+/// `(suite, op, fidelity)` entries. Returns one [`BenchDelta`] per
+/// overlap, in deterministic key order, with `normalized` already
+/// computed; the caller applies its tolerance.
 pub fn compare_bench_json(baseline: &Json, current: &Json) -> Result<Vec<BenchDelta>, String> {
+    compare_bench_json_fidelity(baseline, current, None)
+}
+
+/// [`compare_bench_json`] restricted to one fidelity (the `bench-check
+/// --fidelity` pass-through): only entries whose `fidelity` field
+/// equals `fidelity` are compared, and the normalizing geomean is
+/// computed over that subset alone.
+pub fn compare_bench_json_fidelity(
+    baseline: &Json,
+    current: &Json,
+    fidelity: Option<&str>,
+) -> Result<Vec<BenchDelta>, String> {
     let base = flatten_wall_ns(baseline)?;
     let cur = flatten_wall_ns(current)?;
     let mut deltas = Vec::new();
-    for ((suite, op), &baseline_ns) in &base {
-        let Some(&current_ns) = cur.get(&(suite.clone(), op.clone())) else {
+    for ((suite, op, fid), &baseline_ns) in &base {
+        if let Some(want) = fidelity {
+            if fid != want {
+                continue;
+            }
+        }
+        let Some(&current_ns) = cur.get(&(suite.clone(), op.clone(), fid.clone())) else {
             continue;
         };
         if baseline_ns <= 0.0 || current_ns <= 0.0 {
@@ -273,6 +313,7 @@ pub fn compare_bench_json(baseline: &Json, current: &Json) -> Result<Vec<BenchDe
         deltas.push(BenchDelta {
             suite: suite.clone(),
             op: op.clone(),
+            fidelity: fid.clone(),
             baseline_ns,
             current_ns,
             ratio: current_ns / baseline_ns,
@@ -329,11 +370,13 @@ mod tests {
     #[test]
     fn bench_meta_records_metadata() {
         let mut b = Bench::new("selftest").with_target_time(Duration::from_millis(10));
-        let meta = BenchMeta { cycles: 1234, threads: 4, shards: 2 };
+        let meta = BenchMeta { cycles: 1234, threads: 4, shards: 2, fidelity: "fast" };
         let r = b.bench_meta("tagged", meta, || {
             black_box(1 + 1);
         });
-        assert_eq!((r.cycles, r.threads, r.shards), (1234, 4, 2));
+        assert_eq!((r.cycles, r.threads, r.shards, r.fidelity), (1234, 4, 2, "fast"));
+        // Default meta leaves fidelity unrecorded.
+        assert_eq!(BenchMeta::default().fidelity, "");
     }
 
     #[test]
@@ -359,8 +402,47 @@ mod tests {
         assert!(suites.contains_key("suite_b"));
         let flat = flatten_wall_ns(&doc).unwrap();
         assert_eq!(flat.len(), 2);
-        assert!(flat[&("suite_a".to_string(), "op1".to_string())] > 0.0);
+        assert!(flat[&("suite_a".to_string(), "op1".to_string(), String::new())] > 0.0);
         let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn fidelities_never_compare_against_each_other() {
+        // The same op measured at two fidelities: only same-fidelity
+        // pairs produce deltas, untagged entries pair with untagged.
+        let baseline = json::parse(
+            r#"{"suites": {"s": [
+                {"op": "gemv", "wall_ns": 100, "fidelity": "bit-accurate"},
+                {"op": "gemv", "wall_ns": 10, "fidelity": "fast"},
+                {"op": "plain", "wall_ns": 50}
+            ]}}"#,
+        )
+        .unwrap();
+        let current = json::parse(
+            r#"{"suites": {"s": [
+                {"op": "gemv", "wall_ns": 120, "fidelity": "bit-accurate"},
+                {"op": "gemv", "wall_ns": 11, "fidelity": "fast"},
+                {"op": "plain", "wall_ns": 55}
+            ]}}"#,
+        )
+        .unwrap();
+        let deltas = compare_bench_json(&baseline, &current).unwrap();
+        assert_eq!(deltas.len(), 3);
+        for d in &deltas {
+            // Every pairing is within one fidelity: a cross pairing
+            // would show a wild ratio (10 vs 120 = 12x); same-fidelity
+            // ratios here all sit in [1.0, 1.3].
+            assert!(d.ratio < 1.3, "{d:?}");
+        }
+        // The --fidelity pass-through restricts the comparison (and its
+        // normalizing geomean) to one fidelity.
+        let fast = compare_bench_json_fidelity(&baseline, &current, Some("fast")).unwrap();
+        assert_eq!(fast.len(), 1);
+        assert_eq!(fast[0].fidelity, "fast");
+        assert!((fast[0].ratio - 1.1).abs() < 1e-9);
+        assert!((fast[0].normalized - 1.0).abs() < 1e-9, "geomean over the subset");
+        let none = compare_bench_json_fidelity(&baseline, &current, Some("nope")).unwrap();
+        assert!(none.is_empty());
     }
 
     #[test]

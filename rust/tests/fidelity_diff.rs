@@ -1,0 +1,195 @@
+//! Differential fidelity property suite: the fast SWAR execution
+//! engine (`ExecFidelity::Fast`) must be **bit-identical** to the
+//! bit-accurate eFSM oracle — results *and* every cycle/stat counter —
+//! across random models × {2,4,8}-bit × signed/unsigned × {2SA,1DA} ×
+//! {tiling, persistent} × shard counts {1, 3}. This is the invariant
+//! that lets production serving run the fast engine while the eFSM
+//! stays on as the differential-testing oracle: any divergence in lane
+//! arithmetic *or* in cycle accounting fails here, not in production.
+
+use bramac::arch::Precision;
+use bramac::bramac::{ExecFidelity, Variant};
+use bramac::coordinator::{BlockPool, ShardedPool};
+use bramac::quant::{random_vector, IntMatrix};
+use bramac::storage::ResidentModel;
+use bramac::util::Rng;
+
+const SHARD_COUNTS: [usize; 2] = [1, 3];
+
+/// One oracle pool and one fast pool with identical geometry.
+fn pool_pair(variant: Variant, blocks: usize, p: Precision) -> (BlockPool, BlockPool) {
+    (
+        BlockPool::new(variant, blocks, p).with_fidelity(ExecFidelity::BitAccurate),
+        BlockPool::new(variant, blocks, p).with_fidelity(ExecFidelity::Fast),
+    )
+}
+
+#[test]
+fn gemv_tiling_bit_identical_across_matrix() {
+    let mut rng = Rng::seed_from_u64(0xd1ff_0001);
+    for variant in Variant::ALL {
+        for p in Precision::ALL {
+            for signed in [true, false] {
+                // Random shapes per combination: odd rows/cols exercise
+                // partial tiles and the odd-column MAC2 tail.
+                for _ in 0..2 {
+                    let m = rng.gen_range_i64(1, 61) as usize;
+                    let n = rng.gen_range_i64(1, 130) as usize;
+                    let w = IntMatrix::random(&mut rng, m, n, p);
+                    let x = random_vector(&mut rng, n, p, signed);
+                    let (mut oracle, mut fast) = pool_pair(variant, 3, p);
+                    let (yo, so) = oracle.run_gemv_signed(&w, &x, signed);
+                    let (yf, sf) = fast.run_gemv_signed(&w, &x, signed);
+                    let ctx = format!("{} {p} signed={signed} {m}x{n}", variant.name());
+                    assert_eq!(yf, yo, "{ctx}: results");
+                    assert_eq!(sf, so, "{ctx}: ScheduleStats");
+                    assert_eq!(yo, w.gemv_ref(&x), "{ctx}: oracle vs reference");
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn gemv_persistent_bit_identical_across_matrix() {
+    let mut rng = Rng::seed_from_u64(0xd1ff_0002);
+    for variant in Variant::ALL {
+        for p in Precision::ALL {
+            for signed in [true, false] {
+                let (m, n) = (45, 96);
+                let w = IntMatrix::random(&mut rng, m, n, p);
+                let x = random_vector(&mut rng, n, p, signed);
+                let (mut oracle, mut fast) = pool_pair(variant, 4, p);
+                let rm_o = ResidentModel::pin(&mut oracle, &w).expect("fits");
+                let rm_f = ResidentModel::pin(&mut fast, &w).expect("fits");
+                let (yo, so) = oracle.run_gemv_resident(&rm_o, &x, signed);
+                let (yf, sf) = fast.run_gemv_resident(&rm_f, &x, signed);
+                let ctx = format!("{} {p} signed={signed} persistent", variant.name());
+                assert_eq!(yf, yo, "{ctx}: results");
+                assert_eq!(sf, so, "{ctx}: ScheduleStats");
+                assert_eq!(sf.weight_copy_cycles, 0, "{ctx}: persistent never copies");
+                // Pinning wrote identical words, so the block-level
+                // StreamStats (incl. app_write_words) agree too.
+                for b in 0..4 {
+                    assert_eq!(
+                        fast.block_stats(b),
+                        oracle.block_stats(b),
+                        "{ctx}: block {b} StreamStats"
+                    );
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn batch2_bit_identical_both_dataflows() {
+    let mut rng = Rng::seed_from_u64(0xd1ff_0003);
+    let variant = Variant::TwoSA; // batch-2 needs two dummy arrays
+    for p in Precision::ALL {
+        for signed in [true, false] {
+            let (m, n) = (45, 96);
+            let w = IntMatrix::random(&mut rng, m, n, p);
+            let x0 = random_vector(&mut rng, n, p, signed);
+            let x1 = random_vector(&mut rng, n, p, signed);
+            let ctx = format!("{p} signed={signed} batch2");
+
+            let (mut oracle, mut fast) = pool_pair(variant, 3, p);
+            let (yo, so) = oracle.run_mvm_batch2_signed(&w, &x0, &x1, signed);
+            let (yf, sf) = fast.run_mvm_batch2_signed(&w, &x0, &x1, signed);
+            assert_eq!(yf, yo, "{ctx} tiling: results");
+            assert_eq!(sf, so, "{ctx} tiling: ScheduleStats");
+
+            let (mut oracle, mut fast) = pool_pair(variant, 4, p);
+            let rm_o = ResidentModel::pin(&mut oracle, &w).expect("fits");
+            let rm_f = ResidentModel::pin(&mut fast, &w).expect("fits");
+            let (yo, so) = oracle.run_mvm_batch2_resident(&rm_o, &x0, &x1, signed);
+            let (yf, sf) = fast.run_mvm_batch2_resident(&rm_f, &x0, &x1, signed);
+            assert_eq!(yf, yo, "{ctx} persistent: results");
+            assert_eq!(sf, so, "{ctx} persistent: ScheduleStats");
+        }
+    }
+}
+
+#[test]
+fn sharded_bit_identical_both_dataflows() {
+    let mut rng = Rng::seed_from_u64(0xd1ff_0004);
+    for variant in Variant::ALL {
+        for p in Precision::ALL {
+            for signed in [true, false] {
+                let (m, n) = (53, 96);
+                let w = IntMatrix::random(&mut rng, m, n, p);
+                let x = random_vector(&mut rng, n, p, signed);
+                for shards in SHARD_COUNTS {
+                    let ctx =
+                        format!("{} {p} signed={signed} shards={shards}", variant.name());
+
+                    // Tiling dataflow.
+                    let mut oracle = ShardedPool::new(variant, shards, 2, p)
+                        .with_fidelity(ExecFidelity::BitAccurate);
+                    let mut fast = ShardedPool::new(variant, shards, 2, p)
+                        .with_fidelity(ExecFidelity::Fast);
+                    let (yo, so) = oracle.run_gemv_signed(&w, &x, signed);
+                    let (yf, sf) = fast.run_gemv_signed(&w, &x, signed);
+                    assert_eq!(yf, yo, "{ctx} tiling: results");
+                    assert_eq!(sf, so, "{ctx} tiling: ScheduleStats");
+
+                    // Persistent dataflow (per-shard resident pins).
+                    let mut oracle = ShardedPool::new(variant, shards, 4, p)
+                        .with_fidelity(ExecFidelity::BitAccurate);
+                    let mut fast = ShardedPool::new(variant, shards, 4, p)
+                        .with_fidelity(ExecFidelity::Fast);
+                    let sr_o = oracle.pin(&w).expect("fits");
+                    let sr_f = fast.pin(&w).expect("fits");
+                    let (yo, so) = oracle.run_gemv_resident(&sr_o, &x, signed);
+                    let (yf, sf) = fast.run_gemv_resident(&sr_f, &x, signed);
+                    assert_eq!(yf, yo, "{ctx} persistent: results");
+                    assert_eq!(sf, so, "{ctx} persistent: ScheduleStats");
+                    assert_eq!(sf.weight_copy_cycles, 0);
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn repeated_dispatches_and_thread_counts_stay_identical() {
+    // Serving steady state: many dispatches against one warm pool, at
+    // several worker-thread counts — the fast path must track the
+    // oracle dispatch for dispatch (warm/cold transitions included).
+    let mut rng = Rng::seed_from_u64(0xd1ff_0005);
+    let p = Precision::Int4;
+    let (m, n) = (40, 96);
+    let w = IntMatrix::random(&mut rng, m, n, p);
+    for threads in [1usize, 4] {
+        let mut oracle = BlockPool::new(Variant::OneDA, 4, p)
+            .with_threads(threads)
+            .with_fidelity(ExecFidelity::BitAccurate);
+        let mut fast = BlockPool::new(Variant::OneDA, 4, p)
+            .with_threads(threads)
+            .with_fidelity(ExecFidelity::Fast);
+        let rm_o = ResidentModel::pin(&mut oracle, &w).expect("fits");
+        let rm_f = ResidentModel::pin(&mut fast, &w).expect("fits");
+        for turn in 0..5 {
+            let x = random_vector(&mut rng, n, p, true);
+            let (yo, so) = oracle.run_gemv_resident(&rm_o, &x, true);
+            let (yf, sf) = fast.run_gemv_resident(&rm_f, &x, true);
+            assert_eq!(yf, yo, "threads={threads} turn={turn}");
+            assert_eq!(sf, so, "threads={threads} turn={turn}");
+        }
+    }
+}
+
+#[test]
+fn env_default_fidelity_is_respected_by_pools() {
+    // BlockPool::new picks up $FIDELITY (the CI matrix hook); explicit
+    // with_fidelity always wins. This test does not set the variable —
+    // it asserts consistency between the env and the constructed pool,
+    // so it passes under both CI legs.
+    let expected = ExecFidelity::from_env();
+    let pool = BlockPool::new(Variant::OneDA, 1, Precision::Int4);
+    assert_eq!(pool.fidelity(), expected);
+    let forced = BlockPool::new(Variant::OneDA, 1, Precision::Int4)
+        .with_fidelity(ExecFidelity::Fast);
+    assert_eq!(forced.fidelity(), ExecFidelity::Fast);
+}
