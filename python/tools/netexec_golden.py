@@ -1,0 +1,341 @@
+#!/usr/bin/env python3
+"""Bootstrap generator for rust/tests/data/netexec_golden.json.
+
+Exact Python port of the pieces of the Rust stack the golden test pins:
+
+* util::Rng (xoshiro256** + SplitMix64 seeding) and IntMatrix::random /
+  quant::random_vector element order;
+* dla::netexec's QuantNetwork layer-seed derivation, im2col/direct
+  convolution numerics, requantization contract and flatten adapter;
+* the closed-form per-tile cycle accounting of bramac::block +
+  coordinator::scheduler (cold starts, MAC2 cycles, accumulator
+  readouts, app-write weight-copy deltas, exposed-load budget);
+* dla::cycle::layer_cycles_sharded for the analytical column.
+
+The **authoritative** regenerator is the Rust test itself:
+
+    BRAMAC_BLESS=1 cargo test --test netexec_golden
+
+This script exists so the golden file can be produced without a Rust
+toolchain (it bootstrapped the first checked-in copy) and as an
+independent, readable specification of the contract. If the two ever
+disagree, the Rust tree wins — re-bless and update this port.
+"""
+from __future__ import annotations
+
+import json
+import math
+import os
+import sys
+
+MASK = (1 << 64) - 1
+
+
+class Rng:
+    """xoshiro256** seeded via SplitMix64 (port of util::Rng)."""
+
+    def __init__(self, seed: int):
+        sm = seed & MASK
+        s = []
+        for _ in range(4):
+            sm = (sm + 0x9E3779B97F4A7C15) & MASK
+            z = sm
+            z = ((z ^ (z >> 30)) * 0xBF58476D1CE4E5B9) & MASK
+            z = ((z ^ (z >> 27)) * 0x94D049BB133111EB) & MASK
+            s.append(z ^ (z >> 31))
+        self.s = s
+
+    def next_u64(self) -> int:
+        s = self.s
+        result = (self._rotl((s[1] * 5) & MASK, 7) * 9) & MASK
+        t = (s[1] << 17) & MASK
+        s[2] ^= s[0]
+        s[3] ^= s[1]
+        s[1] ^= s[2]
+        s[0] ^= s[3]
+        s[2] ^= t
+        s[3] = self._rotl(s[3], 45)
+        return result
+
+    @staticmethod
+    def _rotl(x: int, k: int) -> int:
+        return ((x << k) | (x >> (64 - k))) & MASK
+
+    def gen_range(self, lo: int, hi: int) -> int:
+        span = hi - lo + 1
+        return lo + self.next_u64() % span
+
+
+# --- precision constants (arch::Precision) -----------------------------
+def lanes_per_word(bits: int) -> int:
+    return 40 // bits
+
+
+def srange(bits: int):
+    return -(1 << (bits - 1)), (1 << (bits - 1)) - 1
+
+
+def urange(bits: int):
+    return 0, (1 << bits) - 1
+
+
+def max_dot_len(bits: int) -> int:
+    return {2: 16, 4: 256, 8: 2048}[bits]
+
+
+MAIN_WORDS = 512
+
+
+# --- toy network (dla::models::toy) ------------------------------------
+# (name, k, c, r, s, p, q) — fc spans two 4-bit lane groups (12 > 10)
+# so the sharded golden pins a genuine multi-shard schedule.
+TOY = [
+    ("conv1", 4, 2, 3, 3, 4, 4),
+    ("conv2", 6, 4, 3, 3, 2, 2),
+    ("fc", 12, 24, 1, 1, 1, 1),
+]
+
+GOLDEN64 = 0x9E3779B97F4A7C15
+
+
+def layer_weights(seed: int, li: int, bits: int):
+    g = TOY[li]
+    k, crs = g[1], g[2] * g[3] * g[4]
+    rng = Rng((seed + GOLDEN64 * (li + 1)) & MASK)
+    lo, hi = srange(bits)
+    return [[rng.gen_range(lo, hi) for _ in range(crs)] for _ in range(k)]
+
+
+def random_input(seed: int, bits: int, signed: bool):
+    c, h, w = TOY[0][2], TOY[0][5] + TOY[0][3] - 1, TOY[0][6] + TOY[0][4] - 1
+    rng = Rng(seed)
+    lo, hi = srange(bits) if signed else urange(bits)
+    return c, h, w, [rng.gen_range(lo, hi) for _ in range(c * h * w)]
+
+
+# --- numerics (dla::netexec) -------------------------------------------
+def conv_direct(a, ac, ah, aw, g, w):
+    _, k, c, r, s, p, q = (None, *g[1:])
+    pq = p * q
+    y = [0] * (k * pq)
+    for kk in range(k):
+        for op in range(p):
+            for oq in range(q):
+                acc = 0
+                for ci in range(c):
+                    for ri in range(r):
+                        for si in range(s):
+                            acc += w[kk][(ci * r + ri) * s + si] * a[
+                                (ci * ah + op + ri) * aw + oq + si
+                            ]
+                y[kk * pq + op * q + oq] = acc
+    return y
+
+
+def requantize(y, bits: int, signed: bool, relu: bool):
+    maxabs = max((abs(v) for v in y), default=0)
+    bitlen = maxabs.bit_length()
+    shift = max(0, bitlen - (bits - 1))
+    lo, hi = srange(bits) if signed else urange(bits)
+    out = []
+    for v in y:
+        v >>= shift  # Python >> is arithmetic (floor), matching Rust i64
+        if relu:
+            v = max(v, 0)
+        out.append(min(max(v, lo), hi))
+    return out, shift
+
+
+# --- cycle accounting closed forms -------------------------------------
+def mac2_compute_cycles(bits: int, signed: bool) -> int:
+    # efsm::compute_schedule length: n+3 signed, n+2 unsigned.
+    return bits + 3 if signed else bits + 2
+
+
+def shard_rows(m, lanes, shards):
+    """Port of coordinator::shard::shard_rows (lane-aligned row ranges)."""
+    groups = -(-m // lanes)
+    base, extra = groups // shards, groups % shards
+    out, g0 = [], 0
+    for s in range(shards):
+        take = base + (1 if s < extra else 0)
+        r0, r1 = min(g0 * lanes, m), min((g0 + take) * lanes, m)
+        out.append((r0, r1 - r0))
+        g0 += take
+    return out
+
+
+def tile_cost(cols, bits, variant, signed, copy_words):
+    """account_tile + charge_mac2_cycles closed form for one tile
+    (single column chunk, no intermediate accumulator flush)."""
+    ops = (cols + 1) // 2
+    l = mac2_compute_cycles(bits, signed)
+    if variant == "2sa":
+        cold, per_op, busy_per_op, readout = 2, l, 2, 8
+    else:
+        cold, per_op, busy_per_op, readout = 1, (l + 1) // 2, 1, 4
+    compute = cold + ops * per_op + readout
+    busy = ops * busy_per_op + readout
+    exposed = max(0, copy_words - (compute - busy))
+    return ops, compute + exposed, exposed
+
+
+def dispatch_stats(m, n, bits, variant, signed, dataflow, shards):
+    """ScheduleStats for one GEMV/batch-2 dispatch: lane-aligned row
+    shards, one block per shard, one row-group tile per <=lanes rows
+    (each spanning all n columns; n <= buffer words and <= max_dot_len
+    asserted — the toy golden stays in that regime). Mirrors
+    ShardedPool::run_* -> scheduler::account_tile."""
+    lanes = lanes_per_word(bits)
+    buffer_words = MAIN_WORDS if dataflow == "persistent" else MAIN_WORDS // 2
+    assert n <= buffer_words and n <= max_dot_len(bits)
+    st = {"tiles": 0, "mac2s": 0, "makespan": 0, "total_block": 0, "exposed": 0, "copy": 0}
+    for _, rows in shard_rows(m, lanes, shards):
+        if rows == 0:
+            continue
+        shard_cycles = 0
+        done = 0
+        while done < rows:
+            done += min(lanes, rows - done)
+            copy = n if dataflow == "tiling" else 0
+            ops, charged, exposed = tile_cost(n, bits, variant, signed, copy)
+            st["tiles"] += 1
+            st["mac2s"] += ops
+            st["exposed"] += exposed
+            st["copy"] += copy
+            shard_cycles += charged
+        st["total_block"] += shard_cycles
+        st["makespan"] = max(st["makespan"], shard_cycles)
+    return st
+
+
+def layer_stats(g, bits, variant, signed, dataflow, shards):
+    _, k, c, r, s, p, q = (None, *g[1:])
+    n = c * r * s
+    pq = p * q
+    per = dispatch_stats(k, n, bits, variant, signed, dataflow, shards)
+    if variant == "2sa":
+        dispatches = pq // 2 + pq % 2
+    else:
+        dispatches = pq
+    total = {key: per[key] * dispatches for key in per}
+    total["dispatches"] = dispatches
+    total["macs"] = k * n * pq
+    return total
+
+
+# --- analytical model (dla::cycle, config dla_bramac(v,1,2,16,64)) ----
+def acc_readout_cycles(variant):
+    return 8 if variant == "2sa" else 4
+
+
+def variant_mac2_cycles(variant, bits, signed=True):
+    l = mac2_compute_cycles(bits, signed)
+    return l if variant == "2sa" else (l + 1) // 2
+
+
+def layer_cycles_with(g, bits, variant, dataflow):
+    _, k, c, r, s, p, q = (None, *g[1:])
+    dot = c * r * s
+    flushes = -(-dot // max_dot_len(bits))
+    readout = flushes * acc_readout_cycles(variant)
+    compute = -(-dot // 2) * variant_mac2_cycles(variant, bits, True)
+    eff = compute / (compute + readout)
+    qvec_eff = 1.0 + 2.0 * eff
+    beats = p * math.ceil(q / qvec_eff) * (-(-k // 64))
+    beat_len = r * s * (-(-c // 16))
+    startup = 2 if dataflow == "tiling" else 0
+    return beats * beat_len + startup
+
+
+def layer_cycles_sharded(g, bits, variant, dataflow, shards):
+    base = layer_cycles_with(g, bits, variant, dataflow)
+    if shards <= 1:
+        return base
+    return -(-base // shards) + (shards - 1)
+
+
+# --- generator ---------------------------------------------------------
+def run_config(bits, variant, signed, relu, dataflow, shards, wseed, iseed):
+    c, h, w, act = random_input(iseed, bits, signed)
+    ah, aw = h, w
+    layers = []
+    out = None
+    for li, g in enumerate(TOY):
+        wts = layer_weights(wseed, li, bits)
+        if li > 0:
+            # Toy chain: conv1->conv2 identity; conv2->fc flatten (the
+            # spatial window already matches t x t, data order kept).
+            prev = TOY[li - 1]
+            ah, aw = g[5] + g[3] - 1, g[6] + g[4] - 1
+            assert (g[2], ah, aw) == (prev[1], prev[5], prev[6]) or (
+                (ah, aw) == (1, 1) and g[2] == prev[1] * prev[5] * prev[6]
+            ), "toy adapter must be identity or pure flatten"
+        y = conv_direct(act, g[2], ah, aw, g, wts)
+        st = layer_stats(g, bits, variant, signed, dataflow, shards)
+        st["analytical"] = layer_cycles_sharded(g, bits, variant, dataflow, shards)
+        st["name"] = g[0]
+        if li + 1 == len(TOY):
+            st["shift"] = 0
+            out = y
+        else:
+            act, st["shift"] = requantize(y, bits, signed, relu)
+        layers.append(st)
+    total = {
+        key: sum(l[key] for l in layers)
+        for key in ("tiles", "mac2s", "makespan", "total_block", "exposed", "copy")
+    }
+    words = sum(
+        -(-g[1] // lanes_per_word(bits)) * g[2] * g[3] * g[4] for g in TOY
+    )
+    pinned = words if dataflow == "persistent" else 0
+    return {
+        "dataflow": dataflow,
+        "shards": shards,
+        "blocks": 1,
+        "pinned_words": pinned,
+        "output": out,
+        "total": total,
+        "layers": layers,
+    }
+
+
+def main():
+    bits, variant, signed, relu = 4, "2sa", True, True
+    wseed, iseed = 0x7041, 0x1234
+    configs = [
+        run_config(bits, variant, signed, relu, "tiling", 1, wseed, iseed),
+        run_config(bits, variant, signed, relu, "persistent", 1, wseed, iseed),
+        run_config(bits, variant, signed, relu, "persistent", 2, wseed, iseed),
+    ]
+    doc = {
+        "model": "toy",
+        "precision": bits,
+        "variant": variant,
+        "signed": signed,
+        "relu": relu,
+        "weight_seed": wseed,
+        "input_seed": iseed,
+        "configs": configs,
+    }
+    out = os.path.join(
+        os.path.dirname(__file__), "..", "..", "rust", "tests", "data",
+        "netexec_golden.json",
+    )
+    out = os.path.normpath(out)
+    if len(sys.argv) > 1:
+        out = sys.argv[1]
+    with open(out, "w") as f:
+        json.dump(doc, f, indent=1)
+        f.write("\n")
+    print(f"wrote {out}")
+    for cfg in configs:
+        print(
+            f"  {cfg['dataflow']}/shards={cfg['shards']}: "
+            f"makespan {cfg['total']['makespan']}, copy {cfg['total']['copy']}, "
+            f"pinned {cfg['pinned_words']}, output[:4]={cfg['output'][:4]}"
+        )
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,68 @@
+//! Full-network functional inference bench (`dla::netexec`): toy-CNN
+//! forward passes across dataflows, fidelities, and a sharded
+//! persistent configuration. Every configuration's output is asserted
+//! bit-identical to the pure-host reference before anything is timed,
+//! and each entry records the run's simulated total makespan (`cycles`)
+//! plus shard count and fidelity into the `BENCH_*.json` trajectory —
+//! so CI tracks full-network throughput alongside the GEMV hot paths.
+
+use bramac::arch::Precision;
+use bramac::bramac::ExecFidelity;
+use bramac::dla::netexec::{reference_forward, NetExec, NetExecConfig, QuantNetwork};
+use bramac::dla::{toy, Dataflow};
+use bramac::util::bench::{black_box, Bench, BenchMeta};
+
+fn main() {
+    let mut b = Bench::new("netexec");
+    let p = Precision::Int4;
+    let qnet = QuantNetwork::random(&toy(), p, 0xbe4c);
+    let input = qnet.random_input(0xbe4d, true);
+    let want = reference_forward(&qnet, &input, true, true);
+
+    for (dataflow, fidelity) in [
+        (Dataflow::Tiling, ExecFidelity::BitAccurate),
+        (Dataflow::Tiling, ExecFidelity::Fast),
+        (Dataflow::Persistent, ExecFidelity::BitAccurate),
+        (Dataflow::Persistent, ExecFidelity::Fast),
+    ] {
+        let cfg = NetExecConfig { dataflow, fidelity, ..NetExecConfig::default() };
+        let mut engine = NetExec::new(qnet.clone(), cfg).expect("toy fits");
+        let report = engine.infer(&input).expect("forward pass");
+        assert_eq!(report.output, want, "bit-identical before timing");
+        report.reconcile().expect("reconciliation identities");
+        let cycles = report.total.makespan_cycles;
+        b.bench_meta(
+            &format!("network_infer/toy/4bit/2sa/{}", dataflow.name()),
+            BenchMeta { cycles, threads: 1, shards: 1, fidelity: fidelity.name() },
+            || {
+                black_box(engine.infer(&input).expect("forward pass"));
+            },
+        );
+    }
+
+    // Sharded persistent serving shape: 2 shards, fast engine.
+    let cfg = NetExecConfig {
+        dataflow: Dataflow::Persistent,
+        shards: 2,
+        fidelity: ExecFidelity::Fast,
+        ..NetExecConfig::default()
+    };
+    let mut engine = NetExec::new(qnet.clone(), cfg).expect("fits");
+    let report = engine.infer(&input).expect("forward pass");
+    assert_eq!(report.output, want, "sharded run bit-identical before timing");
+    b.bench_meta(
+        "network_infer/toy/4bit/2sa/persistent/2shards",
+        BenchMeta {
+            cycles: report.total.makespan_cycles,
+            threads: 1,
+            shards: 2,
+            fidelity: ExecFidelity::Fast.name(),
+        },
+        || {
+            black_box(engine.infer(&input).expect("forward pass"));
+        },
+    );
+
+    b.finish();
+    b.emit_json_env();
+}

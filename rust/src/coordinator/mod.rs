@@ -23,9 +23,12 @@ pub mod workers;
 
 pub use batcher::Batcher;
 pub use plan_cache::{CachedPlan, PlanCache, PlanKey, DEFAULT_PLAN_CAPACITY};
-pub use router::{Policy, ReplicaStats, Router, RouterStats};
+pub use router::{NetworkRouter, Policy, ReplicaStats, Router, RouterStats};
 pub use scheduler::{BlockPool, ScheduleStats};
-pub use server::{InferenceServer, ReplicaServerStats, ServerStats, ShardedServerStats};
-pub use shard::{shard_rows, ShardedPool, ShardedResident};
+pub use server::{
+    Activations, InferenceServer, NetworkServer, NetworkServerStats, ReplicaServerStats,
+    ServerStats, ShardedServerStats,
+};
+pub use shard::{shard_rows, PinCursor, ShardedPool, ShardedResident};
 pub use tiler::{plan_gemv, Tile, TilePlan};
 pub use workers::{auto_threads, parallel_map_indexed};

@@ -18,6 +18,7 @@
 use anyhow::{ensure, Result};
 
 use crate::bramac::ExecFidelity;
+use crate::dla::netexec::{NetExec, NetExecReport, Tensor};
 use crate::quant::IntMatrix;
 
 use super::shard::{ShardedPool, ShardedResident};
@@ -196,11 +197,125 @@ impl Router {
     }
 }
 
+struct NetReplica {
+    engine: NetExec,
+    stats: ReplicaStats,
+}
+
+/// [`Router`]'s whole-network sibling: replicas are warm
+/// [`NetExec`] engines (persistent replicas hold every layer resident),
+/// and each dispatch runs a **full multi-layer inference** — the
+/// request's total makespan is what lands on the replica's backlog.
+/// Routing state is simulated-cycle deterministic exactly like
+/// [`Router`], so traces replay across hosts and fidelities.
+pub struct NetworkRouter {
+    policy: Policy,
+    replicas: Vec<NetReplica>,
+    rr_next: usize,
+}
+
+impl NetworkRouter {
+    /// Wrap `engines` as a replica group; each persistent engine's
+    /// one-time pin is charged to that replica's `weight_copy_cycles`.
+    pub fn new(policy: Policy, engines: Vec<NetExec>) -> Result<NetworkRouter> {
+        ensure!(!engines.is_empty(), "need at least one replica");
+        let replicas = engines
+            .into_iter()
+            .map(|engine| {
+                let stats = ReplicaStats {
+                    weight_copy_cycles: engine.pinned_words,
+                    ..ReplicaStats::default()
+                };
+                NetReplica { engine, stats }
+            })
+            .collect();
+        Ok(NetworkRouter { policy, replicas, rr_next: 0 })
+    }
+
+    pub fn policy(&self) -> Policy {
+        self.policy
+    }
+
+    pub fn replica_count(&self) -> usize {
+        self.replicas.len()
+    }
+
+    pub fn fidelity(&self) -> ExecFidelity {
+        self.replicas[0].engine.fidelity()
+    }
+
+    fn pick(&mut self) -> usize {
+        match self.policy {
+            Policy::RoundRobin => {
+                let i = self.rr_next % self.replicas.len();
+                self.rr_next = (i + 1) % self.replicas.len();
+                i
+            }
+            Policy::LeastOutstanding => {
+                let mut best = 0usize;
+                for (i, rep) in self.replicas.iter().enumerate() {
+                    if rep.stats.outstanding_cycles
+                        < self.replicas[best].stats.outstanding_cycles
+                    {
+                        best = i;
+                    }
+                }
+                best
+            }
+        }
+    }
+
+    /// Route one whole-network inference to a replica; the run's total
+    /// makespan (all layers, all dispatches) is charged to its backlog.
+    /// Returns the final-layer outputs, the full per-layer report, and
+    /// the chosen replica.
+    pub fn dispatch(&mut self, input: &Tensor) -> Result<(NetExecReport, usize)> {
+        let i = self.pick();
+        let rep = &mut self.replicas[i];
+        let report = rep.engine.infer(input)?;
+        rep.stats.requests += 1;
+        rep.stats.busy_cycles += report.total.makespan_cycles;
+        rep.stats.outstanding_cycles += report.total.makespan_cycles;
+        Ok((report, i))
+    }
+
+    /// Saturation hook — synthetic backlog on one replica.
+    pub fn inject_backlog(&mut self, replica: usize, cycles: u64) {
+        self.replicas[replica].stats.outstanding_cycles += cycles;
+    }
+
+    /// Advance simulated time: every replica retires up to `cycles`.
+    pub fn retire(&mut self, cycles: u64) {
+        for rep in &mut self.replicas {
+            rep.stats.outstanding_cycles =
+                rep.stats.outstanding_cycles.saturating_sub(cycles);
+        }
+    }
+
+    pub fn outstanding(&self, replica: usize) -> u64 {
+        self.replicas[replica].stats.outstanding_cycles
+    }
+
+    pub fn stats(&self) -> RouterStats {
+        let per_replica: Vec<ReplicaStats> =
+            self.replicas.iter().map(|r| r.stats).collect();
+        RouterStats {
+            requests: per_replica.iter().map(|r| r.requests).sum(),
+            busy_cycles: per_replica.iter().map(|r| r.busy_cycles).sum(),
+            weight_copy_cycles: per_replica.iter().map(|r| r.weight_copy_cycles).sum(),
+            per_replica,
+        }
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
     use crate::arch::Precision;
     use crate::bramac::Variant;
+    use crate::dla::models::toy;
+    use crate::dla::netexec::{reference_forward, NetExecConfig, QuantNetwork};
+    use crate::dla::Dataflow;
     use crate::quant::random_vector;
     use crate::util::Rng;
 
@@ -267,6 +382,48 @@ mod tests {
             assert_eq!(rf, ro, "turn {turn}: replica choice must replay");
         }
         assert_eq!(fast.stats(), oracle.stats());
+    }
+
+    #[test]
+    fn network_router_serves_whole_network_requests() {
+        // Two warm persistent NetExec replicas behind round-robin:
+        // every whole-network dispatch must match the host reference,
+        // cycle through replicas, and charge the run's total makespan.
+        let net = toy();
+        let p = Precision::Int4;
+        let qnet = QuantNetwork::random(&net, p, 0x4e7e);
+        let build = || {
+            let cfg = NetExecConfig {
+                dataflow: Dataflow::Persistent,
+                fidelity: ExecFidelity::Fast,
+                ..NetExecConfig::default()
+            };
+            NetExec::new(qnet.clone(), cfg).expect("toy pins")
+        };
+        let mut router =
+            NetworkRouter::new(Policy::RoundRobin, vec![build(), build()]).unwrap();
+        assert_eq!(router.replica_count(), 2);
+        for turn in 0..4 {
+            let input = qnet.random_input(1000 + turn as u64, true);
+            let want = reference_forward(&qnet, &input, true, true);
+            let (report, replica) = router.dispatch(&input).expect("dispatch");
+            assert_eq!(report.output, want, "turn {turn}");
+            assert_eq!(replica, turn % 2, "round-robin cycles replicas");
+            report.reconcile().expect("identities hold under the router");
+        }
+        let stats = router.stats();
+        assert_eq!(stats.requests, 4);
+        assert!(stats.per_replica.iter().all(|r| r.requests == 2));
+        // Warm pins charged once per replica, never per request.
+        assert!(stats.weight_copy_cycles > 0);
+        assert_eq!(
+            stats.weight_copy_cycles,
+            stats.per_replica.iter().map(|r| r.weight_copy_cycles).sum::<u64>()
+        );
+        // Backlog drains with simulated time.
+        assert!(router.outstanding(0) > 0);
+        router.retire(u64::MAX);
+        assert_eq!(router.outstanding(0), 0);
     }
 
     #[test]

@@ -81,6 +81,19 @@ impl ScheduleStats {
         self.exposed_load_cycles += other.exposed_load_cycles;
         self.weight_copy_cycles += other.weight_copy_cycles;
     }
+
+    /// Sequential merge (`dla::netexec`'s per-layer accumulation): the
+    /// merged run happens *after* this one on the same hardware, so the
+    /// makespans add along with every work/traffic counter. The dual of
+    /// [`ScheduleStats::merge_shard`]'s concurrent max.
+    pub fn merge_seq(&mut self, other: &ScheduleStats) {
+        self.tiles += other.tiles;
+        self.mac2s += other.mac2s;
+        self.makespan_cycles += other.makespan_cycles;
+        self.total_block_cycles += other.total_block_cycles;
+        self.exposed_load_cycles += other.exposed_load_cycles;
+        self.weight_copy_cycles += other.weight_copy_cycles;
+    }
 }
 
 /// What one block contributed to a run: its partial output vector plus

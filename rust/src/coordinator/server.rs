@@ -22,11 +22,16 @@ use crate::dla::{
     config::DlaConfig,
     cycle::{first_touch_cycles, network_cycles_sharded, network_cycles_with, Dataflow},
     models::{ConvLayer, Network},
+    netexec::{NetExec, NetExecConfig, QuantNetwork, Tensor},
 };
 use crate::runtime::{Manifest, Runtime};
 
 use super::batcher::{Batcher, Request};
 use super::router::Policy;
+
+/// A whole-network request/reply on the network server: the flattened
+/// input activation volume in, the final layer's raw outputs back.
+pub type Activations = Vec<i64>;
 
 /// One inference request: a quantized 3×32×32 image (int32 pixels in
 /// the model precision's range).
@@ -178,6 +183,65 @@ pub struct ShardedServerStats {
     /// `sum(per_shard_cycles) + total.weight_copy_cycles ==
     /// total.attributed_cycles`.
     pub per_shard_cycles: Vec<u64>,
+}
+
+/// Serving statistics for the network-inference server
+/// ([`InferenceServer::start_network`]): attributed cycles are each
+/// request's whole-network makespan; weight-copy cycles are the
+/// per-replica one-time pins (persistent dataflow).
+#[derive(Debug, Clone, Default)]
+pub struct NetworkServerStats {
+    pub requests: u64,
+    pub batches: u64,
+    pub attributed_cycles: u64,
+    pub weight_copy_cycles: u64,
+    pub per_replica: Vec<ReplicaServerStats>,
+}
+
+/// Dynamic-batching server over [`NetExec`] replicas — the functional
+/// network-inference sibling of [`InferenceServer`]. Built via
+/// [`InferenceServer::start_network`].
+pub struct NetworkServer {
+    tx: Option<Sender<Request<Activations, Activations>>>,
+    workers: Vec<JoinHandle<()>>,
+    stats: Arc<Mutex<NetworkServerStats>>,
+    pub batch_size: usize,
+    pub dataflow: Dataflow,
+    pub shards: usize,
+    pub policy: Policy,
+    pub fidelity: ExecFidelity,
+    /// Flattened input volume length every request must carry.
+    pub input_len: usize,
+}
+
+impl NetworkServer {
+    /// A clonable submission handle.
+    pub fn handle(&self) -> Sender<Request<Activations, Activations>> {
+        self.tx.as_ref().expect("server running").clone()
+    }
+
+    pub fn stats(&self) -> NetworkServerStats {
+        self.stats.lock().unwrap().clone()
+    }
+
+    /// Drain and stop.
+    pub fn shutdown(mut self) -> NetworkServerStats {
+        drop(self.tx.take());
+        for w in self.workers.drain(..) {
+            let _ = w.join();
+        }
+        let s = self.stats.lock().unwrap().clone();
+        s
+    }
+}
+
+impl Drop for NetworkServer {
+    fn drop(&mut self) {
+        drop(self.tx.take());
+        for w in self.workers.drain(..) {
+            let _ = w.join();
+        }
+    }
 }
 
 /// Dynamic-batching inference server over the PJRT runtime.
@@ -589,6 +653,161 @@ impl InferenceServer {
         }
         self.sharded_stats()
     }
+
+    /// The **network-inference entry point**: serve whole-network
+    /// requests on [`NetExec`] replicas — real quantized activations
+    /// through the simulated BRAMAC pools, no PJRT artifacts involved.
+    /// A dispatcher routes each formed batch to a replica under
+    /// `policy`; every replica owns its own engine (persistent replicas
+    /// pin all layers once at startup, charged to that replica's
+    /// `weight_copy_cycles`), and each request's attributed cycles are
+    /// its whole-network makespan.
+    pub fn start_network(
+        qnet: QuantNetwork,
+        cfg: NetExecConfig,
+        batch: usize,
+        max_wait: Duration,
+        replicas: usize,
+        policy: Policy,
+    ) -> Result<NetworkServer> {
+        assert!(batch >= 1, "need a batch size");
+        assert!(replicas >= 1, "need at least one replica");
+        // Build every replica engine up front: capacity/pinning errors
+        // surface here, not inside a worker thread.
+        let engines: Vec<NetExec> = (0..replicas)
+            .map(|_| NetExec::new(qnet.clone(), cfg))
+            .collect::<Result<_>>()?;
+        let (c, h, w) = qnet.input_shape();
+        let input_len = c * h * w;
+        let fidelity = engines[0].fidelity();
+
+        let (tx, batcher) = Batcher::<Activations, Activations>::new(batch, max_wait);
+        let mut stats0 = NetworkServerStats {
+            per_replica: vec![ReplicaServerStats::default(); replicas],
+            ..NetworkServerStats::default()
+        };
+        // Persistent replicas pinned at construction: the one-time
+        // first touch, once per replica.
+        for (r, engine) in engines.iter().enumerate() {
+            stats0.per_replica[r].weight_copy_cycles = engine.pinned_words;
+            stats0.weight_copy_cycles += engine.pinned_words;
+        }
+        let stats = Arc::new(Mutex::new(stats0));
+
+        let outstanding: Arc<Vec<AtomicU64>> =
+            Arc::new((0..replicas).map(|_| AtomicU64::new(0)).collect());
+        let mut replica_txs = Vec::with_capacity(replicas);
+        let mut replica_rxs = Vec::with_capacity(replicas);
+        for _ in 0..replicas {
+            let (btx, brx) =
+                std::sync::mpsc::channel::<Vec<Request<Activations, Activations>>>();
+            replica_txs.push(btx);
+            replica_rxs.push(brx);
+        }
+
+        let mut handles = Vec::with_capacity(replicas + 1);
+        {
+            let outstanding = Arc::clone(&outstanding);
+            handles.push(std::thread::spawn(move || {
+                // Same fail-over discipline as the sharded dispatcher:
+                // a replica whose channel closed is poisoned DEAD and
+                // its batch fails over to the next candidate.
+                const DEAD: u64 = u64::MAX;
+                let mut rr_next = 0usize;
+                while let Some(reqs) = batcher.next_batch() {
+                    let mut pending = Some(reqs);
+                    while pending.is_some() {
+                        let target = match policy {
+                            Policy::RoundRobin => {
+                                let mut chosen = None;
+                                for step in 0..replicas {
+                                    let i = (rr_next + step) % replicas;
+                                    if outstanding[i].load(Ordering::SeqCst) != DEAD {
+                                        rr_next = (i + 1) % replicas;
+                                        chosen = Some(i);
+                                        break;
+                                    }
+                                }
+                                chosen
+                            }
+                            Policy::LeastOutstanding => outstanding
+                                .iter()
+                                .enumerate()
+                                .filter(|&(_, c)| c.load(Ordering::SeqCst) != DEAD)
+                                .min_by_key(|&(_, c)| c.load(Ordering::SeqCst))
+                                .map(|(i, _)| i),
+                        };
+                        let Some(target) = target else { break };
+                        outstanding[target].fetch_add(1, Ordering::SeqCst);
+                        match replica_txs[target].send(pending.take().expect("batch pending"))
+                        {
+                            Ok(()) => {}
+                            Err(failed) => {
+                                outstanding[target].store(DEAD, Ordering::SeqCst);
+                                pending = Some(failed.0);
+                            }
+                        }
+                    }
+                }
+            }));
+        }
+
+        for (r, (brx, mut engine)) in replica_rxs.into_iter().zip(engines).enumerate() {
+            let stats_w = Arc::clone(&stats);
+            let outstanding = Arc::clone(&outstanding);
+            handles.push(std::thread::spawn(move || {
+                while let Ok(reqs) = brx.recv() {
+                    let t0 = Instant::now();
+                    let mut delta = ReplicaServerStats {
+                        batches: 1,
+                        ..ReplicaServerStats::default()
+                    };
+                    for req in reqs {
+                        if req.payload.len() != input_len {
+                            eprintln!(
+                                "network server: request with {} activations, \
+                                 expected {input_len} — dropped",
+                                req.payload.len()
+                            );
+                            continue;
+                        }
+                        let input = Tensor::from_data(c, h, w, req.payload);
+                        match engine.infer(&input) {
+                            Ok(report) => {
+                                delta.requests += 1;
+                                delta.attributed_cycles += report.total.makespan_cycles;
+                                let _ = req.reply.send(report.output);
+                            }
+                            Err(e) => {
+                                eprintln!("network server: inference failed: {e:#}")
+                            }
+                        }
+                    }
+                    delta.exec_micros = t0.elapsed().as_micros() as u64;
+                    {
+                        let mut s = stats_w.lock().unwrap();
+                        s.requests += delta.requests;
+                        s.batches += delta.batches;
+                        s.attributed_cycles += delta.attributed_cycles;
+                        s.per_replica[r].add(&delta);
+                    }
+                    outstanding[r].fetch_sub(1, Ordering::SeqCst);
+                }
+            }));
+        }
+
+        Ok(NetworkServer {
+            tx: Some(tx),
+            workers: handles,
+            stats,
+            batch_size: batch,
+            dataflow: cfg.dataflow,
+            shards: cfg.shards,
+            policy,
+            fidelity,
+            input_len,
+        })
+    }
 }
 
 impl Drop for InferenceServer {
@@ -638,6 +857,52 @@ mod tests {
         assert_eq!(stats.requests, 6);
         assert!(stats.batches >= 2); // batch=4 → at least 2 batches
         assert!(stats.attributed_cycles > 0);
+    }
+
+    #[test]
+    fn network_server_serves_whole_network_batches() {
+        // No artifacts needed: the network server runs NetExec replicas
+        // directly, so this path is exercised on every CI run.
+        use crate::dla::models::toy;
+        use crate::dla::netexec::reference_forward;
+        let net = toy();
+        let p = Precision::Int4;
+        let qnet = QuantNetwork::random(&net, p, 0x5e4e);
+        let cfg = NetExecConfig {
+            dataflow: Dataflow::Persistent,
+            fidelity: ExecFidelity::Fast,
+            ..NetExecConfig::default()
+        };
+        let server = InferenceServer::start_network(
+            qnet.clone(),
+            cfg,
+            2,
+            Duration::from_millis(5),
+            2,
+            Policy::LeastOutstanding,
+        )
+        .unwrap();
+        assert_eq!(server.input_len, 2 * 6 * 6);
+        assert_eq!(server.dataflow, Dataflow::Persistent);
+        let mut handles = Vec::new();
+        for i in 0..5u64 {
+            let tx = server.handle();
+            let input = qnet.random_input(100 + i, true);
+            let want = reference_forward(&qnet, &input, true, true);
+            handles.push(std::thread::spawn(move || {
+                let got = submit_and_wait(&tx, input.data).expect("reply");
+                assert_eq!(got, want, "request {i}");
+            }));
+        }
+        for h in handles {
+            h.join().unwrap();
+        }
+        let stats = server.shutdown();
+        assert_eq!(stats.requests, 5);
+        assert!(stats.batches >= 3, "batch=2 over 5 requests");
+        assert!(stats.attributed_cycles > 0);
+        assert!(stats.weight_copy_cycles > 0, "persistent replicas pin once each");
+        assert_eq!(stats.per_replica.iter().map(|r| r.requests).sum::<u64>(), 5);
     }
 
     #[test]

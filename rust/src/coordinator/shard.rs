@@ -61,6 +61,15 @@ pub fn shard_rows(m: usize, lanes: usize, shards: usize) -> Vec<(usize, usize)> 
     ranges
 }
 
+/// Placement state for pinning several matrices back-to-back on one
+/// sharded pool ([`ShardedPool::pin_with`]): per-shard per-block
+/// next-free words plus the rotating round-robin start block.
+#[derive(Debug, Clone)]
+pub struct PinCursor {
+    by_shard: Vec<Vec<usize>>,
+    next_block: Vec<usize>,
+}
+
 /// A weight matrix pinned across a sharded pool: one resident row shard
 /// per inner pool (empty shards hold nothing).
 #[derive(Debug, Clone)]
@@ -236,6 +245,75 @@ impl ShardedPool {
             parts,
             pinned_words,
         })
+    }
+
+    /// A fresh multi-model placement cursor: per-shard per-block
+    /// next-free main-array words plus the rotating round-robin start
+    /// (see [`ResidentModel::pin_at`]). One cursor spans a whole
+    /// [`ShardedPool::pin_with`] sequence.
+    pub fn pin_cursor(&self) -> PinCursor {
+        PinCursor {
+            by_shard: self.pools.iter().map(|p| vec![0usize; p.len()]).collect(),
+            next_block: vec![0usize; self.pools.len()],
+        }
+    }
+
+    /// Pin `w` row-sharded at the cursor's next-free words: several
+    /// matrices pinned back-to-back share the pools' main arrays — the
+    /// whole-network persistent layout `dla::netexec` serves from.
+    /// Fails (leaving the cursor untouched for the failing shard) when
+    /// any shard's slice no longer fits its pool.
+    ///
+    /// After the **last** pin of a sequence, call
+    /// [`ShardedPool::refresh_marks`] on every returned layout — later
+    /// pins move the write counters the earlier layouts' clobber marks
+    /// were snapshotted at.
+    pub fn pin_with(&mut self, w: &IntMatrix, cur: &mut PinCursor) -> Result<ShardedResident> {
+        assert_eq!(
+            cur.by_shard.len(),
+            self.pools.len(),
+            "pin cursor was created for a different shard count"
+        );
+        let ranges = shard_rows(w.rows, w.precision.lanes_per_word(), self.pools.len());
+        let mut parts = Vec::with_capacity(self.pools.len());
+        let mut pinned_words = 0u64;
+        for (shard, &(row0, rows)) in ranges.iter().enumerate() {
+            if rows == 0 {
+                parts.push(None);
+                continue;
+            }
+            let rm = ResidentModel::pin_rows_at(
+                &mut self.pools[shard],
+                w,
+                row0,
+                rows,
+                &mut cur.by_shard[shard],
+                cur.next_block[shard],
+            )?;
+            cur.next_block[shard] =
+                (cur.next_block[shard] + rm.tile_count()) % self.pools[shard].len().max(1);
+            pinned_words += rm.pinned_words;
+            parts.push(Some(rm));
+        }
+        Ok(ShardedResident {
+            m: w.rows,
+            n: w.cols,
+            precision: w.precision,
+            variant: self.variant,
+            parts,
+            pinned_words,
+        })
+    }
+
+    /// Re-snapshot a resident layout's clobber marks against the pools'
+    /// current write counters — once per layout, after the last
+    /// [`ShardedPool::pin_with`] of a multi-model sequence.
+    pub fn refresh_marks(&self, sr: &mut ShardedResident) {
+        for (shard, part) in sr.parts.iter_mut().enumerate() {
+            if let Some(rm) = part {
+                rm.refresh_write_marks(&self.pools[shard]);
+            }
+        }
     }
 
     /// Persistent-dataflow sharded GEMV against a layout pinned by
@@ -477,6 +555,52 @@ mod tests {
         assert_eq!(y, w.gemv_ref(&x));
         assert_eq!(stats.weight_copy_cycles, 0);
         assert_eq!(stats.exposed_load_cycles, 0);
+    }
+
+    #[test]
+    fn pin_with_stacks_multiple_models_and_stays_exact() {
+        let mut rng = Rng::seed_from_u64(0xa4e4a);
+        let p = Precision::Int4;
+        let w1 = IntMatrix::random(&mut rng, 24, 40, p);
+        let w2 = IntMatrix::random(&mut rng, 31, 64, p);
+        let w3 = IntMatrix::random(&mut rng, 10, 24, p);
+        for shards in [1usize, 2] {
+            let mut sp = ShardedPool::new(Variant::OneDA, shards, 3, p);
+            let mut cur = sp.pin_cursor();
+            let mut layouts = vec![
+                sp.pin_with(&w1, &mut cur).expect("w1 fits"),
+                sp.pin_with(&w2, &mut cur).expect("w2 fits"),
+                sp.pin_with(&w3, &mut cur).expect("w3 fits"),
+            ];
+            for sr in &mut layouts {
+                sp.refresh_marks(sr);
+            }
+            // Every layout dispatches exactly with zero copy traffic,
+            // and dispatching one layout does not disturb another.
+            for (w, sr) in [&w1, &w2, &w3].into_iter().zip(&layouts) {
+                let x = random_vector(&mut rng, w.cols, p, true);
+                let (y, s) = sp.run_gemv_resident(sr, &x, true);
+                assert_eq!(y, w.gemv_ref(&x), "shards={shards}");
+                assert_eq!(s.weight_copy_cycles, 0, "shards={shards}");
+                assert_eq!(s.exposed_load_cycles, 0, "shards={shards}");
+            }
+            let x = random_vector(&mut rng, w1.cols, p, true);
+            let (y, _) = sp.run_gemv_resident(&layouts[0], &x, true);
+            assert_eq!(y, w1.gemv_ref(&x), "first layout intact after the others ran");
+        }
+    }
+
+    #[test]
+    fn pin_with_reports_capacity_overflow() {
+        // One block holds 512 words; three 80x512 2-bit models are
+        // 4 x 512 words each — the second pin must overflow, not clobber.
+        let p = Precision::Int2;
+        let w = IntMatrix::zeros(80, 512, p);
+        let mut sp = ShardedPool::new(Variant::OneDA, 1, 4, p);
+        let mut cur = sp.pin_cursor();
+        assert!(sp.pin_with(&w, &mut cur).is_ok());
+        let err = sp.pin_with(&w, &mut cur).unwrap_err();
+        assert!(format!("{err:#}").contains("overflows"), "{err:#}");
     }
 
     #[test]

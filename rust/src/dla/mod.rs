@@ -8,6 +8,7 @@ pub mod config;
 pub mod cycle;
 pub mod dse;
 pub mod models;
+pub mod netexec;
 pub mod validate;
 
 pub use compare::{compare_all, CompareRow};
@@ -18,5 +19,9 @@ pub use cycle::{
     replica_first_touch_cycles, shard_merge_cycles, Dataflow,
 };
 pub use dse::{explore, DseResult};
-pub use models::{alexnet, resnet34, ConvLayer, Network};
+pub use models::{alexnet, resnet34, toy, ConvLayer, Network};
+pub use netexec::{
+    network_by_name, reference_forward, LayerReport, NetExec, NetExecConfig, NetExecReport,
+    QuantNetwork, Tensor,
+};
 pub use validate::{validate_layer, LayerValidation};

@@ -117,6 +117,27 @@ pub fn resnet34() -> Network {
     Network { name: "ResNet-34", layers }
 }
 
+/// A tiny 3-layer CNN (conv→conv→fc) for functional tests, goldens and
+/// CI smoke runs: the shapes chain exactly under stride-1 valid
+/// convolution (conv1's 4×4×4 output is precisely conv2's input, and
+/// conv2's 6×2×2 output flattens losslessly to the fc layer's 24 input
+/// features), so `dla::netexec` exercises the identity and flatten
+/// adapters but no lossy crop. The fc layer's 12 outputs span **two**
+/// 4-bit lane groups (12 > 10 lanes/word), so row sharding genuinely
+/// splits it — the sharded golden pins a real multi-shard schedule,
+/// not a degenerate single-shard one. Small enough that the
+/// bit-accurate eFSM oracle runs it in milliseconds.
+pub fn toy() -> Network {
+    Network {
+        name: "toy-cnn",
+        layers: vec![
+            ConvLayer::new("conv1", 4, 2, 3, 3, 4, 4),
+            ConvLayer::new("conv2", 6, 4, 3, 3, 2, 2),
+            ConvLayer::fc("fc", 12, 24),
+        ],
+    }
+}
+
 /// A transformer encoder's GEMM workload expressed as DLA layers — the
 /// paper's future-work target ("DNNs with more matrix multiplications
 /// such as transformers", §VI-D). Attention and MLP projections map to
@@ -181,6 +202,20 @@ mod tests {
         assert!(net.total_macs() > 100_000_000);
         // Every layer has K ≥ 256 — great Kvec utilization.
         assert!(net.layers.iter().all(|l| l.k >= 256));
+    }
+
+    #[test]
+    fn toy_shapes_chain_exactly() {
+        // conv1 output (k, p, q) must be conv2's stride-1 valid input
+        // (c, p + r - 1, q + s - 1), and conv2's output volume must
+        // flatten to the fc input features.
+        let net = toy();
+        let [c1, c2, fc] = &net.layers[..] else { panic!("toy is 3 layers") };
+        assert_eq!((c2.c, c2.p + c2.r - 1, c2.q + c2.s - 1), (c1.k, c1.p, c1.q));
+        assert_eq!(fc.c, c2.k * c2.p * c2.q);
+        assert_eq!(net.total_macs(), 1152 + 864 + 288);
+        // 12 fc outputs > 10 lanes/word at 4-bit: row sharding splits.
+        assert!(fc.k > 10);
     }
 
     #[test]

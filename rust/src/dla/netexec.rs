@@ -1,0 +1,1095 @@
+//! Functional multi-layer network inference on the BRAMAC serving
+//! stack — the layer that connects the cycle-model world
+//! ([`super::cycle`]) to the bit-accurate simulator world
+//! ([`crate::coordinator::BlockPool`]).
+//!
+//! The DLA study's AlexNet/ResNet-34 results are analytical: `dla::cycle`
+//! counts cycles from layer geometry alone. This module makes the same
+//! networks run **functionally**: real quantized activations flow
+//! through the simulated BRAMAC blocks layer by layer, and the run's
+//! measured [`ScheduleStats`] are reconciled against the analytical
+//! model in one report.
+//!
+//! # Lowering
+//!
+//! Every [`ConvLayer`] is lowered via **im2col** to the existing
+//! GEMV/batch-2 MVM path: the layer's weights form a `K × (C·R·S)`
+//! matrix (row `k` holds filter `k`, column `(ci·R + ri)·S + si`), and
+//! each output pixel `(op, oq)` becomes one im2col column of the
+//! stride-1 *valid* convolution over a `C × (P+R−1) × (Q+S−1)` input
+//! volume — so a layer is exactly `P·Q` GEMV dispatches (paired into
+//! batch-2 MVMs on BRAMAC-2SA, whose two dummy arrays share the weight
+//! copy). FC layers (`P = Q = 1`) degenerate to a single direct GEMV
+//! dispatch. This preserves the layer's MAC count **exactly**:
+//! `K · C·R·S · P·Q == ConvLayer::macs()`, asserted by
+//! [`NetExecReport::reconcile`].
+//!
+//! # Requantization contract
+//!
+//! Between layers, raw `i64` accumulator outputs are brought back into
+//! the operand range with a self-calibrating arithmetic shift: the
+//! smallest `s` such that `max|y| >> s` fits in `bits−1` magnitude bits
+//! ([`requant_shift`]), then optional ReLU, then a clamp to the next
+//! layer's input range (signed, or unsigned per the MAC2 `inType`).
+//! The host reference ([`reference_forward`]) applies the identical
+//! chain, so the differential suite (`tests/netexec_diff.rs`) proves
+//! the whole pipeline — not just single GEMVs — bit-identical.
+//!
+//! # Shape adapters
+//!
+//! Real network geometries pool, stride and flatten between layers;
+//! the linear layer list is chained with a deterministic adapter
+//! ([`adapt`]): identity when shapes already match, center-crop +
+//! flatten for FC transitions (`c' = k·t²`), and channel-truncate/pad +
+//! spatial center-crop/pad otherwise. Each layer still consumes exactly
+//! its declared geometry, so per-layer MAC counts and the analytical
+//! cycle model stay aligned.
+//!
+//! # Dataflows
+//!
+//! * **Tiling** — each dispatch streams the layer's weights
+//!   (`ShardedPool::run_gemv_signed`); the report's
+//!   `weight_copy_cycles` equals `weight words × dispatches` exactly.
+//! * **Persistent** — *all* layers are pinned once at construction
+//!   ([`crate::coordinator::ShardedPool::pin_with`] arena placement);
+//!   every dispatch runs against resident words with zero copy and zero
+//!   exposed-load cycles, and the one-time pin equals the network's
+//!   total weight words.
+
+use anyhow::{ensure, Result};
+
+use crate::arch::Precision;
+use crate::bramac::block::MAIN_WORDS;
+use crate::bramac::{ExecFidelity, Variant};
+use crate::coordinator::tiler::plan_gemv;
+use crate::coordinator::{shard_rows, ScheduleStats, ShardedPool, ShardedResident};
+use crate::dla::config::DlaConfig;
+use crate::dla::cycle::{
+    first_touch_cycles, layer_cycles_sharded, network_cycles_sharded, Dataflow,
+};
+use crate::dla::models::{ConvLayer, Network};
+use crate::quant::{random_vector, IntMatrix};
+use crate::util::Rng;
+
+/// A 3-D activation volume (channels × height × width), channel-major.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Tensor {
+    pub c: usize,
+    pub h: usize,
+    pub w: usize,
+    pub data: Vec<i64>,
+}
+
+impl Tensor {
+    pub fn zeros(c: usize, h: usize, w: usize) -> Tensor {
+        Tensor { c, h, w, data: vec![0; c * h * w] }
+    }
+
+    pub fn from_data(c: usize, h: usize, w: usize, data: Vec<i64>) -> Tensor {
+        assert_eq!(data.len(), c * h * w, "shape/data length mismatch");
+        Tensor { c, h, w, data }
+    }
+
+    #[inline]
+    pub fn get(&self, c: usize, y: usize, x: usize) -> i64 {
+        self.data[(c * self.h + y) * self.w + x]
+    }
+
+    #[inline]
+    fn set(&mut self, c: usize, y: usize, x: usize, v: i64) {
+        self.data[(c * self.h + y) * self.w + x] = v;
+    }
+
+    pub fn elems(&self) -> usize {
+        self.data.len()
+    }
+}
+
+/// The stride-1 valid-convolution input shape a layer consumes:
+/// `(C, P+R−1, Q+S−1)`.
+pub fn input_shape_for(g: &ConvLayer) -> (usize, usize, usize) {
+    (g.c, g.p + g.r - 1, g.q + g.s - 1)
+}
+
+/// One im2col column: output pixel `(op, oq)`'s receptive field in the
+/// weight-matrix column order `(ci·R + ri)·S + si`.
+pub fn im2col_column(a: &Tensor, g: &ConvLayer, op: usize, oq: usize) -> Vec<i64> {
+    debug_assert!(op < g.p && oq < g.q);
+    let mut col = Vec::with_capacity(g.c * g.r * g.s);
+    for ci in 0..g.c {
+        for ri in 0..g.r {
+            for si in 0..g.s {
+                col.push(a.get(ci, op + ri, oq + si));
+            }
+        }
+    }
+    col
+}
+
+/// Direct nested-loop convolution — the im2col-free reference the
+/// differential and property suites compare against. Output is
+/// channel-major `K × P × Q`, flattened.
+pub fn conv_ref(a: &Tensor, g: &ConvLayer, w: &IntMatrix) -> Vec<i64> {
+    assert_eq!((a.c, a.h, a.w), input_shape_for(g), "input volume mismatch for '{}'", g.name);
+    assert_eq!((w.rows, w.cols), (g.k, g.c * g.r * g.s), "weight shape mismatch");
+    let pq = g.p * g.q;
+    let mut y = vec![0i64; g.k * pq];
+    for kk in 0..g.k {
+        for op in 0..g.p {
+            for oq in 0..g.q {
+                let mut acc = 0i64;
+                for ci in 0..g.c {
+                    for ri in 0..g.r {
+                        for si in 0..g.s {
+                            acc += w.get(kk, (ci * g.r + ri) * g.s + si)
+                                * a.get(ci, op + ri, oq + si);
+                        }
+                    }
+                }
+                y[kk * pq + op * g.q + oq] = acc;
+            }
+        }
+    }
+    y
+}
+
+/// Per-layer requantization shift: the smallest arithmetic right shift
+/// bringing `max|y|` into `bits−1` magnitude bits. Self-calibrating —
+/// both the engine and the host reference derive it from their own
+/// (bit-identical) layer outputs.
+pub fn requant_shift(y: &[i64], bits: u32) -> u32 {
+    let maxabs = y.iter().map(|v| v.unsigned_abs()).max().unwrap_or(0);
+    let bitlen = 64 - maxabs.leading_zeros();
+    bitlen.saturating_sub(bits - 1)
+}
+
+/// Requantize a layer's raw outputs into the next layer's input range:
+/// arithmetic shift ([`requant_shift`]), optional ReLU, clamp to the
+/// signed or unsigned operand range. Returns the values and the shift.
+pub fn requantize(y: &[i64], p: Precision, signed: bool, relu: bool) -> (Vec<i64>, u32) {
+    let shift = requant_shift(y, p.bits());
+    let (lo, hi) = if signed { p.range() } else { p.range_unsigned() };
+    let q = y
+        .iter()
+        .map(|&v| {
+            let mut v = v >> shift;
+            if relu {
+                v = v.max(0);
+            }
+            v.clamp(lo as i64, hi as i64)
+        })
+        .collect();
+    (q, shift)
+}
+
+fn center(from: usize, to: usize) -> (usize, usize, usize) {
+    if to <= from {
+        ((from - to) / 2, 0, to)
+    } else {
+        (0, (to - from) / 2, from)
+    }
+}
+
+fn isqrt(n: usize) -> usize {
+    let mut t = (n as f64).sqrt() as usize;
+    while t > 0 && t * t > n {
+        t -= 1;
+    }
+    while (t + 1) * (t + 1) <= n {
+        t += 1;
+    }
+    t
+}
+
+/// Channel-truncate/zero-pad + spatial center-crop/zero-pad.
+fn crop_pad(y: &Tensor, c: usize, h: usize, w: usize) -> Tensor {
+    let mut out = Tensor::zeros(c, h, w);
+    let (hs, hd, hn) = center(y.h, h);
+    let (ws, wd, wn) = center(y.w, w);
+    for ci in 0..c.min(y.c) {
+        for i in 0..hn {
+            for j in 0..wn {
+                out.set(ci, hd + i, wd + j, y.get(ci, hs + i, ws + j));
+            }
+        }
+    }
+    out
+}
+
+/// Deterministic inter-layer shape adapter (module docs): identity →
+/// lossless flatten (FC transitions consuming the exact volume,
+/// `c' = k·p·q`) → center-crop + flatten (`c' = k·t²`, e.g. AlexNet
+/// conv5 13×13 → 6×6 → fc6) → channel/spatial crop-pad fallback.
+pub fn adapt(y: &Tensor, c: usize, h: usize, w: usize) -> Tensor {
+    if (y.c, y.h, y.w) == (c, h, w) {
+        return y.clone();
+    }
+    if h == 1 && w == 1 {
+        // Exact-volume flatten: channel-major reshape, lossless — this
+        // must win over the windowed rule so non-square spatial maps
+        // (k, 2, 3) still flatten to 6k features intact.
+        if c == y.c * y.h * y.w {
+            return Tensor { c, h: 1, w: 1, data: y.data.clone() };
+        }
+        if y.c > 0 && c % y.c == 0 {
+            let t = isqrt(c / y.c);
+            if t * t == c / y.c {
+                // Crop/pad the spatial window to t×t, then flatten the
+                // whole volume channel-major into c features.
+                let cropped = crop_pad(y, y.c, t, t);
+                return Tensor { c, h: 1, w: 1, data: cropped.data };
+            }
+        }
+    }
+    crop_pad(y, c, h, w)
+}
+
+/// A network with actual quantized weights: geometry from
+/// [`super::models`] plus one deterministic per-layer weight matrix.
+/// Weights are materialized lazily from per-layer seeds — AlexNet's FC
+/// layers would otherwise hold hundreds of megabytes resident — so the
+/// engine and the host reference regenerate bit-identical matrices on
+/// demand.
+#[derive(Debug, Clone)]
+pub struct QuantNetwork {
+    net_name: &'static str,
+    pub precision: Precision,
+    pub geoms: Vec<ConvLayer>,
+    seeds: Vec<u64>,
+}
+
+impl QuantNetwork {
+    /// Synthetic quantized weights for `net` at `precision`, derived
+    /// from `seed` (layer `i` uses `seed + GOLDEN·(i+1)`).
+    pub fn random(net: &Network, precision: Precision, seed: u64) -> QuantNetwork {
+        const GOLDEN: u64 = 0x9E37_79B9_7F4A_7C15;
+        assert!(!net.layers.is_empty(), "network has no layers");
+        QuantNetwork {
+            net_name: net.name,
+            precision,
+            geoms: net.layers.clone(),
+            seeds: (0..net.layers.len())
+                .map(|i| seed.wrapping_add(GOLDEN.wrapping_mul(i as u64 + 1)))
+                .collect(),
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        self.net_name
+    }
+
+    /// Layer `li`'s weight matrix, `K × (C·R·S)`, regenerated from its
+    /// seed (bit-identical on every call).
+    pub fn layer_weights(&self, li: usize) -> IntMatrix {
+        let g = &self.geoms[li];
+        let mut rng = Rng::seed_from_u64(self.seeds[li]);
+        IntMatrix::random(&mut rng, g.k, g.c * g.r * g.s, self.precision)
+    }
+
+    /// On-chip weight words layer `li` occupies (packed lanes):
+    /// `ceil(K/lanes) · C·R·S` — invariant across dataflows and shard
+    /// counts (row shards are lane-aligned).
+    pub fn weight_words(&self, li: usize) -> u64 {
+        let g = &self.geoms[li];
+        (g.k.div_ceil(self.precision.lanes_per_word()) * (g.c * g.r * g.s)) as u64
+    }
+
+    /// The geometry as a [`Network`] (for the analytical cycle model).
+    pub fn network(&self) -> Network {
+        Network { name: self.net_name, layers: self.geoms.clone() }
+    }
+
+    /// The input volume shape the first layer consumes.
+    pub fn input_shape(&self) -> (usize, usize, usize) {
+        input_shape_for(&self.geoms[0])
+    }
+
+    /// A deterministic random input volume in the operand range.
+    pub fn random_input(&self, seed: u64, signed: bool) -> Tensor {
+        let (c, h, w) = self.input_shape();
+        let mut rng = Rng::seed_from_u64(seed);
+        Tensor { c, h, w, data: random_vector(&mut rng, c * h * w, self.precision, signed) }
+    }
+}
+
+/// Pure-host reference forward pass: direct nested-loop convolutions
+/// (no im2col, no simulator) through the identical requant + adapter
+/// chain. The differential oracle for `tests/netexec_diff.rs`.
+pub fn reference_forward(
+    qnet: &QuantNetwork,
+    input: &Tensor,
+    signed: bool,
+    relu: bool,
+) -> Vec<i64> {
+    let n = qnet.geoms.len();
+    assert!(n > 0);
+    let mut act = input.clone();
+    for li in 0..n {
+        let g = &qnet.geoms[li];
+        let (c, h, w) = input_shape_for(g);
+        if li > 0 {
+            act = adapt(&act, c, h, w);
+        }
+        let wts = qnet.layer_weights(li);
+        let y = conv_ref(&act, g, &wts);
+        if li + 1 == n {
+            return y;
+        }
+        let (q, _) = requantize(&y, qnet.precision, signed, relu);
+        act = Tensor { c: g.k, h: g.p, w: g.q, data: q };
+    }
+    unreachable!("loop returns on the last layer")
+}
+
+/// The reference DLA-BRAMAC instance used for analytical attribution
+/// (mirrors the serving layer's choice): one DSP column plus two
+/// BRAMAC-computed columns, Cvec=16, Kvec=64.
+pub fn analytical_config(variant: Variant, p: Precision) -> DlaConfig {
+    DlaConfig::dla_bramac(variant, 1, 2, 16, 64, p)
+}
+
+/// How the engine executes a network (see module docs).
+#[derive(Debug, Clone, Copy)]
+pub struct NetExecConfig {
+    pub variant: Variant,
+    pub dataflow: Dataflow,
+    pub shards: usize,
+    /// Blocks per shard; 0 = auto (4 for tiling, the smallest
+    /// power-of-two arena that fits the whole network for persistent).
+    pub blocks_per_shard: usize,
+    /// Worker threads per shard pool (host parallelism only).
+    pub threads: usize,
+    pub fidelity: ExecFidelity,
+    /// MAC2 `inType`: signed or unsigned activations.
+    pub signed_inputs: bool,
+    /// Apply ReLU between layers.
+    pub relu: bool,
+}
+
+impl Default for NetExecConfig {
+    fn default() -> Self {
+        NetExecConfig {
+            variant: Variant::TwoSA,
+            dataflow: Dataflow::Tiling,
+            shards: 1,
+            blocks_per_shard: 0,
+            threads: 1,
+            fidelity: ExecFidelity::from_env(),
+            signed_inputs: true,
+            relu: true,
+        }
+    }
+}
+
+const DEFAULT_TILING_BLOCKS: usize = 4;
+
+/// Smallest power-of-two blocks-per-shard for which the whole network's
+/// persistent arena placement ([`ShardedPool::pin_with`] semantics,
+/// simulated without touching any pool) fits every block's 512 words.
+fn persistent_blocks_per_shard(geoms: &[ConvLayer], p: Precision, shards: usize) -> usize {
+    let lanes = p.lanes_per_word();
+    let mut blocks = 1usize;
+    'grow: loop {
+        for shard in 0..shards {
+            let mut cursors = vec![0usize; blocks];
+            let mut next = 0usize;
+            for g in geoms {
+                let (_, rows) = shard_rows(g.k, lanes, shards)[shard];
+                if rows == 0 {
+                    continue;
+                }
+                let plan = plan_gemv(rows, g.c * g.r * g.s, p, false);
+                for (i, t) in plan.tiles.iter().enumerate() {
+                    let b = (i + next) % blocks;
+                    if cursors[b] + t.words() > MAIN_WORDS {
+                        blocks *= 2;
+                        continue 'grow;
+                    }
+                    cursors[b] += t.words();
+                }
+                next = (next + plan.tiles.len()) % blocks;
+            }
+        }
+        return blocks;
+    }
+}
+
+/// One layer's share of a functional run.
+#[derive(Debug, Clone)]
+pub struct LayerReport {
+    pub name: String,
+    /// MACs the geometry declares ([`ConvLayer::macs`]).
+    pub geom_macs: u64,
+    /// MACs the engine actually dispatched (Σ `m·n` over dispatches) —
+    /// must equal `geom_macs` exactly ([`NetExecReport::reconcile`]).
+    pub macs: u64,
+    /// GEMV / batch-2 dispatches this layer took.
+    pub dispatches: usize,
+    /// Accumulated over the layer's sequential dispatches
+    /// ([`ScheduleStats::merge_seq`]).
+    pub stats: ScheduleStats,
+    /// On-chip weight words ([`QuantNetwork::weight_words`]).
+    pub weight_words: u64,
+    /// Analytical cycles for this layer under the run's dataflow and
+    /// shard count ([`layer_cycles_sharded`]).
+    pub analytical_cycles: u64,
+    /// Requant shift applied after this layer (0 for the last layer —
+    /// its raw outputs are the report's `output`).
+    pub requant_shift: u32,
+}
+
+/// A whole functional run: per-layer breakdown, final outputs, and the
+/// functional-vs-analytical reconciliation inputs.
+#[derive(Debug, Clone)]
+pub struct NetExecReport {
+    pub network: &'static str,
+    pub precision: Precision,
+    pub variant: Variant,
+    pub dataflow: Dataflow,
+    pub shards: usize,
+    pub fidelity: ExecFidelity,
+    pub layers: Vec<LayerReport>,
+    /// Last layer's raw `i64` outputs (channel-major `K × P × Q`).
+    pub output: Vec<i64>,
+    /// Sequential total over layers (makespans add).
+    pub total: ScheduleStats,
+    /// One-time pin cost (persistent; 0 when tiling).
+    pub pinned_words: u64,
+    /// [`network_cycles_sharded`] under the run's dataflow.
+    pub analytical_total: u64,
+    pub analytical_tiling: u64,
+    pub analytical_persistent: u64,
+    pub analytical_first_touch: u64,
+}
+
+impl NetExecReport {
+    pub fn functional_macs(&self) -> u64 {
+        self.layers.iter().map(|l| l.macs).sum()
+    }
+
+    /// Verify the documented reconciliation identities (DESIGN.md
+    /// §"Functional network execution"):
+    ///
+    /// 1. per-layer functional MACs ≡ [`ConvLayer::macs`] exactly;
+    /// 2. persistent: zero copy / zero exposed loads per inference, and
+    ///    the one-time pin equals the network's total weight words;
+    ///    tiling: streamed copy cycles ≡ weight words × dispatches;
+    /// 3. analytical dataflow identity at this shard count:
+    ///    `0 ≤ tiling − persistent ≤ first_touch` (per-layer ceil
+    ///    division makes the gap shrink, never grow, with shards).
+    pub fn reconcile(&self) -> Result<()> {
+        for l in &self.layers {
+            ensure!(
+                l.macs == l.geom_macs,
+                "layer '{}': functional MACs {} != ConvLayer::macs() {} — \
+                 im2col over/under-tiling",
+                l.name,
+                l.macs,
+                l.geom_macs
+            );
+        }
+        let total_words: u64 = self.layers.iter().map(|l| l.weight_words).sum();
+        match self.dataflow {
+            Dataflow::Persistent => {
+                ensure!(
+                    self.total.weight_copy_cycles == 0,
+                    "persistent dispatches must not copy weights (saw {})",
+                    self.total.weight_copy_cycles
+                );
+                ensure!(
+                    self.total.exposed_load_cycles == 0,
+                    "persistent dispatches must not expose loads (saw {})",
+                    self.total.exposed_load_cycles
+                );
+                ensure!(
+                    self.pinned_words == total_words,
+                    "one-time pin {} words != network weight words {}",
+                    self.pinned_words,
+                    total_words
+                );
+            }
+            Dataflow::Tiling => {
+                let expected: u64 = self
+                    .layers
+                    .iter()
+                    .map(|l| l.weight_words * l.dispatches as u64)
+                    .sum();
+                ensure!(
+                    self.total.weight_copy_cycles == expected,
+                    "tiling streamed {} weight words, expected weight words × dispatches = {}",
+                    self.total.weight_copy_cycles,
+                    expected
+                );
+                ensure!(self.pinned_words == 0, "tiling must not pin");
+            }
+        }
+        ensure!(
+            self.analytical_persistent <= self.analytical_tiling
+                && self.analytical_tiling - self.analytical_persistent
+                    <= self.analytical_first_touch,
+            "analytical dataflow identity violated: tiling {} vs persistent {} \
+             (first touch {})",
+            self.analytical_tiling,
+            self.analytical_persistent,
+            self.analytical_first_touch
+        );
+        Ok(())
+    }
+
+    /// Aligned per-layer table for the CLI / example.
+    pub fn render(&self) -> String {
+        use std::fmt::Write as _;
+        let mut s = String::new();
+        let _ = writeln!(
+            s,
+            "{} @ {} on {} x {} shard(s), {} dataflow, {} fidelity",
+            self.network,
+            self.precision,
+            self.variant.name(),
+            self.shards,
+            self.dataflow.name(),
+            self.fidelity.name()
+        );
+        let _ = writeln!(
+            s,
+            "{:<10} {:>12} {:>6} {:>7} {:>11} {:>13} {:>11} {:>8} {:>6} {:>13}",
+            "layer",
+            "macs",
+            "disp",
+            "tiles",
+            "mac2s",
+            "makespan",
+            "copy",
+            "exposed",
+            "shift",
+            "analytical"
+        );
+        for l in &self.layers {
+            let _ = writeln!(
+                s,
+                "{:<10} {:>12} {:>6} {:>7} {:>11} {:>13} {:>11} {:>8} {:>6} {:>13}",
+                l.name,
+                l.macs,
+                l.dispatches,
+                l.stats.tiles,
+                l.stats.mac2s,
+                l.stats.makespan_cycles,
+                l.stats.weight_copy_cycles,
+                l.stats.exposed_load_cycles,
+                l.requant_shift,
+                l.analytical_cycles
+            );
+        }
+        let _ = writeln!(
+            s,
+            "{:<10} {:>12} {:>6} {:>7} {:>11} {:>13} {:>11} {:>8} {:>6} {:>13}",
+            "total",
+            self.functional_macs(),
+            self.layers.iter().map(|l| l.dispatches).sum::<usize>(),
+            self.total.tiles,
+            self.total.mac2s,
+            self.total.makespan_cycles,
+            self.total.weight_copy_cycles,
+            self.total.exposed_load_cycles,
+            "",
+            self.analytical_total
+        );
+        if self.pinned_words > 0 {
+            let _ = writeln!(
+                s,
+                "one-time pin: {} weight words resident across the pool",
+                self.pinned_words
+            );
+        }
+        let _ = writeln!(
+            s,
+            "functional/analytical cycle ratio: {:.2} (block-pool machine vs \
+             DLA-BRAMAC overlay model)",
+            self.total.makespan_cycles as f64 / self.analytical_total.max(1) as f64
+        );
+        s
+    }
+}
+
+/// One layer's im2col columns through the pool: batch-2 MVM pairs on
+/// BRAMAC-2SA (the §IV-A input sharing — one weight copy feeds two
+/// pixels), plain GEMVs otherwise; odd tails dispatch singly.
+fn run_layer_on_pool(
+    pool: &mut ShardedPool,
+    resident: Option<&ShardedResident>,
+    w: Option<&IntMatrix>,
+    g: &ConvLayer,
+    cols: &[Vec<i64>],
+    signed: bool,
+    use_batch2: bool,
+) -> (Vec<i64>, ScheduleStats, usize, u64) {
+    let pq = cols.len();
+    let n = g.c * g.r * g.s;
+    let mut y = vec![0i64; g.k * pq];
+    let mut stats = ScheduleStats::default();
+    let mut dispatches = 0usize;
+    let mut macs = 0u64;
+    fn scatter(y: &mut [i64], pq: usize, pix: usize, col_y: &[i64]) {
+        for (kk, &v) in col_y.iter().enumerate() {
+            y[kk * pq + pix] = v;
+        }
+    }
+    let mut pix = 0usize;
+    while pix < pq {
+        if use_batch2 && pix + 1 < pq {
+            let ([y0, y1], s) = match (resident, w) {
+                (Some(sr), _) => {
+                    pool.run_mvm_batch2_resident(sr, &cols[pix], &cols[pix + 1], signed)
+                }
+                (None, Some(w)) => {
+                    pool.run_mvm_batch2_signed(w, &cols[pix], &cols[pix + 1], signed)
+                }
+                _ => unreachable!("either a resident layout or streamed weights"),
+            };
+            scatter(&mut y, pq, pix, &y0);
+            scatter(&mut y, pq, pix + 1, &y1);
+            stats.merge_seq(&s);
+            dispatches += 1;
+            macs += 2 * (g.k * n) as u64;
+            pix += 2;
+        } else {
+            let (yv, s) = match (resident, w) {
+                (Some(sr), _) => pool.run_gemv_resident(sr, &cols[pix], signed),
+                (None, Some(w)) => pool.run_gemv_signed(w, &cols[pix], signed),
+                _ => unreachable!("either a resident layout or streamed weights"),
+            };
+            scatter(&mut y, pq, pix, &yv);
+            stats.merge_seq(&s);
+            dispatches += 1;
+            macs += (g.k * n) as u64;
+            pix += 1;
+        }
+    }
+    (y, stats, dispatches, macs)
+}
+
+/// The functional network inference engine: one [`ShardedPool`] serving
+/// a whole [`QuantNetwork`], with per-layer resident pinning
+/// (persistent) or streamed weights (tiling).
+pub struct NetExec {
+    qnet: QuantNetwork,
+    cfg: NetExecConfig,
+    pool: ShardedPool,
+    /// Per-layer resident layouts (persistent dataflow only).
+    residents: Option<Vec<ShardedResident>>,
+    /// One-time first-touch words copied at construction (persistent).
+    pub pinned_words: u64,
+    /// Resolved blocks per shard (after auto-sizing).
+    pub blocks_per_shard: usize,
+    /// Analytical constants, computed once at construction (the
+    /// serving loop calls [`NetExec::infer`] per request):
+    /// `network_cycles_sharded` under the run's dataflow / tiling /
+    /// persistent, and the network first touch.
+    analytical: (u64, u64, u64, u64),
+    /// Tiling-mode weight cache: small networks keep their matrices
+    /// materialized so the serving loop does not regenerate them from
+    /// the RNG per request; networks past
+    /// [`TILING_WEIGHT_CACHE_ELEMS`] (AlexNet's FC layers are tens of
+    /// millions of elements) regenerate lazily per layer per pass.
+    tiling_weights: Option<Vec<IntMatrix>>,
+}
+
+/// Total-weight-element cap for the tiling-mode cache (32 MiB of i64).
+const TILING_WEIGHT_CACHE_ELEMS: u64 = 1 << 22;
+
+impl NetExec {
+    /// Build the pool (auto-sizing the per-shard block count when
+    /// `cfg.blocks_per_shard == 0`) and, for the persistent dataflow,
+    /// pin every layer's weights into the shared on-chip arena.
+    pub fn new(qnet: QuantNetwork, cfg: NetExecConfig) -> Result<NetExec> {
+        ensure!(cfg.shards >= 1, "need at least one shard");
+        let blocks = if cfg.blocks_per_shard > 0 {
+            cfg.blocks_per_shard
+        } else {
+            match cfg.dataflow {
+                Dataflow::Tiling => DEFAULT_TILING_BLOCKS,
+                Dataflow::Persistent => {
+                    persistent_blocks_per_shard(&qnet.geoms, qnet.precision, cfg.shards)
+                }
+            }
+        };
+        let mut pool = ShardedPool::new(cfg.variant, cfg.shards, blocks, qnet.precision)
+            .with_pool_threads(cfg.threads)
+            .with_fidelity(cfg.fidelity);
+        let (residents, pinned_words) = match cfg.dataflow {
+            Dataflow::Tiling => (None, 0),
+            Dataflow::Persistent => {
+                let mut cur = pool.pin_cursor();
+                let mut layouts = Vec::with_capacity(qnet.geoms.len());
+                let mut pinned = 0u64;
+                for li in 0..qnet.geoms.len() {
+                    let w = qnet.layer_weights(li);
+                    let sr = pool.pin_with(&w, &mut cur).map_err(|e| {
+                        anyhow::anyhow!("pinning layer '{}': {e:#}", qnet.geoms[li].name)
+                    })?;
+                    pinned += sr.pinned_words;
+                    layouts.push(sr);
+                }
+                for sr in &mut layouts {
+                    pool.refresh_marks(sr);
+                }
+                (Some(layouts), pinned)
+            }
+        };
+        let acfg = analytical_config(cfg.variant, qnet.precision);
+        let net = qnet.network();
+        let analytical = (
+            network_cycles_sharded(&net, &acfg, cfg.dataflow, cfg.shards),
+            network_cycles_sharded(&net, &acfg, Dataflow::Tiling, cfg.shards),
+            network_cycles_sharded(&net, &acfg, Dataflow::Persistent, cfg.shards),
+            first_touch_cycles(&net, &acfg),
+        );
+        let tiling_weights = match cfg.dataflow {
+            Dataflow::Persistent => None,
+            Dataflow::Tiling => {
+                let elems: u64 =
+                    qnet.geoms.iter().map(|g| (g.k * g.c * g.r * g.s) as u64).sum();
+                (elems <= TILING_WEIGHT_CACHE_ELEMS)
+                    .then(|| (0..qnet.geoms.len()).map(|li| qnet.layer_weights(li)).collect())
+            }
+        };
+        Ok(NetExec {
+            qnet,
+            cfg,
+            pool,
+            residents,
+            pinned_words,
+            blocks_per_shard: blocks,
+            analytical,
+            tiling_weights,
+        })
+    }
+
+    /// Convenience: random weights for `net`, then [`NetExec::new`].
+    pub fn from_network(
+        net: &Network,
+        precision: Precision,
+        seed: u64,
+        cfg: NetExecConfig,
+    ) -> Result<NetExec> {
+        NetExec::new(QuantNetwork::random(net, precision, seed), cfg)
+    }
+
+    pub fn qnet(&self) -> &QuantNetwork {
+        &self.qnet
+    }
+
+    pub fn config(&self) -> NetExecConfig {
+        self.cfg
+    }
+
+    pub fn fidelity(&self) -> ExecFidelity {
+        self.pool.fidelity()
+    }
+
+    /// One forward pass: every layer lowered via im2col to GEMV /
+    /// batch-2 dispatches on the pool, requantized between layers, with
+    /// real per-layer [`ScheduleStats`] accumulated into the report.
+    pub fn infer(&mut self, input: &Tensor) -> Result<NetExecReport> {
+        let (c0, h0, w0) = input_shape_for(&self.qnet.geoms[0]);
+        ensure!(
+            (input.c, input.h, input.w) == (c0, h0, w0),
+            "input volume {}x{}x{} does not match layer '{}' input {c0}x{h0}x{w0}",
+            input.c,
+            input.h,
+            input.w,
+            self.qnet.geoms[0].name
+        );
+        let signed = self.cfg.signed_inputs;
+        let relu = self.cfg.relu;
+        let use_batch2 = self.cfg.variant == Variant::TwoSA;
+        let acfg = analytical_config(self.cfg.variant, self.qnet.precision);
+        let nlayers = self.qnet.geoms.len();
+        let mut act = input.clone();
+        let mut layers = Vec::with_capacity(nlayers);
+        let mut output = Vec::new();
+        for li in 0..nlayers {
+            let g = self.qnet.geoms[li].clone();
+            let (ci, hi, wi) = input_shape_for(&g);
+            if li > 0 {
+                act = adapt(&act, ci, hi, wi);
+            }
+            let cols: Vec<Vec<i64>> = (0..g.p * g.q)
+                .map(|pix| im2col_column(&act, &g, pix / g.q, pix % g.q))
+                .collect();
+            let generated;
+            let tiling_w: Option<&IntMatrix> = match self.cfg.dataflow {
+                Dataflow::Persistent => None,
+                Dataflow::Tiling => match self.tiling_weights.as_ref() {
+                    Some(ws) => Some(&ws[li]),
+                    None => {
+                        generated = self.qnet.layer_weights(li);
+                        Some(&generated)
+                    }
+                },
+            };
+            let resident = self.residents.as_ref().map(|v| &v[li]);
+            let (y, stats, dispatches, macs) = run_layer_on_pool(
+                &mut self.pool,
+                resident,
+                tiling_w,
+                &g,
+                &cols,
+                signed,
+                use_batch2,
+            );
+            let shift = if li + 1 == nlayers {
+                0
+            } else {
+                let (q, s) = requantize(&y, self.qnet.precision, signed, relu);
+                act = Tensor { c: g.k, h: g.p, w: g.q, data: q };
+                s
+            };
+            layers.push(LayerReport {
+                name: g.name.clone(),
+                geom_macs: g.macs(),
+                macs,
+                dispatches,
+                stats,
+                weight_words: self.qnet.weight_words(li),
+                analytical_cycles: layer_cycles_sharded(
+                    &g,
+                    &acfg,
+                    self.cfg.dataflow,
+                    self.cfg.shards,
+                ),
+                requant_shift: shift,
+            });
+            if li + 1 == nlayers {
+                output = y;
+            }
+        }
+        let mut total = ScheduleStats::default();
+        for l in &layers {
+            total.merge_seq(&l.stats);
+        }
+        Ok(NetExecReport {
+            network: self.qnet.net_name,
+            precision: self.qnet.precision,
+            variant: self.cfg.variant,
+            dataflow: self.cfg.dataflow,
+            shards: self.cfg.shards,
+            fidelity: self.pool.fidelity(),
+            layers,
+            output,
+            total,
+            pinned_words: self.pinned_words,
+            analytical_total: self.analytical.0,
+            analytical_tiling: self.analytical.1,
+            analytical_persistent: self.analytical.2,
+            analytical_first_touch: self.analytical.3,
+        })
+    }
+}
+
+/// Resolve a network by CLI name.
+pub fn network_by_name(name: &str) -> Option<Network> {
+    match name {
+        "toy" => Some(super::models::toy()),
+        "alexnet" => Some(super::models::alexnet()),
+        "resnet34" => Some(super::models::resnet34()),
+        _ => None,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dla::models::toy;
+
+    /// im2col-GEMM == direct nested-loop convolution, on the host
+    /// (no simulator): random shapes plus the edge geometries — 1×1
+    /// kernels, single input channel, single-pixel feature maps.
+    #[test]
+    fn im2col_gemm_matches_direct_convolution() {
+        let mut rng = Rng::seed_from_u64(0x1a2c01);
+        let p = Precision::Int4;
+        let mut shapes = vec![
+            (3usize, 1usize, 1usize, 1usize, 1usize, 1usize), // 1x1 kernel, 1-pixel fmap
+            (1, 1, 3, 3, 4, 4),                               // c = 1
+            (5, 3, 1, 1, 6, 2),                               // 1x1 kernel over a fmap
+            (4, 2, 3, 2, 1, 1),                               // single output pixel
+        ];
+        for _ in 0..6 {
+            shapes.push((
+                rng.gen_range_usize(1, 6),
+                rng.gen_range_usize(1, 4),
+                rng.gen_range_usize(1, 4),
+                rng.gen_range_usize(1, 4),
+                rng.gen_range_usize(1, 5),
+                rng.gen_range_usize(1, 5),
+            ));
+        }
+        for (k, c, r, s, pp, q) in shapes {
+            let g = ConvLayer::new("t", k, c, r, s, pp, q);
+            let (ic, ih, iw) = input_shape_for(&g);
+            let a = Tensor::from_data(
+                ic,
+                ih,
+                iw,
+                random_vector(&mut rng, ic * ih * iw, p, true),
+            );
+            let w = IntMatrix::random(&mut rng, k, c * r * s, p);
+            let direct = conv_ref(&a, &g, &w);
+            // im2col lowering: one GEMV per output pixel.
+            let pq = pp * q;
+            let mut lowered = vec![0i64; k * pq];
+            for pix in 0..pq {
+                let col = im2col_column(&a, &g, pix / q, pix % q);
+                assert_eq!(col.len(), c * r * s);
+                for (kk, v) in w.gemv_ref(&col).into_iter().enumerate() {
+                    lowered[kk * pq + pix] = v;
+                }
+            }
+            assert_eq!(lowered, direct, "k={k} c={c} r={r} s={s} p={pp} q={q}");
+        }
+    }
+
+    #[test]
+    fn requant_shift_is_minimal_and_in_range() {
+        let mut rng = Rng::seed_from_u64(0x4e9);
+        for p in Precision::ALL {
+            let bits = p.bits();
+            let (lo, hi) = p.range();
+            for _ in 0..50 {
+                let y: Vec<i64> =
+                    (0..17).map(|_| rng.gen_range_i64(-(1 << 20), 1 << 20)).collect();
+                let (q, shift) = requantize(&y, p, true, false);
+                assert!(q.iter().all(|&v| v >= lo as i64 && v <= hi as i64), "{p}");
+                // Shift is minimal: the unshifted-by-one values escape
+                // the range (unless no shift was needed).
+                if shift > 0 {
+                    let max = y.iter().map(|v| v.unsigned_abs()).max().unwrap();
+                    assert!(
+                        (max >> (shift - 1)) > hi as u64,
+                        "{p}: shift {shift} not minimal for max |y| {max}"
+                    );
+                }
+            }
+            // Unsigned mode clamps negatives out.
+            let (q, _) = requantize(&[-100, 3, 50], p, false, false);
+            assert!(q.iter().all(|&v| v >= 0));
+            // ReLU zeroes negatives even in signed mode.
+            let (q, _) = requantize(&[-5, 2], p, true, true);
+            assert_eq!(q[0], 0);
+        }
+    }
+
+    #[test]
+    fn adapter_rules() {
+        // Identity.
+        let t = Tensor::from_data(2, 2, 2, (0..8).collect());
+        assert_eq!(adapt(&t, 2, 2, 2), t);
+        // Flatten: 6x2x2 -> 24 features, data order preserved.
+        let t = Tensor::from_data(6, 2, 2, (0..24).collect());
+        let f = adapt(&t, 24, 1, 1);
+        assert_eq!((f.c, f.h, f.w), (24, 1, 1));
+        assert_eq!(f.data, t.data);
+        // Lossless flatten also covers non-square spatial maps:
+        // 2x2x3 -> 12 features, nothing cropped.
+        let t = Tensor::from_data(2, 2, 3, (0..12).collect());
+        let f = adapt(&t, 12, 1, 1);
+        assert_eq!((f.c, f.h, f.w), (12, 1, 1));
+        assert_eq!(f.data, t.data);
+        // Crop+flatten: 2x3x3 -> 2 channels x 1x1 center pixel.
+        let t = Tensor::from_data(2, 3, 3, (0..18).collect());
+        let f = adapt(&t, 2, 1, 1);
+        assert_eq!(f.data, vec![t.get(0, 1, 1), t.get(1, 1, 1)]);
+        // Spatial center-crop: 1x4x4 -> 1x2x2 middle window.
+        let t = Tensor::from_data(1, 4, 4, (0..16).collect());
+        let f = adapt(&t, 1, 2, 2);
+        assert_eq!(f.data, vec![5, 6, 9, 10]);
+        // Channel pad: extra channels are zero.
+        let t = Tensor::from_data(1, 2, 2, vec![1, 2, 3, 4]);
+        let f = adapt(&t, 3, 2, 2);
+        assert_eq!(&f.data[0..4], &[1, 2, 3, 4]);
+        assert!(f.data[4..].iter().all(|&v| v == 0));
+        // Spatial zero-pad: 1x1x1 -> 1x3x3 centered.
+        let t = Tensor::from_data(1, 1, 1, vec![9]);
+        let f = adapt(&t, 1, 3, 3);
+        assert_eq!(f.get(0, 1, 1), 9);
+        assert_eq!(f.data.iter().filter(|&&v| v != 0).count(), 1);
+    }
+
+    #[test]
+    fn toy_netexec_matches_reference_both_dataflows() {
+        let net = toy();
+        let qnet = QuantNetwork::random(&net, Precision::Int4, 0x70f1);
+        let input = qnet.random_input(0xf00d, true);
+        let want = reference_forward(&qnet, &input, true, true);
+        for dataflow in Dataflow::ALL {
+            let cfg = NetExecConfig {
+                dataflow,
+                fidelity: ExecFidelity::Fast,
+                ..NetExecConfig::default()
+            };
+            let mut engine = NetExec::new(qnet.clone(), cfg).expect("toy fits");
+            let report = engine.infer(&input).expect("forward pass");
+            assert_eq!(report.output, want, "{}", dataflow.name());
+            report.reconcile().expect("reconciliation identities");
+            assert_eq!(report.functional_macs(), net.total_macs());
+            // Repeat inference on the same (warm) engine: identical.
+            let again = engine.infer(&input).expect("second pass");
+            assert_eq!(again.output, want);
+            assert_eq!(again.total, report.total, "warm re-run must not drift");
+        }
+    }
+
+    #[test]
+    fn analytical_identity_holds_for_real_networks() {
+        // The documented reconciliation bound, pure closed-form: for
+        // every shard count, 0 <= tiling - persistent <= first_touch.
+        use crate::dla::models::{alexnet, resnet34};
+        for net in [toy(), alexnet(), resnet34()] {
+            for variant in Variant::ALL {
+                for p in Precision::ALL {
+                    let acfg = analytical_config(variant, p);
+                    let touch = first_touch_cycles(&net, &acfg);
+                    for shards in [1usize, 2, 3, 7] {
+                        let t = network_cycles_sharded(&net, &acfg, Dataflow::Tiling, shards);
+                        let pe =
+                            network_cycles_sharded(&net, &acfg, Dataflow::Persistent, shards);
+                        assert!(pe <= t, "{} {p} shards={shards}", net.name);
+                        assert!(
+                            t - pe <= touch,
+                            "{} {} {p} shards={shards}: {t} - {pe} > {touch}",
+                            net.name,
+                            variant.name()
+                        );
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn persistent_auto_sizing_fits_and_is_minimal_shape() {
+        let net = toy();
+        let qnet = QuantNetwork::random(&net, Precision::Int4, 1);
+        // Toy fits one block: conv1 18 + conv2 36 + fc 2x24 = 102 words.
+        assert_eq!(persistent_blocks_per_shard(&qnet.geoms, qnet.precision, 1), 1);
+        for shards in [1usize, 2, 3] {
+            let cfg = NetExecConfig {
+                dataflow: Dataflow::Persistent,
+                shards,
+                fidelity: ExecFidelity::Fast,
+                ..NetExecConfig::default()
+            };
+            let engine = NetExec::new(qnet.clone(), cfg).expect("auto-sized pin fits");
+            assert!(engine.pinned_words > 0);
+        }
+    }
+
+    #[test]
+    fn network_by_name_resolves() {
+        assert_eq!(network_by_name("toy").unwrap().layers.len(), 3);
+        assert_eq!(network_by_name("alexnet").unwrap().layers.len(), 8);
+        assert_eq!(network_by_name("resnet34").unwrap().layers.len(), 37);
+        assert!(network_by_name("bogus").is_none());
+    }
+}

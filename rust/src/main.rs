@@ -13,6 +13,9 @@ use bramac::bramac::{ExecFidelity, Variant};
 use bramac::coordinator::batcher::submit_and_wait;
 use bramac::coordinator::server::{InferenceServer, IMAGE_ELEMS};
 use bramac::coordinator::{BlockPool, Policy, ShardedPool};
+use bramac::dla::netexec::{
+    network_by_name, reference_forward, NetExec, NetExecConfig, QuantNetwork,
+};
 use bramac::dla::Dataflow;
 use bramac::gemv::{fig11_sweep, ComputeStyle};
 use bramac::quant::{random_vector, IntMatrix};
@@ -57,6 +60,21 @@ drivers:
                   steps the eFSM micro-ops (the validation oracle,
                   default here), fast evaluates whole words with SWAR
                   arithmetic — bit-identical results, cycles, and stats
+  infer [--model toy|alexnet|resnet34] [--precision 2|4|8]
+        [--variant 2sa|1da] [--dataflow tiling|persistent]
+        [--shards S] [--blocks K] [--threads T]
+        [--fidelity bit-accurate|fast] [--seed X]
+        [--unsigned] [--no-relu] [--no-verify]
+                  run a whole network FUNCTIONALLY: every layer is
+                  lowered via im2col to GEMV/batch-2 dispatches on the
+                  simulated BRAMAC pools (real quantized activations,
+                  per-layer requant+ReLU), printing per-layer
+                  ScheduleStats next to the analytical dla::cycle model
+                  and checking the documented reconciliation identities.
+                  persistent pins ALL layers on-chip once (auto-grows
+                  blocks to fit when --blocks is omitted); the output
+                  is verified bit-identical to a pure-host i64
+                  reference unless --no-verify
   serve [--requests R] [--window-ms W] [--workers N]
         [--dataflow tiling|persistent] [--shards S] [--replicas G]
         [--policy round-robin|least-outstanding]
@@ -72,7 +90,7 @@ drivers:
                   fast for serving) records the execution engine;
                   replies and attribution are identical either way
   check           verify artifacts + PJRT runtime are functional
-  bench-check --current F [--baseline BENCH_pr4.json] [--tolerance 0.2]
+  bench-check --current F [--baseline BENCH_pr5.json] [--tolerance 0.2]
               [--absolute] [--fidelity bit-accurate|fast]
                   compare a bench-trajectory JSON (written by cargo
                   bench with BENCH_JSON=F) against the committed
@@ -139,6 +157,7 @@ fn run(args: &[String]) -> Result<()> {
             }
         }
         "gemv" => cmd_gemv(&args[1..])?,
+        "infer" => cmd_infer(&args[1..])?,
         "serve" => cmd_serve(&args[1..])?,
         "check" => cmd_check()?,
         "bench-check" => cmd_bench_check(&args[1..])?,
@@ -365,6 +384,89 @@ fn gemv_sharded(
     Ok(())
 }
 
+/// `infer`: functional whole-network inference on the BRAMAC serving
+/// stack (see `dla::netexec`), with the functional-vs-analytical cycle
+/// reconciliation report.
+fn cmd_infer(args: &[String]) -> Result<()> {
+    let model: String = flag(args, "--model", "toy".to_string())?;
+    let bits: u32 = flag(args, "--precision", 4)?;
+    let variant_s: String = flag(args, "--variant", "2sa".to_string())?;
+    let dataflow: Dataflow = flag(args, "--dataflow", Dataflow::Tiling)?;
+    let shards: usize = flag::<usize>(args, "--shards", 1)?.max(1);
+    let blocks: usize = flag(args, "--blocks", 0)?;
+    let threads_flag: usize = flag(args, "--threads", 0)?;
+    let fidelity: ExecFidelity = flag(args, "--fidelity", ExecFidelity::Fast)?;
+    let seed: u64 = flag(args, "--seed", 0xb4a3ac)?;
+    let unsigned = args.iter().any(|a| a == "--unsigned");
+    let no_relu = args.iter().any(|a| a == "--no-relu");
+    let no_verify = args.iter().any(|a| a == "--no-verify");
+    let p = Precision::from_bits(bits)
+        .ok_or_else(|| anyhow::anyhow!("--precision must be 2, 4 or 8"))?;
+    let variant = match variant_s.as_str() {
+        "2sa" => Variant::TwoSA,
+        "1da" => Variant::OneDA,
+        v => bail!("--variant must be 2sa or 1da, got {v}"),
+    };
+    let net = network_by_name(&model)
+        .ok_or_else(|| anyhow::anyhow!("unknown model '{model}' (toy|alexnet|resnet34)"))?;
+    let threads = if threads_flag == 0 {
+        bramac::coordinator::workers::auto_threads()
+    } else {
+        threads_flag
+    };
+    let cfg = NetExecConfig {
+        variant,
+        dataflow,
+        shards,
+        blocks_per_shard: blocks,
+        threads,
+        fidelity,
+        signed_inputs: !unsigned,
+        relu: !no_relu,
+    };
+    let qnet = QuantNetwork::random(&net, p, seed);
+    let input = qnet.random_input(seed ^ 0x1472, cfg.signed_inputs);
+    let t0 = std::time::Instant::now();
+    let mut engine = NetExec::new(qnet, cfg)?;
+    let built = t0.elapsed();
+    let t1 = std::time::Instant::now();
+    let report = engine.infer(&input)?;
+    let ran = t1.elapsed();
+    print!("{}", report.render());
+    report.reconcile()?;
+    println!(
+        "reconciled: per-layer MACs == geometry ({} total), dataflow copy identity holds, \
+         analytical 0 <= tiling - persistent <= first-touch",
+        report.functional_macs()
+    );
+    println!(
+        "analytical dla::cycle reference at {} shard(s): tiling {} / persistent {} \
+         cycles (first-touch {})",
+        shards,
+        report.analytical_tiling,
+        report.analytical_persistent,
+        report.analytical_first_touch
+    );
+    if !no_verify {
+        let want = reference_forward(engine.qnet(), &input, cfg.signed_inputs, cfg.relu);
+        anyhow::ensure!(
+            report.output == want,
+            "functional output diverged from the pure-host i64 reference"
+        );
+        println!(
+            "verified: output bit-identical to the pure-host i64 reference ({} values)",
+            want.len()
+        );
+    }
+    println!(
+        "host time: build/pin {:.1} ms ({} blocks/shard), forward {:.1} ms",
+        built.as_secs_f64() * 1e3,
+        engine.blocks_per_shard,
+        ran.as_secs_f64() * 1e3
+    );
+    Ok(())
+}
+
 fn cmd_serve(args: &[String]) -> Result<()> {
     let requests: usize = flag(args, "--requests", 64)?;
     let window_ms: u64 = flag(args, "--window-ms", 10)?;
@@ -494,7 +596,7 @@ fn cmd_serve(args: &[String]) -> Result<()> {
 /// `bench-check`: the CI perf-regression gate over `BENCH_*.json`
 /// trajectories (written by `cargo bench` with `BENCH_JSON=<file>`).
 fn cmd_bench_check(args: &[String]) -> Result<()> {
-    let baseline_path: String = flag(args, "--baseline", "BENCH_pr4.json".to_string())?;
+    let baseline_path: String = flag(args, "--baseline", "BENCH_pr5.json".to_string())?;
     let current_path: String = flag(args, "--current", String::new())?;
     anyhow::ensure!(!current_path.is_empty(), "--current <file> is required");
     let tolerance: f64 = flag(args, "--tolerance", 0.2)?;

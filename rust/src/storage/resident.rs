@@ -24,7 +24,6 @@ use anyhow::{ensure, Result};
 use crate::arch::Precision;
 use crate::bramac::block::MAIN_WORDS;
 use crate::bramac::Variant;
-use crate::coordinator::plan_cache::split_round_robin;
 use crate::coordinator::scheduler::pack_tile_word;
 use crate::coordinator::tiler::{plan_gemv, Tile};
 use crate::coordinator::BlockPool;
@@ -72,16 +71,45 @@ impl ResidentModel {
     /// touch). Fails without touching block state when the weights are
     /// out of range or the layout exceeds any block's capacity.
     pub fn pin(pool: &mut BlockPool, w: &IntMatrix) -> Result<ResidentModel> {
+        let mut cursors = vec![0usize; pool.len()];
+        ResidentModel::pin_at(pool, w, &mut cursors, 0)
+    }
+
+    /// [`ResidentModel::pin`] for multi-model arenas: place this
+    /// layout's tiles starting at each block's `cursors[b]` next-free
+    /// word (advanced past the new tiles on success; untouched on
+    /// error), assigning tile `i` to block `(i + start_block) % blocks`.
+    /// The rotating start keeps consecutive layers of a whole-network
+    /// pin ([`crate::coordinator::ShardedPool::pin_with`]) from all
+    /// stacking their first tile on block 0 — with a plain round-robin
+    /// every layer's tile 0 lands on the same block and the cumulative
+    /// layout overflows no matter how many blocks exist.
+    ///
+    /// Note for multi-pin sequences: each later pin bumps the pool's
+    /// application-write counters, which stales the *earlier* layouts'
+    /// clobber marks — call [`ResidentModel::refresh_write_marks`] (via
+    /// `ShardedPool::refresh_marks`) on every layout once the last pin
+    /// landed.
+    pub fn pin_at(
+        pool: &mut BlockPool,
+        w: &IntMatrix,
+        cursors: &mut [usize],
+        start_block: usize,
+    ) -> Result<ResidentModel> {
         w.validate()?;
+        let nblocks = pool.len();
+        assert_eq!(cursors.len(), nblocks, "one placement cursor per block");
         // Full buffers: nothing streams during persistent compute, so
         // the double-buffer halving does not apply.
         let plan = plan_gemv(w.rows, w.cols, w.precision, false);
-        let nblocks = pool.len();
-        let tiles_by_block = split_round_robin(&plan.tiles, nblocks);
+        let mut tiles_by_block: Vec<Vec<Tile>> = vec![Vec::new(); nblocks];
+        for (i, &tile) in plan.tiles.iter().enumerate() {
+            tiles_by_block[(i + start_block) % nblocks].push(tile);
+        }
         let mut by_block = Vec::with_capacity(nblocks);
         for (b, tiles) in tiles_by_block.iter().enumerate() {
             let mut placed = Vec::with_capacity(tiles.len());
-            let mut base = 0usize;
+            let mut base = cursors[b];
             for &tile in tiles {
                 ensure!(
                     base + tile.words() <= MAIN_WORDS,
@@ -96,6 +124,12 @@ impl ResidentModel {
                 base += tile.words();
             }
             by_block.push(placed);
+        }
+        // Capacity holds for every block: advance the cursors.
+        for (b, placed) in by_block.iter().enumerate() {
+            if let Some(last) = placed.last() {
+                cursors[b] = last.base as usize + last.tile.words();
+            }
         }
         let mut pinned_words = 0u64;
         for (b, placed) in by_block.iter().enumerate() {
@@ -145,6 +179,38 @@ impl ResidentModel {
         let mut rm = ResidentModel::pin(pool, &w.row_slice(row0, rows))?;
         rm.row_offset = row0;
         Ok(rm)
+    }
+
+    /// [`ResidentModel::pin_rows`] at a multi-model placement cursor
+    /// (see [`ResidentModel::pin_at`]).
+    pub fn pin_rows_at(
+        pool: &mut BlockPool,
+        w: &IntMatrix,
+        row0: usize,
+        rows: usize,
+        cursors: &mut [usize],
+        start_block: usize,
+    ) -> Result<ResidentModel> {
+        ensure!(
+            rows > 0 && row0 + rows <= w.rows,
+            "row shard {row0}..{} outside the {}-row matrix",
+            row0 + rows,
+            w.rows
+        );
+        let mut rm =
+            ResidentModel::pin_at(pool, &w.row_slice(row0, rows), cursors, start_block)?;
+        rm.row_offset = row0;
+        Ok(rm)
+    }
+
+    /// Re-snapshot the per-block application-write counters. Required
+    /// after a multi-model pin sequence: pinning layer `i+1` writes
+    /// words, which moves the counters layer `i`'s marks were taken at —
+    /// without a refresh the staleness debug assert would fire on a
+    /// perfectly valid resident run.
+    pub(crate) fn refresh_write_marks(&mut self, pool: &BlockPool) {
+        self.write_marks =
+            (0..self.blocks).map(|b| pool.block(b).stats().app_write_words).collect();
     }
 
     /// Debug-build staleness check used by the resident run paths: a

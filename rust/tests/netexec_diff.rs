@@ -1,0 +1,257 @@
+//! Differential property suite for `dla::netexec`: the functional
+//! network engine must be **bit-identical** to a pure-host i64 conv/FC
+//! reference — outputs *and* (across fidelities) every stat counter —
+//! over random small networks × {2,4,8}-bit × signed/unsigned ×
+//! {2SA,1DA} × {tiling,persistent} × shards {1,3} ×
+//! {bit-accurate,fast}. Also home to the im2col-lowering property and
+//! the functional-MAC reconciliation checks.
+
+use bramac::arch::Precision;
+use bramac::bramac::{ExecFidelity, Variant};
+use bramac::coordinator::BlockPool;
+use bramac::dla::netexec::{
+    conv_ref, im2col_column, input_shape_for, reference_forward, NetExec, NetExecConfig,
+    QuantNetwork, Tensor,
+};
+use bramac::dla::{ConvLayer, Dataflow, Network};
+use bramac::quant::{random_vector, IntMatrix};
+use bramac::util::Rng;
+
+const SHARD_COUNTS: [usize; 2] = [1, 3];
+
+/// A random 3-layer conv→conv→fc network whose shapes chain exactly
+/// under stride-1 valid convolution (conv2 consumes conv1's output,
+/// the fc flattens conv2's volume) — so the engine and the reference
+/// exercise the identity and flatten adapters on every run.
+fn random_chained_net(rng: &mut Rng) -> Network {
+    let c0 = rng.gen_range_usize(1, 3);
+    let k1 = rng.gen_range_usize(1, 5);
+    let r1 = rng.gen_range_usize(1, 3);
+    let s1 = rng.gen_range_usize(1, 3);
+    let p1 = rng.gen_range_usize(1, 4);
+    let q1 = rng.gen_range_usize(1, 4);
+    let r2 = rng.gen_range_usize(1, p1);
+    let s2 = rng.gen_range_usize(1, q1);
+    let (p2, q2) = (p1 - r2 + 1, q1 - s2 + 1);
+    let k2 = rng.gen_range_usize(1, 5);
+    let fc_out = rng.gen_range_usize(1, 6);
+    Network {
+        name: "rand-chained",
+        layers: vec![
+            ConvLayer::new("c1", k1, c0, r1, s1, p1, q1),
+            ConvLayer::new("c2", k2, k1, r2, s2, p2, q2),
+            ConvLayer::fc("fc", fc_out, k2 * p2 * q2),
+        ],
+    }
+}
+
+#[test]
+fn netexec_bit_identical_to_host_reference_across_matrix() {
+    let mut rng = Rng::seed_from_u64(0x4e7d_1ff0);
+    for variant in Variant::ALL {
+        for p in Precision::ALL {
+            for signed in [true, false] {
+                let net = random_chained_net(&mut rng);
+                let qnet = QuantNetwork::random(&net, p, rng.next_u64());
+                let input = qnet.random_input(rng.next_u64(), signed);
+                let want = reference_forward(&qnet, &input, signed, true);
+                for dataflow in Dataflow::ALL {
+                    for shards in SHARD_COUNTS {
+                        let ctx = format!(
+                            "{} {p} signed={signed} {} shards={shards}",
+                            variant.name(),
+                            dataflow.name()
+                        );
+                        let mut reports = Vec::new();
+                        for fidelity in [ExecFidelity::BitAccurate, ExecFidelity::Fast] {
+                            let cfg = NetExecConfig {
+                                variant,
+                                dataflow,
+                                shards,
+                                fidelity,
+                                signed_inputs: signed,
+                                relu: true,
+                                ..NetExecConfig::default()
+                            };
+                            let mut engine =
+                                NetExec::new(qnet.clone(), cfg).expect("small net fits");
+                            let report = engine.infer(&input).expect("forward pass");
+                            assert_eq!(
+                                report.output,
+                                want,
+                                "{ctx} {}: engine vs host reference",
+                                fidelity.name()
+                            );
+                            report
+                                .reconcile()
+                                .unwrap_or_else(|e| panic!("{ctx}: {e:#}"));
+                            reports.push(report);
+                        }
+                        // The fast engine must replay the oracle's
+                        // accounting exactly, layer by layer.
+                        let (oracle, fast) = (&reports[0], &reports[1]);
+                        assert_eq!(oracle.total, fast.total, "{ctx}: total stats");
+                        for (a, b) in oracle.layers.iter().zip(&fast.layers) {
+                            assert_eq!(a.stats, b.stats, "{ctx}: layer {} stats", a.name);
+                            assert_eq!(
+                                a.requant_shift, b.requant_shift,
+                                "{ctx}: layer {} shift",
+                                a.name
+                            );
+                        }
+                    }
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn netexec_handles_non_chaining_shapes_via_adapters() {
+    // Channel truncate/pad and spatial crop/pad between layers (the
+    // pooling/striding stand-ins real geometries need): the engine and
+    // reference share the documented adapter, and the run must still
+    // satisfy every reconciliation identity.
+    let net = Network {
+        name: "rand-adapted",
+        layers: vec![
+            ConvLayer::new("c1", 5, 2, 3, 3, 6, 6),
+            // Wants 4 input channels (5 produced) over a 4x4 input
+            // volume (6x6 produced): channel-truncate + center-crop.
+            ConvLayer::new("c2", 3, 4, 2, 2, 3, 3),
+            // Wants 8 channels (3 produced): channel zero-pad.
+            ConvLayer::new("c3", 4, 8, 2, 2, 2, 2),
+            // FC flatten with center-crop: 4*1*1 features from 4x2x2.
+            ConvLayer::fc("fc", 6, 4),
+        ],
+    };
+    let p = Precision::Int4;
+    let qnet = QuantNetwork::random(&net, p, 0xadab);
+    let input = qnet.random_input(0xadac, true);
+    let want = reference_forward(&qnet, &input, true, true);
+    for dataflow in Dataflow::ALL {
+        for relu in [true, false] {
+            let want = if relu {
+                want.clone()
+            } else {
+                reference_forward(&qnet, &input, true, false)
+            };
+            let cfg = NetExecConfig {
+                dataflow,
+                fidelity: ExecFidelity::Fast,
+                relu,
+                ..NetExecConfig::default()
+            };
+            let mut engine = NetExec::new(qnet.clone(), cfg).expect("fits");
+            let report = engine.infer(&input).expect("forward");
+            assert_eq!(report.output, want, "{} relu={relu}", dataflow.name());
+            report.reconcile().expect("identities");
+        }
+    }
+}
+
+#[test]
+fn functional_mac_counts_match_convlayer_macs_exactly() {
+    // The cycle-reconciliation satellite: netexec's functionally
+    // executed MAC count must equal `ConvLayer::macs()` for every
+    // layer — catching silent im2col over/under-tiling. Shapes include
+    // odd P*Q (the 2SA batch-2 odd tail), k spanning multiple lane
+    // groups, and 1x1 kernels.
+    let p = Precision::Int4;
+    for variant in Variant::ALL {
+        for (k, c, r, s, pp, q) in [
+            (3usize, 2usize, 2usize, 2usize, 3usize, 3usize), // odd P*Q
+            (5, 1, 1, 1, 2, 2),
+            (11, 3, 3, 3, 1, 1), // k > one lane group, single pixel
+            (4, 2, 3, 3, 5, 2),
+        ] {
+            let net = Network {
+                name: "mac-check",
+                layers: vec![ConvLayer::new("l", k, c, r, s, pp, q)],
+            };
+            let qnet = QuantNetwork::random(&net, p, 0x3ac5);
+            let input = qnet.random_input(0x3ac6, true);
+            for dataflow in Dataflow::ALL {
+                let cfg = NetExecConfig {
+                    variant,
+                    dataflow,
+                    fidelity: ExecFidelity::Fast,
+                    ..NetExecConfig::default()
+                };
+                let mut engine = NetExec::new(qnet.clone(), cfg).expect("fits");
+                let report = engine.infer(&input).expect("forward");
+                let ctx = format!(
+                    "{} {} k={k} c={c} r={r} s={s} p={pp} q={q}",
+                    variant.name(),
+                    dataflow.name()
+                );
+                assert_eq!(
+                    report.layers[0].macs,
+                    net.layers[0].macs(),
+                    "{ctx}: functional MACs vs geometry"
+                );
+                assert_eq!(report.functional_macs(), net.total_macs(), "{ctx}");
+                report.reconcile().unwrap_or_else(|e| panic!("{ctx}: {e:#}"));
+            }
+        }
+    }
+}
+
+#[test]
+fn im2col_lowering_through_pool_matches_direct_convolution() {
+    // The im2col property with the actual simulator in the loop: each
+    // column dispatched as a GEMV on a BlockPool reproduces the direct
+    // nested-loop convolution bit for bit.
+    let mut rng = Rng::seed_from_u64(0x9001);
+    for p in Precision::ALL {
+        let g = ConvLayer::new("t", 5, 3, 3, 2, 4, 3);
+        let (ic, ih, iw) = input_shape_for(&g);
+        let a = Tensor::from_data(ic, ih, iw, random_vector(&mut rng, ic * ih * iw, p, true));
+        let w = IntMatrix::random(&mut rng, g.k, g.c * g.r * g.s, p);
+        let direct = conv_ref(&a, &g, &w);
+        let mut pool = BlockPool::new(Variant::OneDA, 2, p);
+        let pq = g.p * g.q;
+        let mut lowered = vec![0i64; g.k * pq];
+        for pix in 0..pq {
+            let col = im2col_column(&a, &g, pix / g.q, pix % g.q);
+            let (y, _) = pool.run_gemv(&w, &col);
+            for (kk, v) in y.into_iter().enumerate() {
+                lowered[kk * pq + pix] = v;
+            }
+        }
+        assert_eq!(lowered, direct, "{p}");
+    }
+}
+
+#[test]
+fn persistent_network_rerun_is_warm_and_identical() {
+    // Serving steady state: repeated whole-network inferences against
+    // the once-pinned arena — zero copy every time, identical stats.
+    let mut rng = Rng::seed_from_u64(0x9a59);
+    let net = random_chained_net(&mut rng);
+    let qnet = QuantNetwork::random(&net, Precision::Int4, 0xcafe);
+    let cfg = NetExecConfig {
+        dataflow: Dataflow::Persistent,
+        shards: 3,
+        fidelity: ExecFidelity::Fast,
+        ..NetExecConfig::default()
+    };
+    let mut engine = NetExec::new(qnet.clone(), cfg).expect("fits");
+    let pinned = engine.pinned_words;
+    assert!(pinned > 0);
+    let mut first_total = None;
+    for turn in 0..3 {
+        let input = qnet.random_input(500 + turn, true);
+        let want = reference_forward(&qnet, &input, true, true);
+        let report = engine.infer(&input).expect("forward");
+        assert_eq!(report.output, want, "turn {turn}");
+        assert_eq!(report.total.weight_copy_cycles, 0, "turn {turn}: no re-copy");
+        assert_eq!(report.pinned_words, pinned, "pin is one-time");
+        // Same input shapes every turn: stats must not drift.
+        if let Some(t) = first_total {
+            assert_eq!(report.total, t, "turn {turn}: stats drift");
+        } else {
+            first_total = Some(report.total);
+        }
+    }
+}

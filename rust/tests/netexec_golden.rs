@@ -1,0 +1,213 @@
+//! Golden regression suite for `dla::netexec`: a fixed seeded 3-layer
+//! toy CNN (conv→conv→fc) with checked-in activations and per-layer
+//! `ScheduleStats`/cycle counts (`tests/data/netexec_golden.json`).
+//! Any regression in the im2col lowering, the requantization contract,
+//! or the cycle accounting fails **byte-for-byte** here — on both
+//! execution fidelities.
+//!
+//! Regenerate after an intentional contract change with
+//! `BRAMAC_BLESS=1 cargo test --test netexec_golden` and commit the
+//! rewritten JSON (the bootstrap generator
+//! `python/tools/netexec_golden.py` mirrors the same contract).
+
+use std::path::PathBuf;
+
+use bramac::arch::Precision;
+use bramac::bramac::{ExecFidelity, Variant};
+use bramac::coordinator::ScheduleStats;
+use bramac::dla::netexec::{NetExec, NetExecConfig, NetExecReport, QuantNetwork, Tensor};
+use bramac::dla::{toy, Dataflow};
+use bramac::util::json::{self, Json};
+
+fn golden_path() -> PathBuf {
+    PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("tests/data/netexec_golden.json")
+}
+
+fn gu64(j: &Json, key: &str) -> u64 {
+    j.get(key)
+        .and_then(Json::as_f64)
+        .unwrap_or_else(|| panic!("golden field '{key}' missing")) as u64
+}
+
+fn check_stats(s: &ScheduleStats, j: &Json, ctx: &str) {
+    assert_eq!(s.tiles as u64, gu64(j, "tiles"), "{ctx}: tiles");
+    assert_eq!(s.mac2s, gu64(j, "mac2s"), "{ctx}: mac2s");
+    assert_eq!(s.makespan_cycles, gu64(j, "makespan"), "{ctx}: makespan");
+    assert_eq!(s.total_block_cycles, gu64(j, "total_block"), "{ctx}: total_block");
+    assert_eq!(s.exposed_load_cycles, gu64(j, "exposed"), "{ctx}: exposed");
+    assert_eq!(s.weight_copy_cycles, gu64(j, "copy"), "{ctx}: copy");
+}
+
+#[allow(clippy::too_many_arguments)]
+fn run(
+    qnet: &QuantNetwork,
+    input: &Tensor,
+    dataflow: Dataflow,
+    shards: usize,
+    blocks: usize,
+    fidelity: ExecFidelity,
+    signed: bool,
+    relu: bool,
+) -> NetExecReport {
+    let cfg = NetExecConfig {
+        variant: Variant::TwoSA,
+        dataflow,
+        shards,
+        blocks_per_shard: blocks,
+        threads: 1,
+        fidelity,
+        signed_inputs: signed,
+        relu,
+    };
+    let mut engine = NetExec::new(qnet.clone(), cfg).expect("toy fits");
+    let report = engine.infer(input).expect("forward pass");
+    report.reconcile().expect("reconciliation identities");
+    report
+}
+
+fn stats_json(s: &ScheduleStats) -> Vec<(&'static str, Json)> {
+    vec![
+        ("tiles", Json::Num(s.tiles as f64)),
+        ("mac2s", Json::Num(s.mac2s as f64)),
+        ("makespan", Json::Num(s.makespan_cycles as f64)),
+        ("total_block", Json::Num(s.total_block_cycles as f64)),
+        ("exposed", Json::Num(s.exposed_load_cycles as f64)),
+        ("copy", Json::Num(s.weight_copy_cycles as f64)),
+    ]
+}
+
+/// `BRAMAC_BLESS=1` path: rewrite the golden file from the current
+/// engine (fast == bit-accurate is asserted first, so a blessed file
+/// is always fidelity-consistent).
+fn bless(qnet: &QuantNetwork, input: &Tensor, signed: bool, relu: bool, seeds: (u64, u64)) {
+    let mut configs = Vec::new();
+    for (dataflow, shards, blocks) in [
+        (Dataflow::Tiling, 1usize, 1usize),
+        (Dataflow::Persistent, 1, 1),
+        (Dataflow::Persistent, 2, 1),
+    ] {
+        let oracle = run(
+            qnet,
+            input,
+            dataflow,
+            shards,
+            blocks,
+            ExecFidelity::BitAccurate,
+            signed,
+            relu,
+        );
+        let fast =
+            run(qnet, input, dataflow, shards, blocks, ExecFidelity::Fast, signed, relu);
+        assert_eq!(oracle.output, fast.output, "bless: fidelities agree");
+        assert_eq!(oracle.total, fast.total, "bless: fidelity stats agree");
+        let layers: Vec<Json> = oracle
+            .layers
+            .iter()
+            .map(|l| {
+                let mut pairs = vec![
+                    ("name", Json::Str(l.name.clone())),
+                    ("macs", Json::Num(l.macs as f64)),
+                    ("dispatches", Json::Num(l.dispatches as f64)),
+                    ("shift", Json::Num(l.requant_shift as f64)),
+                    ("analytical", Json::Num(l.analytical_cycles as f64)),
+                ];
+                pairs.extend(stats_json(&l.stats));
+                Json::obj(pairs)
+            })
+            .collect();
+        let mut pairs = vec![
+            ("dataflow", Json::Str(dataflow.name().into())),
+            ("shards", Json::Num(shards as f64)),
+            ("blocks", Json::Num(blocks as f64)),
+            ("pinned_words", Json::Num(oracle.pinned_words as f64)),
+            (
+                "output",
+                Json::Arr(oracle.output.iter().map(|&v| Json::Num(v as f64)).collect()),
+            ),
+            ("layers", Json::Arr(layers)),
+        ];
+        pairs.push(("total", Json::obj(stats_json(&oracle.total))));
+        configs.push(Json::obj(pairs));
+    }
+    let doc = Json::obj(vec![
+        ("model", Json::Str("toy".into())),
+        ("precision", Json::Num(qnet.precision.bits() as f64)),
+        ("variant", Json::Str("2sa".into())),
+        ("signed", Json::Bool(signed)),
+        ("relu", Json::Bool(relu)),
+        ("weight_seed", Json::Num(seeds.0 as f64)),
+        ("input_seed", Json::Num(seeds.1 as f64)),
+        ("configs", Json::Arr(configs)),
+    ]);
+    std::fs::write(golden_path(), doc.render() + "\n").expect("write golden");
+    eprintln!("blessed {} — commit it", golden_path().display());
+}
+
+#[test]
+fn toy_golden_byte_for_byte_on_both_fidelities() {
+    let text = std::fs::read_to_string(golden_path()).expect("golden file checked in");
+    let doc = json::parse(&text).expect("golden parses");
+    let bits = gu64(&doc, "precision") as u32;
+    let p = Precision::from_bits(bits).expect("golden precision");
+    assert_eq!(doc.get("variant").and_then(Json::as_str), Some("2sa"));
+    let signed = doc.get("signed").and_then(Json::as_bool).expect("signed");
+    let relu = doc.get("relu").and_then(Json::as_bool).expect("relu");
+    let wseed = gu64(&doc, "weight_seed");
+    let iseed = gu64(&doc, "input_seed");
+    let qnet = QuantNetwork::random(&toy(), p, wseed);
+    let input = qnet.random_input(iseed, signed);
+
+    if std::env::var("BRAMAC_BLESS").is_ok() {
+        bless(&qnet, &input, signed, relu, (wseed, iseed));
+        return;
+    }
+
+    let configs = doc.get("configs").and_then(Json::as_arr).expect("configs");
+    assert!(!configs.is_empty());
+    for cfg in configs {
+        let dataflow: Dataflow = cfg
+            .get("dataflow")
+            .and_then(Json::as_str)
+            .expect("dataflow")
+            .parse()
+            .expect("dataflow parses");
+        let shards = gu64(cfg, "shards") as usize;
+        let blocks = gu64(cfg, "blocks") as usize;
+        for fidelity in [ExecFidelity::BitAccurate, ExecFidelity::Fast] {
+            let report =
+                run(&qnet, &input, dataflow, shards, blocks, fidelity, signed, relu);
+            let ctx = format!("{} shards={shards} {}", dataflow.name(), fidelity.name());
+
+            let want: Vec<i64> = cfg
+                .get("output")
+                .and_then(Json::as_arr)
+                .expect("output")
+                .iter()
+                .map(|v| v.as_f64().expect("output elem") as i64)
+                .collect();
+            assert_eq!(report.output, want, "{ctx}: final activations");
+            assert_eq!(report.pinned_words, gu64(cfg, "pinned_words"), "{ctx}: pin");
+            check_stats(&report.total, cfg.get("total").expect("total"), &ctx);
+
+            let layers = cfg.get("layers").and_then(Json::as_arr).expect("layers");
+            assert_eq!(report.layers.len(), layers.len(), "{ctx}: layer count");
+            for (l, gl) in report.layers.iter().zip(layers) {
+                let lctx = format!("{ctx}: layer {}", l.name);
+                assert_eq!(
+                    Some(l.name.as_str()),
+                    gl.get("name").and_then(Json::as_str),
+                    "{lctx}: name"
+                );
+                assert_eq!(l.macs, gu64(gl, "macs"), "{lctx}: functional MACs");
+                assert_eq!(l.dispatches as u64, gu64(gl, "dispatches"), "{lctx}: dispatches");
+                assert_eq!(l.requant_shift as u64, gu64(gl, "shift"), "{lctx}: shift");
+                assert_eq!(
+                    l.analytical_cycles,
+                    gu64(gl, "analytical"),
+                    "{lctx}: analytical cycles"
+                );
+                check_stats(&l.stats, gl, &lctx);
+            }
+        }
+    }
+}
