@@ -1,0 +1,761 @@
+#!/usr/bin/env python3
+"""Measured bench baseline via the Python functional port.
+
+Produces a `bramac-bench-v1` trajectory (BENCH_pr6.json) from an
+**actual timed run** of a functional Python port of the Rust hot paths:
+
+* the eFSM engine (table-driven micro-op schedule over a dummy-array
+  row file, SWAR lane adds on 160-bit words — port of `bramac::efsm` +
+  `bramac::simd_adder`);
+* the SWAR fast path (straight-line shift-add on packed words — port of
+  `bramac::fastpath`);
+* the tiled MVM pool (lane-aligned row shards, row-group tiles, depth
+  chunks, batch-outer engine groups with phantom pairs — port of
+  `coordinator::scheduler`/`shard` dispatch structure);
+* the netexec forward pass (im2col and streaming lowerings, batch-N
+  chunking, requantization — port of `dla::netexec` on the toy CNN).
+
+Every timed configuration is first verified bit-for-bit against an
+independent reference (scalar MAC2 golden, direct matmul, direct
+convolution pipeline), mirroring the assert-before-timing discipline of
+the Rust benches. Op names and fidelity tags match the Rust bench
+suites exactly so `bramac-sim bench-check` pairs entries.
+
+Provenance caveats (recorded in the emitted `note`):
+
+* wall times are Python-interpreter times of the functional port, not
+  Rust times — absolute magnitudes are meaningless; the CI gate only
+  consumes suite-geomean-normalized ratios;
+* the port is single-threaded (GIL): `threads=N`/shard-scaling entries
+  measure the same total work without parallel speedup, so the first
+  trusted CI artifact should replace this file if the armed gate trips
+  on uniform parallelism skew.
+
+Usage: BENCH_QUICK=1 python3 python/tools/bench_port.py [OUT.json]
+"""
+from __future__ import annotations
+
+import json
+import os
+import sys
+import time
+
+sys.path.insert(0, os.path.dirname(os.path.abspath(__file__)))
+from netexec_golden import (  # noqa: E402
+    MAIN_WORDS,
+    MASK,
+    Rng,
+    TOY,
+    conv_direct,
+    lanes_per_word,
+    layer_weights,
+    max_dot_len,
+    random_input,
+    requantize,
+    shard_rows,
+    srange,
+)
+
+# --- SWAR lane primitives (port of bramac::simd_adder) ------------------
+EXT = {2: 8, 4: 16, 8: 32}
+ROW_BITS = 160
+MASK160 = (1 << ROW_BITS) - 1
+
+
+def _masks(w):
+    l = 0
+    for i in range(ROW_BITS // w):
+        l |= 1 << (i * w)
+    return ((l << (w - 1)) & MASK160, l)
+
+
+MASKS = {w: _masks(w) for w in (8, 16, 32)}
+
+
+def add_lanes(a, b, w, cin):
+    h, l = MASKS[w]
+    t = (a & ~h) + (b & ~h) + (l if cin else 0)
+    return (t ^ ((a ^ b) & h)) & MASK160
+
+
+def shift_left_lanes(a, w):
+    _, l = MASKS[w]
+    return (a << 1) & ~l & MASK160
+
+
+def invert(a):
+    return ~a & MASK160
+
+
+def pack_word(vals, bits):
+    w = EXT[bits]
+    fm = (1 << w) - 1
+    word = 0
+    for i, v in enumerate(vals):
+        word |= (v & fm) << (i * w)
+    return word
+
+
+def lanes_signed(word, bits, count):
+    w = EXT[bits]
+    fm = (1 << w) - 1
+    half = 1 << (w - 1)
+    out = []
+    for i in range(count):
+        v = (word >> (i * w)) & fm
+        out.append(v - (1 << w) if v >= half else v)
+    return out
+
+
+# --- eFSM engine (port of bramac::efsm) ---------------------------------
+_SCHED = {}
+
+
+def compute_schedule(bits, signed):
+    key = (bits, signed)
+    if key not in _SCHED:
+        ops = [("prep", 0)]
+        bitlist = list(range(bits - 1, -1, -1))
+        if signed:
+            ops.append(("invmsb", bitlist.pop(0)))
+            ops.append(("addmsb", 0))
+        for b in bitlist:
+            ops.append(("addshift", b) if b else ("addlsb", 0))
+        ops.append(("accumulate", 0))
+        _SCHED[key] = ops
+    return _SCHED[key]
+
+
+class Engine:
+    """Table-driven micro-op engine over a dummy-array row file."""
+
+    __slots__ = ("bits", "w", "rows", "cycles")
+
+    def __init__(self, bits):
+        self.bits = bits
+        self.w = EXT[bits]
+        self.rows = {"w1": 0, "w2": 0, "w12": 0, "inv": 0, "p": 0, "acc": 0}
+        self.cycles = 0
+
+    def select(self, bit, i1, i2):
+        b1 = (i1 >> bit) & 1
+        b2 = (i2 >> bit) & 1
+        if b1 and b2:
+            return self.rows["w12"]
+        if b1:
+            return self.rows["w1"]
+        if b2:
+            return self.rows["w2"]
+        return 0
+
+    def exec_mac2(self, i1, i2, signed):
+        r = self.rows
+        w = self.w
+        for op, bit in compute_schedule(self.bits, signed):
+            self.cycles += 1
+            if op == "prep":
+                r["w12"] = add_lanes(r["w1"], r["w2"], w, False)
+                r["p"] = 0
+            elif op == "invmsb":
+                r["inv"] = invert(self.select(bit, i1, i2))
+            elif op == "addmsb":
+                r["p"] = shift_left_lanes(add_lanes(r["p"], r["inv"], w, True), w)
+            elif op == "addshift":
+                r["p"] = shift_left_lanes(
+                    add_lanes(r["p"], self.select(bit, i1, i2), w, False), w
+                )
+            elif op == "addlsb":
+                r["p"] = add_lanes(r["p"], self.select(0, i1, i2), w, False)
+            else:  # accumulate
+                r["acc"] = add_lanes(r["acc"], r["p"], w, False)
+
+
+# --- SWAR fast path (port of bramac::fastpath) --------------------------
+def mac2_fast(w1, w2, acc, i1, i2, bits, signed):
+    w = EXT[bits]
+    w12 = add_lanes(w1, w2, w, False)
+
+    def sel(bit):
+        b1 = (i1 >> bit) & 1
+        b2 = (i2 >> bit) & 1
+        if b1 and b2:
+            return w12
+        if b1:
+            return w1
+        if b2:
+            return w2
+        return 0
+
+    bit = bits - 1
+    p = 0
+    if signed:
+        p = shift_left_lanes(add_lanes(p, invert(sel(bit)), w, True), w)
+        bit -= 1
+    while bit > 0:
+        p = shift_left_lanes(add_lanes(p, sel(bit), w, False), w)
+        bit -= 1
+    p = add_lanes(p, sel(0), w, False)
+    return add_lanes(acc, p, w, False)
+
+
+def mac2_golden(w1, w2, i1, i2, bits, signed):
+    """Scalar Algorithm-1 shift-add reference."""
+    p = 0
+    for bit in range(bits - 1, -1, -1):
+        term = (w1 if (i1 >> bit) & 1 else 0) + (w2 if (i2 >> bit) & 1 else 0)
+        if signed and bit == bits - 1:
+            p -= term
+        else:
+            p += term
+        if bit:
+            p <<= 1
+    return p
+
+
+# --- tiled MVM pool (port of the scheduler/shard dispatch shape) --------
+def tile_words(wmat, r0, trows, cols, bits):
+    return [pack_word([wmat[r0 + r][j] for r in range(trows)], bits) for j in cols]
+
+
+def run_tile(words, trows, xvals, bits, signed, fast, engines):
+    """One tile x one engine-group (phantom zero vectors allowed)."""
+    n = len(words)
+    E = len(xvals)
+    if fast:
+        accs = [0] * E
+        for j in range(0, n, 2):
+            w1 = words[j]
+            w2 = words[j + 1] if j + 1 < n else 0
+            for e in range(E):
+                i1 = xvals[e][j]
+                i2 = xvals[e][j + 1] if j + 1 < n else 0
+                accs[e] = mac2_fast(w1, w2, accs[e], i1, i2, bits, signed)
+        return [lanes_signed(a, bits, trows) for a in accs]
+    for e in range(E):
+        engines[e].rows["acc"] = 0
+    for j in range(0, n, 2):
+        w1 = words[j]
+        w2 = words[j + 1] if j + 1 < n else 0
+        for e in range(E):
+            eng = engines[e]
+            eng.rows["w1"] = w1
+            eng.rows["w2"] = w2
+            i1 = xvals[e][j]
+            i2 = xvals[e][j + 1] if j + 1 < n else 0
+            eng.exec_mac2(i1, i2, signed)
+    return [lanes_signed(engines[e].rows["acc"], bits, trows) for e in range(E)]
+
+
+def plan_chunk(bits, dataflow):
+    buffer_words = MAIN_WORDS if dataflow == "persistent" else MAIN_WORDS // 2
+    return min(max_dot_len(bits), buffer_words)
+
+
+def make_resident(wmat, bits, shards, dataflow):
+    lanes = lanes_per_word(bits)
+    chunk = plan_chunk(bits, dataflow)
+    m, n = len(wmat), len(wmat[0])
+    res = {}
+    for r0, rows in shard_rows(m, lanes, shards):
+        for t0 in range(0, rows, lanes):
+            trows = min(lanes, rows - t0)
+            for c0 in range(0, n, chunk):
+                cols = range(c0, min(n, c0 + chunk))
+                res[(r0 + t0, c0)] = tile_words(wmat, r0 + t0, trows, cols, bits)
+    return res
+
+
+def pool_mvm(wmat, xs, bits, variant, signed, fidelity, dataflow, shards, resident=None):
+    lanes = lanes_per_word(bits)
+    E = 2 if variant == "2sa" else 1
+    m, n = len(wmat), len(wmat[0])
+    chunk = plan_chunk(bits, dataflow)
+    B = len(xs)
+    fast = fidelity == "fast"
+    engines = None if fast else [Engine(bits) for _ in range(E)]
+    ys = [[0] * m for _ in range(B)]
+    zeros = [0] * n
+    for r0, rows in shard_rows(m, lanes, shards):
+        for t0 in range(0, rows, lanes):
+            trows = min(lanes, rows - t0)
+            for c0 in range(0, n, chunk):
+                cols = range(c0, min(n, c0 + chunk))
+                if resident is not None:
+                    words = resident[(r0 + t0, c0)]
+                else:
+                    words = tile_words(wmat, r0 + t0, trows, cols, bits)
+                for g0 in range(0, B, E):
+                    xg = [xs[g0 + e] if g0 + e < B else zeros for e in range(E)]
+                    xsl = [[x[j] for j in cols] for x in xg]
+                    res = run_tile(words, trows, xsl, bits, signed, fast, engines)
+                    for e in range(E):
+                        if g0 + e < B:
+                            yrow = ys[g0 + e]
+                            for lane in range(trows):
+                                yrow[r0 + t0 + lane] += res[e][lane]
+    return ys
+
+
+def gemv_ref(wmat, x):
+    return [sum(wr[j] * x[j] for j in range(len(x))) for wr in wmat]
+
+
+# --- netexec forward (port of dla::netexec lowerings) -------------------
+def im2col_col(act, ah, aw, g, op, oq):
+    _, _, c, r, s, _, _ = (None, *g[1:])
+    col = []
+    for ci in range(c):
+        for ri in range(r):
+            for si in range(s):
+                col.append(act[(ci * ah + op + ri) * aw + oq + si])
+    return col
+
+
+class NetRunner:
+    """One configured toy-CNN forward (weights/residents prebuilt)."""
+
+    def __init__(self, bits, variant, signed, relu, dataflow, shards, fidelity,
+                 lowering, batch, wseed, iseed):
+        self.cfg = (bits, variant, signed, relu, dataflow, shards, fidelity,
+                    lowering, batch)
+        E = 2 if variant == "2sa" else 1
+        self.width = E if batch == 0 else batch
+        self.layers = []
+        for li, g in enumerate(TOY):
+            wts = layer_weights(wseed, li, bits)
+            resident = (make_resident(wts, bits, shards, dataflow)
+                        if dataflow == "persistent" else None)
+            self.layers.append((g, wts, resident))
+        c, h, w_, act = random_input(iseed, bits, signed)
+        self.input = act
+        self.in_hw = (h, w_)
+
+    def run(self):
+        bits, variant, signed, relu, dataflow, shards, fidelity, lowering, _ = self.cfg
+        act = self.input
+        ah, aw = self.in_hw
+        B = self.width
+        out = None
+        dispatch_counts = []
+        for li, (g, wts, resident) in enumerate(self.layers):
+            _, k, _, _, _, p, q = (None, *g[1:])
+            pq = p * q
+            if li > 0:
+                ah, aw = g[5] + g[3] - 1, g[6] + g[4] - 1
+            cols_all = None
+            if lowering == "im2col":
+                cols_all = [im2col_col(act, ah, aw, g, pi // q, pi % q)
+                            for pi in range(pq)]
+            y = [0] * (k * pq)
+            dispatches = 0
+            pix = 0
+            while pix < pq:
+                nchunk = min(B, pq - pix)
+                if cols_all is not None:
+                    xs = cols_all[pix:pix + nchunk]
+                else:
+                    xs = [im2col_col(act, ah, aw, g, (pix + b) // q, (pix + b) % q)
+                          for b in range(nchunk)]
+                ys = pool_mvm(wts, xs, bits, variant, signed, fidelity,
+                              dataflow, shards, resident)
+                for bi in range(nchunk):
+                    for kk in range(k):
+                        y[kk * pq + pix + bi] = ys[bi][kk]
+                dispatches += 1
+                pix += nchunk
+            dispatch_counts.append(dispatches)
+            if li + 1 == len(self.layers):
+                out = y
+            else:
+                act, _ = requantize(y, bits, signed, relu)
+        return out, dispatch_counts
+
+
+def reference_output(bits, signed, relu, wseed, iseed):
+    """Direct-convolution reference pipeline (no block model)."""
+    _, h, w_, act = random_input(iseed, bits, signed)
+    ah, aw = h, w_
+    for li, g in enumerate(TOY):
+        wts = layer_weights(wseed, li, bits)
+        if li > 0:
+            ah, aw = g[5] + g[3] - 1, g[6] + g[4] - 1
+        y = conv_direct(act, g[2], ah, aw, g, wts)
+        if li + 1 == len(TOY):
+            return y
+        act, _ = requantize(y, bits, signed, relu)
+
+
+# --- bench harness (port of util::bench::Bench) -------------------------
+class Bench:
+    def __init__(self, suite):
+        self.suite = suite
+        quick = bool(os.environ.get("BENCH_QUICK"))
+        self.target = 0.12 if quick else 0.6
+        self.results = []
+
+    def bench(self, name, f, threads=0, shards=0, fidelity=""):
+        t0 = time.perf_counter()
+        f()
+        once = max(time.perf_counter() - t0, 5e-8)
+        per = max(1, min(1_000_000, int(self.target / 16 / once)))
+        samples = []
+        iters = 0
+        deadline = time.perf_counter() + self.target
+        while time.perf_counter() < deadline or len(samples) < 4:
+            t = time.perf_counter()
+            for _ in range(per):
+                f()
+            samples.append((time.perf_counter() - t) / per * 1e9)
+            iters += per
+            if len(samples) >= 64:
+                break
+        samples.sort()
+        median = samples[len(samples) // 2]
+        mean = sum(samples) / len(samples)
+        print(f"{self.suite}/{name:<60} {median:>14.0f} ns/iter ({iters} iters)")
+        self.results.append({
+            "op": name, "wall_ns": median, "min_ns": samples[0], "mean_ns": mean,
+            "iters": iters, "cycles": 0, "threads": threads, "shards": shards,
+            "fidelity": fidelity,
+        })
+        return median
+
+
+# --- verification pass --------------------------------------------------
+def verify_kernels():
+    rng = Rng(0xfeed)
+    for bits in (2, 4, 8):
+        lanes = lanes_per_word(bits)
+        lo, hi = srange(bits)
+        for signed in (True, False):
+            ilo, ihi = (lo, hi) if signed else (0, (1 << bits) - 1)
+            for _ in range(25):
+                wv1 = [rng.gen_range(lo, hi) for _ in range(lanes)]
+                wv2 = [rng.gen_range(lo, hi) for _ in range(lanes)]
+                i1 = rng.gen_range(ilo, ihi)
+                i2 = rng.gen_range(ilo, ihi)
+                pw1, pw2 = pack_word(wv1, bits), pack_word(wv2, bits)
+                eng = Engine(bits)
+                eng.rows["w1"], eng.rows["w2"] = pw1, pw2
+                eng.exec_mac2(i1, i2, signed)
+                got_e = lanes_signed(eng.rows["acc"], bits, lanes)
+                got_f = lanes_signed(
+                    mac2_fast(pw1, pw2, 0, i1, i2, bits, signed), bits, lanes)
+                want = [mac2_golden(wv1[t], wv2[t], i1, i2, bits, signed)
+                        for t in range(lanes)]
+                direct = [wv1[t] * i1 + wv2[t] * i2 for t in range(lanes)]
+                assert want == direct, f"golden vs product {bits}b signed={signed}"
+                assert got_e == want, f"eFSM {bits}b signed={signed}"
+                assert got_f == want, f"fastpath {bits}b signed={signed}"
+    print("verify: eFSM engine == SWAR fast path == scalar golden "
+          "(2/4/8-bit x signed/unsigned x all lanes)")
+
+
+def verify_pool(wmat, xs, bits, variant, fidelity, dataflow, shards, resident=None):
+    ys = pool_mvm(wmat, xs, bits, variant, True, fidelity, dataflow, shards, resident)
+    want = [gemv_ref(wmat, x) for x in xs]
+    assert ys == want, f"pool {variant}/{fidelity}/{dataflow}/shards={shards}"
+    return ys
+
+
+def verify_netexec(runners):
+    bits, signed, relu = 4, True, True
+    want = reference_output(bits, signed, relu, WSEED, ISEED)
+    for label, r in runners.items():
+        out, dispatches = r.run()
+        assert out == want, f"netexec {label}: output mismatch"
+        for (g, _, _), d in zip(r.layers, dispatches):
+            pq = g[5] * g[6]
+            expect = -(-pq // r.width)
+            assert d == expect, f"netexec {label}: dispatches {d} != ceil({pq}/{r.width})"
+    print(f"verify: {len(runners)} netexec configs bit-identical to the "
+          "direct-convolution reference (dispatch counts = ceil(pq/batch))")
+
+
+WSEED, ISEED = 0x7041, 0x1234
+
+
+def main():
+    out_path = sys.argv[1] if len(sys.argv) > 1 else "BENCH_pr6.json"
+    t_start = time.time()
+    verify_kernels()
+
+    rng = Rng(0xb6a1)
+
+    def rmat(m, n, bits):
+        lo, hi = srange(bits)
+        return [[rng.gen_range(lo, hi) for _ in range(n)] for _ in range(m)]
+
+    def rvec(n, bits):
+        lo, hi = srange(bits)
+        return [rng.gen_range(lo, hi) for _ in range(n)]
+
+    suites = {}
+
+    # ---------------- perf_hotpath ----------------
+    b = Bench("perf_hotpath")
+    g1, g2, gi1, gi2 = -97, 58, -102, 77
+    assert mac2_golden(g1, g2, gi1, gi2, 8, True) == g1 * gi1 + g2 * gi2
+    b.bench("mac2_golden/8bit", lambda: mac2_golden(g1, g2, gi1, gi2, 8, True))
+
+    for bits in (2, 4, 8):
+        lanes = lanes_per_word(bits)
+        lo, hi = srange(bits)
+        wv1 = [rng.gen_range(lo, hi) for _ in range(lanes)]
+        wv2 = [rng.gen_range(lo, hi) for _ in range(lanes)]
+        i1, i2 = rng.gen_range(lo, hi), rng.gen_range(lo, hi)
+        pw1, pw2 = pack_word(wv1, bits), pack_word(wv2, bits)
+        eng = Engine(bits)
+
+        def f_efsm(eng=eng, pw1=pw1, pw2=pw2, i1=i1, i2=i2):
+            eng.rows["w1"] = pw1
+            eng.rows["w2"] = pw2
+            eng.exec_mac2(i1, i2, True)
+
+        b.bench(f"efsm_mac2/{bits}-bit (engine, all lanes)", f_efsm)
+        b.bench(
+            f"fastpath_mac2/{bits}-bit (SWAR, all lanes)",
+            lambda pw1=pw1, pw2=pw2, i1=i1, i2=i2, bits=bits:
+                mac2_fast(pw1, pw2, 0, i1, i2, bits, True),
+        )
+
+    # block stream: 64 MAC2 ops through E engines per variant.
+    stream = []
+    lo, hi = srange(4)
+    for _ in range(64):
+        stream.append((
+            pack_word([rng.gen_range(lo, hi) for _ in range(10)], 4),
+            pack_word([rng.gen_range(lo, hi) for _ in range(10)], 4),
+            rng.gen_range(lo, hi), rng.gen_range(lo, hi),
+        ))
+    for variant, vname in (("2sa", "BRAMAC-2SA"), ("1da", "BRAMAC-1DA")):
+        E = 2 if variant == "2sa" else 1
+        engines = [Engine(4) for _ in range(E)]
+
+        def f_stream(engines=engines, E=E):
+            for pw1, pw2, i1, i2 in stream:
+                for e in range(E):
+                    eng = engines[e]
+                    eng.rows["w1"] = pw1
+                    eng.rows["w2"] = pw2
+                    eng.exec_mac2(i1, i2, True)
+
+        def f_stream_fast(E=E):
+            accs = [0] * E
+            for pw1, pw2, i1, i2 in stream:
+                for e in range(E):
+                    accs[e] = mac2_fast(pw1, pw2, accs[e], i1, i2, 4, True)
+
+        b.bench(f"block_mac2_stream/{vname}/4bit", f_stream, fidelity="bit-accurate")
+        b.bench(f"block_mac2_stream/{vname}/4bit/fidelity=fast", f_stream_fast,
+                fidelity="fast")
+
+    # pool GEMVs (verified against direct matmul before timing).
+    w80 = rmat(80, 256, 4)
+    x80 = rvec(256, 4)
+    verify_pool(w80, [x80], 4, "2sa", "bit-accurate", "tiling", 2)
+    b.bench("pool_gemv/80x256/4bit/2blocks",
+            lambda: pool_mvm(w80, [x80], 4, "2sa", True, "bit-accurate", "tiling", 2))
+    b.bench("gemv_golden/80x256/4bit", lambda: gemv_ref(w80, x80))
+
+    w320 = rmat(320, 1024, 4)
+    x320 = rvec(1024, 4)
+    verify_pool(w320, [x320], 4, "2sa", "bit-accurate", "tiling", 8)
+    verify_pool(w320, [x320], 4, "2sa", "fast", "tiling", 8)
+    for threads in (1, 2, 4):
+        # Single-threaded port: same total work at every `threads` label
+        # (see module docstring).
+        b.bench(f"pool_gemv/320x1024/4bit/8blocks/threads={threads}",
+                lambda: pool_mvm(w320, [x320], 4, "2sa", True, "bit-accurate",
+                                 "tiling", 8),
+                threads=threads, fidelity="bit-accurate")
+    b.bench("pool_gemv/320x1024/4bit/8blocks/threads=1/fidelity=fast",
+            lambda: pool_mvm(w320, [x320], 4, "2sa", True, "fast", "tiling", 8),
+            threads=1, fidelity="fast")
+
+    # tile-plan derive vs cached.
+    def derive_plan(m, n, bits, dataflow, shards):
+        lanes = lanes_per_word(bits)
+        chunk = plan_chunk(bits, dataflow)
+        tiles = []
+        for r0, rows in shard_rows(m, lanes, shards):
+            for t0 in range(0, rows, lanes):
+                for c0 in range(0, n, chunk):
+                    tiles.append((r0 + t0, min(lanes, rows - t0), c0,
+                                  min(chunk, n - c0)))
+        return tiles
+
+    plan_cache = {}
+
+    def cached_plan():
+        key = (320, 1024, 4, "tiling", 1)
+        if key not in plan_cache:
+            plan_cache[key] = derive_plan(*key)
+        return plan_cache[key]
+
+    b.bench("tile_plan/derive/320x1024/4bit",
+            lambda: derive_plan(320, 1024, 4, "tiling", 1))
+    b.bench("tile_plan/cached/320x1024/4bit", cached_plan)
+
+    # tiling vs persistent (resident weights prebuilt, as in the Rust pool).
+    res80 = make_resident(w80, 4, 8, "persistent")
+    verify_pool(w80, [x80], 4, "2sa", "bit-accurate", "persistent", 8, res80)
+    for dataflow, res in (("tiling", None), ("persistent", res80)):
+        b.bench(f"pool_gemv/{dataflow}/80x256/4bit/8blocks",
+                lambda dataflow=dataflow, res=res:
+                    pool_mvm(w80, [x80], 4, "2sa", True, "bit-accurate",
+                             dataflow, 8, res),
+                threads=1, fidelity="bit-accurate")
+        b.bench(f"pool_gemv/{dataflow}/80x256/4bit/8blocks/fidelity=fast",
+                lambda dataflow=dataflow, res=res:
+                    pool_mvm(w80, [x80], 4, "2sa", True, "fast", dataflow, 8, res),
+                threads=1, fidelity="fast")
+
+    # batch-N MVM (PR 6): width-8 on the 320x1024 workload, 1DA x 8 blocks.
+    xs8 = [rvec(1024, 4) for _ in range(8)]
+    verify_pool(w320, xs8, 4, "1da", "bit-accurate", "tiling", 8)
+    verify_pool(w320, xs8, 4, "1da", "fast", "tiling", 8)
+    batch_oracle = b.bench(
+        "pool_mvm_batch8/320x1024/4bit/8blocks",
+        lambda: pool_mvm(w320, xs8, 4, "1da", True, "bit-accurate", "tiling", 8),
+        threads=1, fidelity="bit-accurate")
+    batch_fast = b.bench(
+        "pool_mvm_batch8/320x1024/4bit/8blocks/fidelity=fast",
+        lambda: pool_mvm(w320, xs8, 4, "1da", True, "fast", "tiling", 8),
+        threads=1, fidelity="fast")
+    print(f"    -> batch-8 fast vs eFSM oracle (port): "
+          f"{batch_oracle / batch_fast:.2f}x")
+    suites["perf_hotpath"] = b.results
+
+    # ---------------- shard_scaling ----------------
+    b = Bench("shard_scaling")
+    for shards in (1, 2, 4, 8):
+        verify_pool(w320, [x320], 4, "2sa", "bit-accurate", "tiling", shards)
+        b.bench(f"sharded_gemv/tiling/320x1024/4bit/{shards}shards",
+                lambda shards=shards:
+                    pool_mvm(w320, [x320], 4, "2sa", True, "bit-accurate",
+                             "tiling", shards),
+                shards=shards, fidelity="bit-accurate")
+    for shards in (1, 4):
+        res = make_resident(w80, 4, shards, "persistent")
+        verify_pool(w80, [x80], 4, "2sa", "bit-accurate", "persistent", shards, res)
+        b.bench(f"sharded_gemv/persistent/80x256/4bit/{shards}shards",
+                lambda shards=shards, res=res:
+                    pool_mvm(w80, [x80], 4, "2sa", True, "bit-accurate",
+                             "persistent", shards, res),
+                shards=shards, fidelity="bit-accurate")
+        b.bench(f"sharded_gemv/persistent/80x256/4bit/{shards}shards/fidelity=fast",
+                lambda shards=shards, res=res:
+                    pool_mvm(w80, [x80], 4, "2sa", True, "fast",
+                             "persistent", shards, res),
+                shards=shards, fidelity="fast")
+
+    # router dispatch: 6 requests over 3 persistent replicas (40x96).
+    w40 = rmat(40, 96, 4)
+    res40 = make_resident(w40, 4, 2, "persistent")
+    reqs = [rvec(96, 4) for _ in range(6)]
+    verify_pool(w40, [reqs[0]], 4, "2sa", "bit-accurate", "persistent", 2, res40)
+
+    def route(fidelity):
+        outstanding = [0, 0, 0]
+        for x in reqs:
+            r = outstanding.index(min(outstanding))
+            outstanding[r] += 1
+            pool_mvm(w40, [x], 4, "2sa", True, fidelity, "persistent", 2, res40)
+            outstanding[r] -= 1
+
+    b.bench("router_dispatch/least-outstanding/40x96/4bit/3replicas",
+            lambda: route("bit-accurate"), shards=2, fidelity="bit-accurate")
+    b.bench("router_dispatch/least-outstanding/40x96/4bit/3replicas/fidelity=fast",
+            lambda: route("fast"), shards=2, fidelity="fast")
+    suites["shard_scaling"] = b.results
+
+    # ---------------- netexec ----------------
+    b = Bench("netexec")
+    mk = lambda **kw: NetRunner(4, kw.get("variant", "2sa"), True, True,
+                                kw.get("dataflow", "tiling"),
+                                kw.get("shards", 1),
+                                kw["fidelity"], kw.get("lowering", "im2col"),
+                                kw.get("batch", 0), WSEED, ISEED)
+    runners = {
+        "tiling/oracle": mk(fidelity="bit-accurate"),
+        "tiling/fast": mk(fidelity="fast"),
+        "persistent/oracle": mk(dataflow="persistent", fidelity="bit-accurate"),
+        "persistent/fast": mk(dataflow="persistent", fidelity="fast"),
+        "persistent/2shards/fast": mk(dataflow="persistent", shards=2,
+                                      fidelity="fast"),
+        "tiling/streaming/fast": mk(fidelity="fast", lowering="streaming"),
+        "tiling/streaming/oracle": mk(fidelity="bit-accurate",
+                                      lowering="streaming"),
+        "tiling/streaming/b8/fast": mk(fidelity="fast", lowering="streaming",
+                                       batch=8),
+        "tiling/im2col/b8/fast": mk(fidelity="fast", batch=8),
+        "tiling/streaming/b3/fast": mk(fidelity="fast", lowering="streaming",
+                                       batch=3),
+        "tiling/im2col/b5/fast": mk(fidelity="fast", batch=5),
+    }
+    verify_netexec(runners)
+
+    oracle_ns = b.bench("network_infer/toy/4bit/2sa/tiling",
+                        lambda: runners["tiling/oracle"].run(),
+                        threads=1, shards=1, fidelity="bit-accurate")
+    fast_ns = b.bench("network_infer/toy/4bit/2sa/tiling",
+                      lambda: runners["tiling/fast"].run(),
+                      threads=1, shards=1, fidelity="fast")
+    b.bench("network_infer/toy/4bit/2sa/persistent",
+            lambda: runners["persistent/oracle"].run(),
+            threads=1, shards=1, fidelity="bit-accurate")
+    b.bench("network_infer/toy/4bit/2sa/persistent",
+            lambda: runners["persistent/fast"].run(),
+            threads=1, shards=1, fidelity="fast")
+    b.bench("network_infer/toy/4bit/2sa/persistent/2shards",
+            lambda: runners["persistent/2shards/fast"].run(),
+            threads=1, shards=2, fidelity="fast")
+    b.bench("network_infer/toy/4bit/2sa/tiling/streaming/batch2",
+            lambda: runners["tiling/streaming/fast"].run(),
+            threads=1, shards=1, fidelity="fast")
+    b.bench("network_infer/toy/4bit/2sa/tiling/streaming/batch2",
+            lambda: runners["tiling/streaming/oracle"].run(),
+            threads=1, shards=1, fidelity="bit-accurate")
+    b.bench("network_infer/toy/4bit/2sa/tiling/streaming/batch8",
+            lambda: runners["tiling/streaming/b8/fast"].run(),
+            threads=1, shards=1, fidelity="fast")
+    b.bench("network_infer/toy/4bit/2sa/tiling/im2col/batch8",
+            lambda: runners["tiling/im2col/b8/fast"].run(),
+            threads=1, shards=1, fidelity="fast")
+    ratio = oracle_ns / fast_ns
+    print(f"    -> whole-network fast vs eFSM oracle (tiling, port): "
+          f"{ratio:.2f}x (Rust target >= 10x)")
+    suites["netexec"] = b.results
+
+    doc = {
+        "format": "bramac-bench-v1",
+        "note": (
+            "Measured baseline for the CI perf gate (PR 6). Recorded by an "
+            "actual timed run of python/tools/bench_port.py — a functional "
+            "Python port of the eFSM engine, SWAR fast path, tiled MVM pool "
+            "and netexec lowerings — with every configuration verified "
+            "bit-for-bit against scalar-golden / direct-matmul / "
+            "direct-convolution references before timing. Absolute wall_ns "
+            "are Python-port magnitudes, not Rust magnitudes; the gate only "
+            "consumes suite-geomean-normalized ratios. The port is "
+            "single-threaded, so threads=N / shard-scaling entries carry no "
+            "parallel speedup: if the armed gate trips with uniform "
+            "parallelism skew on the first trusted CI run, replace this file "
+            "with that run's uploaded bench-json artifact (the gate is armed "
+            "either way — no bootstrap bypass)."
+        ),
+        "quick": bool(os.environ.get("BENCH_QUICK")),
+        "host": f"python-{sys.version.split()[0]}",
+        "suites": suites,
+    }
+    with open(out_path, "w") as f:
+        json.dump(doc, f, indent=2)
+        f.write("\n")
+    n = sum(len(v) for v in suites.values())
+    print(f"wrote {out_path}: {n} entries in {len(suites)} suites "
+          f"({time.time() - t_start:.0f}s total)")
+
+
+if __name__ == "__main__":
+    main()

@@ -8,7 +8,7 @@
 
 use bramac::arch::Precision;
 use bramac::bramac::ExecFidelity;
-use bramac::dla::netexec::{reference_forward, NetExec, NetExecConfig, QuantNetwork};
+use bramac::dla::netexec::{reference_forward, Lowering, NetExec, NetExecConfig, QuantNetwork};
 use bramac::dla::{toy, Dataflow};
 use bramac::util::bench::{black_box, Bench, BenchMeta};
 
@@ -19,6 +19,8 @@ fn main() {
     let input = qnet.random_input(0xbe4d, true);
     let want = reference_forward(&qnet, &input, true, true);
 
+    let mut oracle_ns = 0.0f64;
+    let mut fast_ns = 0.0f64;
     for (dataflow, fidelity) in [
         (Dataflow::Tiling, ExecFidelity::BitAccurate),
         (Dataflow::Tiling, ExecFidelity::Fast),
@@ -31,9 +33,66 @@ fn main() {
         assert_eq!(report.output, want, "bit-identical before timing");
         report.reconcile().expect("reconciliation identities");
         let cycles = report.total.makespan_cycles;
+        let ns = b
+            .bench_meta(
+                &format!("network_infer/toy/4bit/2sa/{}", dataflow.name()),
+                BenchMeta { cycles, threads: 1, shards: 1, fidelity: fidelity.name() },
+                || {
+                    black_box(engine.infer(&input).expect("forward pass"));
+                },
+            )
+            .median_ns;
+        if dataflow == Dataflow::Tiling {
+            match fidelity {
+                ExecFidelity::BitAccurate => oracle_ns = ns,
+                ExecFidelity::Fast => fast_ns = ns,
+            }
+        }
+    }
+    println!(
+        "    -> whole-network fast vs eFSM oracle (tiling): {:.2}x (target >= 10x)",
+        oracle_ns / fast_ns
+    );
+
+    // Streaming (implicit-GEMM) lowering and explicit batch-N widths:
+    // identical outputs and ScheduleStats asserted against the im2col
+    // run before timing, so these entries track the host-side cost of
+    // the lowering itself.
+    let baseline_cfg = NetExecConfig { fidelity: ExecFidelity::Fast, ..NetExecConfig::default() };
+    let baseline = NetExec::new(qnet.clone(), baseline_cfg)
+        .expect("toy fits")
+        .infer(&input)
+        .expect("baseline forward");
+    for (lowering, batch, fidelity) in [
+        (Lowering::Streaming, 0usize, ExecFidelity::Fast),
+        (Lowering::Streaming, 0, ExecFidelity::BitAccurate),
+        (Lowering::Streaming, 8, ExecFidelity::Fast),
+        (Lowering::Im2col, 8, ExecFidelity::Fast),
+    ] {
+        let cfg = NetExecConfig { lowering, batch, fidelity, ..baseline_cfg };
+        let mut engine = NetExec::new(qnet.clone(), cfg).expect("toy fits");
+        let report = engine.infer(&input).expect("forward pass");
+        assert_eq!(report.output, want, "bit-identical before timing");
+        if batch == 0 {
+            assert_eq!(
+                report.total, baseline.total,
+                "auto-width streaming must charge identical cycles"
+            );
+        }
+        report.reconcile().expect("reconciliation identities");
+        let name = format!(
+            "network_infer/toy/4bit/2sa/tiling/{}/batch{}",
+            lowering.name(),
+            report.batch
+        );
         b.bench_meta(
-            &format!("network_infer/toy/4bit/2sa/{}", dataflow.name()),
-            BenchMeta { cycles, threads: 1, shards: 1, fidelity: fidelity.name() },
+            &name,
+            BenchMeta {
+                cycles: report.total.makespan_cycles,
+                threads: 1,
+                shards: 1,
+                fidelity: fidelity.name(),
+            },
             || {
                 black_box(engine.infer(&input).expect("forward pass"));
             },

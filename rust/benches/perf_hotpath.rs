@@ -216,6 +216,65 @@ fn main() {
          (target >= 5x; bit-identical outputs + stats asserted)"
     );
 
+    // §Perf iteration 9: batch-N MVM lanes (PR 6). A width-8 MVM over
+    // the same 320x1024 workload: every weight tile is copied once and
+    // feeds all 8 input vectors (copy cycles amortize 8x vs sequential
+    // GEMVs — asserted), and the fast engine replays whole MAC2 bursts
+    // through the multi-limb SWAR adder.
+    let batch_xs: Vec<Vec<i64>> =
+        (0..8).map(|_| random_vector(&mut rng, bn, p, true)).collect();
+    let batch_want: Vec<Vec<i64>> = batch_xs.iter().map(|v| bw.gemv_ref(v)).collect();
+    let mut batch_pool =
+        BlockPool::new(Variant::OneDA, 8, p).with_fidelity(ExecFidelity::BitAccurate);
+    let (yb, sb) = batch_pool.run_mvm_batch(&bw, &batch_xs);
+    assert_eq!(yb, batch_want, "batch-8 MVM must be bit-exact");
+    assert_eq!(
+        sb.weight_copy_cycles, s_seq.weight_copy_cycles,
+        "batch-8 streams the weights once, not 8 times"
+    );
+    let batch_oracle_ns = b
+        .bench_meta(
+            "pool_mvm_batch8/320x1024/4bit/8blocks",
+            BenchMeta {
+                cycles: sb.makespan_cycles,
+                threads: 1,
+                shards: 0,
+                fidelity: "bit-accurate",
+            },
+            || {
+                black_box(batch_pool.run_mvm_batch(&bw, &batch_xs));
+            },
+        )
+        .median_ns;
+    let mut batch_fast_pool =
+        BlockPool::new(Variant::OneDA, 8, p).with_fidelity(ExecFidelity::Fast);
+    let (ybf, sbf) = batch_fast_pool.run_mvm_batch(&bw, &batch_xs);
+    assert_eq!(ybf, yb, "fast batch-8 must be bit-identical");
+    assert_eq!(sbf, sb, "fast batch-8 must charge identical cycles");
+    let batch_fast_ns = b
+        .bench_meta(
+            "pool_mvm_batch8/320x1024/4bit/8blocks/fidelity=fast",
+            BenchMeta {
+                cycles: sbf.makespan_cycles,
+                threads: 1,
+                shards: 0,
+                fidelity: "fast",
+            },
+            || {
+                black_box(batch_fast_pool.run_mvm_batch(&bw, &batch_xs));
+            },
+        )
+        .median_ns;
+    println!(
+        "    -> batch-8 MVM: {:.2}x host time per vector vs a single GEMV; \
+         fast engine {:.2}x vs oracle on the same batch (copy cycles {} for \
+         all 8 vectors vs {} per sequential GEMV)",
+        (batch_oracle_ns / 8.0) / seq_ns,
+        batch_oracle_ns / batch_fast_ns,
+        sb.weight_copy_cycles,
+        s_seq.weight_copy_cycles
+    );
+
     // §Perf iteration 6: plan cache + persistent dataflow (PR 2).
     // (a) Cached-plan lookup vs full derivation for the serving case of
     // repeated same-shape dispatches.
@@ -226,6 +285,7 @@ fn main() {
         variant: Variant::OneDA,
         blocks: 8,
         double_buffer: true,
+        batch: 1,
     };
     let derive_ns = b
         .bench("tile_plan/derive/320x1024/4bit", || {

@@ -21,8 +21,9 @@ use crate::arch::{FreqModel, Precision};
 
 use super::dummy_array::Row;
 use super::efsm::{compute_schedule, mac2_compute_cycles, Engine, Mac2Inputs};
-use super::fastpath::{accumulate_row, mac2_row_fast, ExecFidelity};
+use super::fastpath::{accumulate_row, mac2_limbs_fast, mac2_row_fast, ExecFidelity};
 use super::instr::CimInstr;
+use super::row::Row160;
 use super::signext::sign_extend_word;
 
 /// Main-BRAM geometry in CIM mode: simple dual port, 512 × 40-bit
@@ -37,6 +38,23 @@ pub const MAX_LANES: usize = 20;
 
 /// One dummy array's worth of lane values in a fixed-size buffer.
 pub type LaneBuf = [i64; MAX_LANES];
+
+/// Most MAC2s one burst window can hold: a tile spans at most the full
+/// 512-word main array, and a MAC2 consumes a word pair — so the tile
+/// streamers' stack-allocated op buffers never exceed this.
+pub const MAX_BURST_OPS: usize = MAIN_WORDS / 2;
+
+/// One MAC2 of a burst window ([`BramacBlock::mac2_burst`]): the weight
+/// word-address pair plus one `(I1, I2)` input pair per dummy array.
+/// Unused engine slots (1DA uses only `pairs[0]`) and batch-N phantom
+/// tail slots hold the `(0, 0)` pair, which contributes zero to every
+/// accumulator lane.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct Mac2Op {
+    pub a1: u16,
+    pub a2: u16,
+    pub pairs: [(i64, i64); 2],
+}
 
 /// The two BRAMAC variants (§IV).
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
@@ -396,6 +414,72 @@ impl BramacBlock {
         self.charge_mac2_cycles(mac2_compute_cycles(p, signed));
     }
 
+    /// Execute a burst of MAC2s against the current main-array contents
+    /// — the batch-N hot path. Semantically identical to looping
+    /// [`BramacBlock::mac2`] over `ops` (results, engine rows, and every
+    /// `StreamStats` field are bit-identical; the per-op
+    /// `charge_mac2_cycles` loop preserves the cold→warm transition on
+    /// the first op exactly), but the fast fidelity evaluates the whole
+    /// burst as **one wide SWAR word**: `ops.len() × engines` 160-bit
+    /// segments replayed through [`mac2_limbs_fast`] in a single pass of
+    /// the eFSM op sequence, then folded into each engine's ACC row in
+    /// op order.
+    ///
+    /// The up-front weight reads are sound because a burst, like the
+    /// tile streamers that issue it, performs no main-BRAM writes
+    /// between its MAC2s — the same programmer-managed coherency
+    /// contract `mac2` itself documents (§III-C1).
+    pub fn mac2_burst(&mut self, ops: &[Mac2Op], signed: bool) {
+        let engines = self.engines.len();
+        if self.fidelity != ExecFidelity::Fast {
+            for op in ops {
+                self.mac2(op.a1, op.a2, &op.pairs[..engines], signed);
+            }
+            return;
+        }
+        if ops.is_empty() {
+            return;
+        }
+        let p = self.precision;
+        let segs = ops.len() * engines;
+        let mut w1 = vec![0u64; 3 * segs];
+        let mut w2 = vec![0u64; 3 * segs];
+        let mut inputs = Vec::with_capacity(segs);
+        for (o, op) in ops.iter().enumerate() {
+            // One read + sign-extend per op, duplicated across the
+            // engine segments (2SA shares one weight copy between its
+            // two input pairs — §IV-A).
+            let r1 = sign_extend_word(self.read_word(op.a1), p);
+            let r2 = sign_extend_word(self.read_word(op.a2), p);
+            for e in 0..engines {
+                let s = o * engines + e;
+                w1[3 * s..3 * s + 3].copy_from_slice(&r1.0);
+                w2[3 * s..3 * s + 3].copy_from_slice(&r2.0);
+                inputs.push(op.pairs[e]);
+            }
+        }
+        let mut out = vec![0u64; 3 * segs];
+        mac2_limbs_fast(&w1, &w2, &inputs, p, signed, &mut out);
+        let last = ops.len() - 1;
+        for (e_idx, e) in self.engines.iter_mut().enumerate() {
+            let mut acc = e.array.peek(Row::Acc);
+            for o in 0..ops.len() {
+                let s = o * engines + e_idx;
+                let p_row =
+                    Row160([out[3 * s], out[3 * s + 1], out[3 * s + 2]]).normalize();
+                acc = accumulate_row(&acc, &p_row, p);
+                if o == last {
+                    e.array.poke(Row::P, p_row);
+                }
+            }
+            e.array.poke(Row::Acc, acc);
+        }
+        let l = mac2_compute_cycles(p, signed);
+        for _ in 0..ops.len() {
+            self.charge_mac2_cycles(l);
+        }
+    }
+
     /// Read out the accumulator rows (the `done` sequence): returns the
     /// signed lane values of every dummy array and charges the
     /// main-port-busy readout cycles.
@@ -593,6 +677,83 @@ mod tests {
                         "{} {p} signed={signed}: StreamStats must be bit-identical",
                         variant.name()
                     );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn burst_is_bit_identical_to_sequential_mac2s() {
+        // mac2_burst vs looping mac2, at both fidelities, against the
+        // bit-accurate oracle: accumulators, final P rows, and every
+        // StreamStats field (incl. the cold-start charge landing on the
+        // first op of the first burst, and the warm→cold transition a
+        // mid-stream readout forces).
+        let mut rng = Rng::seed_from_u64(0xb0257);
+        for variant in Variant::ALL {
+            for p in Precision::ALL {
+                for signed in [true, false] {
+                    let (lo_i, hi_i) = if signed { p.range() } else { p.range_unsigned() };
+                    let mut oracle = BramacBlock::new(variant, p);
+                    let mut fast_seq = BramacBlock::new(variant, p)
+                        .with_fidelity(ExecFidelity::Fast);
+                    let mut fast_burst = BramacBlock::new(variant, p)
+                        .with_fidelity(ExecFidelity::Fast);
+                    for k in 0..16u16 {
+                        let (word, _) = random_words(&mut rng, p);
+                        for b in [&mut oracle, &mut fast_seq, &mut fast_burst] {
+                            b.write_word(k, word);
+                        }
+                    }
+                    for (round, burst_len) in [3usize, 1, 5].into_iter().enumerate() {
+                        let mut ops = Vec::new();
+                        for j in 0..burst_len {
+                            let mut op = Mac2Op {
+                                a1: (2 * j as u16) % 16,
+                                a2: (2 * j as u16 + 1) % 16,
+                                ..Mac2Op::default()
+                            };
+                            for pair in op.pairs.iter_mut().take(variant.dummy_arrays()) {
+                                *pair = (
+                                    rng.gen_range_i64(lo_i as i64, hi_i as i64),
+                                    rng.gen_range_i64(lo_i as i64, hi_i as i64),
+                                );
+                            }
+                            // The last slot of the last op exercises the
+                            // batch-N phantom pair.
+                            if j == burst_len - 1 {
+                                op.pairs[variant.dummy_arrays() - 1] = (0, 0);
+                            }
+                            ops.push(op);
+                        }
+                        for op in &ops {
+                            let pairs = &op.pairs[..variant.dummy_arrays()];
+                            oracle.mac2(op.a1, op.a2, pairs, signed);
+                            fast_seq.mac2(op.a1, op.a2, pairs, signed);
+                        }
+                        fast_burst.mac2_burst(&ops, signed);
+                        let ctx = format!("{} {p} signed={signed} round {round}", variant.name());
+                        assert_eq!(fast_burst.p_lanes(), oracle.p_lanes(), "{ctx}: P rows");
+                        assert_eq!(fast_burst.stats(), oracle.stats(), "{ctx}: stats");
+                        assert_eq!(fast_seq.stats(), oracle.stats(), "{ctx}: seq stats");
+                        if round == 1 {
+                            // Mid-stream readout: pipeline drains in all
+                            // three blocks identically (warm → cold).
+                            let want = oracle.read_accumulators();
+                            assert_eq!(fast_seq.read_accumulators(), want, "{ctx}");
+                            assert_eq!(fast_burst.read_accumulators(), want, "{ctx}");
+                        }
+                    }
+                    let want = oracle.read_accumulators();
+                    assert_eq!(fast_seq.read_accumulators(), want);
+                    assert_eq!(fast_burst.read_accumulators(), want);
+                    assert_eq!(fast_burst.stats(), oracle.stats());
+                    // An empty burst is a no-op in both fidelities.
+                    let before = fast_burst.stats();
+                    fast_burst.mac2_burst(&[], signed);
+                    oracle.mac2_burst(&[], signed);
+                    assert_eq!(fast_burst.stats(), before);
+                    assert_eq!(oracle.stats(), before);
                 }
             }
         }

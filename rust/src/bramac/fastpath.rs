@@ -45,7 +45,9 @@
 use crate::arch::Precision;
 
 use super::row::Row160;
-use super::simd_adder::{add_lanes, invert, shift_left_lanes};
+use super::simd_adder::{
+    add_lanes, add_lanes_limbs, invert, invert_limbs, shift_left_lanes, shift_left_lanes_limbs,
+};
 
 /// Execution fidelity of a BRAMAC block / pool.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, Default)]
@@ -185,6 +187,77 @@ pub fn accumulate_row(acc: &Row160, p_row: &Row160, p: Precision) -> Row160 {
     add_lanes(acc, p_row, p, false)
 }
 
+/// Batch-N MAC2: replay the eFSM op sequence once across a **wide SWAR
+/// word** holding many 160-bit segments back to back (3 u64 limbs per
+/// segment), each segment carrying its own sign-extended weight rows
+/// and its own `(i1, i2)` input pair. The limb count scales with the
+/// batch while the op count stays the schedule's `n+3`/`n+2` — so a
+/// 2-bit word amortizes the replay over 4× the lanes of an 8-bit word,
+/// which is the whole point of the lane-count-from-precision layout.
+///
+/// `w1`/`w2`/`out` are `3 * inputs.len()` limbs; `out` receives each
+/// segment's P row (`P = W1*I1 + W2*I2` per lane). Per-segment results
+/// are bit-identical to [`mac2_row_fast`] (and hence to the stepped
+/// eFSM): every op applies the identical per-lane function in the
+/// identical order, and the multi-limb primitives kill carries at every
+/// lane boundary, so segments cannot interact. Dead bits (the top 32 of
+/// every third limb) accumulate garbage in dead lanes only — callers
+/// mask them via `Row160::normalize` on extraction.
+///
+/// The input-bit demux of [`select`] is evaluated branchlessly per
+/// segment: `m = 0u64 - bit` masks blend {0, W1, W2, W12} without a
+/// data-dependent branch inside the hot loop.
+pub fn mac2_limbs_fast(
+    w1: &[u64],
+    w2: &[u64],
+    inputs: &[(i64, i64)],
+    p: Precision,
+    signed: bool,
+    out: &mut [u64],
+) {
+    let segs = inputs.len();
+    debug_assert_eq!(w1.len(), 3 * segs);
+    debug_assert_eq!(w2.len(), 3 * segs);
+    debug_assert_eq!(out.len(), 3 * segs);
+    let n = p.bits();
+    // Prep: W12 = W1 + W2 across every segment at once; P = 0.
+    let mut w12 = w1.to_vec();
+    add_lanes_limbs(&mut w12, w2, p, false);
+    out.fill(0);
+    let mut sel = vec![0u64; 3 * segs];
+    let select_bit = |sel: &mut [u64], bit: u32| {
+        for (s, &(i1, i2)) in inputs.iter().enumerate() {
+            let m1 = 0u64.wrapping_sub(((i1 >> bit) & 1) as u64);
+            let m2 = 0u64.wrapping_sub(((i2 >> bit) & 1) as u64);
+            for k in 0..3 {
+                let idx = 3 * s + k;
+                sel[idx] =
+                    (w1[idx] & m1 & !m2) | (w2[idx] & m2 & !m1) | (w12[idx] & m1 & m2);
+            }
+        }
+    };
+    // MSB: binary subtraction via InvertMsb + AddMsb when signed,
+    // plain AddShift when unsigned — exactly mac2_row_fast, widened.
+    select_bit(&mut sel, n - 1);
+    if signed {
+        invert_limbs(&mut sel);
+        add_lanes_limbs(out, &sel, p, true);
+    } else {
+        add_lanes_limbs(out, &sel, p, false);
+    }
+    shift_left_lanes_limbs(out, p);
+    // Remaining bits n-2..=0: AddShift until the LSB (plain add).
+    let mut bit = n - 1;
+    while bit > 0 {
+        bit -= 1;
+        select_bit(&mut sel, bit);
+        add_lanes_limbs(out, &sel, p, false);
+        if bit != 0 {
+            shift_left_lanes_limbs(out, p);
+        }
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -283,6 +356,60 @@ mod tests {
                             let oracle = engine_p_row(p, &w1, &w2, i1, i2, signed);
                             assert_eq!(fast, oracle);
                         }
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn wide_batch_replay_matches_per_row_fast_and_engine() {
+        // mac2_limbs_fast over K segments with independent weights and
+        // input pairs must reproduce mac2_row_fast (and the stepped
+        // engine) segment for segment — including segments whose input
+        // pair is the (0,0) phantom the batch-N tail scheduler issues.
+        let mut rng = Rng::seed_from_u64(0xba7c);
+        for p in Precision::ALL {
+            for signed in [true, false] {
+                let (lo_w, hi_w) = p.range();
+                let (lo_i, hi_i) = if signed { p.range() } else { p.range_unsigned() };
+                for round in 0..40 {
+                    let segs = 1 + (rng.next_u64() % 9) as usize;
+                    let lanes = p.lanes_per_word();
+                    let mut w1s = Vec::new();
+                    let mut w2s = Vec::new();
+                    let mut inputs = Vec::new();
+                    for s in 0..segs {
+                        let wv1: Vec<i64> = (0..lanes)
+                            .map(|_| rng.gen_range_i64(lo_w as i64, hi_w as i64))
+                            .collect();
+                        let wv2: Vec<i64> = (0..lanes)
+                            .map(|_| rng.gen_range_i64(lo_w as i64, hi_w as i64))
+                            .collect();
+                        w1s.push(sign_extend_word(pack_word(&wv1, p, true), p));
+                        w2s.push(sign_extend_word(pack_word(&wv2, p, true), p));
+                        // Every round exercises a phantom pair in one slot.
+                        if round % 4 == 0 && s == segs - 1 {
+                            inputs.push((0i64, 0i64));
+                        } else {
+                            inputs.push((
+                                rng.gen_range_i64(lo_i as i64, hi_i as i64),
+                                rng.gen_range_i64(lo_i as i64, hi_i as i64),
+                            ));
+                        }
+                    }
+                    let w1: Vec<u64> = w1s.iter().flat_map(|r| r.0).collect();
+                    let w2: Vec<u64> = w2s.iter().flat_map(|r| r.0).collect();
+                    let mut out = vec![0u64; 3 * segs];
+                    mac2_limbs_fast(&w1, &w2, &inputs, p, signed, &mut out);
+                    for s in 0..segs {
+                        let got = Row160([out[3 * s], out[3 * s + 1], out[3 * s + 2]])
+                            .normalize();
+                        let (i1, i2) = inputs[s];
+                        let want = mac2_row_fast(&w1s[s], &w2s[s], i1, i2, p, signed);
+                        assert_eq!(got, want, "p={p} signed={signed} seg {s}/{segs}");
+                        let oracle = engine_p_row(p, &w1s[s], &w2s[s], i1, i2, signed);
+                        assert_eq!(got, oracle, "p={p} signed={signed} seg {s} vs engine");
                     }
                 }
             }

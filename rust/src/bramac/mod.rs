@@ -34,7 +34,7 @@ pub mod row;
 pub mod signext;
 pub mod simd_adder;
 
-pub use block::{BramacBlock, StreamStats, Variant, MAX_LANES};
+pub use block::{BramacBlock, Mac2Op, StreamStats, Variant, MAX_BURST_OPS, MAX_LANES};
 pub use fastpath::ExecFidelity;
 pub use instr::CimInstr;
 pub use mac2::{mac2_golden, mac2_lanes_golden};

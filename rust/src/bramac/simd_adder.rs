@@ -31,23 +31,56 @@ const fn swar_masks(w: u32) -> (u64, u64) {
     }
 }
 
+/// Multi-limb SWAR field add over an arbitrarily wide lane buffer:
+/// `acc[i] += b[i]` per lane, in place, with the carry killed at every
+/// lane boundary. Lane widths (8/16/32) divide 64, so no lane straddles
+/// a limb and the per-limb loop is an exact widening of the 160-bit
+/// adder — this is the batch-N word: one buffer packs the lanes of many
+/// `Row160` segments back to back (2-bit packs 4× the lanes of 8-bit).
+///
+/// Field-wise add without cross-field carry: drop the MSBs, add
+/// (carries then cannot escape a field), restore the MSB as
+/// `a ^ b ^ carry`. Inherits the gate-level semantics through
+/// [`add_lanes`], which delegates here and is proven against the
+/// full-adder chain in `fast_path_equals_fa_chain`.
+pub fn add_lanes_limbs(acc: &mut [u64], b: &[u64], p: Precision, carry_in: bool) {
+    debug_assert_eq!(acc.len(), b.len());
+    let (h, l) = swar_masks(p.ext_bits());
+    let cin = if carry_in { l } else { 0 };
+    for (x, &y) in acc.iter_mut().zip(b) {
+        let t = (*x & !h).wrapping_add(y & !h).wrapping_add(cin);
+        *x = t ^ ((*x ^ y) & h);
+    }
+}
+
+/// Multi-limb 1-bit shift-left within each lane, in place (see
+/// [`shift_left_lanes`]): each lane's MSB falls off, a zero enters its
+/// LSB — clearing every lane LSB also kills the bit that crossed a lane
+/// (and limb) boundary, since lane widths divide 64.
+pub fn shift_left_lanes_limbs(limbs: &mut [u64], p: Precision) {
+    let (_, l) = swar_masks(p.ext_bits());
+    for x in limbs.iter_mut() {
+        *x = (*x << 1) & !l;
+    }
+}
+
+/// Multi-limb bitwise inversion, in place (see [`invert`]).
+pub fn invert_limbs(limbs: &mut [u64]) {
+    for x in limbs.iter_mut() {
+        *x = !*x;
+    }
+}
+
 /// Lane-partitioned add: each `ext_bits`-wide lane wraps independently
 /// (carry is killed at lane boundaries).
 ///
 /// §Perf iteration 2: SWAR formulation — three limb operations replace
-/// the per-lane extract/insert loop. Field-wise add without cross-field
-/// carry: drop the MSBs, add (carries then cannot escape a field), and
-/// restore the MSB as `a ^ b ^ carry`. Proven equivalent to the
-/// gate-level full-adder chain in `fast_path_equals_fa_chain`.
+/// the per-lane extract/insert loop (see [`add_lanes_limbs`]). Proven
+/// equivalent to the gate-level full-adder chain in
+/// `fast_path_equals_fa_chain`.
 pub fn add_lanes(a: &Row160, b: &Row160, p: Precision, carry_in: bool) -> Row160 {
-    let (h, l) = swar_masks(p.ext_bits());
-    let cin = if carry_in { l } else { 0 };
-    let mut out = Row160::ZERO;
-    for i in 0..3 {
-        let (x, y) = (a.0[i], b.0[i]);
-        let t = (x & !h).wrapping_add(y & !h).wrapping_add(cin);
-        out.0[i] = t ^ ((x ^ y) & h);
-    }
+    let mut out = *a;
+    add_lanes_limbs(&mut out.0, &b.0, p, carry_in);
     out.normalize()
 }
 
@@ -76,18 +109,16 @@ pub fn add_fa_chain(a: &Row160, b: &Row160, p: Precision, carry_in: bool) -> Row
 /// which simultaneously zeroes the incoming bit that crossed a lane
 /// boundary and the vacated LSB.
 pub fn shift_left_lanes(a: &Row160, p: Precision) -> Row160 {
-    let (_, l) = swar_masks(p.ext_bits());
-    Row160([
-        (a.0[0] << 1) & !l,
-        (a.0[1] << 1) & !l,
-        (a.0[2] << 1) & !l,
-    ])
-    .normalize()
+    let mut out = *a;
+    shift_left_lanes_limbs(&mut out.0, p);
+    out.normalize()
 }
 
 /// Bitwise inversion (write-back mux M2 selecting `B-bar`).
 pub fn invert(a: &Row160) -> Row160 {
-    Row160([!a.0[0], !a.0[1], !a.0[2]]).normalize()
+    let mut out = *a;
+    invert_limbs(&mut out.0);
+    out.normalize()
 }
 
 /// What the write drivers commit at the end of a compute cycle.
@@ -135,6 +166,54 @@ mod tests {
                         add_fa_chain(&a, &b, p, cin),
                         "p={p} cin={cin}"
                     );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn limb_ops_match_row160_ops_on_wide_buffers() {
+        // The batch-N invariant: a wide buffer holding K Row160
+        // segments back to back, processed once with the multi-limb
+        // primitives, equals K independent Row160 ops. The dead top-32
+        // bits of every segment's third limb are salted with garbage —
+        // bit 32 is a lane boundary at every precision, so the garbage
+        // computes in dead lanes and never reaches a live one.
+        let mut rng = Rng::seed_from_u64(0x5117);
+        for p in Precision::ALL {
+            for _ in 0..50 {
+                let k = 1 + (rng.next_u64() % 7) as usize;
+                let a: Vec<Row160> = (0..k).map(|_| random_row(&mut rng)).collect();
+                let b: Vec<Row160> = (0..k).map(|_| random_row(&mut rng)).collect();
+                let mut wa: Vec<u64> = a.iter().flat_map(|r| r.0).collect();
+                let mut wb: Vec<u64> = b.iter().flat_map(|r| r.0).collect();
+                for i in 0..k {
+                    wa[3 * i + 2] |= rng.next_u64() << 32;
+                    wb[3 * i + 2] |= rng.next_u64() << 32;
+                }
+                let seg = |buf: &[u64], i: usize| {
+                    Row160([buf[3 * i], buf[3 * i + 1], buf[3 * i + 2]]).normalize()
+                };
+                for cin in [false, true] {
+                    let mut wide = wa.clone();
+                    add_lanes_limbs(&mut wide, &wb, p, cin);
+                    for i in 0..k {
+                        assert_eq!(
+                            seg(&wide, i),
+                            add_lanes(&a[i], &b[i], p, cin),
+                            "{p} add cin={cin} seg {i}/{k}"
+                        );
+                    }
+                }
+                let mut wide = wa.clone();
+                shift_left_lanes_limbs(&mut wide, p);
+                for i in 0..k {
+                    assert_eq!(seg(&wide, i), shift_left_lanes(&a[i], p), "{p} shift seg {i}");
+                }
+                let mut wide = wa.clone();
+                invert_limbs(&mut wide);
+                for i in 0..k {
+                    assert_eq!(seg(&wide, i), invert(&a[i]), "{p} invert seg {i}");
                 }
             }
         }

@@ -28,6 +28,11 @@ pub struct PlanKey {
     /// Pool geometry: the round-robin split is per block count.
     pub blocks: usize,
     pub double_buffer: bool,
+    /// MVM batch width (1 = GEMV, 2 = batch-2, N = batch-N). Plan-
+    /// affecting: batch widths above 2 trade the double-buffer tile
+    /// split for full-depth tiles, so a plan derived for one width must
+    /// never be served for another (`batch_width_separates_plans…`).
+    pub batch: usize,
 }
 
 /// A memoized plan: the tiling plus its per-block assignment.
@@ -181,6 +186,7 @@ mod tests {
             variant: Variant::OneDA,
             blocks: 4,
             double_buffer: true,
+            batch: 1,
         }
     }
 
@@ -209,6 +215,31 @@ mod tests {
         assert_eq!(c.by_block.len(), 2, "split follows the key's geometry");
         assert_eq!(cache.len(), 3);
         assert_eq!(cache.misses(), 3);
+    }
+
+    #[test]
+    fn batch_width_separates_plans_for_the_same_shape() {
+        // The stale-plan regression: a batch-2 plan cached for a shape
+        // must never be served for a batch-N dispatch of that shape.
+        let mut cache = PlanCache::new();
+        let mut k2 = key(80, 600);
+        k2.batch = 2;
+        let a = cache.get_or_insert(k2);
+        let mut k4 = key(80, 600);
+        k4.batch = 4;
+        k4.double_buffer = false;
+        let b = cache.get_or_insert(k4);
+        assert!(!Arc::ptr_eq(&a, &b), "batch-4 must not be served the batch-2 plan");
+        assert_eq!((cache.hits(), cache.misses()), (0, 2));
+        // The batch-4 entry derives full-depth tiles, not batch-2's
+        // double-buffered ones (600 cols: 3 half-depth vs 2 full-depth
+        // column groups per row group).
+        assert_eq!(b.plan.tiles, plan_gemv(80, 600, Precision::Int4, false).tiles);
+        assert_ne!(a.plan.tiles, b.plan.tiles);
+        // Each width hits its own entry on re-dispatch.
+        assert!(Arc::ptr_eq(&a, &cache.get_or_insert(k2)));
+        assert!(Arc::ptr_eq(&b, &cache.get_or_insert(k4)));
+        assert_eq!(cache.hits(), 2);
     }
 
     #[test]

@@ -43,7 +43,9 @@
 use crate::arch::Precision;
 use crate::bramac::block::LaneBuf;
 use crate::bramac::signext::pack_word;
-use crate::bramac::{BramacBlock, ExecFidelity, StreamStats, Variant, MAX_LANES};
+use crate::bramac::{
+    BramacBlock, ExecFidelity, Mac2Op, StreamStats, Variant, MAX_BURST_OPS, MAX_LANES,
+};
 use crate::quant::IntMatrix;
 use crate::storage::resident::{ResidentModel, ResidentTile};
 
@@ -261,6 +263,7 @@ impl BlockPool {
             variant: self.variant,
             blocks: self.blocks.len(),
             double_buffer: true,
+            batch: 1,
         });
         let threads = self.threads;
         let m = w.rows;
@@ -352,6 +355,7 @@ impl BlockPool {
             variant: self.variant,
             blocks: self.blocks.len(),
             double_buffer: true,
+            batch: 2,
         });
         let threads = self.threads;
         let m = w.rows;
@@ -406,6 +410,111 @@ impl BlockPool {
         for run in runs {
             for v in 0..2 {
                 for (k, val) in run.y[v].iter().enumerate() {
+                    y[v][k] += val;
+                }
+            }
+        }
+        (y, stats)
+    }
+
+    /// Batch-N MVM: `Y = W · [x0 … x(B-1)]` in one pass over the weight
+    /// tiles, on **either** variant. Inputs are consumed in groups of
+    /// the variant's engine count (2 on [`Variant::TwoSA`] via the
+    /// §IV-A input sharing, 1 on [`Variant::OneDA`]); a short final
+    /// group pads with phantom all-zero inputs whose MAC2s run — and
+    /// are charged, the lockstep engines cannot skip a lane — but whose
+    /// accumulators are never harvested. Every tile's weight words
+    /// stream on chip **once** for all B vectors, so weight-copy
+    /// traffic is amortized B× relative to B GEMV passes. Batch widths
+    /// above 2 drop the double-buffer tile split in favor of full-depth
+    /// tiles: the per-tile compute window spans `ceil(B / engines)`
+    /// group passes, deep enough to hide loads without the idle half
+    /// (the plan difference [`PlanKey`] keys on via `batch`).
+    pub fn run_mvm_batch(
+        &mut self,
+        w: &IntMatrix,
+        xs: &[Vec<i64>],
+    ) -> (Vec<Vec<i64>>, ScheduleStats) {
+        self.run_mvm_batch_signed(w, xs, true)
+    }
+
+    /// [`BlockPool::run_mvm_batch`] with an explicit input-signedness
+    /// flag.
+    pub fn run_mvm_batch_signed(
+        &mut self,
+        w: &IntMatrix,
+        xs: &[Vec<i64>],
+        signed_inputs: bool,
+    ) -> (Vec<Vec<i64>>, ScheduleStats) {
+        assert!(!xs.is_empty(), "batch-N needs at least one input vector");
+        for x in xs {
+            assert_eq!(x.len(), w.cols);
+        }
+        self.sync_precision(w.precision);
+        let batch = xs.len();
+        let cached = self.plan_cache.get_or_insert(PlanKey {
+            m: w.rows,
+            n: w.cols,
+            precision: w.precision,
+            variant: self.variant,
+            blocks: self.blocks.len(),
+            double_buffer: batch <= 2,
+            batch,
+        });
+        let threads = self.threads;
+        let m = w.rows;
+        let p = w.precision;
+        let runs = run_sharded(&mut self.blocks, &cached.by_block, threads, |block, tiles| {
+            run_block_batchn(block, w, xs, tiles, p, m, signed_inputs)
+        });
+
+        let stats = collect_stats(cached.plan.tiles.len(), &runs);
+        let mut y = vec![vec![0i64; m]; batch];
+        for run in runs {
+            for (v, ys) in run.y.iter().enumerate() {
+                for (k, val) in ys.iter().enumerate() {
+                    y[v][k] += val;
+                }
+            }
+        }
+        (y, stats)
+    }
+
+    /// Persistent-dataflow batch-N MVM against weights pinned by
+    /// [`ResidentModel::pin`] (see [`BlockPool::run_mvm_batch`] and
+    /// [`BlockPool::run_gemv_resident`]): zero weight-copy and zero
+    /// exposed-load cycles, bit-identical outputs to the tiling path.
+    pub fn run_mvm_batch_resident(
+        &mut self,
+        rm: &ResidentModel,
+        xs: &[Vec<i64>],
+        signed_inputs: bool,
+    ) -> (Vec<Vec<i64>>, ScheduleStats) {
+        assert!(!xs.is_empty(), "batch-N needs at least one input vector");
+        assert_eq!(
+            rm.block_count(),
+            self.blocks.len(),
+            "resident layout was pinned for a different pool geometry"
+        );
+        assert_eq!(rm.variant, self.variant, "resident layout pinned for another variant");
+        for x in xs {
+            assert_eq!(x.len(), rm.n);
+        }
+        rm.debug_assert_unclobbered(self);
+        self.sync_precision(rm.precision);
+        let threads = self.threads;
+        let m = rm.m;
+        let p = rm.precision;
+        let runs = run_sharded(&mut self.blocks, rm.by_block(), threads, |block, tiles| {
+            run_block_batchn_resident(block, xs, tiles, p, m, signed_inputs)
+        });
+
+        let stats = collect_stats(rm.tile_count(), &runs);
+        debug_assert_eq!(stats.weight_copy_cycles, 0, "persistent mode must not copy");
+        let mut y = vec![vec![0i64; m]; xs.len()];
+        for run in runs {
+            for (v, ys) in run.y.iter().enumerate() {
+                for (k, val) in ys.iter().enumerate() {
                     y[v][k] += val;
                 }
             }
@@ -640,11 +749,84 @@ fn run_block_batch2_resident(
     BlockRun { y, cycles, mac2s, exposed, copy }
 }
 
+/// One block's share of a batch-N MVM (tiling dataflow): every tile's
+/// weight words stream on chip once, then **all** engine groups of the
+/// batch consume them — the copy shows up once in the tile's accounting
+/// window while the compute of `ceil(B / engines)` group passes hides
+/// it, which is exactly the amortization batching buys.
+#[allow(clippy::too_many_arguments)]
+fn run_block_batchn(
+    block: &mut BramacBlock,
+    w: &IntMatrix,
+    xs: &[Vec<i64>],
+    tiles: &[Tile],
+    p: Precision,
+    m: usize,
+    signed: bool,
+) -> BlockRun<Vec<Vec<i64>>> {
+    let engines = block.variant.dummy_arrays();
+    let groups = xs.len().div_ceil(engines);
+    let mut y = vec![vec![0i64; m]; xs.len()];
+    let mut cycles = 0u64;
+    let mut mac2s = 0u64;
+    let mut exposed = 0u64;
+    let mut copy = 0u64;
+    for tile in tiles {
+        let ((), cost) = account_tile(block, |block| {
+            load_tile_words(block, w, tile);
+            for g in 0..groups {
+                stream_tile_group(block, xs, g * engines, tile, 0, p, signed, &mut y);
+            }
+        });
+        cycles += cost.charged;
+        mac2s += cost.mac2s;
+        exposed += cost.exposed;
+        copy += cost.copy;
+    }
+    BlockRun { y, cycles, mac2s, exposed, copy }
+}
+
+/// One block's share of a persistent-mode batch-N MVM: the engine
+/// groups run against the resident words, so the accounting charges
+/// compute only.
+fn run_block_batchn_resident(
+    block: &mut BramacBlock,
+    xs: &[Vec<i64>],
+    tiles: &[ResidentTile],
+    p: Precision,
+    m: usize,
+    signed: bool,
+) -> BlockRun<Vec<Vec<i64>>> {
+    let engines = block.variant.dummy_arrays();
+    let groups = xs.len().div_ceil(engines);
+    let mut y = vec![vec![0i64; m]; xs.len()];
+    let mut cycles = 0u64;
+    let mut mac2s = 0u64;
+    let mut exposed = 0u64;
+    let mut copy = 0u64;
+    for rt in tiles {
+        let ((), cost) = account_tile(block, |block| {
+            for g in 0..groups {
+                stream_tile_group(block, xs, g * engines, &rt.tile, rt.base, p, signed, &mut y);
+            }
+        });
+        cycles += cost.charged;
+        mac2s += cost.mac2s;
+        exposed += cost.exposed;
+        copy += cost.copy;
+    }
+    BlockRun { y, cycles, mac2s, exposed, copy }
+}
+
 /// Stream one tile's MAC2s against words at `base..base+tile.cols` and
 /// add the tile's partial outputs into `y[tile.row0..]`. The
 /// accumulator flushes whenever the dot exceeds its range (§IV-C).
 /// Accumulation runs through fixed stack buffers — no per-tile or
-/// per-flush allocation (§Perf iteration 8).
+/// per-flush allocation (§Perf iteration 8) — and the MAC2s between two
+/// flushes dispatch as one [`BramacBlock::mac2_burst`], whose fast
+/// fidelity replays the whole window in a single multi-limb SWAR pass
+/// (bit-identical results and stats to one-at-a-time dispatch; the
+/// oracle fidelity simply loops).
 fn stream_tile_gemv(
     block: &mut BramacBlock,
     x: &[i64],
@@ -657,6 +839,10 @@ fn stream_tile_gemv(
     block.reset_acc();
     let mut acc = [0i64; MAX_LANES];
     let mut flush: [LaneBuf; 2] = [[0i64; MAX_LANES]; 2];
+    // Stack-allocated burst window (§Perf iteration 4: no per-MAC2
+    // Vec); a tile spans ≤ 512 words, so ≤ 256 ops always fit.
+    let mut ops = [Mac2Op::default(); MAX_BURST_OPS];
+    let mut nops = 0usize;
     let mut since_flush = 0usize;
     let mut j = 0usize;
     while j < tile.cols {
@@ -669,12 +855,13 @@ fn stream_tile_gemv(
             // input makes the second term vanish).
             (a1, 0)
         };
-        // Stack-allocated pairs (§Perf iteration 4: no per-MAC2 Vec).
-        let pairs = [(i1, i2); 2];
-        block.mac2(a1, a2, &pairs[..block.variant.dummy_arrays()], signed);
+        ops[nops] = Mac2Op { a1, a2, pairs: [(i1, i2); 2] };
+        nops += 1;
         j += 2;
         since_flush += 2;
         if since_flush >= p.max_dot_len() && j < tile.cols {
+            block.mac2_burst(&ops[..nops], signed);
+            nops = 0;
             block.read_accumulators_into(&mut flush);
             for (a, v) in acc.iter_mut().zip(flush[0]) {
                 *a += v;
@@ -683,6 +870,7 @@ fn stream_tile_gemv(
             since_flush = 0;
         }
     }
+    block.mac2_burst(&ops[..nops], signed);
     block.read_accumulators_into(&mut flush);
     for (a, v) in acc.iter_mut().zip(flush[0]) {
         *a += v;
@@ -694,7 +882,8 @@ fn stream_tile_gemv(
 
 /// Batch-2 tile streamer: both arrays share the weight words at
 /// `base..base+tile.cols`, each consumes its own input vector; partial
-/// outputs are added into `y[v][tile.row0..]`.
+/// outputs are added into `y[v][tile.row0..]`. Dispatches in burst
+/// windows like [`stream_tile_gemv`].
 #[allow(clippy::too_many_arguments)]
 fn stream_tile_batch2(
     block: &mut BramacBlock,
@@ -709,6 +898,8 @@ fn stream_tile_batch2(
     block.reset_acc();
     let mut acc = [[0i64; MAX_LANES]; 2];
     let mut bufs: [LaneBuf; 2] = [[0i64; MAX_LANES]; 2];
+    let mut ops = [Mac2Op::default(); MAX_BURST_OPS];
+    let mut nops = 0usize;
     let mut since_flush = 0usize;
     let mut flush = |block: &mut BramacBlock, acc: &mut [[i64; MAX_LANES]; 2]| {
         block.read_accumulators_into(&mut bufs);
@@ -729,19 +920,87 @@ fn stream_tile_batch2(
             let i2 = if take2 { x[tile.col0 + j + 1] } else { 0 };
             (i1, i2)
         };
-        let pairs = [pick(x0), pick(x1)];
-        block.mac2(a1, a2, &pairs, signed);
+        ops[nops] = Mac2Op { a1, a2, pairs: [pick(x0), pick(x1)] };
+        nops += 1;
         j += 2;
         since_flush += 2;
         if since_flush >= p.max_dot_len() && j < tile.cols {
+            block.mac2_burst(&ops[..nops], signed);
+            nops = 0;
             flush(block, &mut acc);
             since_flush = 0;
         }
     }
+    block.mac2_burst(&ops[..nops], signed);
     flush(block, &mut acc);
     for v in 0..2 {
         for (k, &val) in acc[v][..tile.rows].iter().enumerate() {
             y[v][tile.row0 + k] += val;
+        }
+    }
+}
+
+/// Batch-N tile streamer for one engine group: engine `e` consumes
+/// input vector `xs[first + e]`, all engines sharing the weight words
+/// at `base..base+tile.cols` (§IV-A input sharing). A group reaching
+/// past the end of the batch pads with phantom all-zero inputs — their
+/// MAC2s run and are charged (the lockstep engines cannot skip a lane)
+/// but their accumulators are never harvested. Partial outputs are
+/// added into `y[first + e][tile.row0..]`.
+#[allow(clippy::too_many_arguments)]
+fn stream_tile_group(
+    block: &mut BramacBlock,
+    xs: &[Vec<i64>],
+    first: usize,
+    tile: &Tile,
+    base: u16,
+    p: Precision,
+    signed: bool,
+    y: &mut [Vec<i64>],
+) {
+    let live = block.variant.dummy_arrays().min(xs.len() - first);
+    block.reset_acc();
+    let mut acc = [[0i64; MAX_LANES]; 2];
+    let mut bufs: [LaneBuf; 2] = [[0i64; MAX_LANES]; 2];
+    let mut ops = [Mac2Op::default(); MAX_BURST_OPS];
+    let mut nops = 0usize;
+    let mut since_flush = 0usize;
+    let mut flush = |block: &mut BramacBlock, acc: &mut [[i64; MAX_LANES]; 2]| {
+        block.read_accumulators_into(&mut bufs);
+        for v in 0..live {
+            for (a, val) in acc[v].iter_mut().zip(bufs[v]) {
+                *a += val;
+            }
+        }
+        block.reset_acc();
+    };
+    let mut j = 0usize;
+    while j < tile.cols {
+        let take2 = j + 1 < tile.cols;
+        let a1 = base + j as u16;
+        let a2 = if take2 { a1 + 1 } else { a1 };
+        let mut pairs = [(0i64, 0i64); 2];
+        for (e, pair) in pairs.iter_mut().enumerate().take(live) {
+            let x = &xs[first + e];
+            let i2 = if take2 { x[tile.col0 + j + 1] } else { 0 };
+            *pair = (x[tile.col0 + j], i2);
+        }
+        ops[nops] = Mac2Op { a1, a2, pairs };
+        nops += 1;
+        j += 2;
+        since_flush += 2;
+        if since_flush >= p.max_dot_len() && j < tile.cols {
+            block.mac2_burst(&ops[..nops], signed);
+            nops = 0;
+            flush(block, &mut acc);
+            since_flush = 0;
+        }
+    }
+    block.mac2_burst(&ops[..nops], signed);
+    flush(block, &mut acc);
+    for e in 0..live {
+        for (k, &val) in acc[e][..tile.rows].iter().enumerate() {
+            y[first + e][tile.row0 + k] += val;
         }
     }
 }
@@ -897,6 +1156,163 @@ mod tests {
                 sa.makespan_cycles + sb.makespan_cycles
             );
         }
+    }
+
+    #[test]
+    fn batchn_exact_all_precisions_variants_and_odd_tails() {
+        // Batch widths that exercise every tail shape: 1 (degenerate),
+        // 3 and 5 (odd tails on 2SA — the last group pads a phantom
+        // lane), 4 (full groups, > 2 so the full-depth tiling kicks in).
+        let mut rng = Rng::seed_from_u64(0xba7c4);
+        for variant in Variant::ALL {
+            for p in Precision::ALL {
+                for batch in [1usize, 3, 4, 5] {
+                    let (m, n) = (33, 70);
+                    let w = IntMatrix::random(&mut rng, m, n, p);
+                    let xs: Vec<Vec<i64>> = (0..batch)
+                        .map(|_| crate::quant::random_vector(&mut rng, n, p, true))
+                        .collect();
+                    let mut pool = BlockPool::new(variant, 3, p);
+                    let (ys, stats) = pool.run_mvm_batch(&w, &xs);
+                    assert_eq!(ys.len(), batch);
+                    for (v, x) in xs.iter().enumerate() {
+                        assert_eq!(
+                            ys[v],
+                            w.gemv_ref(x),
+                            "{} {p} batch={batch} vec {v}",
+                            variant.name()
+                        );
+                    }
+                    assert!(stats.makespan_cycles > 0);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn batchn_at_width_two_is_exactly_batch2() {
+        // Width-2 batch-N shares the batch-2 plan key and the group
+        // streamer degenerates to the batch-2 streamer: results AND
+        // stats must be identical, and the second dispatch must hit the
+        // same cache entry.
+        let mut rng = Rng::seed_from_u64(0x2b47);
+        let p = Precision::Int4;
+        let (m, n) = (45, 96);
+        let w = IntMatrix::random(&mut rng, m, n, p);
+        let x0 = crate::quant::random_vector(&mut rng, n, p, true);
+        let x1 = crate::quant::random_vector(&mut rng, n, p, true);
+        let mut pool = BlockPool::new(Variant::TwoSA, 2, p);
+        let ([y0, y1], s2) = pool.run_mvm_batch2(&w, &x0, &x1);
+        let (yn, sn) = pool.run_mvm_batch(&w, &[x0.clone(), x1.clone()]);
+        assert_eq!(yn, vec![y0, y1]);
+        assert_eq!(sn, s2, "width-2 batch-N must charge exactly like batch-2");
+        assert_eq!((pool.plan_cache().hits(), pool.plan_cache().misses()), (1, 1));
+    }
+
+    #[test]
+    fn batchn_amortizes_weight_copies_over_the_whole_batch() {
+        // B vectors in one batch pass stream each weight word once; B
+        // sequential GEMV passes stream it B times — and the batch
+        // makespan undercuts the sequential sum.
+        let mut rng = Rng::seed_from_u64(0xa307);
+        let p = Precision::Int4;
+        let (m, n, batch) = (40, 96, 6);
+        let w = IntMatrix::random(&mut rng, m, n, p);
+        let xs: Vec<Vec<i64>> = (0..batch)
+            .map(|_| crate::quant::random_vector(&mut rng, n, p, true))
+            .collect();
+        let mut pool = BlockPool::new(Variant::TwoSA, 2, p);
+        let (_, sb) = pool.run_mvm_batch(&w, &xs);
+        let mut seq = BlockPool::new(Variant::TwoSA, 2, p);
+        let (mut seq_copy, mut seq_makespan) = (0u64, 0u64);
+        for x in &xs {
+            let (_, s) = seq.run_gemv(&w, x);
+            seq_copy += s.weight_copy_cycles;
+            seq_makespan += s.makespan_cycles;
+        }
+        assert_eq!(sb.weight_copy_cycles * batch as u64, seq_copy);
+        assert!(
+            sb.makespan_cycles < seq_makespan,
+            "batch {} vs sequential {}",
+            sb.makespan_cycles,
+            seq_makespan
+        );
+    }
+
+    #[test]
+    fn batchn_fast_fidelity_bit_identical() {
+        let mut rng = Rng::seed_from_u64(0xfa5b);
+        for variant in Variant::ALL {
+            for p in Precision::ALL {
+                let (m, n, batch) = (33, 70, 5);
+                let w = IntMatrix::random(&mut rng, m, n, p);
+                let xs: Vec<Vec<i64>> = (0..batch)
+                    .map(|_| crate::quant::random_vector(&mut rng, n, p, true))
+                    .collect();
+                let mut oracle =
+                    BlockPool::new(variant, 3, p).with_fidelity(ExecFidelity::BitAccurate);
+                let mut fast = BlockPool::new(variant, 3, p).with_fidelity(ExecFidelity::Fast);
+                let (yo, so) = oracle.run_mvm_batch(&w, &xs);
+                let (yf, sf) = fast.run_mvm_batch(&w, &xs);
+                assert_eq!(yf, yo, "{} {p}", variant.name());
+                assert_eq!(sf, so, "{} {p}: ScheduleStats must match", variant.name());
+            }
+        }
+    }
+
+    #[test]
+    fn batchn_resident_matches_tiling_and_skips_copies() {
+        let mut rng = Rng::seed_from_u64(0x9e5b);
+        for variant in Variant::ALL {
+            let p = Precision::Int8;
+            let (m, n, batch) = (40, 64, 3);
+            let w = IntMatrix::random(&mut rng, m, n, p);
+            let xs: Vec<Vec<i64>> = (0..batch)
+                .map(|_| crate::quant::random_vector(&mut rng, n, p, true))
+                .collect();
+            let mut tiling = BlockPool::new(variant, 4, p);
+            let (y_t, s_t) = tiling.run_mvm_batch(&w, &xs);
+            let mut persistent = BlockPool::new(variant, 4, p);
+            let rm = ResidentModel::pin(&mut persistent, &w).expect("fits");
+            let (y_p, s_p) = persistent.run_mvm_batch_resident(&rm, &xs, true);
+            assert_eq!(y_p, y_t, "{}", variant.name());
+            assert_eq!(s_p.weight_copy_cycles, 0);
+            assert_eq!(s_p.exposed_load_cycles, 0);
+            assert!(s_t.weight_copy_cycles > 0);
+        }
+    }
+
+    #[test]
+    fn batchn_never_reuses_the_batch2_plan() {
+        // The stale-plan bugfix at the dispatch level: same shape,
+        // batch-2 then batch-4 — the second dispatch must miss the plan
+        // cache (PlanKey.batch) and still be exact.
+        let mut rng = Rng::seed_from_u64(0x9137);
+        let p = Precision::Int4;
+        let (m, n) = (45, 600);
+        let w = IntMatrix::random(&mut rng, m, n, p);
+        let x0 = crate::quant::random_vector(&mut rng, n, p, true);
+        let x1 = crate::quant::random_vector(&mut rng, n, p, true);
+        let mut pool = BlockPool::new(Variant::TwoSA, 2, p);
+        let _ = pool.run_mvm_batch2(&w, &x0, &x1);
+        assert_eq!((pool.plan_cache().hits(), pool.plan_cache().misses()), (0, 1));
+        let xs: Vec<Vec<i64>> = (0..4)
+            .map(|_| crate::quant::random_vector(&mut rng, n, p, true))
+            .collect();
+        let (ys, sn) = pool.run_mvm_batch(&w, &xs);
+        assert_eq!(
+            (pool.plan_cache().hits(), pool.plan_cache().misses()),
+            (0, 2),
+            "batch-4 must derive its own plan, never reuse batch-2's"
+        );
+        for (v, x) in xs.iter().enumerate() {
+            assert_eq!(ys[v], w.gemv_ref(x), "vec {v}");
+        }
+        // 600 cols at batch > 2 tile full-depth: fewer tiles than the
+        // double-buffered batch-2 plan would have produced.
+        assert_eq!(sn.tiles, 45usize.div_ceil(p.lanes_per_word()) * 2);
+        let _ = pool.run_mvm_batch(&w, &xs);
+        assert_eq!(pool.plan_cache().hits(), 1, "repeat batch-4 hits its own entry");
     }
 
     #[test]

@@ -221,6 +221,32 @@ impl ShardedPool {
         merge_batch2(w.rows, &ranges, per_shard)
     }
 
+    /// Sharded batch-N MVM: every input vector runs against every
+    /// shard's row slice in one pass (see
+    /// [`BlockPool::run_mvm_batch_signed`]). Works on both variants —
+    /// each shard's engines consume the batch in groups of the
+    /// variant's dummy-array count.
+    pub fn run_mvm_batch_signed(
+        &mut self,
+        w: &IntMatrix,
+        xs: &[Vec<i64>],
+        signed_inputs: bool,
+    ) -> (Vec<Vec<i64>>, ScheduleStats) {
+        assert!(!xs.is_empty(), "batch-N needs at least one input vector");
+        for x in xs {
+            assert_eq!(x.len(), w.cols);
+        }
+        let ranges = shard_rows(w.rows, w.precision.lanes_per_word(), self.pools.len());
+        let work: Vec<Option<IntMatrix>> = ranges
+            .iter()
+            .map(|&(row0, rows)| (rows > 0).then(|| w.row_slice(row0, rows)))
+            .collect();
+        let per_shard = run_shards(&mut self.pools, work, |pool, ws| {
+            pool.run_mvm_batch_signed(&ws, xs, signed_inputs)
+        });
+        merge_batchn(w.rows, xs.len(), &ranges, per_shard)
+    }
+
     /// Pin one row shard of `w` per pool (the persistent dataflow's
     /// one-time first touch, sharded). Fails if any shard's slice
     /// exceeds its pool's on-chip capacity.
@@ -353,6 +379,27 @@ impl ShardedPool {
         merge_batch2(sr.m, &ranges, per_shard)
     }
 
+    /// Persistent-dataflow sharded batch-N MVM (see
+    /// [`ShardedPool::run_gemv_resident`] and
+    /// [`BlockPool::run_mvm_batch_resident`]).
+    pub fn run_mvm_batch_resident(
+        &mut self,
+        sr: &ShardedResident,
+        xs: &[Vec<i64>],
+        signed_inputs: bool,
+    ) -> (Vec<Vec<i64>>, ScheduleStats) {
+        self.check_resident(sr);
+        assert!(!xs.is_empty(), "batch-N needs at least one input vector");
+        for x in xs {
+            assert_eq!(x.len(), sr.n);
+        }
+        let (ranges, work) = resident_work(sr);
+        let per_shard = run_shards(&mut self.pools, work, |pool, rm| {
+            pool.run_mvm_batch_resident(rm, xs, signed_inputs)
+        });
+        merge_batchn(sr.m, xs.len(), &ranges, per_shard)
+    }
+
     fn check_resident(&self, sr: &ShardedResident) {
         assert_eq!(
             sr.shards(),
@@ -420,6 +467,27 @@ fn merge_gemv(
         let Some((ys, s)) = result else { continue };
         debug_assert_eq!(ys.len(), rows);
         y[row0..row0 + rows].copy_from_slice(&ys);
+        stats.merge_shard(&s);
+    }
+    (y, stats)
+}
+
+/// Deterministic merge for the batch-N path (`batch` output vectors).
+fn merge_batchn(
+    m: usize,
+    batch: usize,
+    ranges: &[(usize, usize)],
+    per_shard: Vec<Option<(Vec<Vec<i64>>, ScheduleStats)>>,
+) -> (Vec<Vec<i64>>, ScheduleStats) {
+    let mut y = vec![vec![0i64; m]; batch];
+    let mut stats = ScheduleStats::default();
+    for (&(row0, rows), result) in ranges.iter().zip(per_shard) {
+        let Some((ys, s)) = result else { continue };
+        debug_assert_eq!(ys.len(), batch);
+        for (v, yv) in ys.iter().enumerate() {
+            debug_assert_eq!(yv.len(), rows);
+            y[v][row0..row0 + rows].copy_from_slice(yv);
+        }
         stats.merge_shard(&s);
     }
     (y, stats)
@@ -539,6 +607,45 @@ mod tests {
         let (yf, sf) = fast.run_gemv(&w, &x);
         assert_eq!(yf, yo, "sharded fast path must be bit-identical");
         assert_eq!(sf, so, "sharded fast stats must be bit-identical");
+    }
+
+    #[test]
+    fn sharded_batchn_matches_single_pool_and_reference() {
+        let mut rng = Rng::seed_from_u64(0xba5d);
+        for variant in Variant::ALL {
+            let p = Precision::Int4;
+            let (m, n, batch) = (53, 96, 5);
+            let w = IntMatrix::random(&mut rng, m, n, p);
+            let xs: Vec<Vec<i64>> =
+                (0..batch).map(|_| random_vector(&mut rng, n, p, true)).collect();
+            let mut single = BlockPool::new(variant, 6, p);
+            let (y_single, _) = single.run_mvm_batch(&w, &xs);
+            for (v, x) in xs.iter().enumerate() {
+                assert_eq!(y_single[v], w.gemv_ref(x), "{} vec {v}", variant.name());
+            }
+            for shards in [1usize, 2, 3] {
+                let mut sp = ShardedPool::new(variant, shards, 2, p);
+                let (y, stats) = sp.run_mvm_batch_signed(&w, &xs, true);
+                assert_eq!(y, y_single, "{} shards={shards}", variant.name());
+                assert!(stats.makespan_cycles > 0);
+            }
+        }
+    }
+
+    #[test]
+    fn sharded_batchn_resident_matches_tiling_and_skips_copies() {
+        let mut rng = Rng::seed_from_u64(0x9e5b);
+        let p = Precision::Int8;
+        let (m, n, batch) = (40, 64, 3);
+        let w = IntMatrix::random(&mut rng, m, n, p);
+        let xs: Vec<Vec<i64>> = (0..batch).map(|_| random_vector(&mut rng, n, p, true)).collect();
+        let mut sp = ShardedPool::new(Variant::TwoSA, 2, 2, p);
+        let (y_t, _) = sp.run_mvm_batch_signed(&w, &xs, true);
+        let sr = sp.pin(&w).expect("fits");
+        let (y_p, s_p) = sp.run_mvm_batch_resident(&sr, &xs, true);
+        assert_eq!(y_p, y_t, "resident batch-N must match tiling batch-N");
+        assert_eq!(s_p.weight_copy_cycles, 0);
+        assert_eq!(s_p.exposed_load_cycles, 0);
     }
 
     #[test]

@@ -24,6 +24,16 @@
 //! `K · C·R·S · P·Q == ConvLayer::macs()`, asserted by
 //! [`NetExecReport::reconcile`].
 //!
+//! Two stagings of the same lowering exist ([`Lowering`]): **im2col**
+//! materializes the full patch matrix up front, while **streaming**
+//! (implicit GEMM) walks each receptive field on the fly into reused
+//! column buffers — never more than the MVM batch width live at once
+//! ([`NetExecReport::peak_patch_cols`]). Both feed identical MVM
+//! dispatches, so outputs *and* [`ScheduleStats`] are bit-identical;
+//! with an explicit `batch > engines`, pixels dispatch through the
+//! batch-N scheduler path, which amortizes every weight-tile copy
+//! across the whole batch.
+//!
 //! # Requantization contract
 //!
 //! Between layers, raw `i64` accumulator outputs are brought back into
@@ -114,8 +124,25 @@ pub fn input_shape_for(g: &ConvLayer) -> (usize, usize, usize) {
 /// One im2col column: output pixel `(op, oq)`'s receptive field in the
 /// weight-matrix column order `(ci·R + ri)·S + si`.
 pub fn im2col_column(a: &Tensor, g: &ConvLayer, op: usize, oq: usize) -> Vec<i64> {
-    debug_assert!(op < g.p && oq < g.q);
     let mut col = Vec::with_capacity(g.c * g.r * g.s);
+    im2col_column_into(a, g, op, oq, &mut col);
+    col
+}
+
+/// Fill `col` with output pixel `(op, oq)`'s im2col column (see
+/// [`im2col_column`]) without allocating. The streaming lowering walks
+/// every receptive field of a layer through a handful of these reused
+/// buffers — at most the batch width live at once — so the full
+/// `(C·R·S) × (P·Q)` patch matrix is never materialized.
+pub fn im2col_column_into(
+    a: &Tensor,
+    g: &ConvLayer,
+    op: usize,
+    oq: usize,
+    col: &mut Vec<i64>,
+) {
+    debug_assert!(op < g.p && oq < g.q);
+    col.clear();
     for ci in 0..g.c {
         for ri in 0..g.r {
             for si in 0..g.s {
@@ -123,7 +150,6 @@ pub fn im2col_column(a: &Tensor, g: &ConvLayer, op: usize, oq: usize) -> Vec<i64
             }
         }
     }
-    col
 }
 
 /// Direct nested-loop convolution — the im2col-free reference the
@@ -348,6 +374,45 @@ pub fn analytical_config(variant: Variant, p: Precision) -> DlaConfig {
     DlaConfig::dla_bramac(variant, 1, 2, 16, 64, p)
 }
 
+/// How a conv layer's `P·Q` im2col columns are staged on the host
+/// before dispatching to the pool. Both lowerings feed the **same**
+/// MVM dispatches, so outputs and [`ScheduleStats`] are bit-identical;
+/// only peak host memory differs ([`NetExecReport::peak_patch_cols`]).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Lowering {
+    /// Materialize the whole `(C·R·S) × (P·Q)` patch matrix up front
+    /// (the original lowering — AlexNet conv1's patch matrix is ~100×
+    /// the input volume).
+    Im2col,
+    /// Implicit GEMM: walk each chunk's receptive fields on the fly
+    /// into reused column buffers ([`im2col_column_into`]), at most
+    /// the MVM batch width live at once.
+    Streaming,
+}
+
+impl Lowering {
+    pub const ALL: [Lowering; 2] = [Lowering::Im2col, Lowering::Streaming];
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Lowering::Im2col => "im2col",
+            Lowering::Streaming => "streaming",
+        }
+    }
+}
+
+impl std::str::FromStr for Lowering {
+    type Err = String;
+
+    fn from_str(s: &str) -> Result<Self, Self::Err> {
+        match s.to_ascii_lowercase().as_str() {
+            "im2col" => Ok(Lowering::Im2col),
+            "streaming" | "stream" | "implicit-gemm" => Ok(Lowering::Streaming),
+            other => Err(format!("unknown lowering '{other}' (im2col|streaming)")),
+        }
+    }
+}
+
 /// How the engine executes a network (see module docs).
 #[derive(Debug, Clone, Copy)]
 pub struct NetExecConfig {
@@ -364,6 +429,14 @@ pub struct NetExecConfig {
     pub signed_inputs: bool,
     /// Apply ReLU between layers.
     pub relu: bool,
+    /// Conv lowering strategy (see [`Lowering`]).
+    pub lowering: Lowering,
+    /// MVM batch width: output pixels per dispatch. 0 = auto, the
+    /// variant's engine count (2 on 2SA, 1 on 1DA), which reproduces
+    /// the original batch-2/GEMV pairing cycle for cycle. Widths above
+    /// the engine count amortize each weight-tile copy over
+    /// `ceil(batch/engines)` engine-group passes per tile.
+    pub batch: usize,
 }
 
 impl Default for NetExecConfig {
@@ -377,6 +450,20 @@ impl Default for NetExecConfig {
             fidelity: ExecFidelity::from_env(),
             signed_inputs: true,
             relu: true,
+            lowering: Lowering::Im2col,
+            batch: 0,
+        }
+    }
+}
+
+impl NetExecConfig {
+    /// The resolved MVM batch width (auto = the variant's engine
+    /// count, so cycle charges match the legacy batch-2/GEMV pairing).
+    pub fn batch_width(&self) -> usize {
+        if self.batch == 0 {
+            self.variant.dummy_arrays()
+        } else {
+            self.batch
         }
     }
 }
@@ -448,6 +535,14 @@ pub struct NetExecReport {
     pub dataflow: Dataflow,
     pub shards: usize,
     pub fidelity: ExecFidelity,
+    pub lowering: Lowering,
+    /// Resolved MVM batch width ([`NetExecConfig::batch_width`]).
+    pub batch: usize,
+    /// Peak im2col columns alive simultaneously on the host in any
+    /// layer — the lowering's working-set footprint: the full patch
+    /// matrix `max(P·Q)` under [`Lowering::Im2col`], at most the batch
+    /// width under [`Lowering::Streaming`].
+    pub peak_patch_cols: usize,
     pub layers: Vec<LayerReport>,
     /// Last layer's raw `i64` outputs (channel-major `K × P × Q`).
     pub output: Vec<i64>,
@@ -542,13 +637,17 @@ impl NetExecReport {
         let mut s = String::new();
         let _ = writeln!(
             s,
-            "{} @ {} on {} x {} shard(s), {} dataflow, {} fidelity",
+            "{} @ {} on {} x {} shard(s), {} dataflow, {} fidelity, \
+             {} lowering, batch-{} (peak {} patch cols)",
             self.network,
             self.precision,
             self.variant.name(),
             self.shards,
             self.dataflow.name(),
-            self.fidelity.name()
+            self.fidelity.name(),
+            self.lowering.name(),
+            self.batch,
+            self.peak_patch_cols
         );
         let _ = writeln!(
             s,
@@ -664,6 +763,63 @@ fn run_layer_on_pool(
             macs += (g.k * n) as u64;
             pix += 1;
         }
+    }
+    (y, stats, dispatches, macs)
+}
+
+/// One layer through the pool in batch-N MVM chunks. `materialized`
+/// chunks a pre-built patch matrix ([`Lowering::Im2col`] with an
+/// explicit batch width); `None` streams each chunk's columns from the
+/// activation volume into `batch` reused buffers — the implicit-GEMM
+/// lowering, whose host working set never exceeds the batch width.
+fn run_layer_batchn(
+    pool: &mut ShardedPool,
+    resident: Option<&ShardedResident>,
+    w: Option<&IntMatrix>,
+    g: &ConvLayer,
+    act: &Tensor,
+    materialized: Option<&[Vec<i64>]>,
+    batch: usize,
+    signed: bool,
+) -> (Vec<i64>, ScheduleStats, usize, u64) {
+    assert!(batch >= 1, "batch width must be at least 1");
+    let pq = g.p * g.q;
+    let n = g.c * g.r * g.s;
+    let mut y = vec![0i64; g.k * pq];
+    let mut stats = ScheduleStats::default();
+    let mut dispatches = 0usize;
+    let mut macs = 0u64;
+    let mut bufs: Vec<Vec<i64>> = match materialized {
+        Some(_) => Vec::new(),
+        None => (0..batch.min(pq)).map(|_| Vec::with_capacity(n)).collect(),
+    };
+    let mut pix = 0usize;
+    while pix < pq {
+        let chunk = batch.min(pq - pix);
+        if materialized.is_none() {
+            for (b, buf) in bufs.iter_mut().enumerate().take(chunk) {
+                let pp = pix + b;
+                im2col_column_into(act, g, pp / g.q, pp % g.q, buf);
+            }
+        }
+        let xs: &[Vec<i64>] = match materialized {
+            Some(cols) => &cols[pix..pix + chunk],
+            None => &bufs[..chunk],
+        };
+        let (ys, s) = match (resident, w) {
+            (Some(sr), _) => pool.run_mvm_batch_resident(sr, xs, signed),
+            (None, Some(w)) => pool.run_mvm_batch_signed(w, xs, signed),
+            _ => unreachable!("either a resident layout or streamed weights"),
+        };
+        for (b, col_y) in ys.iter().enumerate() {
+            for (kk, &v) in col_y.iter().enumerate() {
+                y[kk * pq + pix + b] = v;
+            }
+        }
+        stats.merge_seq(&s);
+        dispatches += 1;
+        macs += (chunk * g.k * n) as u64;
+        pix += chunk;
     }
     (y, stats, dispatches, macs)
 }
@@ -803,20 +959,34 @@ impl NetExec {
         let signed = self.cfg.signed_inputs;
         let relu = self.cfg.relu;
         let use_batch2 = self.cfg.variant == Variant::TwoSA;
+        // The legacy dispatch pairing (batch-2 on 2SA / plain GEMVs)
+        // is kept verbatim at the default config; explicit widths and
+        // the streaming lowering go through the batch-N chunker.
+        let legacy = self.cfg.batch == 0 && self.cfg.lowering == Lowering::Im2col;
+        let batch = self.cfg.batch_width();
         let acfg = analytical_config(self.cfg.variant, self.qnet.precision);
         let nlayers = self.qnet.geoms.len();
         let mut act = input.clone();
         let mut layers = Vec::with_capacity(nlayers);
         let mut output = Vec::new();
+        let mut peak_patch_cols = 0usize;
         for li in 0..nlayers {
             let g = self.qnet.geoms[li].clone();
             let (ci, hi, wi) = input_shape_for(&g);
             if li > 0 {
                 act = adapt(&act, ci, hi, wi);
             }
-            let cols: Vec<Vec<i64>> = (0..g.p * g.q)
-                .map(|pix| im2col_column(&act, &g, pix / g.q, pix % g.q))
-                .collect();
+            let pq = g.p * g.q;
+            let cols: Vec<Vec<i64>> = match self.cfg.lowering {
+                Lowering::Im2col => (0..pq)
+                    .map(|pix| im2col_column(&act, &g, pix / g.q, pix % g.q))
+                    .collect(),
+                Lowering::Streaming => Vec::new(),
+            };
+            peak_patch_cols = peak_patch_cols.max(match self.cfg.lowering {
+                Lowering::Im2col => pq,
+                Lowering::Streaming => batch.min(pq),
+            });
             let generated;
             let tiling_w: Option<&IntMatrix> = match self.cfg.dataflow {
                 Dataflow::Persistent => None,
@@ -829,15 +999,31 @@ impl NetExec {
                 },
             };
             let resident = self.residents.as_ref().map(|v| &v[li]);
-            let (y, stats, dispatches, macs) = run_layer_on_pool(
-                &mut self.pool,
-                resident,
-                tiling_w,
-                &g,
-                &cols,
-                signed,
-                use_batch2,
-            );
+            let (y, stats, dispatches, macs) = if legacy {
+                run_layer_on_pool(
+                    &mut self.pool,
+                    resident,
+                    tiling_w,
+                    &g,
+                    &cols,
+                    signed,
+                    use_batch2,
+                )
+            } else {
+                run_layer_batchn(
+                    &mut self.pool,
+                    resident,
+                    tiling_w,
+                    &g,
+                    &act,
+                    match self.cfg.lowering {
+                        Lowering::Im2col => Some(&cols),
+                        Lowering::Streaming => None,
+                    },
+                    batch,
+                    signed,
+                )
+            };
             let shift = if li + 1 == nlayers {
                 0
             } else {
@@ -875,6 +1061,9 @@ impl NetExec {
             dataflow: self.cfg.dataflow,
             shards: self.cfg.shards,
             fidelity: self.pool.fidelity(),
+            lowering: self.cfg.lowering,
+            batch,
+            peak_patch_cols,
             layers,
             output,
             total,
@@ -1038,6 +1227,111 @@ mod tests {
             assert_eq!(again.output, want);
             assert_eq!(again.total, report.total, "warm re-run must not drift");
         }
+    }
+
+    /// At the auto batch width the streaming lowering must reproduce
+    /// the legacy im2col run *exactly* — outputs, ScheduleStats, and
+    /// dispatch counts — while never staging more columns than the
+    /// batch width (the whole point of implicit GEMM).
+    #[test]
+    fn streaming_lowering_matches_im2col_bit_for_bit() {
+        let net = toy();
+        let qnet = QuantNetwork::random(&net, Precision::Int4, 0x57e4);
+        let input = qnet.random_input(0x1e4f, true);
+        for variant in Variant::ALL {
+            for dataflow in Dataflow::ALL {
+                let cfg = NetExecConfig {
+                    variant,
+                    dataflow,
+                    fidelity: ExecFidelity::Fast,
+                    ..NetExecConfig::default()
+                };
+                let base = NetExec::new(qnet.clone(), cfg)
+                    .expect("toy fits")
+                    .infer(&input)
+                    .expect("legacy im2col run");
+                let stream_cfg =
+                    NetExecConfig { lowering: Lowering::Streaming, ..cfg };
+                let stream = NetExec::new(qnet.clone(), stream_cfg)
+                    .expect("toy fits")
+                    .infer(&input)
+                    .expect("streaming run");
+                let tag = format!("{} {}", variant.name(), dataflow.name());
+                assert_eq!(stream.output, base.output, "{tag}");
+                assert_eq!(stream.total, base.total, "{tag}: stats must match");
+                for (s, b) in stream.layers.iter().zip(&base.layers) {
+                    assert_eq!(s.stats, b.stats, "{tag} layer {}", s.name);
+                    assert_eq!(s.dispatches, b.dispatches, "{tag} layer {}", s.name);
+                }
+                stream.reconcile().expect("streaming reconciliation");
+                // Peak working set: full patch matrix vs batch width.
+                let max_pq = qnet.geoms.iter().map(|g| g.p * g.q).max().unwrap();
+                assert_eq!(base.peak_patch_cols, max_pq, "{tag}");
+                assert_eq!(
+                    stream.peak_patch_cols,
+                    variant.dummy_arrays(),
+                    "{tag}: streaming must stage at most the batch width"
+                );
+                assert!(stream.peak_patch_cols < base.peak_patch_cols, "{tag}");
+            }
+        }
+    }
+
+    /// Explicit batch widths above the engine count run through the
+    /// batch-N scheduler path: outputs stay bit-identical to the host
+    /// reference, reconciliation identities hold, and (tiling) the
+    /// weight-copy total shrinks because each tile copy now feeds the
+    /// whole chunk.
+    #[test]
+    fn explicit_batchn_widths_stay_bit_identical_and_amortize_copies() {
+        let net = toy();
+        let qnet = QuantNetwork::random(&net, Precision::Int4, 0xba7c);
+        let input = qnet.random_input(0x0dd, true);
+        let want = reference_forward(&qnet, &input, true, true);
+        for lowering in Lowering::ALL {
+            let base_cfg = NetExecConfig {
+                fidelity: ExecFidelity::Fast,
+                ..NetExecConfig::default()
+            };
+            let base = NetExec::new(qnet.clone(), base_cfg)
+                .expect("toy fits")
+                .infer(&input)
+                .expect("legacy run");
+            // Batch 5 exercises odd tails on every toy layer (pq = 16,
+            // 4, 1) and engine-group phantom lanes on both variants.
+            for batch in [3usize, 5] {
+                let cfg = NetExecConfig { lowering, batch, ..base_cfg };
+                let mut engine = NetExec::new(qnet.clone(), cfg).expect("toy fits");
+                let report = engine.infer(&input).expect("batch-N run");
+                let tag = format!("{} batch-{batch}", lowering.name());
+                assert_eq!(report.output, want, "{tag}");
+                report.reconcile().expect("batch-N reconciliation");
+                assert_eq!(report.functional_macs(), net.total_macs(), "{tag}");
+                assert_eq!(report.batch, batch, "{tag}");
+                assert!(
+                    report.total.weight_copy_cycles < base.total.weight_copy_cycles,
+                    "{tag}: wider batches must amortize streamed weight copies \
+                     ({} vs legacy {})",
+                    report.total.weight_copy_cycles,
+                    base.total.weight_copy_cycles
+                );
+                match lowering {
+                    Lowering::Im2col => assert_eq!(report.peak_patch_cols, 16, "{tag}"),
+                    Lowering::Streaming => {
+                        assert_eq!(report.peak_patch_cols, batch.min(16), "{tag}")
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn lowering_parses_and_names_round_trip() {
+        for l in Lowering::ALL {
+            assert_eq!(l.name().parse::<Lowering>().unwrap(), l);
+        }
+        assert_eq!("implicit-gemm".parse::<Lowering>().unwrap(), Lowering::Streaming);
+        assert!("col2im".parse::<Lowering>().is_err());
     }
 
     #[test]

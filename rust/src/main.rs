@@ -14,7 +14,7 @@ use bramac::coordinator::batcher::submit_and_wait;
 use bramac::coordinator::server::{InferenceServer, IMAGE_ELEMS};
 use bramac::coordinator::{BlockPool, Policy, ShardedPool};
 use bramac::dla::netexec::{
-    network_by_name, reference_forward, NetExec, NetExecConfig, QuantNetwork,
+    network_by_name, reference_forward, Lowering, NetExec, NetExecConfig, QuantNetwork,
 };
 use bramac::dla::Dataflow;
 use bramac::gemv::{fig11_sweep, ComputeStyle};
@@ -22,7 +22,7 @@ use bramac::quant::{random_vector, IntMatrix};
 use bramac::report;
 use bramac::runtime::Manifest;
 use bramac::storage::ResidentModel;
-use bramac::util::bench::compare_bench_json_fidelity;
+use bramac::util::bench::gate_bench_json;
 use bramac::util::Rng;
 
 const HELP: &str = "\
@@ -47,7 +47,7 @@ experiment regeneration (paper tables & figures):
 drivers:
   gemv [--m M] [--n N] [--bits B] [--blocks K] [--variant 2sa|1da]
        [--threads T] [--dataflow tiling|persistent] [--repeat R]
-       [--shards S] [--fidelity bit-accurate|fast]
+       [--shards S] [--batch W] [--fidelity bit-accurate|fast]
                   run exact GEMVs on a simulated BRAMAC block pool
                   (T worker threads shard the tile plan; 0 = all cores).
                   persistent pins the weights on-chip once and reruns
@@ -56,29 +56,45 @@ drivers:
                   dispatch to show plan-cache + copy savings. S > 1
                   row-shards the matrix over S pools of K blocks each
                   (bit-identical to a single pool, makespan = max shard).
-                  --fidelity picks the execution engine: bit-accurate
-                  steps the eFSM micro-ops (the validation oracle,
-                  default here), fast evaluates whole words with SWAR
-                  arithmetic — bit-identical results, cycles, and stats
+                  W > 1 dispatches one batch-W MVM per repeat instead
+                  of a single GEMV: every weight tile is copied once
+                  and reused across all W input vectors (copy cycles
+                  amortize W-fold). --fidelity picks the execution
+                  engine: bit-accurate steps the eFSM micro-ops (the
+                  validation oracle, default here), fast evaluates
+                  whole words with SWAR arithmetic — bit-identical
+                  results, cycles, and stats
   infer [--model toy|alexnet|resnet34] [--precision 2|4|8]
         [--variant 2sa|1da] [--dataflow tiling|persistent]
         [--shards S] [--blocks K] [--threads T]
+        [--lowering im2col|streaming] [--batch W]
         [--fidelity bit-accurate|fast] [--seed X]
         [--unsigned] [--no-relu] [--no-verify]
                   run a whole network FUNCTIONALLY: every layer is
-                  lowered via im2col to GEMV/batch-2 dispatches on the
-                  simulated BRAMAC pools (real quantized activations,
-                  per-layer requant+ReLU), printing per-layer
-                  ScheduleStats next to the analytical dla::cycle model
-                  and checking the documented reconciliation identities.
-                  persistent pins ALL layers on-chip once (auto-grows
-                  blocks to fit when --blocks is omitted); the output
-                  is verified bit-identical to a pure-host i64
-                  reference unless --no-verify
+                  lowered to GEMV/MVM dispatches on the simulated
+                  BRAMAC pools (real quantized activations, per-layer
+                  requant+ReLU), printing per-layer ScheduleStats next
+                  to the analytical dla::cycle model and checking the
+                  documented reconciliation identities. --lowering
+                  im2col materializes each layer's full patch matrix;
+                  streaming walks receptive fields on the fly through
+                  reused column buffers (identical outputs and cycles,
+                  peak host columns = batch width instead of P*Q).
+                  --batch W dispatches W output pixels per MVM (0 =
+                  auto: the variant's engine count, reproducing the
+                  classic batch-2/GEMV pairing; W > engines amortizes
+                  weight-tile copies across the batch). persistent
+                  pins ALL layers on-chip once (auto-grows blocks to
+                  fit when --blocks is omitted); the output is
+                  verified bit-identical to a pure-host i64 reference
+                  unless --no-verify
   serve [--requests R] [--window-ms W] [--workers N]
         [--dataflow tiling|persistent] [--shards S] [--replicas G]
         [--policy round-robin|least-outstanding]
         [--fidelity bit-accurate|fast]
+        [--model toy|alexnet|resnet34] [--precision 2|4|8]
+        [--variant 2sa|1da] [--lowering im2col|streaming]
+        [--batch W] [--batch-size B] [--seed X]
                   start the batched PJRT inference server on a
                   synthetic request stream and report throughput
                   (persistent = warm sessions: weight copies charged
@@ -88,9 +104,15 @@ drivers:
                   replica groups under the chosen policy, with stats
                   broken out per shard/replica. --fidelity (default
                   fast for serving) records the execution engine;
-                  replies and attribution are identical either way
+                  replies and attribution are identical either way.
+                  --model switches to the NetExec network server: G
+                  whole-network replicas on simulated BRAMAC pools (no
+                  PJRT artifacts), batches of B requests formed per
+                  window, each reply verified bit-identical to the
+                  pure-host reference; --lowering/--batch configure
+                  the conv lowering exactly as in `infer`
   check           verify artifacts + PJRT runtime are functional
-  bench-check --current F [--baseline BENCH_pr5.json] [--tolerance 0.2]
+  bench-check --current F [--baseline BENCH_pr6.json] [--tolerance 0.2]
               [--absolute] [--fidelity bit-accurate|fast]
                   compare a bench-trajectory JSON (written by cargo
                   bench with BENCH_JSON=F) against the committed
@@ -190,18 +212,20 @@ fn cmd_gemv(args: &[String]) -> Result<()> {
     };
     let repeat = repeat.max(1);
     let shards: usize = flag(args, "--shards", 1)?;
+    let batch: usize = flag::<usize>(args, "--batch", 1)?.max(1);
     // gemv is the validation driver, so the eFSM oracle is the default;
     // serving/bench paths default to the (bit-identical) fast engine.
     let fidelity: ExecFidelity = flag(args, "--fidelity", ExecFidelity::BitAccurate)?;
     let mut rng = Rng::seed_from_u64(0xce11);
     let w = IntMatrix::random(&mut rng, m, n, p);
-    let x = random_vector(&mut rng, n, p, true);
-    let y_ref = w.gemv_ref(&x);
+    let xs: Vec<Vec<i64>> =
+        (0..batch).map(|_| random_vector(&mut rng, n, p, true)).collect();
+    let y_refs: Vec<Vec<i64>> = xs.iter().map(|v| w.gemv_ref(v)).collect();
 
     if shards > 1 {
         return gemv_sharded(
-            &w, &x, &y_ref, variant, shards, blocks, blocks_given, threads, dataflow, repeat,
-            fidelity,
+            &w, &xs, &y_refs, variant, shards, blocks, blocks_given, threads, dataflow,
+            repeat, fidelity,
         );
     }
 
@@ -227,19 +251,28 @@ fn cmd_gemv(args: &[String]) -> Result<()> {
     let mut last_stats = None;
     let mut copy_cycles = resident.as_ref().map_or(0, |rm| rm.pinned_words);
     for _ in 0..repeat {
-        let (y, stats) = match &resident {
-            Some(rm) => pool.run_gemv_resident(rm, &x, true),
-            None => pool.run_gemv(&w, &x),
+        let (ys, stats) = if batch > 1 {
+            match &resident {
+                Some(rm) => pool.run_mvm_batch_resident(rm, &xs, true),
+                None => pool.run_mvm_batch(&w, &xs),
+            }
+        } else {
+            let (y, stats) = match &resident {
+                Some(rm) => pool.run_gemv_resident(rm, &xs[0], true),
+                None => pool.run_gemv(&w, &xs[0]),
+            };
+            (vec![y], stats)
         };
-        assert_eq!(y, y_ref, "bit-accurate result must match reference");
+        assert_eq!(ys, y_refs, "bit-accurate result must match reference");
         copy_cycles += stats.weight_copy_cycles;
         last_stats = Some(stats);
     }
     let dt = t0.elapsed();
     let stats = last_stats.expect("repeat >= 1");
     println!(
-        "GEMV {m}x{n} @ {p} on {blocks}x {} blocks ({} worker threads, {} dataflow, \
+        "{} {m}x{n} @ {p} on {blocks}x {} blocks ({} worker threads, {} dataflow, \
          {} fidelity, {repeat} dispatches): bit-exact vs reference",
+        if batch > 1 { format!("batch-{batch} MVM") } else { "GEMV".to_string() },
         variant.name(),
         pool.effective_threads(),
         dataflow.name(),
@@ -277,7 +310,7 @@ fn cmd_gemv(args: &[String]) -> Result<()> {
         "  simulated time at {:.0} MHz: {:.2} µs  ({:.2} GMAC/s effective)",
         fmax,
         stats.makespan_cycles as f64 / fmax,
-        (m * n) as f64 / (stats.makespan_cycles as f64 / fmax) / 1e3
+        (m * n * batch) as f64 / (stats.makespan_cycles as f64 / fmax) / 1e3
     );
     // Contrast with the Fig 11 analytical models.
     let style = match dataflow {
@@ -299,11 +332,12 @@ fn cmd_gemv(args: &[String]) -> Result<()> {
 /// `gemv --shards S`: the row-sharded scale-out path. `blocks` counts
 /// blocks **per shard**; persistent mode grows it until every shard's
 /// row slice fits on-chip (when `--blocks` was not given explicitly).
+/// `xs.len() > 1` dispatches batch-N MVMs instead of single GEMVs.
 #[allow(clippy::too_many_arguments)]
 fn gemv_sharded(
     w: &IntMatrix,
-    x: &[i64],
-    y_ref: &[i64],
+    xs: &[Vec<i64>],
+    y_refs: &[Vec<i64>],
     variant: Variant,
     shards: usize,
     mut blocks: usize,
@@ -314,6 +348,7 @@ fn gemv_sharded(
     fidelity: ExecFidelity,
 ) -> Result<()> {
     let (m, n, p) = (w.rows, w.cols, w.precision);
+    let batch = xs.len();
     let (mut pool, resident) = match dataflow {
         Dataflow::Tiling => (
             ShardedPool::new(variant, shards, blocks, p)
@@ -337,19 +372,28 @@ fn gemv_sharded(
     let mut last_stats = None;
     let mut copy_cycles = resident.as_ref().map_or(0, |sr| sr.pinned_words);
     for _ in 0..repeat {
-        let (y, stats) = match &resident {
-            Some(sr) => pool.run_gemv_resident(sr, x, true),
-            None => pool.run_gemv(w, x),
+        let (ys, stats) = if batch > 1 {
+            match &resident {
+                Some(sr) => pool.run_mvm_batch_resident(sr, xs, true),
+                None => pool.run_mvm_batch_signed(w, xs, true),
+            }
+        } else {
+            let (y, stats) = match &resident {
+                Some(sr) => pool.run_gemv_resident(sr, &xs[0], true),
+                None => pool.run_gemv(w, &xs[0]),
+            };
+            (vec![y], stats)
         };
-        assert_eq!(y, y_ref, "sharded result must be bit-identical to the reference");
+        assert_eq!(ys, y_refs, "sharded result must be bit-identical to the reference");
         copy_cycles += stats.weight_copy_cycles;
         last_stats = Some(stats);
     }
     let dt = t0.elapsed();
     let stats = last_stats.expect("repeat >= 1");
     println!(
-        "GEMV {m}x{n} @ {p} row-sharded over {shards} shards x {blocks} {} blocks \
+        "{} {m}x{n} @ {p} row-sharded over {shards} shards x {blocks} {} blocks \
          ({} dataflow, {} fidelity, {repeat} dispatches): bit-exact vs reference",
+        if batch > 1 { format!("batch-{batch} MVM") } else { "GEMV".to_string() },
         variant.name(),
         dataflow.name(),
         fidelity.name()
@@ -378,7 +422,7 @@ fn gemv_sharded(
         "  simulated time at {:.0} MHz: {:.2} µs  ({:.2} GMAC/s effective across {} blocks)",
         fmax,
         stats.makespan_cycles as f64 / fmax,
-        (m * n) as f64 / (stats.makespan_cycles as f64 / fmax) / 1e3,
+        (m * n * batch) as f64 / (stats.makespan_cycles as f64 / fmax) / 1e3,
         pool.total_blocks()
     );
     Ok(())
@@ -396,6 +440,8 @@ fn cmd_infer(args: &[String]) -> Result<()> {
     let blocks: usize = flag(args, "--blocks", 0)?;
     let threads_flag: usize = flag(args, "--threads", 0)?;
     let fidelity: ExecFidelity = flag(args, "--fidelity", ExecFidelity::Fast)?;
+    let lowering: Lowering = flag(args, "--lowering", Lowering::Im2col)?;
+    let batch: usize = flag(args, "--batch", 0)?;
     let seed: u64 = flag(args, "--seed", 0xb4a3ac)?;
     let unsigned = args.iter().any(|a| a == "--unsigned");
     let no_relu = args.iter().any(|a| a == "--no-relu");
@@ -423,6 +469,8 @@ fn cmd_infer(args: &[String]) -> Result<()> {
         fidelity,
         signed_inputs: !unsigned,
         relu: !no_relu,
+        lowering,
+        batch,
     };
     let qnet = QuantNetwork::random(&net, p, seed);
     let input = qnet.random_input(seed ^ 0x1472, cfg.signed_inputs);
@@ -468,6 +516,13 @@ fn cmd_infer(args: &[String]) -> Result<()> {
 }
 
 fn cmd_serve(args: &[String]) -> Result<()> {
+    // `--model` switches to the NetExec network server (whole networks
+    // on simulated BRAMAC pools); without it, the legacy PJRT artifact
+    // server below.
+    let model: String = flag(args, "--model", String::new())?;
+    if !model.is_empty() {
+        return serve_network(args, &model);
+    }
     let requests: usize = flag(args, "--requests", 64)?;
     let window_ms: u64 = flag(args, "--window-ms", 10)?;
     let workers: usize = flag(args, "--workers", 1)?;
@@ -593,10 +648,111 @@ fn cmd_serve(args: &[String]) -> Result<()> {
     Ok(())
 }
 
+/// `serve --model <net>`: dynamic-batching inference over NetExec
+/// replicas — whole quantized networks on simulated BRAMAC pools, with
+/// the batch-N/streaming lowering knobs threaded through and every
+/// reply verified against the pure-host reference.
+fn serve_network(args: &[String], model: &str) -> Result<()> {
+    let requests: usize = flag(args, "--requests", 16)?;
+    let window_ms: u64 = flag(args, "--window-ms", 5)?;
+    let batch_size: usize = flag::<usize>(args, "--batch-size", 2)?.max(1);
+    let replicas: usize = flag::<usize>(args, "--replicas", 1)?.max(1);
+    let shards: usize = flag::<usize>(args, "--shards", 1)?.max(1);
+    let policy: Policy = flag(args, "--policy", Policy::LeastOutstanding)?;
+    let dataflow: Dataflow = flag(args, "--dataflow", Dataflow::Persistent)?;
+    let fidelity: ExecFidelity = flag(args, "--fidelity", ExecFidelity::Fast)?;
+    let lowering: Lowering = flag(args, "--lowering", Lowering::Streaming)?;
+    let batch: usize = flag(args, "--batch", 0)?;
+    let bits: u32 = flag(args, "--precision", 4)?;
+    let variant_s: String = flag(args, "--variant", "2sa".to_string())?;
+    let seed: u64 = flag(args, "--seed", 0xb4a3ac)?;
+    let p = Precision::from_bits(bits)
+        .ok_or_else(|| anyhow::anyhow!("--precision must be 2, 4 or 8"))?;
+    let variant = match variant_s.as_str() {
+        "2sa" => Variant::TwoSA,
+        "1da" => Variant::OneDA,
+        v => bail!("--variant must be 2sa or 1da, got {v}"),
+    };
+    let net = network_by_name(model)
+        .ok_or_else(|| anyhow::anyhow!("unknown model '{model}' (toy|alexnet|resnet34)"))?;
+    let qnet = QuantNetwork::random(&net, p, seed);
+    let cfg = NetExecConfig {
+        variant,
+        dataflow,
+        shards,
+        blocks_per_shard: 0,
+        threads: 1,
+        fidelity,
+        signed_inputs: true,
+        relu: true,
+        lowering,
+        batch,
+    };
+    let server = InferenceServer::start_network(
+        qnet.clone(),
+        cfg,
+        batch_size,
+        Duration::from_millis(window_ms),
+        replicas,
+        policy,
+    )?;
+    println!(
+        "serving {model} on {replicas} NetExec replica(s): {requests} requests, \
+         batch={batch_size} window={window_ms}ms shards={shards} policy={} \
+         dataflow={} fidelity={} lowering={} mvm-batch={}",
+        policy.name(),
+        dataflow.name(),
+        server.fidelity.name(),
+        lowering.name(),
+        cfg.batch_width()
+    );
+    let t0 = std::time::Instant::now();
+    let mut handles = Vec::new();
+    for i in 0..requests as u64 {
+        let tx = server.handle();
+        let input = qnet.random_input(seed ^ (0x5eed_0000 + i), true);
+        handles.push(std::thread::spawn(move || {
+            let reply = submit_and_wait(&tx, input.data.clone()).expect("reply");
+            (input, reply)
+        }));
+    }
+    for h in handles {
+        let (input, reply) = h.join().unwrap();
+        let want = reference_forward(&qnet, &input, true, true);
+        anyhow::ensure!(
+            reply == want,
+            "served output diverged from the pure-host reference"
+        );
+    }
+    let wall = t0.elapsed();
+    let stats = server.shutdown();
+    println!(
+        "done: {} requests in {} batches, wall {:.1} ms ({:.1} req/s) — every reply \
+         bit-identical to the host reference",
+        stats.requests,
+        stats.batches,
+        wall.as_secs_f64() * 1e3,
+        stats.requests as f64 / wall.as_secs_f64()
+    );
+    println!(
+        "  attributed DLA-BRAMAC cycles {} (weight-copy {}, {} dataflow)",
+        stats.attributed_cycles,
+        stats.weight_copy_cycles,
+        dataflow.name()
+    );
+    for (r, rep) in stats.per_replica.iter().enumerate() {
+        println!(
+            "  replica {r}: {} requests in {} batches, cycles {} (weight-copy {})",
+            rep.requests, rep.batches, rep.attributed_cycles, rep.weight_copy_cycles
+        );
+    }
+    Ok(())
+}
+
 /// `bench-check`: the CI perf-regression gate over `BENCH_*.json`
 /// trajectories (written by `cargo bench` with `BENCH_JSON=<file>`).
 fn cmd_bench_check(args: &[String]) -> Result<()> {
-    let baseline_path: String = flag(args, "--baseline", "BENCH_pr5.json".to_string())?;
+    let baseline_path: String = flag(args, "--baseline", "BENCH_pr6.json".to_string())?;
     let current_path: String = flag(args, "--current", String::new())?;
     anyhow::ensure!(!current_path.is_empty(), "--current <file> is required");
     let tolerance: f64 = flag(args, "--tolerance", 0.2)?;
@@ -620,31 +776,27 @@ fn cmd_bench_check(args: &[String]) -> Result<()> {
     };
     let baseline = read(&baseline_path)?;
     let current = read(&current_path)?;
-    // A baseline marked `"bootstrap": true` seeds the trajectory on a
-    // machine that never measured it (numbers are placeholders):
-    // comparisons are reported but never fail, and CI's uploaded
-    // artifact should be committed as the first real baseline.
-    let bootstrap = baseline.get("bootstrap").and_then(|b| b.as_bool()).unwrap_or(false);
-    let deltas = compare_bench_json_fidelity(&baseline, &current, fidelity)
+    // The gate decision (regression counting + the bootstrap bypass for
+    // placeholder baselines) lives in util::bench::gate_bench_json so
+    // it is unit-tested; this command is a printer around it.
+    let gate = gate_bench_json(&baseline, &current, tolerance, absolute, fidelity)
         .map_err(|e| anyhow::anyhow!("{e}"))?;
     anyhow::ensure!(
-        !deltas.is_empty(),
+        !gate.deltas.is_empty(),
         "no overlapping benchmarks between {baseline_path} and {current_path}{}",
         fidelity.map(|f| format!(" at fidelity {f}")).unwrap_or_default()
     );
     println!(
         "bench-check: {} overlapping benchmarks, tolerance {:.0}% ({}{}{})",
-        deltas.len(),
+        gate.deltas.len(),
         tolerance * 100.0,
         if absolute { "absolute ratios" } else { "suite-geomean normalized" },
-        if bootstrap { ", bootstrap baseline" } else { "" },
+        if gate.bootstrap { ", bootstrap baseline" } else { "" },
         fidelity.map(|f| format!(", fidelity={f}")).unwrap_or_default()
     );
-    let mut regressions = 0usize;
-    for d in &deltas {
+    for d in &gate.deltas {
         let signal = if absolute { d.ratio } else { d.normalized };
         let mark = if signal > 1.0 + tolerance {
-            regressions += 1;
             "  << REGRESSION"
         } else {
             ""
@@ -662,16 +814,18 @@ fn cmd_bench_check(args: &[String]) -> Result<()> {
             d.normalized
         );
     }
-    if regressions > 0 {
-        if bootstrap {
+    if gate.regressions > 0 {
+        if !gate.fails() {
             println!(
-                "bench-check: {regressions} regression(s) ignored — baseline is bootstrap; \
-                 commit the uploaded bench JSON as the real baseline"
+                "bench-check: {} regression(s) ignored — baseline is bootstrap; \
+                 commit the uploaded bench JSON as the real baseline",
+                gate.regressions
             );
             return Ok(());
         }
         bail!(
-            "{regressions} benchmark(s) regressed beyond {:.0}% vs {baseline_path}",
+            "{} benchmark(s) regressed beyond {:.0}% vs {baseline_path}",
+            gate.regressions,
             tolerance * 100.0
         );
     }

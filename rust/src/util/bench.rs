@@ -331,6 +331,50 @@ pub fn compare_bench_json_fidelity(
     Ok(deltas)
 }
 
+/// Outcome of the CI perf gate ([`gate_bench_json`]).
+#[derive(Debug)]
+pub struct BenchGate {
+    pub deltas: Vec<BenchDelta>,
+    /// Entries whose signal ratio exceeded `1 + tolerance`.
+    pub regressions: usize,
+    /// The baseline carried `"bootstrap": true` (placeholder numbers
+    /// recorded without a calibrated host): regressions are reported
+    /// but must never fail the build.
+    pub bootstrap: bool,
+}
+
+impl BenchGate {
+    /// `true` when the gate must fail the build: at least one
+    /// regression against a non-bootstrap (armed) baseline.
+    pub fn fails(&self) -> bool {
+        self.regressions > 0 && !self.bootstrap
+    }
+}
+
+/// Evaluate the CI perf gate over two trajectory documents: pair
+/// entries per `(suite, op, fidelity)` as [`compare_bench_json_fidelity`]
+/// does, count entries whose raw (`absolute`) or geomean-normalized
+/// ratio exceeds `1 + tolerance`, and honor the baseline's `bootstrap`
+/// marker. The `bench-check` subcommand is a thin printer around this.
+pub fn gate_bench_json(
+    baseline: &Json,
+    current: &Json,
+    tolerance: f64,
+    absolute: bool,
+    fidelity: Option<&str>,
+) -> Result<BenchGate, String> {
+    let deltas = compare_bench_json_fidelity(baseline, current, fidelity)?;
+    let bootstrap = baseline
+        .get("bootstrap")
+        .and_then(Json::as_bool)
+        .unwrap_or(false);
+    let regressions = deltas
+        .iter()
+        .filter(|d| (if absolute { d.ratio } else { d.normalized }) > 1.0 + tolerance)
+        .count();
+    Ok(BenchGate { deltas, regressions, bootstrap })
+}
+
 pub fn fmt_ns(ns: f64) -> String {
     if ns < 1e3 {
         format!("{ns:.1} ns")
@@ -479,6 +523,64 @@ mod tests {
         // The machine-speed factor alone never flags: all raw ratios
         // are >= 2 but only "a" stands out after normalization.
         assert!(deltas.iter().filter(|d| d.normalized > 1.2).count() == 1);
+    }
+
+    #[test]
+    fn armed_gate_fails_on_regression_bootstrap_only_reports() {
+        // Five ops, one regressed 1.6x: the geomean is 1.6^(1/5) ~ 1.10,
+        // so the regressed op normalizes to ~1.46 — past a 20% tolerance.
+        let entries = |slow: f64| {
+            format!(
+                r#"{{"suites": {{"s": [
+                    {{"op": "a", "wall_ns": {slow}}},
+                    {{"op": "b", "wall_ns": 100}},
+                    {{"op": "c", "wall_ns": 100}},
+                    {{"op": "d", "wall_ns": 100}},
+                    {{"op": "e", "wall_ns": 100}}
+                ]}}}}"#
+            )
+        };
+        let baseline = json::parse(&entries(100.0)).unwrap();
+        let current = json::parse(&entries(160.0)).unwrap();
+
+        // Armed (non-bootstrap) baseline + >20% regression => the gate
+        // FAILS the build.
+        let gate = gate_bench_json(&baseline, &current, 0.2, false, None).unwrap();
+        assert_eq!(gate.regressions, 1);
+        assert!(!gate.bootstrap);
+        assert!(gate.fails(), "armed baseline must fail on a >20% regression");
+
+        // The identical regression against a bootstrap baseline is
+        // reported but never fails.
+        let boot = json::parse(&format!(
+            r#"{{"bootstrap": true, {}"#,
+            entries(100.0).trim_start_matches('{')
+        ))
+        .unwrap();
+        let gate = gate_bench_json(&boot, &current, 0.2, false, None).unwrap();
+        assert_eq!(gate.regressions, 1);
+        assert!(gate.bootstrap);
+        assert!(!gate.fails(), "bootstrap baseline only reports");
+
+        // A within-tolerance drift passes the armed gate.
+        let mild = json::parse(&entries(115.0)).unwrap();
+        let gate = gate_bench_json(&baseline, &mild, 0.2, false, None).unwrap();
+        assert_eq!(gate.regressions, 0);
+        assert!(!gate.fails());
+
+        // --absolute gates on the raw ratio (no geomean normalization):
+        // a uniformly 1.3x-slower run fails absolutely, passes normalized.
+        let uniform = json::parse(&{
+            let mut s = entries(130.0);
+            s = s.replace("\"wall_ns\": 100", "\"wall_ns\": 130");
+            s
+        })
+        .unwrap();
+        let norm = gate_bench_json(&baseline, &uniform, 0.2, false, None).unwrap();
+        assert_eq!(norm.regressions, 0, "uniform slowdown normalizes away");
+        let abs = gate_bench_json(&baseline, &uniform, 0.2, true, None).unwrap();
+        assert_eq!(abs.regressions, 5);
+        assert!(abs.fails());
     }
 
     #[test]

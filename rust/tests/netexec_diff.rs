@@ -10,8 +10,8 @@ use bramac::arch::Precision;
 use bramac::bramac::{ExecFidelity, Variant};
 use bramac::coordinator::BlockPool;
 use bramac::dla::netexec::{
-    conv_ref, im2col_column, input_shape_for, reference_forward, NetExec, NetExecConfig,
-    QuantNetwork, Tensor,
+    conv_ref, im2col_column, input_shape_for, reference_forward, Lowering, NetExec,
+    NetExecConfig, QuantNetwork, Tensor,
 };
 use bramac::dla::{ConvLayer, Dataflow, Network};
 use bramac::quant::{random_vector, IntMatrix};
@@ -220,6 +220,127 @@ fn im2col_lowering_through_pool_matches_direct_convolution() {
             }
         }
         assert_eq!(lowered, direct, "{p}");
+    }
+}
+
+#[test]
+fn streaming_conv_matches_im2col_across_matrix_without_patch_matrix() {
+    // The streaming (implicit-GEMM) lowering vs the materializing
+    // im2col lowering, with the simulator in the loop: identical
+    // outputs AND identical per-layer/total ScheduleStats over
+    // {2,4,8}-bit × {2SA,1DA} × both fidelities × shards {1,3} — plus
+    // the peak-allocation property: streaming never stages more im2col
+    // columns than the MVM batch width (the toy net's conv1 patch
+    // matrix is 16 columns wide, so any full materialization trips the
+    // assertion).
+    let net = bramac::dla::toy();
+    let max_pq = net.layers.iter().map(|g| g.p * g.q).max().unwrap();
+    assert!(max_pq >= 16, "toy conv1 must keep a non-trivial patch matrix");
+    for variant in Variant::ALL {
+        for p in Precision::ALL {
+            let qnet = QuantNetwork::random(&net, p, 0x57e0);
+            let input = qnet.random_input(0x57e1, true);
+            for fidelity in [ExecFidelity::BitAccurate, ExecFidelity::Fast] {
+                for shards in SHARD_COUNTS {
+                    let ctx = format!(
+                        "{} {p} {} shards={shards}",
+                        variant.name(),
+                        fidelity.name()
+                    );
+                    let base_cfg = NetExecConfig {
+                        variant,
+                        shards,
+                        fidelity,
+                        ..NetExecConfig::default()
+                    };
+                    let base = NetExec::new(qnet.clone(), base_cfg)
+                        .expect("fits")
+                        .infer(&input)
+                        .expect("im2col forward");
+                    let stream_cfg =
+                        NetExecConfig { lowering: Lowering::Streaming, ..base_cfg };
+                    let stream = NetExec::new(qnet.clone(), stream_cfg)
+                        .expect("fits")
+                        .infer(&input)
+                        .expect("streaming forward");
+                    assert_eq!(stream.output, base.output, "{ctx}: outputs");
+                    assert_eq!(stream.total, base.total, "{ctx}: total stats");
+                    for (s, b) in stream.layers.iter().zip(&base.layers) {
+                        assert_eq!(s.stats, b.stats, "{ctx}: layer {}", s.name);
+                        assert_eq!(s.dispatches, b.dispatches, "{ctx}: layer {}", s.name);
+                    }
+                    stream.reconcile().unwrap_or_else(|e| panic!("{ctx}: {e:#}"));
+                    // Peak allocation: the full patch matrix vs at most
+                    // the batch width (= the variant's engine count).
+                    assert_eq!(base.peak_patch_cols, max_pq, "{ctx}");
+                    assert_eq!(
+                        stream.peak_patch_cols,
+                        variant.dummy_arrays(),
+                        "{ctx}: streaming staged more columns than the batch width"
+                    );
+                    assert!(stream.peak_patch_cols < max_pq, "{ctx}");
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn batchn_odd_tails_bit_identical_across_matrix() {
+    // Batch-N MVM widths that never divide the toy layers' pixel
+    // counts (pq = 16, 4, 1): the final short chunk runs phantom
+    // engine lanes and a narrower batch-N dispatch, and must stay
+    // bit-identical to the host reference across {2,4,8}-bit ×
+    // {2SA,1DA} × both fidelities × shards {1,3} × both lowerings —
+    // with every reconciliation identity (including the tiling copy
+    // identity, now over chunked dispatches) intact.
+    let net = bramac::dla::toy();
+    for variant in Variant::ALL {
+        for p in Precision::ALL {
+            let qnet = QuantNetwork::random(&net, p, 0xba70);
+            let input = qnet.random_input(0xba71, true);
+            let want = reference_forward(&qnet, &input, true, true);
+            for fidelity in [ExecFidelity::BitAccurate, ExecFidelity::Fast] {
+                for shards in SHARD_COUNTS {
+                    for lowering in Lowering::ALL {
+                        for batch in [3usize, 5] {
+                            let ctx = format!(
+                                "{} {p} {} shards={shards} {} batch={batch}",
+                                variant.name(),
+                                fidelity.name(),
+                                lowering.name()
+                            );
+                            let cfg = NetExecConfig {
+                                variant,
+                                shards,
+                                fidelity,
+                                lowering,
+                                batch,
+                                ..NetExecConfig::default()
+                            };
+                            let mut engine =
+                                NetExec::new(qnet.clone(), cfg).expect("fits");
+                            let report = engine.infer(&input).expect("forward");
+                            assert_eq!(report.output, want, "{ctx}");
+                            assert_eq!(report.batch, batch, "{ctx}");
+                            report
+                                .reconcile()
+                                .unwrap_or_else(|e| panic!("{ctx}: {e:#}"));
+                            // Chunked dispatch count: ceil(pq / batch)
+                            // per layer, exactly.
+                            for (l, g) in report.layers.iter().zip(&net.layers) {
+                                assert_eq!(
+                                    l.dispatches,
+                                    (g.p * g.q).div_ceil(batch),
+                                    "{ctx}: layer {}",
+                                    l.name
+                                );
+                            }
+                        }
+                    }
+                }
+            }
+        }
     }
 }
 

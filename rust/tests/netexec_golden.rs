@@ -58,6 +58,8 @@ fn run(
         fidelity,
         signed_inputs: signed,
         relu,
+        // Defaults keep the golden on the legacy im2col/batch-2 path.
+        ..NetExecConfig::default()
     };
     let mut engine = NetExec::new(qnet.clone(), cfg).expect("toy fits");
     let report = engine.infer(input).expect("forward pass");
