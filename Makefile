@@ -1,6 +1,6 @@
 # Convenience targets; tier-1 gate is `cargo build --release && cargo test -q`.
 
-.PHONY: build test test-rust test-python bench artifacts clean
+.PHONY: build test test-rust test-python bench artifacts lint tsan miri clean
 
 build:
 	cargo build --release
@@ -16,6 +16,23 @@ test-python:
 
 bench:
 	BENCH_QUICK=1 cargo bench
+
+# Repo-specific static analysis (tools/pallas-lint). Exits non-zero on
+# any diagnostic; suppress false positives with
+# `// pallas-lint: allow(<rule>)` + a reason (see CONTRIBUTING.md).
+lint:
+	cargo run --release -p pallas-lint -- --root .
+
+# ThreadSanitizer over the concurrency suites (needs nightly; Linux).
+tsan:
+	RUSTFLAGS="-Zsanitizer=thread" RUSTDOCFLAGS="-Zsanitizer=thread" \
+	cargo +nightly test -Zbuild-std --target x86_64-unknown-linux-gnu \
+	  --test sharded_pool --test server_load --test parallel_determinism
+
+# Miri over the SWAR limb kernels and Row160 bit-twiddling unit tests.
+miri:
+	cargo +nightly miri test -p bramac --lib -- \
+	  bramac::simd_adder bramac::row bramac::fastpath
 
 # AOT-compile the L1/L2 entry points to artifacts/*.hlo.txt (needs jax).
 artifacts:

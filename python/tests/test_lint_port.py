@@ -1,0 +1,60 @@
+"""Tests for the pallas-lint desk-check mirror.
+
+The mirror (`python/tools/pallas_lint_port.py`) and the Rust crate
+(`tools/pallas-lint`) must produce the same diagnostics on the same
+inputs; the shared contract is pinned here against the crate's own
+rule fixtures, and the real tree is required to lint clean — the same
+assertions `tools/pallas-lint/tests/rules.rs` makes natively.
+"""
+
+import os
+import subprocess
+import sys
+import unittest
+
+REPO = os.path.abspath(os.path.join(os.path.dirname(__file__), "..", ".."))
+PORT = os.path.join(REPO, "python", "tools", "pallas_lint_port.py")
+FIXTURES = os.path.join(REPO, "tools", "pallas-lint", "tests", "fixtures")
+
+
+def run_port(root):
+    proc = subprocess.run(
+        [sys.executable, PORT, "--root", root],
+        capture_output=True,
+        text=True,
+        check=False,
+    )
+    lines = [l for l in proc.stdout.splitlines() if l and not l.startswith("pallas-lint:")]
+    return proc.returncode, lines
+
+
+class LintPortFixtures(unittest.TestCase):
+    def test_bad_repo_fires_every_rule_at_the_right_span(self):
+        code, lines = run_port(os.path.join(FIXTURES, "bad_repo"))
+        self.assertEqual(code, 1)
+        spans = [l.split(" ", 1)[0] + " " + l.split("[", 1)[1].split("/", 1)[0] for l in lines]
+        self.assertEqual(
+            spans,
+            [
+                "rust/src/bramac/block.rs:5: r1",
+                "rust/src/bramac/fastpath.rs:4: r2",
+                "rust/src/dla/cycle.rs:4: r3",
+                "rust/src/dla/cycle.rs:8: r3",
+                "rust/src/coordinator/plan.rs:4: r4",
+                "rust/src/storage/mod.rs:4: r5",
+                "rust/src/coordinator/server.rs:3: r6",
+            ],
+        )
+
+    def test_clean_repo_is_silent(self):
+        code, lines = run_port(os.path.join(FIXTURES, "clean_repo"))
+        self.assertEqual((code, lines), (0, []))
+
+    def test_real_tree_lints_clean(self):
+        code, lines = run_port(REPO)
+        self.assertEqual(lines, [], "\n".join(lines))
+        self.assertEqual(code, 0)
+
+
+if __name__ == "__main__":
+    unittest.main()

@@ -1,0 +1,831 @@
+#!/usr/bin/env python3
+"""Functional port of `tools/pallas-lint` (desk-check mirror).
+
+This is the same role `bench_port.py` plays for the benches: the container
+that grew this PR has no Rust toolchain, so the lint's rule semantics are
+mirrored here 1:1 and executed against the real tree and the rule fixtures.
+The Rust crate in `tools/pallas-lint` is the authoritative implementation;
+this port must produce the same diagnostics on the same inputs.
+
+Rules (ids match the Rust crate):
+  r1 stats-merge        every field of configured stats structs is referenced
+                        in a merge-like impl (merge*, add)
+  r2 hot-path-alloc     no heap allocation in fast-path/SWAR/tile-streaming fns
+  r3 lossy-cast         truncating `as`-casts (and float->int after
+                        ceil/floor/round) in cycle-accounting files
+  r4 literal-drift      struct literals of config-like structs outside their
+                        defining file name every field or use `..`
+  r5 unwrap-ban         no unwrap/expect in library code (lock/join carve-out)
+  r6 fidelity-coverage  pub fns taking ExecFidelity are named in the
+                        differential suites
+
+Suppressions: `// pallas-lint: allow(r3)` on the same or previous line,
+`// pallas-lint: allow-file(r5)` anywhere in the file. Long rule names are
+accepted as synonyms for the ids.
+
+Usage: python3 python/tools/pallas_lint_port.py [--root DIR] [--format text|json]
+Exit status 1 iff diagnostics were emitted.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import re
+import sys
+from dataclasses import dataclass, field
+
+# ---------------------------------------------------------------------------
+# Rule table (mirrors tools/pallas-lint/src/rules.rs)
+# ---------------------------------------------------------------------------
+
+RULE_NAMES = {
+    "r1": "stats-merge",
+    "r2": "hot-path-alloc",
+    "r3": "lossy-cast",
+    "r4": "literal-drift",
+    "r5": "unwrap-ban",
+    "r6": "fidelity-coverage",
+}
+NAME_TO_ID = {v: k for k, v in RULE_NAMES.items()}
+
+# R1: structs whose every field must be referenced by a merge-like method.
+STATS_STRUCTS = [
+    "ScheduleStats",
+    "StreamStats",
+    "RouterStats",
+    "NetworkServerStats",
+    "ServerStats",
+    "ReplicaServerStats",
+]
+
+# R2: hot files (all non-test fns banned) and hot fns in mixed files.
+HOT_FILES = ["bramac/fastpath.rs", "bramac/simd_adder.rs"]
+HOT_FNS_BY_FILE = {
+    "coordinator/scheduler.rs": [
+        "stream_tile_gemv",
+        "stream_tile_batch2",
+        "stream_tile_group",
+        "account_tile",
+        "load_tile_words",
+        "pack_tile_word",
+    ],
+}
+ALLOC_IDENTS = {
+    "to_vec",
+    "collect",
+    "to_string",
+    "to_owned",
+    "with_capacity",
+}
+# ident preceded by `::`-path head: Vec::new, Box::new, String::new
+ALLOC_PATH_NEW = {"Vec", "Box", "String"}
+ALLOC_MACROS = {"vec", "format"}
+
+# R3: files audited for lossy casts.
+CAST_FILES = ["dla/cycle.rs", "coordinator/scheduler.rs", "bramac/fastpath.rs"]
+NARROW_TYPES = {"u8", "u16", "u32", "i8", "i16", "i32"}
+WIDE_INT_TYPES = {"u64", "i64", "usize", "isize"}
+FLOAT_ROUNDERS = {"ceil", "floor", "round"}
+
+# R4: config-like structs -> defining file suffix.
+LITERAL_STRUCTS = {
+    "NetExecConfig": "dla/netexec.rs",
+    "PlanKey": "coordinator/plan_cache.rs",
+}
+
+# R6: differential suites that must name every fidelity-taking pub fn.
+FIDELITY_SUITES = ["rust/tests/fidelity_diff.rs", "rust/tests/netexec_diff.rs"]
+
+SCAN_DIRS = ["rust/src", "rust/tests", "rust/benches", "examples"]
+
+# ---------------------------------------------------------------------------
+# Lexer
+# ---------------------------------------------------------------------------
+
+
+@dataclass
+class Tok:
+    kind: str  # ident | number | string | char | lifetime | punct
+    text: str
+    off: int
+
+
+@dataclass
+class Lexed:
+    toks: list
+    comments: list  # (offset, text)
+    src: str
+    line_starts: list
+
+    def line_of(self, off: int) -> int:
+        import bisect
+
+        return bisect.bisect_right(self.line_starts, off)
+
+
+IDENT_START = re.compile(r"[A-Za-z_]")
+IDENT_CONT = re.compile(r"[A-Za-z0-9_]")
+
+
+def lex(src: str) -> Lexed:
+    toks, comments = [], []
+    i, n = 0, len(src)
+    while i < n:
+        c = src[i]
+        if c in " \t\r\n":
+            i += 1
+            continue
+        if src.startswith("//", i):
+            j = src.find("\n", i)
+            j = n if j < 0 else j
+            comments.append((i, src[i:j]))
+            i = j
+            continue
+        if src.startswith("/*", i):
+            start, depth, j = i, 1, i + 2
+            while j < n and depth:
+                if src.startswith("/*", j):
+                    depth, j = depth + 1, j + 2
+                elif src.startswith("*/", j):
+                    depth, j = depth - 1, j + 2
+                else:
+                    j += 1
+            comments.append((start, src[start:j]))
+            i = j
+            continue
+        # raw strings r"..." / r#"..."# / br#"..."#
+        m = re.match(r'(?:b?r)(#*)"', src[i:])
+        if m:
+            hashes = m.group(1)
+            close = '"' + hashes
+            j = src.find(close, i + len(m.group(0)))
+            j = n if j < 0 else j + len(close)
+            toks.append(Tok("string", src[i:j], i))
+            i = j
+            continue
+        if c == '"' or src.startswith('b"', i):
+            j = i + (2 if c == "b" else 1)
+            while j < n and src[j] != '"':
+                j += 2 if src[j] == "\\" else 1
+            j += 1
+            toks.append(Tok("string", src[i:j], i))
+            i = j
+            continue
+        if c == "'" or src.startswith("b'", i):
+            k = i + (2 if c == "b" else 1)
+            # lifetime: 'ident not followed by closing quote
+            if c == "'" and k < n and IDENT_START.match(src[k]):
+                j = k
+                while j < n and IDENT_CONT.match(src[j]):
+                    j += 1
+                if j < n and src[j] == "'":
+                    toks.append(Tok("char", src[i : j + 1], i))
+                    i = j + 1
+                else:
+                    toks.append(Tok("lifetime", src[i:j], i))
+                    i = j
+                continue
+            j = k
+            if j < n and src[j] == "\\":
+                j += 2
+                while j < n and src[j] != "'":
+                    j += 1
+            elif j < n:
+                j += 1
+            j += 1  # closing quote
+            toks.append(Tok("char", src[i:j], i))
+            i = j
+            continue
+        if IDENT_START.match(c):
+            j = i + 1
+            while j < n and IDENT_CONT.match(src[j]):
+                j += 1
+            toks.append(Tok("ident", src[i:j], i))
+            i = j
+            continue
+        if c.isdigit():
+            j = i + 1
+            while j < n and (IDENT_CONT.match(src[j]) or src[j] == "."):
+                # stop floats from eating `..` or method calls `1.max(..)`
+                if src[j] == "." and (
+                    src.startswith("..", j) or (j + 1 < n and IDENT_START.match(src[j + 1]))
+                ):
+                    break
+                j += 1
+            toks.append(Tok("number", src[i:j], i))
+            i = j
+            continue
+        toks.append(Tok("punct", c, i))
+        i += 1
+    line_starts = [0]
+    for idx, ch in enumerate(src):
+        if ch == "\n":
+            line_starts.append(idx + 1)
+    return Lexed(toks, comments, src, line_starts)
+
+
+# ---------------------------------------------------------------------------
+# Item-level parse: fns (name, body token range, params, pub), structs
+# (fields), cfg(test) regions, impl targets.
+# ---------------------------------------------------------------------------
+
+
+@dataclass
+class FnDef:
+    name: str
+    off: int
+    params: list  # token texts inside ()
+    body: tuple  # (start_tok_idx, end_tok_idx) exclusive
+    is_pub: bool
+    in_test: bool
+
+
+@dataclass
+class StructDef:
+    name: str
+    off: int
+    fields: list  # (name, offset)
+
+
+@dataclass
+class Parsed:
+    fns: list
+    structs: list
+    impls: list  # (target, (start_tok, end_tok))
+    test_ranges: list  # (start_tok, end_tok) token-index ranges under cfg(test)
+
+
+def is_arrow_gt(toks, k):
+    """True when toks[k] is the `>` of `->` or `=>` (not a generic close)."""
+    return (
+        toks[k].text == ">"
+        and k > 0
+        and toks[k - 1].text in ("-", "=")
+        and toks[k - 1].off + 1 == toks[k].off
+    )
+
+
+def match_brace(toks, open_idx):
+    """Token index just past the `}` matching toks[open_idx] == `{`."""
+    depth = 0
+    for k in range(open_idx, len(toks)):
+        t = toks[k]
+        if t.kind == "punct" and t.text == "{":
+            depth += 1
+        elif t.kind == "punct" and t.text == "}":
+            depth -= 1
+            if depth == 0:
+                return k + 1
+    return len(toks)
+
+
+def parse_items(lx: Lexed) -> Parsed:
+    toks = lx.toks
+    fns, structs, impls, test_ranges = [], [], [], []
+    i = 0
+    pending_cfg_test = False
+    pending_pub = False
+    while i < len(toks):
+        t = toks[i]
+        if t.kind == "punct" and t.text == "#":
+            # attribute: #[...] or #![...]
+            j = i + 1
+            if j < len(toks) and toks[j].text == "!":
+                j += 1
+            if j < len(toks) and toks[j].text == "[":
+                depth, k = 0, j
+                while k < len(toks):
+                    if toks[k].text == "[":
+                        depth += 1
+                    elif toks[k].text == "]":
+                        depth -= 1
+                        if depth == 0:
+                            break
+                    k += 1
+                attr = [x.text for x in toks[j : k + 1]]
+                if "cfg" in attr and "test" in attr:
+                    pending_cfg_test = True
+                i = k + 1
+                continue
+        if t.kind == "ident" and t.text == "pub":
+            pending_pub = True
+            i += 1
+            # skip pub(crate) / pub(super)
+            if i < len(toks) and toks[i].text == "(":
+                while i < len(toks) and toks[i].text != ")":
+                    i += 1
+                i += 1
+            continue
+        if t.kind == "ident" and t.text == "struct":
+            name = toks[i + 1].text if i + 1 < len(toks) else ""
+            off = toks[i + 1].off if i + 1 < len(toks) else t.off
+            # find `{` (skip generics) or `;` (unit/tuple struct)
+            k = i + 2
+            gdepth = 0
+            while k < len(toks):
+                x = toks[k].text
+                if x == "<":
+                    gdepth += 1
+                elif x == ">" and not is_arrow_gt(toks, k):
+                    gdepth -= 1
+                elif gdepth == 0 and x in ("{", ";", "("):
+                    break
+                k += 1
+            fields_list = []
+            if k < len(toks) and toks[k].text == "{":
+                end = match_brace(toks, k)
+                depth = 0
+                prev = "{"
+                for m in range(k, end):
+                    x = toks[m]
+                    if x.text == "{":
+                        depth += 1
+                    elif x.text == "}":
+                        depth -= 1
+                    elif (
+                        depth == 1
+                        and x.kind == "ident"
+                        and m + 1 < end
+                        and toks[m + 1].text == ":"
+                        and prev in ("{", ",", "pub", ")", "]")
+                    ):
+                        fields_list.append((x.text, x.off))
+                    if not (x.kind == "punct" and x.text in ("#",)):
+                        prev = x.text
+                i = end
+            else:
+                i = k + 1
+            structs.append(StructDef(name, off, fields_list))
+            pending_pub = pending_cfg_test = False
+            continue
+        if t.kind == "ident" and t.text == "impl":
+            # impl [<..>] Target [for Target2] { .. }
+            k = i + 1
+            gdepth = 0
+            names = []
+            while k < len(toks) and toks[k].text != "{":
+                x = toks[k]
+                if x.text == "<":
+                    gdepth += 1
+                elif x.text == ">" and not is_arrow_gt(toks, k):
+                    gdepth -= 1
+                elif gdepth == 0 and x.kind == "ident" and x.text not in ("for",):
+                    names.append(x.text)
+                k += 1
+            end = match_brace(toks, k) if k < len(toks) else len(toks)
+            target = names[-1] if names else ""
+            impls.append((target, (k, end)))
+            if pending_cfg_test:
+                test_ranges.append((k, end))
+                pending_cfg_test = False
+            pending_pub = False
+            # recurse into impl body for fns: handled by flat scan below
+            i = k + 1  # continue scanning inside the impl body
+            continue
+        if t.kind == "ident" and t.text == "mod":
+            # cfg(test)-gated mod -> record whole range as test
+            k = i + 1
+            while k < len(toks) and toks[k].text not in ("{", ";"):
+                k += 1
+            if k < len(toks) and toks[k].text == "{":
+                end = match_brace(toks, k)
+                if pending_cfg_test:
+                    test_ranges.append((k, end))
+                    i = end
+                    pending_cfg_test = False
+                    pending_pub = False
+                    continue
+            i = k + 1
+            pending_cfg_test = pending_pub = False
+            continue
+        if t.kind == "ident" and t.text == "fn":
+            name = toks[i + 1].text if i + 1 < len(toks) else ""
+            off = toks[i + 1].off if i + 1 < len(toks) else t.off
+            # params: tokens inside the first (..) at depth 0 of <> tracking
+            k = i + 2
+            gdepth = 0
+            while k < len(toks) and not (gdepth == 0 and toks[k].text == "("):
+                if toks[k].text == "<":
+                    gdepth += 1
+                elif toks[k].text == ">" and not is_arrow_gt(toks, k):
+                    gdepth -= 1
+                k += 1
+            pdepth, p = 0, k
+            params = []
+            while p < len(toks):
+                if toks[p].text == "(":
+                    pdepth += 1
+                elif toks[p].text == ")":
+                    pdepth -= 1
+                    if pdepth == 0:
+                        break
+                if pdepth >= 1:
+                    params.append(toks[p].text)
+                p += 1
+            # body: next `{` at angle/paren depth 0 (skip where-clauses), or `;`
+            q = p + 1
+            gdepth = 0
+            while q < len(toks) and not (
+                gdepth == 0 and toks[q].text in ("{", ";")
+            ):
+                if toks[q].text == "<":
+                    gdepth += 1
+                elif toks[q].text == ">" and not is_arrow_gt(toks, q):
+                    gdepth -= 1
+                q += 1
+            if q < len(toks) and toks[q].text == "{":
+                end = match_brace(toks, q)
+                body = (q, end)
+            else:
+                body = (q, q)
+                end = q + 1
+            fns.append(FnDef(name, off, params, body, pending_pub, pending_cfg_test))
+            if pending_cfg_test:
+                test_ranges.append(body)
+            pending_pub = pending_cfg_test = False
+            i = body[0] + 1 if body[0] < body[1] else end
+            continue
+        pending_pub = False
+        pending_cfg_test = False
+        i += 1
+    return Parsed(fns, structs, impls, test_ranges)
+
+
+def in_test(parsed: Parsed, tok_idx: int) -> bool:
+    return any(s <= tok_idx < e for s, e in parsed.test_ranges)
+
+
+# ---------------------------------------------------------------------------
+# Suppressions
+# ---------------------------------------------------------------------------
+
+ALLOW_RE = re.compile(r"pallas-lint:\s*(allow|allow-file)\(([^)]*)\)")
+
+
+@dataclass
+class Suppressions:
+    by_line: dict = field(default_factory=dict)  # line -> set(rule_ids)
+    whole_file: set = field(default_factory=set)
+
+    def active(self, rule: str, line: int) -> bool:
+        if rule in self.whole_file:
+            return True
+        for ln in (line, line - 1):
+            if rule in self.by_line.get(ln, set()):
+                return True
+        return False
+
+
+def scan_suppressions(lx: Lexed) -> Suppressions:
+    sup = Suppressions()
+    for off, text in lx.comments:
+        for m in ALLOW_RE.finditer(text):
+            kind, rules = m.group(1), m.group(2)
+            ids = set()
+            for r in rules.split(","):
+                r = r.strip()
+                if r in RULE_NAMES:
+                    ids.add(r)
+                elif r in NAME_TO_ID:
+                    ids.add(NAME_TO_ID[r])
+            line = lx.line_of(off)
+            if kind == "allow-file":
+                sup.whole_file |= ids
+            else:
+                sup.by_line.setdefault(line, set()).update(ids)
+    return sup
+
+
+# ---------------------------------------------------------------------------
+# Diagnostics
+# ---------------------------------------------------------------------------
+
+
+@dataclass
+class Diag:
+    rule: str
+    path: str
+    line: int
+    msg: str
+
+    def fmt(self):
+        return f"{self.path}:{self.line}: [{self.rule}/{RULE_NAMES[self.rule]}] {self.msg}"
+
+
+class Ctx:
+    def __init__(self, root):
+        self.root = root
+        self.files = {}  # rel -> (Lexed, Parsed, Suppressions)
+        self.diags = []
+
+    def load(self):
+        for d in SCAN_DIRS:
+            base = os.path.join(self.root, d)
+            if not os.path.isdir(base):
+                continue
+            for dirpath, _dirnames, filenames in os.walk(base):
+                for fn in sorted(filenames):
+                    if not fn.endswith(".rs"):
+                        continue
+                    rel = os.path.relpath(os.path.join(dirpath, fn), self.root)
+                    with open(os.path.join(dirpath, fn), encoding="utf-8") as f:
+                        src = f.read()
+                    lx = lex(src)
+                    self.files[rel] = (lx, parse_items(lx), scan_suppressions(lx))
+
+    def emit(self, rule, rel, off_or_line, msg, is_line=False):
+        lx, _p, sup = self.files[rel]
+        line = off_or_line if is_line else lx.line_of(off_or_line)
+        if not sup.active(rule, line):
+            self.diags.append(Diag(rule, rel, line, msg))
+
+    def src_files(self):
+        return [r for r in self.files if r.startswith(os.path.join("rust", "src"))]
+
+
+# ---------------------------------------------------------------------------
+# Rules
+# ---------------------------------------------------------------------------
+
+
+def rule_r1(ctx: Ctx):
+    for name in STATS_STRUCTS:
+        sdef = None
+        srel = None
+        for rel in ctx.src_files():
+            for s in ctx.files[rel][1].structs:
+                if s.name == name:
+                    sdef, srel = s, rel
+        if sdef is None:
+            continue  # struct not present in this tree
+        merge_idents = set()
+        merge_found = False
+        for rel in ctx.src_files():
+            lx, parsed, _sup = ctx.files[rel]
+            for target, (s, e) in parsed.impls:
+                if target != name:
+                    continue
+                for fn in parsed.fns:
+                    if not (s <= tok_index_of(parsed, fn) < e):
+                        continue
+                    if fn.name.startswith("merge") or fn.name == "add":
+                        merge_found = True
+                        b0, b1 = fn.body
+                        for t in lx.toks[b0:b1]:
+                            if t.kind == "ident":
+                                merge_idents.add(t.text)
+        if not merge_found:
+            ctx.emit("r1", srel, sdef.off, f"`{name}` has no merge*/add impl")
+            continue
+        for fname, foff in sdef.fields:
+            if fname not in merge_idents:
+                ctx.emit(
+                    "r1",
+                    srel,
+                    foff,
+                    f"field `{fname}` of `{name}` is never referenced in its merge*/add impls",
+                )
+
+
+def tok_index_of(parsed: Parsed, fn: FnDef) -> int:
+    # body start token index stands in for the fn's position
+    return fn.body[0]
+
+
+def fn_is_hot(rel, fn: FnDef) -> bool:
+    rel_u = rel.replace(os.sep, "/")
+    for suffix in HOT_FILES:
+        if rel_u.endswith(suffix):
+            return True
+    for suffix, names in HOT_FNS_BY_FILE.items():
+        if rel_u.endswith(suffix) and fn.name in names:
+            return True
+    return False
+
+
+def rule_r2(ctx: Ctx):
+    for rel in ctx.src_files():
+        lx, parsed, _sup = ctx.files[rel]
+        for fn in parsed.fns:
+            if fn.in_test or in_test(parsed, fn.body[0]) or not fn_is_hot(rel, fn):
+                continue
+            b0, b1 = fn.body
+            toks = lx.toks
+            for k in range(b0, b1):
+                t = toks[k]
+                if t.kind != "ident":
+                    continue
+                prev = toks[k - 1].text if k > 0 else ""
+                prev2 = toks[k - 2].text if k > 1 else ""
+                nxt = toks[k + 1].text if k + 1 < len(toks) else ""
+                what = None
+                if t.text in ALLOC_IDENTS and prev == ".":
+                    what = f".{t.text}()"
+                elif t.text == "new" and prev == ":" and prev2 == ":":
+                    head = toks[k - 3].text if k > 2 else ""
+                    if head in ALLOC_PATH_NEW:
+                        what = f"{head}::new()"
+                elif t.text in ALLOC_MACROS and nxt == "!":
+                    what = f"{t.text}!"
+                if what:
+                    ctx.emit(
+                        "r2",
+                        rel,
+                        t.off,
+                        f"heap allocation `{what}` in hot-path fn `{fn.name}`",
+                    )
+
+
+def rule_r3(ctx: Ctx):
+    for rel in ctx.src_files():
+        rel_u = rel.replace(os.sep, "/")
+        if not any(rel_u.endswith(s) for s in CAST_FILES):
+            continue
+        lx, parsed, _sup = ctx.files[rel]
+        toks = lx.toks
+        for k, t in enumerate(toks):
+            if t.kind != "ident" or t.text != "as" or in_test(parsed, k):
+                continue
+            if k + 1 >= len(toks):
+                continue
+            ty = toks[k + 1].text
+            if ty in NARROW_TYPES:
+                ctx.emit(
+                    "r3",
+                    rel,
+                    t.off,
+                    f"truncating cast `as {ty}` in cycle-accounting code; use try_into or annotate",
+                )
+            elif ty in WIDE_INT_TYPES:
+                back = [x.text for x in toks[max(0, k - 6) : k] if x.kind == "ident"]
+                if any(b in FLOAT_ROUNDERS for b in back):
+                    ctx.emit(
+                        "r3",
+                        rel,
+                        t.off,
+                        f"float-to-int cast `as {ty}` after ceil/floor/round; annotate the rounding contract",
+                    )
+
+
+def rule_r4(ctx: Ctx):
+    # Collect the authoritative field sets from defining files.
+    defs = {}
+    for sname, def_suffix in LITERAL_STRUCTS.items():
+        for rel in ctx.files:
+            if rel.replace(os.sep, "/").endswith(def_suffix):
+                for s in ctx.files[rel][1].structs:
+                    if s.name == sname:
+                        defs[sname] = (set(f for f, _ in s.fields), rel)
+    for rel in ctx.files:
+        rel_u = rel.replace(os.sep, "/")
+        lx, parsed, _sup = ctx.files[rel]
+        toks = lx.toks
+        for sname, (fields, def_rel) in defs.items():
+            if rel == def_rel:
+                continue
+            for k, t in enumerate(toks):
+                if t.kind != "ident" or t.text != sname:
+                    continue
+                if k + 1 >= len(toks) or toks[k + 1].text != "{":
+                    continue
+                prev = toks[k - 1].text if k > 0 else ""
+                if prev in ("struct", "for", "impl", "enum", "trait", "mod"):
+                    continue
+                end = match_brace(toks, k + 1)
+                depth = 0
+                named = set()
+                has_rest = False
+                prev_txt = "{"
+                for m in range(k + 1, end):
+                    x = toks[m]
+                    if x.text == "{" or x.text == "(" or x.text == "[":
+                        depth += 1
+                    elif x.text == "}" or x.text == ")" or x.text == "]":
+                        depth -= 1
+                    elif depth == 1:
+                        if x.text == "." and m + 1 < end and toks[m + 1].text == ".":
+                            if prev_txt in ("{", ","):
+                                has_rest = True
+                        elif (
+                            x.kind == "ident"
+                            and prev_txt in ("{", ",")
+                            and m + 1 < end
+                            and toks[m + 1].text in (":", ",", "}")
+                        ):
+                            named.add(x.text)
+                    prev_txt = x.text
+                if has_rest:
+                    continue
+                missing = sorted(fields - named)
+                if missing:
+                    ctx.emit(
+                        "r4",
+                        rel,
+                        t.off,
+                        f"`{sname}` literal misses fields {json.dumps(missing)}; "
+                        "name every field or use `..`",
+                    )
+
+
+def rule_r5(ctx: Ctx):
+    for rel in ctx.src_files():
+        rel_u = rel.replace(os.sep, "/")
+        if rel_u.endswith("/main.rs") or rel_u.endswith("main.rs") and os.path.basename(rel) == "main.rs":
+            continue
+        lx, parsed, _sup = ctx.files[rel]
+        toks = lx.toks
+        for k, t in enumerate(toks):
+            if t.kind != "ident" or t.text not in ("unwrap", "expect"):
+                continue
+            prev = toks[k - 1].text if k > 0 else ""
+            nxt = toks[k + 1].text if k + 1 < len(toks) else ""
+            if prev != "." or nxt != "(":
+                continue
+            if in_test(parsed, k):
+                continue
+            # carve-out: .lock().unwrap() / .join().unwrap()
+            if (
+                k >= 4
+                and toks[k - 2].text == ")"
+                and toks[k - 3].text == "("
+                and toks[k - 4].text in ("lock", "join")
+            ):
+                continue
+            ctx.emit(
+                "r5",
+                rel,
+                t.off,
+                f"`.{t.text}()` in library code; return Result/Option or annotate the invariant",
+            )
+
+
+def rule_r6(ctx: Ctx):
+    suite_idents = set()
+    for suite in FIDELITY_SUITES:
+        rel = suite.replace("/", os.sep)
+        if rel in ctx.files:
+            for t in ctx.files[rel][0].toks:
+                if t.kind == "ident":
+                    suite_idents.add(t.text)
+    if not suite_idents:
+        return
+    for rel in ctx.src_files():
+        lx, parsed, _sup = ctx.files[rel]
+        for fn in parsed.fns:
+            if not fn.is_pub or fn.in_test or in_test(parsed, fn.body[0]):
+                continue
+            if "ExecFidelity" not in fn.params:
+                continue
+            if fn.name not in suite_idents:
+                ctx.emit(
+                    "r6",
+                    rel,
+                    fn.off,
+                    f"pub fn `{fn.name}` takes ExecFidelity but is not exercised by "
+                    "tests/fidelity_diff.rs or tests/netexec_diff.rs",
+                )
+
+
+RULES = [rule_r1, rule_r2, rule_r3, rule_r4, rule_r5, rule_r6]
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--root", default=".")
+    ap.add_argument("--format", choices=["text", "json"], default="text")
+    args = ap.parse_args()
+    ctx = Ctx(args.root)
+    ctx.load()
+    for rule in RULES:
+        rule(ctx)
+    ctx.diags.sort(key=lambda d: (d.rule, d.path, d.line))
+    if args.format == "json":
+        print(
+            json.dumps(
+                {
+                    "diagnostics": [
+                        {
+                            "rule": d.rule,
+                            "name": RULE_NAMES[d.rule],
+                            "file": d.path.replace(os.sep, "/"),
+                            "line": d.line,
+                            "message": d.msg,
+                        }
+                        for d in ctx.diags
+                    ],
+                    "count": len(ctx.diags),
+                },
+                indent=2,
+            )
+        )
+    else:
+        for d in ctx.diags:
+            print(d.fmt())
+        print(f"pallas-lint: {len(ctx.diags)} diagnostic(s)")
+    sys.exit(1 if ctx.diags else 0)
+
+
+if __name__ == "__main__":
+    main()

@@ -21,7 +21,9 @@ use crate::arch::{FreqModel, Precision};
 
 use super::dummy_array::Row;
 use super::efsm::{compute_schedule, mac2_compute_cycles, Engine, Mac2Inputs};
-use super::fastpath::{accumulate_row, mac2_limbs_fast, mac2_row_fast, ExecFidelity};
+use super::fastpath::{
+    accumulate_row, mac2_limbs_fast, mac2_row_fast, BurstScratch, ExecFidelity,
+};
 use super::instr::CimInstr;
 use super::row::Row160;
 use super::signext::sign_extend_word;
@@ -162,6 +164,18 @@ pub struct StreamStats {
 }
 
 impl StreamStats {
+    /// Fold another block's counters into this one — the plain
+    /// cross-block sum behind [`crate::coordinator::BlockPool::stream_stats`].
+    /// Every `StreamStats` field must be folded here: adding a field
+    /// without merging it is a pallas-lint r1 (stats-merge) failure.
+    pub fn merge(&mut self, other: &StreamStats) {
+        self.mac2_count += other.mac2_count;
+        self.main_cycles += other.main_cycles;
+        self.main_busy_cycles += other.main_busy_cycles;
+        self.acc_readouts += other.acc_readouts;
+        self.app_write_words += other.app_write_words;
+    }
+
     /// Fraction of CIM time during which the main ports stayed free.
     pub fn port_free_fraction(&self) -> f64 {
         if self.main_cycles == 0 {
@@ -196,6 +210,10 @@ pub struct BramacBlock {
     /// static tables now (§Perf iteration 8; iteration 1's per-block
     /// cache became redundant), shared across engines and fidelities.
     fidelity: ExecFidelity,
+    /// Reusable staging buffers for the fast-fidelity burst path; they
+    /// grow to the largest burst seen, keeping steady-state
+    /// [`BramacBlock::mac2_burst`] allocation-free.
+    burst: BurstScratch,
 }
 
 impl BramacBlock {
@@ -212,6 +230,7 @@ impl BramacBlock {
             dummy_cycles: 0,
             warm: false,
             fidelity: ExecFidelity::BitAccurate,
+            burst: BurstScratch::default(),
         }
     }
 
@@ -442,9 +461,11 @@ impl BramacBlock {
         }
         let p = self.precision;
         let segs = ops.len() * engines;
-        let mut w1 = vec![0u64; 3 * segs];
-        let mut w2 = vec![0u64; 3 * segs];
-        let mut inputs = Vec::with_capacity(segs);
+        // The staging buffers persist on the block (moved out while the
+        // main array is read, moved back after) so repeated bursts reuse
+        // one steadily-sized set of heap buffers.
+        let mut scratch = std::mem::take(&mut self.burst);
+        scratch.begin(segs);
         for (o, op) in ops.iter().enumerate() {
             // One read + sign-extend per op, duplicated across the
             // engine segments (2SA shares one weight copy between its
@@ -453,13 +474,13 @@ impl BramacBlock {
             let r2 = sign_extend_word(self.read_word(op.a2), p);
             for e in 0..engines {
                 let s = o * engines + e;
-                w1[3 * s..3 * s + 3].copy_from_slice(&r1.0);
-                w2[3 * s..3 * s + 3].copy_from_slice(&r2.0);
-                inputs.push(op.pairs[e]);
+                scratch.w1[3 * s..3 * s + 3].copy_from_slice(&r1.0);
+                scratch.w2[3 * s..3 * s + 3].copy_from_slice(&r2.0);
+                scratch.inputs.push(op.pairs[e]);
             }
         }
-        let mut out = vec![0u64; 3 * segs];
-        mac2_limbs_fast(&w1, &w2, &inputs, p, signed, &mut out);
+        mac2_limbs_fast(p, signed, &mut scratch);
+        let out = &scratch.out;
         let last = ops.len() - 1;
         for (e_idx, e) in self.engines.iter_mut().enumerate() {
             let mut acc = e.array.peek(Row::Acc);
@@ -474,6 +495,7 @@ impl BramacBlock {
             }
             e.array.poke(Row::Acc, acc);
         }
+        self.burst = scratch;
         let l = mac2_compute_cycles(p, signed);
         for _ in 0..ops.len() {
             self.charge_mac2_cycles(l);

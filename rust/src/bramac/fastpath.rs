@@ -114,6 +114,7 @@ impl std::str::FromStr for ExecFidelity {
                 Ok(ExecFidelity::BitAccurate)
             }
             "fast" => Ok(ExecFidelity::Fast),
+            // Cold parse-error path, not MAC2 work. pallas-lint: allow(r2)
             other => Err(format!("unknown fidelity '{other}' (bit-accurate|fast)")),
         }
     }
@@ -195,36 +196,36 @@ pub fn accumulate_row(acc: &Row160, p_row: &Row160, p: Precision) -> Row160 {
 /// 2-bit word amortizes the replay over 4× the lanes of an 8-bit word,
 /// which is the whole point of the lane-count-from-precision layout.
 ///
-/// `w1`/`w2`/`out` are `3 * inputs.len()` limbs; `out` receives each
-/// segment's P row (`P = W1*I1 + W2*I2` per lane). Per-segment results
-/// are bit-identical to [`mac2_row_fast`] (and hence to the stepped
-/// eFSM): every op applies the identical per-lane function in the
-/// identical order, and the multi-limb primitives kill carries at every
-/// lane boundary, so segments cannot interact. Dead bits (the top 32 of
-/// every third limb) accumulate garbage in dead lanes only — callers
-/// mask them via `Row160::normalize` on extraction.
+/// The burst is staged through a caller-owned [`BurstScratch`]: the
+/// caller fills `w1`/`w2` (3 limbs per segment) and `inputs` (one pair
+/// per segment), and each segment's P row (`P = W1*I1 + W2*I2` per
+/// lane) lands in `out`. Per-segment results are bit-identical to
+/// [`mac2_row_fast`] (and hence to the stepped eFSM): every op applies
+/// the identical per-lane function in the identical order, and the
+/// multi-limb primitives kill carries at every lane boundary, so
+/// segments cannot interact. Dead bits (the top 32 of every third limb)
+/// accumulate garbage in dead lanes only — callers mask them via
+/// `Row160::normalize` on extraction.
 ///
 /// The input-bit demux of [`select`] is evaluated branchlessly per
 /// segment: `m = 0u64 - bit` masks blend {0, W1, W2, W12} without a
 /// data-dependent branch inside the hot loop.
-pub fn mac2_limbs_fast(
-    w1: &[u64],
-    w2: &[u64],
-    inputs: &[(i64, i64)],
-    p: Precision,
-    signed: bool,
-    out: &mut [u64],
-) {
+pub fn mac2_limbs_fast(p: Precision, signed: bool, scratch: &mut BurstScratch) {
+    let BurstScratch { w1, w2, inputs, out, w12, sel } = scratch;
     let segs = inputs.len();
     debug_assert_eq!(w1.len(), 3 * segs);
     debug_assert_eq!(w2.len(), 3 * segs);
     debug_assert_eq!(out.len(), 3 * segs);
     let n = p.bits();
-    // Prep: W12 = W1 + W2 across every segment at once; P = 0.
-    let mut w12 = w1.to_vec();
-    add_lanes_limbs(&mut w12, w2, p, false);
+    // Prep: W12 = W1 + W2 across every segment at once; P = 0. The
+    // scratch buffers grow to the largest burst seen and are then
+    // reused, so the steady-state loop never touches the heap.
+    w12.clear();
+    w12.extend_from_slice(w1);
+    add_lanes_limbs(w12, w2, p, false);
     out.fill(0);
-    let mut sel = vec![0u64; 3 * segs];
+    sel.clear();
+    sel.resize(3 * segs, 0);
     let select_bit = |sel: &mut [u64], bit: u32| {
         for (s, &(i1, i2)) in inputs.iter().enumerate() {
             let m1 = 0u64.wrapping_sub(((i1 >> bit) & 1) as u64);
@@ -238,23 +239,59 @@ pub fn mac2_limbs_fast(
     };
     // MSB: binary subtraction via InvertMsb + AddMsb when signed,
     // plain AddShift when unsigned — exactly mac2_row_fast, widened.
-    select_bit(&mut sel, n - 1);
+    select_bit(sel, n - 1);
     if signed {
-        invert_limbs(&mut sel);
-        add_lanes_limbs(out, &sel, p, true);
+        invert_limbs(sel);
+        add_lanes_limbs(out, sel, p, true);
     } else {
-        add_lanes_limbs(out, &sel, p, false);
+        add_lanes_limbs(out, sel, p, false);
     }
     shift_left_lanes_limbs(out, p);
     // Remaining bits n-2..=0: AddShift until the LSB (plain add).
     let mut bit = n - 1;
     while bit > 0 {
         bit -= 1;
-        select_bit(&mut sel, bit);
-        add_lanes_limbs(out, &sel, p, false);
+        select_bit(sel, bit);
+        add_lanes_limbs(out, sel, p, false);
         if bit != 0 {
             shift_left_lanes_limbs(out, p);
         }
+    }
+}
+
+/// Reusable staging buffers for [`mac2_limbs_fast`] /
+/// [`crate::bramac::BramacBlock::mac2_burst`]. The burst path runs once
+/// per tile window on the serving hot loop, so its buffers live here
+/// and grow monotonically to the largest burst seen — steady-state
+/// dispatch performs no heap allocation (pallas-lint r2 guards the
+/// functions that stage through this).
+#[derive(Debug, Clone, Default)]
+pub struct BurstScratch {
+    /// Sign-extended W1 limbs, 3 per segment (caller-filled).
+    pub w1: Vec<u64>,
+    /// Sign-extended W2 limbs, 3 per segment (caller-filled).
+    pub w2: Vec<u64>,
+    /// One `(i1, i2)` input pair per segment (caller-filled).
+    pub inputs: Vec<(i64, i64)>,
+    /// Each segment's P row after [`mac2_limbs_fast`] (callee-filled).
+    pub out: Vec<u64>,
+    /// Internal: W1+W2 per segment.
+    w12: Vec<u64>,
+    /// Internal: the demuxed {0, W1, W2, W12} row per input bit.
+    sel: Vec<u64>,
+}
+
+impl BurstScratch {
+    /// Reset for a burst of `segs` segments: `w1`/`w2`/`out` are zeroed
+    /// at `3 * segs` limbs, `inputs` is emptied for pushing.
+    pub fn begin(&mut self, segs: usize) {
+        self.w1.clear();
+        self.w1.resize(3 * segs, 0);
+        self.w2.clear();
+        self.w2.resize(3 * segs, 0);
+        self.out.clear();
+        self.out.resize(3 * segs, 0);
+        self.inputs.clear();
     }
 }
 
@@ -398,10 +435,13 @@ mod tests {
                             ));
                         }
                     }
-                    let w1: Vec<u64> = w1s.iter().flat_map(|r| r.0).collect();
-                    let w2: Vec<u64> = w2s.iter().flat_map(|r| r.0).collect();
-                    let mut out = vec![0u64; 3 * segs];
-                    mac2_limbs_fast(&w1, &w2, &inputs, p, signed, &mut out);
+                    let mut scratch = BurstScratch::default();
+                    scratch.begin(segs);
+                    scratch.w1 = w1s.iter().flat_map(|r| r.0).collect();
+                    scratch.w2 = w2s.iter().flat_map(|r| r.0).collect();
+                    scratch.inputs = inputs.clone();
+                    mac2_limbs_fast(p, signed, &mut scratch);
+                    let out = &scratch.out;
                     for s in 0..segs {
                         let got = Row160([out[3 * s], out[3 * s + 1], out[3 * s + 2]])
                             .normalize();

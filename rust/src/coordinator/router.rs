@@ -81,6 +81,22 @@ pub struct RouterStats {
     pub per_replica: Vec<ReplicaStats>,
 }
 
+impl RouterStats {
+    /// Fold one replica's accounting into the aggregate and append it
+    /// to the breakdown — shared by [`Router::stats`] and
+    /// [`NetworkRouter::stats`] so the two can never diverge. Every
+    /// aggregated `RouterStats` field must be folded here: adding one
+    /// without merging it is a pallas-lint r1 (stats-merge) failure.
+    /// (`outstanding_cycles` is backlog, not completed work, so it
+    /// stays per-replica only.)
+    pub fn merge_replica(&mut self, replica: ReplicaStats) {
+        self.requests += replica.requests;
+        self.busy_cycles += replica.busy_cycles;
+        self.weight_copy_cycles += replica.weight_copy_cycles;
+        self.per_replica.push(replica);
+    }
+}
+
 struct Replica {
     pool: ShardedPool,
     resident: ShardedResident,
@@ -186,14 +202,11 @@ impl Router {
 
     /// Aggregated accounting with the per-replica breakdown.
     pub fn stats(&self) -> RouterStats {
-        let per_replica: Vec<ReplicaStats> =
-            self.replicas.iter().map(|r| r.stats).collect();
-        RouterStats {
-            requests: per_replica.iter().map(|r| r.requests).sum(),
-            busy_cycles: per_replica.iter().map(|r| r.busy_cycles).sum(),
-            weight_copy_cycles: per_replica.iter().map(|r| r.weight_copy_cycles).sum(),
-            per_replica,
+        let mut stats = RouterStats::default();
+        for rep in &self.replicas {
+            stats.merge_replica(rep.stats);
         }
+        stats
     }
 }
 
@@ -297,14 +310,11 @@ impl NetworkRouter {
     }
 
     pub fn stats(&self) -> RouterStats {
-        let per_replica: Vec<ReplicaStats> =
-            self.replicas.iter().map(|r| r.stats).collect();
-        RouterStats {
-            requests: per_replica.iter().map(|r| r.requests).sum(),
-            busy_cycles: per_replica.iter().map(|r| r.busy_cycles).sum(),
-            weight_copy_cycles: per_replica.iter().map(|r| r.weight_copy_cycles).sum(),
-            per_replica,
+        let mut stats = RouterStats::default();
+        for rep in &self.replicas {
+            stats.merge_replica(rep.stats);
         }
+        stats
     }
 }
 

@@ -41,7 +41,7 @@
 //! [`super::workers::auto_threads`].
 
 use crate::arch::Precision;
-use crate::bramac::block::LaneBuf;
+use crate::bramac::block::{LaneBuf, MAIN_WORDS};
 use crate::bramac::signext::pack_word;
 use crate::bramac::{
     BramacBlock, ExecFidelity, Mac2Op, StreamStats, Variant, MAX_BURST_OPS, MAX_LANES,
@@ -177,6 +177,18 @@ impl BlockPool {
 
     pub fn threads(&self) -> usize {
         self.threads
+    }
+
+    /// Pool-wide stream counters: every block's [`StreamStats`] folded
+    /// with [`StreamStats::merge`] in block order, so the aggregate is
+    /// deterministic and — like everything else on this path —
+    /// fidelity-invariant.
+    pub fn stream_stats(&self) -> StreamStats {
+        let mut total = StreamStats::default();
+        for b in &self.blocks {
+            total.merge(&b.stats());
+        }
+        total
     }
 
     /// Worker threads that will actually run. Mirrors `run_sharded`'s
@@ -615,21 +627,36 @@ fn account_tile<T>(
     (out, TileCost { charged: compute + exposed, mac2s, exposed, copy })
 }
 
+/// Tile word index → 16-bit block address. Tile geometry is bounded by
+/// the block's main array (`tile.cols ≤ MAIN_WORDS = 512`), so the
+/// narrowing below cannot truncate.
+#[inline]
+fn word_addr(j: usize) -> u16 {
+    debug_assert!(j < MAIN_WORDS);
+    // Bounded by MAIN_WORDS above. pallas-lint: allow(r3)
+    j as u16
+}
+
 /// Pack word `j` (one matrix column) of a tile: the transposed layout of
 /// Fig 2 — word `j` holds `W[row0..row0+rows, col0+j]`. Shared by the
 /// tiling streamer and the resident pinning path so both dataflows put
-/// bit-identical words on chip.
+/// bit-identical words on chip. Lane staging runs through a fixed stack
+/// buffer — this sits inside every weight-copy loop.
 pub(crate) fn pack_tile_word(w: &IntMatrix, tile: &Tile, j: usize) -> u64 {
     let col = tile.col0 + j;
-    let elems: Vec<i64> = (0..tile.rows).map(|r| w.get(tile.row0 + r, col)).collect();
-    pack_word(&elems, w.precision, true)
+    debug_assert!(tile.rows <= MAX_LANES);
+    let mut elems = [0i64; MAX_LANES];
+    for (r, e) in elems.iter_mut().enumerate().take(tile.rows) {
+        *e = w.get(tile.row0 + r, col);
+    }
+    pack_word(&elems[..tile.rows], w.precision, true)
 }
 
 /// Stream one tile's weight words into the block at addresses
 /// `0..tile.cols` (the streaming buffer of the tiling dataflow).
 fn load_tile_words(block: &mut BramacBlock, w: &IntMatrix, tile: &Tile) {
     for j in 0..tile.cols {
-        block.write_word(j as u16, pack_tile_word(w, tile, j));
+        block.write_word(word_addr(j), pack_tile_word(w, tile, j));
     }
 }
 
@@ -846,7 +873,7 @@ fn stream_tile_gemv(
     let mut since_flush = 0usize;
     let mut j = 0usize;
     while j < tile.cols {
-        let a1 = base + j as u16;
+        let a1 = base + word_addr(j);
         let i1 = x[tile.col0 + j];
         let (a2, i2) = if j + 1 < tile.cols {
             (a1 + 1, x[tile.col0 + j + 1])
@@ -913,7 +940,7 @@ fn stream_tile_batch2(
     let mut j = 0usize;
     while j < tile.cols {
         let take2 = j + 1 < tile.cols;
-        let a1 = base + j as u16;
+        let a1 = base + word_addr(j);
         let a2 = if take2 { a1 + 1 } else { a1 };
         let pick = |x: &[i64]| {
             let i1 = x[tile.col0 + j];
@@ -977,7 +1004,7 @@ fn stream_tile_group(
     let mut j = 0usize;
     while j < tile.cols {
         let take2 = j + 1 < tile.cols;
-        let a1 = base + j as u16;
+        let a1 = base + word_addr(j);
         let a2 = if take2 { a1 + 1 } else { a1 };
         let mut pairs = [(0i64, 0i64); 2];
         for (e, pair) in pairs.iter_mut().enumerate().take(live) {

@@ -84,9 +84,12 @@ pub fn layer_cycles(layer: &ConvLayer, cfg: &DlaConfig) -> u64 {
 pub fn layer_cycles_with(layer: &ConvLayer, cfg: &DlaConfig, dataflow: Dataflow) -> u64 {
     let dot = (layer.c * layer.r * layer.s) as u64;
     let qvec_eff = cfg.qvec1 as f64 + cfg.qvec2 as f64 * bramac_pace_efficiency(cfg, dot);
-    let beats = layer.p as u64
-        * (layer.q as f64 / qvec_eff).ceil() as u64
-        * (layer.k as u64).div_ceil(cfg.kvec as u64);
+    // The fractional `qvec_eff` models the 1DA half-pace (§V-C), so
+    // this ceil stays in f64 on purpose; Q ≤ a few hundred, far inside
+    // exact-f64 range, and the goldens pin the resulting totals.
+    // pallas-lint: allow(r3) — intentional f64 rounding, see above
+    let q_beats = (layer.q as f64 / qvec_eff).ceil() as u64;
+    let beats = layer.p as u64 * q_beats * (layer.k as u64).div_ceil(cfg.kvec as u64);
     let beat_len = (layer.r * layer.s) as u64 * (layer.c as u64).div_ceil(cfg.cvec as u64);
     let startup = match (cfg.kind, dataflow) {
         (AccelKind::Dla, _) => 0,

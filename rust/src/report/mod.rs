@@ -261,6 +261,8 @@ pub fn fig11() -> String {
                         .find(|c| {
                             c.m == m && c.n == n && c.precision == p && c.style == style
                         })
+                        // `cells` is built from the full (m, n, p, style)
+                        // cross-product a few lines up. pallas-lint: allow(r5)
                         .unwrap();
                     row.push(format!(
                         "{:.2} | {:.2}",

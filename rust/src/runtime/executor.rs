@@ -88,7 +88,9 @@ impl Runtime {
             })
             .collect::<Result<Vec<_>>>()?;
         let cache = self.cache.lock().unwrap();
-        let exe = cache.get(name).expect("compiled above");
+        let exe = cache
+            .get(name)
+            .with_context(|| format!("executable '{name}' missing from compile cache"))?;
         let result = exe
             .execute::<xla::Literal>(&literals)
             .with_context(|| format!("executing '{name}'"))?[0][0]

@@ -50,6 +50,8 @@ pub fn utilization_efficiency(arch: StorageArch, bits: u32) -> f64 {
     match arch {
         StorageArch::Bramac => {
             // 100% at 2/4/8; other precisions sign-extend up (§VI-B).
+            // `storage_for` covers every bit width the assert above
+            // admits. pallas-lint: allow(r5)
             let stored = Precision::storage_for(bits).unwrap().bits();
             bits as f64 / stored as f64
         }

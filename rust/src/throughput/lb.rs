@@ -19,6 +19,8 @@ pub fn lb_mac_cost(p: Precision) -> (f64, f64) {
     let row = LB_MAC_CALIB
         .iter()
         .find(|(bits, _, _)| *bits == p.bits())
+        // The calibration table names every `Precision` variant.
+        // pallas-lint: allow(r5)
         .expect("calibration covers 2/4/8");
     (row.1, row.2)
 }

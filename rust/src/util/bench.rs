@@ -112,7 +112,7 @@ impl Bench {
                 break;
             }
         }
-        samples.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        samples.sort_by(f64::total_cmp);
         let median = samples[samples.len() / 2];
         let mean = samples.iter().sum::<f64>() / samples.len() as f64;
         let min = samples[0];
@@ -135,6 +135,7 @@ impl Bench {
             shards: 0,
             fidelity: "",
         });
+        // Non-empty: pushed just above. pallas-lint: allow(r5)
         self.results.last().unwrap()
     }
 
@@ -142,11 +143,13 @@ impl Bench {
     /// trajectory: attributed cycles, worker threads, shard count.
     pub fn bench_meta<F: FnMut()>(&mut self, name: &str, meta: BenchMeta, f: F) -> &BenchResult {
         self.bench(name, f);
+        // Non-empty: `bench` pushes a result. pallas-lint: allow(r5)
         let last = self.results.last_mut().expect("bench just pushed a result");
         last.cycles = meta.cycles;
         last.threads = meta.threads;
         last.shards = meta.shards;
         last.fidelity = meta.fidelity;
+        // pallas-lint: allow(r5)
         self.results.last().unwrap()
     }
 

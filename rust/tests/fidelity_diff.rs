@@ -7,9 +7,17 @@
 //! stays on as the differential-testing oracle: any divergence in lane
 //! arithmetic *or* in cycle accounting fails here, not in production.
 
+mod common;
+
+use std::time::Duration;
+
 use bramac::arch::Precision;
-use bramac::bramac::{ExecFidelity, Variant};
-use bramac::coordinator::{BlockPool, ShardedPool};
+use bramac::bramac::signext::pack_word;
+use bramac::bramac::{BramacBlock, ExecFidelity, Variant};
+use bramac::coordinator::batcher::submit_and_wait;
+use bramac::coordinator::server::{InferenceServer, IMAGE_ELEMS};
+use bramac::coordinator::{BlockPool, Policy, ShardedPool};
+use bramac::dla::Dataflow;
 use bramac::quant::{random_vector, IntMatrix};
 use bramac::storage::ResidentModel;
 use bramac::util::Rng;
@@ -178,6 +186,152 @@ fn repeated_dispatches_and_thread_counts_stay_identical() {
             assert_eq!(sf, so, "threads={threads} turn={turn}");
         }
     }
+}
+
+#[test]
+fn midstream_set_fidelity_switch_stays_bit_identical() {
+    // A serving stack may flip fidelity between (or within) dispatches —
+    // e.g. canarying one replica on the eFSM oracle while the rest run
+    // fast. `set_fidelity` is documented as safe mid-stream at every
+    // level; a pool that toggles every dispatch must track a pinned
+    // oracle reference bit for bit, results and stats.
+    let mut rng = Rng::seed_from_u64(0xd1ff_0006);
+    let p = Precision::Int4;
+
+    // Block level: switch in the middle of one accumulation window.
+    let (lo, hi) = p.range();
+    let mut reference = BramacBlock::new(Variant::TwoSA, p);
+    reference.set_fidelity(ExecFidelity::BitAccurate);
+    let mut switched = BramacBlock::new(Variant::TwoSA, p);
+    switched.set_fidelity(ExecFidelity::BitAccurate);
+    for addr in 0..8u16 {
+        let elems: Vec<i64> = (0..p.lanes_per_word())
+            .map(|_| rng.gen_range_i64(lo as i64, hi as i64))
+            .collect();
+        let word = pack_word(&elems, p, true);
+        reference.write_word(addr, word);
+        switched.write_word(addr, word);
+    }
+    for step in 0..4u16 {
+        if step == 2 {
+            // Mid-window: accumulators already hold partial sums.
+            switched.set_fidelity(ExecFidelity::Fast);
+        }
+        let pairs: Vec<(i64, i64)> = (0..2)
+            .map(|_| {
+                let a = rng.gen_range_i64(lo as i64, hi as i64);
+                let b = rng.gen_range_i64(lo as i64, hi as i64);
+                (a, b)
+            })
+            .collect();
+        reference.mac2(2 * step, 2 * step + 1, &pairs, true);
+        switched.mac2(2 * step, 2 * step + 1, &pairs, true);
+    }
+    assert_eq!(
+        switched.read_accumulators(),
+        reference.read_accumulators(),
+        "block-level mid-window switch: accumulators"
+    );
+    assert_eq!(switched.stats(), reference.stats(), "block-level: StreamStats");
+
+    // Pool level: toggle fidelity between dispatches against a warm pool.
+    let (m, n) = (40, 96);
+    let w = IntMatrix::random(&mut rng, m, n, p);
+    let mut reference = BlockPool::new(Variant::TwoSA, 3, p);
+    reference.set_fidelity(ExecFidelity::BitAccurate);
+    let mut switched = BlockPool::new(Variant::TwoSA, 3, p);
+    for turn in 0..6 {
+        let f = if turn % 2 == 0 {
+            ExecFidelity::BitAccurate
+        } else {
+            ExecFidelity::Fast
+        };
+        switched.set_fidelity(f);
+        let x = random_vector(&mut rng, n, p, true);
+        let (yr, sr) = reference.run_gemv_signed(&w, &x, true);
+        let (ys, ss) = switched.run_gemv_signed(&w, &x, true);
+        assert_eq!(ys, yr, "pool turn {turn}: results");
+        assert_eq!(ss, sr, "pool turn {turn}: ScheduleStats");
+    }
+    assert_eq!(
+        switched.stream_stats(),
+        reference.stream_stats(),
+        "pool: aggregate StreamStats after alternating fidelities"
+    );
+
+    // Shard level: the switch fans out to every shard's pool.
+    let mut reference = ShardedPool::new(Variant::TwoSA, 2, 2, p);
+    reference.set_fidelity(ExecFidelity::BitAccurate);
+    let mut switched = ShardedPool::new(Variant::TwoSA, 2, 2, p);
+    for turn in 0..4 {
+        let f = if turn % 2 == 0 {
+            ExecFidelity::BitAccurate
+        } else {
+            ExecFidelity::Fast
+        };
+        switched.set_fidelity(f);
+        let x = random_vector(&mut rng, n, p, true);
+        let (yr, sr) = reference.run_gemv_signed(&w, &x, true);
+        let (ys, ss) = switched.run_gemv_signed(&w, &x, true);
+        assert_eq!(ys, yr, "shard turn {turn}: results");
+        assert_eq!(ss, sr, "shard turn {turn}: ScheduleStats");
+    }
+}
+
+#[test]
+fn server_fidelity_starters_reply_identically() {
+    // `start_with_fidelity` / `start_sharded_with_fidelity` take an
+    // explicit fidelity as a recorded dispatch preference; the doc
+    // promise is that replies and request accounting are identical
+    // either way. Runs against the checked-in stub manifest (host
+    // fallback) so it is exercised on every run.
+    let img: Vec<i32> = (0..IMAGE_ELEMS).map(|i| (i % 7) as i32).collect();
+
+    let run_flat = |fidelity| {
+        let server = InferenceServer::start_with_fidelity(
+            common::stub_artifacts_dir(),
+            "model",
+            Duration::from_millis(2),
+            1,
+            Dataflow::Persistent,
+            fidelity,
+        )
+        .expect("stub manifest always present");
+        let tx = server.handle();
+        let replies: Vec<Vec<i32>> = (0..3)
+            .map(|_| submit_and_wait(&tx, img.clone()).expect("reply"))
+            .collect();
+        drop(tx);
+        (replies, server.shutdown().requests)
+    };
+    let (oracle, oracle_reqs) = run_flat(ExecFidelity::BitAccurate);
+    let (fast, fast_reqs) = run_flat(ExecFidelity::Fast);
+    assert_eq!(fast, oracle, "flat server: replies across fidelities");
+    assert_eq!((oracle_reqs, fast_reqs), (3, 3));
+
+    let run_sharded = |fidelity| {
+        let server = InferenceServer::start_sharded_with_fidelity(
+            common::stub_artifacts_dir(),
+            "model",
+            Duration::from_millis(2),
+            2,
+            2,
+            Dataflow::Tiling,
+            Policy::RoundRobin,
+            fidelity,
+        )
+        .expect("stub manifest always present");
+        let tx = server.handle();
+        let replies: Vec<Vec<i32>> = (0..4)
+            .map(|_| submit_and_wait(&tx, img.clone()).expect("reply"))
+            .collect();
+        drop(tx);
+        (replies, server.shutdown().requests)
+    };
+    let (oracle, oracle_reqs) = run_sharded(ExecFidelity::BitAccurate);
+    let (fast, fast_reqs) = run_sharded(ExecFidelity::Fast);
+    assert_eq!(fast, oracle, "sharded server: replies across fidelities");
+    assert_eq!((oracle_reqs, fast_reqs), (4, 4));
 }
 
 #[test]

@@ -1,0 +1,87 @@
+//! Rule tables: what the lint considers stats structs, hot paths,
+//! cycle-accounting files, config-like structs and differential
+//! suites. Mirrored in `python/tools/pallas_lint_port.py` — keep both
+//! in sync.
+
+/// Directories scanned relative to `--root`.
+pub const SCAN_DIRS: [&str; 4] = ["rust/src", "rust/tests", "rust/benches", "examples"];
+
+/// r1: structs whose every field must be referenced by a merge-like
+/// method (`merge*` or `add`) in some impl of the struct.
+pub const STATS_STRUCTS: [&str; 6] = [
+    "ScheduleStats",
+    "StreamStats",
+    "RouterStats",
+    "NetworkServerStats",
+    "ServerStats",
+    "ReplicaServerStats",
+];
+
+/// r2: files where *every* non-test fn is hot.
+pub const HOT_FILES: [&str; 2] = ["bramac/fastpath.rs", "bramac/simd_adder.rs"];
+
+/// r2: hot fns inside otherwise-cold files.
+pub const HOT_FNS_BY_FILE: [(&str, &[&str]); 1] = [(
+    "coordinator/scheduler.rs",
+    &[
+        "stream_tile_gemv",
+        "stream_tile_batch2",
+        "stream_tile_group",
+        "account_tile",
+        "load_tile_words",
+        "pack_tile_word",
+    ],
+)];
+
+/// r2: method names that allocate when called with `.` receiver syntax.
+pub const ALLOC_IDENTS: [&str; 5] = ["to_vec", "collect", "to_string", "to_owned", "with_capacity"];
+
+/// r2: `T::new()` path heads that allocate.
+pub const ALLOC_PATH_NEW: [&str; 3] = ["Vec", "Box", "String"];
+
+/// r2: allocating macros.
+pub const ALLOC_MACROS: [&str; 2] = ["vec", "format"];
+
+/// r3: files audited for lossy casts (cycle accounting).
+pub const CAST_FILES: [&str; 3] =
+    ["dla/cycle.rs", "coordinator/scheduler.rs", "bramac/fastpath.rs"];
+
+/// r3: `as <ty>` targets that truncate.
+pub const NARROW_TYPES: [&str; 6] = ["u8", "u16", "u32", "i8", "i16", "i32"];
+
+/// r3: wide targets flagged only after a float rounder.
+pub const WIDE_INT_TYPES: [&str; 4] = ["u64", "i64", "usize", "isize"];
+
+/// r3: float-rounding methods that precede a flagged wide cast.
+pub const FLOAT_ROUNDERS: [&str; 3] = ["ceil", "floor", "round"];
+
+/// r4: config-like structs and the file suffix that defines them.
+/// Literals outside the defining file must name every field or use
+/// `..` — the PR 6 breakage class (a new field silently defaulted).
+pub const LITERAL_STRUCTS: [(&str, &str); 2] = [
+    ("NetExecConfig", "dla/netexec.rs"),
+    ("PlanKey", "coordinator/plan_cache.rs"),
+];
+
+/// r6: differential suites that must name every fidelity-taking pub fn.
+pub const FIDELITY_SUITES: [&str; 2] =
+    ["rust/tests/fidelity_diff.rs", "rust/tests/netexec_diff.rs"];
+
+/// Rule ids and their long names (accepted as suppression synonyms).
+pub const RULES: [(&str, &str); 6] = [
+    ("r1", "stats-merge"),
+    ("r2", "hot-path-alloc"),
+    ("r3", "lossy-cast"),
+    ("r4", "literal-drift"),
+    ("r5", "unwrap-ban"),
+    ("r6", "fidelity-coverage"),
+];
+
+pub fn rule_name(id: &str) -> &'static str {
+    RULES.iter().find(|(i, _)| *i == id).map(|(_, n)| *n).unwrap_or("unknown")
+}
+
+/// Resolve a suppression token (`r3` or `lossy-cast`) to a rule id.
+pub fn rule_id(token: &str) -> Option<&'static str> {
+    RULES.iter().find(|(i, n)| *i == token || *n == token).map(|(i, _)| *i)
+}

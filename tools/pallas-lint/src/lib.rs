@@ -1,0 +1,166 @@
+//! `pallas-lint`: repo-specific static analysis for the bit-exact
+//! serving stack.
+//!
+//! Six rules, each born from a real breakage class in this repo's
+//! history (DESIGN.md §"Static analysis & soundness checks"):
+//!
+//! | id | name              | catches |
+//! |----|-------------------|---------|
+//! | r1 | stats-merge       | a stats struct grows a field its merge impls forget |
+//! | r2 | hot-path-alloc    | heap allocation creeping into SWAR/tile-streaming fns |
+//! | r3 | lossy-cast        | unannotated truncating casts in cycle accounting |
+//! | r4 | literal-drift     | config-struct literals that silently drop new fields |
+//! | r5 | unwrap-ban        | unwrap/expect in library code without an invariant note |
+//! | r6 | fidelity-coverage | pub fns taking `ExecFidelity` missing from the diff suites |
+//!
+//! Suppress with `// pallas-lint: allow(r3)` on the same or previous
+//! line, or `// pallas-lint: allow-file(r5)` anywhere in the file; the
+//! long rule names are accepted as synonyms. Every suppression should
+//! carry a one-line reason in the same comment block.
+//!
+//! `python/tools/pallas_lint_port.py` is the 1:1 desk-check mirror of
+//! this crate (the same role `bench_port.py` plays for the benches);
+//! rule changes must land in both.
+
+pub mod config;
+pub mod rules;
+pub mod suppress;
+
+use std::collections::BTreeMap;
+use std::fs;
+use std::path::{Path, PathBuf};
+
+/// One diagnostic: rule id, `/`-separated repo-relative path, 1-based
+/// line, message.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Diag {
+    pub rule: &'static str,
+    pub path: String,
+    pub line: usize,
+    pub msg: String,
+}
+
+impl Diag {
+    pub fn fmt(&self) -> String {
+        format!(
+            "{}:{}: [{}/{}] {}",
+            self.path,
+            self.line,
+            self.rule,
+            config::rule_name(self.rule),
+            self.msg
+        )
+    }
+}
+
+/// One scanned file: lexed tokens, item parse and suppressions.
+pub struct FileData {
+    pub lx: syn::Lexed,
+    pub parsed: syn::Parsed,
+    pub sup: suppress::Suppressions,
+}
+
+/// The lint context: every `.rs` file under the scan roots, plus the
+/// accumulated diagnostics.
+pub struct Ctx {
+    pub files: BTreeMap<String, FileData>,
+    pub diags: Vec<Diag>,
+}
+
+impl Ctx {
+    /// Lex and parse every `.rs` file under `root`'s scan directories.
+    /// Paths are stored `/`-separated relative to `root`.
+    pub fn load(root: &Path) -> std::io::Result<Ctx> {
+        let mut files = BTreeMap::new();
+        for dir in config::SCAN_DIRS {
+            let base = root.join(dir);
+            if !base.is_dir() {
+                continue;
+            }
+            let mut stack = vec![base];
+            while let Some(d) = stack.pop() {
+                let mut entries: Vec<PathBuf> =
+                    fs::read_dir(&d)?.filter_map(|e| e.ok().map(|e| e.path())).collect();
+                entries.sort();
+                for p in entries {
+                    if p.is_dir() {
+                        stack.push(p);
+                    } else if p.extension().is_some_and(|e| e == "rs") {
+                        let rel = p
+                            .strip_prefix(root)
+                            .unwrap_or(&p)
+                            .components()
+                            .map(|c| c.as_os_str().to_string_lossy())
+                            .collect::<Vec<_>>()
+                            .join("/");
+                        let src = fs::read_to_string(&p)?;
+                        let lx = syn::lex(&src);
+                        let parsed = syn::parse_items(&lx);
+                        let sup = suppress::scan(&lx);
+                        files.insert(rel, FileData { lx, parsed, sup });
+                    }
+                }
+            }
+        }
+        Ok(Ctx { files, diags: Vec::new() })
+    }
+
+    /// Emit a diagnostic at byte offset `off` unless suppressed.
+    pub fn emit(&mut self, rule: &'static str, rel: &str, off: usize, msg: String) {
+        let fd = &self.files[rel];
+        let line = fd.lx.line_of(off);
+        if !fd.sup.active(rule, line) {
+            self.diags.push(Diag { rule, path: rel.to_string(), line, msg });
+        }
+    }
+
+    /// Library-source files (`rust/src/**`), the scope of most rules.
+    pub fn src_files(&self) -> Vec<String> {
+        self.files.keys().filter(|r| r.starts_with("rust/src")).cloned().collect()
+    }
+}
+
+/// Run every rule against the tree at `root`, returning sorted
+/// diagnostics.
+pub fn run(root: &Path) -> std::io::Result<Vec<Diag>> {
+    let mut ctx = Ctx::load(root)?;
+    rules::run_all(&mut ctx);
+    let mut diags = ctx.diags;
+    diags.sort_by(|a, b| (a.rule, &a.path, a.line).cmp(&(b.rule, &b.path, b.line)));
+    Ok(diags)
+}
+
+/// Render diagnostics as a JSON document (hand-rolled: the workspace
+/// is offline, no serde).
+pub fn to_json(diags: &[Diag]) -> String {
+    let mut out = String::from("{\n  \"diagnostics\": [\n");
+    for (i, d) in diags.iter().enumerate() {
+        out.push_str(&format!(
+            "    {{\"rule\": \"{}\", \"name\": \"{}\", \"file\": \"{}\", \"line\": {}, \"message\": \"{}\"}}{}\n",
+            d.rule,
+            config::rule_name(d.rule),
+            json_escape(&d.path),
+            d.line,
+            json_escape(&d.msg),
+            if i + 1 < diags.len() { "," } else { "" }
+        ));
+    }
+    out.push_str(&format!("  ],\n  \"count\": {}\n}}", diags.len()));
+    out
+}
+
+fn json_escape(s: &str) -> String {
+    let mut out = String::with_capacity(s.len());
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\t' => out.push_str("\\t"),
+            '\r' => out.push_str("\\r"),
+            c if (c as u32) < 0x20 => out.push_str(&format!("\\u{:04x}", c as u32)),
+            c => out.push(c),
+        }
+    }
+    out
+}

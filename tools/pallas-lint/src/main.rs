@@ -1,0 +1,61 @@
+//! CLI: `pallas-lint [--root DIR] [--format text|json]`.
+//! Exit status 1 iff diagnostics were emitted.
+
+use std::path::PathBuf;
+use std::process::ExitCode;
+
+fn main() -> ExitCode {
+    let mut root = PathBuf::from(".");
+    let mut format = String::from("text");
+    let mut args = std::env::args().skip(1);
+    while let Some(a) = args.next() {
+        match a.as_str() {
+            "--root" => {
+                let Some(v) = args.next() else {
+                    eprintln!("--root needs a value");
+                    return ExitCode::from(2);
+                };
+                root = PathBuf::from(v);
+            }
+            "--format" => {
+                let Some(v) = args.next() else {
+                    eprintln!("--format needs a value");
+                    return ExitCode::from(2);
+                };
+                if v != "text" && v != "json" {
+                    eprintln!("--format must be text or json");
+                    return ExitCode::from(2);
+                }
+                format = v;
+            }
+            "--help" | "-h" => {
+                eprintln!("usage: pallas-lint [--root DIR] [--format text|json]");
+                return ExitCode::SUCCESS;
+            }
+            other => {
+                eprintln!("unknown argument {other}");
+                return ExitCode::from(2);
+            }
+        }
+    }
+    let diags = match pallas_lint::run(&root) {
+        Ok(d) => d,
+        Err(e) => {
+            eprintln!("pallas-lint: {e}");
+            return ExitCode::from(2);
+        }
+    };
+    if format == "json" {
+        println!("{}", pallas_lint::to_json(&diags));
+    } else {
+        for d in &diags {
+            println!("{}", d.fmt());
+        }
+        println!("pallas-lint: {} diagnostic(s)", diags.len());
+    }
+    if diags.is_empty() {
+        ExitCode::SUCCESS
+    } else {
+        ExitCode::FAILURE
+    }
+}

@@ -1,0 +1,357 @@
+//! The six rules. Each one scans the token streams produced by the
+//! `syn` shim; none needs expression-level structure. Every rule
+//! collects `(rule, file, offset, message)` tuples first and emits
+//! them through [`Ctx::emit`] afterwards so suppressions apply
+//! uniformly.
+
+use std::collections::HashSet;
+
+use syn::TokKind;
+
+use crate::config::{
+    ALLOC_IDENTS, ALLOC_MACROS, ALLOC_PATH_NEW, CAST_FILES, FIDELITY_SUITES, FLOAT_ROUNDERS,
+    HOT_FILES, HOT_FNS_BY_FILE, LITERAL_STRUCTS, NARROW_TYPES, STATS_STRUCTS, WIDE_INT_TYPES,
+};
+use crate::Ctx;
+
+type Pending = Vec<(&'static str, String, usize, String)>;
+
+pub fn run_all(ctx: &mut Ctx) {
+    let rules: [fn(&Ctx) -> Pending; 6] =
+        [rule_r1, rule_r2, rule_r3, rule_r4, rule_r5, rule_r6];
+    for rule in rules {
+        let pending = rule(ctx);
+        for (id, rel, off, msg) in pending {
+            ctx.emit(id, &rel, off, msg);
+        }
+    }
+}
+
+/// r1 stats-merge: every field of a configured stats struct must be
+/// referenced in at least one `merge*`/`add` method of that struct.
+fn rule_r1(ctx: &Ctx) -> Pending {
+    let mut out = Pending::new();
+    let src = ctx.src_files();
+    for name in STATS_STRUCTS {
+        let mut sdef: Option<(&syn::StructDef, &str)> = None;
+        for rel in &src {
+            for s in &ctx.files[rel].parsed.structs {
+                if s.name == name {
+                    sdef = Some((s, rel));
+                }
+            }
+        }
+        let Some((sdef, srel)) = sdef else { continue };
+        let mut merge_idents: HashSet<&str> = HashSet::new();
+        let mut merge_found = false;
+        for rel in &src {
+            let fd = &ctx.files[rel];
+            for (target, (s, e)) in &fd.parsed.impls {
+                if target != name {
+                    continue;
+                }
+                for f in &fd.parsed.fns {
+                    if !(*s <= f.body.0 && f.body.0 < *e) {
+                        continue;
+                    }
+                    if f.name.starts_with("merge") || f.name == "add" {
+                        merge_found = true;
+                        for t in &fd.lx.toks[f.body.0..f.body.1] {
+                            if t.kind == TokKind::Ident {
+                                merge_idents.insert(t.text.as_str());
+                            }
+                        }
+                    }
+                }
+            }
+        }
+        if !merge_found {
+            let msg = format!("`{name}` has no merge*/add impl");
+            out.push(("r1", srel.to_string(), sdef.off, msg));
+            continue;
+        }
+        for (fname, foff) in &sdef.fields {
+            if !merge_idents.contains(fname.as_str()) {
+                out.push((
+                    "r1",
+                    srel.to_string(),
+                    *foff,
+                    format!(
+                        "field `{fname}` of `{name}` is never referenced in its merge*/add impls"
+                    ),
+                ));
+            }
+        }
+    }
+    out
+}
+
+fn fn_is_hot(rel: &str, fn_name: &str) -> bool {
+    if HOT_FILES.iter().any(|s| rel.ends_with(s)) {
+        return true;
+    }
+    HOT_FNS_BY_FILE
+        .iter()
+        .any(|(suffix, names)| rel.ends_with(suffix) && names.contains(&fn_name))
+}
+
+/// r2 hot-path-alloc: no heap allocation in the MAC2 fast path, the
+/// SWAR adders or the scheduler's tile-streaming fns.
+fn rule_r2(ctx: &Ctx) -> Pending {
+    let mut out = Pending::new();
+    for rel in ctx.src_files() {
+        let fd = &ctx.files[&rel];
+        let toks = &fd.lx.toks;
+        for f in &fd.parsed.fns {
+            if f.in_test || fd.parsed.in_test(f.body.0) || !fn_is_hot(&rel, &f.name) {
+                continue;
+            }
+            for k in f.body.0..f.body.1 {
+                let t = &toks[k];
+                if t.kind != TokKind::Ident {
+                    continue;
+                }
+                let prev = k.checked_sub(1).map_or("", |j| toks[j].text.as_str());
+                let prev2 = k.checked_sub(2).map_or("", |j| toks[j].text.as_str());
+                let nxt = toks.get(k + 1).map_or("", |x| x.text.as_str());
+                let what = if ALLOC_IDENTS.contains(&t.text.as_str()) && prev == "." {
+                    Some(format!(".{}()", t.text))
+                } else if t.text == "new" && prev == ":" && prev2 == ":" {
+                    let head = k.checked_sub(3).map_or("", |j| toks[j].text.as_str());
+                    ALLOC_PATH_NEW.contains(&head).then(|| format!("{head}::new()"))
+                } else if ALLOC_MACROS.contains(&t.text.as_str()) && nxt == "!" {
+                    Some(format!("{}!", t.text))
+                } else {
+                    None
+                };
+                if let Some(what) = what {
+                    out.push((
+                        "r2",
+                        rel.clone(),
+                        t.off,
+                        format!("heap allocation `{what}` in hot-path fn `{}`", f.name),
+                    ));
+                }
+            }
+        }
+    }
+    out
+}
+
+/// r3 lossy-cast: truncating `as` casts, and float→int casts after
+/// ceil/floor/round, in the cycle-accounting files.
+fn rule_r3(ctx: &Ctx) -> Pending {
+    let mut out = Pending::new();
+    for rel in ctx.src_files() {
+        if !CAST_FILES.iter().any(|s| rel.ends_with(s)) {
+            continue;
+        }
+        let fd = &ctx.files[&rel];
+        let toks = &fd.lx.toks;
+        for (k, t) in toks.iter().enumerate() {
+            if t.kind != TokKind::Ident || t.text != "as" || fd.parsed.in_test(k) {
+                continue;
+            }
+            let Some(ty_tok) = toks.get(k + 1) else { continue };
+            let ty = ty_tok.text.as_str();
+            if NARROW_TYPES.contains(&ty) {
+                out.push((
+                    "r3",
+                    rel.clone(),
+                    t.off,
+                    format!(
+                        "truncating cast `as {ty}` in cycle-accounting code; use try_into or annotate"
+                    ),
+                ));
+            } else if WIDE_INT_TYPES.contains(&ty) {
+                let rounded = toks[k.saturating_sub(6)..k]
+                    .iter()
+                    .any(|x| x.kind == TokKind::Ident && FLOAT_ROUNDERS.contains(&x.text.as_str()));
+                if rounded {
+                    out.push((
+                        "r3",
+                        rel.clone(),
+                        t.off,
+                        format!(
+                            "float-to-int cast `as {ty}` after ceil/floor/round; annotate the rounding contract"
+                        ),
+                    ));
+                }
+            }
+        }
+    }
+    out
+}
+
+/// r4 literal-drift: struct literals of config-like structs outside
+/// their defining file must name every field or carry a `..` rest.
+fn rule_r4(ctx: &Ctx) -> Pending {
+    let mut out = Pending::new();
+    // Authoritative field sets from the defining files.
+    let mut defs: Vec<(&str, HashSet<&str>, String)> = Vec::new();
+    for (sname, def_suffix) in LITERAL_STRUCTS {
+        for (rel, fd) in &ctx.files {
+            if rel.ends_with(def_suffix) {
+                for s in &fd.parsed.structs {
+                    if s.name == sname {
+                        let fields: HashSet<&str> =
+                            s.fields.iter().map(|(n, _)| n.as_str()).collect();
+                        defs.push((sname, fields, rel.clone()));
+                    }
+                }
+            }
+        }
+    }
+    for (rel, fd) in &ctx.files {
+        let toks = &fd.lx.toks;
+        for (sname, fields, def_rel) in &defs {
+            if rel == def_rel {
+                continue;
+            }
+            for (k, t) in toks.iter().enumerate() {
+                if t.kind != TokKind::Ident || t.text != *sname {
+                    continue;
+                }
+                if toks.get(k + 1).map(|x| x.text.as_str()) != Some("{") {
+                    continue;
+                }
+                let prev = k.checked_sub(1).map_or("", |j| toks[j].text.as_str());
+                if matches!(prev, "struct" | "for" | "impl" | "enum" | "trait" | "mod") {
+                    continue;
+                }
+                let end = syn::match_brace(toks, k + 1);
+                let mut depth = 0i64;
+                let mut named: HashSet<&str> = HashSet::new();
+                let mut has_rest = false;
+                let mut prev_txt = "{";
+                for m in (k + 1)..end {
+                    let x = &toks[m];
+                    match x.text.as_str() {
+                        "{" | "(" | "[" => depth += 1,
+                        "}" | ")" | "]" => depth -= 1,
+                        _ if depth == 1 => {
+                            if x.text == "."
+                                && toks.get(m + 1).is_some_and(|n| n.text == ".")
+                                && matches!(prev_txt, "{" | ",")
+                            {
+                                has_rest = true;
+                            } else if x.kind == TokKind::Ident
+                                && matches!(prev_txt, "{" | ",")
+                                && m + 1 < end
+                                && matches!(toks[m + 1].text.as_str(), ":" | "," | "}")
+                            {
+                                named.insert(x.text.as_str());
+                            }
+                        }
+                        _ => {}
+                    }
+                    prev_txt = x.text.as_str();
+                }
+                if has_rest {
+                    continue;
+                }
+                let mut missing: Vec<&str> = fields.difference(&named).copied().collect();
+                missing.sort_unstable();
+                if !missing.is_empty() {
+                    out.push((
+                        "r4",
+                        rel.clone(),
+                        t.off,
+                        format!(
+                            "`{sname}` literal misses fields {missing:?}; name every field or use `..`"
+                        ),
+                    ));
+                }
+            }
+        }
+    }
+    out
+}
+
+/// r5 unwrap-ban: no `.unwrap()` / `.expect()` in library code.
+/// Carve-outs: `main.rs`, `#[cfg(test)]` regions, and poisoned-mutex /
+/// thread-join receivers (`.lock().unwrap()`, `.join().unwrap()`).
+fn rule_r5(ctx: &Ctx) -> Pending {
+    let mut out = Pending::new();
+    for rel in ctx.src_files() {
+        if rel.ends_with("/main.rs") || rel == "main.rs" {
+            continue;
+        }
+        let fd = &ctx.files[&rel];
+        let toks = &fd.lx.toks;
+        for (k, t) in toks.iter().enumerate() {
+            if t.kind != TokKind::Ident || !matches!(t.text.as_str(), "unwrap" | "expect") {
+                continue;
+            }
+            let prev = k.checked_sub(1).map_or("", |j| toks[j].text.as_str());
+            let nxt = toks.get(k + 1).map_or("", |x| x.text.as_str());
+            if prev != "." || nxt != "(" {
+                continue;
+            }
+            if fd.parsed.in_test(k) {
+                continue;
+            }
+            if k >= 4
+                && toks[k - 2].text == ")"
+                && toks[k - 3].text == "("
+                && matches!(toks[k - 4].text.as_str(), "lock" | "join")
+            {
+                continue;
+            }
+            out.push((
+                "r5",
+                rel.clone(),
+                t.off,
+                format!(
+                    "`.{}()` in library code; return Result/Option or annotate the invariant",
+                    t.text
+                ),
+            ));
+        }
+    }
+    out
+}
+
+/// r6 fidelity-coverage: every pub fn taking `ExecFidelity` must be
+/// named in one of the differential suites — the invariant that makes
+/// a fidelity knob safe is precisely that a diff test exercises it.
+fn rule_r6(ctx: &Ctx) -> Pending {
+    let mut out = Pending::new();
+    let mut suite_idents: HashSet<&str> = HashSet::new();
+    for suite in FIDELITY_SUITES {
+        if let Some(fd) = ctx.files.get(suite) {
+            for t in &fd.lx.toks {
+                if t.kind == TokKind::Ident {
+                    suite_idents.insert(t.text.as_str());
+                }
+            }
+        }
+    }
+    if suite_idents.is_empty() {
+        return out;
+    }
+    for rel in ctx.src_files() {
+        let fd = &ctx.files[&rel];
+        for f in &fd.parsed.fns {
+            if !f.is_pub || f.in_test || fd.parsed.in_test(f.body.0) {
+                continue;
+            }
+            if !f.params.iter().any(|p| p == "ExecFidelity") {
+                continue;
+            }
+            if !suite_idents.contains(f.name.as_str()) {
+                out.push((
+                    "r6",
+                    rel.clone(),
+                    f.off,
+                    format!(
+                        "pub fn `{}` takes ExecFidelity but is not exercised by \
+                         tests/fidelity_diff.rs or tests/netexec_diff.rs",
+                        f.name
+                    ),
+                ));
+            }
+        }
+    }
+    out
+}

@@ -1,0 +1,98 @@
+//! Suppression comments: `// pallas-lint: allow(r3)` silences a rule
+//! on the comment's line and the line below it; `allow-file(r5)`
+//! silences it for the whole file. Several rules may be listed,
+//! comma-separated, by id or long name.
+
+use std::collections::{HashMap, HashSet};
+
+use crate::config;
+
+#[derive(Debug, Default)]
+pub struct Suppressions {
+    by_line: HashMap<usize, HashSet<&'static str>>,
+    whole_file: HashSet<&'static str>,
+}
+
+impl Suppressions {
+    /// Is `rule` suppressed for a diagnostic on `line`?
+    pub fn active(&self, rule: &str, line: usize) -> bool {
+        if self.whole_file.contains(rule) {
+            return true;
+        }
+        [line, line.saturating_sub(1)]
+            .iter()
+            .any(|ln| self.by_line.get(ln).is_some_and(|s| s.contains(rule)))
+    }
+}
+
+/// Scan every comment for suppression markers.
+pub fn scan(lx: &syn::Lexed) -> Suppressions {
+    let mut sup = Suppressions::default();
+    for c in &lx.comments {
+        let line = lx.line_of(c.off);
+        for (whole_file, ids) in parse_markers(&c.text) {
+            if whole_file {
+                sup.whole_file.extend(ids);
+            } else {
+                sup.by_line.entry(line).or_default().extend(ids);
+            }
+        }
+    }
+    sup
+}
+
+/// Find `pallas-lint: allow(..)` / `allow-file(..)` markers in one
+/// comment's text.
+fn parse_markers(text: &str) -> Vec<(bool, Vec<&'static str>)> {
+    const MARKER: &str = "pallas-lint:";
+    let mut out = Vec::new();
+    let mut rest = text;
+    while let Some(pos) = rest.find(MARKER) {
+        let after = rest[pos + MARKER.len()..].trim_start();
+        // `allow-file` must be tried before its prefix `allow`.
+        let (whole_file, tail) = if let Some(t) = after.strip_prefix("allow-file") {
+            (true, t)
+        } else if let Some(t) = after.strip_prefix("allow") {
+            (false, t)
+        } else {
+            rest = &rest[pos + MARKER.len()..];
+            continue;
+        };
+        if let Some(body) = tail.strip_prefix('(') {
+            if let Some(close) = body.find(')') {
+                let ids: Vec<&'static str> = body[..close]
+                    .split(',')
+                    .filter_map(|r| config::rule_id(r.trim()))
+                    .collect();
+                out.push((whole_file, ids));
+            }
+        }
+        rest = &rest[pos + MARKER.len()..];
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn line_and_file_markers() {
+        let lx = syn::lex(
+            "// pallas-lint: allow-file(r5)\nlet a = 1;\n// pallas-lint: allow(r3, lossy-cast)\nlet b = 2;\n",
+        );
+        let sup = scan(&lx);
+        assert!(sup.active("r5", 99));
+        assert!(sup.active("r3", 3), "same line");
+        assert!(sup.active("r3", 4), "line below");
+        assert!(!sup.active("r3", 5));
+        assert!(!sup.active("r1", 3));
+    }
+
+    #[test]
+    fn long_names_are_synonyms() {
+        let lx = syn::lex("// pallas-lint: allow(hot-path-alloc)\nx();\n");
+        let sup = scan(&lx);
+        assert!(sup.active("r2", 2));
+    }
+}

@@ -1,0 +1,12 @@
+//! Bad fixture: `StreamStats` grows a field its merge impl forgets.
+
+pub struct StreamStats {
+    pub mac2_count: u64,
+    pub main_cycles: u64,
+}
+
+impl StreamStats {
+    pub fn merge(&mut self, other: &StreamStats) {
+        self.mac2_count += other.mac2_count;
+    }
+}

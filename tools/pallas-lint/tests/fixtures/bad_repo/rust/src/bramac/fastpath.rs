@@ -1,0 +1,5 @@
+//! Bad fixture: heap allocation in the hot MAC2 fast path.
+
+pub fn mac2_row_fast(xs: &[u64]) -> Vec<u64> {
+    xs.to_vec()
+}

@@ -1,0 +1,8 @@
+//! Bad fixture: a config literal that silently drops a field.
+
+pub fn make_batch() -> usize {
+    let cfg = NetExecConfig {
+        batch: 1,
+    };
+    cfg.batch
+}

@@ -1,0 +1,6 @@
+//! Bad fixture: a fidelity knob no differential suite exercises.
+
+pub fn start_with_fidelity(fidelity: ExecFidelity) -> u64 {
+    let _ = fidelity;
+    0
+}

@@ -1,0 +1,9 @@
+//! Bad fixture: unannotated lossy casts in cycle accounting.
+
+pub fn word_addr(j: usize) -> u16 {
+    j as u16
+}
+
+pub fn q_beats(q: f64) -> u64 {
+    (q / 3.0).ceil() as u64
+}

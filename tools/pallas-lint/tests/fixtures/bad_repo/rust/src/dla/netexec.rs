@@ -1,0 +1,13 @@
+//! Defines the tracked config struct — literals here are exempt from
+//! r4, which the `same_file` constructor demonstrates.
+
+pub struct NetExecConfig {
+    pub batch: usize,
+    pub prefetch: bool,
+}
+
+impl NetExecConfig {
+    pub fn same_file() -> NetExecConfig {
+        NetExecConfig { batch: 1, prefetch: false }
+    }
+}

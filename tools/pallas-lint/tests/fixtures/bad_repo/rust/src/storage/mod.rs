@@ -1,0 +1,5 @@
+//! Bad fixture: unwrap in library code without an invariant note.
+
+pub fn first(xs: &[u64]) -> u64 {
+    *xs.first().unwrap()
+}

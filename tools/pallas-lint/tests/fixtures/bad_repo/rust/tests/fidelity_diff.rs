@@ -1,0 +1,6 @@
+//! Suite exists but does not name the fidelity fn.
+
+#[test]
+fn placeholder() {
+    assert_eq!(2 + 2, 4);
+}

@@ -1,0 +1,13 @@
+//! Clean fixture: merge covers every field.
+
+pub struct StreamStats {
+    pub mac2_count: u64,
+    pub main_cycles: u64,
+}
+
+impl StreamStats {
+    pub fn merge(&mut self, other: &StreamStats) {
+        self.mac2_count += other.mac2_count;
+        self.main_cycles += other.main_cycles;
+    }
+}

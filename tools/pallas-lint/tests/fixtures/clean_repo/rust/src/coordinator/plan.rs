@@ -1,0 +1,13 @@
+//! Clean fixture: literals name every field or use `..`.
+
+pub fn make_batch() -> usize {
+    let full = NetExecConfig {
+        batch: 1,
+        prefetch: false,
+    };
+    let rest = NetExecConfig {
+        batch: full.batch,
+        ..Default::default()
+    };
+    full.batch + rest.batch
+}

@@ -1,0 +1,6 @@
+//! Clean fixture: the fidelity knob is named by the diff suite.
+
+pub fn start_with_fidelity(fidelity: ExecFidelity) -> u64 {
+    let _ = fidelity;
+    0
+}

@@ -1,0 +1,12 @@
+//! Clean fixture: every lossy cast carries its invariant.
+
+pub fn word_addr(j: usize) -> u16 {
+    debug_assert!(j < 512);
+    // Bounded by the debug_assert above. pallas-lint: allow(r3)
+    j as u16
+}
+
+pub fn q_beats(q: f64) -> u64 {
+    // Intentional round-up to whole beats. pallas-lint: allow(lossy-cast)
+    (q / 3.0).ceil() as u64
+}

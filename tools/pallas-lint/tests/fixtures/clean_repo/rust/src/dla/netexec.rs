@@ -1,0 +1,6 @@
+//! Defines the tracked config struct.
+
+pub struct NetExecConfig {
+    pub batch: usize,
+    pub prefetch: bool,
+}

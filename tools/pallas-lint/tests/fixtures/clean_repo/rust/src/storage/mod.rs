@@ -1,0 +1,7 @@
+//! Clean fixture: only the poisoned-mutex carve-out unwraps.
+
+use std::sync::Mutex;
+
+pub fn read_counter(m: &Mutex<u64>) -> u64 {
+    *m.lock().unwrap()
+}

@@ -1,0 +1,6 @@
+//! Clean fixture suite: names the fidelity knob.
+
+#[test]
+fn fidelity_knob_is_exercised() {
+    let _ = start_with_fidelity;
+}

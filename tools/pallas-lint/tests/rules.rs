@@ -1,0 +1,61 @@
+//! Fixture tests: every rule must fire on its bad snippet at the
+//! exact span, and the clean tree (which uses suppressions, the `..`
+//! rest pattern and the lock/join carve-out) must stay silent.
+
+use std::path::{Path, PathBuf};
+
+fn fixture(name: &str) -> PathBuf {
+    Path::new(env!("CARGO_MANIFEST_DIR")).join("tests/fixtures").join(name)
+}
+
+#[test]
+fn bad_repo_fires_every_rule_at_the_right_span() {
+    let diags = pallas_lint::run(&fixture("bad_repo")).expect("fixture tree readable");
+    let spans: Vec<(&str, &str, usize)> =
+        diags.iter().map(|d| (d.rule, d.path.as_str(), d.line)).collect();
+    assert_eq!(
+        spans,
+        vec![
+            ("r1", "rust/src/bramac/block.rs", 5),
+            ("r2", "rust/src/bramac/fastpath.rs", 4),
+            ("r3", "rust/src/dla/cycle.rs", 4),
+            ("r3", "rust/src/dla/cycle.rs", 8),
+            ("r4", "rust/src/coordinator/plan.rs", 4),
+            ("r5", "rust/src/storage/mod.rs", 4),
+            ("r6", "rust/src/coordinator/server.rs", 3),
+        ],
+        "full diagnostics: {diags:#?}"
+    );
+}
+
+#[test]
+fn bad_repo_messages_name_the_offender() {
+    let diags = pallas_lint::run(&fixture("bad_repo")).unwrap();
+    let msg = |rule: &str| {
+        diags.iter().find(|d| d.rule == rule).map(|d| d.msg.clone()).unwrap_or_default()
+    };
+    assert!(msg("r1").contains("`main_cycles`"), "{}", msg("r1"));
+    assert!(msg("r2").contains(".to_vec()") && msg("r2").contains("mac2_row_fast"));
+    assert!(msg("r3").contains("as u16"));
+    assert!(msg("r4").contains("\"prefetch\""), "{}", msg("r4"));
+    assert!(msg("r5").contains(".unwrap()"));
+    assert!(msg("r6").contains("start_with_fidelity"));
+}
+
+#[test]
+fn clean_repo_is_silent() {
+    let diags = pallas_lint::run(&fixture("clean_repo")).unwrap();
+    assert!(diags.is_empty(), "clean fixture must not fire: {diags:#?}");
+}
+
+#[test]
+fn json_output_is_well_formed() {
+    let diags = pallas_lint::run(&fixture("bad_repo")).unwrap();
+    let json = pallas_lint::to_json(&diags);
+    assert!(json.contains("\"count\": 7"), "{json}");
+    assert!(json.contains("\"rule\": \"r1\""));
+    assert!(json.contains("\"file\": \"rust/src/bramac/block.rs\""));
+    // Empty set renders a valid document too.
+    let empty = pallas_lint::to_json(&[]);
+    assert!(empty.contains("\"count\": 0"));
+}

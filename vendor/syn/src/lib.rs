@@ -1,0 +1,613 @@
+//! Minimal offline stand-in for the parts of `syn` that `pallas-lint`
+//! needs: a byte-offset lexer and an item-level parser for `fn` /
+//! `struct` / `impl` / `mod` with `#[cfg(test)]` tracking.
+//!
+//! Like the `anyhow` and `xla` shims, this crate exists so the
+//! workspace builds fully offline (DESIGN.md §0): it is **not** the
+//! real `syn` — no expression trees, no spans beyond byte offsets —
+//! just enough structure for token-pattern lints with accurate
+//! file:line diagnostics. `python/tools/pallas_lint_port.py` mirrors
+//! these semantics 1:1 for desk-checking; behavioral changes here must
+//! land there too.
+//!
+//! Offsets are byte offsets into the source. Comments (line and
+//! nested block) are collected separately so suppression comments can
+//! be matched to lines without re-scanning the source.
+
+/// Token classification — deliberately coarse: lints match on
+/// identifier text and single-character punctuation.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum TokKind {
+    Ident,
+    Number,
+    Str,
+    Char,
+    Lifetime,
+    Punct,
+}
+
+/// One lexed token with its byte offset.
+#[derive(Debug, Clone)]
+pub struct Tok {
+    pub kind: TokKind,
+    pub text: String,
+    pub off: usize,
+}
+
+/// A `//` or `/* */` comment (text includes the delimiters).
+#[derive(Debug, Clone)]
+pub struct Comment {
+    pub off: usize,
+    pub text: String,
+}
+
+/// Lexed source: tokens, comments and a line index.
+#[derive(Debug, Default)]
+pub struct Lexed {
+    pub toks: Vec<Tok>,
+    pub comments: Vec<Comment>,
+    line_starts: Vec<usize>,
+}
+
+impl Lexed {
+    /// 1-based line number containing byte offset `off`.
+    pub fn line_of(&self, off: usize) -> usize {
+        self.line_starts.partition_point(|&s| s <= off)
+    }
+}
+
+fn is_ident_start(b: u8) -> bool {
+    b.is_ascii_alphabetic() || b == b'_'
+}
+
+fn is_ident_cont(b: u8) -> bool {
+    b.is_ascii_alphanumeric() || b == b'_'
+}
+
+/// Length in bytes of the UTF-8 character starting at `b[i]`.
+fn char_len(b: &[u8], i: usize) -> usize {
+    match b[i] {
+        x if x < 0x80 => 1,
+        x if x < 0xE0 => 2,
+        x if x < 0xF0 => 3,
+        _ => 4,
+    }
+}
+
+/// Clamp `j` to a valid char boundary at or past the end of `src`.
+fn boundary(src: &str, mut j: usize) -> usize {
+    if j > src.len() {
+        return src.len();
+    }
+    while j < src.len() && !src.is_char_boundary(j) {
+        j += 1;
+    }
+    j
+}
+
+/// Tokenize `src`. Whitespace is dropped; comments are collected on
+/// the side. Raw strings (`r#"..."#`, `br"..."`), escapes and
+/// lifetime-vs-char-literal disambiguation are handled so that the
+/// token stream never desynchronizes inside real code.
+pub fn lex(src: &str) -> Lexed {
+    let b = src.as_bytes();
+    let n = b.len();
+    let mut toks = Vec::new();
+    let mut comments = Vec::new();
+    let mut i = 0usize;
+    while i < n {
+        let c = b[i];
+        if c == b' ' || c == b'\t' || c == b'\r' || c == b'\n' {
+            i += 1;
+            continue;
+        }
+        if b[i..].starts_with(b"//") {
+            let j = b[i..].iter().position(|&x| x == b'\n').map_or(n, |p| i + p);
+            comments.push(Comment { off: i, text: src[i..j].to_string() });
+            i = j;
+            continue;
+        }
+        if b[i..].starts_with(b"/*") {
+            let start = i;
+            let mut depth = 1usize;
+            let mut j = i + 2;
+            while j < n && depth > 0 {
+                if b[j..].starts_with(b"/*") {
+                    depth += 1;
+                    j += 2;
+                } else if b[j..].starts_with(b"*/") {
+                    depth -= 1;
+                    j += 2;
+                } else {
+                    j += 1;
+                }
+            }
+            let j = boundary(src, j);
+            comments.push(Comment { off: start, text: src[start..j].to_string() });
+            i = j;
+            continue;
+        }
+        // Raw strings: optional `b`, `r`, zero or more `#`, then `"`.
+        if c == b'r' || (c == b'b' && i + 1 < n && b[i + 1] == b'r') {
+            let k = if c == b'b' { i + 1 } else { i };
+            let mut h = k + 1;
+            while h < n && b[h] == b'#' {
+                h += 1;
+            }
+            if h < n && b[h] == b'"' {
+                let hashes = h - (k + 1);
+                let close_len = 1 + hashes;
+                let mut j = h + 1;
+                let mut end = n;
+                while j + close_len <= n {
+                    if b[j] == b'"' && b[j + 1..j + close_len].iter().all(|&x| x == b'#') {
+                        end = j + close_len;
+                        break;
+                    }
+                    j += 1;
+                }
+                let end = boundary(src, end);
+                toks.push(Tok { kind: TokKind::Str, text: src[i..end].to_string(), off: i });
+                i = end;
+                continue;
+            }
+            // Fall through: `r` / `br` starts a plain identifier.
+        }
+        if c == b'"' || (c == b'b' && i + 1 < n && b[i + 1] == b'"') {
+            let mut j = i + if c == b'b' { 2 } else { 1 };
+            while j < n && b[j] != b'"' {
+                j += if b[j] == b'\\' { 2 } else { 1 };
+            }
+            let j = boundary(src, (j + 1).min(n + 1));
+            toks.push(Tok { kind: TokKind::Str, text: src[i..j].to_string(), off: i });
+            i = j;
+            continue;
+        }
+        if c == b'\'' || (c == b'b' && i + 1 < n && b[i + 1] == b'\'') {
+            let k = i + if c == b'b' { 2 } else { 1 };
+            // Lifetime: `'ident` not followed by a closing quote.
+            if c == b'\'' && k < n && is_ident_start(b[k]) {
+                let mut j = k;
+                while j < n && is_ident_cont(b[j]) {
+                    j += 1;
+                }
+                if j < n && b[j] == b'\'' {
+                    toks.push(Tok { kind: TokKind::Char, text: src[i..j + 1].to_string(), off: i });
+                    i = j + 1;
+                } else {
+                    toks.push(Tok { kind: TokKind::Lifetime, text: src[i..j].to_string(), off: i });
+                    i = j;
+                }
+                continue;
+            }
+            let mut j = k;
+            if j < n && b[j] == b'\\' {
+                j += 2;
+                while j < n && b[j] != b'\'' {
+                    j += 1;
+                }
+            } else if j < n {
+                j += char_len(b, j);
+            }
+            let j = boundary(src, (j + 1).min(n + 1));
+            toks.push(Tok { kind: TokKind::Char, text: src[i..j].to_string(), off: i });
+            i = j;
+            continue;
+        }
+        if is_ident_start(c) {
+            let mut j = i + 1;
+            while j < n && is_ident_cont(b[j]) {
+                j += 1;
+            }
+            toks.push(Tok { kind: TokKind::Ident, text: src[i..j].to_string(), off: i });
+            i = j;
+            continue;
+        }
+        if c.is_ascii_digit() {
+            let mut j = i + 1;
+            while j < n && (is_ident_cont(b[j]) || b[j] == b'.') {
+                // Stop floats from eating `..` ranges or `1.max(..)`.
+                if b[j] == b'.'
+                    && (b[j..].starts_with(b"..")
+                        || (j + 1 < n && is_ident_start(b[j + 1])))
+                {
+                    break;
+                }
+                j += 1;
+            }
+            toks.push(Tok { kind: TokKind::Number, text: src[i..j].to_string(), off: i });
+            i = j;
+            continue;
+        }
+        let j = boundary(src, i + char_len(b, i));
+        toks.push(Tok { kind: TokKind::Punct, text: src[i..j].to_string(), off: i });
+        i = j;
+    }
+    let mut line_starts = vec![0usize];
+    for (idx, &ch) in b.iter().enumerate() {
+        if ch == b'\n' {
+            line_starts.push(idx + 1);
+        }
+    }
+    Lexed { toks, comments, line_starts }
+}
+
+/// True when `toks[k]` is the `>` of a `->` or `=>` arrow rather than
+/// a generic close — the two glyphs must be byte-adjacent.
+pub fn is_arrow_gt(toks: &[Tok], k: usize) -> bool {
+    toks[k].text == ">"
+        && k > 0
+        && matches!(toks[k - 1].text.as_str(), "-" | "=")
+        && toks[k - 1].off + 1 == toks[k].off
+}
+
+/// Token index just past the `}` matching `toks[open_idx] == "{"`.
+pub fn match_brace(toks: &[Tok], open_idx: usize) -> usize {
+    let mut depth = 0i64;
+    for (k, t) in toks.iter().enumerate().skip(open_idx) {
+        if t.kind == TokKind::Punct && t.text == "{" {
+            depth += 1;
+        } else if t.kind == TokKind::Punct && t.text == "}" {
+            depth -= 1;
+            if depth == 0 {
+                return k + 1;
+            }
+        }
+    }
+    toks.len()
+}
+
+/// An item-level `fn`: enough signature structure for the lints.
+#[derive(Debug, Clone)]
+pub struct FnDef {
+    pub name: String,
+    /// Byte offset of the fn's name token.
+    pub off: usize,
+    /// Token texts inside the parameter parentheses (flat, nested
+    /// parens included) — lints look for type names like
+    /// `ExecFidelity` here.
+    pub params: Vec<String>,
+    /// `[start, end)` token-index range of the body (empty for
+    /// trait-method declarations without one).
+    pub body: (usize, usize),
+    pub is_pub: bool,
+    pub in_test: bool,
+}
+
+/// A `struct` with named fields (tuple/unit structs have none).
+#[derive(Debug, Clone)]
+pub struct StructDef {
+    pub name: String,
+    pub off: usize,
+    /// `(field_name, byte_offset)` pairs.
+    pub fields: Vec<(String, usize)>,
+}
+
+/// Item-level parse result over one file's token stream.
+#[derive(Debug, Default)]
+pub struct Parsed {
+    pub fns: Vec<FnDef>,
+    pub structs: Vec<StructDef>,
+    /// `(target_type_name, [start, end) body token range)`.
+    pub impls: Vec<(String, (usize, usize))>,
+    /// Token-index ranges under `#[cfg(test)]`.
+    pub test_ranges: Vec<(usize, usize)>,
+}
+
+impl Parsed {
+    /// Is token index `tok_idx` inside a `#[cfg(test)]` region?
+    pub fn in_test(&self, tok_idx: usize) -> bool {
+        self.test_ranges.iter().any(|&(s, e)| s <= tok_idx && tok_idx < e)
+    }
+}
+
+/// `toks[k]`'s text, or `""` past the end.
+fn tok_text(toks: &[Tok], k: usize) -> &str {
+    toks.get(k).map_or("", |t| t.text.as_str())
+}
+
+/// Item-level scan: finds `fn`s (including ones nested in impls and
+/// bodies), `struct`s with their fields, `impl` targets and
+/// `#[cfg(test)]` regions. Expression-level structure is *not*
+/// modeled — lints work on the token stream within the item ranges.
+pub fn parse_items(lx: &Lexed) -> Parsed {
+    let toks = &lx.toks;
+    let len = toks.len();
+    let mut out = Parsed::default();
+    let mut i = 0usize;
+    let mut pending_cfg_test = false;
+    let mut pending_pub = false;
+    while i < len {
+        let t = &toks[i];
+        if t.kind == TokKind::Punct && t.text == "#" {
+            // Attribute: `#[...]` or `#![...]`.
+            let mut j = i + 1;
+            if tok_text(toks, j) == "!" {
+                j += 1;
+            }
+            if tok_text(toks, j) == "[" {
+                let mut depth = 0i64;
+                let mut k = j;
+                while k < len {
+                    if tok_text(toks, k) == "[" {
+                        depth += 1;
+                    } else if tok_text(toks, k) == "]" {
+                        depth -= 1;
+                        if depth == 0 {
+                            break;
+                        }
+                    }
+                    k += 1;
+                }
+                let hi = (k + 1).min(len);
+                let attr: Vec<&str> = toks[j..hi].iter().map(|x| x.text.as_str()).collect();
+                if attr.contains(&"cfg") && attr.contains(&"test") {
+                    pending_cfg_test = true;
+                }
+                i = k + 1;
+                continue;
+            }
+        }
+        if t.kind == TokKind::Ident && t.text == "pub" {
+            pending_pub = true;
+            i += 1;
+            // Skip `pub(crate)` / `pub(super)` visibility scopes.
+            if tok_text(toks, i) == "(" {
+                while i < len && tok_text(toks, i) != ")" {
+                    i += 1;
+                }
+                i += 1;
+            }
+            continue;
+        }
+        if t.kind == TokKind::Ident && t.text == "struct" {
+            let (name, off) = if i + 1 < len {
+                (toks[i + 1].text.clone(), toks[i + 1].off)
+            } else {
+                (String::new(), t.off)
+            };
+            // Find `{` (skipping generics) or `;` / `(` for unit/tuple.
+            let mut k = i + 2;
+            let mut gdepth = 0i64;
+            while k < len {
+                let x = tok_text(toks, k);
+                if x == "<" {
+                    gdepth += 1;
+                } else if x == ">" && !is_arrow_gt(toks, k) {
+                    gdepth -= 1;
+                } else if gdepth == 0 && (x == "{" || x == ";" || x == "(") {
+                    break;
+                }
+                k += 1;
+            }
+            let mut fields = Vec::new();
+            if tok_text(toks, k) == "{" {
+                let end = match_brace(toks, k);
+                let mut depth = 0i64;
+                let mut prev = "{".to_string();
+                for m in k..end {
+                    let x = &toks[m];
+                    if x.text == "{" {
+                        depth += 1;
+                    } else if x.text == "}" {
+                        depth -= 1;
+                    } else if depth == 1
+                        && x.kind == TokKind::Ident
+                        && m + 1 < end
+                        && tok_text(toks, m + 1) == ":"
+                        && matches!(prev.as_str(), "{" | "," | "pub" | ")" | "]")
+                    {
+                        fields.push((x.text.clone(), x.off));
+                    }
+                    if !(x.kind == TokKind::Punct && x.text == "#") {
+                        prev = x.text.clone();
+                    }
+                }
+                i = end;
+            } else {
+                i = k + 1;
+            }
+            out.structs.push(StructDef { name, off, fields });
+            pending_pub = false;
+            pending_cfg_test = false;
+            continue;
+        }
+        if t.kind == TokKind::Ident && t.text == "impl" {
+            // `impl [<..>] Target [for Target2] { .. }` — target is the
+            // last depth-0 type name before the brace.
+            let mut k = i + 1;
+            let mut gdepth = 0i64;
+            let mut names: Vec<String> = Vec::new();
+            while k < len && tok_text(toks, k) != "{" {
+                let x = &toks[k];
+                if x.text == "<" {
+                    gdepth += 1;
+                } else if x.text == ">" && !is_arrow_gt(toks, k) {
+                    gdepth -= 1;
+                } else if gdepth == 0 && x.kind == TokKind::Ident && x.text != "for" {
+                    names.push(x.text.clone());
+                }
+                k += 1;
+            }
+            let end = if k < len { match_brace(toks, k) } else { len };
+            let target = names.last().cloned().unwrap_or_default();
+            out.impls.push((target, (k, end)));
+            if pending_cfg_test {
+                out.test_ranges.push((k, end));
+                pending_cfg_test = false;
+            }
+            pending_pub = false;
+            // Keep scanning inside the impl body (flat fn discovery).
+            i = k + 1;
+            continue;
+        }
+        if t.kind == TokKind::Ident && t.text == "mod" {
+            let mut k = i + 1;
+            while k < len && tok_text(toks, k) != "{" && tok_text(toks, k) != ";" {
+                k += 1;
+            }
+            if tok_text(toks, k) == "{" && pending_cfg_test {
+                let end = match_brace(toks, k);
+                out.test_ranges.push((k, end));
+                i = end;
+                pending_cfg_test = false;
+                pending_pub = false;
+                continue;
+            }
+            i = k + 1;
+            pending_cfg_test = false;
+            pending_pub = false;
+            continue;
+        }
+        if t.kind == TokKind::Ident && t.text == "fn" {
+            let (name, off) = if i + 1 < len {
+                (toks[i + 1].text.clone(), toks[i + 1].off)
+            } else {
+                (String::new(), t.off)
+            };
+            // Parameters: tokens inside the first `(..)` past generics.
+            let mut k = i + 2;
+            let mut gdepth = 0i64;
+            while k < len && !(gdepth == 0 && tok_text(toks, k) == "(") {
+                if tok_text(toks, k) == "<" {
+                    gdepth += 1;
+                } else if tok_text(toks, k) == ">" && !is_arrow_gt(toks, k) {
+                    gdepth -= 1;
+                }
+                k += 1;
+            }
+            let mut pdepth = 0i64;
+            let mut p = k;
+            let mut params = Vec::new();
+            while p < len {
+                if tok_text(toks, p) == "(" {
+                    pdepth += 1;
+                } else if tok_text(toks, p) == ")" {
+                    pdepth -= 1;
+                    if pdepth == 0 {
+                        break;
+                    }
+                }
+                if pdepth >= 1 {
+                    params.push(toks[p].text.clone());
+                }
+                p += 1;
+            }
+            // Body: next `{` at angle depth 0 (skips where-clauses and
+            // `-> Vec<T>` returns), or `;` for a bodiless declaration.
+            let mut q = p + 1;
+            let mut gdepth = 0i64;
+            while q < len {
+                let x = tok_text(toks, q);
+                if gdepth == 0 && (x == "{" || x == ";") {
+                    break;
+                }
+                if x == "<" {
+                    gdepth += 1;
+                } else if x == ">" && !is_arrow_gt(toks, q) {
+                    gdepth -= 1;
+                }
+                q += 1;
+            }
+            let (body, end) = if tok_text(toks, q) == "{" {
+                let end = match_brace(toks, q);
+                ((q, end), end)
+            } else {
+                ((q, q), q + 1)
+            };
+            out.fns.push(FnDef {
+                name,
+                off,
+                params,
+                body,
+                is_pub: pending_pub,
+                in_test: pending_cfg_test,
+            });
+            if pending_cfg_test {
+                out.test_ranges.push(body);
+            }
+            pending_pub = false;
+            pending_cfg_test = false;
+            // Keep scanning inside the body (nested fns).
+            i = if body.0 < body.1 { body.0 + 1 } else { end };
+            continue;
+        }
+        pending_pub = false;
+        pending_cfg_test = false;
+        i += 1;
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn lexes_idents_strings_and_lifetimes() {
+        let lx = lex("fn f<'a>(x: &'a str) -> u32 { \"s\" ; 'c' ; b\"b\" }");
+        let kinds: Vec<TokKind> = lx.toks.iter().map(|t| t.kind).collect();
+        assert!(kinds.contains(&TokKind::Lifetime));
+        assert!(kinds.contains(&TokKind::Str));
+        assert!(kinds.contains(&TokKind::Char));
+        assert_eq!(lx.toks[0].text, "fn");
+    }
+
+    #[test]
+    fn raw_strings_do_not_desync() {
+        let lx = lex("let s = r#\"has \"quotes\" inside\"#; let t = 1;");
+        let idents: Vec<&str> = lx
+            .toks
+            .iter()
+            .filter(|t| t.kind == TokKind::Ident)
+            .map(|t| t.text.as_str())
+            .collect();
+        assert_eq!(idents, ["let", "s", "let", "t"]);
+    }
+
+    #[test]
+    fn comments_and_lines() {
+        let lx = lex("// one\nlet x = 1; /* two\nlines */ let y = 2;\n");
+        assert_eq!(lx.comments.len(), 2);
+        assert_eq!(lx.line_of(lx.comments[0].off), 1);
+        assert_eq!(lx.line_of(lx.toks[0].off), 2);
+    }
+
+    #[test]
+    fn arrow_gt_is_not_a_generic_close() {
+        let lx = lex("fn f(v: Vec<u8>) -> Vec<u8> { v }");
+        let parsed = parse_items(&lx);
+        assert_eq!(parsed.fns.len(), 1);
+        assert_eq!(parsed.fns[0].name, "f");
+        assert!(parsed.fns[0].params.contains(&"Vec".to_string()));
+        // Body must be the brace block, not a runaway range.
+        let (b0, b1) = parsed.fns[0].body;
+        assert!(b0 < b1 && b1 <= lx.toks.len());
+    }
+
+    #[test]
+    fn struct_fields_and_impl_targets() {
+        let src = "pub struct S { pub a: u32, b: Vec<u8> }\n\
+                   impl S { pub fn merge(&mut self, o: &S) { self.a += o.a; } }";
+        let lx = lex(src);
+        let parsed = parse_items(&lx);
+        let s = &parsed.structs[0];
+        assert_eq!(s.name, "S");
+        let names: Vec<&str> = s.fields.iter().map(|(n, _)| n.as_str()).collect();
+        assert_eq!(names, ["a", "b"]);
+        assert_eq!(parsed.impls[0].0, "S");
+        let merge = parsed.fns.iter().find(|f| f.name == "merge").unwrap();
+        assert!(merge.is_pub);
+    }
+
+    #[test]
+    fn cfg_test_regions_cover_mods_and_fns() {
+        let src = "fn lib() {}\n#[cfg(test)]\nmod tests {\n    fn t() { x.unwrap(); }\n}";
+        let lx = lex(src);
+        let parsed = parse_items(&lx);
+        let unwrap_idx = lx.toks.iter().position(|t| t.text == "unwrap").unwrap();
+        assert!(parsed.in_test(unwrap_idx));
+        let lib = parsed.fns.iter().find(|f| f.name == "lib").unwrap();
+        assert!(!parsed.in_test(lib.body.0));
+    }
+}
