@@ -23,7 +23,7 @@ use std::time::{Duration, Instant};
 use bramac::arch::Precision;
 use bramac::bramac::Variant;
 use bramac::coordinator::batcher::submit_and_wait;
-use bramac::coordinator::server::{e2e_network, InferenceServer, IMAGE_ELEMS};
+use bramac::coordinator::server::{e2e_network, ServerConfig, IMAGE_ELEMS};
 use bramac::coordinator::BlockPool;
 use bramac::dla::config::DlaConfig;
 use bramac::dla::cycle::network_cycles;
@@ -78,7 +78,8 @@ fn main() -> anyhow::Result<()> {
 
     // ---- batched serving on the CNN artifact ---------------------------
     println!("\n== batched inference serving (PJRT CNN, batch window 5 ms) ==");
-    let server = InferenceServer::start(dir, "model", Duration::from_millis(5))?;
+    let server =
+        ServerConfig::new(dir, "model").max_wait(Duration::from_millis(5)).start()?;
     let requests = 64usize;
     let t0 = Instant::now();
     let mut latencies = Vec::new();

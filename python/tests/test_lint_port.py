@@ -41,6 +41,7 @@ class LintPortFixtures(unittest.TestCase):
                 "rust/src/dla/cycle.rs:4: r3",
                 "rust/src/dla/cycle.rs:8: r3",
                 "rust/src/coordinator/plan.rs:4: r4",
+                "rust/src/coordinator/plan.rs:11: r4",
                 "rust/src/storage/mod.rs:4: r5",
                 "rust/src/coordinator/server.rs:3: r6",
             ],

@@ -58,6 +58,7 @@ STATS_STRUCTS = [
     "NetworkServerStats",
     "ServerStats",
     "ReplicaServerStats",
+    "PipelineStats",
 ]
 
 # R2: hot files (all non-test fns banned) and hot fns in mixed files.
@@ -93,6 +94,7 @@ FLOAT_ROUNDERS = {"ceil", "floor", "round"}
 LITERAL_STRUCTS = {
     "NetExecConfig": "dla/netexec.rs",
     "PlanKey": "coordinator/plan_cache.rs",
+    "ServerConfig": "coordinator/server.rs",
 }
 
 # R6: differential suites that must name every fidelity-taking pub fn.

@@ -8,6 +8,7 @@
 
 use bramac::arch::Precision;
 use bramac::bramac::ExecFidelity;
+use bramac::coordinator::{PipelineConfig, PipelineEngine};
 use bramac::dla::netexec::{reference_forward, Lowering, NetExec, NetExecConfig, QuantNetwork};
 use bramac::dla::{toy, Dataflow};
 use bramac::util::bench::{black_box, Bench, BenchMeta};
@@ -119,6 +120,36 @@ fn main() {
         },
         || {
             black_box(engine.infer(&input).expect("forward pass"));
+        },
+    );
+
+    // Layer-pipelined serving engine: 2 stages over the toy net, fast
+    // engine. Bit-identity vs the sequential engine is asserted before
+    // timing; `cycles` records the pipeline's modeled closed-loop span
+    // over 8 back-to-back requests so CI tracks the overlap win, and the
+    // wall time tracks the host cost of a pipelined submit.
+    let cfg = NetExecConfig { fidelity: ExecFidelity::Fast, ..NetExecConfig::default() };
+    let pcfg = PipelineConfig { stages: 2, ..PipelineConfig::default() };
+    let span = {
+        let mut warm =
+            PipelineEngine::new(qnet.clone(), cfg, &pcfg).expect("toy fits");
+        for _ in 0..8 {
+            let reply = warm.submit(&input).expect("pipelined pass");
+            assert_eq!(reply.output, want, "pipelined run bit-identical before timing");
+        }
+        warm.stats().span_cycles
+    };
+    let mut pipe = PipelineEngine::new(qnet.clone(), cfg, &pcfg).expect("toy fits");
+    b.bench_meta(
+        "network_infer/toy/4bit/2sa/tiling/pipeline2",
+        BenchMeta {
+            cycles: span,
+            threads: 1,
+            shards: 1,
+            fidelity: ExecFidelity::Fast.name(),
+        },
+        || {
+            black_box(pipe.submit(&input).expect("pipelined pass"));
         },
     );
 

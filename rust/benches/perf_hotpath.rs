@@ -405,6 +405,40 @@ fn main() {
         resident_ns / resident_fast_ns
     );
 
+    // §Perf iteration: layer-pipelined serving (this PR). A 2-stage
+    // pipeline over the toy net must keep replies bit-identical to the
+    // sequential engine while its modeled closed-loop span beats N
+    // sequential makespans (the overlap win; tests/pipeline_serving.rs
+    // pins the >= 1.3x floor on a balanced network). The timed entry is
+    // the host cost of one pipelined submit (two stage passes + the
+    // deterministic timing walk).
+    {
+        use bramac::coordinator::{PipelineConfig, PipelineEngine};
+        use bramac::dla::netexec::{reference_forward, NetExecConfig, QuantNetwork};
+        use bramac::dla::toy;
+        let qnet = QuantNetwork::random(&toy(), p, 0x91fe);
+        let input = qnet.random_input(0x91ff, true);
+        let cfg = NetExecConfig { fidelity: ExecFidelity::Fast, ..NetExecConfig::default() };
+        let pcfg = PipelineConfig { stages: 2, ..PipelineConfig::default() };
+        let want = reference_forward(&qnet, &input, true, true);
+        let span = {
+            let mut warm = PipelineEngine::new(qnet.clone(), cfg, &pcfg).expect("fits");
+            for _ in 0..8 {
+                let reply = warm.submit(&input).expect("pipelined pass");
+                assert_eq!(reply.output, want, "pipelined serving must be bit-identical");
+            }
+            warm.stats().span_cycles
+        };
+        let mut pipe = PipelineEngine::new(qnet.clone(), cfg, &pcfg).expect("fits");
+        b.bench_meta(
+            "pipeline_submit/toy/4bit/2stages",
+            BenchMeta { cycles: span, threads: 1, shards: 1, fidelity: "fast" },
+            || {
+                black_box(pipe.submit(&input).expect("pipelined pass"));
+            },
+        );
+    }
+
     b.finish();
     b.emit_json_env();
 }

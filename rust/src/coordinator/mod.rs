@@ -13,6 +13,7 @@
 //! deployment behind pluggable traffic policies (data parallelism).
 
 pub mod batcher;
+pub mod pipeline;
 pub mod plan_cache;
 pub mod router;
 pub mod scheduler;
@@ -22,12 +23,16 @@ pub mod tiler;
 pub mod workers;
 
 pub use batcher::Batcher;
+pub use pipeline::{
+    balance_stages, stage_ranges, PipelineConfig, PipelineEngine, PipelineReply,
+    PipelineStats, RejectReason, Submission,
+};
 pub use plan_cache::{CachedPlan, PlanCache, PlanKey, DEFAULT_PLAN_CAPACITY};
 pub use router::{NetworkRouter, Policy, ReplicaStats, Router, RouterStats};
 pub use scheduler::{BlockPool, ScheduleStats};
 pub use server::{
     Activations, InferenceServer, NetworkServer, NetworkServerStats, ReplicaServerStats,
-    ServerStats, ShardedServerStats,
+    ServerConfig, ServerStats, ShardedServerStats,
 };
 pub use shard::{shard_rows, PinCursor, ShardedPool, ShardedResident};
 pub use tiler::{plan_gemv, Tile, TilePlan};

@@ -1,0 +1,599 @@
+//! Layer-pipelined serving engine: FIFO-decoupled stages over
+//! [`NetExec`] layer ranges (ROADMAP open item 1 — the "millions of
+//! users" item).
+//!
+//! The hardware shape being mirrored is the decoupled-rules-over-sized-
+//! FIFOs idiom (dual-port BRAM + bounded FIFOs between pipeline rules):
+//! a network's layers are partitioned into contiguous **stages**, each
+//! stage owns its own shard-pool slice (a [`NetExec::new_stage`]
+//! engine), and stages are connected by bounded queues carrying
+//! requant'd activations. Layer `i` of request B then overlaps layer
+//! `i+1` of request A, so sustained throughput approaches the slowest
+//! stage's roofline instead of the whole-network makespan.
+//!
+//! # Determinism and bit-identity
+//!
+//! The pipeline is modeled as a **deterministic discrete-event
+//! simulation** in the DLA cycle domain — no host threads, no wall
+//! clock (`Date`-free determinism is repo law). Functional compute runs
+//! inline per request through the stage engines in admission order;
+//! because every stage executes exactly the layer slice `infer` would
+//! run (global layer indices drive the adapter and the requant
+//! contract), pipelined replies are **bit-identical** to a sequential
+//! [`NetExec::infer`] on both fidelities, both dataflows, and sharded
+//! pools — only the *timing* overlaps. `tests/pipeline_serving.rs`
+//! pins this.
+//!
+//! # Timing model
+//!
+//! Single-server stages with FIFO order and blocking handoff:
+//!
+//! * a request starts stage 0 at `max(arrival, stage-free)`;
+//! * its activation enters queue `s` when stage `s-1` finishes **and**
+//!   the bounded queue has a slot (a slot frees when the entry
+//!   `queue_depth` places ahead starts stage `s`) — until then stage
+//!   `s-1` is **blocked** holding its output (backpressure);
+//! * stage `s` starts it at `max(enter, stage-free)`.
+//!
+//! Admission control bounds in-flight requests: an open-loop arrival
+//! ([`PipelineEngine::try_submit`]) is rejected with a reason when
+//! `max_in_flight` admitted requests are still incomplete.
+//! Per-request latency (completion − arrival), p50/p99, and per-stage
+//! busy/blocked/wait occupancy land in [`PipelineStats`].
+
+use std::collections::VecDeque;
+
+use anyhow::{ensure, Result};
+
+use crate::dla::cycle::layer_cycles_sharded;
+use crate::dla::netexec::{analytical_config, NetExec, NetExecConfig, QuantNetwork, Tensor};
+
+/// How a network is pipelined. `stages = 1` degenerates to sequential
+/// execution through one full-range engine (useful as a control).
+#[derive(Debug, Clone)]
+pub struct PipelineConfig {
+    /// Number of stages (auto-balanced partition; ignored when
+    /// `stage_split` is given).
+    pub stages: usize,
+    /// Manual stage boundaries: interior cut points in `(0, n)`,
+    /// strictly increasing — `vec![2]` on a 5-layer net means stages
+    /// `[0,2)` and `[2,5)`. `None` = auto-balance by per-layer
+    /// analytical cycles ([`balance_stages`]).
+    pub stage_split: Option<Vec<usize>>,
+    /// Bounded inter-stage FIFO depth (activations per queue).
+    pub queue_depth: usize,
+    /// Admission control: max admitted-but-incomplete requests.
+    pub max_in_flight: usize,
+}
+
+impl Default for PipelineConfig {
+    fn default() -> Self {
+        PipelineConfig { stages: 2, stage_split: None, queue_depth: 2, max_in_flight: 8 }
+    }
+}
+
+/// Why an open-loop submission was turned away.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum RejectReason {
+    /// Admission control: `max_in_flight` admitted requests were still
+    /// incomplete at this arrival cycle.
+    Saturated,
+}
+
+impl RejectReason {
+    pub fn describe(&self) -> &'static str {
+        match self {
+            RejectReason::Saturated => "saturated: max in-flight requests outstanding",
+        }
+    }
+}
+
+/// One completed request's reply.
+#[derive(Debug, Clone)]
+pub struct PipelineReply {
+    /// The network's raw final-layer outputs — bit-identical to
+    /// sequential [`NetExec::infer`] on the same input.
+    pub output: Vec<i64>,
+    /// Completion − arrival, in modeled DLA cycles.
+    pub latency_cycles: u64,
+    /// Absolute completion cycle in the pipeline's clock.
+    pub completion_cycle: u64,
+}
+
+/// Outcome of an open-loop [`PipelineEngine::try_submit`].
+#[derive(Debug, Clone)]
+pub enum Submission {
+    Completed(PipelineReply),
+    Rejected(RejectReason),
+}
+
+/// Pipeline serving statistics. Every field must be folded by
+/// [`PipelineStats::merge`] — adding one without merging it is a
+/// pallas-lint r1 (stats-merge) failure.
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
+pub struct PipelineStats {
+    /// Arrivals offered (admitted + rejected).
+    pub submitted: u64,
+    pub admitted: u64,
+    /// Turned away by admission control ([`RejectReason`]).
+    pub rejected: u64,
+    pub completed: u64,
+    /// First admitted arrival → last completion, in modeled cycles
+    /// (the open-loop makespan; throughput = completed / span).
+    pub span_cycles: u64,
+    /// Σ per-request latency (completion − arrival).
+    pub total_latency_cycles: u64,
+    pub max_latency_cycles: u64,
+    /// Nearest-rank percentiles over per-request latencies.
+    pub p50_latency_cycles: u64,
+    pub p99_latency_cycles: u64,
+    /// Per-stage cycles spent computing.
+    pub stage_busy_cycles: Vec<u64>,
+    /// Per-stage cycles spent blocked on a full downstream queue
+    /// (backpressure).
+    pub stage_blocked_cycles: Vec<u64>,
+    /// Per-stage cycles requests spent waiting to start (queued
+    /// upstream of the stage, or pre-admission for stage 0).
+    pub stage_wait_cycles: Vec<u64>,
+}
+
+fn merge_stage_vec(into: &mut Vec<u64>, from: &[u64]) {
+    if into.len() < from.len() {
+        into.resize(from.len(), 0);
+    }
+    for (a, b) in into.iter_mut().zip(from) {
+        *a += b;
+    }
+}
+
+impl PipelineStats {
+    /// Fold another deployment's (e.g. another replica's) pipeline
+    /// stats into this one. Counts and cycle sums add; the span is the
+    /// max (replicas run concurrently); latency percentiles merge as
+    /// the max — a deliberately conservative tail (the true merged
+    /// percentile needs the raw samples, which replicas don't ship).
+    pub fn merge(&mut self, other: &PipelineStats) {
+        self.submitted += other.submitted;
+        self.admitted += other.admitted;
+        self.rejected += other.rejected;
+        self.completed += other.completed;
+        self.span_cycles = self.span_cycles.max(other.span_cycles);
+        self.total_latency_cycles += other.total_latency_cycles;
+        self.max_latency_cycles = self.max_latency_cycles.max(other.max_latency_cycles);
+        self.p50_latency_cycles = self.p50_latency_cycles.max(other.p50_latency_cycles);
+        self.p99_latency_cycles = self.p99_latency_cycles.max(other.p99_latency_cycles);
+        merge_stage_vec(&mut self.stage_busy_cycles, &other.stage_busy_cycles);
+        merge_stage_vec(&mut self.stage_blocked_cycles, &other.stage_blocked_cycles);
+        merge_stage_vec(&mut self.stage_wait_cycles, &other.stage_wait_cycles);
+    }
+}
+
+/// Min-max contiguous partition of `costs` into `stages` parts: the
+/// classic linear-partition DP (n ≤ 37 layers, so O(n²·s) is nothing).
+/// Returns `[lo, hi)` ranges tiling `[0, costs.len())`; fewer than
+/// `stages` ranges when there are fewer layers than stages.
+pub fn balance_stages(costs: &[u64], stages: usize) -> Vec<(usize, usize)> {
+    let n = costs.len();
+    let s = stages.clamp(1, n.max(1));
+    if n == 0 {
+        return Vec::new();
+    }
+    let mut pre = vec![0u64; n + 1];
+    for i in 0..n {
+        pre[i + 1] = pre[i] + costs[i];
+    }
+    const INF: u64 = u64::MAX;
+    // dp[k][i]: minimal max-stage cost covering the first i layers
+    // with k stages; cut[k][i]: the j achieving it.
+    let mut dp = vec![vec![INF; n + 1]; s + 1];
+    let mut cut = vec![vec![0usize; n + 1]; s + 1];
+    dp[0][0] = 0;
+    for k in 1..=s {
+        for i in k..=n {
+            for j in (k - 1)..i {
+                if dp[k - 1][j] == INF {
+                    continue;
+                }
+                let c = dp[k - 1][j].max(pre[i] - pre[j]);
+                if c < dp[k][i] {
+                    dp[k][i] = c;
+                    cut[k][i] = j;
+                }
+            }
+        }
+    }
+    let mut ranges = Vec::with_capacity(s);
+    let (mut k, mut i) = (s, n);
+    while k > 0 {
+        let j = cut[k][i];
+        ranges.push((j, i));
+        i = j;
+        k -= 1;
+    }
+    ranges.reverse();
+    ranges
+}
+
+/// Resolve a pipeline's stage ranges for `qnet` under `cfg`: the manual
+/// split when given, else the auto-balanced partition over per-layer
+/// analytical cycles ([`layer_cycles_sharded`] at the run's dataflow
+/// and shard count).
+pub fn stage_ranges(
+    qnet: &QuantNetwork,
+    cfg: &NetExecConfig,
+    pcfg: &PipelineConfig,
+) -> Result<Vec<(usize, usize)>> {
+    let n = qnet.geoms.len();
+    ensure!(n >= 1, "network has no layers");
+    if let Some(split) = &pcfg.stage_split {
+        let mut bounds = Vec::with_capacity(split.len() + 2);
+        bounds.push(0usize);
+        bounds.extend_from_slice(split);
+        bounds.push(n);
+        for w in bounds.windows(2) {
+            ensure!(
+                w[0] < w[1] && w[1] <= n,
+                "stage split {split:?} must be strictly increasing interior cuts in (0, {n})"
+            );
+        }
+        return Ok(bounds.windows(2).map(|w| (w[0], w[1])).collect());
+    }
+    ensure!(pcfg.stages >= 1, "need at least one stage");
+    let acfg = analytical_config(cfg.variant, qnet.precision);
+    let costs: Vec<u64> = qnet
+        .geoms
+        .iter()
+        .map(|g| layer_cycles_sharded(g, &acfg, cfg.dataflow, cfg.shards))
+        .collect();
+    Ok(balance_stages(&costs, pcfg.stages))
+}
+
+/// The layer-pipelined serving engine: one [`NetExec`] stage engine per
+/// layer range, bounded queues between them, admission control in
+/// front — all in a deterministic modeled-cycle clock (module docs).
+pub struct PipelineEngine {
+    engines: Vec<NetExec>,
+    ranges: Vec<(usize, usize)>,
+    queue_depth: usize,
+    max_in_flight: usize,
+    /// One-time persistent pins summed across stage engines.
+    pub pinned_words: u64,
+    /// Cycle each stage next becomes free.
+    avail: Vec<u64>,
+    /// Per inter-stage queue `s` (feeding stage `s`): stage-start
+    /// cycles of the last `queue_depth` entrants still counted against
+    /// the bound. Index 0 is unused (stage 0 is fed by admission).
+    qhist: Vec<VecDeque<u64>>,
+    /// Completion cycles of admitted requests, FIFO (nondecreasing).
+    inflight: VecDeque<u64>,
+    latencies: Vec<u64>,
+    last_arrival: u64,
+    first_arrival: Option<u64>,
+    last_completion: u64,
+    submitted: u64,
+    admitted: u64,
+    rejected: u64,
+    busy: Vec<u64>,
+    blocked: Vec<u64>,
+    wait: Vec<u64>,
+}
+
+impl PipelineEngine {
+    /// Partition `qnet` into stages and build one
+    /// [`NetExec::new_stage`] engine per range, each on its own
+    /// shard-pool slice (persistent stages pin only their range).
+    pub fn new(
+        qnet: QuantNetwork,
+        cfg: NetExecConfig,
+        pcfg: &PipelineConfig,
+    ) -> Result<PipelineEngine> {
+        ensure!(pcfg.queue_depth >= 1, "need queue depth of at least one activation");
+        ensure!(pcfg.max_in_flight >= 1, "need at least one in-flight request");
+        let ranges = stage_ranges(&qnet, &cfg, pcfg)?;
+        let mut engines = Vec::with_capacity(ranges.len());
+        let mut pinned = 0u64;
+        for &(lo, hi) in &ranges {
+            let e = NetExec::new_stage(qnet.clone(), cfg, lo, hi)?;
+            pinned += e.pinned_words;
+            engines.push(e);
+        }
+        let s = ranges.len();
+        Ok(PipelineEngine {
+            engines,
+            ranges,
+            queue_depth: pcfg.queue_depth,
+            max_in_flight: pcfg.max_in_flight,
+            pinned_words: pinned,
+            avail: vec![0; s],
+            qhist: (0..s).map(|_| VecDeque::new()).collect(),
+            inflight: VecDeque::new(),
+            latencies: Vec::new(),
+            last_arrival: 0,
+            first_arrival: None,
+            last_completion: 0,
+            submitted: 0,
+            admitted: 0,
+            rejected: 0,
+            busy: vec![0; s],
+            blocked: vec![0; s],
+            wait: vec![0; s],
+        })
+    }
+
+    pub fn stages(&self) -> usize {
+        self.engines.len()
+    }
+
+    /// The global layer ranges, one per stage.
+    pub fn ranges(&self) -> &[(usize, usize)] {
+        &self.ranges
+    }
+
+    /// Per-stage analytical cycles (the balance the partitioner saw).
+    pub fn stage_analytical_cycles(&self) -> Vec<u64> {
+        self.engines.iter().map(|e| e.analytical_cycles()).collect()
+    }
+
+    fn drain_completions(&mut self, now: u64) {
+        while let Some(&c) = self.inflight.front() {
+            if c <= now {
+                self.inflight.pop_front();
+            } else {
+                break;
+            }
+        }
+    }
+
+    /// Open-loop submission at an explicit `arrival` cycle (from a
+    /// load-generator trace; arrivals must be nondecreasing). Rejected
+    /// with a reason when admission control is saturated; otherwise the
+    /// request runs to completion in the modeled clock and the reply
+    /// carries its output and latency.
+    pub fn try_submit(&mut self, arrival: u64, input: &Tensor) -> Result<Submission> {
+        ensure!(
+            arrival >= self.last_arrival,
+            "arrivals must be nondecreasing (open-loop trace): {arrival} < {}",
+            self.last_arrival
+        );
+        self.last_arrival = arrival;
+        self.submitted += 1;
+        self.drain_completions(arrival);
+        if self.inflight.len() >= self.max_in_flight {
+            self.rejected += 1;
+            return Ok(Submission::Rejected(RejectReason::Saturated));
+        }
+        self.admit(arrival, input).map(Submission::Completed)
+    }
+
+    /// Closed-loop submission: the request arrives as early as
+    /// admission control allows (now, or the cycle the bounding
+    /// in-flight request completes) — it is never rejected. This is the
+    /// serving path ([`crate::coordinator::InferenceServer`]).
+    pub fn submit(&mut self, input: &Tensor) -> Result<PipelineReply> {
+        let mut arrival = self.last_arrival;
+        self.drain_completions(arrival);
+        if self.inflight.len() >= self.max_in_flight {
+            // The k-th oldest outstanding completion frees a slot.
+            let k = self.inflight.len() - self.max_in_flight;
+            arrival = arrival.max(self.inflight[k]);
+            self.drain_completions(arrival);
+        }
+        self.last_arrival = arrival;
+        self.submitted += 1;
+        self.admit(arrival, input)
+    }
+
+    fn admit(&mut self, arrival: u64, input: &Tensor) -> Result<PipelineReply> {
+        self.admitted += 1;
+        if self.first_arrival.is_none() {
+            self.first_arrival = Some(arrival);
+        }
+        let s_count = self.engines.len();
+        // Functional pass: the request's activations flow through the
+        // stage engines inline (results are interleaving-independent),
+        // yielding each stage's measured makespan for the timing walk.
+        let mut act = input.clone();
+        let mut output = Vec::new();
+        let mut makespans = Vec::with_capacity(s_count);
+        for eng in &mut self.engines {
+            let so = eng.run_stage(&act)?;
+            makespans.push(so.total.makespan_cycles);
+            if let Some(y) = so.output {
+                output = y;
+            }
+            if let Some(n) = so.next {
+                act = n;
+            }
+        }
+        // Timing walk (module docs): FIFO single-server stages with
+        // bounded-queue blocking handoff.
+        let start0 = arrival.max(self.avail[0]);
+        self.wait[0] += start0 - arrival;
+        self.busy[0] += makespans[0];
+        let mut finish = start0 + makespans[0];
+        self.avail[0] = finish;
+        for s in 1..s_count {
+            let mut space = 0u64;
+            if self.qhist[s].len() >= self.queue_depth {
+                if let Some(t) = self.qhist[s].pop_front() {
+                    space = t;
+                }
+            }
+            // The activation enters queue s when stage s-1 is done AND
+            // the queue has a slot; stage s-1 blocks until then.
+            let enter = finish.max(space);
+            self.blocked[s - 1] += enter - finish;
+            self.avail[s - 1] = self.avail[s - 1].max(enter);
+            let st = enter.max(self.avail[s]);
+            self.wait[s] += st - enter;
+            self.busy[s] += makespans[s];
+            finish = st + makespans[s];
+            self.avail[s] = finish;
+            self.qhist[s].push_back(st);
+        }
+        self.inflight.push_back(finish);
+        self.last_completion = self.last_completion.max(finish);
+        let latency = finish - arrival;
+        self.latencies.push(latency);
+        Ok(PipelineReply {
+            output,
+            latency_cycles: latency,
+            completion_cycle: finish,
+        })
+    }
+
+    /// Snapshot the pipeline's statistics (percentiles are computed
+    /// nearest-rank over all completed requests so far).
+    pub fn stats(&self) -> PipelineStats {
+        let mut lat = self.latencies.clone();
+        lat.sort_unstable();
+        let pct = |p: f64| -> u64 {
+            if lat.is_empty() {
+                return 0;
+            }
+            let rank = ((p * lat.len() as f64).ceil() as usize).clamp(1, lat.len());
+            lat[rank - 1]
+        };
+        PipelineStats {
+            submitted: self.submitted,
+            admitted: self.admitted,
+            rejected: self.rejected,
+            completed: self.latencies.len() as u64,
+            span_cycles: self
+                .last_completion
+                .saturating_sub(self.first_arrival.unwrap_or(0)),
+            total_latency_cycles: self.latencies.iter().sum(),
+            max_latency_cycles: lat.last().copied().unwrap_or(0),
+            p50_latency_cycles: pct(0.50),
+            p99_latency_cycles: pct(0.99),
+            stage_busy_cycles: self.busy.clone(),
+            stage_blocked_cycles: self.blocked.clone(),
+            stage_wait_cycles: self.wait.clone(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::arch::Precision;
+    use crate::bramac::ExecFidelity;
+    use crate::dla::models::toy;
+    use crate::dla::netexec::reference_forward;
+
+    #[test]
+    fn balance_stages_minimizes_max_stage() {
+        // 4 layers, costs 10/1/1/10 → 2 stages must cut in the middle.
+        assert_eq!(balance_stages(&[10, 1, 1, 10], 2), vec![(0, 2), (2, 4)]);
+        // More stages than layers degrade to one layer per stage.
+        assert_eq!(balance_stages(&[5, 5], 4), vec![(0, 1), (1, 2)]);
+        // One stage is the whole range.
+        assert_eq!(balance_stages(&[3, 9, 2], 1), vec![(0, 3)]);
+        // Dominant first layer stays alone.
+        assert_eq!(balance_stages(&[100, 5, 5, 5], 2), vec![(0, 1), (1, 4)]);
+    }
+
+    #[test]
+    fn pipelined_toy_replies_match_sequential_infer() {
+        let net = toy();
+        let qnet = QuantNetwork::random(&net, Precision::Int4, 0x919e);
+        let cfg = NetExecConfig { fidelity: ExecFidelity::Fast, ..NetExecConfig::default() };
+        let pcfg = PipelineConfig { stages: 2, ..PipelineConfig::default() };
+        let mut pipe = PipelineEngine::new(qnet.clone(), cfg, &pcfg).expect("toy fits");
+        assert_eq!(pipe.stages(), 2);
+        assert_eq!(pipe.ranges().iter().map(|&(l, h)| h - l).sum::<usize>(), 3);
+        for i in 0..4u64 {
+            let input = qnet.random_input(0x100 + i, true);
+            let want = reference_forward(&qnet, &input, true, true);
+            let reply = pipe.submit(&input).expect("pipelined pass");
+            assert_eq!(reply.output, want, "request {i}");
+            assert!(reply.latency_cycles > 0);
+        }
+        let stats = pipe.stats();
+        assert_eq!(stats.admitted, 4);
+        assert_eq!(stats.completed, 4);
+        assert_eq!(stats.rejected, 0);
+        assert!(stats.span_cycles > 0);
+        assert!(stats.p50_latency_cycles <= stats.p99_latency_cycles);
+        assert!(stats.p99_latency_cycles <= stats.max_latency_cycles);
+    }
+
+    #[test]
+    fn admission_control_rejects_when_saturated() {
+        let net = toy();
+        let qnet = QuantNetwork::random(&net, Precision::Int4, 0xadd);
+        let cfg = NetExecConfig { fidelity: ExecFidelity::Fast, ..NetExecConfig::default() };
+        let pcfg = PipelineConfig {
+            stages: 2,
+            max_in_flight: 1,
+            ..PipelineConfig::default()
+        };
+        let mut pipe = PipelineEngine::new(qnet.clone(), cfg, &pcfg).expect("toy fits");
+        let input = qnet.random_input(7, true);
+        // All arrivals at cycle 0: the first is admitted, the second
+        // collides with it still in flight.
+        let first = pipe.try_submit(0, &input).expect("first");
+        assert!(matches!(first, Submission::Completed(_)));
+        let second = pipe.try_submit(0, &input).expect("second");
+        match second {
+            Submission::Rejected(r) => {
+                assert_eq!(r, RejectReason::Saturated);
+                assert!(!r.describe().is_empty());
+            }
+            Submission::Completed(_) => panic!("expected rejection at max_in_flight=1"),
+        }
+        // Past the first completion, admission reopens.
+        let c1 = match pipe.try_submit(u64::MAX / 2, &input).expect("third") {
+            Submission::Completed(r) => r,
+            Submission::Rejected(_) => panic!("in-flight drained; must admit"),
+        };
+        assert!(c1.completion_cycle > 0);
+        let stats = pipe.stats();
+        assert_eq!((stats.submitted, stats.admitted, stats.rejected), (3, 2, 1));
+    }
+
+    #[test]
+    fn merge_folds_every_field() {
+        let mut a = PipelineStats {
+            submitted: 1,
+            admitted: 1,
+            rejected: 0,
+            completed: 1,
+            span_cycles: 10,
+            total_latency_cycles: 10,
+            max_latency_cycles: 10,
+            p50_latency_cycles: 10,
+            p99_latency_cycles: 10,
+            stage_busy_cycles: vec![4, 6],
+            stage_blocked_cycles: vec![0, 1],
+            stage_wait_cycles: vec![2, 0],
+        };
+        let b = PipelineStats {
+            submitted: 3,
+            admitted: 2,
+            rejected: 1,
+            completed: 2,
+            span_cycles: 8,
+            total_latency_cycles: 14,
+            max_latency_cycles: 9,
+            p50_latency_cycles: 6,
+            p99_latency_cycles: 9,
+            stage_busy_cycles: vec![3, 3],
+            stage_blocked_cycles: vec![1, 0],
+            stage_wait_cycles: vec![0, 2],
+        };
+        a.merge(&b);
+        assert_eq!(a.submitted, 4);
+        assert_eq!(a.admitted, 3);
+        assert_eq!(a.rejected, 1);
+        assert_eq!(a.completed, 3);
+        assert_eq!(a.span_cycles, 10, "spans overlap: max, not sum");
+        assert_eq!(a.total_latency_cycles, 24);
+        assert_eq!(a.max_latency_cycles, 10);
+        assert_eq!(a.p50_latency_cycles, 10);
+        assert_eq!(a.p99_latency_cycles, 10);
+        assert_eq!(a.stage_busy_cycles, vec![7, 9]);
+        assert_eq!(a.stage_blocked_cycles, vec![1, 1]);
+        assert_eq!(a.stage_wait_cycles, vec![2, 2]);
+    }
+}

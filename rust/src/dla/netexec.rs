@@ -824,12 +824,38 @@ fn run_layer_batchn(
     (y, stats, dispatches, macs)
 }
 
+/// One stage pass through an engine's layer range
+/// ([`NetExec::run_stage`]): the requant'd activation to hand to the
+/// next stage, or the network's raw final outputs when the range ends
+/// the network — plus the stage's measured stats and per-layer
+/// breakdown.
+#[derive(Debug, Clone)]
+pub struct StageOutput {
+    /// Requant'd activation feeding the next stage (`Some` unless the
+    /// range ends the network).
+    pub next: Option<Tensor>,
+    /// Last layer's raw `i64` outputs (`Some` iff the range ends the
+    /// network).
+    pub output: Option<Vec<i64>>,
+    pub layers: Vec<LayerReport>,
+    /// Sequential total over the range's layers (makespans add).
+    pub total: ScheduleStats,
+    /// Peak im2col columns alive on the host in any layer of the range.
+    pub peak_patch_cols: usize,
+}
+
 /// The functional network inference engine: one [`ShardedPool`] serving
-/// a whole [`QuantNetwork`], with per-layer resident pinning
-/// (persistent) or streamed weights (tiling).
+/// a whole [`QuantNetwork`] — or, via [`NetExec::new_stage`], a
+/// contiguous layer range of it (one pipeline stage). All resource
+/// sizing (pool blocks, persistent pins, analytical totals, the tiling
+/// weight cache) is scoped to the engine's range.
 pub struct NetExec {
     qnet: QuantNetwork,
     cfg: NetExecConfig,
+    /// Global layer range `[lo, hi)` this engine executes. The full
+    /// network ([`NetExec::new`]) is `[0, geoms.len())`.
+    lo: usize,
+    hi: usize,
     pool: ShardedPool,
     /// Per-layer resident layouts (persistent dataflow only).
     residents: Option<Vec<ShardedResident>>,
@@ -858,14 +884,38 @@ impl NetExec {
     /// `cfg.blocks_per_shard == 0`) and, for the persistent dataflow,
     /// pin every layer's weights into the shared on-chip arena.
     pub fn new(qnet: QuantNetwork, cfg: NetExecConfig) -> Result<NetExec> {
+        let n = qnet.geoms.len();
+        NetExec::new_stage(qnet, cfg, 0, n)
+    }
+
+    /// Build an engine restricted to the global layer range `[lo, hi)`
+    /// — one pipeline stage of the network
+    /// ([`crate::coordinator::PipelineEngine`]). Pool sizing,
+    /// persistent pinning, the analytical totals and the tiling weight
+    /// cache are all scoped to the range's sub-network; `[0, n)` is
+    /// exactly [`NetExec::new`]. Note a stage engine pins its range
+    /// from a fresh arena cursor, so persistent *placement* (and thus
+    /// per-layer makespans) may differ from the whole-network engine —
+    /// results never do (values are placement-independent).
+    pub fn new_stage(
+        qnet: QuantNetwork,
+        cfg: NetExecConfig,
+        lo: usize,
+        hi: usize,
+    ) -> Result<NetExec> {
         ensure!(cfg.shards >= 1, "need at least one shard");
+        ensure!(
+            lo < hi && hi <= qnet.geoms.len(),
+            "bad layer range {lo}..{hi} for a {}-layer network",
+            qnet.geoms.len()
+        );
         let blocks = if cfg.blocks_per_shard > 0 {
             cfg.blocks_per_shard
         } else {
             match cfg.dataflow {
                 Dataflow::Tiling => DEFAULT_TILING_BLOCKS,
                 Dataflow::Persistent => {
-                    persistent_blocks_per_shard(&qnet.geoms, qnet.precision, cfg.shards)
+                    persistent_blocks_per_shard(&qnet.geoms[lo..hi], qnet.precision, cfg.shards)
                 }
             }
         };
@@ -876,9 +926,9 @@ impl NetExec {
             Dataflow::Tiling => (None, 0),
             Dataflow::Persistent => {
                 let mut cur = pool.pin_cursor();
-                let mut layouts = Vec::with_capacity(qnet.geoms.len());
+                let mut layouts = Vec::with_capacity(hi - lo);
                 let mut pinned = 0u64;
-                for li in 0..qnet.geoms.len() {
+                for li in lo..hi {
                     let w = qnet.layer_weights(li);
                     let sr = pool.pin_with(&w, &mut cur).map_err(|e| {
                         anyhow::anyhow!("pinning layer '{}': {e:#}", qnet.geoms[li].name)
@@ -893,7 +943,7 @@ impl NetExec {
             }
         };
         let acfg = analytical_config(cfg.variant, qnet.precision);
-        let net = qnet.network();
+        let net = Network { name: qnet.net_name, layers: qnet.geoms[lo..hi].to_vec() };
         let analytical = (
             network_cycles_sharded(&net, &acfg, cfg.dataflow, cfg.shards),
             network_cycles_sharded(&net, &acfg, Dataflow::Tiling, cfg.shards),
@@ -903,15 +953,19 @@ impl NetExec {
         let tiling_weights = match cfg.dataflow {
             Dataflow::Persistent => None,
             Dataflow::Tiling => {
-                let elems: u64 =
-                    qnet.geoms.iter().map(|g| (g.k * g.c * g.r * g.s) as u64).sum();
+                let elems: u64 = qnet.geoms[lo..hi]
+                    .iter()
+                    .map(|g| (g.k * g.c * g.r * g.s) as u64)
+                    .sum();
                 (elems <= TILING_WEIGHT_CACHE_ELEMS)
-                    .then(|| (0..qnet.geoms.len()).map(|li| qnet.layer_weights(li)).collect())
+                    .then(|| (lo..hi).map(|li| qnet.layer_weights(li)).collect())
             }
         };
         Ok(NetExec {
             qnet,
             cfg,
+            lo,
+            hi,
             pool,
             residents,
             pinned_words,
@@ -943,19 +997,38 @@ impl NetExec {
         self.pool.fidelity()
     }
 
-    /// One forward pass: every layer lowered via im2col to GEMV /
-    /// batch-2 dispatches on the pool, requantized between layers, with
-    /// real per-layer [`ScheduleStats`] accumulated into the report.
-    pub fn infer(&mut self, input: &Tensor) -> Result<NetExecReport> {
-        let (c0, h0, w0) = input_shape_for(&self.qnet.geoms[0]);
-        ensure!(
-            (input.c, input.h, input.w) == (c0, h0, w0),
-            "input volume {}x{}x{} does not match layer '{}' input {c0}x{h0}x{w0}",
-            input.c,
-            input.h,
-            input.w,
-            self.qnet.geoms[0].name
-        );
+    /// The global layer range `[lo, hi)` this engine executes.
+    pub fn layer_range(&self) -> (usize, usize) {
+        (self.lo, self.hi)
+    }
+
+    /// Analytical cycles for this engine's range under its configured
+    /// dataflow and shard count ([`network_cycles_sharded`] over the
+    /// range's sub-network).
+    pub fn analytical_cycles(&self) -> u64 {
+        self.analytical.0
+    }
+
+    /// Run this engine's layer range `[lo, hi)` once: the range's
+    /// layers lowered onto the pool exactly as [`NetExec::infer`] would
+    /// run them inside the full network — global layer indices drive
+    /// the adapter (`li > 0`) and the requant contract (every layer
+    /// requantizes except the network's global last, whose raw outputs
+    /// become [`StageOutput::output`]). Chaining stage engines that
+    /// tile `[0, n)` is therefore bit-identical to one full-range
+    /// [`NetExec::infer`].
+    pub fn run_stage(&mut self, input: &Tensor) -> Result<StageOutput> {
+        if self.lo == 0 {
+            let (c0, h0, w0) = input_shape_for(&self.qnet.geoms[0]);
+            ensure!(
+                (input.c, input.h, input.w) == (c0, h0, w0),
+                "input volume {}x{}x{} does not match layer '{}' input {c0}x{h0}x{w0}",
+                input.c,
+                input.h,
+                input.w,
+                self.qnet.geoms[0].name
+            );
+        }
         let signed = self.cfg.signed_inputs;
         let relu = self.cfg.relu;
         let use_batch2 = self.cfg.variant == Variant::TwoSA;
@@ -967,10 +1040,11 @@ impl NetExec {
         let acfg = analytical_config(self.cfg.variant, self.qnet.precision);
         let nlayers = self.qnet.geoms.len();
         let mut act = input.clone();
-        let mut layers = Vec::with_capacity(nlayers);
-        let mut output = Vec::new();
+        let mut layers = Vec::with_capacity(self.hi - self.lo);
+        let mut output = None;
+        let mut next = None;
         let mut peak_patch_cols = 0usize;
-        for li in 0..nlayers {
+        for li in self.lo..self.hi {
             let g = self.qnet.geoms[li].clone();
             let (ci, hi, wi) = input_shape_for(&g);
             if li > 0 {
@@ -991,14 +1065,14 @@ impl NetExec {
             let tiling_w: Option<&IntMatrix> = match self.cfg.dataflow {
                 Dataflow::Persistent => None,
                 Dataflow::Tiling => match self.tiling_weights.as_ref() {
-                    Some(ws) => Some(&ws[li]),
+                    Some(ws) => Some(&ws[li - self.lo]),
                     None => {
                         generated = self.qnet.layer_weights(li);
                         Some(&generated)
                     }
                 },
             };
-            let resident = self.residents.as_ref().map(|v| &v[li]);
+            let resident = self.residents.as_ref().map(|v| &v[li - self.lo]);
             let (y, stats, dispatches, macs) = if legacy {
                 run_layer_on_pool(
                     &mut self.pool,
@@ -1047,13 +1121,27 @@ impl NetExec {
                 requant_shift: shift,
             });
             if li + 1 == nlayers {
-                output = y;
+                output = Some(y);
+            } else if li + 1 == self.hi {
+                next = Some(act.clone());
             }
         }
         let mut total = ScheduleStats::default();
         for l in &layers {
             total.merge_seq(&l.stats);
         }
+        Ok(StageOutput { next, output, layers, total, peak_patch_cols })
+    }
+
+    /// One forward pass: every layer lowered via im2col to GEMV /
+    /// batch-2 dispatches on the pool, requantized between layers, with
+    /// real per-layer [`ScheduleStats`] accumulated into the report.
+    /// Built on [`NetExec::run_stage`] over the engine's whole range.
+    pub fn infer(&mut self, input: &Tensor) -> Result<NetExecReport> {
+        let batch = self.cfg.batch_width();
+        let stage = self.run_stage(input)?;
+        let StageOutput { output, layers, total, peak_patch_cols, .. } = stage;
+        let output = output.unwrap_or_default();
         Ok(NetExecReport {
             network: self.qnet.net_name,
             precision: self.qnet.precision,

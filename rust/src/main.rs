@@ -11,8 +11,11 @@ use anyhow::{bail, Result};
 use bramac::arch::Precision;
 use bramac::bramac::{ExecFidelity, Variant};
 use bramac::coordinator::batcher::submit_and_wait;
-use bramac::coordinator::server::{InferenceServer, IMAGE_ELEMS};
-use bramac::coordinator::{BlockPool, Policy, ShardedPool};
+use bramac::coordinator::server::{ServerConfig, IMAGE_ELEMS};
+use bramac::coordinator::{
+    BlockPool, PipelineConfig, PipelineEngine, Policy, ShardedPool, Submission,
+};
+use bramac::throughput::{arrival_trace, ArrivalPattern};
 use bramac::dla::netexec::{
     network_by_name, reference_forward, Lowering, NetExec, NetExecConfig, QuantNetwork,
 };
@@ -95,6 +98,9 @@ drivers:
         [--model toy|alexnet|resnet34] [--precision 2|4|8]
         [--variant 2sa|1da] [--lowering im2col|streaming]
         [--batch W] [--batch-size B] [--seed X]
+        [--pipeline-stages N] [--queue-depth D] [--max-in-flight F]
+        [--loadgen poisson|bursty] [--mean-gap G] [--burst K]
+        [--intra-gap C]
                   start the batched PJRT inference server on a
                   synthetic request stream and report throughput
                   (persistent = warm sessions: weight copies charged
@@ -110,7 +116,20 @@ drivers:
                   PJRT artifacts), batches of B requests formed per
                   window, each reply verified bit-identical to the
                   pure-host reference; --lowering/--batch configure
-                  the conv lowering exactly as in `infer`
+                  the conv lowering exactly as in `infer`.
+                  --pipeline-stages N >= 2 layer-pipelines each
+                  replica: layers split into N stages (auto-balanced
+                  by analytical cycles) with bounded queues of depth D
+                  between them and at most F requests in flight, so
+                  layer i of one request overlaps layer i+1 of the
+                  previous one (replies stay bit-identical; p50/p99
+                  latency and per-stage occupancy are reported).
+                  --loadgen replays a deterministic seeded open-loop
+                  arrival trace (Poisson with mean gap G cycles, or
+                  bursts of K spaced C cycles) straight into the
+                  pipeline with admission control, rejecting arrivals
+                  beyond F in flight — single-threaded and
+                  byte-reproducible for CI smoke runs
   check           verify artifacts + PJRT runtime are functional
   bench-check --current F [--baseline BENCH_pr6.json] [--tolerance 0.2]
               [--absolute] [--fidelity bit-accurate|fast]
@@ -541,27 +560,18 @@ fn cmd_serve(args: &[String]) -> Result<()> {
         );
     }
     let dir = Manifest::default_dir();
-    let server = if sharded {
-        InferenceServer::start_sharded_with_fidelity(
-            dir,
-            "model",
-            Duration::from_millis(window_ms),
-            shards,
-            replicas,
-            dataflow,
-            policy,
-            fidelity,
-        )?
+    // One builder for both deployments: setting a policy (or shards /
+    // replicas > 1) routes to the sharded dispatcher.
+    let mut config = ServerConfig::new(dir, "model")
+        .max_wait(Duration::from_millis(window_ms))
+        .dataflow(dataflow)
+        .fidelity(fidelity);
+    config = if sharded {
+        config.shards(shards).replicas(replicas).policy(policy)
     } else {
-        InferenceServer::start_with_fidelity(
-            dir,
-            "model",
-            Duration::from_millis(window_ms),
-            workers.max(1),
-            dataflow,
-            fidelity,
-        )?
+        config.workers(workers.max(1))
     };
+    let server = config.start()?;
     if sharded {
         println!(
             "serving synthetic stream: {requests} requests, batch={} window={window_ms}ms \
@@ -673,6 +683,10 @@ fn serve_network(args: &[String], model: &str) -> Result<()> {
         "1da" => Variant::OneDA,
         v => bail!("--variant must be 2sa or 1da, got {v}"),
     };
+    let pipeline_stages: usize = flag(args, "--pipeline-stages", 1)?;
+    let queue_depth: usize = flag::<usize>(args, "--queue-depth", 2)?.max(1);
+    let max_in_flight: usize = flag::<usize>(args, "--max-in-flight", 8)?.max(1);
+    let loadgen: String = flag(args, "--loadgen", String::new())?;
     let net = network_by_name(model)
         .ok_or_else(|| anyhow::anyhow!("unknown model '{model}' (toy|alexnet|resnet34)"))?;
     let qnet = QuantNetwork::random(&net, p, seed);
@@ -688,23 +702,39 @@ fn serve_network(args: &[String], model: &str) -> Result<()> {
         lowering,
         batch,
     };
-    let server = InferenceServer::start_network(
-        qnet.clone(),
-        cfg,
-        batch_size,
-        Duration::from_millis(window_ms),
-        replicas,
-        policy,
-    )?;
+    if !loadgen.is_empty() {
+        return serve_loadgen(
+            args,
+            &loadgen,
+            &qnet,
+            cfg,
+            requests,
+            pipeline_stages.max(2),
+            queue_depth,
+            max_in_flight,
+            seed,
+        );
+    }
+    let server = ServerConfig::network(qnet.clone())
+        .exec(cfg)
+        .batch(batch_size)
+        .max_wait(Duration::from_millis(window_ms))
+        .replicas(replicas)
+        .policy(policy)
+        .pipeline(pipeline_stages)
+        .queue_depth(queue_depth)
+        .max_in_flight(max_in_flight)
+        .start_network()?;
     println!(
         "serving {model} on {replicas} NetExec replica(s): {requests} requests, \
          batch={batch_size} window={window_ms}ms shards={shards} policy={} \
-         dataflow={} fidelity={} lowering={} mvm-batch={}",
+         dataflow={} fidelity={} lowering={} mvm-batch={} pipeline-stages={}",
         policy.name(),
         dataflow.name(),
         server.fidelity.name(),
         lowering.name(),
-        cfg.batch_width()
+        cfg.batch_width(),
+        server.pipeline_stages
     );
     let t0 = std::time::Instant::now();
     let mut handles = Vec::new();
@@ -725,7 +755,8 @@ fn serve_network(args: &[String], model: &str) -> Result<()> {
         );
     }
     let wall = t0.elapsed();
-    let stats = server.shutdown();
+    let pipelined = server.pipeline_stages >= 2;
+    let (stats, pipe) = server.shutdown_with_pipeline();
     println!(
         "done: {} requests in {} batches, wall {:.1} ms ({:.1} req/s) — every reply \
          bit-identical to the host reference",
@@ -746,6 +777,105 @@ fn serve_network(args: &[String], model: &str) -> Result<()> {
             rep.requests, rep.batches, rep.attributed_cycles, rep.weight_copy_cycles
         );
     }
+    if pipelined {
+        print_pipeline_stats(&pipe);
+    }
+    Ok(())
+}
+
+/// Pretty-print a merged [`bramac::coordinator::PipelineStats`].
+fn print_pipeline_stats(pipe: &bramac::coordinator::PipelineStats) {
+    println!(
+        "  pipeline: {} admitted / {} rejected of {} submitted, span {} cycles \
+         ({:.4} req/kcycle)",
+        pipe.admitted,
+        pipe.rejected,
+        pipe.submitted,
+        pipe.span_cycles,
+        if pipe.span_cycles > 0 {
+            pipe.completed as f64 * 1e3 / pipe.span_cycles as f64
+        } else {
+            0.0
+        }
+    );
+    println!(
+        "  latency cycles: p50 {} p99 {} max {}",
+        pipe.p50_latency_cycles, pipe.p99_latency_cycles, pipe.max_latency_cycles
+    );
+    for (s, ((busy, blocked), wait)) in pipe
+        .stage_busy_cycles
+        .iter()
+        .zip(&pipe.stage_blocked_cycles)
+        .zip(&pipe.stage_wait_cycles)
+        .enumerate()
+    {
+        println!("  stage {s}: busy {busy} blocked {blocked} wait {wait} cycles");
+    }
+}
+
+/// `serve --model M --loadgen poisson|bursty`: open-loop trace-driven
+/// load generation straight into a [`PipelineEngine`] — single-threaded
+/// and fully deterministic (seeded arrivals, modeled-cycle clock), so
+/// CI can smoke the pipelined path and diff its output. Every admitted
+/// reply is verified against the pure-host reference.
+#[allow(clippy::too_many_arguments)]
+fn serve_loadgen(
+    args: &[String],
+    pattern_s: &str,
+    qnet: &QuantNetwork,
+    cfg: NetExecConfig,
+    requests: usize,
+    stages: usize,
+    queue_depth: usize,
+    max_in_flight: usize,
+    seed: u64,
+) -> Result<()> {
+    let mean_gap: f64 = flag(args, "--mean-gap", 400.0)?;
+    let burst: usize = flag::<usize>(args, "--burst", 4)?.max(1);
+    let intra_gap: u64 = flag(args, "--intra-gap", 10)?;
+    let pattern = match pattern_s {
+        "poisson" => ArrivalPattern::Poisson { mean_gap_cycles: mean_gap },
+        "bursty" => ArrivalPattern::Bursty {
+            burst,
+            intra_gap_cycles: intra_gap,
+            mean_burst_gap_cycles: mean_gap,
+        },
+        v => bail!("--loadgen must be poisson or bursty, got {v}"),
+    };
+    let pcfg = PipelineConfig {
+        stages,
+        stage_split: None,
+        queue_depth,
+        max_in_flight,
+    };
+    let mut pipe = PipelineEngine::new(qnet.clone(), cfg, &pcfg)?;
+    println!(
+        "loadgen {pattern_s}: {requests} arrivals (seed {seed:#x}, mean gap {mean_gap} \
+         cycles) into a {}-stage pipeline (ranges {:?}, queue depth {queue_depth}, \
+         max in-flight {max_in_flight}, fidelity {})",
+        pipe.stages(),
+        pipe.ranges(),
+        cfg.fidelity.name()
+    );
+    let trace = arrival_trace(pattern, requests, seed);
+    for (i, &arrival) in trace.iter().enumerate() {
+        let input = qnet.random_input(seed ^ (0x10ad_0000 + i as u64), true);
+        match pipe.try_submit(arrival, &input)? {
+            Submission::Completed(reply) => {
+                let want = reference_forward(qnet, &input, true, true);
+                anyhow::ensure!(
+                    reply.output == want,
+                    "pipelined output diverged from the pure-host reference (request {i})"
+                );
+            }
+            Submission::Rejected(r) => {
+                println!("  arrival {arrival}: rejected ({})", r.describe());
+            }
+        }
+    }
+    let stats = pipe.stats();
+    print_pipeline_stats(&stats);
+    println!("loadgen OK: every admitted reply bit-identical to the host reference");
     Ok(())
 }
 

@@ -1,0 +1,123 @@
+//! Open-loop trace-driven load generator for the pipelined serving
+//! engine ([`crate::coordinator::PipelineEngine`]).
+//!
+//! Traces are **deterministic**: a seed fully determines the arrival
+//! schedule (`Date`-free determinism is repo law), so latency/throughput
+//! experiments replay bit-identically — `tests/pipeline_serving.rs`
+//! pins same-seed equality and cross-seed divergence. Arrival times are
+//! modeled DLA cycles, the same clock the pipeline's discrete-event
+//! model runs on.
+
+use crate::util::Rng;
+
+/// Arrival process shapes.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum ArrivalPattern {
+    /// Poisson process: i.i.d. exponential inter-arrival gaps with the
+    /// given mean, via inverse-CDF sampling (`-ln(1-u)·mean`).
+    Poisson { mean_gap_cycles: f64 },
+    /// Bursty traffic: bursts of `burst` requests spaced
+    /// `intra_gap_cycles` apart, with exponential inter-burst gaps of
+    /// the given mean — the closed-form worst case for bounded queues.
+    Bursty { burst: usize, intra_gap_cycles: u64, mean_burst_gap_cycles: f64 },
+}
+
+/// Exponential gap in cycles (≥ 1 so arrivals strictly advance within
+/// a Poisson trace's resolution).
+fn exp_gap(rng: &mut Rng, mean: f64) -> u64 {
+    let u = rng.gen_f64();
+    let gap = -(1.0 - u).ln() * mean;
+    (gap.ceil() as u64).max(1)
+}
+
+/// Generate `n` nondecreasing arrival cycles under `pattern`, fully
+/// determined by `seed`.
+pub fn arrival_trace(pattern: ArrivalPattern, n: usize, seed: u64) -> Vec<u64> {
+    let mut rng = Rng::seed_from_u64(seed);
+    let mut t = 0u64;
+    let mut out = Vec::with_capacity(n);
+    match pattern {
+        ArrivalPattern::Poisson { mean_gap_cycles } => {
+            for _ in 0..n {
+                t = t.saturating_add(exp_gap(&mut rng, mean_gap_cycles));
+                out.push(t);
+            }
+        }
+        ArrivalPattern::Bursty { burst, intra_gap_cycles, mean_burst_gap_cycles } => {
+            let burst = burst.max(1);
+            while out.len() < n {
+                t = t.saturating_add(exp_gap(&mut rng, mean_burst_gap_cycles));
+                let mut bt = t;
+                for b in 0..burst {
+                    if out.len() >= n {
+                        break;
+                    }
+                    if b > 0 {
+                        bt = bt.saturating_add(intra_gap_cycles);
+                    }
+                    out.push(bt);
+                }
+                // The next burst's exponential gap opens after this
+                // burst's last arrival.
+                t = bt;
+            }
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn traces_are_deterministic_and_nondecreasing() {
+        for pattern in [
+            ArrivalPattern::Poisson { mean_gap_cycles: 250.0 },
+            ArrivalPattern::Bursty {
+                burst: 4,
+                intra_gap_cycles: 10,
+                mean_burst_gap_cycles: 2000.0,
+            },
+        ] {
+            let a = arrival_trace(pattern, 64, 0x10ad);
+            let b = arrival_trace(pattern, 64, 0x10ad);
+            assert_eq!(a, b, "same seed must replay bit-identically");
+            assert_eq!(a.len(), 64);
+            assert!(a.windows(2).all(|w| w[0] <= w[1]), "arrivals must be nondecreasing");
+            let c = arrival_trace(pattern, 64, 0x10ae);
+            assert_ne!(a, c, "different seeds must diverge");
+        }
+    }
+
+    #[test]
+    fn poisson_mean_gap_is_roughly_right() {
+        let n = 4000;
+        let trace =
+            arrival_trace(ArrivalPattern::Poisson { mean_gap_cycles: 100.0 }, n, 0x5eed);
+        let mean = trace[n - 1] as f64 / n as f64;
+        assert!(
+            (60.0..160.0).contains(&mean),
+            "empirical mean gap {mean} too far from 100"
+        );
+    }
+
+    #[test]
+    fn bursts_are_tightly_spaced() {
+        let trace = arrival_trace(
+            ArrivalPattern::Bursty {
+                burst: 5,
+                intra_gap_cycles: 7,
+                mean_burst_gap_cycles: 10_000.0,
+            },
+            20,
+            3,
+        );
+        // Every burst of 5 is spaced exactly 7 cycles internally.
+        for chunk in trace.chunks(5) {
+            for w in chunk.windows(2) {
+                assert_eq!(w[1] - w[0], 7);
+            }
+        }
+    }
+}

@@ -1,6 +1,9 @@
-//! Peak MAC throughput study (Fig 9) and the LB soft-logic model.
+//! Peak MAC throughput study (Fig 9), the LB soft-logic model, and the
+//! deterministic open-loop load generator for serving experiments.
 
 pub mod lb;
+pub mod loadgen;
 pub mod peak;
 
+pub use loadgen::{arrival_trace, ArrivalPattern};
 pub use peak::{peak_throughput, Architecture, ThroughputBreakdown};

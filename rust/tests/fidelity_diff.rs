@@ -279,6 +279,10 @@ fn midstream_set_fidelity_switch_stays_bit_identical() {
 }
 
 #[test]
+// The deprecated starters stay covered on purpose: they are one-line
+// wrappers over ServerConfig and this test is their equivalence proof
+// (tests/server_config.rs pins wrapper ≡ builder in full).
+#[allow(deprecated)]
 fn server_fidelity_starters_reply_identically() {
     // `start_with_fidelity` / `start_sharded_with_fidelity` take an
     // explicit fidelity as a recorded dispatch preference; the doc

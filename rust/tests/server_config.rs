@@ -1,0 +1,250 @@
+//! API-redesign equivalence suite: every `#[deprecated]`
+//! `InferenceServer::start*` wrapper must behave exactly like its
+//! `ServerConfig` builder spelling — same replies, same deterministic
+//! statistics. Runs against the checked-in stub manifest (host
+//! fallback), so the whole matrix executes on every CI run.
+//!
+//! Batch counts and wall-clock micros depend on batching-window timing,
+//! so equivalence is asserted on the deterministic fields: replies,
+//! request counts, and attributed compute (attributed − weight-copy,
+//! which is schedule-independent).
+
+#![allow(deprecated)]
+
+mod common;
+
+use std::time::Duration;
+
+use bramac::arch::Precision;
+use bramac::bramac::ExecFidelity;
+use bramac::coordinator::batcher::submit_and_wait;
+use bramac::coordinator::server::{
+    InferenceServer, NetworkServerStats, ServerConfig, ServerStats, IMAGE_ELEMS,
+};
+use bramac::coordinator::Policy;
+use bramac::dla::netexec::{NetExecConfig, QuantNetwork};
+use bramac::dla::{toy, Dataflow};
+
+/// Drive `n` deterministic images through an artifact server serially
+/// and return (replies, final stats).
+fn drive(server: InferenceServer, n: u64) -> (Vec<Vec<i32>>, ServerStats) {
+    let tx = server.handle();
+    let mut replies = Vec::new();
+    for c in 0..n {
+        let img: Vec<i32> =
+            (0..IMAGE_ELEMS).map(|i| ((i as u64 + c) % 7) as i32).collect();
+        replies.push(submit_and_wait(&tx, img).expect("reply"));
+    }
+    drop(tx);
+    (replies, server.shutdown())
+}
+
+/// The deterministic slice of [`ServerStats`]: requests and pure
+/// compute (weight-copy timing can depend on which workers warmed).
+fn compute_key(s: &ServerStats) -> (u64, u64) {
+    (s.requests, s.attributed_cycles - s.weight_copy_cycles)
+}
+
+#[test]
+fn start_equals_builder() {
+    let wait = Duration::from_millis(2);
+    let old =
+        InferenceServer::start(common::stub_artifacts_dir(), "model", wait).unwrap();
+    let new = ServerConfig::new(common::stub_artifacts_dir(), "model")
+        .max_wait(wait)
+        .start()
+        .unwrap();
+    assert_eq!((old.batch_size, old.shards, old.policy), (new.batch_size, new.shards, new.policy));
+    assert_eq!(old.dataflow, new.dataflow);
+    let (ro, so) = drive(old, 6);
+    let (rn, sn) = drive(new, 6);
+    assert_eq!(ro, rn, "replies must be identical");
+    assert_eq!(compute_key(&so), compute_key(&sn));
+}
+
+#[test]
+fn start_with_workers_equals_builder() {
+    let wait = Duration::from_millis(2);
+    let old = InferenceServer::start_with_workers(
+        common::stub_artifacts_dir(),
+        "model",
+        wait,
+        3,
+    )
+    .unwrap();
+    let new = ServerConfig::new(common::stub_artifacts_dir(), "model")
+        .max_wait(wait)
+        .workers(3)
+        .start()
+        .unwrap();
+    let (ro, so) = drive(old, 8);
+    let (rn, sn) = drive(new, 8);
+    assert_eq!(ro, rn);
+    assert_eq!(compute_key(&so), compute_key(&sn));
+}
+
+#[test]
+fn start_with_dataflow_equals_builder() {
+    let wait = Duration::from_millis(2);
+    for dataflow in [Dataflow::Tiling, Dataflow::Persistent] {
+        let old = InferenceServer::start_with_dataflow(
+            common::stub_artifacts_dir(),
+            "model",
+            wait,
+            1,
+            dataflow,
+        )
+        .unwrap();
+        let new = ServerConfig::new(common::stub_artifacts_dir(), "model")
+            .max_wait(wait)
+            .dataflow(dataflow)
+            .start()
+            .unwrap();
+        assert_eq!(old.dataflow, new.dataflow);
+        let (ro, so) = drive(old, 6);
+        let (rn, sn) = drive(new, 6);
+        assert_eq!(ro, rn, "dataflow {}", dataflow.name());
+        // Single worker: the weight-copy charge is deterministic too.
+        assert_eq!(
+            (so.requests, so.attributed_cycles, so.weight_copy_cycles),
+            (sn.requests, sn.attributed_cycles, sn.weight_copy_cycles),
+            "dataflow {}",
+            dataflow.name()
+        );
+    }
+}
+
+#[test]
+fn start_with_fidelity_equals_builder() {
+    let wait = Duration::from_millis(2);
+    for fidelity in [ExecFidelity::BitAccurate, ExecFidelity::Fast] {
+        let old = InferenceServer::start_with_fidelity(
+            common::stub_artifacts_dir(),
+            "model",
+            wait,
+            1,
+            Dataflow::Tiling,
+            fidelity,
+        )
+        .unwrap();
+        let new = ServerConfig::new(common::stub_artifacts_dir(), "model")
+            .max_wait(wait)
+            .dataflow(Dataflow::Tiling)
+            .fidelity(fidelity)
+            .start()
+            .unwrap();
+        assert_eq!(old.fidelity, new.fidelity);
+        let (ro, so) = drive(old, 5);
+        let (rn, sn) = drive(new, 5);
+        assert_eq!(ro, rn, "fidelity {}", fidelity.name());
+        assert_eq!(compute_key(&so), compute_key(&sn));
+    }
+}
+
+#[test]
+fn start_sharded_equals_builder() {
+    let wait = Duration::from_millis(2);
+    let old = InferenceServer::start_sharded(
+        common::stub_artifacts_dir(),
+        "model",
+        wait,
+        2,
+        2,
+        Dataflow::Tiling,
+        Policy::LeastOutstanding,
+    )
+    .unwrap();
+    let new = ServerConfig::new(common::stub_artifacts_dir(), "model")
+        .max_wait(wait)
+        .shards(2)
+        .replicas(2)
+        .dataflow(Dataflow::Tiling)
+        .policy(Policy::LeastOutstanding)
+        .start()
+        .unwrap();
+    assert_eq!((old.shards, old.policy), (new.shards, new.policy));
+    let (ro, so) = drive(old, 8);
+    let (rn, sn) = drive(new, 8);
+    assert_eq!(ro, rn);
+    assert_eq!(compute_key(&so), compute_key(&sn));
+}
+
+#[test]
+fn start_sharded_with_fidelity_equals_builder() {
+    let wait = Duration::from_millis(2);
+    let old = InferenceServer::start_sharded_with_fidelity(
+        common::stub_artifacts_dir(),
+        "model",
+        wait,
+        2,
+        1,
+        Dataflow::Tiling,
+        Policy::RoundRobin,
+        ExecFidelity::Fast,
+    )
+    .unwrap();
+    let new = ServerConfig::new(common::stub_artifacts_dir(), "model")
+        .max_wait(wait)
+        .shards(2)
+        .dataflow(Dataflow::Tiling)
+        .policy(Policy::RoundRobin)
+        .fidelity(ExecFidelity::Fast)
+        .start()
+        .unwrap();
+    assert_eq!(old.fidelity, new.fidelity);
+    let (ro, so) = drive(old, 6);
+    let (rn, sn) = drive(new, 6);
+    assert_eq!(ro, rn);
+    assert_eq!(compute_key(&so), compute_key(&sn));
+}
+
+/// The deterministic slice of [`NetworkServerStats`] — everything but
+/// batch counts and wall micros.
+fn network_key(s: &NetworkServerStats) -> (u64, u64, u64) {
+    (s.requests, s.attributed_cycles, s.weight_copy_cycles)
+}
+
+#[test]
+fn start_network_equals_builder() {
+    let p = Precision::Int4;
+    let qnet = QuantNetwork::random(&toy(), p, 0xe9_u64 ^ 0x5eed);
+    let cfg = NetExecConfig {
+        dataflow: Dataflow::Persistent,
+        fidelity: ExecFidelity::Fast,
+        ..NetExecConfig::default()
+    };
+    let wait = Duration::from_millis(2);
+    let run = |server: bramac::coordinator::server::NetworkServer| {
+        let tx = server.handle();
+        let mut replies = Vec::new();
+        for i in 0..5u64 {
+            let input = qnet.random_input(0x90 + i, true);
+            replies.push(submit_and_wait(&tx, input.data).expect("reply"));
+        }
+        drop(tx);
+        (replies, server.shutdown())
+    };
+    let old = InferenceServer::start_network(
+        qnet.clone(),
+        cfg,
+        2,
+        wait,
+        2,
+        Policy::LeastOutstanding,
+    )
+    .unwrap();
+    let new = ServerConfig::network(qnet.clone())
+        .exec(cfg)
+        .batch(2)
+        .max_wait(wait)
+        .replicas(2)
+        .policy(Policy::LeastOutstanding)
+        .start_network()
+        .unwrap();
+    assert_eq!(old.input_len, new.input_len);
+    assert_eq!(old.pipeline_stages, new.pipeline_stages);
+    let (ro, so) = run(old);
+    let (rn, sn) = run(new);
+    assert_eq!(ro, rn, "network replies must be identical");
+    assert_eq!(network_key(&so), network_key(&sn));
+}

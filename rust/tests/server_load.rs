@@ -14,7 +14,7 @@ use std::time::Duration;
 use bramac::arch::Precision;
 use bramac::bramac::Variant;
 use bramac::coordinator::batcher::{submit_and_wait, Batcher, Request};
-use bramac::coordinator::server::{InferenceServer, IMAGE_ELEMS};
+use bramac::coordinator::server::{ServerConfig, IMAGE_ELEMS};
 use bramac::coordinator::{Policy, Router, ShardedPool};
 use bramac::dla::Dataflow;
 use bramac::quant::{random_vector, IntMatrix};
@@ -23,8 +23,10 @@ use bramac::util::Rng;
 #[test]
 fn many_concurrent_clients_all_get_replies() {
     let Some(dir) = common::artifacts_built() else { return };
-    let server =
-        InferenceServer::start(dir, "model", Duration::from_millis(10)).unwrap();
+    let server = ServerConfig::new(dir, "model")
+        .max_wait(Duration::from_millis(10))
+        .start()
+        .unwrap();
     let clients = 24;
     let mut handles = Vec::new();
     for c in 0..clients {
@@ -49,8 +51,10 @@ fn many_concurrent_clients_all_get_replies() {
 #[test]
 fn same_image_same_logits_across_batches() {
     let Some(dir) = common::artifacts_built() else { return };
-    let server =
-        InferenceServer::start(dir, "model", Duration::from_millis(1)).unwrap();
+    let server = ServerConfig::new(dir, "model")
+        .max_wait(Duration::from_millis(1))
+        .start()
+        .unwrap();
     let img: Vec<i32> = (0..IMAGE_ELEMS).map(|i| (i % 7) as i32).collect();
     let tx = server.handle();
     let first = submit_and_wait(&tx, img.clone()).unwrap();
@@ -92,12 +96,10 @@ fn batcher_preserves_payload_reply_pairing() {
 
 #[test]
 fn stub_server_batches_and_replies_to_everyone() {
-    let server = InferenceServer::start(
-        common::stub_artifacts_dir(),
-        "model",
-        Duration::from_millis(10),
-    )
-    .unwrap();
+    let server = ServerConfig::new(common::stub_artifacts_dir(), "model")
+        .max_wait(Duration::from_millis(10))
+        .start()
+        .unwrap();
     assert_eq!(server.batch_size, 4, "stub model artifact has batch dim 4");
     let clients = 16u64;
     let mut handles = Vec::new();
@@ -121,12 +123,10 @@ fn stub_server_batches_and_replies_to_everyone() {
 
 #[test]
 fn stub_server_identical_inputs_identical_logits() {
-    let server = InferenceServer::start(
-        common::stub_artifacts_dir(),
-        "model",
-        Duration::from_millis(1),
-    )
-    .unwrap();
+    let server = ServerConfig::new(common::stub_artifacts_dir(), "model")
+        .max_wait(Duration::from_millis(1))
+        .start()
+        .unwrap();
     let img: Vec<i32> = (0..IMAGE_ELEMS).map(|i| (i % 5) as i32).collect();
     let tx = server.handle();
     let first = submit_and_wait(&tx, img.clone()).unwrap();
@@ -146,14 +146,11 @@ fn stub_server_persistent_dataflow_charges_copies_once() {
     // dataflow changes cycle attribution, never numerics).
     let requests = 12u64;
     let run = |dataflow: Dataflow| {
-        let server = InferenceServer::start_with_dataflow(
-            common::stub_artifacts_dir(),
-            "model",
-            Duration::from_millis(5),
-            1,
-            dataflow,
-        )
-        .unwrap();
+        let server = ServerConfig::new(common::stub_artifacts_dir(), "model")
+            .max_wait(Duration::from_millis(5))
+            .dataflow(dataflow)
+            .start()
+            .unwrap();
         let mut outputs = Vec::new();
         let tx = server.handle();
         for c in 0..requests {
@@ -234,24 +231,20 @@ fn stub_server_sharded_replicas_match_single_worker() {
     // The sharded server (2 row shards x 2 replicas) must reply exactly
     // like the plain single-worker server, with the totals accounted
     // per replica.
-    let server = InferenceServer::start_sharded(
-        common::stub_artifacts_dir(),
-        "model",
-        Duration::from_millis(2),
-        2,
-        2,
-        Dataflow::Persistent,
-        Policy::LeastOutstanding,
-    )
-    .unwrap();
+    let server = ServerConfig::new(common::stub_artifacts_dir(), "model")
+        .max_wait(Duration::from_millis(2))
+        .shards(2)
+        .replicas(2)
+        .dataflow(Dataflow::Persistent)
+        .policy(Policy::LeastOutstanding)
+        .start()
+        .unwrap();
     assert_eq!(server.shards, 2);
     assert_eq!(server.policy, Some(Policy::LeastOutstanding));
-    let reference = InferenceServer::start(
-        common::stub_artifacts_dir(),
-        "model",
-        Duration::from_millis(2),
-    )
-    .unwrap();
+    let reference = ServerConfig::new(common::stub_artifacts_dir(), "model")
+        .max_wait(Duration::from_millis(2))
+        .start()
+        .unwrap();
 
     let mut handles = Vec::new();
     for c in 0..24u64 {
@@ -289,16 +282,13 @@ fn stub_server_sharded_attribution_shrinks_with_shards() {
     // Same request count, more shards: the attributed per-image compute
     // must shrink (ceil-divided across shards plus a small merge term).
     let run = |shards: usize| {
-        let server = InferenceServer::start_sharded(
-            common::stub_artifacts_dir(),
-            "model",
-            Duration::from_millis(1),
-            shards,
-            1,
-            Dataflow::Tiling,
-            Policy::RoundRobin,
-        )
-        .unwrap();
+        let server = ServerConfig::new(common::stub_artifacts_dir(), "model")
+            .max_wait(Duration::from_millis(1))
+            .shards(shards)
+            .dataflow(Dataflow::Tiling)
+            .policy(Policy::RoundRobin)
+            .start()
+            .unwrap();
         let tx = server.handle();
         for c in 0..8u64 {
             let mut rng = Rng::seed_from_u64(0xa77 + c);
@@ -328,20 +318,16 @@ fn stub_server_sharded_attribution_shrinks_with_shards() {
 fn stub_server_scales_to_multiple_workers() {
     // Multi-worker serving: batch formation is serialized, execution
     // overlaps. Every client must still get its own correct reply.
-    let server = InferenceServer::start_with_workers(
-        common::stub_artifacts_dir(),
-        "model",
-        Duration::from_millis(2),
-        4,
-    )
-    .unwrap();
+    let server = ServerConfig::new(common::stub_artifacts_dir(), "model")
+        .max_wait(Duration::from_millis(2))
+        .workers(4)
+        .start()
+        .unwrap();
     // Ground truth from a single-worker server over the same manifest.
-    let reference = InferenceServer::start(
-        common::stub_artifacts_dir(),
-        "model",
-        Duration::from_millis(2),
-    )
-    .unwrap();
+    let reference = ServerConfig::new(common::stub_artifacts_dir(), "model")
+        .max_wait(Duration::from_millis(2))
+        .start()
+        .unwrap();
 
     let mut handles = Vec::new();
     for c in 0..32u64 {

@@ -6,3 +6,10 @@ pub fn make_batch() -> usize {
     };
     cfg.batch
 }
+
+pub fn make_server() -> usize {
+    let cfg = ServerConfig {
+        workers: 2,
+    };
+    cfg.workers
+}

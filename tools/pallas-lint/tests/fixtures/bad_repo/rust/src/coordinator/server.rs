@@ -4,3 +4,8 @@ pub fn start_with_fidelity(fidelity: ExecFidelity) -> u64 {
     let _ = fidelity;
     0
 }
+
+pub struct ServerConfig {
+    workers: usize,
+    replicas: usize,
+}

@@ -11,3 +11,15 @@ pub fn make_batch() -> usize {
     };
     full.batch + rest.batch
 }
+
+pub fn make_server() -> usize {
+    let full = ServerConfig {
+        workers: 2,
+        replicas: 1,
+    };
+    let rest = ServerConfig {
+        workers: full.workers,
+        ..Default::default()
+    };
+    full.workers + rest.workers
+}

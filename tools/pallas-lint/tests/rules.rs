@@ -21,6 +21,7 @@ fn bad_repo_fires_every_rule_at_the_right_span() {
             ("r3", "rust/src/dla/cycle.rs", 4),
             ("r3", "rust/src/dla/cycle.rs", 8),
             ("r4", "rust/src/coordinator/plan.rs", 4),
+            ("r4", "rust/src/coordinator/plan.rs", 11),
             ("r5", "rust/src/storage/mod.rs", 4),
             ("r6", "rust/src/coordinator/server.rs", 3),
         ],
@@ -38,6 +39,12 @@ fn bad_repo_messages_name_the_offender() {
     assert!(msg("r2").contains(".to_vec()") && msg("r2").contains("mac2_row_fast"));
     assert!(msg("r3").contains("as u16"));
     assert!(msg("r4").contains("\"prefetch\""), "{}", msg("r4"));
+    let server_cfg = diags
+        .iter()
+        .find(|d| d.rule == "r4" && d.msg.contains("ServerConfig"))
+        .map(|d| d.msg.clone())
+        .unwrap_or_default();
+    assert!(server_cfg.contains("\"replicas\""), "{server_cfg}");
     assert!(msg("r5").contains(".unwrap()"));
     assert!(msg("r6").contains("start_with_fidelity"));
 }
@@ -52,7 +59,7 @@ fn clean_repo_is_silent() {
 fn json_output_is_well_formed() {
     let diags = pallas_lint::run(&fixture("bad_repo")).unwrap();
     let json = pallas_lint::to_json(&diags);
-    assert!(json.contains("\"count\": 7"), "{json}");
+    assert!(json.contains("\"count\": 8"), "{json}");
     assert!(json.contains("\"rule\": \"r1\""));
     assert!(json.contains("\"file\": \"rust/src/bramac/block.rs\""));
     // Empty set renders a valid document too.
