@@ -37,6 +37,8 @@ class LintPortFixtures(unittest.TestCase):
             spans,
             [
                 "rust/src/bramac/block.rs:5: r1",
+                "rust/src/reliability/ecc.rs:7: r1",
+                "rust/src/reliability/ecc.rs:20: r1",
                 "rust/src/bramac/fastpath.rs:4: r2",
                 "rust/src/dla/cycle.rs:4: r3",
                 "rust/src/dla/cycle.rs:8: r3",

@@ -59,6 +59,8 @@ STATS_STRUCTS = [
     "ServerStats",
     "ReplicaServerStats",
     "PipelineStats",
+    "EccStats",
+    "FaultStats",
 ]
 
 # R2: hot files (all non-test fns banned) and hot fns in mixed files.

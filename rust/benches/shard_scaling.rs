@@ -101,13 +101,13 @@ fn main() {
         .collect();
     let mut router =
         Router::new(Policy::LeastOutstanding, replicas, &wr).expect("pin fits");
-    let (y, _) = router.dispatch(&xr, true);
+    let (y, _) = router.dispatch(&xr, true).expect("healthy replicas");
     assert_eq!(y, y_router, "routed dispatch must be exact");
     b.bench_meta(
         "router_dispatch/least-outstanding/40x96/4bit/3replicas",
         BenchMeta { cycles: 0, threads: 0, shards: 2, fidelity: "bit-accurate" },
         || {
-            black_box(router.dispatch(&xr, true));
+            black_box(router.dispatch(&xr, true).expect("healthy replicas"));
             router.retire(u64::MAX);
         },
     );
@@ -120,13 +120,13 @@ fn main() {
         .collect();
     let mut fast_router =
         Router::new(Policy::LeastOutstanding, fast_replicas, &wr).expect("pin fits");
-    let (yf, _) = fast_router.dispatch(&xr, true);
+    let (yf, _) = fast_router.dispatch(&xr, true).expect("healthy replicas");
     assert_eq!(yf, y_router, "fast routed dispatch must be exact");
     b.bench_meta(
         "router_dispatch/least-outstanding/40x96/4bit/3replicas/fidelity=fast",
         BenchMeta { cycles: 0, threads: 0, shards: 2, fidelity: "fast" },
         || {
-            black_box(fast_router.dispatch(&xr, true));
+            black_box(fast_router.dispatch(&xr, true).expect("healthy replicas"));
             fast_router.retire(u64::MAX);
         },
     );

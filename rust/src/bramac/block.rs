@@ -17,7 +17,11 @@
 //! Between dot products the accumulator row is read out 40 bits/cycle:
 //! 8 main-busy cycles for 2SA (two arrays) and 4 for 1DA (§IV-C).
 
+use anyhow::{ensure, Result};
+
 use crate::arch::{FreqModel, Precision};
+use crate::reliability::ecc::{self, EccOutcome, EccStats, CODEWORD_BITS, ECC_CORRECTION_CYCLES};
+use crate::reliability::fault::{FaultPlan, FaultTarget, FaultTrigger};
 
 use super::dummy_array::Row;
 use super::efsm::{compute_schedule, mac2_compute_cycles, Engine, Mac2Inputs};
@@ -25,7 +29,7 @@ use super::fastpath::{
     accumulate_row, mac2_limbs_fast, mac2_row_fast, BurstScratch, ExecFidelity,
 };
 use super::instr::CimInstr;
-use super::row::Row160;
+use super::row::{Row160, ROW_BITS};
 use super::signext::sign_extend_word;
 
 /// Main-BRAM geometry in CIM mode: simple dual port, 512 × 40-bit
@@ -161,6 +165,11 @@ pub struct StreamStats {
     /// are actually (re)written — weights already resident in the main
     /// array (persistent dataflow) are never recounted.
     pub app_write_words: u64,
+    /// Main-clock cycles spent scrubbing ECC-corrected words back into
+    /// the array ([`crate::reliability::ecc::ECC_CORRECTION_CYCLES`]
+    /// per correction). Also included in `main_cycles` and
+    /// `main_busy_cycles` — the scrub occupies a main port.
+    pub ecc_correction_cycles: u64,
 }
 
 impl StreamStats {
@@ -174,6 +183,7 @@ impl StreamStats {
         self.main_busy_cycles += other.main_busy_cycles;
         self.acc_readouts += other.acc_readouts;
         self.app_write_words += other.app_write_words;
+        self.ecc_correction_cycles += other.ecc_correction_cycles;
     }
 
     /// Fraction of CIM time during which the main ports stayed free.
@@ -214,7 +224,30 @@ pub struct BramacBlock {
     /// grow to the largest burst seen, keeping steady-state
     /// [`BramacBlock::mac2_burst`] allocation-free.
     burst: BurstScratch,
+    /// SECDED shadow state when ECC is on (`None` = ECC off).
+    ecc: Option<EccState>,
+    /// Armed fault plans; each is removed when it fires or expires.
+    faults: Vec<FaultPlan>,
+    fired_faults: u64,
+    expired_faults: u64,
+    /// Sticky address of the first detected-uncorrectable word, until
+    /// [`BramacBlock::take_uncorrectable`] claims it.
+    poisoned: Option<u16>,
 }
+
+/// Per-word SECDED shadow next to the 40-bit main array: the codeword's
+/// zero pad (data bits 40..64, only ever nonzero after an injected
+/// flip) in bits 0..24 and the 8-bit parity byte in bits 24..32 —
+/// modeling the extra check-bit columns of a BRAM's ECC wide mode.
+#[derive(Debug, Clone)]
+struct EccState {
+    extra: Vec<u32>,
+    stats: EccStats,
+}
+
+/// Bits of the shadow word holding the codeword pad (fault bits 40..64
+/// and parity bits 64..72 both map to shadow bit `fault_bit - 40`).
+const ECC_PAD_MASK: u32 = 0x00FF_FFFF;
 
 impl BramacBlock {
     pub fn new(variant: Variant, precision: Precision) -> Self {
@@ -231,6 +264,11 @@ impl BramacBlock {
             warm: false,
             fidelity: ExecFidelity::BitAccurate,
             burst: BurstScratch::default(),
+            ecc: None,
+            faults: Vec::new(),
+            fired_faults: 0,
+            expired_faults: 0,
+            poisoned: None,
         }
     }
 
@@ -273,6 +311,11 @@ impl BramacBlock {
         assert!((addr as usize) < MAIN_WORDS, "address out of range");
         assert!(data < (1 << WORD_BITS), "data exceeds 40 bits");
         self.main[addr as usize] = data;
+        if let Some(st) = &mut self.ecc {
+            // The hardware encoder sits on the write port: every stored
+            // word gets a fresh parity byte (and a clean zero pad).
+            st.extra[addr as usize] = u32::from(ecc::encode(data)) << 24;
+        }
         self.stats.app_write_words += 1;
     }
 
@@ -297,6 +340,246 @@ impl BramacBlock {
         let out = self.read_word(read_addr);
         self.write_word(write_addr, data);
         out
+    }
+
+    // ------------------------------------------------------------------
+    // Reliability: SECDED ECC + fault injection
+    // ------------------------------------------------------------------
+
+    /// Enable or disable SECDED (72,64) ECC on the main array. Enabling
+    /// encodes every currently-stored word (already-pinned weights
+    /// included), so a resident model can be protected after loading.
+    pub fn set_ecc(&mut self, on: bool) {
+        if !on {
+            self.ecc = None;
+            return;
+        }
+        let mut extra = vec![0u32; MAIN_WORDS];
+        for (slot, &w) in extra.iter_mut().zip(self.main.iter()) {
+            *slot = u32::from(ecc::encode(w)) << 24;
+        }
+        self.ecc = Some(EccState { extra, stats: EccStats::default() });
+    }
+
+    pub fn ecc_enabled(&self) -> bool {
+        self.ecc.is_some()
+    }
+
+    pub fn ecc_stats(&self) -> EccStats {
+        self.ecc.as_ref().map(|st| st.stats).unwrap_or_default()
+    }
+
+    /// Arm a fault plan. Targets are validated against the block's
+    /// geometry here so a campaign bug fails loudly at arm time, not as
+    /// a silently-out-of-range flip: oracle-internal rows (`W12`,
+    /// `Inv`) are rejected — the fast path has no equivalent state, so
+    /// corrupting them would break fidelity equivalence by design.
+    pub fn arm_fault(&mut self, plan: FaultPlan) -> Result<()> {
+        match plan.target {
+            FaultTarget::MainWord { addr } => {
+                ensure!((addr as usize) < MAIN_WORDS, "fault addr {addr} out of range");
+                let bits =
+                    if self.ecc.is_some() { CODEWORD_BITS } else { WORD_BITS as usize };
+                ensure!(
+                    plan.bit < bits,
+                    "main-word fault bit {} out of range (limit {bits}; pad/parity bits \
+                     need ECC on)",
+                    plan.bit
+                );
+            }
+            FaultTarget::DummyRow { engine, row } => {
+                ensure!(engine < self.engines.len(), "fault engine {engine} out of range");
+                ensure!(
+                    matches!(row, Row::W1 | Row::W2 | Row::P | Row::Acc),
+                    "row {row:?} is not a faultable target (hard-wired zero or \
+                     oracle-internal)"
+                );
+                ensure!(plan.bit < ROW_BITS, "dummy-row fault bit {} out of range", plan.bit);
+            }
+            FaultTarget::AccLane { engine, lane } => {
+                ensure!(engine < self.engines.len(), "fault engine {engine} out of range");
+                ensure!(
+                    lane < self.precision.lanes_per_word(),
+                    "fault lane {lane} out of range for {}",
+                    self.precision
+                );
+                ensure!(
+                    plan.bit < self.precision.ext_bits() as usize,
+                    "acc-lane fault bit {} out of range for {}",
+                    plan.bit,
+                    self.precision
+                );
+            }
+        }
+        self.faults.push(plan);
+        Ok(())
+    }
+
+    /// Claim the poisoned-word verdict (the serving layer turns this
+    /// into an [`crate::reliability::fault::UncorrectableFault`]).
+    pub fn take_uncorrectable(&mut self) -> Option<u16> {
+        self.poisoned.take()
+    }
+
+    /// `(fired, expired)` counts over every plan armed on this block.
+    pub fn fault_counts(&self) -> (u64, u64) {
+        (self.fired_faults, self.expired_faults)
+    }
+
+    /// Read one word on the CIM weight-fetch path: with ECC on, the
+    /// stored codeword is decoded, single-bit errors are corrected and
+    /// scrubbed back, and double-bit errors poison the block. The
+    /// scrub writes storage directly — a correction is hardware
+    /// housekeeping, not application traffic, so it must not bump
+    /// `app_write_words` (the scheduler would bill it as weight-copy).
+    fn read_word_cim(&mut self, addr: u16) -> u64 {
+        let a = addr as usize;
+        let Some(st) = &mut self.ecc else {
+            return self.main[a];
+        };
+        let extra = st.extra[a];
+        let data = self.main[a] | (u64::from(extra & ECC_PAD_MASK) << WORD_BITS);
+        match ecc::decode(data, (extra >> 24) as u8) {
+            EccOutcome::Clean => self.main[a],
+            EccOutcome::Corrected { data, parity } => {
+                st.stats.corrected += 1;
+                self.main[a] = data & ((1u64 << WORD_BITS) - 1);
+                st.extra[a] = ((data >> WORD_BITS) as u32) | (u32::from(parity) << 24);
+                self.stats.main_cycles += ECC_CORRECTION_CYCLES;
+                self.stats.main_busy_cycles += ECC_CORRECTION_CYCLES;
+                self.stats.ecc_correction_cycles += ECC_CORRECTION_CYCLES;
+                self.main[a]
+            }
+            EccOutcome::Uncorrectable => {
+                st.stats.detected_uncorrectable += 1;
+                if self.poisoned.is_none() {
+                    self.poisoned = Some(addr);
+                }
+                self.main[a]
+            }
+        }
+    }
+
+    /// Collect the plans whose trigger is due at this MAC2's entry.
+    /// Triggers are evaluated against `mac2_count` / `main_cycles`,
+    /// which are bit-identical across fidelities — so a plan corrupts
+    /// the same op with the same bit under both execution paths.
+    fn take_due_faults(&mut self) -> Vec<FaultPlan> {
+        let count = self.stats.mac2_count;
+        let cycles = self.stats.main_cycles;
+        let mut due = Vec::new();
+        let mut expired = 0u64;
+        self.faults.retain(|f| {
+            let state = match f.trigger {
+                FaultTrigger::OpCount(n) => {
+                    if count == n {
+                        1
+                    } else if count > n {
+                        2
+                    } else {
+                        0
+                    }
+                }
+                FaultTrigger::CycleWindow { lo, hi } => {
+                    if cycles > hi {
+                        2
+                    } else if cycles >= lo {
+                        1
+                    } else {
+                        0
+                    }
+                }
+            };
+            match state {
+                1 => {
+                    due.push(*f);
+                    false
+                }
+                2 => {
+                    expired += 1;
+                    false
+                }
+                _ => true,
+            }
+        });
+        self.fired_faults += due.len() as u64;
+        self.expired_faults += expired;
+        due
+    }
+
+    /// Apply the storage-level effects of the due plans before the
+    /// op's weight reads. Main-word flips land in the stored codeword
+    /// (so ECC sees them on the read path). Dummy-row and acc-lane
+    /// targets are outside SECDED's reach; with ECC on they model the
+    /// dummy array's *parity* protection — detected at compute cadence
+    /// but never correctable — so the block is poisoned and the fault
+    /// is flagged, upholding "detected or corrected, never silent".
+    fn apply_storage_faults(&mut self, due: &[FaultPlan], cur_addr: u16) {
+        for f in due {
+            match f.target {
+                FaultTarget::MainWord { addr } => {
+                    let a = addr as usize;
+                    if f.bit < WORD_BITS as usize {
+                        self.main[a] ^= 1u64 << f.bit;
+                    } else if let Some(st) = &mut self.ecc {
+                        st.extra[a] ^= 1u32 << (f.bit - WORD_BITS as usize);
+                    }
+                }
+                FaultTarget::DummyRow { .. } | FaultTarget::AccLane { .. } => {
+                    if let Some(st) = &mut self.ecc {
+                        st.stats.detected_uncorrectable += 1;
+                        if self.poisoned.is_none() {
+                            self.poisoned = Some(cur_addr);
+                        }
+                    }
+                }
+            }
+        }
+    }
+
+    /// Corrupt this op's per-engine weight copies (`W1`/`W2` dummy-row
+    /// plans). The flip hits the copy only — the next op re-copies
+    /// clean weights from the main array, exactly like a transient
+    /// upset of the dummy array between two refills.
+    fn apply_weight_faults(&self, due: &[FaultPlan], rows: &mut [[Row160; 2]; 2]) {
+        for f in due {
+            if let FaultTarget::DummyRow { engine, row } = f.target {
+                let slot = match row {
+                    Row::W1 => 0,
+                    Row::W2 => 1,
+                    _ => continue,
+                };
+                let r = &mut rows[engine][slot];
+                r.set_bit(f.bit, !r.get_bit(f.bit));
+            }
+        }
+    }
+
+    /// Apply post-op flips: `P`/`Acc` rows and accumulator lanes. Both
+    /// fidelities commit P and ACC identically, so flipping them after
+    /// the op preserves fidelity equivalence.
+    fn apply_post_faults(&mut self, due: &[FaultPlan]) {
+        let ext = self.precision.ext_bits() as usize;
+        for f in due {
+            match f.target {
+                FaultTarget::DummyRow { engine, row } => {
+                    if matches!(row, Row::P | Row::Acc) {
+                        let e = &mut self.engines[engine];
+                        let mut r = e.array.peek(row);
+                        r.set_bit(f.bit, !r.get_bit(f.bit));
+                        e.array.poke(row, r);
+                    }
+                }
+                FaultTarget::AccLane { engine, lane } => {
+                    let e = &mut self.engines[engine];
+                    let mut r = e.array.peek(Row::Acc);
+                    let bit = lane * ext + f.bit;
+                    r.set_bit(bit, !r.get_bit(bit));
+                    e.array.poke(Row::Acc, r);
+                }
+                FaultTarget::MainWord { .. } => {}
+            }
+        }
     }
 
     // ------------------------------------------------------------------
@@ -333,45 +616,61 @@ impl BramacBlock {
             self.engines.len(),
             "need one input pair per dummy array"
         );
-        let w1 = sign_extend_word(self.read_word(addr_w1), self.precision);
-        let w2 = sign_extend_word(self.read_word(addr_w2), self.precision);
+        // Fault triggers are evaluated at op entry against counters
+        // both fidelities keep bit-identical; `due` stays an empty
+        // (non-allocating) Vec on the fault-free hot path.
+        let due = if self.faults.is_empty() { Vec::new() } else { self.take_due_faults() };
+        if !due.is_empty() {
+            self.apply_storage_faults(&due, addr_w1);
+        }
+        let w1 = sign_extend_word(self.read_word_cim(addr_w1), self.precision);
+        let w2 = sign_extend_word(self.read_word_cim(addr_w2), self.precision);
+        // Per-engine weight copies: a W1/W2 dummy-row fault corrupts
+        // one engine's copy of this op only.
+        let mut rows = [[w1, w2], [w1, w2]];
+        if !due.is_empty() {
+            self.apply_weight_faults(&due, &mut rows);
+        }
         if self.fidelity == ExecFidelity::Fast {
-            self.mac2_fast(&w1, &w2, input_pairs, signed);
-            return;
-        }
-        let schedule = compute_schedule(self.precision, signed);
+            self.mac2_fast(&rows, input_pairs, signed);
+        } else {
+            let schedule = compute_schedule(self.precision, signed);
 
-        // Copy cycles (array state; the cycle charges live in
-        // `charge_mac2_cycles`, shared with the fast fidelity).
-        match self.variant {
-            Variant::TwoSA => {
-                for e in &mut self.engines {
-                    e.array.new_cycle();
-                    e.copy_weight(super::dummy_array::Row::W1, w1);
+            // Copy cycles (array state; the cycle charges live in
+            // `charge_mac2_cycles`, shared with the fast fidelity).
+            match self.variant {
+                Variant::TwoSA => {
+                    for (idx, e) in self.engines.iter_mut().enumerate() {
+                        e.array.new_cycle();
+                        e.copy_weight(Row::W1, rows[idx][0]);
+                    }
+                    for (idx, e) in self.engines.iter_mut().enumerate() {
+                        e.array.new_cycle();
+                        e.copy_weight(Row::W2, rows[idx][1]);
+                    }
                 }
-                for e in &mut self.engines {
+                Variant::OneDA => {
+                    let e = &mut self.engines[0];
                     e.array.new_cycle();
-                    e.copy_weight(super::dummy_array::Row::W2, w2);
+                    e.copy_weight(Row::W1, rows[0][0]);
+                    e.copy_weight(Row::W2, rows[0][1]);
                 }
             }
-            Variant::OneDA => {
-                let e = &mut self.engines[0];
-                e.array.new_cycle();
-                e.copy_weight(super::dummy_array::Row::W1, w1);
-                e.copy_weight(super::dummy_array::Row::W2, w2);
-            }
-        }
 
-        // Compute cycles.
-        for (idx, e) in self.engines.iter_mut().enumerate() {
-            let (i1, i2) = input_pairs[idx];
-            let inputs = Mac2Inputs { i1, i2, signed };
-            for &op in schedule {
-                e.array.new_cycle();
-                e.exec(op, inputs);
+            // Compute cycles.
+            for (idx, e) in self.engines.iter_mut().enumerate() {
+                let (i1, i2) = input_pairs[idx];
+                let inputs = Mac2Inputs { i1, i2, signed };
+                for &op in schedule {
+                    e.array.new_cycle();
+                    e.exec(op, inputs);
+                }
             }
+            self.charge_mac2_cycles(schedule.len() as u64);
         }
-        self.charge_mac2_cycles(schedule.len() as u64);
+        if !due.is_empty() {
+            self.apply_post_faults(&due);
+        }
     }
 
     /// Charge one MAC2's closed-form cycle costs (Fig 5 / Table II) —
@@ -417,15 +716,14 @@ impl BramacBlock {
     /// and mid-stream fidelity switches observe bit-identical state.
     fn mac2_fast(
         &mut self,
-        w1: &super::row::Row160,
-        w2: &super::row::Row160,
+        rows: &[[Row160; 2]; 2],
         input_pairs: &[(i64, i64)],
         signed: bool,
     ) {
         let p = self.precision;
         for (idx, e) in self.engines.iter_mut().enumerate() {
             let (i1, i2) = input_pairs[idx];
-            let p_row = mac2_row_fast(w1, w2, i1, i2, p, signed);
+            let p_row = mac2_row_fast(&rows[idx][0], &rows[idx][1], i1, i2, p, signed);
             let acc = accumulate_row(&e.array.peek(Row::Acc), &p_row, p);
             e.array.poke(Row::P, p_row);
             e.array.poke(Row::Acc, acc);
@@ -450,7 +748,11 @@ impl BramacBlock {
     /// contract `mac2` itself documents (§III-C1).
     pub fn mac2_burst(&mut self, ops: &[Mac2Op], signed: bool) {
         let engines = self.engines.len();
-        if self.fidelity != ExecFidelity::Fast {
+        // Armed faults force the per-op path at either fidelity: a
+        // trigger must be evaluated at each op's entry (and storage
+        // flips applied before that op's reads), which the one-pass
+        // wide-SWAR replay below cannot interleave.
+        if self.fidelity != ExecFidelity::Fast || !self.faults.is_empty() {
             for op in ops {
                 self.mac2(op.a1, op.a2, &op.pairs[..engines], signed);
             }
@@ -470,8 +772,8 @@ impl BramacBlock {
             // One read + sign-extend per op, duplicated across the
             // engine segments (2SA shares one weight copy between its
             // two input pairs — §IV-A).
-            let r1 = sign_extend_word(self.read_word(op.a1), p);
-            let r2 = sign_extend_word(self.read_word(op.a2), p);
+            let r1 = sign_extend_word(self.read_word_cim(op.a1), p);
+            let r2 = sign_extend_word(self.read_word_cim(op.a2), p);
             for e in 0..engines {
                 let s = o * engines + e;
                 scratch.w1[3 * s..3 * s + 3].copy_from_slice(&r1.0);
@@ -946,6 +1248,237 @@ mod tests {
     fn oversized_word_panics() {
         let mut b = BramacBlock::new(Variant::OneDA, Precision::Int8);
         b.write_word(0, 1 << 40);
+    }
+
+    fn faulted_pair(
+        variant: Variant,
+        p: Precision,
+        ecc: bool,
+        plans: &[crate::reliability::fault::FaultPlan],
+    ) -> (BramacBlock, BramacBlock) {
+        // A clean block and a faulted block fed the identical stream.
+        let mut rng = Rng::seed_from_u64(0xFA_0731);
+        let mut clean = BramacBlock::new(variant, p);
+        let mut hit = BramacBlock::new(variant, p);
+        for k in 0..8u16 {
+            let (word, _) = random_words(&mut rng, p);
+            clean.write_word(k, word);
+            hit.write_word(k, word);
+        }
+        hit.set_ecc(ecc);
+        for plan in plans {
+            hit.arm_fault(*plan).expect("valid plan");
+        }
+        clean.reset_acc();
+        hit.reset_acc();
+        let (lo, hi) = p.range();
+        for k in 0..4u16 {
+            let pairs: Vec<(i64, i64)> = (0..variant.dummy_arrays())
+                .map(|_| {
+                    (
+                        rng.gen_range_i64(lo as i64, hi as i64),
+                        rng.gen_range_i64(lo as i64, hi as i64),
+                    )
+                })
+                .collect();
+            clean.mac2(2 * k, 2 * k + 1, &pairs, true);
+            hit.mac2(2 * k, 2 * k + 1, &pairs, true);
+        }
+        (clean, hit)
+    }
+
+    #[test]
+    fn ecc_corrects_single_bit_main_fault_and_charges_cycles() {
+        use crate::reliability::fault::{FaultPlan, FaultTarget, FaultTrigger};
+        for variant in Variant::ALL {
+            let plan = FaultPlan {
+                target: FaultTarget::MainWord { addr: 2 },
+                bit: 17,
+                trigger: FaultTrigger::OpCount(1),
+            };
+            let (mut clean, mut hit) = faulted_pair(variant, Precision::Int4, true, &[plan]);
+            assert_eq!(
+                hit.read_accumulators(),
+                clean.read_accumulators(),
+                "{}: corrected output must match the fault-free run",
+                variant.name()
+            );
+            let st = hit.ecc_stats();
+            assert_eq!(st.corrected, 1, "{}", variant.name());
+            assert_eq!(st.detected_uncorrectable, 0);
+            assert_eq!(
+                hit.stats().ecc_correction_cycles,
+                crate::reliability::ecc::ECC_CORRECTION_CYCLES
+            );
+            assert_eq!(hit.take_uncorrectable(), None);
+            assert_eq!(hit.fault_counts(), (1, 0));
+        }
+    }
+
+    #[test]
+    fn ecc_detects_double_bit_fault_and_poisons() {
+        use crate::reliability::fault::{FaultPlan, FaultTarget, FaultTrigger};
+        let target = FaultTarget::MainWord { addr: 4 };
+        let trigger = FaultTrigger::OpCount(2);
+        let plans = [
+            FaultPlan { target, bit: 3, trigger },
+            FaultPlan { target, bit: 66, trigger },
+        ];
+        let (_, mut hit) = faulted_pair(Variant::TwoSA, Precision::Int8, true, &plans);
+        let st = hit.ecc_stats();
+        assert_eq!(st.corrected, 0);
+        assert_eq!(st.detected_uncorrectable, 1);
+        assert_eq!(hit.take_uncorrectable(), Some(4), "poisoned at the faulted word");
+        assert_eq!(hit.take_uncorrectable(), None, "verdict is claimed once");
+    }
+
+    #[test]
+    fn ecc_off_single_bit_fault_silently_corrupts() {
+        use crate::reliability::fault::{FaultPlan, FaultTarget, FaultTrigger};
+        let plan = FaultPlan {
+            // Lane 0's low weight bit of a word read by ops ≥ 1, with a
+            // nonzero input — the flip must reach the accumulator.
+            target: FaultTarget::MainWord { addr: 2 },
+            bit: 0,
+            trigger: FaultTrigger::OpCount(1),
+        };
+        let (clean, mut hit) = faulted_pair(Variant::OneDA, Precision::Int4, false, &[plan]);
+        assert_eq!(hit.ecc_stats(), Default::default(), "ECC off: nothing flagged");
+        assert_eq!(hit.take_uncorrectable(), None);
+        // The corruption reached storage; the stored word differs.
+        assert_ne!(hit.read_word(2), clean.read_word(2));
+    }
+
+    #[test]
+    fn dummy_and_acc_faults_are_flagged_with_ecc_on() {
+        use crate::reliability::fault::{FaultPlan, FaultTarget, FaultTrigger};
+        for plan in [
+            FaultPlan {
+                target: FaultTarget::DummyRow { engine: 0, row: Row::W1 },
+                bit: 7,
+                trigger: FaultTrigger::OpCount(1),
+            },
+            FaultPlan {
+                target: FaultTarget::AccLane { engine: 0, lane: 1 },
+                bit: 2,
+                trigger: FaultTrigger::OpCount(1),
+            },
+        ] {
+            let (_, mut hit) = faulted_pair(Variant::TwoSA, Precision::Int4, true, &[plan]);
+            let st = hit.ecc_stats();
+            assert_eq!(
+                st.detected_uncorrectable, 1,
+                "{plan:?}: parity must flag the flip"
+            );
+            assert!(hit.take_uncorrectable().is_some(), "{plan:?}: block poisoned");
+        }
+    }
+
+    #[test]
+    fn acc_lane_fault_without_ecc_corrupts_exactly_one_lane() {
+        use crate::reliability::fault::{FaultPlan, FaultTarget, FaultTrigger};
+        let plan = FaultPlan {
+            target: FaultTarget::AccLane { engine: 0, lane: 3 },
+            bit: 5,
+            trigger: FaultTrigger::OpCount(3),
+        };
+        let (mut clean, mut hit) = faulted_pair(Variant::OneDA, Precision::Int4, false, &[plan]);
+        let want = clean.read_accumulators();
+        let got = hit.read_accumulators();
+        for lane in 0..Precision::Int4.lanes_per_word() {
+            if lane == 3 {
+                assert_ne!(got[0][lane], want[0][lane], "faulted lane must corrupt");
+            } else {
+                assert_eq!(got[0][lane], want[0][lane], "lane {lane} must be untouched");
+            }
+        }
+    }
+
+    #[test]
+    fn cycle_window_trigger_fires_once_and_expires_when_overshot() {
+        use crate::reliability::fault::{FaultPlan, FaultTarget, FaultTrigger};
+        let p = Precision::Int4;
+        let mut b = BramacBlock::new(Variant::TwoSA, p);
+        b.write_word(0, pack_word(&vec![1i64; 10], p, true));
+        b.write_word(1, pack_word(&vec![1i64; 10], p, true));
+        // Window already in the past relative to nothing run: lo=0 hi=0
+        // fires at the first op (main_cycles == 0 at entry). A second
+        // plan with an unreachable past window expires.
+        b.arm_fault(FaultPlan {
+            target: FaultTarget::MainWord { addr: 0 },
+            bit: 1,
+            trigger: FaultTrigger::CycleWindow { lo: 0, hi: 0 },
+        })
+        .expect("valid");
+        b.mac2(0, 1, &[(1, 1), (1, 1)], true);
+        assert_eq!(b.fault_counts(), (1, 0));
+        b.arm_fault(FaultPlan {
+            target: FaultTarget::MainWord { addr: 0 },
+            bit: 1,
+            trigger: FaultTrigger::CycleWindow { lo: 0, hi: 1 },
+        })
+        .expect("valid");
+        b.mac2(0, 1, &[(1, 1), (1, 1)], true); // main_cycles already > 1
+        assert_eq!(b.fault_counts(), (1, 1));
+    }
+
+    #[test]
+    fn arm_fault_validates_targets() {
+        use crate::reliability::fault::{FaultPlan, FaultTarget, FaultTrigger};
+        let mut b = BramacBlock::new(Variant::OneDA, Precision::Int8);
+        let t = FaultTrigger::OpCount(0);
+        // Codeword bits need ECC on.
+        let pad = FaultPlan { target: FaultTarget::MainWord { addr: 0 }, bit: 45, trigger: t };
+        assert!(b.arm_fault(pad).is_err());
+        b.set_ecc(true);
+        assert!(b.arm_fault(pad).is_ok());
+        // Oracle-internal rows are not faultable.
+        assert!(b
+            .arm_fault(FaultPlan {
+                target: FaultTarget::DummyRow { engine: 0, row: Row::W12 },
+                bit: 0,
+                trigger: t,
+            })
+            .is_err());
+        // 1DA has one engine; Int8 has 5 lanes of 32 bits.
+        for bad in [
+            FaultPlan { target: FaultTarget::DummyRow { engine: 1, row: Row::W1 }, bit: 0, trigger: t },
+            FaultPlan { target: FaultTarget::AccLane { engine: 0, lane: 5 }, bit: 0, trigger: t },
+            FaultPlan { target: FaultTarget::AccLane { engine: 0, lane: 0 }, bit: 32, trigger: t },
+            FaultPlan { target: FaultTarget::MainWord { addr: 512 }, bit: 0, trigger: t },
+        ] {
+            assert!(b.arm_fault(bad).is_err(), "{bad:?} must be rejected at arm time");
+        }
+    }
+
+    #[test]
+    fn ecc_clean_stream_charges_nothing_and_stays_bit_identical() {
+        // ECC on with no faults: outputs and every stats field match an
+        // ECC-off twin exactly (clean decodes are free), at both
+        // fidelities — so protection alone never perturbs the model.
+        let mut rng = Rng::seed_from_u64(0xC1EA);
+        for fidelity in [ExecFidelity::BitAccurate, ExecFidelity::Fast] {
+            let p = Precision::Int4;
+            let mut plain = BramacBlock::new(Variant::TwoSA, p).with_fidelity(fidelity);
+            let mut prot = BramacBlock::new(Variant::TwoSA, p).with_fidelity(fidelity);
+            prot.set_ecc(true);
+            assert!(prot.ecc_enabled());
+            for k in 0..6u16 {
+                let (word1, _) = random_words(&mut rng, p);
+                let (word2, _) = random_words(&mut rng, p);
+                for b in [&mut plain, &mut prot] {
+                    b.write_word(2 * k, word1);
+                    b.write_word(2 * k + 1, word2);
+                }
+                let pairs = [(2i64, -1i64), (-3i64, 1i64)];
+                plain.mac2(2 * k, 2 * k + 1, &pairs, true);
+                prot.mac2(2 * k, 2 * k + 1, &pairs, true);
+            }
+            assert_eq!(prot.read_accumulators(), plain.read_accumulators());
+            assert_eq!(prot.stats(), plain.stats(), "{fidelity:?}");
+            assert_eq!(prot.stats().ecc_correction_cycles, 0);
+            assert_eq!(prot.ecc_stats(), Default::default());
+        }
     }
 
     #[test]

@@ -334,6 +334,39 @@ impl PipelineEngine {
         self.engines.iter().map(|e| e.analytical_cycles()).collect()
     }
 
+    /// Switch SECDED ECC on every stage engine's pool.
+    pub fn set_ecc(&mut self, on: bool) {
+        for e in &mut self.engines {
+            e.set_ecc(on);
+        }
+    }
+
+    /// Arm a seeded fault plan on `(shard, block)` of stage `stage`'s
+    /// pool (stage 0 unless a later stage is the target).
+    pub fn arm_fault(
+        &mut self,
+        stage: usize,
+        shard: usize,
+        block: usize,
+        plan: crate::reliability::fault::FaultPlan,
+    ) -> Result<()> {
+        ensure!(
+            stage < self.engines.len(),
+            "fault targets stage {stage} but the pipeline has {} stages",
+            self.engines.len()
+        );
+        self.engines[stage].arm_fault(shard, block, plan)
+    }
+
+    /// ECC counters folded across stage engines in stage order.
+    pub fn ecc_stats(&self) -> crate::reliability::ecc::EccStats {
+        let mut total = crate::reliability::ecc::EccStats::default();
+        for e in &self.engines {
+            total.merge(&e.ecc_stats());
+        }
+        total
+    }
+
     fn drain_completions(&mut self, now: u64) {
         while let Some(&c) = self.inflight.front() {
             if c <= now {

@@ -15,11 +15,12 @@
 //! replica from that state alone — so a trace replays identically on
 //! every host and thread count.
 
-use anyhow::{ensure, Result};
+use anyhow::{bail, ensure, Result};
 
 use crate::bramac::ExecFidelity;
 use crate::dla::netexec::{NetExec, NetExecReport, Tensor};
 use crate::quant::IntMatrix;
+use crate::reliability::fault::{FaultPlan, UncorrectableFault};
 
 use super::shard::{ShardedPool, ShardedResident};
 
@@ -70,6 +71,10 @@ pub struct ReplicaStats {
     pub weight_copy_cycles: u64,
     /// Backlog still queued on the replica (simulated cycles).
     pub outstanding_cycles: u64,
+    /// Dispatches this replica aborted with an ECC-uncorrectable fault
+    /// — each one marked the replica DEAD and was retried on a healthy
+    /// replica (a replica dies at most once, so this is 0 or 1).
+    pub failovers: u64,
 }
 
 /// Aggregated router accounting plus the per-replica breakdown.
@@ -78,6 +83,9 @@ pub struct RouterStats {
     pub requests: u64,
     pub busy_cycles: u64,
     pub weight_copy_cycles: u64,
+    /// DEAD-replica failovers across the group (requests retried on a
+    /// healthy replica after an ECC-uncorrectable fault).
+    pub failovers: u64,
     pub per_replica: Vec<ReplicaStats>,
 }
 
@@ -93,6 +101,7 @@ impl RouterStats {
         self.requests += replica.requests;
         self.busy_cycles += replica.busy_cycles;
         self.weight_copy_cycles += replica.weight_copy_cycles;
+        self.failovers += replica.failovers;
         self.per_replica.push(replica);
     }
 }
@@ -101,6 +110,9 @@ struct Replica {
     pool: ShardedPool,
     resident: ShardedResident,
     stats: ReplicaStats,
+    /// DEAD: an ECC-uncorrectable fault poisoned this replica; it is
+    /// skipped by every later pick (no resurrection).
+    dead: bool,
 }
 
 /// A replica group: `replicas` warm sharded pools behind one dispatch
@@ -124,7 +136,7 @@ impl Router {
                 weight_copy_cycles: resident.pinned_words,
                 ..ReplicaStats::default()
             };
-            replicas.push(Replica { pool, resident, stats });
+            replicas.push(Replica { pool, resident, stats, dead: false });
         }
         Ok(Router { policy, replicas, rr_next: 0 })
     }
@@ -146,21 +158,36 @@ impl Router {
         self.replicas[0].pool.fidelity()
     }
 
-    /// Deterministic replica choice under the configured policy.
-    fn pick(&mut self) -> usize {
+    /// Deterministic replica choice under the configured policy,
+    /// skipping DEAD replicas. `None` when every replica is dead.
+    fn pick(&mut self) -> Option<usize> {
+        let n = self.replicas.len();
         match self.policy {
             Policy::RoundRobin => {
-                let i = self.rr_next % self.replicas.len();
-                self.rr_next = (i + 1) % self.replicas.len();
-                i
+                for _ in 0..n {
+                    let i = self.rr_next % n;
+                    self.rr_next = (i + 1) % n;
+                    if !self.replicas[i].dead {
+                        return Some(i);
+                    }
+                }
+                None
             }
             Policy::LeastOutstanding => {
-                let mut best = 0usize;
+                let mut best: Option<usize> = None;
                 for (i, rep) in self.replicas.iter().enumerate() {
-                    if rep.stats.outstanding_cycles
-                        < self.replicas[best].stats.outstanding_cycles
-                    {
-                        best = i;
+                    if rep.dead {
+                        continue;
+                    }
+                    let better = match best {
+                        None => true,
+                        Some(b) => {
+                            rep.stats.outstanding_cycles
+                                < self.replicas[b].stats.outstanding_cycles
+                        }
+                    };
+                    if better {
+                        best = Some(i);
                     }
                 }
                 best
@@ -168,17 +195,29 @@ impl Router {
         }
     }
 
-    /// Route one GEMV to a replica, run it against the replica's warm
-    /// resident layout, and charge the makespan to that replica's
-    /// backlog. Returns the exact result and the chosen replica index.
-    pub fn dispatch(&mut self, x: &[i64], signed_inputs: bool) -> (Vec<i64>, usize) {
-        let i = self.pick();
-        let rep = &mut self.replicas[i];
-        let (y, stats) = rep.pool.run_gemv_resident(&rep.resident, x, signed_inputs);
-        rep.stats.requests += 1;
-        rep.stats.busy_cycles += stats.makespan_cycles;
-        rep.stats.outstanding_cycles += stats.makespan_cycles;
-        (y, i)
+    /// Route one GEMV to a healthy replica, run it against the
+    /// replica's warm resident layout, and charge the makespan to that
+    /// replica's backlog. A replica whose run raised an
+    /// ECC-uncorrectable fault is marked DEAD, its (corrupt) result is
+    /// discarded, and the request retries on the next healthy replica
+    /// — so a returned reply is always bit-identical to a fault-free
+    /// run. Errors only when every replica is dead.
+    pub fn dispatch(&mut self, x: &[i64], signed_inputs: bool) -> Result<(Vec<i64>, usize)> {
+        for _ in 0..self.replicas.len() {
+            let Some(i) = self.pick() else { break };
+            let rep = &mut self.replicas[i];
+            let (y, stats) = rep.pool.run_gemv_resident(&rep.resident, x, signed_inputs);
+            if rep.pool.take_uncorrectable().is_some() {
+                rep.dead = true;
+                rep.stats.failovers += 1;
+                continue;
+            }
+            rep.stats.requests += 1;
+            rep.stats.busy_cycles += stats.makespan_cycles;
+            rep.stats.outstanding_cycles += stats.makespan_cycles;
+            return Ok((y, i));
+        }
+        bail!("no healthy replicas left to serve the request")
     }
 
     /// Saturation hook (tests, what-if studies): enqueue `cycles` of
@@ -200,6 +239,40 @@ impl Router {
         self.replicas[replica].stats.outstanding_cycles
     }
 
+    /// Switch SECDED ECC on every replica's pools (safe on warm
+    /// replicas: enabling re-encodes the resident words in place).
+    pub fn set_ecc(&mut self, on: bool) {
+        for rep in &mut self.replicas {
+            rep.pool.set_ecc(on);
+        }
+    }
+
+    /// Arm a seeded fault plan on `(shard, block)` of one replica.
+    pub fn arm_fault(
+        &mut self,
+        replica: usize,
+        shard: usize,
+        block: usize,
+        plan: FaultPlan,
+    ) -> Result<()> {
+        ensure!(
+            replica < self.replicas.len(),
+            "fault targets replica {replica} but the router has {} replicas",
+            self.replicas.len()
+        );
+        self.replicas[replica].pool.arm_fault(shard, block, plan)
+    }
+
+    /// Whether `replica` has been marked DEAD by a failover.
+    pub fn dead(&self, replica: usize) -> bool {
+        self.replicas[replica].dead
+    }
+
+    /// Replicas still serving traffic.
+    pub fn healthy_replicas(&self) -> usize {
+        self.replicas.iter().filter(|r| !r.dead).count()
+    }
+
     /// Aggregated accounting with the per-replica breakdown.
     pub fn stats(&self) -> RouterStats {
         let mut stats = RouterStats::default();
@@ -213,6 +286,8 @@ impl Router {
 struct NetReplica {
     engine: NetExec,
     stats: ReplicaStats,
+    /// DEAD: an ECC-uncorrectable fault poisoned this replica.
+    dead: bool,
 }
 
 /// [`Router`]'s whole-network sibling: replicas are warm
@@ -239,7 +314,7 @@ impl NetworkRouter {
                     weight_copy_cycles: engine.pinned_words,
                     ..ReplicaStats::default()
                 };
-                NetReplica { engine, stats }
+                NetReplica { engine, stats, dead: false }
             })
             .collect();
         Ok(NetworkRouter { policy, replicas, rr_next: 0 })
@@ -257,20 +332,36 @@ impl NetworkRouter {
         self.replicas[0].engine.fidelity()
     }
 
-    fn pick(&mut self) -> usize {
+    /// Deterministic replica choice, skipping DEAD replicas (`None`
+    /// when every replica is dead) — mirrors [`Router::pick`].
+    fn pick(&mut self) -> Option<usize> {
+        let n = self.replicas.len();
         match self.policy {
             Policy::RoundRobin => {
-                let i = self.rr_next % self.replicas.len();
-                self.rr_next = (i + 1) % self.replicas.len();
-                i
+                for _ in 0..n {
+                    let i = self.rr_next % n;
+                    self.rr_next = (i + 1) % n;
+                    if !self.replicas[i].dead {
+                        return Some(i);
+                    }
+                }
+                None
             }
             Policy::LeastOutstanding => {
-                let mut best = 0usize;
+                let mut best: Option<usize> = None;
                 for (i, rep) in self.replicas.iter().enumerate() {
-                    if rep.stats.outstanding_cycles
-                        < self.replicas[best].stats.outstanding_cycles
-                    {
-                        best = i;
+                    if rep.dead {
+                        continue;
+                    }
+                    let better = match best {
+                        None => true,
+                        Some(b) => {
+                            rep.stats.outstanding_cycles
+                                < self.replicas[b].stats.outstanding_cycles
+                        }
+                    };
+                    if better {
+                        best = Some(i);
                     }
                 }
                 best
@@ -278,18 +369,35 @@ impl NetworkRouter {
         }
     }
 
-    /// Route one whole-network inference to a replica; the run's total
-    /// makespan (all layers, all dispatches) is charged to its backlog.
-    /// Returns the final-layer outputs, the full per-layer report, and
-    /// the chosen replica.
+    /// Route one whole-network inference to a healthy replica; the
+    /// run's total makespan (all layers, all dispatches) is charged to
+    /// its backlog. A replica whose inference raised
+    /// [`UncorrectableFault`] is marked DEAD and the request retries on
+    /// the next healthy replica — replies are bit-identical to a
+    /// fault-free run. Other errors propagate; errors with "no healthy
+    /// replicas" when every replica is dead.
     pub fn dispatch(&mut self, input: &Tensor) -> Result<(NetExecReport, usize)> {
-        let i = self.pick();
-        let rep = &mut self.replicas[i];
-        let report = rep.engine.infer(input)?;
-        rep.stats.requests += 1;
-        rep.stats.busy_cycles += report.total.makespan_cycles;
-        rep.stats.outstanding_cycles += report.total.makespan_cycles;
-        Ok((report, i))
+        for _ in 0..self.replicas.len() {
+            let Some(i) = self.pick() else { break };
+            let rep = &mut self.replicas[i];
+            match rep.engine.infer(input) {
+                Ok(report) => {
+                    rep.stats.requests += 1;
+                    rep.stats.busy_cycles += report.total.makespan_cycles;
+                    rep.stats.outstanding_cycles += report.total.makespan_cycles;
+                    return Ok((report, i));
+                }
+                Err(e) => {
+                    if e.downcast_ref::<UncorrectableFault>().is_some() {
+                        rep.dead = true;
+                        rep.stats.failovers += 1;
+                        continue;
+                    }
+                    return Err(e);
+                }
+            }
+        }
+        bail!("no healthy replicas left to serve the request")
     }
 
     /// Saturation hook — synthetic backlog on one replica.
@@ -307,6 +415,40 @@ impl NetworkRouter {
 
     pub fn outstanding(&self, replica: usize) -> u64 {
         self.replicas[replica].stats.outstanding_cycles
+    }
+
+    /// Switch SECDED ECC on every replica engine's pool.
+    pub fn set_ecc(&mut self, on: bool) {
+        for rep in &mut self.replicas {
+            rep.engine.set_ecc(on);
+        }
+    }
+
+    /// Arm a seeded fault plan on `(shard, block)` of one replica's
+    /// engine.
+    pub fn arm_fault(
+        &mut self,
+        replica: usize,
+        shard: usize,
+        block: usize,
+        plan: FaultPlan,
+    ) -> Result<()> {
+        ensure!(
+            replica < self.replicas.len(),
+            "fault targets replica {replica} but the router has {} replicas",
+            self.replicas.len()
+        );
+        self.replicas[replica].engine.arm_fault(shard, block, plan)
+    }
+
+    /// Whether `replica` has been marked DEAD by a failover.
+    pub fn dead(&self, replica: usize) -> bool {
+        self.replicas[replica].dead
+    }
+
+    /// Replicas still serving traffic.
+    pub fn healthy_replicas(&self) -> usize {
+        self.replicas.iter().filter(|r| !r.dead).count()
     }
 
     pub fn stats(&self) -> RouterStats {
@@ -352,7 +494,7 @@ mod tests {
             Router::new(Policy::RoundRobin, replica_pools(3, 2, p), &w).unwrap();
         for turn in 0..9 {
             let x = random_vector(&mut rng, 96, p, true);
-            let (y, replica) = router.dispatch(&x, true);
+            let (y, replica) = router.dispatch(&x, true).expect("healthy replicas");
             assert_eq!(y, w.gemv_ref(&x), "turn {turn}");
             assert_eq!(replica, turn % 3);
         }
@@ -386,8 +528,8 @@ mod tests {
         assert_eq!(fast.fidelity(), ExecFidelity::Fast);
         for turn in 0..6 {
             let x = random_vector(&mut rng, 96, p, true);
-            let (yo, ro) = oracle.dispatch(&x, true);
-            let (yf, rf) = fast.dispatch(&x, true);
+            let (yo, ro) = oracle.dispatch(&x, true).expect("healthy replicas");
+            let (yf, rf) = fast.dispatch(&x, true).expect("healthy replicas");
             assert_eq!(yf, yo, "turn {turn}");
             assert_eq!(rf, ro, "turn {turn}: replica choice must replay");
         }
@@ -436,6 +578,70 @@ mod tests {
         assert_eq!(router.outstanding(0), 0);
     }
 
+    /// Satellite: a replica that dies **mid-batch** — after serving
+    /// part of the traffic — fails over transparently. Replica 0 takes
+    /// an ECC-uncorrectable double-bit main-array fault partway through
+    /// a 6-request batch; every reply (including the retried one) must
+    /// still match the fault-free oracle byte for byte, on both
+    /// fidelities.
+    #[test]
+    fn mid_batch_dead_replica_fails_over_bit_identically() {
+        use crate::reliability::fault::{FaultTarget, FaultTrigger};
+        let mut rng = Rng::seed_from_u64(0x0dead);
+        let p = Precision::Int4;
+        let w = IntMatrix::random(&mut rng, 40, 96, p);
+        let xs: Vec<Vec<i64>> =
+            (0..6).map(|_| random_vector(&mut rng, 96, p, true)).collect();
+        let oracle: Vec<Vec<i64>> = xs.iter().map(|x| w.gemv_ref(x)).collect();
+        for fidelity in [ExecFidelity::BitAccurate, ExecFidelity::Fast] {
+            let pools: Vec<ShardedPool> = (0..2)
+                .map(|_| {
+                    ShardedPool::new(Variant::OneDA, 2, 2, p).with_fidelity(fidelity)
+                })
+                .collect();
+            let mut router = Router::new(Policy::RoundRobin, pools, &w).unwrap();
+            router.set_ecc(true);
+            // Double-bit fault on replica 0 / shard 0 / block 0, word 0,
+            // firing at op 60 — past that block's first-dispatch op
+            // count, so replica 0 serves at least one request cleanly
+            // before the corruption lands and is observed.
+            for bit in [3usize, 66] {
+                router
+                    .arm_fault(
+                        0,
+                        0,
+                        0,
+                        FaultPlan {
+                            target: FaultTarget::MainWord { addr: 0 },
+                            bit,
+                            trigger: FaultTrigger::OpCount(60),
+                        },
+                    )
+                    .expect("valid plan");
+            }
+            for (turn, x) in xs.iter().enumerate() {
+                let (y, _) = router.dispatch(x, true).expect("a healthy replica remains");
+                assert_eq!(y, oracle[turn], "{fidelity:?} turn {turn}");
+            }
+            assert!(router.dead(0), "{fidelity:?}: replica 0 must be DEAD");
+            assert!(!router.dead(1), "{fidelity:?}: replica 1 must survive");
+            assert_eq!(router.healthy_replicas(), 1);
+            let stats = router.stats();
+            assert_eq!(stats.failovers, 1, "{fidelity:?}: one DEAD event");
+            assert_eq!(stats.requests, 6, "{fidelity:?}: every request served");
+            assert!(
+                stats.per_replica[0].requests >= 1,
+                "{fidelity:?}: replica 0 served part of the batch before dying"
+            );
+            assert_eq!(stats.per_replica[0].failovers, 1);
+            // The replica group keeps serving after the failover.
+            let x = random_vector(&mut rng, 96, p, true);
+            let (y, rep) = router.dispatch(&x, true).expect("still serving");
+            assert_eq!(y, w.gemv_ref(&x));
+            assert_eq!(rep, 1, "{fidelity:?}: only replica 1 is left");
+        }
+    }
+
     #[test]
     fn least_outstanding_balances_and_retires() {
         let mut rng = Rng::seed_from_u64(0x10ad);
@@ -444,9 +650,9 @@ mod tests {
         let mut router =
             Router::new(Policy::LeastOutstanding, replica_pools(2, 2, p), &w).unwrap();
         let x = random_vector(&mut rng, 96, p, true);
-        let (_, first) = router.dispatch(&x, true);
+        let (_, first) = router.dispatch(&x, true).expect("healthy replicas");
         assert_eq!(first, 0, "empty backlog ties break low");
-        let (_, second) = router.dispatch(&x, true);
+        let (_, second) = router.dispatch(&x, true).expect("healthy replicas");
         assert_eq!(second, 1, "loaded replica 0 must be passed over");
         assert!(router.outstanding(0) > 0);
         router.retire(u64::MAX);

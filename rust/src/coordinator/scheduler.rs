@@ -47,7 +47,11 @@ use crate::bramac::{
     BramacBlock, ExecFidelity, Mac2Op, StreamStats, Variant, MAX_BURST_OPS, MAX_LANES,
 };
 use crate::quant::IntMatrix;
+use crate::reliability::ecc::EccStats;
+use crate::reliability::fault::FaultPlan;
 use crate::storage::resident::{ResidentModel, ResidentTile};
+
+use anyhow::{ensure, Result};
 
 use super::plan_cache::{PlanCache, PlanKey};
 use super::tiler::Tile;
@@ -68,6 +72,11 @@ pub struct ScheduleStats {
     /// the pin cost is charged once at
     /// [`crate::storage::ResidentModel::pin`] (`pinned_words`), not here.
     pub weight_copy_cycles: u64,
+    /// Cycles spent scrubbing ECC-corrected main-array words during
+    /// this run (already included in the cycle totals above — this
+    /// breaks the reliability tax out for reporting). Zero unless ECC
+    /// is on *and* a correctable fault was observed.
+    pub ecc_correction_cycles: u64,
 }
 
 impl ScheduleStats {
@@ -82,6 +91,7 @@ impl ScheduleStats {
         self.total_block_cycles += other.total_block_cycles;
         self.exposed_load_cycles += other.exposed_load_cycles;
         self.weight_copy_cycles += other.weight_copy_cycles;
+        self.ecc_correction_cycles += other.ecc_correction_cycles;
     }
 
     /// Sequential merge (`dla::netexec`'s per-layer accumulation): the
@@ -95,6 +105,7 @@ impl ScheduleStats {
         self.total_block_cycles += other.total_block_cycles;
         self.exposed_load_cycles += other.exposed_load_cycles;
         self.weight_copy_cycles += other.weight_copy_cycles;
+        self.ecc_correction_cycles += other.ecc_correction_cycles;
     }
 }
 
@@ -106,6 +117,7 @@ struct BlockRun<Y> {
     mac2s: u64,
     exposed: u64,
     copy: u64,
+    ecc: u64,
 }
 
 /// A pool of BRAMAC blocks executing tile plans.
@@ -533,6 +545,63 @@ impl BlockPool {
         }
         (y, stats)
     }
+
+    // --- Reliability (fault injection + ECC) -----------------------------
+
+    /// Switch SECDED ECC on the main array of every block (see
+    /// [`BramacBlock::set_ecc`]). Enabling re-encodes whatever is
+    /// already stored, so it is safe mid-model.
+    pub fn set_ecc(&mut self, on: bool) {
+        for b in &mut self.blocks {
+            b.set_ecc(on);
+        }
+    }
+
+    /// Arm a seeded fault plan on block `block` (see
+    /// [`BramacBlock::arm_fault`] for target validation).
+    pub fn arm_fault(&mut self, block: usize, plan: FaultPlan) -> Result<()> {
+        ensure!(
+            block < self.blocks.len(),
+            "fault targets block {block} but the pool has {} blocks",
+            self.blocks.len()
+        );
+        self.blocks[block].arm_fault(plan)
+    }
+
+    /// Pool-wide ECC counters: every block's [`EccStats`] folded with
+    /// [`EccStats::merge`] in block order.
+    pub fn ecc_stats(&self) -> EccStats {
+        let mut total = EccStats::default();
+        for b in &self.blocks {
+            total.merge(&b.ecc_stats());
+        }
+        total
+    }
+
+    /// Pool-wide fault bookkeeping: `(fired, expired)` summed over
+    /// blocks.
+    pub fn fault_counts(&self) -> (u64, u64) {
+        let mut fired = 0;
+        let mut expired = 0;
+        for b in &self.blocks {
+            let (f, e) = b.fault_counts();
+            fired += f;
+            expired += e;
+        }
+        (fired, expired)
+    }
+
+    /// First poisoned block, as `(block, word address)` — clears the
+    /// poison it returns, like [`BramacBlock::take_uncorrectable`].
+    /// Deterministic: blocks are drained in index order.
+    pub fn take_uncorrectable(&mut self) -> Option<(usize, u16)> {
+        for (i, b) in self.blocks.iter_mut().enumerate() {
+            if let Some(addr) = b.take_uncorrectable() {
+                return Some((i, addr));
+            }
+        }
+        None
+    }
 }
 
 /// Deterministic stats reduction over per-block runs (block order).
@@ -544,6 +613,7 @@ fn collect_stats<Y>(tiles: usize, runs: &[BlockRun<Y>]) -> ScheduleStats {
         total_block_cycles: runs.iter().map(|r| r.cycles).sum(),
         exposed_load_cycles: runs.iter().map(|r| r.exposed).sum(),
         weight_copy_cycles: runs.iter().map(|r| r.copy).sum(),
+        ecc_correction_cycles: runs.iter().map(|r| r.ecc).sum(),
     }
 }
 
@@ -603,6 +673,7 @@ struct TileCost {
     mac2s: u64,
     exposed: u64,
     copy: u64,
+    ecc: u64,
 }
 
 /// Run one tile's work through `body` and charge it per §IV-C: weight
@@ -624,7 +695,10 @@ fn account_tile<T>(
     let copy = after.app_write_words - before.app_write_words;
     let free = compute.saturating_sub(busy);
     let exposed = copy.saturating_sub(free);
-    (out, TileCost { charged: compute + exposed, mac2s, exposed, copy })
+    // ECC scrub cycles are already inside the main-cycle delta (hence
+    // `charged`); the separate delta only feeds the reporting breakout.
+    let ecc = after.ecc_correction_cycles - before.ecc_correction_cycles;
+    (out, TileCost { charged: compute + exposed, mac2s, exposed, copy, ecc })
 }
 
 /// Tile word index → 16-bit block address. Tile geometry is bounded by
@@ -677,6 +751,7 @@ fn run_block_gemv(
     let mut mac2s = 0u64;
     let mut exposed = 0u64;
     let mut copy = 0u64;
+    let mut ecc = 0u64;
     for tile in tiles {
         let ((), cost) = account_tile(block, |block| {
             load_tile_words(block, w, tile);
@@ -686,8 +761,9 @@ fn run_block_gemv(
         mac2s += cost.mac2s;
         exposed += cost.exposed;
         copy += cost.copy;
+        ecc += cost.ecc;
     }
-    BlockRun { y, cycles, mac2s, exposed, copy }
+    BlockRun { y, cycles, mac2s, exposed, copy, ecc }
 }
 
 /// One block's share of a persistent-mode GEMV: same streaming MAC2
@@ -706,6 +782,7 @@ fn run_block_gemv_resident(
     let mut mac2s = 0u64;
     let mut exposed = 0u64;
     let mut copy = 0u64;
+    let mut ecc = 0u64;
     for rt in tiles {
         let ((), cost) = account_tile(block, |block| {
             stream_tile_gemv(block, x, &rt.tile, rt.base, p, signed, &mut y)
@@ -714,8 +791,9 @@ fn run_block_gemv_resident(
         mac2s += cost.mac2s;
         exposed += cost.exposed;
         copy += cost.copy;
+        ecc += cost.ecc;
     }
-    BlockRun { y, cycles, mac2s, exposed, copy }
+    BlockRun { y, cycles, mac2s, exposed, copy, ecc }
 }
 
 /// One block's share of a batch-2 MVM (tiling dataflow).
@@ -735,6 +813,7 @@ fn run_block_batch2(
     let mut mac2s = 0u64;
     let mut exposed = 0u64;
     let mut copy = 0u64;
+    let mut ecc = 0u64;
     for tile in tiles {
         let ((), cost) = account_tile(block, |block| {
             load_tile_words(block, w, tile);
@@ -744,8 +823,9 @@ fn run_block_batch2(
         mac2s += cost.mac2s;
         exposed += cost.exposed;
         copy += cost.copy;
+        ecc += cost.ecc;
     }
-    BlockRun { y, cycles, mac2s, exposed, copy }
+    BlockRun { y, cycles, mac2s, exposed, copy, ecc }
 }
 
 /// One block's share of a persistent-mode batch-2 MVM.
@@ -764,6 +844,7 @@ fn run_block_batch2_resident(
     let mut mac2s = 0u64;
     let mut exposed = 0u64;
     let mut copy = 0u64;
+    let mut ecc = 0u64;
     for rt in tiles {
         let ((), cost) = account_tile(block, |block| {
             stream_tile_batch2(block, x0, x1, &rt.tile, rt.base, p, signed, &mut y)
@@ -772,8 +853,9 @@ fn run_block_batch2_resident(
         mac2s += cost.mac2s;
         exposed += cost.exposed;
         copy += cost.copy;
+        ecc += cost.ecc;
     }
-    BlockRun { y, cycles, mac2s, exposed, copy }
+    BlockRun { y, cycles, mac2s, exposed, copy, ecc }
 }
 
 /// One block's share of a batch-N MVM (tiling dataflow): every tile's
@@ -798,6 +880,7 @@ fn run_block_batchn(
     let mut mac2s = 0u64;
     let mut exposed = 0u64;
     let mut copy = 0u64;
+    let mut ecc = 0u64;
     for tile in tiles {
         let ((), cost) = account_tile(block, |block| {
             load_tile_words(block, w, tile);
@@ -809,8 +892,9 @@ fn run_block_batchn(
         mac2s += cost.mac2s;
         exposed += cost.exposed;
         copy += cost.copy;
+        ecc += cost.ecc;
     }
-    BlockRun { y, cycles, mac2s, exposed, copy }
+    BlockRun { y, cycles, mac2s, exposed, copy, ecc }
 }
 
 /// One block's share of a persistent-mode batch-N MVM: the engine
@@ -831,6 +915,7 @@ fn run_block_batchn_resident(
     let mut mac2s = 0u64;
     let mut exposed = 0u64;
     let mut copy = 0u64;
+    let mut ecc = 0u64;
     for rt in tiles {
         let ((), cost) = account_tile(block, |block| {
             for g in 0..groups {
@@ -841,8 +926,9 @@ fn run_block_batchn_resident(
         mac2s += cost.mac2s;
         exposed += cost.exposed;
         copy += cost.copy;
+        ecc += cost.ecc;
     }
-    BlockRun { y, cycles, mac2s, exposed, copy }
+    BlockRun { y, cycles, mac2s, exposed, copy, ecc }
 }
 
 /// Stream one tile's MAC2s against words at `base..base+tile.cols` and

@@ -24,6 +24,7 @@ use crate::dla::{
     models::{ConvLayer, Network},
     netexec::{Lowering, NetExec, NetExecConfig, QuantNetwork, Tensor},
 };
+use crate::reliability::fault::{FaultPlan, UncorrectableFault};
 use crate::runtime::{Manifest, Runtime};
 
 use super::batcher::{Batcher, Request};
@@ -107,6 +108,10 @@ pub struct ServerConfig {
     stage_split: Option<Vec<usize>>,
     queue_depth: usize,
     max_in_flight: usize,
+    /// SECDED ECC on every replica pool (network mode).
+    ecc: bool,
+    /// Seeded faults to arm at startup: `(replica, shard, block, plan)`.
+    faults: Vec<(usize, usize, usize, FaultPlan)>,
 }
 
 impl ServerConfig {
@@ -127,6 +132,8 @@ impl ServerConfig {
             stage_split: None,
             queue_depth: 2,
             max_in_flight: 8,
+            ecc: false,
+            faults: Vec::new(),
         }
     }
 
@@ -233,6 +240,30 @@ impl ServerConfig {
         self
     }
 
+    /// SECDED (72,64) ECC on every replica's BRAMAC pool (network
+    /// mode): single-bit storage faults are corrected in place,
+    /// double-bit faults are detected and kill the replica instead of
+    /// silently corrupting replies.
+    pub fn ecc(mut self, on: bool) -> Self {
+        self.ecc = on;
+        self
+    }
+
+    /// Arm a seeded [`FaultPlan`] on one replica's pool at startup
+    /// (network mode). Pipelined replicas arm the fault on stage 0's
+    /// engine. An uncorrectable fault marks the replica DEAD and its
+    /// unserved requests fail over to a healthy replica.
+    pub fn inject_fault(
+        mut self,
+        replica: usize,
+        shard: usize,
+        block: usize,
+        plan: FaultPlan,
+    ) -> Self {
+        self.faults.push((replica, shard, block, plan));
+        self
+    }
+
     /// Resolved pipeline config, `None` when pipelining is off.
     fn pipeline_config(&self) -> Option<PipelineConfig> {
         if self.pipeline_stages >= 2 || self.stage_split.is_some() {
@@ -294,6 +325,8 @@ impl ServerConfig {
             self.replicas,
             self.policy.unwrap_or(Policy::LeastOutstanding),
             pipeline,
+            self.ecc,
+            self.faults,
         )
     }
 }
@@ -313,6 +346,9 @@ pub struct ServerStats {
     /// per-image initial copies when tiling, a one-time first-touch
     /// charge per warm worker session when persistent.
     pub weight_copy_cycles: u64,
+    /// Replica deaths on uncorrectable ECC faults (pool-backed network
+    /// deployments; always 0 on the PJRT artifact paths).
+    pub failovers: u64,
 }
 
 /// One replica's share of the serving statistics (sharded servers).
@@ -323,6 +359,10 @@ pub struct ReplicaServerStats {
     pub exec_micros: u64,
     pub attributed_cycles: u64,
     pub weight_copy_cycles: u64,
+    /// Times this replica died on an uncorrectable ECC fault and handed
+    /// its unserved requests back to the dispatcher (0 or 1: a dead
+    /// replica never serves again).
+    pub failovers: u64,
 }
 
 impl ReplicaServerStats {
@@ -332,6 +372,7 @@ impl ReplicaServerStats {
         self.exec_micros += d.exec_micros;
         self.attributed_cycles += d.attributed_cycles;
         self.weight_copy_cycles += d.weight_copy_cycles;
+        self.failovers += d.failovers;
     }
 }
 
@@ -342,6 +383,7 @@ impl ServerStats {
         self.exec_micros += d.exec_micros;
         self.attributed_cycles += d.attributed_cycles;
         self.weight_copy_cycles += d.weight_copy_cycles;
+        self.failovers += d.failovers;
     }
 }
 
@@ -389,6 +431,7 @@ fn execute_batch(
         exec_micros: dt.as_micros() as u64,
         attributed_cycles: cycles_per_image * n as u64,
         weight_copy_cycles: 0,
+        failovers: 0,
     };
     match dataflow {
         // Tiling re-copies weights for every image.
@@ -438,6 +481,10 @@ pub struct NetworkServerStats {
     pub batches: u64,
     pub attributed_cycles: u64,
     pub weight_copy_cycles: u64,
+    /// Replica deaths on uncorrectable ECC faults; every death handed
+    /// its unserved requests to a healthy replica (or dropped them when
+    /// none remained).
+    pub failovers: u64,
     pub per_replica: Vec<ReplicaServerStats>,
 }
 
@@ -454,6 +501,7 @@ impl NetworkServerStats {
         self.batches += delta.batches;
         self.attributed_cycles += delta.attributed_cycles;
         self.weight_copy_cycles += delta.weight_copy_cycles;
+        self.failovers += delta.failovers;
         self.per_replica[replica].add(delta);
     }
 }
@@ -1035,6 +1083,12 @@ impl InferenceServer {
     /// over layer ranges, bounded FIFOs, admission control) instead of
     /// a monolithic [`NetExec`]; replies are bit-identical either way —
     /// only the modeled timing differs.
+    ///
+    /// Fault-aware serving: a replica whose engine reports an
+    /// [`UncorrectableFault`] is marked DEAD and its unserved requests
+    /// are rerouted to a healthy replica through the dispatcher, so
+    /// every reply a client receives is bit-identical to a fault-free
+    /// run — a detected-uncorrectable word never produces output.
     #[allow(clippy::too_many_arguments)]
     fn network_impl(
         qnet: QuantNetwork,
@@ -1044,6 +1098,8 @@ impl InferenceServer {
         replicas: usize,
         policy: Policy,
         pipeline: Option<PipelineConfig>,
+        ecc: bool,
+        faults: Vec<(usize, usize, usize, FaultPlan)>,
     ) -> Result<NetworkServer> {
         assert!(batch >= 1, "need a batch size");
         assert!(replicas >= 1, "need at least one replica");
@@ -1054,7 +1110,7 @@ impl InferenceServer {
         }
         // Build every replica engine up front: capacity/pinning errors
         // surface here, not inside a worker thread.
-        let engines: Vec<ReplicaEngine> = (0..replicas)
+        let mut engines: Vec<ReplicaEngine> = (0..replicas)
             .map(|_| match &pipeline {
                 None => Ok(ReplicaEngine::Seq(Box::new(NetExec::new(qnet.clone(), cfg)?))),
                 Some(p) => Ok(ReplicaEngine::Pipe(Box::new(PipelineEngine::new(
@@ -1064,6 +1120,26 @@ impl InferenceServer {
                 )?))),
             })
             .collect::<Result<_>>()?;
+        if ecc {
+            for engine in engines.iter_mut() {
+                match engine {
+                    ReplicaEngine::Seq(e) => e.set_ecc(true),
+                    ReplicaEngine::Pipe(p) => p.set_ecc(true),
+                }
+            }
+        }
+        for (replica, shard, block, plan) in faults {
+            ensure!(
+                replica < replicas,
+                "inject_fault: replica {replica} out of range ({replicas} replicas)"
+            );
+            match &mut engines[replica] {
+                ReplicaEngine::Seq(e) => e.arm_fault(shard, block, plan)?,
+                // Pipelined replicas arm on stage 0's engine (the
+                // builder's documented contract).
+                ReplicaEngine::Pipe(p) => p.arm_fault(0, shard, block, plan)?,
+            }
+        }
         let (c, h, w) = qnet.input_shape();
         let input_len = c * h * w;
         let fidelity = cfg.fidelity;
@@ -1106,49 +1182,103 @@ impl InferenceServer {
             replica_rxs.push(brx);
         }
 
-        let mut handles = Vec::with_capacity(replicas + 1);
+        /// Dispatcher inbox: fresh batches from the batcher pump plus
+        /// failover traffic from dying replicas, on one channel so the
+        /// dispatcher stays the single routing authority.
+        enum DispatchMsg {
+            /// A freshly formed batch.
+            Batch(Vec<Request<Activations, Activations>>),
+            /// Requests a dying replica could not serve — reroute.
+            Requeue(Vec<Request<Activations, Activations>>),
+            /// Replica hit an uncorrectable ECC fault: poison it DEAD.
+            ReplicaDead(usize),
+            /// A routed batch finished (sent after any Requeue /
+            /// ReplicaDead it produced, so in-flight never hits zero
+            /// with failover traffic still pending).
+            Done,
+            /// The batcher closed; exit once in-flight drains to zero.
+            BatcherClosed,
+        }
+        let (dispatch_tx, dispatch_rx) = std::sync::mpsc::channel::<DispatchMsg>();
+
+        let mut handles = Vec::with_capacity(replicas + 2);
+        {
+            // Batch pump: the batcher's single consumer, feeding the
+            // dispatcher inbox.
+            let pump_tx = dispatch_tx.clone();
+            handles.push(std::thread::spawn(move || {
+                while let Some(reqs) = batcher.next_batch() {
+                    if pump_tx.send(DispatchMsg::Batch(reqs)).is_err() {
+                        return;
+                    }
+                }
+                let _ = pump_tx.send(DispatchMsg::BatcherClosed);
+            }));
+        }
         {
             let outstanding = Arc::clone(&outstanding);
             handles.push(std::thread::spawn(move || {
-                // Same fail-over discipline as the sharded dispatcher:
-                // a replica whose channel closed is poisoned DEAD and
-                // its batch fails over to the next candidate.
+                // Fail-over discipline: a replica is poisoned DEAD when
+                // it reports an uncorrectable ECC fault or its channel
+                // closes; neither policy ever selects it again, and its
+                // unserved requests reroute to the next candidate. Only
+                // when every replica is dead is a batch dropped
+                // (clients see a disconnect). The dispatcher is the
+                // sole DEAD writer, so the policy loads cannot race a
+                // counter into wrapping.
                 const DEAD: u64 = u64::MAX;
                 let mut rr_next = 0usize;
-                while let Some(reqs) = batcher.next_batch() {
-                    let mut pending = Some(reqs);
-                    while let Some(batch_reqs) = pending.take() {
-                        let target = match policy {
-                            Policy::RoundRobin => {
-                                let mut chosen = None;
-                                for step in 0..replicas {
-                                    let i = (rr_next + step) % replicas;
-                                    if outstanding[i].load(Ordering::SeqCst) != DEAD {
-                                        rr_next = (i + 1) % replicas;
-                                        chosen = Some(i);
-                                        break;
+                let mut closed = false;
+                let mut in_flight = 0usize;
+                while let Ok(msg) = dispatch_rx.recv() {
+                    match msg {
+                        DispatchMsg::Batch(reqs) | DispatchMsg::Requeue(reqs) => {
+                            let mut pending = Some(reqs);
+                            while let Some(batch_reqs) = pending.take() {
+                                let target = match policy {
+                                    Policy::RoundRobin => {
+                                        let mut chosen = None;
+                                        for step in 0..replicas {
+                                            let i = (rr_next + step) % replicas;
+                                            if outstanding[i].load(Ordering::SeqCst) != DEAD
+                                            {
+                                                rr_next = (i + 1) % replicas;
+                                                chosen = Some(i);
+                                                break;
+                                            }
+                                        }
+                                        chosen
+                                    }
+                                    Policy::LeastOutstanding => outstanding
+                                        .iter()
+                                        .enumerate()
+                                        .filter(|&(_, c)| c.load(Ordering::SeqCst) != DEAD)
+                                        .min_by_key(|&(_, c)| c.load(Ordering::SeqCst))
+                                        .map(|(i, _)| i),
+                                };
+                                let Some(target) = target else { break };
+                                outstanding[target].fetch_add(1, Ordering::SeqCst);
+                                match replica_txs[target].send(batch_reqs) {
+                                    Ok(()) => in_flight += 1,
+                                    Err(failed) => {
+                                        outstanding[target].store(DEAD, Ordering::SeqCst);
+                                        pending = Some(failed.0);
                                     }
                                 }
-                                chosen
-                            }
-                            Policy::LeastOutstanding => outstanding
-                                .iter()
-                                .enumerate()
-                                .filter(|&(_, c)| c.load(Ordering::SeqCst) != DEAD)
-                                .min_by_key(|&(_, c)| c.load(Ordering::SeqCst))
-                                .map(|(i, _)| i),
-                        };
-                        let Some(target) = target else { break };
-                        outstanding[target].fetch_add(1, Ordering::SeqCst);
-                        match replica_txs[target].send(batch_reqs) {
-                            Ok(()) => {}
-                            Err(failed) => {
-                                outstanding[target].store(DEAD, Ordering::SeqCst);
-                                pending = Some(failed.0);
                             }
                         }
+                        DispatchMsg::ReplicaDead(r) => {
+                            outstanding[r].store(DEAD, Ordering::SeqCst)
+                        }
+                        DispatchMsg::Done => in_flight -= 1,
+                        DispatchMsg::BatcherClosed => closed = true,
+                    }
+                    if closed && in_flight == 0 {
+                        break;
                     }
                 }
+                // Dropping replica_txs here drains and stops the
+                // replica workers.
             }));
         }
 
@@ -1156,14 +1286,25 @@ impl InferenceServer {
             let stats_w = Arc::clone(&stats);
             let outstanding = Arc::clone(&outstanding);
             let slots = Arc::clone(&pipeline_slots);
+            let dispatch = dispatch_tx.clone();
             handles.push(std::thread::spawn(move || {
+                // Set once this replica hits an uncorrectable fault;
+                // batches routed here before the dispatcher observes
+                // ReplicaDead bounce straight back as Requeue.
+                let mut dead = false;
                 while let Ok(reqs) = brx.recv() {
+                    if dead {
+                        let _ = dispatch.send(DispatchMsg::Requeue(reqs));
+                        let _ = dispatch.send(DispatchMsg::Done);
+                        continue;
+                    }
                     let t0 = Instant::now();
                     let mut delta = ReplicaServerStats {
                         batches: 1,
                         ..ReplicaServerStats::default()
                     };
-                    for req in reqs {
+                    let mut reqs = reqs.into_iter();
+                    while let Some(req) = reqs.next() {
                         if req.payload.len() != input_len {
                             eprintln!(
                                 "network server: request with {} activations, \
@@ -1173,31 +1314,45 @@ impl InferenceServer {
                             continue;
                         }
                         let input = Tensor::from_data(c, h, w, req.payload);
-                        match &mut engine {
-                            ReplicaEngine::Seq(eng) => match eng.infer(&input) {
-                                Ok(report) => {
-                                    delta.requests += 1;
-                                    delta.attributed_cycles +=
-                                        report.total.makespan_cycles;
-                                    let _ = req.reply.send(report.output);
-                                }
-                                Err(e) => {
-                                    eprintln!("network server: inference failed: {e:#}")
-                                }
-                            },
-                            // Closed-loop pipelined path: the reply is
-                            // bit-identical to Seq; attributed cycles
-                            // are the request's pipelined latency.
-                            ReplicaEngine::Pipe(pipe) => match pipe.submit(&input) {
-                                Ok(reply) => {
-                                    delta.requests += 1;
-                                    delta.attributed_cycles += reply.latency_cycles;
-                                    let _ = req.reply.send(reply.output);
-                                }
-                                Err(e) => {
-                                    eprintln!("network server: inference failed: {e:#}")
-                                }
-                            },
+                        // Closed-loop pipelined path: the reply is
+                        // bit-identical to Seq; attributed cycles are
+                        // the request's pipelined latency.
+                        let result = match &mut engine {
+                            ReplicaEngine::Seq(eng) => eng
+                                .infer(&input)
+                                .map(|report| (report.output, report.total.makespan_cycles)),
+                            ReplicaEngine::Pipe(pipe) => pipe
+                                .submit(&input)
+                                .map(|reply| (reply.output, reply.latency_cycles)),
+                        };
+                        match result {
+                            Ok((output, cycles)) => {
+                                delta.requests += 1;
+                                delta.attributed_cycles += cycles;
+                                let _ = req.reply.send(output);
+                            }
+                            Err(e) if e.downcast_ref::<UncorrectableFault>().is_some() => {
+                                // The pool is poisoned: no reply was
+                                // produced from the corrupted word.
+                                // Hand the failing request (payload
+                                // reclaimed from the tensor) and the
+                                // unserved tail back for rerouting.
+                                eprintln!("network server: replica {r} dead: {e:#}");
+                                delta.failovers += 1;
+                                dead = true;
+                                let mut unserved = vec![Request {
+                                    payload: input.data,
+                                    reply: req.reply,
+                                    submitted_at: req.submitted_at,
+                                }];
+                                unserved.extend(reqs.by_ref());
+                                let _ = dispatch.send(DispatchMsg::Requeue(unserved));
+                                let _ = dispatch.send(DispatchMsg::ReplicaDead(r));
+                                break;
+                            }
+                            Err(e) => {
+                                eprintln!("network server: inference failed: {e:#}")
+                            }
                         }
                     }
                     delta.exec_micros = t0.elapsed().as_micros() as u64;
@@ -1205,10 +1360,18 @@ impl InferenceServer {
                         slots.lock().unwrap()[r] = pipe.stats();
                     }
                     stats_w.lock().unwrap().merge_delta(r, &delta);
-                    outstanding[r].fetch_sub(1, Ordering::SeqCst);
+                    if !dead {
+                        // Dead counters stay DEAD (never decremented);
+                        // the dispatcher is the sole DEAD writer, so
+                        // this cannot race a live counter into a wrap.
+                        outstanding[r].fetch_sub(1, Ordering::SeqCst);
+                    }
+                    let _ = dispatch.send(DispatchMsg::Done);
                 }
             }));
         }
+        // The dispatcher and workers hold the only inbox senders now.
+        drop(dispatch_tx);
 
         Ok(NetworkServer {
             tx: Some(tx),
@@ -1351,6 +1514,54 @@ mod tests {
         assert_eq!(pipe.completed, 4);
         assert_eq!(pipe.stage_busy_cycles.len(), 2);
         assert!(pipe.span_cycles > 0);
+    }
+
+    #[test]
+    fn network_server_fails_over_on_uncorrectable_fault() {
+        // Replica 0 takes a double-bit (uncorrectable under SECDED)
+        // storage fault mid-service; every reply must still be
+        // bit-identical to the fault-free reference because the failing
+        // request reroutes to replica 1 instead of replying corrupted.
+        use crate::dla::models::toy;
+        use crate::dla::netexec::reference_forward;
+        use crate::reliability::fault::{FaultTarget, FaultTrigger};
+        let net = toy();
+        let qnet = QuantNetwork::random(&net, Precision::Int4, 0xfa11);
+        let plan = |bit: usize| FaultPlan {
+            target: FaultTarget::MainWord { addr: 0 },
+            bit,
+            trigger: FaultTrigger::OpCount(5),
+        };
+        let server = ServerConfig::network(qnet.clone())
+            .dataflow(Dataflow::Persistent)
+            .fidelity(ExecFidelity::Fast)
+            .batch(1)
+            .max_wait(Duration::from_millis(2))
+            .replicas(2)
+            .policy(Policy::RoundRobin)
+            .ecc(true)
+            .inject_fault(0, 0, 0, plan(3))
+            .inject_fault(0, 0, 0, plan(66))
+            .start_network()
+            .unwrap();
+        let tx = server.handle();
+        for i in 0..8u64 {
+            let input = qnet.random_input(0x3000 + i, true);
+            let want = reference_forward(&qnet, &input, true, true);
+            let got = submit_and_wait(&tx, input.data).expect("reply");
+            assert_eq!(got, want, "request {i} must match the fault-free reference");
+        }
+        drop(tx);
+        let stats = server.shutdown();
+        assert_eq!(stats.requests, 8, "every request served despite the dead replica");
+        assert_eq!(stats.failovers, 1, "replica 0 died exactly once");
+        assert_eq!(stats.per_replica[0].failovers, 1);
+        assert_eq!(stats.per_replica[1].failovers, 0);
+        assert!(
+            stats.per_replica[1].requests >= 7,
+            "replica 1 absorbed the failed-over traffic: {:?}",
+            stats.per_replica
+        );
     }
 
     #[test]

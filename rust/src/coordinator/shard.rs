@@ -27,11 +27,13 @@
 //!   ([`ResidentModel::pin_rows`]); dispatches then run against the
 //!   resident words with zero per-dispatch copy traffic.
 
-use anyhow::Result;
+use anyhow::{ensure, Result};
 
 use crate::arch::Precision;
 use crate::bramac::{ExecFidelity, Variant};
 use crate::quant::IntMatrix;
+use crate::reliability::ecc::EccStats;
+use crate::reliability::fault::FaultPlan;
 use crate::storage::resident::ResidentModel;
 
 use super::scheduler::{BlockPool, ScheduleStats};
@@ -398,6 +400,60 @@ impl ShardedPool {
             pool.run_mvm_batch_resident(rm, xs, signed_inputs)
         });
         merge_batchn(sr.m, xs.len(), &ranges, per_shard)
+    }
+
+    // --- Reliability (fault injection + ECC) -----------------------------
+
+    /// Switch SECDED ECC on every shard's pool (see
+    /// [`BlockPool::set_ecc`]).
+    pub fn set_ecc(&mut self, on: bool) {
+        for pool in &mut self.pools {
+            pool.set_ecc(on);
+        }
+    }
+
+    /// Arm a seeded fault plan on `(shard, block)` (see
+    /// [`crate::bramac::BramacBlock::arm_fault`] for target validation).
+    pub fn arm_fault(&mut self, shard: usize, block: usize, plan: FaultPlan) -> Result<()> {
+        ensure!(
+            shard < self.pools.len(),
+            "fault targets shard {shard} but the pool has {} shards",
+            self.pools.len()
+        );
+        self.pools[shard].arm_fault(block, plan)
+    }
+
+    /// ECC counters folded across shards in shard order.
+    pub fn ecc_stats(&self) -> EccStats {
+        let mut total = EccStats::default();
+        for pool in &self.pools {
+            total.merge(&pool.ecc_stats());
+        }
+        total
+    }
+
+    /// Fault bookkeeping summed across shards: `(fired, expired)`.
+    pub fn fault_counts(&self) -> (u64, u64) {
+        let mut fired = 0;
+        let mut expired = 0;
+        for pool in &self.pools {
+            let (f, e) = pool.fault_counts();
+            fired += f;
+            expired += e;
+        }
+        (fired, expired)
+    }
+
+    /// First poisoned block across shards, as
+    /// `(shard, block, word address)` — clears the poison it returns.
+    /// Deterministic: shards (then blocks) are drained in index order.
+    pub fn take_uncorrectable(&mut self) -> Option<(usize, usize, u16)> {
+        for (s, pool) in self.pools.iter_mut().enumerate() {
+            if let Some((b, addr)) = pool.take_uncorrectable() {
+                return Some((s, b, addr));
+            }
+        }
+        None
     }
 
     fn check_resident(&self, sr: &ShardedResident) {

@@ -178,6 +178,14 @@ pub fn replica_first_touch_cycles(net: &Network, cfg: &DlaConfig, replicas: usiz
     first_touch_cycles(net, cfg) * replicas as u64
 }
 
+/// SECDED correction overhead: every corrected word charges the fixed
+/// scrub latency ([`crate::reliability::ECC_CORRECTION_CYCLES`] — the
+/// read-modify-write that restores the stored codeword), so the
+/// reliability tax on a run is linear in the corrected-word count.
+pub fn ecc_correction_cycles(corrected_words: u64) -> u64 {
+    corrected_words * crate::reliability::ECC_CORRECTION_CYCLES
+}
+
 /// Evaluate many configurations at once, fanned out across worker
 /// threads (the DSE hot loop); results come back in input order, so the
 /// batch is bit-identical to mapping [`network_cycles`] sequentially.
@@ -199,6 +207,15 @@ mod tests {
     use crate::arch::Precision;
     use crate::bramac::Variant;
     use crate::dla::models::{alexnet, resnet34};
+
+    #[test]
+    fn ecc_correction_overhead_is_linear() {
+        assert_eq!(ecc_correction_cycles(0), 0);
+        assert_eq!(
+            ecc_correction_cycles(7),
+            7 * crate::reliability::ECC_CORRECTION_CYCLES
+        );
+    }
 
     #[test]
     fn layer_cycle_closed_form() {

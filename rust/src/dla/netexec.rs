@@ -79,6 +79,8 @@ use crate::dla::cycle::{
 };
 use crate::dla::models::{ConvLayer, Network};
 use crate::quant::{random_vector, IntMatrix};
+use crate::reliability::ecc::EccStats;
+use crate::reliability::fault::{FaultPlan, UncorrectableFault};
 use crate::util::Rng;
 
 /// A 3-D activation volume (channels × height × width), channel-major.
@@ -1009,6 +1011,30 @@ impl NetExec {
         self.analytical.0
     }
 
+    /// Switch SECDED ECC on every block of the engine's pool (see
+    /// [`crate::bramac::BramacBlock::set_ecc`]). Safe after pinning —
+    /// enabling re-encodes the resident words in place.
+    pub fn set_ecc(&mut self, on: bool) {
+        self.pool.set_ecc(on);
+    }
+
+    /// Arm a seeded fault plan on `(shard, block)` of the engine's
+    /// pool.
+    pub fn arm_fault(&mut self, shard: usize, block: usize, plan: FaultPlan) -> Result<()> {
+        self.pool.arm_fault(shard, block, plan)
+    }
+
+    /// ECC counters folded across the engine's pool.
+    pub fn ecc_stats(&self) -> EccStats {
+        self.pool.ecc_stats()
+    }
+
+    /// Fault bookkeeping summed across the engine's pool:
+    /// `(fired, expired)`.
+    pub fn fault_counts(&self) -> (u64, u64) {
+        self.pool.fault_counts()
+    }
+
     /// Run this engine's layer range `[lo, hi)` once: the range's
     /// layers lowered onto the pool exactly as [`NetExec::infer`] would
     /// run them inside the full network — global layer indices drive
@@ -1098,6 +1124,12 @@ impl NetExec {
                     signed,
                 )
             };
+            // An uncorrectable ECC word poisons the block that saw it;
+            // surface it as the typed error the serving layer fails
+            // over on, before the corrupt partial output propagates.
+            if let Some((shard, block, addr)) = self.pool.take_uncorrectable() {
+                return Err(UncorrectableFault { shard, block, addr }.into());
+            }
             let shift = if li + 1 == nlayers {
                 0
             } else {

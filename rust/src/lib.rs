@@ -24,6 +24,9 @@
 //!   regenerates Table III and Fig 13.
 //! * [`runtime`] — PJRT executor that loads the AOT-compiled JAX/Pallas
 //!   artifacts (`artifacts/*.hlo.txt`); Python is never on this path.
+//! * [`reliability`] — seeded fault injection, SECDED (72,64) ECC on
+//!   the main array, and the silent-data-corruption campaign behind
+//!   the `faults` subcommand.
 //! * [`coordinator`] — the inference coordinator: tiler, plan cache,
 //!   double-buffered weight streaming (the eFSM port-freeing
 //!   contribution) plus the persistent dataflow against weights pinned
@@ -43,6 +46,7 @@ pub mod dla;
 pub mod dsp;
 pub mod gemv;
 pub mod quant;
+pub mod reliability;
 pub mod report;
 pub mod runtime;
 pub mod storage;

@@ -130,6 +130,25 @@ drivers:
                   pipeline with admission control, rejecting arrivals
                   beyond F in flight — single-threaded and
                   byte-reproducible for CI smoke runs
+  faults [--trials N] [--ops K] [--seed X] [--json FILE]
+         [--serve-failover] [--requests R]
+         [--fidelity bit-accurate|fast]
+                  seeded fault-injection campaign: sweep precision x
+                  variant x ECC on/off x target class (main-array
+                  single/double-bit, dummy-array row, accumulator
+                  lane), classify every trial against a fault-free
+                  oracle, and report silent-data-corruption rates.
+                  Gates on the reliability invariants: ECC on means
+                  zero silent corruptions (singles corrected, doubles
+                  detected), ECC off measures a nonzero SDC rate, and
+                  the fast engine replays every corrupted run
+                  bit-identically. --json writes the machine-readable
+                  report for CI. --serve-failover additionally boots a
+                  2-replica network server with an uncorrectable fault
+                  armed on replica 0 and proves every reply stays
+                  bit-identical to the fault-free reference while the
+                  dead replica's traffic fails over (--fidelity picks
+                  that serve leg's engine)
   check           verify artifacts + PJRT runtime are functional
   bench-check --current F [--baseline BENCH_pr6.json] [--tolerance 0.2]
               [--absolute] [--fidelity bit-accurate|fast]
@@ -200,6 +219,7 @@ fn run(args: &[String]) -> Result<()> {
         "gemv" => cmd_gemv(&args[1..])?,
         "infer" => cmd_infer(&args[1..])?,
         "serve" => cmd_serve(&args[1..])?,
+        "faults" => cmd_faults(&args[1..])?,
         "check" => cmd_check()?,
         "bench-check" => cmd_bench_check(&args[1..])?,
         other => bail!("unknown command '{other}' (try `bramac-sim help`)"),
@@ -960,6 +980,87 @@ fn cmd_bench_check(args: &[String]) -> Result<()> {
         );
     }
     println!("bench-check OK: no wall-time regression beyond {:.0}%", tolerance * 100.0);
+    Ok(())
+}
+
+/// `faults`: the seeded fault-injection campaign plus the optional
+/// serve-failover proof (see `reliability::campaign` and DESIGN.md
+/// §"Reliability").
+fn cmd_faults(args: &[String]) -> Result<()> {
+    use bramac::reliability::{
+        run_campaign, CampaignConfig, FaultPlan, FaultTarget, FaultTrigger,
+    };
+    let default = CampaignConfig::default();
+    let config = CampaignConfig {
+        trials: flag(args, "--trials", default.trials)?,
+        ops: flag(args, "--ops", default.ops)?,
+        seed: flag(args, "--seed", default.seed)?,
+    };
+    let json_path: String = flag(args, "--json", String::new())?;
+    let report = run_campaign(&config)?;
+    print!("{}", report.render());
+    if !json_path.is_empty() {
+        std::fs::write(&json_path, report.to_json())
+            .map_err(|e| anyhow::anyhow!("write {json_path}: {e}"))?;
+        println!("campaign JSON written to {json_path}");
+    }
+    report.check_invariants()?;
+    println!(
+        "invariants OK: ECC on = zero silent corruptions, ECC off SDC rate {:.3}, \
+         fast twin bit-identical on every trial",
+        report.totals(false).sdc_rate()
+    );
+    if args.iter().any(|a| a == "--serve-failover") {
+        let requests: usize = flag::<usize>(args, "--requests", 8)?.max(2);
+        let fidelity: ExecFidelity = flag(args, "--fidelity", ExecFidelity::Fast)?;
+        let net = network_by_name("toy").expect("toy network");
+        let qnet = QuantNetwork::random(&net, Precision::Int4, config.seed);
+        // Double-bit storage fault on replica 0's first resident word:
+        // detected-uncorrectable under SECDED, so the replica dies
+        // instead of replying corrupted data.
+        let plan = |bit: usize| FaultPlan {
+            target: FaultTarget::MainWord { addr: 0 },
+            bit,
+            trigger: FaultTrigger::OpCount(5),
+        };
+        let server = ServerConfig::network(qnet.clone())
+            .dataflow(Dataflow::Persistent)
+            .fidelity(fidelity)
+            .batch(1)
+            .max_wait(Duration::from_millis(2))
+            .replicas(2)
+            .policy(Policy::RoundRobin)
+            .ecc(true)
+            .inject_fault(0, 0, 0, plan(3))
+            .inject_fault(0, 0, 0, plan(66))
+            .start_network()?;
+        let tx = server.handle();
+        for i in 0..requests as u64 {
+            let input = qnet.random_input(config.seed ^ (0xFA17_0000 + i), true);
+            let want = reference_forward(&qnet, &input, true, true);
+            let got = submit_and_wait(&tx, input.data).expect("reply");
+            anyhow::ensure!(
+                got == want,
+                "request {i}: served reply diverged from the fault-free reference"
+            );
+        }
+        drop(tx);
+        let stats = server.shutdown();
+        anyhow::ensure!(
+            stats.failovers == 1 && stats.per_replica[0].failovers == 1,
+            "expected exactly one replica-0 failover, got {} (per-replica {:?})",
+            stats.failovers,
+            stats.per_replica.iter().map(|r| r.failovers).collect::<Vec<_>>()
+        );
+        println!(
+            "serve-failover OK ({} fidelity): replica 0 died on the injected \
+             uncorrectable fault, {} requests all bit-identical to the fault-free \
+             reference ({} served by replica 1)",
+            fidelity.name(),
+            stats.requests,
+            stats.per_replica[1].requests
+        );
+    }
     Ok(())
 }
 

@@ -1,0 +1,464 @@
+//! Seeded fault-injection campaign: sweep precision × variant × ECC
+//! on/off × target class, classify every trial against a fault-free
+//! oracle, and report silent-data-corruption rates (the `faults` CLI
+//! subcommand and the EXPERIMENTS.md SDC table).
+//!
+//! Every trial runs three times from one seed: the bit-accurate oracle
+//! without the fault, the bit-accurate block with the fault, and a
+//! fast-fidelity twin with the same fault — the twin must reproduce
+//! the *corrupted* outputs and stats bit-identically
+//! (`fidelity_mismatches` stays 0), which is the fault model's core
+//! contract.
+
+use anyhow::{ensure, Result};
+
+use crate::arch::Precision;
+use crate::bramac::signext::pack_word;
+use crate::bramac::{BramacBlock, ExecFidelity, Variant};
+use crate::util::Rng;
+
+use super::ecc::EccStats;
+use super::fault::{FaultInjector, FaultPlan, FaultStats};
+
+/// Campaign shape. `ops` MAC2s per trial read words `0..2*ops`, so a
+/// trial touches at most the first `2*ops` main-array words.
+#[derive(Debug, Clone, Copy)]
+pub struct CampaignConfig {
+    /// Trials per (precision, variant, ecc, class) cell.
+    pub trials: usize,
+    pub seed: u64,
+    /// MAC2s per trial (≤ 256: a trial stays inside one main array).
+    pub ops: u64,
+}
+
+impl Default for CampaignConfig {
+    fn default() -> Self {
+        CampaignConfig { trials: 12, seed: 0xFA17, ops: 24 }
+    }
+}
+
+/// What kind of fault a cell injects.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum TargetClass {
+    /// One flipped bit in an observed main-array codeword.
+    MainSingle,
+    /// Two flipped bits in the same observed codeword (ECC-on only:
+    /// the DED case).
+    MainDouble,
+    /// A dummy-array weight-copy row or accumulator-lane flip —
+    /// outside SECDED's reach; parity detection only.
+    DummyOrAcc,
+}
+
+impl TargetClass {
+    pub fn name(self) -> &'static str {
+        match self {
+            TargetClass::MainSingle => "main-single",
+            TargetClass::MainDouble => "main-double",
+            TargetClass::DummyOrAcc => "dummy-or-acc",
+        }
+    }
+}
+
+/// One (precision, variant, ecc, class) cell's outcome counters.
+#[derive(Debug, Clone)]
+pub struct CampaignCell {
+    pub precision: Precision,
+    pub variant: Variant,
+    pub ecc: bool,
+    pub class: TargetClass,
+    pub faults: FaultStats,
+    pub ecc_stats: EccStats,
+    /// Trials where the fast twin diverged from the bit-accurate
+    /// faulted run — must stay 0.
+    pub fidelity_mismatches: u64,
+}
+
+/// The full sweep.
+#[derive(Debug, Clone)]
+pub struct CampaignReport {
+    pub config: CampaignConfig,
+    pub cells: Vec<CampaignCell>,
+}
+
+/// Everything one trial run exposes for classification.
+struct TrialRun {
+    out: Vec<Vec<i64>>,
+    stats: crate::bramac::StreamStats,
+    ecc_stats: EccStats,
+    poisoned: Option<u16>,
+    fired: u64,
+    expired: u64,
+}
+
+/// Run one block through the trial's deterministic MAC2 stream. The
+/// same `seed` yields the same weights and inputs whether or not
+/// faults are armed — plans never consume trial randomness.
+fn run_trial(
+    variant: Variant,
+    p: Precision,
+    fidelity: ExecFidelity,
+    ecc: bool,
+    plans: &[FaultPlan],
+    ops: u64,
+    seed: u64,
+) -> Result<TrialRun> {
+    let mut rng = Rng::seed_from_u64(seed);
+    let mut block = BramacBlock::new(variant, p).with_fidelity(fidelity);
+    let (lo, hi) = p.range();
+    let lanes = p.lanes_per_word();
+    for k in 0..2 * ops {
+        let elems: Vec<i64> =
+            (0..lanes).map(|_| rng.gen_range_i64(lo as i64, hi as i64)).collect();
+        block.write_word(k as u16, pack_word(&elems, p, true));
+    }
+    block.set_ecc(ecc);
+    for plan in plans {
+        block.arm_fault(*plan)?;
+    }
+    block.reset_acc();
+    for k in 0..ops {
+        let pairs: Vec<(i64, i64)> = (0..variant.dummy_arrays())
+            .map(|_| {
+                (rng.gen_range_i64(lo as i64, hi as i64), rng.gen_range_i64(lo as i64, hi as i64))
+            })
+            .collect();
+        block.mac2((2 * k) as u16, (2 * k + 1) as u16, &pairs, true);
+    }
+    let out = block.read_accumulators();
+    let (fired, expired) = block.fault_counts();
+    Ok(TrialRun {
+        out,
+        stats: block.stats(),
+        ecc_stats: block.ecc_stats(),
+        poisoned: block.take_uncorrectable(),
+        fired,
+        expired,
+    })
+}
+
+/// Generate the plans for one trial of a class.
+fn trial_plans(
+    inj: &mut FaultInjector,
+    class: TargetClass,
+    ecc: bool,
+    variant: Variant,
+    p: Precision,
+    ops: u64,
+    trial: usize,
+) -> Vec<FaultPlan> {
+    match class {
+        TargetClass::MainSingle => vec![inj.main_word_observed(ops, ecc)],
+        TargetClass::MainDouble => {
+            let (a, b) = inj.main_word_observed_double(ops);
+            vec![a, b]
+        }
+        TargetClass::DummyOrAcc => {
+            // Alternate the two sub-targets so both are always covered.
+            if trial % 2 == 0 {
+                vec![inj.dummy_row(variant.dummy_arrays(), ops)]
+            } else {
+                vec![inj.acc_lane(variant.dummy_arrays(), p, ops)]
+            }
+        }
+    }
+}
+
+/// Run the full sweep. Deterministic in `config.seed`.
+pub fn run_campaign(config: &CampaignConfig) -> Result<CampaignReport> {
+    ensure!(config.ops >= 1 && config.ops <= 256, "ops must be in 1..=256");
+    ensure!(config.trials >= 1, "need at least one trial per cell");
+    let mut cells = Vec::new();
+    let mut inj = FaultInjector::seeded(config.seed);
+    for p in Precision::ALL {
+        for variant in Variant::ALL {
+            for ecc in [true, false] {
+                let classes: &[TargetClass] = if ecc {
+                    &[TargetClass::MainSingle, TargetClass::MainDouble, TargetClass::DummyOrAcc]
+                } else {
+                    &[TargetClass::MainSingle, TargetClass::DummyOrAcc]
+                };
+                for &class in classes {
+                    cells.push(run_cell(
+                        config, &mut inj, p, variant, ecc, class,
+                    )?);
+                }
+            }
+        }
+    }
+    Ok(CampaignReport { config: *config, cells })
+}
+
+fn run_cell(
+    config: &CampaignConfig,
+    inj: &mut FaultInjector,
+    p: Precision,
+    variant: Variant,
+    ecc: bool,
+    class: TargetClass,
+) -> Result<CampaignCell> {
+    let mut faults = FaultStats::default();
+    let mut ecc_stats = EccStats::default();
+    let mut fidelity_mismatches = 0u64;
+    for trial in 0..config.trials {
+        let plans = trial_plans(inj, class, ecc, variant, p, config.ops, trial);
+        let seed = config
+            .seed
+            .wrapping_mul(0x9E37_79B9_7F4A_7C15)
+            .wrapping_add(trial as u64)
+            ^ ((ecc as u64) << 17)
+            ^ ((class as u64) << 23);
+        let oracle =
+            run_trial(variant, p, ExecFidelity::BitAccurate, false, &[], config.ops, seed)?;
+        let hit =
+            run_trial(variant, p, ExecFidelity::BitAccurate, ecc, &plans, config.ops, seed)?;
+        let twin = run_trial(variant, p, ExecFidelity::Fast, ecc, &plans, config.ops, seed)?;
+        // The fast twin must replay the corrupted run bit-identically:
+        // outputs, stream stats (incl. correction charges), ECC
+        // counters, and the poison verdict.
+        if twin.out != hit.out
+            || twin.stats != hit.stats
+            || twin.ecc_stats != hit.ecc_stats
+            || twin.poisoned != hit.poisoned
+        {
+            fidelity_mismatches += 1;
+        }
+        faults.injected += 1;
+        faults.expired += hit.expired;
+        if hit.fired == 0 {
+            continue;
+        }
+        faults.fired += 1;
+        ecc_stats.merge(&hit.ecc_stats);
+        let clean = hit.out == oracle.out;
+        if hit.poisoned.is_some() || hit.ecc_stats.detected_uncorrectable > 0 {
+            faults.detected_uncorrectable += 1;
+        } else if hit.ecc_stats.corrected > 0 && clean {
+            faults.corrected += 1;
+        } else if !clean {
+            faults.silent += 1;
+            ecc_stats.silent += 1;
+        } else {
+            faults.masked += 1;
+        }
+    }
+    Ok(CampaignCell {
+        precision: p,
+        variant,
+        ecc,
+        class,
+        faults,
+        ecc_stats,
+        fidelity_mismatches,
+    })
+}
+
+impl CampaignReport {
+    /// Aggregate over cells with the given ECC setting.
+    pub fn totals(&self, ecc: bool) -> FaultStats {
+        let mut total = FaultStats::default();
+        for cell in self.cells.iter().filter(|c| c.ecc == ecc) {
+            total.merge(&cell.faults);
+        }
+        total
+    }
+
+    /// Aggregate over main-array cells only (the SECDED-protected
+    /// class) with the given ECC setting.
+    pub fn main_array_totals(&self, ecc: bool) -> FaultStats {
+        let mut total = FaultStats::default();
+        for cell in self.cells.iter().filter(|c| {
+            c.ecc == ecc
+                && matches!(c.class, TargetClass::MainSingle | TargetClass::MainDouble)
+        }) {
+            total.merge(&cell.faults);
+        }
+        total
+    }
+
+    /// The acceptance invariants the sweep must uphold; the `faults`
+    /// CLI and `tests/fault_campaign.rs` both gate on this.
+    pub fn check_invariants(&self) -> Result<()> {
+        for cell in &self.cells {
+            ensure!(
+                cell.fidelity_mismatches == 0,
+                "{} {} ecc={} {}: fast twin diverged from the bit-accurate faulted run",
+                cell.precision,
+                cell.variant.name(),
+                cell.ecc,
+                cell.class.name()
+            );
+            if cell.ecc {
+                ensure!(
+                    cell.faults.silent == 0,
+                    "{} {} {}: {} silent corruption(s) with ECC on",
+                    cell.precision,
+                    cell.variant.name(),
+                    cell.class.name(),
+                    cell.faults.silent
+                );
+                match cell.class {
+                    TargetClass::MainSingle => ensure!(
+                        cell.faults.corrected == cell.faults.fired,
+                        "{} {}: ECC must correct every observed single-bit main-array \
+                         fault ({} of {})",
+                        cell.precision,
+                        cell.variant.name(),
+                        cell.faults.corrected,
+                        cell.faults.fired
+                    ),
+                    TargetClass::MainDouble => ensure!(
+                        cell.faults.detected_uncorrectable == cell.faults.fired,
+                        "{} {}: ECC must detect every double-bit main-array fault \
+                         ({} of {})",
+                        cell.precision,
+                        cell.variant.name(),
+                        cell.faults.detected_uncorrectable,
+                        cell.faults.fired
+                    ),
+                    TargetClass::DummyOrAcc => ensure!(
+                        cell.faults.detected_uncorrectable == cell.faults.fired,
+                        "{} {}: parity must flag every dummy/acc fault ({} of {})",
+                        cell.precision,
+                        cell.variant.name(),
+                        cell.faults.detected_uncorrectable,
+                        cell.faults.fired
+                    ),
+                }
+            }
+        }
+        let off = self.totals(false);
+        ensure!(
+            off.silent > 0,
+            "ECC-off sweep measured no silent corruption — the campaign is not \
+             exercising the fault paths"
+        );
+        Ok(())
+    }
+
+    /// Human-readable table (the `faults` subcommand output).
+    pub fn render(&self) -> String {
+        let mut s = String::new();
+        s.push_str(&format!(
+            "fault campaign: {} trials/cell, {} MAC2s/trial, seed {:#x}\n",
+            self.config.trials, self.config.ops, self.config.seed
+        ));
+        s.push_str(&format!(
+            "{:<6} {:<11} {:<4} {:<13} {:>5} {:>5} {:>4} {:>4} {:>4} {:>4}  {:>8}\n",
+            "prec", "variant", "ecc", "class", "inj", "fired", "corr", "det", "sil", "mask",
+            "sdc-rate"
+        ));
+        for c in &self.cells {
+            s.push_str(&format!(
+                "{:<6} {:<11} {:<4} {:<13} {:>5} {:>5} {:>4} {:>4} {:>4} {:>4}  {:>8.3}\n",
+                format!("{}", c.precision),
+                c.variant.name(),
+                if c.ecc { "on" } else { "off" },
+                c.class.name(),
+                c.faults.injected,
+                c.faults.fired,
+                c.faults.corrected,
+                c.faults.detected_uncorrectable,
+                c.faults.silent,
+                c.faults.masked,
+                c.faults.sdc_rate()
+            ));
+        }
+        let on = self.totals(true);
+        let off = self.totals(false);
+        s.push_str(&format!(
+            "totals: ECC on  — fired {} corrected {} detected {} silent {} (SDC rate {:.3})\n",
+            on.fired, on.corrected, on.detected_uncorrectable, on.silent, on.sdc_rate()
+        ));
+        s.push_str(&format!(
+            "totals: ECC off — fired {} corrected {} detected {} silent {} (SDC rate {:.3})\n",
+            off.fired, off.corrected, off.detected_uncorrectable, off.silent, off.sdc_rate()
+        ));
+        s
+    }
+
+    /// Machine-readable JSON for the CI artifact.
+    pub fn to_json(&self) -> String {
+        let mut s = String::new();
+        s.push_str(&format!(
+            "{{\"trials\":{},\"ops\":{},\"seed\":{},\"cells\":[",
+            self.config.trials, self.config.ops, self.config.seed
+        ));
+        for (i, c) in self.cells.iter().enumerate() {
+            if i > 0 {
+                s.push(',');
+            }
+            s.push_str(&format!(
+                "{{\"precision\":\"{}\",\"variant\":\"{}\",\"ecc\":{},\"class\":\"{}\",\
+                 \"injected\":{},\"fired\":{},\"expired\":{},\"corrected\":{},\
+                 \"detected_uncorrectable\":{},\"silent\":{},\"masked\":{},\
+                 \"fidelity_mismatches\":{},\"sdc_rate\":{:.6}}}",
+                c.precision,
+                c.variant.name(),
+                c.ecc,
+                c.class.name(),
+                c.faults.injected,
+                c.faults.fired,
+                c.faults.expired,
+                c.faults.corrected,
+                c.faults.detected_uncorrectable,
+                c.faults.silent,
+                c.faults.masked,
+                c.fidelity_mismatches,
+                c.faults.sdc_rate()
+            ));
+        }
+        let on = self.totals(true);
+        let off = self.totals(false);
+        s.push_str(&format!(
+            "],\"sdc_rate_ecc_on\":{:.6},\"sdc_rate_ecc_off\":{:.6}}}",
+            on.sdc_rate(),
+            off.sdc_rate()
+        ));
+        s
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn small() -> CampaignConfig {
+        CampaignConfig { trials: 4, seed: 0x5EED, ops: 12 }
+    }
+
+    #[test]
+    fn campaign_is_seed_deterministic() {
+        let a = run_campaign(&small()).expect("campaign");
+        let b = run_campaign(&small()).expect("campaign");
+        assert_eq!(a.to_json(), b.to_json());
+    }
+
+    #[test]
+    fn campaign_upholds_acceptance_invariants() {
+        // ECC on: zero silent corruptions, singles corrected, doubles
+        // detected; ECC off: a nonzero measured SDC rate; fast twin
+        // bit-identical on every trial.
+        let report = run_campaign(&small()).expect("campaign");
+        report.check_invariants().expect("invariants");
+        let on = report.totals(true);
+        assert_eq!(on.silent, 0);
+        assert!(on.corrected > 0, "sweep never exercised correction");
+        assert!(on.detected_uncorrectable > 0, "sweep never exercised detection");
+        let off = report.totals(false);
+        assert!(off.silent > 0);
+        assert!(off.sdc_rate() > 0.0);
+        // Observed-fault construction: main-array singles with ECC are
+        // always corrected, so the protected class has no masked tail.
+        let main_on = report.main_array_totals(true);
+        assert_eq!(main_on.fired, main_on.corrected + main_on.detected_uncorrectable);
+    }
+
+    #[test]
+    fn json_is_parseable_and_complete() {
+        let report = run_campaign(&small()).expect("campaign");
+        let json = crate::util::json::parse(&report.to_json()).expect("valid json");
+        let cells = json.get("cells").and_then(|c| c.as_arr()).expect("cells");
+        assert_eq!(cells.len(), report.cells.len());
+    }
+}

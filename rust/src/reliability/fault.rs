@@ -1,0 +1,353 @@
+//! Deterministic, seeded fault injection for BRAMAC blocks.
+//!
+//! A [`FaultPlan`] names *where* a bit flips (main-array word,
+//! dummy-array row, or accumulator lane), *which* bit, and *when* (an
+//! op count or a cycle window). Plans are armed on a
+//! [`crate::bramac::BramacBlock`] and fire at MAC2 entry against the
+//! block's own `StreamStats` counters — which are bit-identical across
+//! execution fidelities, so an injected plan corrupts the *same* op
+//! with the *same* bit under the eFSM oracle and the SWAR fast path
+//! (proven in `tests/fault_campaign.rs`).
+//!
+//! The fault model is defined at the lane/word level on the state both
+//! fidelities share: main-array words, the per-op weight copy, and the
+//! committed P/ACC rows. Oracle-internal rows (W12/INV) are rejected at
+//! arm time — the fast path has no equivalent state to corrupt.
+
+use std::fmt;
+
+use crate::arch::Precision;
+use crate::bramac::block::{MAIN_WORDS, WORD_BITS};
+use crate::bramac::dummy_array::Row;
+use crate::bramac::row::ROW_BITS;
+use crate::util::Rng;
+
+use super::ecc::CODEWORD_BITS;
+
+/// Where the flipped bit lives.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FaultTarget {
+    /// A stored main-array word: the flip lands in storage *before* the
+    /// triggering op's weight reads, so SECDED (when enabled) sees it
+    /// on the read path. Bits `0..40` are the raw word; `40..72` (the
+    /// codeword pad + parity byte) exist only with ECC on.
+    MainWord { addr: u16 },
+    /// A dummy-array row of one engine. `W1`/`W2` corrupt the weight
+    /// copy of the triggering op only (the next op re-copies); `P` and
+    /// `Acc` flip the committed row *after* the op.
+    DummyRow { engine: usize, row: Row },
+    /// Sugar for an `Acc`-row flip addressed as (lane, bit-in-lane):
+    /// the flipped Row160 bit is `lane * ext_bits + bit`.
+    AccLane { engine: usize, lane: usize },
+}
+
+/// When the fault fires (single-shot; checked at MAC2 entry).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FaultTrigger {
+    /// Fires on the op whose entry `mac2_count` equals this value
+    /// (0-based: `OpCount(0)` corrupts the first MAC2 after arming).
+    OpCount(u64),
+    /// Fires on the first op entered with `main_cycles` in
+    /// `lo..=hi`; expires unfired if the window is overshot.
+    CycleWindow { lo: u64, hi: u64 },
+}
+
+/// One armed fault: target × bit index × trigger.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct FaultPlan {
+    pub target: FaultTarget,
+    pub bit: usize,
+    pub trigger: FaultTrigger,
+}
+
+/// Campaign-level fault accounting. Every outcome of an injected plan
+/// lands in exactly one of the outcome buckets:
+/// `corrected + detected_uncorrectable + silent + masked == fired`.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct FaultStats {
+    /// Plans armed.
+    pub injected: u64,
+    /// Plans whose trigger fired.
+    pub fired: u64,
+    /// Plans whose cycle window was overshot (never fired).
+    pub expired: u64,
+    /// Fired faults ECC corrected (output matched the oracle).
+    pub corrected: u64,
+    /// Fired faults detected but uncorrectable (poisoned, retried).
+    pub detected_uncorrectable: u64,
+    /// Fired faults that corrupted an output with nothing flagged —
+    /// the silent-data-corruption bucket.
+    pub silent: u64,
+    /// Fired faults whose output still matched the oracle with nothing
+    /// flagged (flip never reached an observed value).
+    pub masked: u64,
+}
+
+impl FaultStats {
+    /// Fold another cell's counters into this one. Every `FaultStats`
+    /// field must be folded here: adding a field without merging it is
+    /// a pallas-lint r1 (stats-merge) failure.
+    pub fn merge(&mut self, other: &FaultStats) {
+        self.injected += other.injected;
+        self.fired += other.fired;
+        self.expired += other.expired;
+        self.corrected += other.corrected;
+        self.detected_uncorrectable += other.detected_uncorrectable;
+        self.silent += other.silent;
+        self.masked += other.masked;
+    }
+
+    /// Silent corruptions per fired fault — the campaign's headline
+    /// number (0.0 when nothing fired).
+    pub fn sdc_rate(&self) -> f64 {
+        if self.fired == 0 {
+            return 0.0;
+        }
+        self.silent as f64 / self.fired as f64
+    }
+}
+
+/// The typed error an ECC-uncorrectable word raises out of a serving
+/// engine: it marks the replica DEAD and the dispatcher retries the
+/// request on a healthy replica. Carried as the payload of an
+/// `anyhow::Error`, so `err.downcast_ref::<UncorrectableFault>()`
+/// recognizes it through context wrapping.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct UncorrectableFault {
+    pub shard: usize,
+    pub block: usize,
+    pub addr: u16,
+}
+
+impl fmt::Display for UncorrectableFault {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(
+            f,
+            "uncorrectable ECC fault at shard {} block {} word {}",
+            self.shard, self.block, self.addr
+        )
+    }
+}
+
+impl std::error::Error for UncorrectableFault {}
+
+/// Seeded plan generator: the campaign's randomness lives here, so a
+/// seed fully determines every injected (target, bit, trigger) tuple.
+pub struct FaultInjector {
+    rng: Rng,
+}
+
+impl FaultInjector {
+    pub fn seeded(seed: u64) -> FaultInjector {
+        FaultInjector { rng: Rng::seed_from_u64(seed) }
+    }
+
+    /// Single-bit main-array fault on a raw storage bit (valid with ECC
+    /// off): `addr < words`, `bit < 40`, firing within the first `ops`
+    /// MAC2s.
+    pub fn main_word(&mut self, words: usize, ops: u64) -> FaultPlan {
+        let words = words.clamp(1, MAIN_WORDS);
+        FaultPlan {
+            target: FaultTarget::MainWord { addr: self.below(words) as u16 },
+            bit: self.below(WORD_BITS as usize),
+            trigger: FaultTrigger::OpCount(self.op_trigger(ops)),
+        }
+    }
+
+    /// Single-bit main-array fault anywhere in the 72-bit codeword
+    /// (pad and parity bits included) — requires ECC on.
+    pub fn main_word_codeword(&mut self, words: usize, ops: u64) -> FaultPlan {
+        let words = words.clamp(1, MAIN_WORDS);
+        FaultPlan {
+            target: FaultTarget::MainWord { addr: self.below(words) as u16 },
+            bit: self.below(CODEWORD_BITS),
+            trigger: FaultTrigger::OpCount(self.op_trigger(ops)),
+        }
+    }
+
+    /// A double-bit fault: two plans on the *same* word and trigger
+    /// with distinct codeword bits — the DED case (requires ECC on).
+    pub fn main_word_double(&mut self, words: usize, ops: u64) -> (FaultPlan, FaultPlan) {
+        let first = self.main_word_codeword(words, ops);
+        let b1 = first.bit;
+        let mut b2 = self.below(CODEWORD_BITS - 1);
+        if b2 >= b1 {
+            b2 += 1;
+        }
+        (first, FaultPlan { bit: b2, ..first })
+    }
+
+    /// A single-bit main-array fault guaranteed to be *observed*: under
+    /// the campaign layout where MAC2 `k` reads words `(2k, 2k+1)`, the
+    /// corrupted word is read by some op at or after the trigger, so
+    /// the decoder (ECC on) always sees the flip. With `codeword` the
+    /// bit ranges over all 72 codeword bits, else the raw 40.
+    pub fn main_word_observed(&mut self, ops: u64, codeword: bool) -> FaultPlan {
+        let ops = ops.max(1);
+        let n = self.op_trigger(ops);
+        let addr = 2 * n as usize + self.below(2 * (ops - n) as usize);
+        let bits = if codeword { CODEWORD_BITS } else { WORD_BITS as usize };
+        FaultPlan {
+            target: FaultTarget::MainWord { addr: addr as u16 },
+            bit: self.below(bits),
+            trigger: FaultTrigger::OpCount(n),
+        }
+    }
+
+    /// Observed double-bit fault: same word and trigger as
+    /// [`Self::main_word_observed`], two distinct codeword bits.
+    pub fn main_word_observed_double(&mut self, ops: u64) -> (FaultPlan, FaultPlan) {
+        let first = self.main_word_observed(ops, true);
+        let b1 = first.bit;
+        let mut b2 = self.below(CODEWORD_BITS - 1);
+        if b2 >= b1 {
+            b2 += 1;
+        }
+        (first, FaultPlan { bit: b2, ..first })
+    }
+
+    /// Weight-copy corruption: a W1/W2 row bit of one engine, for the
+    /// triggering op only.
+    pub fn dummy_row(&mut self, engines: usize, ops: u64) -> FaultPlan {
+        let row = if self.rng.gen_bool(0.5) { Row::W1 } else { Row::W2 };
+        FaultPlan {
+            target: FaultTarget::DummyRow { engine: self.below(engines.max(1)), row },
+            bit: self.below(ROW_BITS),
+            trigger: FaultTrigger::OpCount(self.op_trigger(ops)),
+        }
+    }
+
+    /// Accumulator-lane corruption: flips a bit of one lane's running
+    /// sum after the triggering op.
+    pub fn acc_lane(&mut self, engines: usize, p: Precision, ops: u64) -> FaultPlan {
+        FaultPlan {
+            target: FaultTarget::AccLane {
+                engine: self.below(engines.max(1)),
+                lane: self.below(p.lanes_per_word()),
+            },
+            bit: self.below(p.ext_bits() as usize),
+            trigger: FaultTrigger::OpCount(self.op_trigger(ops)),
+        }
+    }
+
+    fn op_trigger(&mut self, ops: u64) -> u64 {
+        self.below(ops.max(1) as usize) as u64
+    }
+
+    /// Uniform draw from `0..n` (the workspace `Rng::gen_range_*` is
+    /// inclusive of its upper bound).
+    fn below(&mut self, n: usize) -> usize {
+        debug_assert!(n >= 1);
+        self.rng.gen_range_usize(0, n - 1)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn injector_is_seed_deterministic() {
+        let mut a = FaultInjector::seeded(42);
+        let mut b = FaultInjector::seeded(42);
+        for _ in 0..16 {
+            assert_eq!(a.main_word(64, 10), b.main_word(64, 10));
+            assert_eq!(a.dummy_row(2, 10), b.dummy_row(2, 10));
+            assert_eq!(
+                a.acc_lane(2, Precision::Int4, 10),
+                b.acc_lane(2, Precision::Int4, 10)
+            );
+            assert_eq!(a.main_word_double(64, 10), b.main_word_double(64, 10));
+        }
+    }
+
+    #[test]
+    fn double_fault_shares_word_and_trigger_with_distinct_bits() {
+        let mut inj = FaultInjector::seeded(7);
+        for _ in 0..64 {
+            let (a, b) = inj.main_word_double(128, 20);
+            assert_eq!(a.target, b.target);
+            assert_eq!(a.trigger, b.trigger);
+            assert_ne!(a.bit, b.bit);
+            assert!(a.bit < CODEWORD_BITS && b.bit < CODEWORD_BITS);
+        }
+    }
+
+    #[test]
+    fn generated_plans_stay_in_range() {
+        let mut inj = FaultInjector::seeded(0xF001);
+        for _ in 0..128 {
+            let f = inj.main_word(32, 6);
+            match f.target {
+                FaultTarget::MainWord { addr } => assert!((addr as usize) < 32),
+                other => panic!("{other:?}"),
+            }
+            assert!(f.bit < WORD_BITS as usize);
+            match f.trigger {
+                FaultTrigger::OpCount(n) => assert!(n < 6),
+                other => panic!("{other:?}"),
+            }
+        }
+    }
+
+    #[test]
+    fn observed_plans_land_on_words_read_after_the_trigger() {
+        // Campaign layout: op k reads words (2k, 2k+1), so an observed
+        // plan's word must lie in [2*trigger, 2*ops).
+        let mut inj = FaultInjector::seeded(0x0B5E);
+        for _ in 0..256 {
+            let f = inj.main_word_observed(20, true);
+            let n = match f.trigger {
+                FaultTrigger::OpCount(n) => n,
+                other => panic!("{other:?}"),
+            };
+            let addr = match f.target {
+                FaultTarget::MainWord { addr } => addr as u64,
+                other => panic!("{other:?}"),
+            };
+            assert!(n < 20);
+            assert!(addr >= 2 * n && addr < 40, "addr {addr} trigger {n}");
+            assert!(f.bit < CODEWORD_BITS);
+            let (a, b) = inj.main_word_observed_double(20);
+            assert_eq!(a.target, b.target);
+            assert_eq!(a.trigger, b.trigger);
+            assert_ne!(a.bit, b.bit);
+        }
+    }
+
+    #[test]
+    fn fault_stats_merge_folds_every_field() {
+        let mut a = FaultStats {
+            injected: 1,
+            fired: 2,
+            expired: 3,
+            corrected: 4,
+            detected_uncorrectable: 5,
+            silent: 6,
+            masked: 7,
+        };
+        a.merge(&a.clone());
+        assert_eq!(
+            a,
+            FaultStats {
+                injected: 2,
+                fired: 4,
+                expired: 6,
+                corrected: 8,
+                detected_uncorrectable: 10,
+                silent: 12,
+                masked: 14,
+            }
+        );
+        assert!((a.sdc_rate() - 3.0).abs() < 1e-12);
+        assert_eq!(FaultStats::default().sdc_rate(), 0.0);
+    }
+
+    #[test]
+    fn uncorrectable_fault_displays_location() {
+        let f = UncorrectableFault { shard: 1, block: 2, addr: 37 };
+        let e: anyhow::Error = f.into();
+        assert!(e.to_string().contains("shard 1 block 2 word 37"));
+        assert_eq!(e.downcast_ref::<UncorrectableFault>(), Some(&f));
+    }
+}

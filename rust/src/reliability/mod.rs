@@ -1,0 +1,19 @@
+//! Reliability under scale: seeded fault injection, SECDED (72,64) ECC
+//! on the main array, and the silent-data-corruption campaign
+//! (DESIGN.md §"Reliability: fault injection and ECC").
+//!
+//! * [`ecc`] — the SECDED encoder/decoder modeling M20K / Virtex-4
+//!   `RAMB32_S64_ECC` hardware ECC, plus [`ecc::EccStats`];
+//! * [`fault`] — deterministic [`fault::FaultPlan`]s, the seeded
+//!   [`fault::FaultInjector`], and the typed
+//!   [`fault::UncorrectableFault`] error serving failover keys on;
+//! * [`campaign`] — the precision × variant × ECC sweep behind the
+//!   `faults` CLI subcommand and the EXPERIMENTS.md SDC table.
+
+pub mod campaign;
+pub mod ecc;
+pub mod fault;
+
+pub use campaign::{run_campaign, CampaignConfig, CampaignReport};
+pub use ecc::{EccOutcome, EccStats, ECC_CORRECTION_CYCLES};
+pub use fault::{FaultInjector, FaultPlan, FaultStats, FaultTarget, FaultTrigger, UncorrectableFault};

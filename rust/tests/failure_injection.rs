@@ -1,8 +1,16 @@
 //! Failure injection: corrupted artifacts, bad manifests, and invalid
-//! inputs must produce errors (never wrong numbers or hangs).
+//! inputs must produce errors (never wrong numbers or hangs) — and
+//! injected hardware bit-flips must be detected-or-corrected with ECC
+//! on, while measurably corrupting outputs with ECC off.
 
+use bramac::arch::Precision;
+use bramac::bramac::dummy_array::Row;
+use bramac::bramac::signext::pack_word;
+use bramac::bramac::{BramacBlock, ExecFidelity, Variant};
+use bramac::reliability::{EccStats, FaultPlan, FaultTarget, FaultTrigger};
 use bramac::runtime::{Manifest, Runtime};
 use bramac::util::json;
+use bramac::util::Rng;
 
 fn tempdir(tag: &str) -> std::path::PathBuf {
     let d = std::env::temp_dir().join(format!("bramac_fi_{tag}_{}", std::process::id()));
@@ -68,5 +76,116 @@ fn artifact_file_missing_is_an_error() {
 fn json_parser_rejects_garbage_not_panics() {
     for bad in ["", "{", "[1,", "\"unterminated", "{\"a\": }", "nul"] {
         assert!(json::parse(bad).is_err(), "{bad:?} should error");
+    }
+}
+
+// ---------------------------------------------------------------------
+// Hardware bit-flips: dummy-array and accumulator faults (the state
+// SECDED cannot reach) must be *flagged* by the modeled parity when ECC
+// is on — detected or corrected, never silent — and must measurably
+// corrupt outputs when ECC is off.
+// ---------------------------------------------------------------------
+
+/// One deterministic MAC2 stream on a single block (the campaign
+/// layout: op `k` reads words `(2k, 2k+1)`). Inputs are drawn from
+/// `[1, hi]` so a weight-LSB flip always shifts some product. The same
+/// seed yields the same weights/inputs whether or not plans are armed.
+fn mac2_trial(
+    variant: Variant,
+    p: Precision,
+    fidelity: ExecFidelity,
+    ecc: bool,
+    plans: &[FaultPlan],
+    ops: u64,
+    seed: u64,
+) -> (Vec<Vec<i64>>, EccStats, Option<u16>) {
+    let mut rng = Rng::seed_from_u64(seed);
+    let mut block = BramacBlock::new(variant, p).with_fidelity(fidelity);
+    let (lo, hi) = p.range();
+    let lanes = p.lanes_per_word();
+    for k in 0..2 * ops {
+        let elems: Vec<i64> =
+            (0..lanes).map(|_| rng.gen_range_i64(lo as i64, hi as i64)).collect();
+        block.write_word(k as u16, pack_word(&elems, p, true));
+    }
+    block.set_ecc(ecc);
+    for plan in plans {
+        block.arm_fault(*plan).expect("armable plan");
+    }
+    block.reset_acc();
+    for k in 0..ops {
+        let pairs: Vec<(i64, i64)> = (0..variant.dummy_arrays())
+            .map(|_| (rng.gen_range_i64(1, hi as i64), rng.gen_range_i64(1, hi as i64)))
+            .collect();
+        block.mac2((2 * k) as u16, (2 * k + 1) as u16, &pairs, true);
+    }
+    (block.read_accumulators(), block.ecc_stats(), block.take_uncorrectable())
+}
+
+#[test]
+fn dummy_row_weight_flip_flagged_with_ecc_corrupts_without() {
+    let ops = 8u64;
+    let p = Precision::Int4;
+    for variant in Variant::ALL {
+        for engine in 0..variant.dummy_arrays() {
+            // Lane 0's LSB of the W1 weight copy: the triggering op's
+            // product shifts by ±I1 (nonzero by construction).
+            let plan = FaultPlan {
+                target: FaultTarget::DummyRow { engine, row: Row::W1 },
+                bit: 0,
+                trigger: FaultTrigger::OpCount(3),
+            };
+            let seed = 0xD0 + engine as u64;
+            let (oracle, _, _) =
+                mac2_trial(variant, p, ExecFidelity::BitAccurate, false, &[], ops, seed);
+            // ECC off: silent corruption — output wrong, nothing flagged.
+            let (off, off_ecc, off_poison) =
+                mac2_trial(variant, p, ExecFidelity::BitAccurate, false, &[plan], ops, seed);
+            assert_ne!(off, oracle, "{} engine {engine}: flip must corrupt", variant.name());
+            assert_eq!(off_ecc, EccStats::default());
+            assert!(off_poison.is_none(), "nothing to flag with ECC off");
+            // ECC on: the dummy array's parity flags the fault.
+            let (_, on_ecc, on_poison) =
+                mac2_trial(variant, p, ExecFidelity::BitAccurate, true, &[plan], ops, seed);
+            assert!(on_poison.is_some(), "{}: parity must poison", variant.name());
+            assert!(on_ecc.detected_uncorrectable >= 1);
+            // Both fidelities replay the corrupted run bit-identically.
+            let (fast, fast_ecc, fast_poison) =
+                mac2_trial(variant, p, ExecFidelity::Fast, false, &[plan], ops, seed);
+            assert_eq!(fast, off);
+            assert_eq!(fast_ecc, off_ecc);
+            assert_eq!(fast_poison, off_poison);
+        }
+    }
+}
+
+#[test]
+fn accumulator_lane_flip_flagged_with_ecc_corrupts_without() {
+    let ops = 6u64;
+    let p = Precision::Int8;
+    for variant in Variant::ALL {
+        // Flip bit 4 of lane 2's running sum after the final op, so the
+        // ±2^4 offset survives to readout untouched.
+        let plan = FaultPlan {
+            target: FaultTarget::AccLane { engine: 0, lane: 2 },
+            bit: 4,
+            trigger: FaultTrigger::OpCount(ops - 1),
+        };
+        let (oracle, _, _) =
+            mac2_trial(variant, p, ExecFidelity::BitAccurate, false, &[], ops, 0xACC);
+        let (off, off_ecc, off_poison) =
+            mac2_trial(variant, p, ExecFidelity::BitAccurate, false, &[plan], ops, 0xACC);
+        assert_ne!(off[0][2], oracle[0][2], "{}: lane 2 must corrupt", variant.name());
+        assert_eq!(off_ecc, EccStats::default());
+        assert!(off_poison.is_none());
+        let (_, on_ecc, on_poison) =
+            mac2_trial(variant, p, ExecFidelity::BitAccurate, true, &[plan], ops, 0xACC);
+        assert!(on_poison.is_some(), "{}: parity must poison", variant.name());
+        assert!(on_ecc.detected_uncorrectable >= 1);
+        let (fast, fast_ecc, fast_poison) =
+            mac2_trial(variant, p, ExecFidelity::Fast, false, &[plan], ops, 0xACC);
+        assert_eq!(fast, off);
+        assert_eq!(fast_ecc, off_ecc);
+        assert_eq!(fast_poison, off_poison);
     }
 }

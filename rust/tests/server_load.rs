@@ -199,7 +199,7 @@ fn router_shifts_traffic_off_a_saturated_replica() {
     lo.inject_backlog(0, 1 << 40); // saturate replica 0
     let mut lo_counts = [0usize; 3];
     for x in &xs {
-        let (y, replica) = lo.dispatch(x, true);
+        let (y, replica) = lo.dispatch(x, true).expect("healthy replicas");
         assert_eq!(y, w.gemv_ref(x), "routing must never change results");
         lo_counts[replica] += 1;
     }
@@ -210,7 +210,7 @@ fn router_shifts_traffic_off_a_saturated_replica() {
     rr.inject_backlog(0, 1 << 40);
     let mut rr_counts = [0usize; 3];
     for x in &xs {
-        let (_, replica) = rr.dispatch(x, true);
+        let (_, replica) = rr.dispatch(x, true).expect("healthy replicas");
         rr_counts[replica] += 1;
     }
     assert_eq!(rr_counts, [10, 10, 10], "round-robin ignores load by design");
@@ -218,7 +218,7 @@ fn router_shifts_traffic_off_a_saturated_replica() {
     // Once the backlog retires, least-outstanding resumes using
     // replica 0.
     lo.retire(u64::MAX);
-    let (_, replica) = lo.dispatch(&xs[0], true);
+    let (_, replica) = lo.dispatch(&xs[0], true).expect("healthy replicas");
     assert_eq!(replica, 0);
     let stats = lo.stats();
     assert_eq!(stats.requests, 31);

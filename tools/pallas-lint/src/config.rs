@@ -8,7 +8,7 @@ pub const SCAN_DIRS: [&str; 4] = ["rust/src", "rust/tests", "rust/benches", "exa
 
 /// r1: structs whose every field must be referenced by a merge-like
 /// method (`merge*` or `add`) in some impl of the struct.
-pub const STATS_STRUCTS: [&str; 7] = [
+pub const STATS_STRUCTS: [&str; 9] = [
     "ScheduleStats",
     "StreamStats",
     "RouterStats",
@@ -16,6 +16,8 @@ pub const STATS_STRUCTS: [&str; 7] = [
     "ServerStats",
     "ReplicaServerStats",
     "PipelineStats",
+    "EccStats",
+    "FaultStats",
 ];
 
 /// r2: files where *every* non-test fn is hot.

@@ -1,0 +1,30 @@
+//! Clean fixture: every reliability stats field is folded by its
+//! merge impl.
+
+pub struct EccStats {
+    pub corrected: u64,
+    pub detected_uncorrectable: u64,
+    pub silent: u64,
+}
+
+impl EccStats {
+    pub fn merge(&mut self, other: &EccStats) {
+        self.corrected += other.corrected;
+        self.detected_uncorrectable += other.detected_uncorrectable;
+        self.silent += other.silent;
+    }
+}
+
+pub struct FaultStats {
+    pub fired: u64,
+    pub corrupted: u64,
+    pub masked: u64,
+}
+
+impl FaultStats {
+    pub fn merge(&mut self, other: &FaultStats) {
+        self.fired += other.fired;
+        self.corrupted += other.corrupted;
+        self.masked += other.masked;
+    }
+}

@@ -17,6 +17,8 @@ fn bad_repo_fires_every_rule_at_the_right_span() {
         spans,
         vec![
             ("r1", "rust/src/bramac/block.rs", 5),
+            ("r1", "rust/src/reliability/ecc.rs", 7),
+            ("r1", "rust/src/reliability/ecc.rs", 20),
             ("r2", "rust/src/bramac/fastpath.rs", 4),
             ("r3", "rust/src/dla/cycle.rs", 4),
             ("r3", "rust/src/dla/cycle.rs", 8),
@@ -59,7 +61,7 @@ fn clean_repo_is_silent() {
 fn json_output_is_well_formed() {
     let diags = pallas_lint::run(&fixture("bad_repo")).unwrap();
     let json = pallas_lint::to_json(&diags);
-    assert!(json.contains("\"count\": 8"), "{json}");
+    assert!(json.contains("\"count\": 10"), "{json}");
     assert!(json.contains("\"rule\": \"r1\""));
     assert!(json.contains("\"file\": \"rust/src/bramac/block.rs\""));
     // Empty set renders a valid document too.

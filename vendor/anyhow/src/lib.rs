@@ -10,12 +10,21 @@
 //! assertions in tests: `Display` prints the *outermost* message only,
 //! the alternate form (`{:#}`) prints the whole chain joined by `": "`,
 //! and `Debug` prints the message plus a `Caused by:` list.
+//!
+//! Like real anyhow, an `Error` built from a concrete `std::error`
+//! value keeps that value as a typed payload, so
+//! [`Error::downcast_ref`] recovers it through any number of
+//! `.context(..)` wrappings — the serving layer uses this to recognize
+//! `reliability::fault::UncorrectableFault` and fail a replica over.
 
+use std::any::Any;
 use std::fmt;
 
-/// A dynamic error: an ordered chain of messages, outermost first.
+/// A dynamic error: an ordered chain of messages, outermost first,
+/// plus the originating typed value (when converted from one).
 pub struct Error {
     chain: Vec<String>,
+    payload: Option<Box<dyn Any + Send + Sync>>,
 }
 
 impl Error {
@@ -23,6 +32,7 @@ impl Error {
     pub fn msg<M: fmt::Display>(message: M) -> Error {
         Error {
             chain: vec![message.to_string()],
+            payload: None,
         }
     }
 
@@ -40,6 +50,13 @@ impl Error {
     /// The innermost (root) message.
     pub fn root_cause(&self) -> &str {
         self.chain.last().map(String::as_str).unwrap_or("")
+    }
+
+    /// The originating typed error, if this `Error` was converted from
+    /// a `T` (context wrapping preserves it — same as real anyhow's
+    /// chain-walking `downcast_ref`).
+    pub fn downcast_ref<T: 'static>(&self) -> Option<&T> {
+        self.payload.as_ref().and_then(|p| p.downcast_ref::<T>())
     }
 }
 
@@ -79,7 +96,7 @@ where
             chain.push(s.to_string());
             source = s.source();
         }
-        Error { chain }
+        Error { chain, payload: Some(Box::new(e)) }
     }
 }
 
@@ -207,6 +224,16 @@ mod tests {
         assert_eq!(f(12).unwrap_err().to_string(), "x too big: 12");
         let e = anyhow!("ad-hoc {}", "message");
         assert_eq!(e.to_string(), "ad-hoc message");
+    }
+
+    #[test]
+    fn downcast_ref_survives_context_wrapping() {
+        let e: Error = Error::from(io_err()).context("inner").context("outer");
+        let io = e.downcast_ref::<std::io::Error>().expect("payload kept");
+        assert_eq!(io.kind(), std::io::ErrorKind::NotFound);
+        assert!(e.downcast_ref::<std::fmt::Error>().is_none());
+        // Message-built errors carry no payload.
+        assert!(anyhow!("plain").downcast_ref::<std::io::Error>().is_none());
     }
 
     #[test]
