@@ -37,6 +37,7 @@ class LintPortFixtures(unittest.TestCase):
             spans,
             [
                 "rust/src/bramac/block.rs:5: r1",
+                "rust/src/coordinator/backend.rs:6: r1",
                 "rust/src/reliability/ecc.rs:7: r1",
                 "rust/src/reliability/ecc.rs:20: r1",
                 "rust/src/bramac/fastpath.rs:4: r2",
@@ -44,6 +45,7 @@ class LintPortFixtures(unittest.TestCase):
                 "rust/src/dla/cycle.rs:8: r3",
                 "rust/src/coordinator/plan.rs:4: r4",
                 "rust/src/coordinator/plan.rs:11: r4",
+                "rust/src/coordinator/plan.rs:18: r4",
                 "rust/src/storage/mod.rs:4: r5",
                 "rust/src/coordinator/server.rs:3: r6",
             ],

@@ -61,6 +61,7 @@ STATS_STRUCTS = [
     "PipelineStats",
     "EccStats",
     "FaultStats",
+    "BackendStats",
 ]
 
 # R2: hot files (all non-test fns banned) and hot fns in mixed files.
@@ -97,6 +98,7 @@ LITERAL_STRUCTS = {
     "NetExecConfig": "dla/netexec.rs",
     "PlanKey": "coordinator/plan_cache.rs",
     "ServerConfig": "coordinator/server.rs",
+    "BackendConfig": "coordinator/backend.rs",
 }
 
 # R6: differential suites that must name every fidelity-taking pub fn.

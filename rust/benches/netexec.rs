@@ -8,7 +8,7 @@
 
 use bramac::arch::Precision;
 use bramac::bramac::ExecFidelity;
-use bramac::coordinator::{PipelineConfig, PipelineEngine};
+use bramac::coordinator::{BackendSel, PipelineConfig, PipelineEngine};
 use bramac::dla::netexec::{reference_forward, Lowering, NetExec, NetExecConfig, QuantNetwork};
 use bramac::dla::{toy, Dataflow};
 use bramac::util::bench::{black_box, Bench, BenchMeta};
@@ -122,6 +122,35 @@ fn main() {
             black_box(engine.infer(&input).expect("forward pass"));
         },
     );
+
+    // Heterogeneous MAC backends: the packed-DSP pool, the LUT-MAC
+    // pool, and the auto placement. Each run's output is asserted
+    // bit-identical to the host reference (and reconciled) before
+    // timing; `cycles` records the backend cost model's makespan so CI
+    // tracks it alongside the BRAMAC pool entries.
+    for backend in [BackendSel::Dsp, BackendSel::Lut, BackendSel::Auto] {
+        let cfg = NetExecConfig {
+            fidelity: ExecFidelity::Fast,
+            backend,
+            ..NetExecConfig::default()
+        };
+        let mut engine = NetExec::new(qnet.clone(), cfg).expect("toy fits");
+        let report = engine.infer(&input).expect("forward pass");
+        assert_eq!(report.output, want, "backend run bit-identical before timing");
+        report.reconcile().expect("reconciliation identities");
+        b.bench_meta(
+            &format!("network_infer/toy/4bit/2sa/tiling/backend-{}", backend.name()),
+            BenchMeta {
+                cycles: report.total.makespan_cycles,
+                threads: 1,
+                shards: 1,
+                fidelity: ExecFidelity::Fast.name(),
+            },
+            || {
+                black_box(engine.infer(&input).expect("forward pass"));
+            },
+        );
+    }
 
     // Layer-pipelined serving engine: 2 stages over the toy net, fast
     // engine. Bit-identity vs the sequential engine is asserted before

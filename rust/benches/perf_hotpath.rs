@@ -8,7 +8,7 @@ use bramac::bramac::mac2::{gemv_golden, mac2_golden};
 use bramac::bramac::signext::{pack_word, sign_extend_word};
 use bramac::bramac::{BramacBlock, ExecFidelity, Variant};
 use bramac::coordinator::tiler::plan_gemv;
-use bramac::coordinator::{BlockPool, PlanCache, PlanKey};
+use bramac::coordinator::{BackendKind, BlockPool, PlanCache, PlanKey};
 use bramac::quant::{random_vector, IntMatrix};
 use bramac::storage::ResidentModel;
 use bramac::util::bench::{black_box, Bench, BenchMeta};
@@ -286,6 +286,7 @@ fn main() {
         blocks: 8,
         double_buffer: true,
         batch: 1,
+        backend: BackendKind::Bramac,
     };
     let derive_ns = b
         .bench("tile_plan/derive/320x1024/4bit", || {

@@ -66,6 +66,14 @@ impl FreqModel {
     pub fn pirdsp_mhz(&self) -> f64 {
         self.dsp_mhz / 1.3
     }
+
+    /// Soft-logic table-lookup MAC clock: LUT/carry-chain datapaths on
+    /// Arria-10 close ~1.35x below the hardened DSP column (routing +
+    /// distributed-RAM read on the critical path). Extrapolated, not a
+    /// paper number — used only by the LUT-MAC backend's cost model.
+    pub fn lut_mac_mhz(&self) -> f64 {
+        self.dsp_mhz / 1.35
+    }
 }
 
 #[cfg(test)]

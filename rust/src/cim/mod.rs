@@ -23,3 +23,11 @@ pub use comefa::{Comefa, ComefaVariant};
 pub const CIM_LANES: usize = 160;
 /// Physical rows available per column for operands + temporaries.
 pub const CIM_ROWS: usize = 128;
+
+/// Usable storage bits of one M20K array in CIM mode (rows × lanes) —
+/// the capacity budget the table-lookup MAC backend
+/// ([`crate::coordinator::backend::LutMacPool`]) checks its product
+/// tables against.
+pub const fn m20k_cim_bits() -> usize {
+    CIM_ROWS * CIM_LANES
+}

@@ -1,0 +1,1201 @@
+//! Heterogeneous MAC backends behind one trait (ROADMAP item 1).
+//!
+//! The paper's headline numbers compare BRAMAC against the DSP baseline
+//! (Table II/III, Fig 11), but historically only BRAMAC executed real
+//! work in this repo — `dsp/` was an analytical table. [`MacBackend`]
+//! promotes every compute substrate to a functional, bit-verified
+//! execution engine with [`ScheduleStats`]-compatible cycle accounting,
+//! so backend choice becomes a live per-layer scheduling decision
+//! ([`crate::dla::cycle::backend_placements`]) instead of static area /
+//! frequency arithmetic:
+//!
+//! * [`BramacBackend`] — the existing [`ShardedPool`] path wrapped
+//!   behind the trait, bit-identical results *and* stats (asserted in
+//!   `tests/backend_diff.rs`).
+//! * [`DspPool`] — functional DSP-MAC realizing the
+//!   [`DspArch`] packing semantics: every product group is computed by
+//!   one packed 16-bit × operand multiply ([`dsp_packed_products`], the
+//!   m18x18_sumof2 + DSP-packing trick [36], in the spirit of the
+//!   single-DSP approximation of arxiv 2104.02162), exact for all
+//!   precision × signedness combinations. Cycles follow the analytical
+//!   `macs_per_cycle`/fmax model of Table II.
+//! * [`LutMacPool`] — table-lookup MAC (arxiv 2403.11414): products
+//!   come from precomputed product tables (direct `2^(2n)`-entry tables
+//!   at 2/4-bit, nibble decomposition at 8-bit) — the lookup path
+//!   performs **no host multiply** — with a precision-dependent table
+//!   build cost and a capacity check against one M20K CIM array
+//!   ([`crate::cim::m20k_cim_bits`]).
+//!
+//! # Cycle accounting contract
+//!
+//! A backend dispatch reports one [`ScheduleStats`] shaped exactly like
+//! a pool dispatch: `weight_copy_cycles` is the streamed weight-word
+//! count (zero for resident dispatches), the makespan is
+//! `max(compute, copy)` (double-buffered weight streaming overlaps
+//! compute), and `exposed_load_cycles` is the copy overhang
+//! `copy − compute` when streaming dominates. This preserves every
+//! [`crate::dla::netexec::NetExecReport::reconcile`] identity verbatim
+//! on heterogeneous runs, and makes the functional per-layer makespan
+//! equal [`crate::dla::cycle::layer_cycles_backend`] exactly.
+
+use anyhow::Result;
+
+use crate::arch::{FreqModel, Precision};
+use crate::bramac::Variant;
+use crate::dsp::DspArch;
+use crate::quant::IntMatrix;
+
+use super::scheduler::ScheduleStats;
+use super::shard::{ShardedPool, ShardedResident};
+
+/// Default DSP-block count for a [`DspPool`]: one bank column's worth
+/// of an Arria-10-class device — small next to the 1518-DSP budget, so
+/// BRAMAC keeps its paper-scale advantage on large conv layers while
+/// the DSP pool wins small / oddly-shaped dispatches.
+pub const DEFAULT_DSP_UNITS: usize = 64;
+
+/// Default LUT-MAC cluster count for a [`LutMacPool`] (soft-logic
+/// budget comparable to [`DEFAULT_DSP_UNITS`] hardened blocks).
+pub const DEFAULT_LUT_UNITS: usize = 64;
+
+/// Table words written per cycle when a [`LutMacPool`] builds its
+/// product tables (one quad-ported distributed-RAM write group).
+pub const LUT_TABLE_WRITE_LANES: u64 = 4;
+
+/// On-chip weight words a `m × n` matrix occupies at `p` — the packed
+/// 40-bit-word framing every backend shares, so the reconcile identity
+/// `weight_copy_cycles == weight_words × dispatches` is
+/// backend-independent. Equals
+/// [`crate::dla::netexec::QuantNetwork::weight_words`] per layer.
+pub fn weight_words(m: usize, n: usize, p: Precision) -> u64 {
+    (m.div_ceil(p.lanes_per_word()) * n) as u64
+}
+
+/// Which MAC substrate executes a dispatch.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub enum BackendKind {
+    /// Compute-in-BRAM pools ([`ShardedPool`] / [`BramacBackend`]).
+    Bramac,
+    /// Hardened DSP blocks with operand packing ([`DspPool`]).
+    Dsp,
+    /// Soft-logic table-lookup MAC ([`LutMacPool`]).
+    Lut,
+}
+
+impl BackendKind {
+    pub const ALL: [BackendKind; 3] = [BackendKind::Bramac, BackendKind::Dsp, BackendKind::Lut];
+
+    pub fn name(self) -> &'static str {
+        match self {
+            BackendKind::Bramac => "bramac",
+            BackendKind::Dsp => "dsp",
+            BackendKind::Lut => "lut",
+        }
+    }
+}
+
+impl std::fmt::Display for BackendKind {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.name())
+    }
+}
+
+impl std::str::FromStr for BackendKind {
+    type Err = String;
+
+    fn from_str(s: &str) -> Result<Self, Self::Err> {
+        match s.to_ascii_lowercase().as_str() {
+            "bramac" => Ok(BackendKind::Bramac),
+            "dsp" => Ok(BackendKind::Dsp),
+            "lut" => Ok(BackendKind::Lut),
+            other => Err(format!("unknown backend '{other}' (bramac|dsp|lut)")),
+        }
+    }
+}
+
+/// CLI / config backend selection: pin every layer to one kind, or let
+/// the scheduler place each layer on the analytical-argmin backend
+/// ([`crate::dla::cycle::backend_placements`]).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, Default)]
+pub enum BackendSel {
+    #[default]
+    Bramac,
+    Dsp,
+    Lut,
+    /// Per-layer cheapest backend by modeled time.
+    Auto,
+}
+
+impl BackendSel {
+    pub const ALL: [BackendSel; 4] =
+        [BackendSel::Bramac, BackendSel::Dsp, BackendSel::Lut, BackendSel::Auto];
+
+    pub fn name(self) -> &'static str {
+        match self {
+            BackendSel::Bramac => "bramac",
+            BackendSel::Dsp => "dsp",
+            BackendSel::Lut => "lut",
+            BackendSel::Auto => "auto",
+        }
+    }
+
+    /// The pinned kind, or `None` for [`BackendSel::Auto`].
+    pub fn fixed(self) -> Option<BackendKind> {
+        match self {
+            BackendSel::Bramac => Some(BackendKind::Bramac),
+            BackendSel::Dsp => Some(BackendKind::Dsp),
+            BackendSel::Lut => Some(BackendKind::Lut),
+            BackendSel::Auto => None,
+        }
+    }
+}
+
+impl std::str::FromStr for BackendSel {
+    type Err = String;
+
+    fn from_str(s: &str) -> Result<Self, Self::Err> {
+        match s.to_ascii_lowercase().as_str() {
+            "bramac" => Ok(BackendSel::Bramac),
+            "dsp" => Ok(BackendSel::Dsp),
+            "lut" => Ok(BackendSel::Lut),
+            "auto" => Ok(BackendSel::Auto),
+            other => Err(format!("unknown backend '{other}' (bramac|dsp|lut|auto)")),
+        }
+    }
+}
+
+/// One backend instance's capability declaration: kind, the
+/// architectural flavor behind it, and how many parallel MAC units it
+/// fields. The scheduler's placement decision consumes nothing else.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct BackendConfig {
+    pub kind: BackendKind,
+    /// BRAMAC variant (fmax + pool semantics for the Bramac kind; the
+    /// other kinds carry it only as placement context).
+    pub variant: Variant,
+    /// DSP architecture realized by the Dsp kind (Table II row).
+    pub dsp_arch: DspArch,
+    /// Parallel MAC units (DSP blocks / LUT clusters). The Bramac kind
+    /// sizes itself from its pool geometry instead.
+    pub units: usize,
+}
+
+impl BackendConfig {
+    pub fn bramac(variant: Variant) -> BackendConfig {
+        BackendConfig {
+            kind: BackendKind::Bramac,
+            variant,
+            dsp_arch: DspArch::Baseline,
+            units: 0,
+        }
+    }
+
+    pub fn dsp(arch: DspArch, units: usize) -> BackendConfig {
+        BackendConfig {
+            kind: BackendKind::Dsp,
+            variant: Variant::TwoSA,
+            dsp_arch: arch,
+            units,
+        }
+    }
+
+    pub fn lut(units: usize) -> BackendConfig {
+        BackendConfig {
+            kind: BackendKind::Lut,
+            variant: Variant::TwoSA,
+            dsp_arch: DspArch::Baseline,
+            units,
+        }
+    }
+
+    /// The canonical heterogeneous pool set the auto-placement and the
+    /// `infer --backend` CLI use, indexed by
+    /// [`BackendKind::ALL`] order: BRAMAC on `variant`, a baseline-DSP
+    /// pool, and a LUT-MAC pool at the default unit counts.
+    pub fn defaults(variant: Variant) -> [BackendConfig; 3] {
+        [
+            BackendConfig::bramac(variant),
+            BackendConfig::dsp(DspArch::Baseline, DEFAULT_DSP_UNITS),
+            BackendConfig::lut(DEFAULT_LUT_UNITS),
+        ]
+    }
+
+    /// Operating frequency: the Bramac kind follows the accelerator
+    /// convention ([`crate::dla::dse::accel_fmax_mhz`] — DSP-limited,
+    /// further capped by the variant's CIM fmax), DSP kinds their
+    /// Table II clock, LUT the soft-logic clock
+    /// ([`FreqModel::lut_mac_mhz`]).
+    pub fn fmax_mhz(&self, f: &FreqModel) -> f64 {
+        match self.kind {
+            BackendKind::Bramac => f.dsp_mhz.min(self.variant.fmax_mhz(f)),
+            BackendKind::Dsp => self.dsp_arch.fmax_mhz(f),
+            BackendKind::Lut => f.lut_mac_mhz(),
+        }
+    }
+
+    /// MACs one unit retires per cycle, or `None` for the Bramac kind
+    /// (its throughput comes from the pool's own cycle accounting, not
+    /// a flat rate).
+    pub fn macs_per_cycle(&self, p: Precision) -> Option<u64> {
+        match self.kind {
+            BackendKind::Bramac => None,
+            BackendKind::Dsp => Some(self.dsp_arch.macs_per_cycle(p)),
+            BackendKind::Lut => Some(lut_macs_per_cycle(p)),
+        }
+    }
+
+    /// `(compute, copy)` cycles of one `m × n` batched-MVM dispatch:
+    /// compute is the MAC count over the pool-wide rate, copy the
+    /// streamed weight words (zero when resident). Bramac returns
+    /// `(0, 0)` — its cycles come from the pool.
+    fn dispatch_parts(
+        &self,
+        m: usize,
+        n: usize,
+        batch: usize,
+        streamed: bool,
+        p: Precision,
+    ) -> (u64, u64) {
+        let rate = match self.macs_per_cycle(p) {
+            Some(unit) => unit * self.units.max(1) as u64,
+            None => return (0, 0),
+        };
+        let macs = (m * n * batch) as u64;
+        let compute = macs.div_ceil(rate);
+        let copy = if streamed { weight_words(m, n, p) } else { 0 };
+        (compute, copy)
+    }
+
+    /// Modeled cycles of one dispatch: `max(compute, copy)` — weight
+    /// streaming double-buffers behind compute, so only the overhang
+    /// is exposed. The functional pools charge exactly this, so the
+    /// analytical model ([`crate::dla::cycle::layer_cycles_backend`])
+    /// and the measured makespans agree cycle for cycle.
+    pub fn dispatch_cycles(
+        &self,
+        m: usize,
+        n: usize,
+        batch: usize,
+        streamed: bool,
+        p: Precision,
+    ) -> u64 {
+        let (compute, copy) = self.dispatch_parts(m, n, batch, streamed, p);
+        compute.max(copy)
+    }
+}
+
+/// LUT-MAC throughput per cluster per cycle: a fixed soft-logic budget
+/// holds sixteen 16-entry product ROMs at 2-bit, four 256-entry ROMs at
+/// 4-bit, and exactly one 8-bit MAC via four nibble lookups — the
+/// table-size blowup (`4^n` entries) is the precision tradeoff that
+/// makes LUT-MAC a low-precision specialist (arxiv 2403.11414).
+pub fn lut_macs_per_cycle(p: Precision) -> u64 {
+    match p {
+        Precision::Int2 => 16,
+        Precision::Int4 => 4,
+        Precision::Int8 => 1,
+    }
+}
+
+/// Product-table entries a [`LutMacPool`] stores at `p`: both-signedness
+/// direct tables (`2 × 4^n`) at 2/4-bit; three 256-entry nibble tables
+/// (signed·signed, signed·unsigned, unsigned·unsigned — the fourth
+/// orientation reuses the signed·unsigned table with swapped index
+/// halves) at 8-bit.
+pub fn lut_table_entries(p: Precision) -> usize {
+    match p {
+        Precision::Int2 => 2 * 16,
+        Precision::Int4 => 2 * 256,
+        Precision::Int8 => 3 * 256,
+    }
+}
+
+/// Storage bits of the product tables (each entry holds one `2n`-bit
+/// product for the direct tables, an 8-bit nibble product at Int8).
+pub fn lut_table_bits(p: Precision) -> usize {
+    let entry_bits = match p {
+        Precision::Int2 => 4,
+        Precision::Int4 => 8,
+        Precision::Int8 => 8,
+    };
+    lut_table_entries(p) * entry_bits
+}
+
+/// One-time table-build cycles: entries written
+/// [`LUT_TABLE_WRITE_LANES`] per cycle. Charged into the first streamed
+/// dispatch's makespan (tiling) or at [`MacBackend::preload`]
+/// (persistent — a first-touch cost, like pinning).
+pub fn lut_table_build_cycles(p: Precision) -> u64 {
+    (lut_table_entries(p) as u64).div_ceil(LUT_TABLE_WRITE_LANES)
+}
+
+/// Measured per-backend work counters, reported by every
+/// [`MacBackend`]; merged across engines by
+/// [`BackendStats::merge`].
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct BackendStats {
+    /// Batched-MVM dispatches executed.
+    pub dispatches: u64,
+    /// MACs retired (`m · n · batch` per dispatch).
+    pub macs: u64,
+    /// Modeled compute cycles (BRAMAC: dispatch makespans).
+    pub compute_cycles: u64,
+    /// Streamed weight words (tiling traffic; zero once resident).
+    pub stream_cycles: u64,
+    /// One-time LUT product-table build cycles (zero elsewhere).
+    pub table_build_cycles: u64,
+}
+
+impl BackendStats {
+    /// Fold another engine's counters in (all fields add).
+    pub fn merge(&mut self, other: &BackendStats) {
+        self.dispatches += other.dispatches;
+        self.macs += other.macs;
+        self.compute_cycles += other.compute_cycles;
+        self.stream_cycles += other.stream_cycles;
+        self.table_build_cycles += other.table_build_cycles;
+    }
+}
+
+/// A functional MAC execution engine: runs quantized batched MVM tiles
+/// bit-identically to the host `i64` reference and reports
+/// [`ScheduleStats`]-compatible cycle accounting. One engine serves one
+/// weight matrix at a time (the per-layer unit `dla::netexec`
+/// schedules); resident dispatch requires a prior
+/// [`MacBackend::preload`].
+pub trait MacBackend: Send {
+    fn kind(&self) -> BackendKind;
+
+    fn precision(&self) -> Precision;
+
+    /// The capability declaration placement decisions consume.
+    fn spec(&self) -> BackendConfig;
+
+    /// Streamed (tiling-dataflow) batched MVM: `ys[b] = w · xs[b]`.
+    /// Charges the weight stream into `weight_copy_cycles`.
+    fn run_mvm_batch_signed(
+        &mut self,
+        w: &IntMatrix,
+        xs: &[Vec<i64>],
+        signed_inputs: bool,
+    ) -> (Vec<Vec<i64>>, ScheduleStats);
+
+    /// Pin `w` for resident dispatch (persistent dataflow); returns the
+    /// pinned weight words ([`weight_words`]).
+    fn preload(&mut self, w: &IntMatrix) -> Result<u64>;
+
+    /// Batched MVM against the preloaded weights: zero copy, zero
+    /// exposed-load cycles. Panics if nothing was preloaded.
+    fn run_mvm_batch_resident(
+        &mut self,
+        xs: &[Vec<i64>],
+        signed_inputs: bool,
+    ) -> (Vec<Vec<i64>>, ScheduleStats);
+
+    /// Cumulative work counters since construction.
+    fn backend_stats(&self) -> BackendStats;
+
+    /// Streamed GEMV — a batch-1 MVM.
+    fn run_gemv_signed(
+        &mut self,
+        w: &IntMatrix,
+        x: &[i64],
+        signed_inputs: bool,
+    ) -> (Vec<i64>, ScheduleStats) {
+        let xs = [x.to_vec()];
+        let (mut ys, stats) = self.run_mvm_batch_signed(w, &xs, signed_inputs);
+        (ys.swap_remove(0), stats)
+    }
+}
+
+/// [`ScheduleStats`] for one analytical-backend dispatch (see the
+/// module-level accounting contract). `table_build` extends the
+/// makespan without touching the copy identity, so reconcile's
+/// dataflow checks hold unchanged.
+fn dispatch_schedule_stats(
+    spec: &BackendConfig,
+    p: Precision,
+    m: usize,
+    n: usize,
+    batch: usize,
+    streamed: bool,
+    table_build: u64,
+) -> ScheduleStats {
+    let (compute, copy) = spec.dispatch_parts(m, n, batch, streamed, p);
+    let makespan = compute.max(copy) + table_build;
+    ScheduleStats {
+        tiles: 1,
+        mac2s: ((m * n * batch) as u64).div_ceil(2),
+        makespan_cycles: makespan,
+        total_block_cycles: makespan,
+        exposed_load_cycles: copy.saturating_sub(compute),
+        weight_copy_cycles: copy,
+        ecc_correction_cycles: 0,
+    }
+}
+
+fn debug_check_operands(xs: &[Vec<i64>], p: Precision, signed_inputs: bool) {
+    if cfg!(debug_assertions) {
+        let (lo, hi) = if signed_inputs { p.range() } else { p.range_unsigned() };
+        for x in xs {
+            debug_assert!(
+                x.iter().all(|&v| (lo as i64..=hi as i64).contains(&v)),
+                "activation outside the declared {p} operand range"
+            );
+        }
+    }
+}
+
+// --- BRAMAC behind the trait -----------------------------------------
+
+/// The existing [`ShardedPool`] path wrapped behind [`MacBackend`]:
+/// every dispatch delegates verbatim, so results and stats are
+/// bit-identical to calling the pool directly (pinned by
+/// `tests/backend_diff.rs`). `dla::netexec` keeps driving its shared
+/// arena pool directly for BRAMAC layers — this wrapper is the
+/// standalone trait citizen (examples, mixed fleets, tests).
+pub struct BramacBackend {
+    pool: ShardedPool,
+    resident: Option<ShardedResident>,
+    precision: Precision,
+    stats: BackendStats,
+}
+
+impl BramacBackend {
+    pub fn new(
+        variant: Variant,
+        shards: usize,
+        blocks_per_shard: usize,
+        precision: Precision,
+    ) -> BramacBackend {
+        BramacBackend {
+            pool: ShardedPool::new(variant, shards, blocks_per_shard, precision),
+            resident: None,
+            precision,
+            stats: BackendStats::default(),
+        }
+    }
+
+    /// The wrapped pool (diagnostics).
+    pub fn pool(&self) -> &ShardedPool {
+        &self.pool
+    }
+
+    fn note(&mut self, m: usize, n: usize, batch: usize, stats: &ScheduleStats) {
+        self.stats.dispatches += 1;
+        self.stats.macs += (m * n * batch) as u64;
+        self.stats.compute_cycles += stats.makespan_cycles;
+        self.stats.stream_cycles += stats.weight_copy_cycles;
+    }
+}
+
+impl MacBackend for BramacBackend {
+    fn kind(&self) -> BackendKind {
+        BackendKind::Bramac
+    }
+
+    fn precision(&self) -> Precision {
+        self.precision
+    }
+
+    fn spec(&self) -> BackendConfig {
+        BackendConfig::bramac(self.pool.variant)
+    }
+
+    fn run_mvm_batch_signed(
+        &mut self,
+        w: &IntMatrix,
+        xs: &[Vec<i64>],
+        signed_inputs: bool,
+    ) -> (Vec<Vec<i64>>, ScheduleStats) {
+        let (ys, stats) = self.pool.run_mvm_batch_signed(w, xs, signed_inputs);
+        self.note(w.rows, w.cols, xs.len(), &stats);
+        (ys, stats)
+    }
+
+    fn preload(&mut self, w: &IntMatrix) -> Result<u64> {
+        let sr = self.pool.pin(w)?;
+        let pinned = sr.pinned_words;
+        self.resident = Some(sr);
+        Ok(pinned)
+    }
+
+    fn run_mvm_batch_resident(
+        &mut self,
+        xs: &[Vec<i64>],
+        signed_inputs: bool,
+    ) -> (Vec<Vec<i64>>, ScheduleStats) {
+        let Some(sr) = self.resident.as_ref() else {
+            panic!("BramacBackend: preload a weight matrix before resident dispatch");
+        };
+        let (m, n) = (sr.m, sr.n);
+        let (ys, stats) = self.pool.run_mvm_batch_resident(sr, xs, signed_inputs);
+        self.note(m, n, xs.len(), &stats);
+        (ys, stats)
+    }
+
+    fn backend_stats(&self) -> BackendStats {
+        self.stats
+    }
+}
+
+// --- DSP-MAC ----------------------------------------------------------
+
+/// Write `ws.len()` products `ws[i] · x` into `out` using **one**
+/// packed integer multiply — the DSP-packing semantics (§VI-A, [36]):
+/// each weight is offset-encoded into a `2n`-bit field
+/// (`u_i = w_i + 2^(n−1)` ∈ `[0, 2^n)`), the fields concatenate into a
+/// 16-bit multiplier operand (`dsp_pack · 2n == 16` at every
+/// precision), and one multiply by `|x|` yields every per-field partial
+/// product carry-free (`u_i · |x| < 2^(2n)`). Exact for signed and
+/// unsigned `x` at all precisions.
+#[inline]
+fn packed_products_into(ws: &[i64], x: i64, p: Precision, out: &mut [i64]) {
+    let n = p.bits();
+    debug_assert!(ws.len() <= p.dsp_pack() as usize, "at most dsp_pack weights per multiply");
+    debug_assert!(ws.len() <= out.len());
+    let field = 2 * n;
+    let half = 1i64 << (n - 1);
+    let mask = (1u64 << field) - 1;
+    let mut packed = 0u64;
+    for (i, &w) in ws.iter().enumerate() {
+        debug_assert!((-half..half).contains(&w), "weight outside the signed {n}-bit range");
+        packed |= ((w + half) as u64) << (i as u32 * field);
+    }
+    let xa = x.unsigned_abs();
+    debug_assert!(xa < (1u64 << n), "activation outside the {n}-bit operand range");
+    let prod = packed * xa;
+    for (i, o) in out.iter_mut().enumerate().take(ws.len()) {
+        let part = ((prod >> (i as u32 * field)) & mask) as i64;
+        let ux = if x < 0 { -part } else { part };
+        *o = ux - half * x;
+    }
+}
+
+/// Allocating convenience wrapper over the packed-multiply primitive
+/// (see [`DspPool`] module docs); the pool's GEMV loop uses the
+/// in-place form with stack buffers.
+pub fn dsp_packed_products(ws: &[i64], x: i64, p: Precision) -> Vec<i64> {
+    let mut out = vec![0i64; ws.len()];
+    packed_products_into(ws, x, p, &mut out);
+    out
+}
+
+/// GEMV through the packed-multiply primitive: rows are processed in
+/// `dsp_pack`-row groups, one packed multiply per (group, column).
+fn dsp_gemv_into(w: &IntMatrix, x: &[i64], y: &mut [i64]) {
+    let p = w.precision;
+    let pack = p.dsp_pack() as usize;
+    let mut group = [0i64; 4];
+    let mut prods = [0i64; 4];
+    let mut r0 = 0usize;
+    while r0 < w.rows {
+        let rows = pack.min(w.rows - r0);
+        let mut acc = [0i64; 4];
+        for (j, &xv) in x.iter().enumerate() {
+            for (i, g) in group.iter_mut().enumerate().take(rows) {
+                *g = w.get(r0 + i, j);
+            }
+            packed_products_into(&group[..rows], xv, p, &mut prods);
+            for (a, &v) in acc.iter_mut().zip(prods.iter()).take(rows) {
+                *a += v;
+            }
+        }
+        y[r0..r0 + rows].copy_from_slice(&acc[..rows]);
+        r0 += rows;
+    }
+}
+
+/// A pool of `units` DSP blocks of one [`DspArch`] executing batched
+/// MVM functionally (exact packed arithmetic, bit-identical to the
+/// host `i64` reference) with Table II cycle accounting. All three
+/// architectures compute identical values — they differ only in
+/// [`DspArch::macs_per_cycle`] and fmax, exactly like the paper's
+/// comparison.
+pub struct DspPool {
+    spec: BackendConfig,
+    precision: Precision,
+    resident: Option<IntMatrix>,
+    stats: BackendStats,
+}
+
+impl DspPool {
+    pub fn new(arch: DspArch, units: usize, precision: Precision) -> DspPool {
+        assert!(units > 0, "a DSP pool needs at least one block");
+        DspPool {
+            spec: BackendConfig::dsp(arch, units),
+            precision,
+            resident: None,
+            stats: BackendStats::default(),
+        }
+    }
+
+    fn mvm(w: &IntMatrix, xs: &[Vec<i64>]) -> Vec<Vec<i64>> {
+        xs.iter()
+            .map(|x| {
+                assert_eq!(x.len(), w.cols);
+                let mut y = vec![0i64; w.rows];
+                dsp_gemv_into(w, x, &mut y);
+                y
+            })
+            .collect()
+    }
+
+    fn note(&mut self, m: usize, n: usize, batch: usize, stats: &ScheduleStats) {
+        self.stats.dispatches += 1;
+        self.stats.macs += (m * n * batch) as u64;
+        self.stats.compute_cycles +=
+            stats.makespan_cycles - stats.exposed_load_cycles.min(stats.makespan_cycles);
+        self.stats.stream_cycles += stats.weight_copy_cycles;
+    }
+}
+
+impl MacBackend for DspPool {
+    fn kind(&self) -> BackendKind {
+        BackendKind::Dsp
+    }
+
+    fn precision(&self) -> Precision {
+        self.precision
+    }
+
+    fn spec(&self) -> BackendConfig {
+        self.spec
+    }
+
+    fn run_mvm_batch_signed(
+        &mut self,
+        w: &IntMatrix,
+        xs: &[Vec<i64>],
+        signed_inputs: bool,
+    ) -> (Vec<Vec<i64>>, ScheduleStats) {
+        assert_eq!(w.precision, self.precision, "weight precision mismatch");
+        debug_check_operands(xs, self.precision, signed_inputs);
+        let ys = DspPool::mvm(w, xs);
+        let stats =
+            dispatch_schedule_stats(&self.spec, self.precision, w.rows, w.cols, xs.len(), true, 0);
+        self.note(w.rows, w.cols, xs.len(), &stats);
+        (ys, stats)
+    }
+
+    fn preload(&mut self, w: &IntMatrix) -> Result<u64> {
+        assert_eq!(w.precision, self.precision, "weight precision mismatch");
+        let words = weight_words(w.rows, w.cols, self.precision);
+        self.resident = Some(w.clone());
+        Ok(words)
+    }
+
+    fn run_mvm_batch_resident(
+        &mut self,
+        xs: &[Vec<i64>],
+        signed_inputs: bool,
+    ) -> (Vec<Vec<i64>>, ScheduleStats) {
+        debug_check_operands(xs, self.precision, signed_inputs);
+        let (ys, m, n) = {
+            let Some(w) = self.resident.as_ref() else {
+                panic!("DspPool: preload a weight matrix before resident dispatch");
+            };
+            (DspPool::mvm(w, xs), w.rows, w.cols)
+        };
+        let stats = dispatch_schedule_stats(&self.spec, self.precision, m, n, xs.len(), false, 0);
+        self.note(m, n, xs.len(), &stats);
+        (ys, stats)
+    }
+
+    fn backend_stats(&self) -> BackendStats {
+        self.stats
+    }
+}
+
+// --- LUT / table-lookup MAC -------------------------------------------
+
+/// Sign-extend an unsigned `bits`-wide pattern.
+fn sext(pat: usize, bits: u32) -> i64 {
+    let half = 1i64 << (bits - 1);
+    let v = pat as i64;
+    if v >= half {
+        v - (half << 1)
+    } else {
+        v
+    }
+}
+
+/// Precomputed product tables: the lookup path performs no multiply.
+#[derive(Debug, Clone)]
+struct LutTables {
+    precision: Precision,
+    /// `sext(a) · sext(b)` over n-bit (nibble at Int8) patterns.
+    ss: Vec<i64>,
+    /// `sext(a) · b` (signed × unsigned).
+    su: Vec<i64>,
+    /// `a · b` (unsigned × unsigned; Int8 nibble decomposition only).
+    uu: Vec<i64>,
+}
+
+impl LutTables {
+    fn build(p: Precision) -> LutTables {
+        // Direct tables at 2/4-bit; Int8 decomposes into 4-bit nibbles.
+        let tb: u32 = match p {
+            Precision::Int2 => 2,
+            Precision::Int4 | Precision::Int8 => 4,
+        };
+        let side = 1usize << tb;
+        let size = side * side;
+        let mut ss = vec![0i64; size];
+        let mut su = vec![0i64; size];
+        for a in 0..side {
+            for b in 0..side {
+                ss[(a << tb) | b] = sext(a, tb) * sext(b, tb);
+                su[(a << tb) | b] = sext(a, tb) * b as i64;
+            }
+        }
+        let uu = match p {
+            Precision::Int8 => {
+                let mut t = vec![0i64; size];
+                for a in 0..side {
+                    for b in 0..side {
+                        t[(a << tb) | b] = (a * b) as i64;
+                    }
+                }
+                t
+            }
+            _ => Vec::new(),
+        };
+        LutTables { precision: p, ss, su, uu }
+    }
+
+    /// One product `w · x` via lookups: direct at 2/4-bit; at 8-bit the
+    /// nibble split `w = 16·wh + wl`, `x = 16·xh + xl` combines four
+    /// lookups with shifts/adds (`256·wh·xh + 16·(wh·xl + xh·wl) +
+    /// wl·xl`), choosing signed or unsigned tables per operand half.
+    #[inline]
+    fn mul(&self, w: i64, x: i64, x_signed: bool) -> i64 {
+        match self.precision {
+            Precision::Int2 | Precision::Int4 => {
+                let n = self.precision.bits();
+                let mask = (1usize << n) - 1;
+                let pw = (w as usize) & mask;
+                let px = (x as usize) & mask;
+                if x_signed {
+                    self.ss[(pw << n) | px]
+                } else {
+                    self.su[(pw << n) | px]
+                }
+            }
+            Precision::Int8 => {
+                let wh = ((w >> 4) as usize) & 15;
+                let wl = (w as usize) & 15;
+                let xh = ((x >> 4) as usize) & 15;
+                let xl = (x as usize) & 15;
+                if x_signed {
+                    (self.ss[(wh << 4) | xh] << 8)
+                        + ((self.su[(wh << 4) | xl] + self.su[(xh << 4) | wl]) << 4)
+                        + self.uu[(wl << 4) | xl]
+                } else {
+                    (self.su[(wh << 4) | xh] << 8)
+                        + ((self.su[(wh << 4) | xl] + self.uu[(wl << 4) | xh]) << 4)
+                        + self.uu[(wl << 4) | xl]
+                }
+            }
+        }
+    }
+}
+
+/// Table-lookup MAC pool (arxiv 2403.11414): `units` soft-logic
+/// clusters, each resolving products from the precomputed tables —
+/// [`lut_macs_per_cycle`] per cluster per cycle. The one-time table
+/// build ([`lut_table_build_cycles`]) is charged into the first
+/// streamed dispatch's makespan (tiling) or at preload (persistent),
+/// and the tables must fit one M20K CIM array's storage
+/// ([`crate::cim::m20k_cim_bits`]) — checked at construction.
+pub struct LutMacPool {
+    spec: BackendConfig,
+    precision: Precision,
+    tables: LutTables,
+    resident: Option<IntMatrix>,
+    table_charged: bool,
+    stats: BackendStats,
+}
+
+impl LutMacPool {
+    pub fn new(units: usize, precision: Precision) -> LutMacPool {
+        assert!(units > 0, "a LUT-MAC pool needs at least one cluster");
+        assert!(
+            lut_table_bits(precision) <= crate::cim::m20k_cim_bits(),
+            "{precision} product tables ({} bits) overflow one M20K CIM array ({} bits)",
+            lut_table_bits(precision),
+            crate::cim::m20k_cim_bits()
+        );
+        LutMacPool {
+            spec: BackendConfig::lut(units),
+            precision,
+            tables: LutTables::build(precision),
+            resident: None,
+            table_charged: false,
+            stats: BackendStats::default(),
+        }
+    }
+
+    fn mvm(tables: &LutTables, w: &IntMatrix, xs: &[Vec<i64>], x_signed: bool) -> Vec<Vec<i64>> {
+        xs.iter()
+            .map(|x| {
+                assert_eq!(x.len(), w.cols);
+                (0..w.rows)
+                    .map(|r| {
+                        w.row(r)
+                            .iter()
+                            .zip(x.iter())
+                            .map(|(&wv, &xv)| tables.mul(wv, xv, x_signed))
+                            .sum()
+                    })
+                    .collect()
+            })
+            .collect()
+    }
+
+    fn note(&mut self, m: usize, n: usize, batch: usize, stats: &ScheduleStats, build: u64) {
+        self.stats.dispatches += 1;
+        self.stats.macs += (m * n * batch) as u64;
+        self.stats.compute_cycles += stats.makespan_cycles
+            - build.min(stats.makespan_cycles)
+            - stats.exposed_load_cycles.min(stats.makespan_cycles);
+        self.stats.stream_cycles += stats.weight_copy_cycles;
+        self.stats.table_build_cycles += build;
+    }
+}
+
+impl MacBackend for LutMacPool {
+    fn kind(&self) -> BackendKind {
+        BackendKind::Lut
+    }
+
+    fn precision(&self) -> Precision {
+        self.precision
+    }
+
+    fn spec(&self) -> BackendConfig {
+        self.spec
+    }
+
+    fn run_mvm_batch_signed(
+        &mut self,
+        w: &IntMatrix,
+        xs: &[Vec<i64>],
+        signed_inputs: bool,
+    ) -> (Vec<Vec<i64>>, ScheduleStats) {
+        assert_eq!(w.precision, self.precision, "weight precision mismatch");
+        debug_check_operands(xs, self.precision, signed_inputs);
+        let build = if self.table_charged { 0 } else { lut_table_build_cycles(self.precision) };
+        self.table_charged = true;
+        let ys = LutMacPool::mvm(&self.tables, w, xs, signed_inputs);
+        let stats = dispatch_schedule_stats(
+            &self.spec,
+            self.precision,
+            w.rows,
+            w.cols,
+            xs.len(),
+            true,
+            build,
+        );
+        self.note(w.rows, w.cols, xs.len(), &stats, build);
+        (ys, stats)
+    }
+
+    fn preload(&mut self, w: &IntMatrix) -> Result<u64> {
+        assert_eq!(w.precision, self.precision, "weight precision mismatch");
+        // The table build is a first-touch cost in the persistent
+        // dataflow: charged here, never into a resident dispatch.
+        if !self.table_charged {
+            self.table_charged = true;
+            self.stats.table_build_cycles += lut_table_build_cycles(self.precision);
+        }
+        let words = weight_words(w.rows, w.cols, self.precision);
+        self.resident = Some(w.clone());
+        Ok(words)
+    }
+
+    fn run_mvm_batch_resident(
+        &mut self,
+        xs: &[Vec<i64>],
+        signed_inputs: bool,
+    ) -> (Vec<Vec<i64>>, ScheduleStats) {
+        debug_check_operands(xs, self.precision, signed_inputs);
+        let (ys, m, n) = {
+            let Some(w) = self.resident.as_ref() else {
+                panic!("LutMacPool: preload a weight matrix before resident dispatch");
+            };
+            (LutMacPool::mvm(&self.tables, w, xs, signed_inputs), w.rows, w.cols)
+        };
+        let stats =
+            dispatch_schedule_stats(&self.spec, self.precision, m, n, xs.len(), false, 0);
+        self.note(m, n, xs.len(), &stats, 0);
+        (ys, stats)
+    }
+
+    fn backend_stats(&self) -> BackendStats {
+        self.stats
+    }
+}
+
+/// Build the functional engine a [`BackendConfig`] describes, at the
+/// given precision. The Bramac kind sizes a 1-shard pool of
+/// `bramac_blocks` blocks (callers embedded in `dla::netexec` drive
+/// the shared arena pool directly instead).
+pub fn build_backend(
+    spec: &BackendConfig,
+    precision: Precision,
+    bramac_blocks: usize,
+) -> Box<dyn MacBackend> {
+    match spec.kind {
+        BackendKind::Bramac => {
+            Box::new(BramacBackend::new(spec.variant, 1, bramac_blocks.max(1), precision))
+        }
+        BackendKind::Dsp => Box::new(DspPool::new(spec.dsp_arch, spec.units, precision)),
+        BackendKind::Lut => Box::new(LutMacPool::new(spec.units, precision)),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::quant::random_vector;
+    use crate::util::Rng;
+
+    #[test]
+    fn packed_products_exact_exhaustively() {
+        // Every (w, x) pair at every precision × signedness, including
+        // full weight groups: the packed multiply is exact arithmetic,
+        // not an approximation.
+        for p in Precision::ALL {
+            let (wlo, whi) = p.range();
+            for x_signed in [true, false] {
+                let (xlo, xhi) = if x_signed { p.range() } else { p.range_unsigned() };
+                for x in xlo as i64..=xhi as i64 {
+                    let pack = p.dsp_pack() as usize;
+                    // A rolling window of weights fills every field.
+                    let ws: Vec<i64> = (0..pack)
+                        .map(|i| wlo as i64 + ((x - xlo as i64 + i as i64) % (whi as i64 - wlo as i64 + 1)))
+                        .collect();
+                    let got = dsp_packed_products(&ws, x, p);
+                    for (i, &w) in ws.iter().enumerate() {
+                        assert_eq!(got[i], w * x, "{p} w={w} x={x} (signed={x_signed})");
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn lut_tables_exact_exhaustively() {
+        for p in Precision::ALL {
+            let t = LutTables::build(p);
+            let (wlo, whi) = p.range();
+            for x_signed in [true, false] {
+                let (xlo, xhi) = if x_signed { p.range() } else { p.range_unsigned() };
+                for w in wlo as i64..=whi as i64 {
+                    for x in xlo as i64..=xhi as i64 {
+                        assert_eq!(
+                            t.mul(w, x, x_signed),
+                            w * x,
+                            "{p} w={w} x={x} (signed={x_signed})"
+                        );
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn dsp_pool_matches_reference_gemv() {
+        let mut rng = Rng::seed_from_u64(0xd59);
+        for p in Precision::ALL {
+            for arch in DspArch::ALL {
+                for signed in [true, false] {
+                    let w = IntMatrix::random(&mut rng, 23, 37, p);
+                    let xs: Vec<Vec<i64>> =
+                        (0..3).map(|_| random_vector(&mut rng, 37, p, signed)).collect();
+                    let mut pool = DspPool::new(arch, 8, p);
+                    let (ys, stats) = pool.run_mvm_batch_signed(&w, &xs, signed);
+                    for (x, y) in xs.iter().zip(&ys) {
+                        assert_eq!(*y, w.gemv_ref(x), "{p} {} signed={signed}", arch.name());
+                    }
+                    assert!(stats.makespan_cycles > 0);
+                    assert_eq!(stats.weight_copy_cycles, weight_words(23, 37, p));
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn lut_pool_matches_reference_gemv() {
+        let mut rng = Rng::seed_from_u64(0x107);
+        for p in Precision::ALL {
+            for signed in [true, false] {
+                let w = IntMatrix::random(&mut rng, 19, 41, p);
+                let xs: Vec<Vec<i64>> =
+                    (0..2).map(|_| random_vector(&mut rng, 41, p, signed)).collect();
+                let mut pool = LutMacPool::new(4, p);
+                let (ys, _) = pool.run_mvm_batch_signed(&w, &xs, signed);
+                for (x, y) in xs.iter().zip(&ys) {
+                    assert_eq!(*y, w.gemv_ref(x), "{p} signed={signed}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn table_build_charged_once_into_first_streamed_dispatch() {
+        let mut rng = Rng::seed_from_u64(0x7ab);
+        let p = Precision::Int4;
+        let w = IntMatrix::random(&mut rng, 10, 16, p);
+        let x = vec![random_vector(&mut rng, 16, p, true)];
+        let mut pool = LutMacPool::new(4, p);
+        let (_, first) = pool.run_mvm_batch_signed(&w, &x, true);
+        let (_, second) = pool.run_mvm_batch_signed(&w, &x, true);
+        assert_eq!(
+            first.makespan_cycles,
+            second.makespan_cycles + lut_table_build_cycles(p)
+        );
+        assert_eq!(first.weight_copy_cycles, second.weight_copy_cycles);
+        assert_eq!(pool.backend_stats().table_build_cycles, lut_table_build_cycles(p));
+    }
+
+    #[test]
+    fn resident_dispatch_skips_copies_and_build() {
+        let mut rng = Rng::seed_from_u64(0x9d1);
+        for p in Precision::ALL {
+            let w = IntMatrix::random(&mut rng, 15, 24, p);
+            let xs: Vec<Vec<i64>> = (0..2).map(|_| random_vector(&mut rng, 24, p, true)).collect();
+            let mut dsp = DspPool::new(DspArch::Edsp, 4, p);
+            let mut lut = LutMacPool::new(4, p);
+            for be in [&mut dsp as &mut dyn MacBackend, &mut lut as &mut dyn MacBackend] {
+                let pinned = be.preload(&w).expect("functional preload cannot fail");
+                assert_eq!(pinned, weight_words(15, 24, p));
+                let (ys, stats) = be.run_mvm_batch_resident(&xs, true);
+                for (x, y) in xs.iter().zip(&ys) {
+                    assert_eq!(*y, w.gemv_ref(x), "{p} {:?}", be.kind());
+                }
+                assert_eq!(stats.weight_copy_cycles, 0, "{p} {:?}", be.kind());
+                assert_eq!(stats.exposed_load_cycles, 0, "{p} {:?}", be.kind());
+            }
+        }
+    }
+
+    #[test]
+    fn bramac_backend_is_the_pool_bit_for_bit() {
+        let mut rng = Rng::seed_from_u64(0xb4a);
+        let p = Precision::Int4;
+        let w = IntMatrix::random(&mut rng, 33, 48, p);
+        let xs: Vec<Vec<i64>> = (0..3).map(|_| random_vector(&mut rng, 48, p, true)).collect();
+        let mut raw = ShardedPool::new(Variant::TwoSA, 2, 2, p);
+        let mut be = BramacBackend::new(Variant::TwoSA, 2, 2, p);
+        let (y_raw, s_raw) = raw.run_mvm_batch_signed(&w, &xs, true);
+        let (y_be, s_be) = be.run_mvm_batch_signed(&w, &xs, true);
+        assert_eq!(y_be, y_raw, "trait wrapper must not change results");
+        assert_eq!(s_be, s_raw, "trait wrapper must not change stats");
+        // Resident path too.
+        let sr = raw.pin(&w).expect("fits");
+        let pinned = be.preload(&w).expect("fits");
+        assert_eq!(pinned, sr.pinned_words);
+        let (y_raw, s_raw) = raw.run_mvm_batch_resident(&sr, &xs, true);
+        let (y_be, s_be) = be.run_mvm_batch_resident(&xs, true);
+        assert_eq!((y_be, s_be), (y_raw, s_raw));
+        assert_eq!(be.backend_stats().dispatches, 2);
+    }
+
+    #[test]
+    fn dispatch_accounting_identities() {
+        let p = Precision::Int8;
+        let spec = BackendConfig::dsp(DspArch::Baseline, 2);
+        // 20×30 Int8: words = ceil(20/5)·30 = 120; compute = 600/4 = 150.
+        let (m, n) = (20, 30);
+        assert_eq!(weight_words(m, n, p), 120);
+        assert_eq!(spec.dispatch_cycles(m, n, 1, true, p), 150);
+        let s = dispatch_schedule_stats(&spec, p, m, n, 1, true, 0);
+        assert_eq!(s.makespan_cycles, 150);
+        assert_eq!(s.weight_copy_cycles, 120);
+        assert_eq!(s.exposed_load_cycles, 0, "copy hides behind compute");
+        // A copy-bound shape exposes the overhang: 40×30 at 1000 units
+        // computes in ceil(1200/2000) = 1 cycle but streams 240 words.
+        let wide = BackendConfig::dsp(DspArch::Baseline, 1000);
+        let s = dispatch_schedule_stats(&wide, p, 40, 30, 1, true, 0);
+        assert_eq!(s.weight_copy_cycles, 240);
+        assert_eq!(s.makespan_cycles, 240, "copy-bound makespan is the copy");
+        assert_eq!(s.exposed_load_cycles, 239);
+    }
+
+    #[test]
+    fn lut_tables_fit_one_m20k_cim_array() {
+        for p in Precision::ALL {
+            assert!(
+                lut_table_bits(p) <= crate::cim::m20k_cim_bits(),
+                "{p}: {} bits",
+                lut_table_bits(p)
+            );
+        }
+        assert_eq!(lut_table_build_cycles(Precision::Int2), 8);
+        assert_eq!(lut_table_build_cycles(Precision::Int4), 128);
+        assert_eq!(lut_table_build_cycles(Precision::Int8), 192);
+    }
+
+    #[test]
+    fn lut_is_the_low_precision_specialist() {
+        // Effective MACs/s at the default unit counts: LUT beats the
+        // baseline DSP pool at 2-bit and loses at 8-bit — the paper's
+        // precision tradeoff reproduced by the cost model.
+        let f = FreqModel::default();
+        let rate = |spec: &BackendConfig, p: Precision| {
+            spec.macs_per_cycle(p).unwrap_or(0) as f64 * spec.units as f64 * spec.fmax_mhz(&f)
+        };
+        let dsp = BackendConfig::dsp(DspArch::Baseline, DEFAULT_DSP_UNITS);
+        let lut = BackendConfig::lut(DEFAULT_LUT_UNITS);
+        assert!(rate(&lut, Precision::Int2) > rate(&dsp, Precision::Int2));
+        assert!(rate(&lut, Precision::Int8) < rate(&dsp, Precision::Int8));
+    }
+
+    #[test]
+    fn kinds_and_selections_parse() {
+        for k in BackendKind::ALL {
+            assert_eq!(k.name().parse::<BackendKind>().unwrap(), k);
+        }
+        for s in BackendSel::ALL {
+            assert_eq!(s.name().parse::<BackendSel>().unwrap(), s);
+        }
+        assert_eq!(BackendSel::Auto.fixed(), None);
+        assert_eq!(BackendSel::Dsp.fixed(), Some(BackendKind::Dsp));
+        assert!("npu".parse::<BackendKind>().is_err());
+        assert!("npu".parse::<BackendSel>().is_err());
+    }
+
+    #[test]
+    fn backend_stats_merge_covers_every_field() {
+        let a = BackendStats {
+            dispatches: 1,
+            macs: 2,
+            compute_cycles: 3,
+            stream_cycles: 4,
+            table_build_cycles: 5,
+        };
+        let mut b = a;
+        b.merge(&a);
+        assert_eq!(
+            b,
+            BackendStats {
+                dispatches: 2,
+                macs: 4,
+                compute_cycles: 6,
+                stream_cycles: 8,
+                table_build_cycles: 10,
+            }
+        );
+    }
+
+    #[test]
+    fn build_backend_constructs_every_kind() {
+        for spec in BackendConfig::defaults(Variant::TwoSA) {
+            let be = build_backend(&spec, Precision::Int4, 2);
+            assert_eq!(be.kind(), spec.kind);
+            assert_eq!(be.precision(), Precision::Int4);
+        }
+    }
+}

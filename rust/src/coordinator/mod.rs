@@ -12,6 +12,7 @@
 //! bit-identical to a single pool), and [`Router`] replicates the whole
 //! deployment behind pluggable traffic policies (data parallelism).
 
+pub mod backend;
 pub mod batcher;
 pub mod pipeline;
 pub mod plan_cache;
@@ -22,6 +23,12 @@ pub mod shard;
 pub mod tiler;
 pub mod workers;
 
+pub use backend::{
+    build_backend, dsp_packed_products, lut_macs_per_cycle, lut_table_bits,
+    lut_table_build_cycles, lut_table_entries, weight_words, BackendConfig, BackendKind,
+    BackendSel, BackendStats, BramacBackend, DspPool, LutMacPool, MacBackend,
+    DEFAULT_DSP_UNITS, DEFAULT_LUT_UNITS, LUT_TABLE_WRITE_LANES,
+};
 pub use batcher::Batcher;
 pub use pipeline::{
     balance_stages, stage_ranges, PipelineConfig, PipelineEngine, PipelineReply,

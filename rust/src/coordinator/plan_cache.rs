@@ -15,6 +15,7 @@ use std::sync::Arc;
 use crate::arch::Precision;
 use crate::bramac::Variant;
 
+use super::backend::BackendKind;
 use super::tiler::{plan_gemv, Tile, TilePlan};
 
 /// Everything a tile plan depends on. Two pools with the same key
@@ -33,6 +34,11 @@ pub struct PlanKey {
     /// split for full-depth tiles, so a plan derived for one width must
     /// never be served for another (`batch_width_separates_plans…`).
     pub batch: usize,
+    /// Executing backend. With heterogeneous MAC pools a BRAMAC plan and
+    /// a DSP/LUT plan can share every geometric coordinate yet mean
+    /// different dispatch schedules — without this discriminant the two
+    /// would cross-hit (`backends_never_cross_hit_…`).
+    pub backend: BackendKind,
 }
 
 /// A memoized plan: the tiling plus its per-block assignment.
@@ -187,6 +193,7 @@ mod tests {
             blocks: 4,
             double_buffer: true,
             batch: 1,
+            backend: BackendKind::Bramac,
         }
     }
 
@@ -240,6 +247,33 @@ mod tests {
         assert!(Arc::ptr_eq(&a, &cache.get_or_insert(k2)));
         assert!(Arc::ptr_eq(&b, &cache.get_or_insert(k4)));
         assert_eq!(cache.hits(), 2);
+    }
+
+    #[test]
+    fn backends_never_cross_hit_the_same_geometry() {
+        // The latent collision this field fixes: identical
+        // (m, n, precision, variant, blocks, double_buffer, batch) on
+        // two different backends must be two cache entries.
+        let mut cache = PlanCache::new();
+        let mut per_backend = Vec::new();
+        for backend in BackendKind::ALL {
+            let mut k = key(80, 256);
+            k.backend = backend;
+            per_backend.push((k, cache.get_or_insert(k)));
+        }
+        assert_eq!(cache.len(), BackendKind::ALL.len());
+        assert_eq!(cache.misses(), BackendKind::ALL.len() as u64);
+        assert_eq!(cache.hits(), 0, "no backend may be served another's plan");
+        for (i, (_, a)) in per_backend.iter().enumerate() {
+            for (_, b) in per_backend.iter().skip(i + 1) {
+                assert!(!Arc::ptr_eq(a, b), "distinct backends share an entry");
+            }
+        }
+        // Each backend still hits its own entry on re-dispatch.
+        for (k, a) in &per_backend {
+            assert!(Arc::ptr_eq(a, &cache.get_or_insert(*k)));
+        }
+        assert_eq!(cache.hits(), BackendKind::ALL.len() as u64);
     }
 
     #[test]

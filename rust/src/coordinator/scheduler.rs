@@ -53,6 +53,7 @@ use crate::storage::resident::{ResidentModel, ResidentTile};
 
 use anyhow::{ensure, Result};
 
+use super::backend::BackendKind;
 use super::plan_cache::{PlanCache, PlanKey};
 use super::tiler::Tile;
 
@@ -288,6 +289,7 @@ impl BlockPool {
             blocks: self.blocks.len(),
             double_buffer: true,
             batch: 1,
+            backend: BackendKind::Bramac,
         });
         let threads = self.threads;
         let m = w.rows;
@@ -380,6 +382,7 @@ impl BlockPool {
             blocks: self.blocks.len(),
             double_buffer: true,
             batch: 2,
+            backend: BackendKind::Bramac,
         });
         let threads = self.threads;
         let m = w.rows;
@@ -484,6 +487,7 @@ impl BlockPool {
             blocks: self.blocks.len(),
             double_buffer: batch <= 2,
             batch,
+            backend: BackendKind::Bramac,
         });
         let threads = self.threads;
         let m = w.rows;

@@ -15,6 +15,9 @@
 //! [`DlaConfig::bramac_blocks`]) — and adds the 2-cycle initial weight
 //! copy per layer (§VI-D, noted as negligible).
 
+use crate::arch::FreqModel;
+use crate::coordinator::backend::{lut_table_build_cycles, BackendConfig, BackendKind};
+
 use super::config::{AccelKind, DlaConfig};
 use super::models::{ConvLayer, Network};
 
@@ -186,6 +189,111 @@ pub fn ecc_correction_cycles(corrected_words: u64) -> u64 {
     corrected_words * crate::reliability::ECC_CORRECTION_CYCLES
 }
 
+/// Cycles for one layer executed on an arbitrary MAC backend
+/// ([`BackendConfig`]) at MVM batch width `batch`.
+///
+/// The Bramac kind delegates verbatim to [`layer_cycles_sharded`] (the
+/// pool model is the backend model). The analytical kinds (DSP, LUT)
+/// mirror exactly how `dla::netexec` drives an engine: the layer's
+/// `P·Q` output pixels dispatch in `batch`-wide chunks of the
+/// `K × (C·R·S)` matrix — `⌊PQ/b⌋` full chunks plus one remainder — at
+/// [`BackendConfig::dispatch_cycles`] each, with weights streamed per
+/// dispatch when tiling and resident when persistent, plus the LUT
+/// backend's one-time product-table build on tiling's first dispatch.
+/// Integer-exact: equals the functional engines' accumulated makespans
+/// cycle for cycle (`tests/backend_diff.rs`).
+pub fn layer_cycles_backend(
+    layer: &ConvLayer,
+    cfg: &DlaConfig,
+    dataflow: Dataflow,
+    shards: usize,
+    batch: usize,
+    spec: &BackendConfig,
+) -> u64 {
+    if spec.kind == BackendKind::Bramac {
+        return layer_cycles_sharded(layer, cfg, dataflow, shards);
+    }
+    let pq = layer.p * layer.q;
+    let b = batch.max(1).min(pq.max(1));
+    let m = layer.k;
+    let n = layer.c * layer.r * layer.s;
+    let streamed = dataflow == Dataflow::Tiling;
+    let (full, rem) = (pq / b, pq % b);
+    let mut cycles = full as u64 * spec.dispatch_cycles(m, n, b, streamed, cfg.precision);
+    if rem > 0 {
+        cycles += spec.dispatch_cycles(m, n, rem, streamed, cfg.precision);
+    }
+    if spec.kind == BackendKind::Lut && streamed {
+        cycles += lut_table_build_cycles(cfg.precision);
+    }
+    cycles
+}
+
+/// Wall time of one layer on a backend: cycles at the backend's own
+/// clock ([`BackendConfig::fmax_mhz`]) — the quantity the per-layer
+/// placement decision minimizes (backends trade cycle counts *and*
+/// frequencies, so cycles alone cannot rank them).
+pub fn layer_backend_time_ns(
+    layer: &ConvLayer,
+    cfg: &DlaConfig,
+    dataflow: Dataflow,
+    shards: usize,
+    batch: usize,
+    spec: &BackendConfig,
+    f: &FreqModel,
+) -> f64 {
+    layer_cycles_backend(layer, cfg, dataflow, shards, batch, spec) as f64 * 1e3
+        / spec.fmax_mhz(f)
+}
+
+/// Total network wall time on one backend (layers back-to-back).
+pub fn network_backend_time_ns(
+    net: &Network,
+    cfg: &DlaConfig,
+    dataflow: Dataflow,
+    shards: usize,
+    batch: usize,
+    spec: &BackendConfig,
+    f: &FreqModel,
+) -> f64 {
+    net.layers
+        .iter()
+        .map(|l| layer_backend_time_ns(l, cfg, dataflow, shards, batch, spec, f))
+        .sum()
+}
+
+/// Per-layer backend placement: for each layer, the index into `specs`
+/// minimizing [`layer_backend_time_ns`]. Ties break to the **lowest**
+/// index (with [`BackendConfig::defaults`] ordering that means BRAMAC),
+/// so placements are deterministic. This is the analytical argmin
+/// `infer --backend auto` realizes functionally.
+pub fn backend_placements(
+    net: &Network,
+    cfg: &DlaConfig,
+    dataflow: Dataflow,
+    shards: usize,
+    batch: usize,
+    specs: &[BackendConfig],
+    f: &FreqModel,
+) -> Vec<usize> {
+    assert!(!specs.is_empty(), "placement needs at least one backend");
+    net.layers
+        .iter()
+        .map(|l| {
+            let mut best = 0usize;
+            let mut best_t = layer_backend_time_ns(l, cfg, dataflow, shards, batch, &specs[0], f);
+            for (i, spec) in specs.iter().enumerate().skip(1) {
+                let t = layer_backend_time_ns(l, cfg, dataflow, shards, batch, spec, f);
+                if t < best_t {
+                    best = i;
+                    best_t = t;
+                }
+            }
+            best
+        })
+        .collect()
+}
+
 /// Evaluate many configurations at once, fanned out across worker
 /// threads (the DSE hot loop); results come back in input order, so the
 /// batch is bit-identical to mapping [`network_cycles`] sequentially.
@@ -351,6 +459,121 @@ mod tests {
         let batch = network_cycles_batch(&net, &cfgs);
         let seq: Vec<u64> = cfgs.iter().map(|c| network_cycles(&net, c)).collect();
         assert_eq!(batch, seq);
+    }
+
+    #[test]
+    fn backend_cycles_closed_form_and_bramac_delegation() {
+        let l = ConvLayer::new("t", 64, 32, 3, 3, 16, 16);
+        let p = Precision::Int8;
+        let cfg = DlaConfig::dla_bramac(Variant::TwoSA, 1, 2, 16, 64, p);
+        // Bramac spec ≡ the sharded pool model, both dataflows/shards.
+        let bramac = BackendConfig::bramac(Variant::TwoSA);
+        for df in Dataflow::ALL {
+            for shards in [1usize, 2, 4] {
+                assert_eq!(
+                    layer_cycles_backend(&l, &cfg, df, shards, 8, &bramac),
+                    layer_cycles_sharded(&l, &cfg, df, shards)
+                );
+            }
+        }
+        // DSP closed form: m=64, n=288, Int8 baseline rate 2/blk.
+        // 4 units → 8 MACs/cyc; batch 8 over PQ=256 → 32 full chunks.
+        // compute/chunk = ceil(64·288·8 / 8) = 18432; words =
+        // ceil(64/5)·288 = 3744 < compute → compute-bound.
+        let dsp = BackendConfig::dsp(crate::dsp::DspArch::Baseline, 4);
+        let tiling = layer_cycles_backend(&l, &cfg, Dataflow::Tiling, 1, 8, &dsp);
+        assert_eq!(tiling, 32 * 18432);
+        // Persistent skips nothing here (compute-bound), but a
+        // copy-bound spec shows the dataflow split: huge unit count →
+        // persistent pays ceil-of-macs only, tiling pays the words.
+        let wide = BackendConfig::dsp(crate::dsp::DspArch::Baseline, 1 << 20);
+        let t = layer_cycles_backend(&l, &cfg, Dataflow::Tiling, 1, 8, &wide);
+        let pers = layer_cycles_backend(&l, &cfg, Dataflow::Persistent, 1, 8, &wide);
+        assert_eq!(t, 32 * 3744, "copy-bound tiling pays the stream");
+        assert_eq!(pers, 32, "resident dispatches pay compute only");
+    }
+
+    #[test]
+    fn lut_build_charged_once_per_layer_only_when_tiling() {
+        let l = ConvLayer::new("t", 32, 16, 3, 3, 8, 8);
+        let p = Precision::Int4;
+        let cfg = DlaConfig::dla_bramac(Variant::TwoSA, 1, 2, 16, 64, p);
+        let lut = BackendConfig::lut(8);
+        let build = crate::coordinator::backend::lut_table_build_cycles(p);
+        let tiling = layer_cycles_backend(&l, &cfg, Dataflow::Tiling, 1, 4, &lut);
+        let pers = layer_cycles_backend(&l, &cfg, Dataflow::Persistent, 1, 4, &lut);
+        // Tiling = per-dispatch max(compute, copy) + one build; the
+        // persistent run pays neither copies nor build.
+        assert!(tiling > pers + build - 1, "build is in the tiling total");
+        let pq = 64u64;
+        let chunks = pq / 4;
+        let dispatch_p = lut.dispatch_cycles(32, 16 * 9, 4, false, p);
+        assert_eq!(pers, chunks * dispatch_p);
+        let dispatch_t = lut.dispatch_cycles(32, 16 * 9, 4, true, p);
+        assert_eq!(tiling, chunks * dispatch_t + build);
+    }
+
+    #[test]
+    fn placements_are_the_argmin_and_ties_break_low() {
+        let f = FreqModel::default();
+        for net in [alexnet(), resnet34()] {
+            for p in Precision::ALL {
+                let cfg = DlaConfig::dla_bramac(Variant::TwoSA, 1, 2, 16, 64, p);
+                let specs = BackendConfig::defaults(Variant::TwoSA);
+                let placed =
+                    backend_placements(&net, &cfg, Dataflow::Tiling, 1, 8, &specs, &f);
+                assert_eq!(placed.len(), net.layers.len());
+                for (l, &choice) in net.layers.iter().zip(&placed) {
+                    let times: Vec<f64> = specs
+                        .iter()
+                        .map(|s| layer_backend_time_ns(l, &cfg, Dataflow::Tiling, 1, 8, s, &f))
+                        .collect();
+                    for (i, &t) in times.iter().enumerate() {
+                        assert!(
+                            times[choice] <= t,
+                            "{p} layer {}: placed {choice} but {i} is faster",
+                            l.name
+                        );
+                        // Strict argmin up to ties; ties break low.
+                        if i < choice {
+                            assert!(times[choice] < t, "tie must break to the lower index");
+                        }
+                    }
+                }
+            }
+        }
+        // Identical specs → every layer placed on index 0.
+        let net = alexnet();
+        let cfg = DlaConfig::dla_bramac(Variant::TwoSA, 1, 2, 16, 64, Precision::Int4);
+        let twin = [
+            BackendConfig::dsp(crate::dsp::DspArch::Baseline, 4),
+            BackendConfig::dsp(crate::dsp::DspArch::Baseline, 4),
+        ];
+        let placed = backend_placements(&net, &cfg, Dataflow::Tiling, 1, 8, &twin, &f);
+        assert!(placed.iter().all(|&i| i == 0));
+    }
+
+    #[test]
+    fn auto_placement_never_loses_to_a_pure_backend() {
+        let f = FreqModel::default();
+        let net = alexnet();
+        for p in Precision::ALL {
+            let cfg = DlaConfig::dla_bramac(Variant::TwoSA, 1, 2, 16, 64, p);
+            let specs = BackendConfig::defaults(Variant::TwoSA);
+            let placed = backend_placements(&net, &cfg, Dataflow::Tiling, 1, 8, &specs, &f);
+            let auto_t: f64 = net
+                .layers
+                .iter()
+                .zip(&placed)
+                .map(|(l, &i)| {
+                    layer_backend_time_ns(l, &cfg, Dataflow::Tiling, 1, 8, &specs[i], &f)
+                })
+                .sum();
+            for spec in &specs {
+                let pure = network_backend_time_ns(&net, &cfg, Dataflow::Tiling, 1, 8, spec, &f);
+                assert!(auto_t <= pure + 1e-9, "{p}: auto beats or ties every pure pool");
+            }
+        }
     }
 
     #[test]

@@ -14,11 +14,12 @@ pub mod validate;
 pub use compare::{compare_all, CompareRow};
 pub use config::{AccelKind, DlaConfig};
 pub use cycle::{
-    first_touch_cycles, layer_cycles, layer_cycles_sharded, layer_cycles_with, network_cycles,
-    network_cycles_batch, network_cycles_sharded, network_cycles_with,
+    backend_placements, first_touch_cycles, layer_backend_time_ns, layer_cycles,
+    layer_cycles_backend, layer_cycles_sharded, layer_cycles_with, network_backend_time_ns,
+    network_cycles, network_cycles_batch, network_cycles_sharded, network_cycles_with,
     replica_first_touch_cycles, shard_merge_cycles, Dataflow,
 };
-pub use dse::{explore, DseResult};
+pub use dse::{explore, explore_hetero, table3_hetero, DseResult, HeteroBackendRow, HeteroDseResult};
 pub use models::{alexnet, resnet34, toy, ConvLayer, Network};
 pub use netexec::{
     network_by_name, reference_forward, LayerReport, NetExec, NetExecConfig, NetExecReport,

@@ -65,17 +65,34 @@
 //!   every dispatch runs against resident words with zero copy and zero
 //!   exposed-load cycles, and the one-time pin equals the network's
 //!   total weight words.
+//!
+//! # Heterogeneous MAC backends
+//!
+//! [`NetExecConfig::backend`] routes layers to one of three MAC
+//! substrates behind the [`MacBackend`] trait: the BRAMAC block pool
+//! (default, the legacy path bit for bit), a packed-DSP pool, or a
+//! table-lookup (LUT) pool — or `auto`, which places each layer on the
+//! analytical wall-time argmin ([`backend_placements`]). All three are
+//! bit-identical on values; only the accounting (and the analytical
+//! per-layer model, [`layer_cycles_backend`]) differs. The reconcile
+//! identities hold unchanged because every backend reports streamed
+//! copies as `weight words × dispatches` and resident dispatches as
+//! zero-copy.
 
 use anyhow::{ensure, Result};
 
-use crate::arch::Precision;
+use crate::arch::{FreqModel, Precision};
 use crate::bramac::block::MAIN_WORDS;
 use crate::bramac::{ExecFidelity, Variant};
+use crate::coordinator::backend::{
+    build_backend, BackendConfig, BackendKind, BackendSel, MacBackend,
+};
 use crate::coordinator::tiler::plan_gemv;
 use crate::coordinator::{shard_rows, ScheduleStats, ShardedPool, ShardedResident};
 use crate::dla::config::DlaConfig;
 use crate::dla::cycle::{
-    first_touch_cycles, layer_cycles_sharded, network_cycles_sharded, Dataflow,
+    backend_placements, first_touch_cycles, layer_cycles_backend, network_cycles_sharded,
+    Dataflow,
 };
 use crate::dla::models::{ConvLayer, Network};
 use crate::quant::{random_vector, IntMatrix};
@@ -439,6 +456,12 @@ pub struct NetExecConfig {
     /// the engine count amortize each weight-tile copy over
     /// `ceil(batch/engines)` engine-group passes per tile.
     pub batch: usize,
+    /// MAC backend placement: a fixed backend runs *every* layer on
+    /// that substrate ([`BackendSel::Bramac`] is the legacy pool path,
+    /// bit for bit); [`BackendSel::Auto`] places each layer on the
+    /// analytical wall-time argmin ([`backend_placements`]) over the
+    /// default pools ([`BackendConfig::defaults`]).
+    pub backend: BackendSel,
 }
 
 impl Default for NetExecConfig {
@@ -454,6 +477,7 @@ impl Default for NetExecConfig {
             relu: true,
             lowering: Lowering::Im2col,
             batch: 0,
+            backend: BackendSel::Bramac,
         }
     }
 }
@@ -519,8 +543,11 @@ pub struct LayerReport {
     pub stats: ScheduleStats,
     /// On-chip weight words ([`QuantNetwork::weight_words`]).
     pub weight_words: u64,
-    /// Analytical cycles for this layer under the run's dataflow and
-    /// shard count ([`layer_cycles_sharded`]).
+    /// The MAC substrate this layer actually ran on.
+    pub backend: BackendKind,
+    /// Analytical cycles for this layer under the run's dataflow,
+    /// shard count and placed backend ([`layer_cycles_backend`];
+    /// [`super::cycle::layer_cycles_sharded`] on the BRAMAC pool).
     pub analytical_cycles: u64,
     /// Requant shift applied after this layer (0 for the last layer —
     /// its raw outputs are the report's `output`).
@@ -538,6 +565,9 @@ pub struct NetExecReport {
     pub shards: usize,
     pub fidelity: ExecFidelity,
     pub lowering: Lowering,
+    /// Backend placement mode the run used ([`NetExecConfig::backend`];
+    /// each layer's resolved substrate is [`LayerReport::backend`]).
+    pub backend: BackendSel,
     /// Resolved MVM batch width ([`NetExecConfig::batch_width`]).
     pub batch: usize,
     /// Peak im2col columns alive simultaneously on the host in any
@@ -552,7 +582,10 @@ pub struct NetExecReport {
     pub total: ScheduleStats,
     /// One-time pin cost (persistent; 0 when tiling).
     pub pinned_words: u64,
-    /// [`network_cycles_sharded`] under the run's dataflow.
+    /// Per-layer analytical cycles summed over the run's backend
+    /// placements ([`layer_cycles_backend`]); identical to
+    /// [`network_cycles_sharded`] when every layer sits on the BRAMAC
+    /// pool (the default placement).
     pub analytical_total: u64,
     pub analytical_tiling: u64,
     pub analytical_persistent: u64,
@@ -640,7 +673,7 @@ impl NetExecReport {
         let _ = writeln!(
             s,
             "{} @ {} on {} x {} shard(s), {} dataflow, {} fidelity, \
-             {} lowering, batch-{} (peak {} patch cols)",
+             {} lowering, batch-{}, backend {} (peak {} patch cols)",
             self.network,
             self.precision,
             self.variant.name(),
@@ -649,12 +682,14 @@ impl NetExecReport {
             self.fidelity.name(),
             self.lowering.name(),
             self.batch,
+            self.backend.name(),
             self.peak_patch_cols
         );
         let _ = writeln!(
             s,
-            "{:<10} {:>12} {:>6} {:>7} {:>11} {:>13} {:>11} {:>8} {:>6} {:>13}",
+            "{:<10} {:>7} {:>12} {:>6} {:>7} {:>11} {:>13} {:>11} {:>8} {:>6} {:>13}",
             "layer",
+            "backend",
             "macs",
             "disp",
             "tiles",
@@ -668,8 +703,9 @@ impl NetExecReport {
         for l in &self.layers {
             let _ = writeln!(
                 s,
-                "{:<10} {:>12} {:>6} {:>7} {:>11} {:>13} {:>11} {:>8} {:>6} {:>13}",
+                "{:<10} {:>7} {:>12} {:>6} {:>7} {:>11} {:>13} {:>11} {:>8} {:>6} {:>13}",
                 l.name,
+                l.backend.name(),
                 l.macs,
                 l.dispatches,
                 l.stats.tiles,
@@ -683,8 +719,9 @@ impl NetExecReport {
         }
         let _ = writeln!(
             s,
-            "{:<10} {:>12} {:>6} {:>7} {:>11} {:>13} {:>11} {:>8} {:>6} {:>13}",
+            "{:<10} {:>7} {:>12} {:>6} {:>7} {:>11} {:>13} {:>11} {:>8} {:>6} {:>13}",
             "total",
+            "",
             self.functional_macs(),
             self.layers.iter().map(|l| l.dispatches).sum::<usize>(),
             self.total.tiles,
@@ -826,6 +863,67 @@ fn run_layer_batchn(
     (y, stats, dispatches, macs)
 }
 
+/// One layer through a non-BRAMAC [`MacBackend`] engine in batch-N MVM
+/// chunks — the same chunk walk as [`run_layer_batchn`], with the pool
+/// dispatch swapped for the engine's. `resident` selects the preloaded
+/// zero-copy path (persistent dataflow; the engine was
+/// [`MacBackend::preload`]ed at construction), otherwise each chunk
+/// streams `w`. Chunking full batches plus one remainder means the
+/// layer's measured makespan reproduces [`layer_cycles_backend`]
+/// exactly on a cold engine.
+#[allow(clippy::too_many_arguments)]
+fn run_layer_engine(
+    engine: &mut dyn MacBackend,
+    resident: bool,
+    w: Option<&IntMatrix>,
+    g: &ConvLayer,
+    act: &Tensor,
+    materialized: Option<&[Vec<i64>]>,
+    batch: usize,
+    signed: bool,
+) -> (Vec<i64>, ScheduleStats, usize, u64) {
+    assert!(batch >= 1, "batch width must be at least 1");
+    let pq = g.p * g.q;
+    let n = g.c * g.r * g.s;
+    let mut y = vec![0i64; g.k * pq];
+    let mut stats = ScheduleStats::default();
+    let mut dispatches = 0usize;
+    let mut macs = 0u64;
+    let mut bufs: Vec<Vec<i64>> = match materialized {
+        Some(_) => Vec::new(),
+        None => (0..batch.min(pq)).map(|_| Vec::with_capacity(n)).collect(),
+    };
+    let mut pix = 0usize;
+    while pix < pq {
+        let chunk = batch.min(pq - pix);
+        if materialized.is_none() {
+            for (b, buf) in bufs.iter_mut().enumerate().take(chunk) {
+                let pp = pix + b;
+                im2col_column_into(act, g, pp / g.q, pp % g.q, buf);
+            }
+        }
+        let xs: &[Vec<i64>] = match materialized {
+            Some(cols) => &cols[pix..pix + chunk],
+            None => &bufs[..chunk],
+        };
+        let (ys, s) = match (resident, w) {
+            (true, _) => engine.run_mvm_batch_resident(xs, signed),
+            (false, Some(w)) => engine.run_mvm_batch_signed(w, xs, signed),
+            _ => unreachable!("either a preloaded engine or streamed weights"),
+        };
+        for (b, col_y) in ys.iter().enumerate() {
+            for (kk, &v) in col_y.iter().enumerate() {
+                y[kk * pq + pix + b] = v;
+            }
+        }
+        stats.merge_seq(&s);
+        dispatches += 1;
+        macs += (chunk * g.k * n) as u64;
+        pix += chunk;
+    }
+    (y, stats, dispatches, macs)
+}
+
 /// One stage pass through an engine's layer range
 /// ([`NetExec::run_stage`]): the requant'd activation to hand to the
 /// next stage, or the network's raw final outputs when the range ends
@@ -859,8 +957,20 @@ pub struct NetExec {
     lo: usize,
     hi: usize,
     pool: ShardedPool,
-    /// Per-layer resident layouts (persistent dataflow only).
-    residents: Option<Vec<ShardedResident>>,
+    /// The backend menu placements index into
+    /// ([`BackendConfig::defaults`] order: BRAMAC, DSP, LUT).
+    specs: [BackendConfig; 3],
+    /// Resolved per-layer backend choice (index into `specs`), one
+    /// entry per layer of the range. All-BRAMAC unless
+    /// [`NetExecConfig::backend`] says otherwise.
+    placements: Vec<usize>,
+    /// Per-layer non-BRAMAC engines (`Some` exactly where `placements`
+    /// names DSP or LUT; BRAMAC layers run on the shared `pool`).
+    engines: Vec<Option<Box<dyn MacBackend>>>,
+    /// Per-layer resident layouts (persistent dataflow only; `None`
+    /// inside for layers placed on a non-BRAMAC engine, whose resident
+    /// weights live in the engine itself).
+    residents: Option<Vec<Option<ShardedResident>>>,
     /// One-time first-touch words copied at construction (persistent).
     pub pinned_words: u64,
     /// Resolved blocks per shard (after auto-sizing).
@@ -924,6 +1034,33 @@ impl NetExec {
         let mut pool = ShardedPool::new(cfg.variant, cfg.shards, blocks, qnet.precision)
             .with_pool_threads(cfg.threads)
             .with_fidelity(cfg.fidelity);
+        let acfg = analytical_config(cfg.variant, qnet.precision);
+        let net = Network { name: qnet.net_name, layers: qnet.geoms[lo..hi].to_vec() };
+        let specs = BackendConfig::defaults(cfg.variant);
+        let placements: Vec<usize> = match cfg.backend.fixed() {
+            // `defaults` always carries every kind, so the fallback arm
+            // is unreachable; 0 (BRAMAC) keeps it total without panics.
+            Some(kind) => {
+                let idx = specs.iter().position(|s| s.kind == kind).unwrap_or(0);
+                vec![idx; hi - lo]
+            }
+            None => backend_placements(
+                &net,
+                &acfg,
+                cfg.dataflow,
+                cfg.shards,
+                cfg.batch_width(),
+                &specs,
+                &FreqModel::default(),
+            ),
+        };
+        let mut engines: Vec<Option<Box<dyn MacBackend>>> = placements
+            .iter()
+            .map(|&i| {
+                (specs[i].kind != BackendKind::Bramac)
+                    .then(|| build_backend(&specs[i], qnet.precision, blocks))
+            })
+            .collect();
         let (residents, pinned_words) = match cfg.dataflow {
             Dataflow::Tiling => (None, 0),
             Dataflow::Persistent => {
@@ -932,22 +1069,50 @@ impl NetExec {
                 let mut pinned = 0u64;
                 for li in lo..hi {
                     let w = qnet.layer_weights(li);
-                    let sr = pool.pin_with(&w, &mut cur).map_err(|e| {
-                        anyhow::anyhow!("pinning layer '{}': {e:#}", qnet.geoms[li].name)
-                    })?;
-                    pinned += sr.pinned_words;
-                    layouts.push(sr);
+                    match engines[li - lo].as_mut() {
+                        Some(engine) => {
+                            pinned += engine.preload(&w).map_err(|e| {
+                                anyhow::anyhow!(
+                                    "preloading layer '{}': {e:#}",
+                                    qnet.geoms[li].name
+                                )
+                            })?;
+                            layouts.push(None);
+                        }
+                        None => {
+                            let sr = pool.pin_with(&w, &mut cur).map_err(|e| {
+                                anyhow::anyhow!(
+                                    "pinning layer '{}': {e:#}",
+                                    qnet.geoms[li].name
+                                )
+                            })?;
+                            pinned += sr.pinned_words;
+                            layouts.push(Some(sr));
+                        }
+                    }
                 }
-                for sr in &mut layouts {
+                for sr in layouts.iter_mut().flatten() {
                     pool.refresh_marks(sr);
                 }
                 (Some(layouts), pinned)
             }
         };
-        let acfg = analytical_config(cfg.variant, qnet.precision);
-        let net = Network { name: qnet.net_name, layers: qnet.geoms[lo..hi].to_vec() };
+        let analytical_total: u64 = qnet.geoms[lo..hi]
+            .iter()
+            .zip(&placements)
+            .map(|(g, &i)| {
+                layer_cycles_backend(
+                    g,
+                    &acfg,
+                    cfg.dataflow,
+                    cfg.shards,
+                    cfg.batch_width(),
+                    &specs[i],
+                )
+            })
+            .sum();
         let analytical = (
-            network_cycles_sharded(&net, &acfg, cfg.dataflow, cfg.shards),
+            analytical_total,
             network_cycles_sharded(&net, &acfg, Dataflow::Tiling, cfg.shards),
             network_cycles_sharded(&net, &acfg, Dataflow::Persistent, cfg.shards),
             first_touch_cycles(&net, &acfg),
@@ -969,6 +1134,9 @@ impl NetExec {
             lo,
             hi,
             pool,
+            specs,
+            placements,
+            engines,
             residents,
             pinned_words,
             blocks_per_shard: blocks,
@@ -1002,6 +1170,18 @@ impl NetExec {
     /// The global layer range `[lo, hi)` this engine executes.
     pub fn layer_range(&self) -> (usize, usize) {
         (self.lo, self.hi)
+    }
+
+    /// Resolved per-layer backend placement, one index into
+    /// [`NetExec::backend_specs`] per layer of the range.
+    pub fn placements(&self) -> &[usize] {
+        &self.placements
+    }
+
+    /// The backend menu the placements index into
+    /// ([`BackendConfig::defaults`] order).
+    pub fn backend_specs(&self) -> &[BackendConfig] {
+        &self.specs
     }
 
     /// Analytical cycles for this engine's range under its configured
@@ -1098,8 +1278,25 @@ impl NetExec {
                     }
                 },
             };
-            let resident = self.residents.as_ref().map(|v| &v[li - self.lo]);
-            let (y, stats, dispatches, macs) = if legacy {
+            let resident = self.residents.as_ref().and_then(|v| v[li - self.lo].as_ref());
+            let pl = self.placements[li - self.lo];
+            let (y, stats, dispatches, macs) = if let Some(engine) =
+                self.engines[li - self.lo].as_mut()
+            {
+                run_layer_engine(
+                    engine.as_mut(),
+                    self.cfg.dataflow == Dataflow::Persistent,
+                    tiling_w,
+                    &g,
+                    &act,
+                    match self.cfg.lowering {
+                        Lowering::Im2col => Some(&cols),
+                        Lowering::Streaming => None,
+                    },
+                    batch,
+                    signed,
+                )
+            } else if legacy {
                 run_layer_on_pool(
                     &mut self.pool,
                     resident,
@@ -1144,11 +1341,14 @@ impl NetExec {
                 dispatches,
                 stats,
                 weight_words: self.qnet.weight_words(li),
-                analytical_cycles: layer_cycles_sharded(
+                backend: self.specs[pl].kind,
+                analytical_cycles: layer_cycles_backend(
                     &g,
                     &acfg,
                     self.cfg.dataflow,
                     self.cfg.shards,
+                    batch,
+                    &self.specs[pl],
                 ),
                 requant_shift: shift,
             });
@@ -1182,6 +1382,7 @@ impl NetExec {
             shards: self.cfg.shards,
             fidelity: self.pool.fidelity(),
             lowering: self.cfg.lowering,
+            backend: self.cfg.backend,
             batch,
             peak_patch_cols,
             layers,
@@ -1346,6 +1547,52 @@ mod tests {
             let again = engine.infer(&input).expect("second pass");
             assert_eq!(again.output, want);
             assert_eq!(again.total, report.total, "warm re-run must not drift");
+        }
+    }
+
+    /// Every backend selection — the three fixed substrates and the
+    /// auto placement — must stay bit-identical to the host reference
+    /// on the toy network under both dataflows, keep every
+    /// reconciliation identity, and (non-BRAMAC layers, cold engines)
+    /// land exactly on the analytical [`layer_cycles_backend`] model.
+    #[test]
+    fn backend_selections_stay_bit_identical_on_toy() {
+        let net = toy();
+        let qnet = QuantNetwork::random(&net, Precision::Int4, 0xbacc);
+        let input = qnet.random_input(0xd15b, true);
+        let want = reference_forward(&qnet, &input, true, true);
+        for backend in BackendSel::ALL {
+            for dataflow in Dataflow::ALL {
+                let cfg = NetExecConfig {
+                    dataflow,
+                    fidelity: ExecFidelity::Fast,
+                    backend,
+                    ..NetExecConfig::default()
+                };
+                let mut engine = NetExec::new(qnet.clone(), cfg).expect("toy fits");
+                let report = engine.infer(&input).expect("forward pass");
+                let tag = format!("{} {}", backend.name(), dataflow.name());
+                assert_eq!(report.output, want, "{tag}");
+                report.reconcile().expect("reconciliation identities");
+                assert_eq!(report.functional_macs(), net.total_macs(), "{tag}");
+                assert_eq!(report.backend, backend, "{tag}");
+                if let Some(kind) = backend.fixed() {
+                    assert!(
+                        report.layers.iter().all(|l| l.backend == kind),
+                        "{tag}: fixed selection must place every layer"
+                    );
+                }
+                for l in &report.layers {
+                    if l.backend != BackendKind::Bramac {
+                        assert_eq!(
+                            l.stats.makespan_cycles, l.analytical_cycles,
+                            "{tag} layer {}: cold engine must realize the \
+                             analytical dispatch model exactly",
+                            l.name
+                        );
+                    }
+                }
+            }
         }
     }
 

@@ -13,7 +13,7 @@ use bramac::bramac::{ExecFidelity, Variant};
 use bramac::coordinator::batcher::submit_and_wait;
 use bramac::coordinator::server::{ServerConfig, IMAGE_ELEMS};
 use bramac::coordinator::{
-    BlockPool, PipelineConfig, PipelineEngine, Policy, ShardedPool, Submission,
+    BackendSel, BlockPool, PipelineConfig, PipelineEngine, Policy, ShardedPool, Submission,
 };
 use bramac::throughput::{arrival_trace, ArrivalPattern};
 use bramac::dla::netexec::{
@@ -43,6 +43,7 @@ experiment regeneration (paper tables & figures):
   fig10           BRAM utilization efficiency for model storage
   fig11           GEMV speedup heatmaps (BRAMAC-1DA vs CCB/CoMeFa)
   table3          DSE-optimal DLA / DLA-BRAMAC configurations
+  table3-hetero   per-backend network cost + auto placement (extension)
   fig13           DLA-BRAMAC vs DLA performance/area comparison
   energy          per-MAC energy comparison (our extension)
   all             every experiment above, in order
@@ -71,6 +72,7 @@ drivers:
         [--variant 2sa|1da] [--dataflow tiling|persistent]
         [--shards S] [--blocks K] [--threads T]
         [--lowering im2col|streaming] [--batch W]
+        [--backend bramac|dsp|lut|auto]
         [--fidelity bit-accurate|fast] [--seed X]
         [--unsigned] [--no-relu] [--no-verify]
                   run a whole network FUNCTIONALLY: every layer is
@@ -86,11 +88,16 @@ drivers:
                   --batch W dispatches W output pixels per MVM (0 =
                   auto: the variant's engine count, reproducing the
                   classic batch-2/GEMV pairing; W > engines amortizes
-                  weight-tile copies across the batch). persistent
-                  pins ALL layers on-chip once (auto-grows blocks to
-                  fit when --blocks is omitted); the output is
-                  verified bit-identical to a pure-host i64 reference
-                  unless --no-verify
+                  weight-tile copies across the batch). --backend
+                  places layers on a MAC substrate: bramac (default,
+                  the block pool), dsp (packed DSP multipliers), lut
+                  (table-lookup MACs in one CIM array), or auto —
+                  per-layer analytical wall-time argmin across all
+                  three. All backends are bit-identical on values.
+                  persistent pins ALL layers on-chip once (auto-grows
+                  blocks to fit when --blocks is omitted); the output
+                  is verified bit-identical to a pure-host i64
+                  reference unless --no-verify
   serve [--requests R] [--window-ms W] [--workers N]
         [--dataflow tiling|persistent] [--shards S] [--replicas G]
         [--policy round-robin|least-outstanding]
@@ -197,6 +204,7 @@ fn run(args: &[String]) -> Result<()> {
         "fig10" => println!("{}", report::fig10()),
         "fig11" => println!("{}", report::fig11()),
         "table3" => println!("{}", report::table3_report()),
+        "table3-hetero" => println!("{}", report::table3_hetero_report()),
         "fig13" => println!("{}", report::fig13()),
         "energy" => println!("{}", report::energy()),
         "all" => {
@@ -209,6 +217,7 @@ fn run(args: &[String]) -> Result<()> {
                 report::fig10(),
                 report::fig11(),
                 report::table3_report(),
+                report::table3_hetero_report(),
                 report::fig13(),
                 report::energy(),
             ] {
@@ -481,6 +490,7 @@ fn cmd_infer(args: &[String]) -> Result<()> {
     let fidelity: ExecFidelity = flag(args, "--fidelity", ExecFidelity::Fast)?;
     let lowering: Lowering = flag(args, "--lowering", Lowering::Im2col)?;
     let batch: usize = flag(args, "--batch", 0)?;
+    let backend: BackendSel = flag(args, "--backend", BackendSel::Bramac)?;
     let seed: u64 = flag(args, "--seed", 0xb4a3ac)?;
     let unsigned = args.iter().any(|a| a == "--unsigned");
     let no_relu = args.iter().any(|a| a == "--no-relu");
@@ -510,6 +520,7 @@ fn cmd_infer(args: &[String]) -> Result<()> {
         relu: !no_relu,
         lowering,
         batch,
+        backend,
     };
     let qnet = QuantNetwork::random(&net, p, seed);
     let input = qnet.random_input(seed ^ 0x1472, cfg.signed_inputs);
@@ -721,6 +732,7 @@ fn serve_network(args: &[String], model: &str) -> Result<()> {
         relu: true,
         lowering,
         batch,
+        backend: BackendSel::Bramac,
     };
     if !loadgen.is_empty() {
         return serve_loadgen(

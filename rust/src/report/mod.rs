@@ -12,7 +12,7 @@ use crate::arch::{FreqModel, Precision, ResourceArea, ARRIA10_GX900};
 use crate::bramac::Variant;
 use crate::cim::{mac_latency_cycles, Ccb, Comefa, CIM_LANES};
 use crate::dla::compare::{average_speedup, compare_all};
-use crate::dla::dse::table3;
+use crate::dla::dse::{table3, table3_hetero};
 use crate::dla::models::{alexnet, resnet34};
 use crate::dsp::DspArch;
 use crate::gemv::sweep::{fig11_sweep, COL_SIZES, ROW_SIZES};
@@ -306,6 +306,47 @@ pub fn table3_report() -> String {
                 r.dsps.to_string(),
                 r.brams.to_string(),
                 r.cycles.to_string(),
+            ]);
+        }
+        out.push_str(&t.render());
+    }
+    out
+}
+
+/// Table III extended to heterogeneous MAC pools (our extension): each
+/// pure backend's whole-network cost next to the analytical auto
+/// placement ([`crate::dla::cycle::backend_placements`]), per
+/// precision, on the Table III-tuned DLA-BRAMAC-2SA substrate.
+pub fn table3_hetero_report() -> String {
+    let mut out = String::from(
+        "Table III (heterogeneous): per-backend network cost and auto placement\n\
+         (our extension; 2SA substrate, tiling dataflow, batch-8 MVM dispatches)\n",
+    );
+    for net in [alexnet(), resnet34()] {
+        out.push_str(&format!("\n  {}\n", net.name));
+        let mut t = Table::new(vec![
+            "precision",
+            "backend",
+            "cycles",
+            "time (ms)",
+            "layers placed",
+        ]);
+        for r in table3_hetero(&net) {
+            for (row, placed) in r.per_backend.iter().zip(&r.layers_per_backend) {
+                t.row(vec![
+                    r.precision.to_string(),
+                    row.spec.kind.name().into(),
+                    row.cycles.to_string(),
+                    format!("{:.3}", row.time_ns / 1e6),
+                    placed.to_string(),
+                ]);
+            }
+            t.row(vec![
+                r.precision.to_string(),
+                "auto".into(),
+                "-".into(),
+                format!("{:.3}", r.auto_time_ns / 1e6),
+                format!("{} total", r.placements.len()),
             ]);
         }
         out.push_str(&t.render());

@@ -1,0 +1,279 @@
+//! Differential suite for the heterogeneous MAC backends: the DSP and
+//! LUT pools must be **bit-identical** to a pure-host i64 GEMV
+//! reference across precisions × signedness × shapes × batch widths,
+//! the BRAMAC backend must be the `ShardedPool` path bit for bit
+//! (values *and* stats), whole-network runs on every backend selection
+//! must reproduce the host reference under the reconciliation
+//! identities, and `--backend auto` must realize the analytical
+//! argmin placement ([`backend_placements`]) functionally.
+
+use bramac::arch::{FreqModel, Precision};
+use bramac::bramac::{ExecFidelity, Variant};
+use bramac::coordinator::{
+    build_backend, BackendConfig, BackendKind, BackendSel, MacBackend, ShardedPool,
+};
+use bramac::dla::netexec::{
+    analytical_config, reference_forward, Lowering, NetExec, NetExecConfig, QuantNetwork,
+};
+use bramac::dla::{backend_placements, toy, ConvLayer, Dataflow, Network};
+use bramac::dsp::DspArch;
+use bramac::quant::{random_vector, IntMatrix};
+use bramac::util::Rng;
+
+/// Batched-MVM geometries: degenerate, lane-straddling, and wide.
+const SHAPES: [(usize, usize); 5] = [(1, 1), (3, 5), (7, 4), (21, 9), (40, 17)];
+
+fn host_mvm(w: &IntMatrix, xs: &[Vec<i64>]) -> Vec<Vec<i64>> {
+    xs.iter().map(|x| w.gemv_ref(x)).collect()
+}
+
+/// Every non-BRAMAC backend spec worth differentiating: the three DSP
+/// packing architectures plus the LUT pool, at a couple of unit counts.
+fn engine_specs() -> Vec<BackendConfig> {
+    let mut specs: Vec<BackendConfig> = DspArch::ALL
+        .into_iter()
+        .flat_map(|arch| [BackendConfig::dsp(arch, 1), BackendConfig::dsp(arch, 64)])
+        .collect();
+    specs.push(BackendConfig::lut(1));
+    specs.push(BackendConfig::lut(64));
+    specs
+}
+
+#[test]
+fn dsp_and_lut_pools_match_host_reference_across_matrix() {
+    let mut rng = Rng::seed_from_u64(0xd1ff_bacc);
+    for p in Precision::ALL {
+        for signed in [true, false] {
+            for (m, n) in SHAPES {
+                let w = IntMatrix::random(&mut rng, m, n, p);
+                for batch in [1usize, 2, 5] {
+                    let xs: Vec<Vec<i64>> = (0..batch)
+                        .map(|_| random_vector(&mut rng, n, p, signed))
+                        .collect();
+                    let want = host_mvm(&w, &xs);
+                    for spec in engine_specs() {
+                        let mut engine = build_backend(&spec, p, 4);
+                        let (got, stats) = engine.run_mvm_batch_signed(&w, &xs, signed);
+                        let ctx = format!(
+                            "{:?}/{} units={} {p} signed={signed} {m}x{n} batch={batch}",
+                            spec.kind,
+                            spec.dsp_arch.name(),
+                            spec.units
+                        );
+                        assert_eq!(got, want, "{ctx}");
+                        // Streamed accounting: the copy charge is the
+                        // packed weight-word footprint, every time.
+                        assert_eq!(
+                            stats.weight_copy_cycles,
+                            (m.div_ceil(p.lanes_per_word()) * n) as u64,
+                            "{ctx}"
+                        );
+                    }
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn resident_dispatch_matches_streamed_values_with_zero_copy() {
+    let mut rng = Rng::seed_from_u64(0x9e51_de47);
+    for p in Precision::ALL {
+        for signed in [true, false] {
+            let (m, n) = (13, 11);
+            let w = IntMatrix::random(&mut rng, m, n, p);
+            let xs: Vec<Vec<i64>> =
+                (0..3).map(|_| random_vector(&mut rng, n, p, signed)).collect();
+            let want = host_mvm(&w, &xs);
+            for spec in [BackendConfig::dsp(DspArch::PirDsp, 8), BackendConfig::lut(8)] {
+                let mut engine = build_backend(&spec, p, 4);
+                let pinned = engine.preload(&w).expect("preload fits");
+                assert_eq!(
+                    pinned,
+                    (m.div_ceil(p.lanes_per_word()) * n) as u64,
+                    "{:?} {p}: preload must report the packed footprint",
+                    spec.kind
+                );
+                let (got, stats) = engine.run_mvm_batch_resident(&xs, signed);
+                assert_eq!(got, want, "{:?} {p} signed={signed}", spec.kind);
+                assert_eq!(stats.weight_copy_cycles, 0, "{:?} {p}", spec.kind);
+                assert_eq!(stats.exposed_load_cycles, 0, "{:?} {p}", spec.kind);
+            }
+        }
+    }
+}
+
+#[test]
+fn bramac_backend_is_the_sharded_pool_bit_for_bit() {
+    let mut rng = Rng::seed_from_u64(0xb4a3_ac10);
+    for variant in Variant::ALL {
+        for p in Precision::ALL {
+            let (m, n) = (19, 7);
+            let w = IntMatrix::random(&mut rng, m, n, p);
+            let xs: Vec<Vec<i64>> =
+                (0..2).map(|_| random_vector(&mut rng, n, p, true)).collect();
+            let spec = BackendConfig::bramac(variant);
+            let mut engine = build_backend(&spec, p, 4);
+            let mut pool =
+                ShardedPool::new(variant, 1, 4, p).with_fidelity(ExecFidelity::Fast);
+            let (want, want_stats) = pool.run_mvm_batch_signed(&w, &xs, true);
+            let (got, got_stats) = engine.run_mvm_batch_signed(&w, &xs, true);
+            assert_eq!(got, want, "{} {p}", variant.name());
+            assert_eq!(got_stats, want_stats, "{} {p}: stats must match", variant.name());
+        }
+    }
+}
+
+#[test]
+fn netexec_backend_selections_match_reference_across_matrix() {
+    let mut rng = Rng::seed_from_u64(0x0bac_4e7d);
+    let net = Network {
+        name: "backend-diff",
+        layers: vec![
+            ConvLayer::new("c1", 4, 2, 2, 2, 5, 4),
+            ConvLayer::new("c2", 3, 4, 2, 2, 4, 3),
+            ConvLayer::fc("fc", 5, 3 * 4 * 3),
+        ],
+    };
+    for p in Precision::ALL {
+        for signed in [true, false] {
+            let qnet = QuantNetwork::random(&net, p, rng.next_u64());
+            let input = qnet.random_input(rng.next_u64(), signed);
+            let want = reference_forward(&qnet, &input, signed, true);
+            for backend in BackendSel::ALL {
+                for dataflow in Dataflow::ALL {
+                    for lowering in Lowering::ALL {
+                        let cfg = NetExecConfig {
+                            dataflow,
+                            lowering,
+                            batch: 3,
+                            shards: 2,
+                            fidelity: ExecFidelity::Fast,
+                            signed_inputs: signed,
+                            backend,
+                            ..NetExecConfig::default()
+                        };
+                        let ctx = format!(
+                            "{p} signed={signed} {} {} {}",
+                            backend.name(),
+                            dataflow.name(),
+                            lowering.name()
+                        );
+                        let mut engine =
+                            NetExec::new(qnet.clone(), cfg).expect("net fits");
+                        let report = engine.infer(&input).expect("forward pass");
+                        assert_eq!(report.output, want, "{ctx}");
+                        report.reconcile().expect("reconciliation identities");
+                        assert_eq!(report.functional_macs(), net.total_macs(), "{ctx}");
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// `--backend auto` realizes the analytical argmin: the engine's
+/// resolved placements equal [`backend_placements`] over the same
+/// substrate, menu, and batch width — and each functional layer lands
+/// on the backend the argmin picked.
+#[test]
+fn auto_placement_realizes_the_analytical_argmin() {
+    for p in Precision::ALL {
+        let net = toy();
+        let qnet = QuantNetwork::random(&net, p, 0xa070_17ce);
+        let input = qnet.random_input(0x5eed, true);
+        let cfg = NetExecConfig {
+            fidelity: ExecFidelity::Fast,
+            backend: BackendSel::Auto,
+            ..NetExecConfig::default()
+        };
+        let mut engine = NetExec::new(qnet.clone(), cfg).expect("toy fits");
+        let specs = BackendConfig::defaults(cfg.variant);
+        let expect = backend_placements(
+            &qnet.network(),
+            &analytical_config(cfg.variant, p),
+            cfg.dataflow,
+            cfg.shards,
+            cfg.batch_width(),
+            &specs,
+            &FreqModel::default(),
+        );
+        assert_eq!(engine.placements(), &expect[..], "{p}: placement ≠ argmin");
+        let report = engine.infer(&input).expect("forward pass");
+        for (l, &i) in report.layers.iter().zip(&expect) {
+            assert_eq!(l.backend, specs[i].kind, "{p} layer {}", l.name);
+        }
+        let want = reference_forward(&qnet, &input, true, true);
+        assert_eq!(report.output, want, "{p}: auto run must stay exact");
+    }
+}
+
+/// Cold non-BRAMAC engines must realize the analytical dispatch model
+/// exactly: per-layer functional makespans equal
+/// [`bramac::dla::layer_cycles_backend`] under both dataflows,
+/// including the one-time LUT table-build charge when streaming.
+#[test]
+fn functional_engine_makespans_equal_the_analytical_model() {
+    let net = toy();
+    for p in Precision::ALL {
+        let qnet = QuantNetwork::random(&net, p, 0x10ad_ed);
+        let input = qnet.random_input(0x77, true);
+        for backend in [BackendSel::Dsp, BackendSel::Lut] {
+            for dataflow in Dataflow::ALL {
+                for batch in [0usize, 4] {
+                    let cfg = NetExecConfig {
+                        dataflow,
+                        batch,
+                        fidelity: ExecFidelity::Fast,
+                        backend,
+                        ..NetExecConfig::default()
+                    };
+                    let mut engine = NetExec::new(qnet.clone(), cfg).expect("fits");
+                    let report = engine.infer(&input).expect("forward pass");
+                    for l in &report.layers {
+                        assert_ne!(l.backend, BackendKind::Bramac);
+                        assert_eq!(
+                            l.stats.makespan_cycles,
+                            l.analytical_cycles,
+                            "{p} {} {} batch={batch} layer {}",
+                            backend.name(),
+                            dataflow.name(),
+                            l.name
+                        );
+                    }
+                    assert_eq!(
+                        report.total.makespan_cycles, report.analytical_total,
+                        "{p} {} {} batch={batch}: totals must close",
+                        backend.name(),
+                        dataflow.name()
+                    );
+                }
+            }
+        }
+    }
+}
+
+/// Persistent hetero runs pin every layer somewhere: BRAMAC layers in
+/// the pool arena, engine layers inside their backend — and the sum is
+/// exactly the network's packed weight words (reconcile identity 2).
+#[test]
+fn persistent_hetero_pin_covers_the_whole_network() {
+    let net = toy();
+    let qnet = QuantNetwork::random(&net, Precision::Int8, 0x715);
+    let total_words: u64 = (0..net.layers.len()).map(|li| qnet.weight_words(li)).sum();
+    for backend in BackendSel::ALL {
+        let cfg = NetExecConfig {
+            dataflow: Dataflow::Persistent,
+            fidelity: ExecFidelity::Fast,
+            backend,
+            ..NetExecConfig::default()
+        };
+        let engine = NetExec::new(qnet.clone(), cfg).expect("toy pins");
+        assert_eq!(
+            engine.pinned_words,
+            total_words,
+            "{}: pin must cover the network",
+            backend.name()
+        );
+    }
+}

@@ -8,7 +8,7 @@ pub const SCAN_DIRS: [&str; 4] = ["rust/src", "rust/tests", "rust/benches", "exa
 
 /// r1: structs whose every field must be referenced by a merge-like
 /// method (`merge*` or `add`) in some impl of the struct.
-pub const STATS_STRUCTS: [&str; 9] = [
+pub const STATS_STRUCTS: [&str; 10] = [
     "ScheduleStats",
     "StreamStats",
     "RouterStats",
@@ -18,6 +18,7 @@ pub const STATS_STRUCTS: [&str; 9] = [
     "PipelineStats",
     "EccStats",
     "FaultStats",
+    "BackendStats",
 ];
 
 /// r2: files where *every* non-test fn is hot.
@@ -61,10 +62,11 @@ pub const FLOAT_ROUNDERS: [&str; 3] = ["ceil", "floor", "round"];
 /// r4: config-like structs and the file suffix that defines them.
 /// Literals outside the defining file must name every field or use
 /// `..` — the PR 6 breakage class (a new field silently defaulted).
-pub const LITERAL_STRUCTS: [(&str, &str); 3] = [
+pub const LITERAL_STRUCTS: [(&str, &str); 4] = [
     ("NetExecConfig", "dla/netexec.rs"),
     ("PlanKey", "coordinator/plan_cache.rs"),
     ("ServerConfig", "coordinator/server.rs"),
+    ("BackendConfig", "coordinator/backend.rs"),
 ];
 
 /// r6: differential suites that must name every fidelity-taking pub fn.

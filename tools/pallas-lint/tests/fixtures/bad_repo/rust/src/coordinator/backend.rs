@@ -1,0 +1,18 @@
+//! Bad fixture: `BackendStats` grows a field its merge impl forgets.
+//! Also defines `BackendConfig` — r4's authoritative field set.
+
+pub struct BackendStats {
+    pub dispatches: u64,
+    pub table_build_cycles: u64,
+}
+
+impl BackendStats {
+    pub fn merge(&mut self, other: &BackendStats) {
+        self.dispatches += other.dispatches;
+    }
+}
+
+pub struct BackendConfig {
+    pub kind: usize,
+    pub units: usize,
+}

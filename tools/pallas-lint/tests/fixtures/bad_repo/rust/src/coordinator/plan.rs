@@ -13,3 +13,10 @@ pub fn make_server() -> usize {
     };
     cfg.workers
 }
+
+pub fn make_backend() -> usize {
+    let cfg = BackendConfig {
+        kind: 0,
+    };
+    cfg.kind
+}

@@ -1,0 +1,18 @@
+//! Clean fixture: the backend merge covers every field.
+
+pub struct BackendStats {
+    pub dispatches: u64,
+    pub table_build_cycles: u64,
+}
+
+impl BackendStats {
+    pub fn merge(&mut self, other: &BackendStats) {
+        self.dispatches += other.dispatches;
+        self.table_build_cycles += other.table_build_cycles;
+    }
+}
+
+pub struct BackendConfig {
+    pub kind: usize,
+    pub units: usize,
+}

@@ -23,3 +23,15 @@ pub fn make_server() -> usize {
     };
     full.workers + rest.workers
 }
+
+pub fn make_backend() -> usize {
+    let full = BackendConfig {
+        kind: 0,
+        units: 4,
+    };
+    let rest = BackendConfig {
+        kind: full.kind,
+        ..Default::default()
+    };
+    full.kind + rest.kind
+}

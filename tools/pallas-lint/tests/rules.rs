@@ -17,6 +17,7 @@ fn bad_repo_fires_every_rule_at_the_right_span() {
         spans,
         vec![
             ("r1", "rust/src/bramac/block.rs", 5),
+            ("r1", "rust/src/coordinator/backend.rs", 6),
             ("r1", "rust/src/reliability/ecc.rs", 7),
             ("r1", "rust/src/reliability/ecc.rs", 20),
             ("r2", "rust/src/bramac/fastpath.rs", 4),
@@ -24,6 +25,7 @@ fn bad_repo_fires_every_rule_at_the_right_span() {
             ("r3", "rust/src/dla/cycle.rs", 8),
             ("r4", "rust/src/coordinator/plan.rs", 4),
             ("r4", "rust/src/coordinator/plan.rs", 11),
+            ("r4", "rust/src/coordinator/plan.rs", 18),
             ("r5", "rust/src/storage/mod.rs", 4),
             ("r6", "rust/src/coordinator/server.rs", 3),
         ],
@@ -47,6 +49,18 @@ fn bad_repo_messages_name_the_offender() {
         .map(|d| d.msg.clone())
         .unwrap_or_default();
     assert!(server_cfg.contains("\"replicas\""), "{server_cfg}");
+    let backend_cfg = diags
+        .iter()
+        .find(|d| d.rule == "r4" && d.msg.contains("BackendConfig"))
+        .map(|d| d.msg.clone())
+        .unwrap_or_default();
+    assert!(backend_cfg.contains("\"units\""), "{backend_cfg}");
+    let backend_stats = diags
+        .iter()
+        .find(|d| d.rule == "r1" && d.msg.contains("BackendStats"))
+        .map(|d| d.msg.clone())
+        .unwrap_or_default();
+    assert!(backend_stats.contains("`table_build_cycles`"), "{backend_stats}");
     assert!(msg("r5").contains(".unwrap()"));
     assert!(msg("r6").contains("start_with_fidelity"));
 }
@@ -61,7 +75,7 @@ fn clean_repo_is_silent() {
 fn json_output_is_well_formed() {
     let diags = pallas_lint::run(&fixture("bad_repo")).unwrap();
     let json = pallas_lint::to_json(&diags);
-    assert!(json.contains("\"count\": 10"), "{json}");
+    assert!(json.contains("\"count\": 12"), "{json}");
     assert!(json.contains("\"rule\": \"r1\""));
     assert!(json.contains("\"file\": \"rust/src/bramac/block.rs\""));
     // Empty set renders a valid document too.
